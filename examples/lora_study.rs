@@ -1,0 +1,79 @@
+//! LoRA study: how far does the W∥A combined-matrix trick (paper Fig. 5)
+//! carry as the adaptor rank grows?
+//!
+//! For each rank r ∈ {4, 8, 16, 32, 64} this example measures, on
+//! BERT-base Q/V projections:
+//!   - the A-in-W folded-value overlap (paper reports ≈90%),
+//!   - the reuse rate observed on the A columns when streamed after W,
+//!   - the marginal cycles per A element and the adaptor speedup vs a
+//!     multiply-only datapath.
+//!
+//! Run: `cargo run --release --example lora_study`
+
+use axllm::config::{AcceleratorConfig, LoraConfig, ModelConfig};
+use axllm::model::{LoraAdaptor, MatKind, Model};
+use axllm::sim::accelerator::synth_input;
+use axllm::sim::{baseline, lane};
+use axllm::util::rng::Rng;
+use axllm::util::table::{pct, Table};
+
+fn main() {
+    let cfg = AcceleratorConfig::paper();
+    let model = Model::new(ModelConfig::bert_base(), 42);
+    let rows = 64;
+
+    let mut t = Table::new(
+        "LoRA adaptor reuse vs rank — BERT-base Wq/Wv, combined W||A stream",
+        &[
+            "rank",
+            "A-in-W overlap",
+            "A reuse",
+            "marginal cycles/A-elem",
+            "adaptor speedup",
+        ],
+    );
+
+    for rank in [4usize, 8, 16, 32, 64] {
+        let lora_cfg = LoraConfig {
+            rank,
+            alpha: 2.0 * rank as f32,
+        };
+        let mut overlap = 0.0;
+        let mut a_cycles = 0u64;
+        let mut a_base = 0u64;
+        let mut a_hits = 0u64;
+        let mut a_elems = 0u64;
+        for kind in [MatKind::Wq, MatKind::Wv] {
+            let w = model.matrix_rows(0, kind, rows);
+            let mut rng = Rng::new(0xA0A0 ^ kind as u64 ^ rank as u64);
+            let adaptor = LoraAdaptor::synthesize(&w, lora_cfg, model.dist, &mut rng);
+            overlap += adaptor.overlap_with(&w) / 2.0;
+            let tail = cfg.buffer_entries - rank.min(cfg.buffer_entries / 2);
+            let x = synth_input(rows, 7);
+            for row in 0..w.rows {
+                let wrow = w.row(row);
+                let wtail = &wrow[wrow.len() - tail..];
+                let mut chunk = wtail.to_vec();
+                chunk.extend_from_slice(adaptor.a.row(row));
+                let with_a = lane::simulate_chunk(x[row], &chunk, &cfg).stats;
+                let w_only = lane::simulate_chunk(x[row], wtail, &cfg).stats;
+                let base_a = baseline::simulate_chunk(x[row], adaptor.a.row(row), &cfg).stats;
+                a_cycles += with_a.cycles - w_only.cycles;
+                a_base += base_a.cycles - cfg.buf_latency as u64;
+                a_hits += with_a.rc_hits - w_only.rc_hits;
+                a_elems += rank as u64;
+            }
+        }
+        t.row(vec![
+            rank.to_string(),
+            pct(overlap),
+            pct(a_hits as f64 / a_elems as f64),
+            format!("{:.2}", a_cycles as f64 / a_elems as f64),
+            format!("{:.2}x", a_base as f64 / a_cycles.max(1) as f64),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "Paper anchors: ≈90% A-in-W overlap; adaptor speedups 1.82x (BERT), 1.81x (DistilBERT)."
+    );
+}

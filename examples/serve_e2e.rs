@@ -1,0 +1,82 @@
+//! END-TO-END driver (deliverable (b) + EXPERIMENTS.md §E2E): serve a
+//! batched request trace through the full three-layer stack and report
+//! latency/throughput plus accelerator attribution.
+//!
+//! The request path is Rust-only:
+//!   workload trace → dynamic batcher → PJRT executable (the AOT-compiled
+//!   JAX model whose every matmul is the Pallas reuse kernel) → logits,
+//! while the cycle-level simulator attributes AxLLM cycles/energy to every
+//! request and compares against the multiply-only baseline.
+//!
+//! Prereq: `make artifacts`  ·  Run: `cargo run --release --example serve_e2e`
+
+use axllm::config::{AcceleratorConfig, Dataset};
+use axllm::coordinator::{BatchPolicy, Engine};
+use axllm::util::table::{count, fnum, Table};
+use axllm::workload::TraceGenerator;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("AXLLM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    let engine = Engine::load(&dir, AcceleratorConfig::paper())?;
+    println!(
+        "engine loaded: tiny model B={} S={} D={} ({} layers) — cost model: {:.0} cycles/token AxLLM vs {:.0} baseline ({:.2}x), reuse {:.1}%",
+        engine.artifacts.manifest.batch,
+        engine.artifacts.manifest.seq,
+        engine.artifacts.manifest.d_model,
+        engine.artifacts.manifest.n_layers,
+        engine.cost.cycles_per_token_ax,
+        engine.cost.cycles_per_token_base,
+        engine.cost.speedup(),
+        engine.cost.reuse_rate * 100.0,
+    );
+
+    let mut t = Table::new(
+        "End-to-end serving — 128 requests per dataset trace, batch ≤4, 10ms max wait",
+        &[
+            "dataset",
+            "req/s",
+            "tok/s",
+            "p50 (ms)",
+            "p95 (ms)",
+            "sim cycles",
+            "sim energy (mJ)",
+            "sim speedup",
+        ],
+    );
+    for dataset in [
+        Dataset::AgNews,
+        Dataset::YelpReviewFull,
+        Dataset::Squad,
+        Dataset::Imdb,
+    ] {
+        let trace = TraceGenerator::new(dataset, 400.0, 7).take(128);
+        let (results, s) = engine.serve_trace(
+            trace,
+            BatchPolicy {
+                max_batch: 4,
+                max_wait_s: 0.010,
+            },
+        )?;
+        assert_eq!(results.len(), 128);
+        // Every request must produce finite logits.
+        assert!(results
+            .iter()
+            .all(|r| r.logits.iter().all(|v| v.is_finite())));
+        t.row(vec![
+            dataset.name().to_string(),
+            fnum(s.throughput_rps, 1),
+            fnum(s.throughput_tps, 0),
+            fnum(s.latency.p50_s * 1e3, 2),
+            fnum(s.latency.p95_s * 1e3, 2),
+            count(s.sim_cycles),
+            fnum(s.sim_energy_j * 1e3, 3),
+            format!("{:.2}x", s.sim_speedup),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("All layers composed: Pallas kernel → JAX model → HLO artifact → PJRT from Rust → batched serving. ✓");
+    Ok(())
+}

@@ -1,0 +1,142 @@
+"""AOT compile path: lower the L2/L1 computations to HLO **text** and write
+them (plus the weight binary and a manifest) into ``artifacts/``.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Python runs ONCE, at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.
+
+Weight codes are passed as **runtime parameters** (int32 offset tensors in
+a canonical order: per layer wq wk wv wo ff1 ff2, then the head), NOT baked
+as constants: xla_extension 0.5.1 mis-constant-folds the gather over baked
+weight tensors (verified bit-exact with parameters, garbage with
+constants). Scales are scalars and bake safely. The Rust runtime feeds the
+parameters from tiny_weights.bin.
+
+Artifacts:
+  tiny_model.hlo.txt        ([B,S,D] f32, 13 × i32 weights) → [B,n_classes] f32
+  tiny_layer.hlo.txt        ([S,D] f32, 6 × i32 weights) → [S,D] f32
+  reuse_matmul_128.hlo.txt  ([R=128] i32, [128,128] i32) → [128] i32
+  reuse_matmul_768.hlo.txt  ([R=768] i32, [768,768] i32) → [768] i32
+  tiny_weights.bin          int8 codes + scales (runtime weight source)
+  manifest.toml             shapes/dtypes/seed for the Rust loader
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.reuse_matmul import reuse_matmul
+from .model import TinyConfig, export_weights_bin, synth_weights, tiny_model_fn, transformer_layer
+
+SEED = 20250710
+
+
+def to_hlo_text(lowered):
+    """StableHLO → XlaComputation → HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, args, path):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+
+    cfg = TinyConfig()
+    layers, head = synth_weights(cfg, SEED)
+    from .model import MAT_KINDS
+
+    def wspec(off):
+        return jax.ShapeDtypeStruct(off.shape, jnp.int32)
+
+    # 1. End-to-end tiny classifier. Weight codes are parameters in
+    #    canonical order; scales are baked scalars (see module docs).
+    def model_fn(x, *w_params):
+        rebuilt, k = [], 0
+        for lw in layers:
+            d = {}
+            for kind in MAT_KINDS:
+                d[kind] = (w_params[k], lw[kind][1])
+                k += 1
+            rebuilt.append(d)
+        head_p = (w_params[k], head[1])
+        return (tiny_model_fn(x, rebuilt, head_p, cfg),)
+
+    x_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq, cfg.d_model), jnp.float32)
+    w_specs = [wspec(lw[kind][0]) for lw in layers for kind in MAT_KINDS]
+    w_specs.append(wspec(head[0]))
+    lower_to_file(model_fn, (x_spec, *w_specs), f"{out}/tiny_model.hlo.txt")
+
+    # 2. Single layer (layer 0), for layer-level integration tests.
+    def layer_fn(x, *w_params):
+        d = {
+            kind: (w_params[i], layers[0][kind][1])
+            for i, kind in enumerate(MAT_KINDS)
+        }
+        return (transformer_layer(x, d, cfg, block_cols=128),)
+
+    l_spec = jax.ShapeDtypeStruct((cfg.seq, cfg.d_model), jnp.float32)
+    l_wspecs = [wspec(layers[0][kind][0]) for kind in MAT_KINDS]
+    lower_to_file(layer_fn, (l_spec, *l_wspecs), f"{out}/tiny_layer.hlo.txt")
+
+    # 3. Raw reuse-matmul kernels at two shapes (bit-exact integration
+    #    tests + runtime microbenchmarks).
+    for r, c, bc in ((128, 128, 128), (768, 768, 256)):
+        xq = jax.ShapeDtypeStruct((r,), jnp.int32)
+        wq = jax.ShapeDtypeStruct((r, c), jnp.int32)
+        lower_to_file(
+            lambda x, w, bc=bc: (reuse_matmul(x, w, block_cols=bc),),
+            (xq, wq),
+            f"{out}/reuse_matmul_{r}.hlo.txt",
+        )
+
+    # 4. Weights for the Rust functional cross-check.
+    export_weights_bin(f"{out}/tiny_weights.bin", cfg, layers, head)
+    print(f"wrote {out}/tiny_weights.bin")
+
+    # 5. Manifest consumed by rust runtime::artifacts.
+    with open(f"{out}/manifest.toml", "w") as f:
+        f.write(
+            "\n".join(
+                [
+                    "[tiny]",
+                    f"batch = {cfg.batch}",
+                    f"seq = {cfg.seq}",
+                    f"d_model = {cfg.d_model}",
+                    f"n_layers = {cfg.n_layers}",
+                    f"n_heads = {cfg.n_heads}",
+                    f"d_ff = {cfg.d_ff}",
+                    f"n_classes = {cfg.n_classes}",
+                    f"seed = {SEED}",
+                    "",
+                    "[kernels]",
+                    "shapes = [128, 768]",
+                    "",
+                ]
+            )
+        )
+    print(f"wrote {out}/manifest.toml")
+
+
+if __name__ == "__main__":
+    main()

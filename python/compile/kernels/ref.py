@@ -1,0 +1,30 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+The oracle is the dense formulation of the same arithmetic: the reuse
+kernel is a *scheduling* transformation, so its output must be **bit
+identical** to the dense int32 matmul (no tolerance), and the f32 wrapper
+must match the dense dequantized matmul to f32 round-off.
+"""
+
+import jax.numpy as jnp
+
+from .reuse_matmul import CODE_OFFSET, quantize_activations
+
+
+def dense_matmul_ref(x_q, w_off):
+    """[R] int32 × [R, C] offsets → [C] int32 exact."""
+    w = w_off - CODE_OFFSET
+    return jnp.einsum("r,rc->c", x_q, w).astype(jnp.int32)
+
+
+def dense_matmul_batch_ref(x_q, w_off):
+    """[S, R] × [R, C] → [S, C] int32 exact."""
+    w = w_off - CODE_OFFSET
+    return jnp.einsum("sr,rc->sc", x_q, w).astype(jnp.int32)
+
+
+def qmatmul_f32_ref(x, w_off, w_scale):
+    """Dense reference of kernels.reuse_matmul.qmatmul_f32."""
+    q, s_x = quantize_activations(x)
+    y = dense_matmul_batch_ref(q, w_off)
+    return y.astype(jnp.float32) * (s_x * w_scale)

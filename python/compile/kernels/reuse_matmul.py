@@ -1,0 +1,121 @@
+"""L1: the computation-reuse matmul as a Pallas kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): AxLLM's Result Cache
+is an SRAM next to a multiplier on a 15nm ASIC. On TPU the same insight —
+*compute each product ``x[i]·u`` once per unique quantized value ``u`` and
+reuse it for every repeat* — maps to a **product table + gather**:
+
+1. build ``T[i, v] = x[i] * dq(v)`` for all 2^q code values ``v`` (one
+   multiplication per (input element, unique value) — exactly the work the
+   RC's compute path performs), materialized in VMEM (255 × 4 B per input
+   element — tiny);
+2. evaluate ``y[j] = Σ_i T[i, W_idx[i, j]]`` as a gather + reduction, the
+   reuse path: weights are stored as **uint8 indices into the table**, the
+   paper's "weights as pointers into the RC" (§III.b).
+
+BlockSpec tiles the output columns, mirroring the paper's §IV bounded
+512-column rounds (the HBM↔VMEM schedule the ASIC expresses with W_buff /
+Out_buff sizing).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are validated on the interpret path and the same
+HLO runs from Rust (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Signed 8-bit codes live in [-127, 127]; code -128 is excluded by the
+# symmetric quantizer (it would break sign-folding), so the table has 255
+# entries addressed by the unsigned offset ``code + 127``.
+N_CODES = 255
+CODE_OFFSET = 127
+
+# Default output-column tile — the paper's §IV round width.
+DEFAULT_BLOCK_COLS = 512
+
+
+def _reuse_matmul_kernel(x_ref, w_ref, o_ref):
+    """One grid step: one input row × one block of weight columns.
+
+    x_ref: [1, R] int32 — quantized input row (codes).
+    w_ref: [R, C_blk] int32 — weight codes as table offsets in [0, 254].
+    o_ref: [1, C_blk] int32 — output partial sums for this (row, block).
+    """
+    x = x_ref[0, :]
+    # Product table: the Result Cache. One multiply per (i, unique value):
+    # R × 255 multiplications regardless of C — all C·R products are then
+    # *reused* from the table.
+    codes = jnp.arange(N_CODES, dtype=jnp.int32) - CODE_OFFSET
+    table = x[:, None] * codes[None, :]  # [R, 255] in VMEM
+    # Reuse path: gather each weight's cached product and accumulate.
+    w = w_ref[...]
+    gathered = jnp.take_along_axis(table, w, axis=1)  # [R, C_blk]
+    o_ref[0, :] = jnp.sum(gathered, axis=0, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_cols",))
+def reuse_matmul_batch(x_q, w_off, block_cols=DEFAULT_BLOCK_COLS):
+    """``y[s, j] = Σ_i x_q[s, i] · (w_off[i, j] − 127)`` via the reuse
+    kernel.
+
+    Batching is expressed natively in the Pallas grid — one grid row per
+    input row — NOT via `jax.vmap`: vmapping the interpret-mode
+    `pallas_call` lowers to HLO that the pinned xla_extension 0.5.1 (the
+    Rust runtime's XLA) miscompiles to zeros, while the gridded form
+    round-trips bit-exactly.
+
+    Args:
+      x_q: [S, R] int32, quantized input codes in [-127, 127].
+      w_off: [R, C] int32, weight codes offset to [0, 254].
+      block_cols: output-column tile width (static).
+
+    Returns:
+      [S, C] int32 exact integer matmul result.
+    """
+    s, r = x_q.shape
+    r2, c = w_off.shape
+    if r != r2:
+        raise ValueError(f"x rows {r} != W rows {r2}")
+    bc = min(block_cols, c)
+    if c % bc != 0:
+        raise ValueError(f"block_cols {bc} must divide C {c}")
+    grid = (s, c // bc)
+    return pl.pallas_call(
+        _reuse_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((r, bc), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, c), jnp.int32),
+        interpret=True,
+    )(x_q, w_off)
+
+
+def reuse_matmul(x_q, w_off, block_cols=DEFAULT_BLOCK_COLS):
+    """Single-vector reuse matmul: x_q [R] → [C] (batch of one)."""
+    return reuse_matmul_batch(x_q[None, :], w_off, block_cols)[0]
+
+
+def quantize_activations(x, qmax=127.0):
+    """Symmetric dynamic per-tensor activation quantization (the int8
+    input datapath of the accelerator). Returns (codes int32, scale)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    scale = amax / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    return q, scale
+
+
+def qmatmul_f32(x, w_off, w_scale, block_cols=DEFAULT_BLOCK_COLS):
+    """f32 activations × quantized weights through the reuse kernel.
+
+    x: [S, R] f32. w_off: [R, C] int32 offsets. Returns [S, C] f32.
+    """
+    q, s_x = quantize_activations(x)
+    y = reuse_matmul_batch(q, w_off, block_cols)
+    return y.astype(jnp.float32) * (s_x * w_scale)

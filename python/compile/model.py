@@ -1,0 +1,184 @@
+"""L2: the quantized transformer model in JAX, calling the L1 reuse kernel
+for every weight matmul.
+
+Architecture mirrors ``rust/src/exec/layer.rs`` exactly (post-LN,
+non-affine layer norm, ReLU FFN, per-tensor dynamic activation
+quantization), so the Rust functional executor and the AOT artifact can be
+cross-checked on the same weights.
+
+Weights are synthesized here (numpy RNG, Gaussian, percentile-clip grid —
+substitution S1 in DESIGN.md) and exported to ``artifacts/tiny_weights.bin``
+in a simple binary format the Rust side parses; the AOT artifact bakes the
+same weights in as constants so the PJRT executable is self-contained.
+"""
+
+import dataclasses
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.reuse_matmul import CODE_OFFSET, qmatmul_f32
+
+# Matrix kinds, in the order rust's MatKind::ALL uses.
+MAT_KINDS = ("wq", "wk", "wv", "wo", "ff1", "ff2")
+
+# Weight synthesis parameters (keep in sync with rust model::synth
+# defaults: σ=0.02, percentile clip at 4σ).
+SIGMA = 0.02
+CLIP_SIGMAS = 4.0
+
+
+@dataclasses.dataclass
+class TinyConfig:
+    """Mirror of rust ``ModelConfig::tiny()`` plus a classifier head."""
+
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 256
+    n_classes: int = 4
+    seq: int = 32
+    batch: int = 4
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_heads
+
+
+def mat_shape(cfg, kind):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wq": (d, d),
+        "wk": (d, d),
+        "wv": (d, d),
+        "wo": (d, d),
+        "ff1": (d, f),
+        "ff2": (f, d),
+    }[kind]
+
+
+def synth_qmatrix(rng, rows, cols):
+    """Gaussian weights quantized on the percentile-clip grid.
+
+    Returns (offsets int32 [rows, cols] in [0, 254], scale f32).
+    """
+    w = rng.normal(0.0, SIGMA, (rows, cols))
+    scale = SIGMA * CLIP_SIGMAS / 127.0
+    q = np.clip(np.round(w / scale), -127, 127).astype(np.int32)
+    return q + CODE_OFFSET, np.float32(scale)
+
+
+def synth_weights(cfg, seed):
+    """All layer weights plus the classifier head.
+
+    Returns a pytree: list of per-layer dicts {kind: (off, scale)}, and
+    (head_off, head_scale) mapping pooled d_model → n_classes.
+    """
+    rng = np.random.default_rng(seed)
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append({k: synth_qmatrix(rng, *mat_shape(cfg, k)) for k in MAT_KINDS})
+    head = synth_qmatrix(rng, cfg.d_model, cfg.n_classes)
+    return layers, head
+
+
+def layer_norm(x):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + 1e-5)
+
+
+def softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def transformer_layer(x, weights, cfg, block_cols):
+    """One layer forward: x [S, D] f32 → [S, D] f32.
+
+    Every weight matmul routes through the Pallas reuse kernel.
+    """
+    s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+
+    def mm(inp, kind):
+        off, scale = weights[kind]
+        return qmatmul_f32(inp, off, scale, block_cols)
+
+    q = mm(x, "wq").reshape(s, h, dh)
+    k = mm(x, "wk").reshape(s, h, dh)
+    v = mm(x, "wv").reshape(s, h, dh)
+
+    scores = jnp.einsum("ihd,jhd->hij", q, k) / jnp.sqrt(jnp.float32(dh))
+    attn = softmax(scores)
+    ctx = jnp.einsum("hij,jhd->ihd", attn, v).reshape(s, d)
+
+    attn_out = mm(ctx, "wo")
+    h1 = layer_norm(x + attn_out)
+
+    ff = jnp.maximum(mm(h1, "ff1"), 0.0)
+    ff2 = mm(ff, "ff2")
+    return layer_norm(h1 + ff2)
+
+
+def tiny_model_fn(x, layers, head, cfg, block_cols=128):
+    """The end-to-end tiny classifier: embeddings [B, S, D] → logits
+    [B, n_classes] (mean-pool + quantized head).
+
+    The batch loop is unrolled at trace time (B is small and static)
+    rather than vmapped: vmap over the interpret-mode Pallas call lowers
+    to constructs the pinned xla_extension 0.5.1 (the Rust runtime's XLA)
+    miscompiles to zeros, while the unrolled form round-trips exactly.
+    """
+
+    def one_seq(seq_x):
+        h = seq_x
+        for lw in layers:
+            h = transformer_layer(h, lw, cfg, block_cols)
+        pooled = jnp.mean(h, axis=0, keepdims=True)  # [1, D]
+        off, scale = head
+        return qmatmul_f32(pooled, off, scale, block_cols=cfg.n_classes)[0]
+
+    return jnp.stack([one_seq(x[b]) for b in range(x.shape[0])])
+
+
+MAGIC = 0x41584C4D  # "AXLM"
+
+
+def export_weights_bin(path, cfg, layers, head):
+    """Binary weight export for the Rust side.
+
+    Layout (little endian):
+      u32 magic, u32 version, u32 n_layers, u32 d_model, u32 n_heads,
+      u32 d_ff, u32 n_classes
+      then per layer, per kind in MAT_KINDS order:
+        u32 rows, u32 cols, f32 scale, rows*cols i8 codes (offset removed)
+      then the head in the same record format.
+    """
+    with open(path, "wb") as f:
+        f.write(
+            struct.pack(
+                "<7I",
+                MAGIC,
+                1,
+                cfg.n_layers,
+                cfg.d_model,
+                cfg.n_heads,
+                cfg.d_ff,
+                cfg.n_classes,
+            )
+        )
+
+        def write_mat(off, scale):
+            rows, cols = off.shape
+            f.write(struct.pack("<2If", rows, cols, float(scale)))
+            codes = (off - CODE_OFFSET).astype(np.int8)
+            f.write(codes.tobytes())
+
+        for lw in layers:
+            for k in MAT_KINDS:
+                write_mat(*lw[k])
+        write_mat(*head)

@@ -1,0 +1,135 @@
+"""L1 correctness: Pallas reuse kernel vs the pure-jnp oracle.
+
+The integer kernel must be BIT-EXACT against dense matmul (reuse is a
+scheduling transformation); the f32 wrapper must match to round-off.
+Hypothesis sweeps shapes, dtypes ranges, and block sizes.
+"""
+
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+sys.path.insert(0, ".")
+
+from compile.kernels.ref import (
+    dense_matmul_batch_ref,
+    dense_matmul_ref,
+    qmatmul_f32_ref,
+)
+from compile.kernels.reuse_matmul import (
+    CODE_OFFSET,
+    N_CODES,
+    quantize_activations,
+    qmatmul_f32,
+    reuse_matmul,
+    reuse_matmul_batch,
+)
+
+
+def rand_case(rng, r, c):
+    x = rng.integers(-127, 128, r).astype(np.int32)
+    w = rng.integers(0, N_CODES, (r, c)).astype(np.int32)
+    return jnp.array(x), jnp.array(w)
+
+
+class TestReuseMatmulExact:
+    @pytest.mark.parametrize("r,c,bc", [(8, 16, 16), (64, 128, 64), (128, 512, 512), (100, 96, 32)])
+    def test_bit_exact_vs_dense(self, r, c, bc):
+        x, w = rand_case(np.random.default_rng(r * 1000 + c), r, c)
+        y = reuse_matmul(x, w, block_cols=bc)
+        ref = dense_matmul_ref(x, w)
+        np.testing.assert_array_equal(np.array(y), np.array(ref))
+
+    def test_block_size_invariance(self):
+        x, w = rand_case(np.random.default_rng(7), 48, 240)
+        outs = [np.array(reuse_matmul(x, w, block_cols=bc)) for bc in (16, 48, 80, 240)]
+        for o in outs[1:]:
+            np.testing.assert_array_equal(o, outs[0])
+
+    def test_extreme_codes(self):
+        # All-min / all-max codes exercise the table edges.
+        r, c = 16, 32
+        x = jnp.full((r,), -127, jnp.int32)
+        w = jnp.full((r, c), 0, jnp.int32)  # code -127
+        y = reuse_matmul(x, w, block_cols=c)
+        np.testing.assert_array_equal(np.array(y), np.full(c, (-127) * (-127) * r))
+        w = jnp.full((r, c), N_CODES - 1, jnp.int32)  # code +127
+        y = reuse_matmul(x, w, block_cols=c)
+        np.testing.assert_array_equal(np.array(y), np.full(c, (-127) * 127 * r))
+
+    def test_zero_input_vector(self):
+        x = jnp.zeros((32,), jnp.int32)
+        _, w = rand_case(np.random.default_rng(3), 32, 64)
+        y = reuse_matmul(x, w, block_cols=64)
+        np.testing.assert_array_equal(np.array(y), np.zeros(64, np.int32))
+
+    def test_bad_block_divisor_rejected(self):
+        x, w = rand_case(np.random.default_rng(4), 8, 30)
+        with pytest.raises(ValueError, match="must divide"):
+            reuse_matmul(x, w, block_cols=16)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        r=st.integers(1, 96),
+        c_blocks=st.integers(1, 4),
+        bc=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, r, c_blocks, bc, seed):
+        c = c_blocks * bc
+        x, w = rand_case(np.random.default_rng(seed), r, c)
+        y = reuse_matmul(x, w, block_cols=bc)
+        np.testing.assert_array_equal(np.array(y), np.array(dense_matmul_ref(x, w)))
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        s=st.integers(1, 8),
+        r=st.integers(4, 64),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_batch(self, s, r, seed):
+        rng = np.random.default_rng(seed)
+        c = 32
+        xs = jnp.array(rng.integers(-127, 128, (s, r)).astype(np.int32))
+        w = jnp.array(rng.integers(0, N_CODES, (r, c)).astype(np.int32))
+        y = reuse_matmul_batch(xs, w, block_cols=32)
+        np.testing.assert_array_equal(np.array(y), np.array(dense_matmul_batch_ref(xs, w)))
+
+
+class TestQuantization:
+    def test_quantize_bounds_and_scale(self):
+        x = jnp.array([[-2.0, 0.5, 1.0, 2.0]], jnp.float32)
+        q, s = quantize_activations(x)
+        assert np.abs(np.array(q)).max() <= 127
+        np.testing.assert_allclose(float(s), 2.0 / 127.0, rtol=1e-6)
+
+    def test_roundtrip_error_half_lsb(self):
+        rng = np.random.default_rng(5)
+        x = jnp.array(rng.normal(0, 1, (4, 64)).astype(np.float32))
+        q, s = quantize_activations(x)
+        err = np.abs(np.array(q) * float(s) - np.array(x))
+        assert err.max() <= float(s) / 2 + 1e-6
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        s=st.integers(1, 6),
+        r=st.integers(8, 64),
+        c_blocks=st.integers(1, 3),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_f32_wrapper_matches_ref(self, s, r, c_blocks, seed):
+        rng = np.random.default_rng(seed)
+        c = c_blocks * 16
+        x = jnp.array(rng.normal(0, 1, (s, r)).astype(np.float32))
+        w = jnp.array(rng.integers(0, N_CODES, (r, c)).astype(np.int32))
+        scale = np.float32(0.02 * 4 / 127)
+        y = qmatmul_f32(x, w, scale, block_cols=16)
+        ref = qmatmul_f32_ref(x, w, scale)
+        np.testing.assert_allclose(np.array(y), np.array(ref), rtol=1e-5, atol=1e-5)
+
+    def test_code_offset_consistency(self):
+        assert CODE_OFFSET == 127
+        assert N_CODES == 255

@@ -1,0 +1,36 @@
+//! Bench E9–E11 — regenerates every ablation table (buffer sweep, slice
+//! sweep, hazard rates, distribution sensitivity, RC-mapping choice) and
+//! times the sliced-lane cycle simulator.
+
+use axllm::report::{ablation, RunCtx};
+use axllm::util::bench::{black_box, Bench};
+
+fn main() {
+    let ctx = RunCtx::default();
+    println!("=== E9 — buffer-size ablation ===");
+    println!("{}", ablation::buffer_sweep(ctx).render());
+    println!("=== E11 — slicing ablation ===");
+    println!("{}", ablation::slice_sweep_table(ctx).render());
+    println!("=== E10 — hazard rates ===");
+    println!("{}", ablation::hazard_rates(ctx).render());
+    println!("=== S1 sensitivity — weight distribution ===");
+    println!("{}", ablation::distribution_sensitivity(ctx).render());
+    println!("=== design choice — RC slice mapping ===");
+    println!("{}", ablation::rc_mapping_note(ctx).render());
+    println!("=== bit-width tradeoff ===");
+    println!("{}", ablation::bitwidth_sweep(ctx).render());
+
+    let mut b = Bench::new();
+    b.run("ablation/slice_sweep", || {
+        black_box(ablation::slice_sweep(RunCtx {
+            seed: 42,
+            sample_rows: 16,
+        }));
+    });
+    b.run("ablation/buffer_sweep", || {
+        black_box(ablation::buffer_sweep(RunCtx {
+            seed: 42,
+            sample_rows: 16,
+        }));
+    });
+}

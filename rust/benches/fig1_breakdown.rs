@@ -1,0 +1,14 @@
+//! Bench E1 / Fig. 1 — regenerates the computation breakdown and times
+//! the analytic generator.
+
+use axllm::report::fig1;
+use axllm::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("=== Fig. 1 — computation breakdown ===");
+    println!("{}", fig1::generate().render());
+    let mut b = Bench::new();
+    b.run("fig1/generate", || {
+        black_box(fig1::generate());
+    });
+}

@@ -1,0 +1,28 @@
+//! Bench E2+E3 / Table I + Fig. 8 — regenerates the reuse-rate figure and
+//! times the locality measurement hot path.
+
+use axllm::config::ModelConfig;
+use axllm::model::{MatKind, Model};
+use axllm::quant::stats::measure_locality;
+use axllm::report::{fig8, RunCtx};
+use axllm::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("=== Table I ===");
+    println!("{}", fig8::table1().render());
+    println!("=== Fig. 8 — reuse rates ===");
+    println!("{}", fig8::generate(RunCtx::default()).render());
+
+    let model = Model::new(ModelConfig::llama_7b(), 42);
+    let w = model.matrix_rows(0, MatKind::Wq, 64);
+    let mut b = Bench::new();
+    b.run_throughput("fig8/measure_locality 64x4096 @512", w.data.len() as u64, || {
+        black_box(measure_locality(&w, 512));
+    });
+    b.run("fig8/full_figure", || {
+        black_box(fig8::measure(RunCtx {
+            seed: 42,
+            sample_rows: 16,
+        }));
+    });
+}

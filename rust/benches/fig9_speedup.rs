@@ -1,0 +1,29 @@
+//! Bench E4 / Fig. 9 — regenerates the speedup figure (with the
+//! DistilBERT absolute anchor) and times the end-to-end model simulation.
+
+use axllm::config::{AcceleratorConfig, ModelConfig};
+use axllm::model::Model;
+use axllm::report::{fig9, RunCtx};
+use axllm::sim::Accelerator;
+use axllm::util::bench::{black_box, Bench};
+use axllm::util::table::count;
+
+fn main() {
+    println!("=== Fig. 9 — speedup ===");
+    println!("{}", fig9::generate(RunCtx::default()).render());
+    let (ax, base) = fig9::distilbert_anchor(RunCtx::default());
+    println!(
+        "DistilBERT anchor @{} tokens: AxLLM {} vs baseline {} (paper: 85.11M vs 159.34M)\n",
+        fig9::ANCHOR_TOKENS,
+        count(ax),
+        count(base)
+    );
+
+    let model = Model::new(ModelConfig::distilbert(), 42);
+    let mut b = Bench::new();
+    b.run("fig9/run_model distilbert (64-row sample)", || {
+        black_box(
+            Accelerator::axllm(AcceleratorConfig::paper()).run_model(&model, 64, 1),
+        );
+    });
+}

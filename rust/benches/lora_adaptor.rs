@@ -1,0 +1,17 @@
+//! Bench E5 — regenerates the LoRA reuse table and times the combined
+//! W∥A measurement.
+
+use axllm::report::{lora, RunCtx};
+use axllm::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("=== LoRA adaptor reuse (Fig. 5 scheme) ===");
+    println!("{}", lora::generate(RunCtx::default()).render());
+    let mut b = Bench::new();
+    b.run("lora/measure_both_benchmarks", || {
+        black_box(lora::measure(RunCtx {
+            seed: 42,
+            sample_rows: 16,
+        }));
+    });
+}

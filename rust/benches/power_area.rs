@@ -1,0 +1,36 @@
+//! Bench E7+E8 — regenerates the power and area tables and times the
+//! energy model over a large stats batch.
+
+use axllm::energy::{AreaModel, EnergyModel};
+use axllm::report::{power, RunCtx};
+use axllm::sim::SimStats;
+use axllm::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("=== Power / energy ===");
+    println!("{}", power::generate(RunCtx::default()).render());
+    println!("=== Area ===");
+    println!("{}", power::generate_area().render());
+
+    let em = EnergyModel::default();
+    let am = AreaModel::default();
+    let s = SimStats {
+        cycles: 1_000_000,
+        elements: 900_000,
+        mults: 250_000,
+        rc_hits: 650_000,
+        rc_reads: 650_000,
+        rc_writes: 250_000,
+        w_reads: 900_000,
+        out_writes: 900_000,
+        adds: 900_000,
+        ..Default::default()
+    };
+    let mut b = Bench::new();
+    b.run("energy/report", || {
+        black_box(em.energy(&s));
+    });
+    b.run("area/paper_config", || {
+        black_box(am.area(&axllm::config::AcceleratorConfig::paper()));
+    });
+}

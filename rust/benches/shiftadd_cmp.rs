@@ -1,0 +1,29 @@
+//! Bench E6 — regenerates the ShiftAddLLM comparison and times both the
+//! comparator's functional LUT path and its timing model.
+
+use axllm::model::synth::{synthesize_matrix, WeightDistribution};
+use axllm::report::{shiftadd, RunCtx};
+use axllm::sim::shiftadd::{decompose, ShiftAddSim};
+use axllm::util::bench::{black_box, Bench};
+use axllm::util::rng::Rng;
+
+fn main() {
+    println!("=== AxLLM vs ShiftAddLLM ===");
+    println!("{}", shiftadd::generate(RunCtx::default()).render());
+
+    let mut rng = Rng::new(42);
+    let w = synthesize_matrix(64, 256, WeightDistribution::default(), &mut rng);
+    let d = decompose(&w, 8);
+    let x: Vec<i8> = (0..64).map(|_| rng.range_i64(-100, 100) as i8).collect();
+
+    let mut b = Bench::new();
+    b.run_throughput("shiftadd/lut_matmul 64x256 q8", (64 * 256) as u64, || {
+        black_box(d.matmul_lut(&x));
+    });
+    b.run("shiftadd/decompose 64x256 q8", || {
+        black_box(decompose(&w, 8));
+    });
+    b.run("shiftadd/timing_model distilbert", || {
+        black_box(ShiftAddSim::default().model_cycles(&axllm::config::ModelConfig::distilbert()));
+    });
+}

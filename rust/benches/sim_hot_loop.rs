@@ -1,0 +1,46 @@
+//! Perf bench for the §Perf pass: the simulator's hot loops in
+//! weight-elements/second. Targets (DESIGN.md §9): ≥50M elem/s for the
+//! serial lane, with the functional executor well above it.
+
+use axllm::config::AcceleratorConfig;
+use axllm::exec::{dense_matmul, reuse_matmul};
+use axllm::model::synth::{synthesize_matrix, WeightDistribution};
+use axllm::sim::{baseline, lane, sliced};
+use axllm::util::bench::{black_box, Bench};
+use axllm::util::rng::Rng;
+
+fn main() {
+    let cfg = AcceleratorConfig::paper();
+    let mut rng = Rng::new(42);
+    let w = synthesize_matrix(64, 4096, WeightDistribution::default(), &mut rng);
+    let x: Vec<i8> = (0..64).map(|_| rng.range_i64(-127, 127) as i8).collect();
+    let chunk256: Vec<i8> = w.row(0)[..256].to_vec();
+    let n_mat = (w.rows * w.cols) as u64;
+
+    let mut b = Bench::new();
+    b.run_throughput("lane/serial chunk256", 256, || {
+        black_box(lane::simulate_chunk(x[0], &chunk256, &cfg));
+    });
+    b.run_throughput("lane/baseline chunk256", 256, || {
+        black_box(baseline::simulate_chunk(x[0], &chunk256, &cfg));
+    });
+    b.run_throughput("lane/sliced chunk256 P=4", 256, || {
+        black_box(sliced::simulate_chunk(x[0], &chunk256, &cfg));
+    });
+    b.run_throughput("exec/reuse_matmul 64x4096", n_mat, || {
+        black_box(reuse_matmul(&x, &w));
+    });
+    b.run_throughput("exec/dense_matmul 64x4096", n_mat, || {
+        black_box(dense_matmul(&x, &w));
+    });
+    b.run_throughput(
+        "accelerator/matmul 64x4096 (serial lanes)",
+        n_mat,
+        || {
+            black_box(
+                axllm::sim::Accelerator::axllm(cfg).matmul(&x, &w),
+            );
+        },
+    );
+    println!("\ncsv:\n{}", b.csv());
+}

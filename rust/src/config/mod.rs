@@ -1,0 +1,273 @@
+//! Configuration: accelerator micro-architecture parameters and the model
+//! zoo matching the paper's Table I, with TOML-subset load/save.
+
+pub mod models;
+
+pub use models::{table1_benchmarks, Benchmark, Dataset, LoraConfig, ModelConfig};
+
+use crate::util::tomlite::{self, Doc, Value};
+use anyhow::{anyhow, Context};
+
+/// Micro-architecture parameters of one AxLLM instance (paper §III.c–§IV).
+///
+/// Defaults reproduce the paper's evaluated configuration: *"AxLLM is
+/// organized as a 64-lane architecture, each with 256-entry weight/output
+/// buffers. In each lane, the buffers are arranged as four 64-entry slices
+/// that are processed in parallel"* (§V), with 3-cycle multipliers and
+/// 1-cycle buffer accesses from the 15nm RTL synthesis (§IV).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AcceleratorConfig {
+    /// Parallel lanes (L). Lane i processes input element x[i].
+    pub lanes: usize,
+    /// W_buff / Out_buff entries per lane (whole-lane, pre-slicing).
+    pub buffer_entries: usize,
+    /// Number of buffer/RC slices per lane (P-way parallelism, §IV).
+    pub slices: usize,
+    /// Depth of each collision queue in front of RC/Out_buff slices.
+    pub queue_depth: usize,
+    /// Multiplier latency in cycles (RTL synthesis: 3).
+    pub mult_latency: u32,
+    /// Buffer / RC access latency in cycles (RTL synthesis: 1).
+    pub buf_latency: u32,
+    /// Column-round width bounding incomplete output cells (§IV: 512).
+    pub round_cols: usize,
+    /// Weight bit width (8 everywhere in the paper).
+    pub weight_bits: u8,
+    /// Clock frequency in GHz (for power = energy / time).
+    pub freq_ghz: f64,
+    /// When false, the reuse path is disabled → the Fig. 9 baseline
+    /// ("the AxLLM architecture with just multipliers").
+    pub reuse_enabled: bool,
+}
+
+impl Default for AcceleratorConfig {
+    fn default() -> Self {
+        AcceleratorConfig {
+            lanes: 64,
+            buffer_entries: 256,
+            slices: 4,
+            queue_depth: 4,
+            mult_latency: 3,
+            buf_latency: 1,
+            round_cols: 512,
+            weight_bits: 8,
+            freq_ghz: 1.0,
+            reuse_enabled: true,
+        }
+    }
+}
+
+impl AcceleratorConfig {
+    /// The paper's evaluated configuration (see type-level docs).
+    pub fn paper() -> Self {
+        Self::default()
+    }
+
+    /// The Fig. 9 normalization baseline: identical sizing, multipliers
+    /// only (no Result Cache).
+    pub fn baseline() -> Self {
+        AcceleratorConfig {
+            reuse_enabled: false,
+            ..Self::default()
+        }
+    }
+
+    /// Result-Cache entries implied by the bit width (sign-folded).
+    pub fn rc_entries(&self) -> usize {
+        crate::quant::rc_entries(self.weight_bits)
+    }
+
+    /// Entries per buffer slice.
+    pub fn slice_entries(&self) -> usize {
+        self.buffer_entries / self.slices
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.lanes == 0 {
+            return Err(anyhow!("lanes must be > 0"));
+        }
+        if self.slices == 0 || self.buffer_entries % self.slices != 0 {
+            return Err(anyhow!(
+                "slices ({}) must divide buffer_entries ({})",
+                self.slices,
+                self.buffer_entries
+            ));
+        }
+        if !(2..=8).contains(&self.weight_bits) {
+            return Err(anyhow!("weight_bits must be in 2..=8"));
+        }
+        if self.mult_latency == 0 || self.buf_latency == 0 {
+            return Err(anyhow!("latencies must be ≥ 1 cycle"));
+        }
+        if self.queue_depth == 0 {
+            return Err(anyhow!("queue_depth must be ≥ 1"));
+        }
+        if self.round_cols == 0 {
+            return Err(anyhow!("round_cols must be > 0"));
+        }
+        if self.freq_ghz <= 0.0 {
+            return Err(anyhow!("freq_ghz must be > 0"));
+        }
+        Ok(())
+    }
+
+    /// Serialize into a `[accelerator]` TOML section.
+    pub fn to_doc(&self, doc: &mut Doc) {
+        let s = "accelerator";
+        doc.set(s, "lanes", Value::Int(self.lanes as i64));
+        doc.set(s, "buffer_entries", Value::Int(self.buffer_entries as i64));
+        doc.set(s, "slices", Value::Int(self.slices as i64));
+        doc.set(s, "queue_depth", Value::Int(self.queue_depth as i64));
+        doc.set(s, "mult_latency", Value::Int(self.mult_latency as i64));
+        doc.set(s, "buf_latency", Value::Int(self.buf_latency as i64));
+        doc.set(s, "round_cols", Value::Int(self.round_cols as i64));
+        doc.set(s, "weight_bits", Value::Int(self.weight_bits as i64));
+        doc.set(s, "freq_ghz", Value::Float(self.freq_ghz));
+        doc.set(s, "reuse_enabled", Value::Bool(self.reuse_enabled));
+    }
+
+    /// Read from a `[accelerator]` TOML section; missing keys keep their
+    /// defaults so config files can be sparse overrides.
+    pub fn from_doc(doc: &Doc) -> crate::Result<Self> {
+        let mut c = Self::default();
+        let s = "accelerator";
+        let geti = |key: &str, default: usize| -> crate::Result<usize> {
+            match doc.get(s, key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("[accelerator].{key} must be a non-negative int")),
+            }
+        };
+        c.lanes = geti("lanes", c.lanes)?;
+        c.buffer_entries = geti("buffer_entries", c.buffer_entries)?;
+        c.slices = geti("slices", c.slices)?;
+        c.queue_depth = geti("queue_depth", c.queue_depth)?;
+        c.mult_latency = geti("mult_latency", c.mult_latency as usize)? as u32;
+        c.buf_latency = geti("buf_latency", c.buf_latency as usize)? as u32;
+        c.round_cols = geti("round_cols", c.round_cols)?;
+        c.weight_bits = geti("weight_bits", c.weight_bits as usize)? as u8;
+        if let Some(v) = doc.get(s, "freq_ghz") {
+            c.freq_ghz = v
+                .as_float()
+                .ok_or_else(|| anyhow!("[accelerator].freq_ghz must be a number"))?;
+        }
+        if let Some(v) = doc.get(s, "reuse_enabled") {
+            c.reuse_enabled = v
+                .as_bool()
+                .ok_or_else(|| anyhow!("[accelerator].reuse_enabled must be a bool"))?;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Load from a TOML file.
+    pub fn load(path: &std::path::Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let doc = tomlite::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_doc(&doc)
+    }
+
+    /// Save to a TOML file.
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        let mut doc = Doc::default();
+        self.to_doc(&mut doc);
+        std::fs::write(path, doc.to_string())
+            .with_context(|| format!("writing config {}", path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_config() {
+        let c = AcceleratorConfig::paper();
+        assert_eq!(c.lanes, 64);
+        assert_eq!(c.buffer_entries, 256);
+        assert_eq!(c.slices, 4);
+        assert_eq!(c.slice_entries(), 64);
+        assert_eq!(c.mult_latency, 3);
+        assert_eq!(c.buf_latency, 1);
+        assert_eq!(c.rc_entries(), 128);
+        assert!(c.reuse_enabled);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn baseline_disables_reuse_only() {
+        let b = AcceleratorConfig::baseline();
+        let p = AcceleratorConfig::paper();
+        assert!(!b.reuse_enabled);
+        assert_eq!(
+            AcceleratorConfig {
+                reuse_enabled: true,
+                ..b
+            },
+            p
+        );
+    }
+
+    #[test]
+    fn validate_rejects_bad_slicing() {
+        let c = AcceleratorConfig {
+            slices: 3,
+            buffer_entries: 256,
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_fields() {
+        for f in 0..5 {
+            let mut c = AcceleratorConfig::default();
+            match f {
+                0 => c.lanes = 0,
+                1 => c.queue_depth = 0,
+                2 => c.mult_latency = 0,
+                3 => c.round_cols = 0,
+                _ => c.freq_ghz = 0.0,
+            }
+            assert!(c.validate().is_err(), "field {f} should fail");
+        }
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let c = AcceleratorConfig {
+            lanes: 32,
+            buffer_entries: 512,
+            slices: 8,
+            freq_ghz: 1.5,
+            reuse_enabled: false,
+            ..Default::default()
+        };
+        let mut doc = Doc::default();
+        c.to_doc(&mut doc);
+        let back = AcceleratorConfig::from_doc(&tomlite::parse(&doc.to_string()).unwrap()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn sparse_doc_keeps_defaults() {
+        let doc = tomlite::parse("[accelerator]\nlanes = 16\n").unwrap();
+        let c = AcceleratorConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.lanes, 16);
+        assert_eq!(c.buffer_entries, 256);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("axllm_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("acc.toml");
+        let c = AcceleratorConfig::paper();
+        c.save(&path).unwrap();
+        assert_eq!(AcceleratorConfig::load(&path).unwrap(), c);
+    }
+}

@@ -1,0 +1,290 @@
+//! The model zoo and benchmark suite of the paper's Table I.
+
+/// LoRA adaptor hyper-parameters (paper §III.c "AxLLM support of LoRA").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LoraConfig {
+    /// Low-rank dimension r of A (d×r) and B (r×d).
+    pub rank: usize,
+    /// Scaling α (kept for completeness; cycle counts are α-independent).
+    pub alpha: f32,
+}
+
+impl Default for LoraConfig {
+    fn default() -> Self {
+        LoraConfig {
+            rank: 16,
+            alpha: 32.0,
+        }
+    }
+}
+
+/// Architectural description of one transformer model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// Hidden size (== rows/cols of the attention projection matrices, the
+    /// "Weight Matrix Size" column of Table I).
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// Feed-forward inner dimension.
+    pub d_ff: usize,
+    /// LoRA adaptor attached to Q/V projections, when fine-tuned.
+    pub lora: Option<LoraConfig>,
+}
+
+impl ModelConfig {
+    pub fn distilbert() -> Self {
+        ModelConfig {
+            name: "DistilBERT".into(),
+            d_model: 768,
+            n_layers: 6,
+            n_heads: 12,
+            d_ff: 3072,
+            lora: None,
+        }
+    }
+
+    pub fn bert_base() -> Self {
+        ModelConfig {
+            name: "BERT Base Uncased".into(),
+            d_model: 768,
+            n_layers: 12,
+            n_heads: 12,
+            d_ff: 3072,
+            lora: None,
+        }
+    }
+
+    pub fn bert_large() -> Self {
+        ModelConfig {
+            name: "Large BERT".into(),
+            d_model: 1024,
+            n_layers: 24,
+            n_heads: 16,
+            d_ff: 4096,
+            lora: None,
+        }
+    }
+
+    pub fn llama_7b() -> Self {
+        ModelConfig {
+            name: "Llama 7B".into(),
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            d_ff: 11008,
+            lora: None,
+        }
+    }
+
+    pub fn llama_13b() -> Self {
+        ModelConfig {
+            name: "Llama 13B".into(),
+            d_model: 5120,
+            n_layers: 40,
+            n_heads: 40,
+            d_ff: 13824,
+            lora: None,
+        }
+    }
+
+    /// A tiny configuration for the end-to-end PJRT driver and tests:
+    /// small enough to AOT-compile and run on CPU in seconds.
+    pub fn tiny() -> Self {
+        ModelConfig {
+            name: "Tiny".into(),
+            d_model: 128,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 256,
+            lora: None,
+        }
+    }
+
+    /// Attach a LoRA adaptor (fine-tuned variant).
+    pub fn with_lora(mut self, lora: LoraConfig) -> Self {
+        self.name = format!("{} (fine-tuned)", self.name);
+        self.lora = Some(lora);
+        self
+    }
+
+    /// Per-head dimension.
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Approximate parameter count (embeddings excluded — the accelerator
+    /// only runs matmuls).
+    pub fn param_count(&self) -> u64 {
+        let d = self.d_model as u64;
+        let ff = self.d_ff as u64;
+        // Q,K,V,O projections + 2 FFN matrices per layer.
+        self.n_layers as u64 * (4 * d * d + 2 * d * ff)
+    }
+
+    /// MAC count of the matmuls for one token at a given context length
+    /// (see `model::flops` for the full per-component breakdown).
+    pub fn macs_per_token(&self, context: usize) -> u64 {
+        let d = self.d_model as u64;
+        let ff = self.d_ff as u64;
+        let ctx = context as u64;
+        self.n_layers as u64 * (4 * d * d + 2 * d * ff + 2 * ctx * d)
+    }
+}
+
+/// Datasets of Table I, modeled as sequence-length profiles (substitution
+/// S2 in DESIGN.md: reuse is weight-side; datasets set sequence lengths and
+/// request mixes only).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    AgNews,
+    YelpReviewFull,
+    Squad,
+    Imdb,
+}
+
+impl Dataset {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::AgNews => "AG News",
+            Dataset::YelpReviewFull => "Yelp Review Full",
+            Dataset::Squad => "SQuAD",
+            Dataset::Imdb => "IMDb",
+        }
+    }
+
+    /// Mean token length of the dataset's examples (published corpus
+    /// statistics, rounded).
+    pub fn mean_len(&self) -> usize {
+        match self {
+            Dataset::AgNews => 48,
+            Dataset::YelpReviewFull => 179,
+            Dataset::Squad => 384,
+            Dataset::Imdb => 256,
+        }
+    }
+
+    /// Maximum sequence length used when tokenizing (BERT-style cap).
+    pub fn max_len(&self) -> usize {
+        match self {
+            Dataset::AgNews => 128,
+            Dataset::YelpReviewFull => 512,
+            Dataset::Squad => 384,
+            Dataset::Imdb => 512,
+        }
+    }
+}
+
+/// One Table-I row: a model/dataset pair.
+#[derive(Clone, Debug)]
+pub struct Benchmark {
+    pub model: ModelConfig,
+    pub dataset: Dataset,
+}
+
+impl Benchmark {
+    /// Short key for tables and CSVs.
+    pub fn key(&self) -> String {
+        format!("{} / {}", self.model.name, self.dataset.name())
+    }
+
+    /// The "Weight Matrix Size" column of Table I.
+    pub fn weight_matrix(&self) -> (usize, usize) {
+        (self.model.d_model, self.model.d_model)
+    }
+}
+
+/// All seven Table-I benchmarks, in paper order.
+pub fn table1_benchmarks() -> Vec<Benchmark> {
+    vec![
+        Benchmark {
+            model: ModelConfig::distilbert(),
+            dataset: Dataset::AgNews,
+        },
+        Benchmark {
+            model: ModelConfig::distilbert().with_lora(LoraConfig::default()),
+            dataset: Dataset::YelpReviewFull,
+        },
+        Benchmark {
+            model: ModelConfig::bert_base(),
+            dataset: Dataset::Squad,
+        },
+        Benchmark {
+            model: ModelConfig::bert_base().with_lora(LoraConfig::default()),
+            dataset: Dataset::Imdb,
+        },
+        Benchmark {
+            model: ModelConfig::bert_large(),
+            dataset: Dataset::Imdb,
+        },
+        Benchmark {
+            model: ModelConfig::llama_7b(),
+            dataset: Dataset::Imdb,
+        },
+        Benchmark {
+            model: ModelConfig::llama_13b(),
+            dataset: Dataset::Imdb,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        let b = table1_benchmarks();
+        assert_eq!(b.len(), 7);
+        assert_eq!(b[0].weight_matrix(), (768, 768));
+        assert_eq!(b[4].weight_matrix(), (1024, 1024));
+        assert_eq!(b[5].weight_matrix(), (4096, 4096));
+        assert_eq!(b[6].weight_matrix(), (5120, 5120));
+        assert!(b[1].model.lora.is_some());
+        assert!(b[3].model.lora.is_some());
+        assert!(b[0].model.lora.is_none());
+        assert_eq!(b[1].dataset, Dataset::YelpReviewFull);
+        assert_eq!(b[3].dataset, Dataset::Imdb);
+    }
+
+    #[test]
+    fn head_dims_divide() {
+        for b in table1_benchmarks() {
+            assert_eq!(b.model.d_model % b.model.n_heads, 0, "{}", b.model.name);
+        }
+    }
+
+    #[test]
+    fn llama7b_param_count_in_range() {
+        // Matmul-only params of Llama-7B ≈ 6.5e9 (embeddings excluded).
+        let p = ModelConfig::llama_7b().param_count() as f64;
+        assert!((5.0e9..8.0e9).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn fine_tuned_naming() {
+        let m = ModelConfig::distilbert().with_lora(LoraConfig::default());
+        assert!(m.name.contains("fine-tuned"));
+        assert_eq!(m.lora.unwrap().rank, 16);
+    }
+
+    #[test]
+    fn macs_scale_with_context() {
+        let m = ModelConfig::tiny();
+        assert!(m.macs_per_token(256) > m.macs_per_token(16));
+    }
+
+    #[test]
+    fn dataset_profiles() {
+        assert!(Dataset::AgNews.mean_len() < Dataset::Imdb.mean_len());
+        for d in [
+            Dataset::AgNews,
+            Dataset::YelpReviewFull,
+            Dataset::Squad,
+            Dataset::Imdb,
+        ] {
+            assert!(d.mean_len() <= d.max_len());
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! Dynamic batching over a request trace.
+//!
+//! Requests arrive with timestamps (from [`crate::workload::TraceGenerator`]
+//! or a live queue); the batcher forms a batch when either `max_batch`
+//! requests are waiting or the oldest request has waited `max_wait_s`.
+//! This is the standard serving trade-off: larger batches amortize
+//! executable dispatch, longer waits hurt tail latency.
+
+use crate::workload::Request;
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BatchPolicy {
+    /// Maximum requests per batch (the artifact's compiled batch size).
+    pub max_batch: usize,
+    /// Maximum time the oldest request may wait before the batch closes.
+    pub max_wait_s: f64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 4,
+            max_wait_s: 0.010,
+        }
+    }
+}
+
+/// A closed batch: the requests plus the time at which it was dispatched.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+    pub dispatch_s: f64,
+}
+
+/// Deterministic trace-driven batcher (no wall clock — simulation time
+/// comes from request arrival stamps, making tests and experiments
+/// reproducible).
+#[derive(Clone, Debug)]
+pub struct DynamicBatcher {
+    policy: BatchPolicy,
+    pending: Vec<Request>,
+}
+
+impl DynamicBatcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch > 0);
+        assert!(policy.max_wait_s >= 0.0);
+        DynamicBatcher {
+            policy,
+            pending: Vec::new(),
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Offer one request; returns a batch if this arrival closed one.
+    ///
+    /// Closure rules, evaluated at the new request's arrival time `now`:
+    /// 1. if the oldest pending request has waited ≥ `max_wait_s`, the
+    ///    pending set (without the new arrival) dispatches first;
+    /// 2. if pending reaches `max_batch`, it dispatches immediately.
+    pub fn offer(&mut self, req: Request) -> Vec<Batch> {
+        let now = req.arrival_s;
+        let mut out = Vec::new();
+        if let Some(oldest) = self.pending.first() {
+            if now - oldest.arrival_s >= self.policy.max_wait_s && !self.pending.is_empty() {
+                let dispatch_s = oldest.arrival_s + self.policy.max_wait_s;
+                out.push(Batch {
+                    requests: std::mem::take(&mut self.pending),
+                    dispatch_s,
+                });
+            }
+        }
+        self.pending.push(req);
+        if self.pending.len() >= self.policy.max_batch {
+            out.push(Batch {
+                requests: std::mem::take(&mut self.pending),
+                dispatch_s: now,
+            });
+        }
+        out
+    }
+
+    /// Flush the remaining requests at end of trace.
+    pub fn flush(&mut self, now: f64) -> Option<Batch> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            let dispatch_s = self
+                .pending
+                .first()
+                .map(|r| (r.arrival_s + self.policy.max_wait_s).min(now))
+                .unwrap_or(now);
+            Some(Batch {
+                requests: std::mem::take(&mut self.pending),
+                dispatch_s,
+            })
+        }
+    }
+
+    /// Batch an entire trace (requests must be arrival-ordered).
+    pub fn batch_trace(policy: BatchPolicy, trace: Vec<Request>) -> Vec<Batch> {
+        let mut b = DynamicBatcher::new(policy);
+        let mut out = Vec::new();
+        let end = trace.last().map(|r| r.arrival_s).unwrap_or(0.0);
+        for r in trace {
+            out.extend(b.offer(r));
+        }
+        if let Some(last) = b.flush(end + policy.max_wait_s) {
+            out.push(last);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Dataset;
+
+    fn req(id: u64, t: f64) -> Request {
+        Request {
+            id,
+            dataset: Dataset::Imdb,
+            seq_len: 32,
+            arrival_s: t,
+        }
+    }
+
+    #[test]
+    fn fills_to_max_batch() {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 3,
+            max_wait_s: 10.0,
+        });
+        assert!(b.offer(req(0, 0.001)).is_empty());
+        assert!(b.offer(req(1, 0.002)).is_empty());
+        let batches = b.offer(req(2, 0.003));
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].requests.len(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn timeout_closes_partial_batch() {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait_s: 0.01,
+        });
+        assert!(b.offer(req(0, 0.0)).is_empty());
+        let batches = b.offer(req(1, 0.10));
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].requests.len(), 1);
+        assert_eq!(batches[0].requests[0].id, 0);
+        assert!((batches[0].dispatch_s - 0.01).abs() < 1e-9);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn flush_drains_pending() {
+        let mut b = DynamicBatcher::new(BatchPolicy::default());
+        b.offer(req(0, 0.0));
+        b.offer(req(1, 0.001));
+        let batch = b.flush(1.0).unwrap();
+        assert_eq!(batch.requests.len(), 2);
+        assert!(b.flush(2.0).is_none());
+    }
+
+    #[test]
+    fn batch_trace_covers_every_request_once() {
+        let trace: Vec<Request> = (0..23).map(|i| req(i, i as f64 * 0.004)).collect();
+        let batches = DynamicBatcher::batch_trace(
+            BatchPolicy {
+                max_batch: 4,
+                max_wait_s: 0.01,
+            },
+            trace,
+        );
+        let mut ids: Vec<u64> = batches
+            .iter()
+            .flat_map(|b| b.requests.iter().map(|r| r.id))
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..23).collect::<Vec<_>>());
+        assert!(batches.iter().all(|b| b.requests.len() <= 4));
+    }
+
+    #[test]
+    fn dispatch_times_monotone() {
+        let trace: Vec<Request> = (0..50).map(|i| req(i, i as f64 * 0.003)).collect();
+        let batches = DynamicBatcher::batch_trace(BatchPolicy::default(), trace);
+        for w in batches.windows(2) {
+            assert!(w[1].dispatch_s >= w[0].dispatch_s);
+        }
+    }
+}

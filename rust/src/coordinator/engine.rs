@@ -1,0 +1,237 @@
+//! The inference engine: PJRT functional execution + simulated
+//! accelerator attribution for every batch.
+
+use crate::config::AcceleratorConfig;
+use crate::coordinator::batcher::{Batch, BatchPolicy, DynamicBatcher};
+use crate::coordinator::metrics::{LatencyStats, ServeSummary};
+use crate::energy::EnergyModel;
+use crate::model::Model;
+use crate::runtime::{ArtifactSet, Runtime, TinyWeights};
+use crate::sim::{Accelerator, SimStats};
+use crate::workload::{synth_embeddings, Request};
+use anyhow::Result;
+use std::path::Path;
+
+/// Precomputed per-token accelerator costs for the served model
+/// (cycles/energy per token of matmul work, AxLLM vs baseline).
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    pub cycles_per_token_ax: f64,
+    pub cycles_per_token_base: f64,
+    pub energy_pj_per_token_ax: f64,
+    pub energy_pj_per_token_base: f64,
+    pub reuse_rate: f64,
+    pub freq_ghz: f64,
+}
+
+impl CostModel {
+    /// Derive from one simulated token (one input vector through every
+    /// weight matrix of the model).
+    pub fn from_sim(model: &Model, acc_cfg: AcceleratorConfig) -> CostModel {
+        let ax = Accelerator::axllm(acc_cfg).run_model(model, usize::MAX, 11);
+        let base = Accelerator::baseline(acc_cfg).run_model(model, usize::MAX, 11);
+        let em = EnergyModel::default();
+        CostModel {
+            cycles_per_token_ax: ax.total.cycles as f64,
+            cycles_per_token_base: base.total.cycles as f64,
+            energy_pj_per_token_ax: em.energy(&ax.total).total_pj,
+            energy_pj_per_token_base: em.energy(&base.total).total_pj,
+            reuse_rate: ax.total.reuse_rate(),
+            freq_ghz: acc_cfg.freq_ghz,
+        }
+    }
+
+    pub fn speedup(&self) -> f64 {
+        self.cycles_per_token_base / self.cycles_per_token_ax
+    }
+
+    /// Simulated accelerator service time for `tokens` tokens, seconds.
+    pub fn sim_time_s(&self, tokens: u64) -> f64 {
+        self.cycles_per_token_ax * tokens as f64 / (self.freq_ghz * 1e9)
+    }
+}
+
+/// Per-request outcome.
+#[derive(Clone, Debug)]
+pub struct RequestResult {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    /// Time spent queued before the batch dispatched.
+    pub queue_wait_s: f64,
+    /// Host (PJRT) execution time of the batch this request rode in.
+    pub exec_s: f64,
+    /// queue_wait + exec.
+    pub latency_s: f64,
+    /// Simulated accelerator cycles attributed to this request.
+    pub sim_cycles: u64,
+    /// Simulated accelerator energy (J).
+    pub sim_energy_j: f64,
+}
+
+/// The serving engine: compiled artifacts (incl. weights) + cost model.
+pub struct Engine {
+    _rt: Runtime,
+    pub artifacts: ArtifactSet,
+    pub cost: CostModel,
+    /// Embedding seed base — request `id` deterministically derives its
+    /// synthetic embedding stream.
+    pub embed_seed: u64,
+}
+
+impl Engine {
+    /// Load everything from an artifact directory (built by
+    /// `make artifacts`).
+    pub fn load(dir: &Path, acc_cfg: AcceleratorConfig) -> Result<Engine> {
+        let rt = Runtime::cpu()?;
+        let artifacts = ArtifactSet::load(&rt, dir)?;
+        let model = Model::new(artifacts.manifest.model_config(), artifacts.manifest.seed);
+        let cost = CostModel::from_sim(&model, acc_cfg);
+        let embed_seed = artifacts.manifest.seed;
+        Ok(Engine {
+            _rt: rt,
+            artifacts,
+            cost,
+            embed_seed,
+        })
+    }
+
+    /// The quantized weights the artifact executes with.
+    pub fn weights(&self) -> &TinyWeights {
+        &self.artifacts.weights
+    }
+
+    /// Batch capacity of the compiled model artifact.
+    pub fn max_batch(&self) -> usize {
+        self.artifacts.manifest.batch
+    }
+
+    /// Synthesize the (padded/truncated) embedding block for one request.
+    pub fn request_embeddings(&self, req: &Request) -> Vec<f32> {
+        let m = &self.artifacts.manifest;
+        let mut e = synth_embeddings(
+            req.seq_len.min(m.seq),
+            m.d_model,
+            self.embed_seed ^ req.id.wrapping_mul(0x9E3779B97F4A7C15),
+        );
+        e.resize(m.seq * m.d_model, 0.0);
+        e
+    }
+
+    /// Execute one batch through the PJRT model; returns per-request
+    /// results (logits + attribution).
+    pub fn run_batch(&self, batch: &Batch) -> Result<Vec<RequestResult>> {
+        let m = &self.artifacts.manifest;
+        assert!(
+            batch.requests.len() <= m.batch,
+            "batch {} exceeds artifact capacity {}",
+            batch.requests.len(),
+            m.batch
+        );
+        // Pad the batch to the compiled size with zero sequences.
+        let mut data = vec![0f32; m.batch * m.seq * m.d_model];
+        for (slot, req) in batch.requests.iter().enumerate() {
+            let e = self.request_embeddings(req);
+            data[slot * m.seq * m.d_model..(slot + 1) * m.seq * m.d_model]
+                .copy_from_slice(&e);
+        }
+        let t0 = std::time::Instant::now();
+        let logits = self.artifacts.run_tiny_model(&data)?;
+        let exec_s = t0.elapsed().as_secs_f64();
+
+        let mut out = Vec::with_capacity(batch.requests.len());
+        for (slot, req) in batch.requests.iter().enumerate() {
+            let tokens = req.seq_len.min(m.seq) as u64;
+            let queue_wait_s = (batch.dispatch_s - req.arrival_s).max(0.0);
+            out.push(RequestResult {
+                id: req.id,
+                logits: logits[slot * m.n_classes..(slot + 1) * m.n_classes].to_vec(),
+                queue_wait_s,
+                exec_s,
+                latency_s: queue_wait_s + exec_s,
+                sim_cycles: (self.cost.cycles_per_token_ax * tokens as f64) as u64,
+                sim_energy_j: self.cost.energy_pj_per_token_ax * tokens as f64 * 1e-12,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Serve a whole arrival-ordered trace; returns per-request results
+    /// and the aggregate summary.
+    pub fn serve_trace(
+        &self,
+        trace: Vec<Request>,
+        policy: BatchPolicy,
+    ) -> Result<(Vec<RequestResult>, ServeSummary)> {
+        let policy = BatchPolicy {
+            max_batch: policy.max_batch.min(self.max_batch()),
+            ..policy
+        };
+        let n_req = trace.len();
+        let first_arrival = trace.first().map(|r| r.arrival_s).unwrap_or(0.0);
+        let tokens: u64 = trace
+            .iter()
+            .map(|r| r.seq_len.min(self.artifacts.manifest.seq) as u64)
+            .sum();
+        let batches = DynamicBatcher::batch_trace(policy, trace);
+        let mut results = Vec::with_capacity(n_req);
+        for b in &batches {
+            results.extend(self.run_batch(b)?);
+        }
+        let latency = LatencyStats::from_samples(results.iter().map(|r| r.latency_s).collect());
+        let sim_cycles: u64 = results.iter().map(|r| r.sim_cycles).sum();
+        let sim_energy_j: f64 = results.iter().map(|r| r.sim_energy_j).sum();
+        let span_s = (batches.last().map(|b| b.dispatch_s).unwrap_or(0.0) - first_arrival
+            + latency.max_s)
+            .max(1e-9);
+        let summary = ServeSummary {
+            requests: n_req,
+            batches: batches.len(),
+            tokens,
+            span_s,
+            latency,
+            throughput_rps: n_req as f64 / span_s,
+            throughput_tps: tokens as f64 / span_s,
+            sim_cycles,
+            sim_reuse_rate: self.cost.reuse_rate,
+            sim_energy_j,
+            sim_speedup: self.cost.speedup(),
+        };
+        Ok((results, summary))
+    }
+}
+
+/// Aggregate a set of simulated stats into a serving-attribution record
+/// (used by reports and tests without a PJRT dependency).
+pub fn attribute(stats: &SimStats, freq_ghz: f64) -> (f64, f64) {
+    let em = EnergyModel::default();
+    let t = stats.cycles as f64 / (freq_ghz * 1e9);
+    (t, em.energy(stats).total_pj * 1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn cost_model_reflects_reuse() {
+        let model = Model::new(ModelConfig::tiny(), 3);
+        let cm = CostModel::from_sim(&model, AcceleratorConfig::paper());
+        assert!(cm.speedup() > 1.3, "speedup {}", cm.speedup());
+        assert!(cm.reuse_rate > 0.5);
+        assert!(cm.energy_pj_per_token_ax < cm.energy_pj_per_token_base);
+        assert!(cm.sim_time_s(100) > 0.0);
+    }
+
+    #[test]
+    fn attribute_converts_units() {
+        let s = SimStats {
+            cycles: 1_000_000_000,
+            mults: 1000,
+            ..Default::default()
+        };
+        let (t, e) = attribute(&s, 1.0);
+        assert!((t - 1.0).abs() < 1e-9, "1e9 cycles @1GHz = 1s, got {t}");
+        assert!(e > 0.0);
+    }
+}

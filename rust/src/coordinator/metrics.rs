@@ -1,0 +1,87 @@
+//! Serving metrics: latency percentiles, throughput, and accelerator
+//! attribution (cycles, reuse, energy) aggregated over a run.
+
+/// Latency distribution summary (seconds).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+}
+
+impl LatencyStats {
+    /// Compute from raw samples (unordered).
+    pub fn from_samples(mut samples: Vec<f64>) -> LatencyStats {
+        if samples.is_empty() {
+            return LatencyStats::default();
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let pct = |p: f64| samples[(((n as f64) * p) as usize).min(n - 1)];
+        LatencyStats {
+            count: n,
+            mean_s: samples.iter().sum::<f64>() / n as f64,
+            p50_s: pct(0.50),
+            p95_s: pct(0.95),
+            p99_s: pct(0.99),
+            max_s: samples[n - 1],
+        }
+    }
+}
+
+/// End-of-run summary for a served trace.
+#[derive(Clone, Debug, Default)]
+pub struct ServeSummary {
+    pub requests: usize,
+    pub batches: usize,
+    pub tokens: u64,
+    /// Wall-clock span of the trace (first arrival → last completion).
+    pub span_s: f64,
+    pub latency: LatencyStats,
+    /// Requests per second over the span.
+    pub throughput_rps: f64,
+    /// Tokens per second over the span.
+    pub throughput_tps: f64,
+    /// Simulated accelerator cycles attributed across all requests.
+    pub sim_cycles: u64,
+    /// Simulated reuse rate over all attributed work.
+    pub sim_reuse_rate: f64,
+    /// Simulated energy (J) on the accelerator.
+    pub sim_energy_j: f64,
+    /// Simulated speedup vs the multiply-only baseline for this workload.
+    pub sim_speedup: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64 / 100.0).collect();
+        let l = LatencyStats::from_samples(samples);
+        assert_eq!(l.count, 100);
+        assert!(l.p50_s <= l.p95_s && l.p95_s <= l.p99_s && l.p99_s <= l.max_s);
+        assert!((l.mean_s - 0.505).abs() < 1e-9);
+        assert!((l.p50_s - 0.51).abs() < 1e-9);
+        assert!((l.max_s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_samples_are_zero() {
+        let l = LatencyStats::from_samples(vec![]);
+        assert_eq!(l.count, 0);
+        assert_eq!(l.max_s, 0.0);
+    }
+
+    #[test]
+    fn single_sample() {
+        let l = LatencyStats::from_samples(vec![0.25]);
+        assert_eq!(l.count, 1);
+        assert_eq!(l.p50_s, 0.25);
+        assert_eq!(l.p99_s, 0.25);
+    }
+}

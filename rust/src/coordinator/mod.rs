@@ -1,0 +1,19 @@
+//! The serving coordinator: request queue → dynamic batcher → router that
+//! dispatches every batch to the PJRT functional model while attributing
+//! simulated accelerator cycles/energy to each request.
+//!
+//! The paper's contribution lives at the micro-architecture level, so L3
+//! here is the thin-but-real serving harness a deployment of AxLLM would
+//! sit behind (DESIGN.md §2): admission, batching, padding, execution,
+//! per-request metrics, and throughput/latency reporting. Rust owns the
+//! event loop; Python never runs on this path.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{Batch, BatchPolicy, DynamicBatcher};
+pub use engine::{CostModel, Engine, RequestResult};
+pub use metrics::{LatencyStats, ServeSummary};
+pub use server::Server;

@@ -1,0 +1,126 @@
+//! Threaded serving front-end: a live request queue in front of the
+//! engine.
+//!
+//! The engine (and its PJRT client) is constructed inside the worker
+//! thread — PJRT handles are not `Send`, so the worker owns the whole
+//! execution stack and the outside world talks to it through channels.
+//! Batching uses wall-clock `recv_timeout`, mirroring the deterministic
+//! trace batcher's policy.
+
+use crate::config::AcceleratorConfig;
+use crate::coordinator::batcher::{Batch, BatchPolicy};
+use crate::coordinator::engine::{Engine, RequestResult};
+use crate::workload::Request;
+use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+enum Msg {
+    Submit(Request, mpsc::Sender<RequestResult>),
+    Shutdown,
+}
+
+/// A running server instance.
+pub struct Server {
+    tx: mpsc::Sender<Msg>,
+    handle: Option<std::thread::JoinHandle<Result<()>>>,
+    started: Instant,
+}
+
+impl Server {
+    /// Start the worker. Fails later (on first submit) if the artifacts
+    /// are missing; startup errors surface through `shutdown()`.
+    pub fn start(artifact_dir: PathBuf, acc_cfg: AcceleratorConfig, policy: BatchPolicy) -> Server {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let handle = std::thread::spawn(move || worker(artifact_dir, acc_cfg, policy, rx));
+        Server {
+            tx,
+            handle: Some(handle),
+            started: Instant::now(),
+        }
+    }
+
+    /// Submit a request; the result arrives on the returned channel.
+    pub fn submit(&self, mut req: Request) -> mpsc::Receiver<RequestResult> {
+        // Stamp arrival with server-relative wall time so queue-wait
+        // accounting matches the live batcher.
+        req.arrival_s = self.started.elapsed().as_secs_f64();
+        let (rtx, rrx) = mpsc::channel();
+        let _ = self.tx.send(Msg::Submit(req, rtx));
+        rrx
+    }
+
+    /// Stop the worker and propagate any error it hit.
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Msg::Shutdown);
+        match self.handle.take() {
+            Some(h) => h.join().unwrap_or_else(|_| anyhow::bail!("worker panicked")),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker(
+    dir: PathBuf,
+    acc_cfg: AcceleratorConfig,
+    policy: BatchPolicy,
+    rx: mpsc::Receiver<Msg>,
+) -> Result<()> {
+    let engine = Engine::load(&dir, acc_cfg)?;
+    let max_batch = policy.max_batch.min(engine.max_batch());
+    let started = Instant::now();
+    let mut pending: Vec<(Request, mpsc::Sender<RequestResult>)> = Vec::new();
+
+    let dispatch = |pending: &mut Vec<(Request, mpsc::Sender<RequestResult>)>| -> Result<()> {
+        if pending.is_empty() {
+            return Ok(());
+        }
+        let now = started.elapsed().as_secs_f64();
+        let taken: Vec<_> = pending.drain(..).collect();
+        let batch = Batch {
+            requests: taken.iter().map(|(r, _)| r.clone()).collect(),
+            dispatch_s: now,
+        };
+        let results = engine.run_batch(&batch)?;
+        for (res, (_, tx)) in results.into_iter().zip(taken) {
+            let _ = tx.send(res);
+        }
+        Ok(())
+    };
+
+    loop {
+        let timeout = Duration::from_secs_f64(policy.max_wait_s.max(1e-4));
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Submit(req, tx)) => {
+                pending.push((req, tx));
+                if pending.len() >= max_batch {
+                    dispatch(&mut pending)?;
+                }
+            }
+            Ok(Msg::Shutdown) => {
+                dispatch(&mut pending)?;
+                return Ok(());
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                dispatch(&mut pending)?;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                dispatch(&mut pending)?;
+                return Ok(());
+            }
+        }
+    }
+}
+
+// Integration coverage lives in rust/tests/integration_coordinator.rs
+// (requires built artifacts).

@@ -1,0 +1,177 @@
+//! Gate-count area model, calibrated to the paper's synthesis anchors
+//! (§V "Area"): 132k gates total for the 64-lane configuration, split
+//! 28% buffers / 44% multipliers+accumulators / 19% reuse cache /
+//! 9% controller, with a 23% reuse overhead (the RC plus 4 points of
+//! controller area).
+
+use crate::config::AcceleratorConfig;
+
+/// Per-structure area constants in NAND2-equivalent gates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AreaModel {
+    /// SRAM-style buffer bit (W_buff, Out_buff).
+    pub gates_per_sram_bit: f64,
+    /// Flop-array bit (result cache — flops for single-cycle access).
+    pub gates_per_ff_bit: f64,
+    /// One 8×8 multiplier + 24-bit accumulator + pipeline registers.
+    pub gates_per_mult_acc: f64,
+    /// One 32-bit adder-tree node.
+    pub gates_per_tree_add: f64,
+    /// Base controller per lane.
+    pub gates_ctrl_per_lane: f64,
+    /// Extra controller per slice (arbiters, credit counters).
+    pub gates_ctrl_per_slice: f64,
+    /// One queue slot (request-width flops + control).
+    pub gates_per_queue_slot: f64,
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        // Calibrated so that `AcceleratorConfig::paper()` reproduces the
+        // paper's 132k gates and 28/44/19/9 split (tests assert this).
+        AreaModel {
+            gates_per_sram_bit: 0.094,
+            gates_per_ff_bit: 0.172,
+            gates_per_mult_acc: 760.0,
+            gates_per_tree_add: 150.0,
+            gates_ctrl_per_lane: 90.0,
+            gates_ctrl_per_slice: 3.0,
+            gates_per_queue_slot: 2.0,
+        }
+    }
+}
+
+/// Area breakdown in gate equivalents.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AreaReport {
+    pub buffers: f64,
+    pub mult_acc: f64,
+    pub rc: f64,
+    pub controller: f64,
+    pub total: f64,
+    /// Gates attributable to reuse support (RC + reuse share of the
+    /// controller) — the paper's "23% overhead".
+    pub reuse_overhead: f64,
+}
+
+impl AreaReport {
+    pub fn overhead_fraction(&self) -> f64 {
+        self.reuse_overhead / self.total
+    }
+}
+
+impl AreaModel {
+    /// Area of one accelerator configuration.
+    pub fn area(&self, cfg: &AcceleratorConfig) -> AreaReport {
+        let lanes = cfg.lanes as f64;
+        let w_bits = lanes * cfg.buffer_entries as f64 * cfg.weight_bits as f64;
+        // Out_buff holds 16-bit partial sums.
+        let out_bits = lanes * cfg.buffer_entries as f64 * 16.0;
+        let buffers = (w_bits + out_bits) * self.gates_per_sram_bit;
+
+        let tree_adders = (cfg.lanes.saturating_sub(1)) as f64;
+        let mult_acc = lanes * self.gates_per_mult_acc + tree_adders * self.gates_per_tree_add;
+
+        // RC: product (16b) + valid/pending flags per entry.
+        let rc = if cfg.reuse_enabled {
+            lanes * cfg.rc_entries() as f64 * 18.0 * self.gates_per_ff_bit
+        } else {
+            0.0
+        };
+
+        // Queues exist per slice (collision + output queues) — reuse
+        // machinery; the remaining controller is common.
+        let common_ctrl = lanes
+            * (self.gates_ctrl_per_lane + cfg.slices as f64 * self.gates_ctrl_per_slice);
+        let reuse_ctrl = if cfg.reuse_enabled {
+            // Per-slice skid-buffer queues: 2P+1 queue structures per lane
+            // (P collision queues, P miss queues, 1 multiplier output
+            // queue — the RTL shares the per-producer fan-in within each),
+            // `queue_depth` slots each.
+            let slots = (2 * cfg.slices + 1) * cfg.queue_depth;
+            lanes * slots as f64 * self.gates_per_queue_slot
+        } else {
+            0.0
+        };
+        let controller = common_ctrl + reuse_ctrl;
+        let total = buffers + mult_acc + rc + controller;
+        AreaReport {
+            buffers,
+            mult_acc,
+            rc,
+            controller,
+            total,
+            reuse_overhead: rc + reuse_ctrl,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_matches_synthesis_anchors() {
+        let a = AreaModel::default().area(&AcceleratorConfig::paper());
+        // 132k gates ±5%.
+        assert!(
+            (125_000.0..139_000.0).contains(&a.total),
+            "total {} gates",
+            a.total
+        );
+        // Component split ±4 points of 28/44/19/9.
+        let pct = |x: f64| x / a.total * 100.0;
+        assert!((pct(a.buffers) - 28.0).abs() < 4.0, "buffers {}%", pct(a.buffers));
+        assert!((pct(a.mult_acc) - 44.0).abs() < 4.0, "mult {}%", pct(a.mult_acc));
+        assert!((pct(a.rc) - 19.0).abs() < 4.0, "rc {}%", pct(a.rc));
+        assert!(
+            (pct(a.controller) - 9.0).abs() < 4.0,
+            "ctrl {}%",
+            pct(a.controller)
+        );
+        // 23% reuse overhead ±4 points.
+        assert!(
+            (a.overhead_fraction() * 100.0 - 23.0).abs() < 4.0,
+            "overhead {}%",
+            a.overhead_fraction() * 100.0
+        );
+    }
+
+    #[test]
+    fn baseline_has_no_reuse_area() {
+        let m = AreaModel::default();
+        let base = m.area(&AcceleratorConfig::baseline());
+        assert_eq!(base.rc, 0.0);
+        assert_eq!(base.reuse_overhead, 0.0);
+        let ax = m.area(&AcceleratorConfig::paper());
+        assert!(ax.total > base.total);
+        // AxLLM − baseline = exactly the reuse overhead.
+        assert!((ax.total - base.total - ax.reuse_overhead).abs() < 1e-6);
+    }
+
+    #[test]
+    fn area_scales_with_lanes_and_buffers() {
+        let m = AreaModel::default();
+        let small = m.area(&AcceleratorConfig {
+            lanes: 16,
+            ..AcceleratorConfig::paper()
+        });
+        let big = m.area(&AcceleratorConfig {
+            buffer_entries: 512,
+            ..AcceleratorConfig::paper()
+        });
+        let paper = m.area(&AcceleratorConfig::paper());
+        assert!(small.total < paper.total);
+        assert!(big.buffers > paper.buffers * 1.8);
+    }
+
+    #[test]
+    fn lower_bitwidth_shrinks_rc() {
+        let m = AreaModel::default();
+        let mut cfg = AcceleratorConfig::paper();
+        cfg.weight_bits = 4;
+        let a4 = m.area(&cfg);
+        let a8 = m.area(&AcceleratorConfig::paper());
+        assert!(a4.rc < a8.rc / 10.0, "4-bit RC should be 16× smaller");
+    }
+}

@@ -1,0 +1,17 @@
+//! Energy/power and area models (DESIGN.md §7; substitution S3).
+//!
+//! The paper feeds simulator activity factors into a VHDL model synthesized
+//! with the NanGate 15nm open cell library; no synthesis toolchain exists
+//! in this environment, so we use an analytic activity-factor model with
+//! per-operation energies in the published range for 15nm-class logic,
+//! **calibrated to the paper's absolute anchors**: 0.94 W baseline power on
+//! one DistilBERT layer, 132k-gate AxLLM area with a 28/44/19/9% component
+//! split and 23% reuse overhead. Relative savings — the quantities the
+//! paper's claims are about — depend on activity *ratios* measured by the
+//! simulator, not on the absolute pJ constants.
+
+pub mod area;
+pub mod power;
+
+pub use area::{AreaModel, AreaReport};
+pub use power::{EnergyModel, EnergyReport};

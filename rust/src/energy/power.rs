@@ -1,0 +1,202 @@
+//! Activity-factor energy model.
+//!
+//! `EnergyModel` turns the simulator's [`SimStats`] counters into an energy
+//! breakdown using per-operation energies for 15nm-class logic. Absolute
+//! anchoring to the paper's "0.94 W baseline on one DistilBERT layer"
+//! happens via a single calibration factor (see [`EnergyModel::calibrate`]);
+//! every *relative* claim (−28% energy, multiplier-energy dominance) is
+//! driven purely by measured activity ratios.
+//!
+//! ### Power vs. energy in the paper
+//!
+//! The paper reports "average power ... reduced from 0.94 W to 0.67 W" and
+//! "28% lower energy". Those are mutually consistent only at equal runtime,
+//! while AxLLM also runs 1.87× faster — running faster at lower total
+//! energy *raises* instantaneous power. We therefore reproduce the figure
+//! the claims support: **energy consumption normalized to the baseline's
+//! runtime** (`iso_time_power`), which makes "0.94 W → 0.67 W" and "−28%
+//! energy" the same statement. `EXPERIMENTS.md` discusses this.
+
+use crate::sim::SimStats;
+
+/// Per-operation dynamic energies in pJ (15nm-class, pre-calibration).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EnergyModel {
+    /// 8×8-bit multiply + accumulator update.
+    pub mult_pj: f64,
+    /// W_buff read per element (8-bit SRAM access slice).
+    pub w_read_pj: f64,
+    /// Out_buff write per partial sum (16-bit).
+    pub out_write_pj: f64,
+    /// Result-cache access (16-bit flop-array read or write).
+    pub rc_access_pj: f64,
+    /// 32-bit adder-tree addition.
+    pub add_pj: f64,
+    /// Collision/output queue push+pop pair.
+    pub queue_pj: f64,
+    /// Controller + clock per lane-cycle.
+    pub ctrl_cycle_pj: f64,
+    /// Input-register load.
+    pub x_load_pj: f64,
+    /// Global calibration multiplier (see [`EnergyModel::calibrate`]).
+    pub calibration: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel {
+            mult_pj: 2.1,
+            w_read_pj: 0.30,
+            out_write_pj: 0.45,
+            rc_access_pj: 0.70,
+            add_pj: 0.15,
+            queue_pj: 0.05,
+            ctrl_cycle_pj: 0.08,
+            x_load_pj: 0.10,
+            calibration: 1.0,
+        }
+    }
+}
+
+/// Energy breakdown in pJ.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyReport {
+    pub mult_pj: f64,
+    pub buffer_pj: f64,
+    pub rc_pj: f64,
+    pub adder_pj: f64,
+    pub queue_pj: f64,
+    pub ctrl_pj: f64,
+    pub total_pj: f64,
+}
+
+impl EnergyModel {
+    /// Energy of a simulated run.
+    pub fn energy(&self, s: &SimStats) -> EnergyReport {
+        let c = self.calibration;
+        let mult_pj = s.mults as f64 * self.mult_pj * c;
+        let buffer_pj = (s.w_reads as f64 * self.w_read_pj
+            + s.out_writes as f64 * self.out_write_pj
+            + s.x_loads as f64 * self.x_load_pj)
+            * c;
+        let rc_pj = (s.rc_reads + s.rc_writes) as f64 * self.rc_access_pj * c;
+        let adder_pj = s.adds as f64 * self.add_pj * c;
+        let queue_pj = s.queue_ops as f64 * self.queue_pj * c;
+        let ctrl_pj = s.cycles as f64 * self.ctrl_cycle_pj * c;
+        EnergyReport {
+            mult_pj,
+            buffer_pj,
+            rc_pj,
+            adder_pj,
+            queue_pj,
+            ctrl_pj,
+            total_pj: mult_pj + buffer_pj + rc_pj + adder_pj + queue_pj + ctrl_pj,
+        }
+    }
+
+    /// True average power in W over the run's own duration.
+    pub fn avg_power_w(&self, s: &SimStats, freq_ghz: f64) -> f64 {
+        let t_ns = s.cycles as f64 / freq_ghz;
+        self.energy(s).total_pj / t_ns * 1e-3
+    }
+
+    /// Energy normalized to a *reference* runtime (the paper's power
+    /// figure; see module docs): `E / t_ref`.
+    pub fn iso_time_power_w(&self, s: &SimStats, ref_cycles: u64, freq_ghz: f64) -> f64 {
+        let t_ns = ref_cycles as f64 / freq_ghz;
+        self.energy(s).total_pj / t_ns * 1e-3
+    }
+
+    /// Return a copy whose calibration makes `reference` dissipate
+    /// `target_w` average power at `freq_ghz` — used to anchor the
+    /// DistilBERT baseline layer at the paper's 0.94 W.
+    pub fn calibrate(&self, reference: &SimStats, target_w: f64, freq_ghz: f64) -> EnergyModel {
+        let current = self.avg_power_w(reference, freq_ghz);
+        assert!(current > 0.0, "reference run has no activity");
+        EnergyModel {
+            calibration: self.calibration * target_w / current,
+            ..*self
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(mults: u64, hits: u64) -> SimStats {
+        let n = mults + hits;
+        // With reuse: every miss fills the RC; without (hits == 0, the
+        // multiply-only baseline) the RC does not exist.
+        let reuse = hits > 0;
+        SimStats {
+            cycles: mults * 3 + hits,
+            elements: n,
+            mults,
+            rc_hits: hits,
+            rc_reads: hits,
+            rc_writes: if reuse { mults } else { 0 },
+            w_reads: n,
+            out_writes: n,
+            adds: n,
+            x_loads: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn baseline_energy_dominated_by_multipliers() {
+        let m = EnergyModel::default();
+        let e = m.energy(&stats(1000, 0));
+        assert!(e.mult_pj / e.total_pj > 0.5, "mult share too small");
+        assert_eq!(e.rc_pj, 0.0);
+    }
+
+    #[test]
+    fn reuse_cuts_energy_about_28_percent_at_70_reuse() {
+        // The headline claim: at ~70% reuse the energy drops ≈28%.
+        let m = EnergyModel::default();
+        let base = m.energy(&stats(1000, 0));
+        let ax = m.energy(&stats(300, 700));
+        let ratio = ax.total_pj / base.total_pj;
+        assert!(
+            (0.65..0.80).contains(&ratio),
+            "energy ratio {ratio} not near 0.72"
+        );
+    }
+
+    #[test]
+    fn calibration_hits_target() {
+        let m = EnergyModel::default();
+        let s = stats(500, 500);
+        let cal = m.calibrate(&s, 0.94, 1.0);
+        let p = cal.avg_power_w(&s, 1.0);
+        assert!((p - 0.94).abs() < 1e-9, "calibrated power {p}");
+    }
+
+    #[test]
+    fn iso_time_power_tracks_energy_ratio() {
+        let m = EnergyModel::default();
+        let base = stats(1000, 0);
+        let ax = stats(300, 700);
+        let p_base = m.iso_time_power_w(&base, base.cycles, 1.0);
+        let p_ax = m.iso_time_power_w(&ax, base.cycles, 1.0);
+        let e_ratio = m.energy(&ax).total_pj / m.energy(&base).total_pj;
+        assert!((p_ax / p_base - e_ratio).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_components_sum_to_total() {
+        let m = EnergyModel::default();
+        let e = m.energy(&stats(123, 456));
+        let sum = e.mult_pj + e.buffer_pj + e.rc_pj + e.adder_pj + e.queue_pj + e.ctrl_pj;
+        assert!((sum - e.total_pj).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_scales_with_frequency() {
+        let m = EnergyModel::default();
+        let s = stats(100, 100);
+        assert!(m.avg_power_w(&s, 2.0) > m.avg_power_w(&s, 1.0) * 1.9);
+    }
+}

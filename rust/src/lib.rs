@@ -1,0 +1,55 @@
+//! # AxLLM — computation-reuse accelerator for quantized LLMs
+//!
+//! Full-system reproduction of *AxLLM: accelerator architecture for large
+//! language models with computation reuse capability* (Ahadi, Modarressi,
+//! Daneshtalab — CS.AR 2025).
+//!
+//! The paper's insight: with q-bit quantization a weight-matrix row of
+//! thousands of elements draws from at most `2^q` distinct values, so in an
+//! input-stationary dataflow each product `x[i] * u` needs computing once
+//! per unique value `u` and can be **reused** for every repeat via a small
+//! Result Cache (RC). This crate contains:
+//!
+//! - [`sim`] — a cycle-level simulator of the AxLLM micro-architecture
+//!   (lanes, dual compute/reuse pipelines, P-way sliced buffers with
+//!   collision queues and credit-based flow control) plus the multiply-only
+//!   baseline and a ShiftAddLLM comparator.
+//! - [`quant`] — symmetric int8 quantization and the value-locality
+//!   statistics the reuse mechanism exploits.
+//! - [`model`] — a synthetic quantized transformer model zoo mirroring the
+//!   paper's Table I benchmarks, with LoRA adaptor support.
+//! - [`workload`] — dataset-calibrated synthetic workload and request-trace
+//!   generation.
+//! - [`exec`] — a functional (bit-exact) implementation of the reuse
+//!   datapath, used to prove exact arithmetic semantics.
+//! - [`energy`] — activity-factor energy/power and gate-count area models
+//!   calibrated to the paper's 15nm synthesis anchors.
+//! - [`runtime`] — PJRT CPU runtime that loads the AOT-compiled JAX/Pallas
+//!   artifacts (HLO text) and executes them from Rust.
+//! - [`coordinator`] — a serving layer (request queue, dynamic batcher,
+//!   router) that drives batched inference through the functional runtime
+//!   while attributing cycles/energy through the simulator.
+//! - [`report`] — generators for every figure and table in the paper's
+//!   evaluation (Fig. 1, Fig. 8, Fig. 9, LoRA, ShiftAddLLM, power, area,
+//!   plus ablations).
+//! - [`util`] — in-crate substrates (deterministic RNG, bench harness,
+//!   property-test runner, TOML-subset config parser, table printer) so the
+//!   crate builds fully offline.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod exec;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,328 @@
+//! AxLLM command-line interface.
+//!
+//! ```text
+//! axllm reproduce <experiment> [--csv] [--seed N] [--sample-rows N]
+//! axllm simulate --model <name> [--baseline|--sliced] [--lanes N]
+//!                [--buffers N] [--slices P] [--seed N] [--sample-rows N]
+//! axllm serve [--requests N] [--rate R] [--dataset D] [--batch B]
+//!             [--artifacts DIR]
+//! axllm info [--artifacts DIR]
+//! ```
+//!
+//! Argument parsing is hand-rolled (no clap offline); see `cli::Args`.
+
+use axllm::config::{table1_benchmarks, AcceleratorConfig, Dataset, ModelConfig};
+use axllm::coordinator::{BatchPolicy, Engine};
+use axllm::model::Model;
+use axllm::report::{self, RunCtx};
+use axllm::sim::{Accelerator, LaneModel};
+use axllm::util::table::count;
+use axllm::workload::TraceGenerator;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+mod cli {
+    /// Minimal flag parser: positionals plus `--key value` / `--flag`.
+    pub struct Args {
+        pub positional: Vec<String>,
+        flags: std::collections::BTreeMap<String, String>,
+    }
+
+    impl Args {
+        pub fn parse(argv: &[String]) -> Result<Args, String> {
+            let mut positional = Vec::new();
+            let mut flags = std::collections::BTreeMap::new();
+            let mut it = argv.iter().peekable();
+            while let Some(a) = it.next() {
+                if let Some(name) = a.strip_prefix("--") {
+                    if name.is_empty() {
+                        return Err("stray `--`".into());
+                    }
+                    let value = match it.peek() {
+                        Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                        _ => "true".to_string(),
+                    };
+                    flags.insert(name.to_string(), value);
+                } else {
+                    positional.push(a.clone());
+                }
+            }
+            Ok(Args { positional, flags })
+        }
+
+        pub fn flag(&self, name: &str) -> Option<&str> {
+            self.flags.get(name).map(|s| s.as_str())
+        }
+
+        pub fn get_bool(&self, name: &str) -> bool {
+            matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+        }
+
+        pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+            match self.flag(name) {
+                None => Ok(default),
+                Some(v) => v
+                    .parse()
+                    .map_err(|_| format!("invalid value for --{name}: {v}")),
+            }
+        }
+    }
+}
+
+const USAGE: &str = "\
+AxLLM — computation-reuse accelerator for quantized LLMs (paper reproduction)
+
+USAGE:
+  axllm reproduce <experiment> [--csv] [--seed N] [--sample-rows N]
+      experiments: fig1 table1 fig8 fig9 lora shiftadd power area
+                   ablation-buffer ablation-slices hazards ablation-dist
+                   ablation-mapping ablation-bits all
+  axllm simulate --model <distilbert|bert-base|bert-large|llama-7b|llama-13b|tiny>
+                 [--baseline|--sliced] [--lanes N] [--buffers N] [--slices P]
+                 [--seed N] [--sample-rows N]
+  axllm serve [--requests N] [--rate R] [--dataset <agnews|yelp|squad|imdb>]
+              [--batch B] [--max-wait-ms W] [--artifacts DIR]
+  axllm info [--artifacts DIR]
+";
+
+fn model_by_name(name: &str) -> Option<ModelConfig> {
+    Some(match name {
+        "distilbert" => ModelConfig::distilbert(),
+        "bert-base" => ModelConfig::bert_base(),
+        "bert-large" => ModelConfig::bert_large(),
+        "llama-7b" => ModelConfig::llama_7b(),
+        "llama-13b" => ModelConfig::llama_13b(),
+        "tiny" => ModelConfig::tiny(),
+        _ => return None,
+    })
+}
+
+fn dataset_by_name(name: &str) -> Option<Dataset> {
+    Some(match name {
+        "agnews" => Dataset::AgNews,
+        "yelp" => Dataset::YelpReviewFull,
+        "squad" => Dataset::Squad,
+        "imdb" => Dataset::Imdb,
+        _ => return None,
+    })
+}
+
+fn emit(t: &axllm::util::table::Table, csv: bool) {
+    if csv {
+        print!("{}", t.csv());
+    } else {
+        println!("{}", t.render());
+    }
+}
+
+fn cmd_reproduce(args: &cli::Args) -> Result<(), String> {
+    let exp = args
+        .positional
+        .get(1)
+        .ok_or("reproduce: missing experiment name")?
+        .as_str();
+    let csv = args.get_bool("csv");
+    let ctx = RunCtx {
+        seed: args.get("seed", 42u64)?,
+        sample_rows: args.get("sample-rows", 64usize)?,
+    };
+    let run = |name: &str| -> Result<(), String> {
+        match name {
+            "fig1" => emit(&report::fig1::generate(), csv),
+            "table1" => emit(&report::fig8::table1(), csv),
+            "fig8" => emit(&report::fig8::generate(ctx), csv),
+            "fig9" => {
+                emit(&report::fig9::generate(ctx), csv);
+                let (ax, base) = report::fig9::distilbert_anchor(ctx);
+                println!(
+                    "DistilBERT absolute anchor @{} tokens: AxLLM {} vs baseline {} cycles (paper: 85.11M vs 159.34M)\n",
+                    report::fig9::ANCHOR_TOKENS,
+                    count(ax),
+                    count(base)
+                );
+            }
+            "lora" => emit(&report::lora::generate(ctx), csv),
+            "shiftadd" => emit(&report::shiftadd::generate(ctx), csv),
+            "power" => emit(&report::power::generate(ctx), csv),
+            "area" => emit(&report::power::generate_area(), csv),
+            "ablation-buffer" => emit(&report::ablation::buffer_sweep(ctx), csv),
+            "ablation-slices" => emit(&report::ablation::slice_sweep_table(ctx), csv),
+            "hazards" => emit(&report::ablation::hazard_rates(ctx), csv),
+            "ablation-dist" => emit(&report::ablation::distribution_sensitivity(ctx), csv),
+            "ablation-mapping" => emit(&report::ablation::rc_mapping_note(ctx), csv),
+            "ablation-bits" => emit(&report::ablation::bitwidth_sweep(ctx), csv),
+            other => return Err(format!("unknown experiment: {other}")),
+        }
+        Ok(())
+    };
+    if exp == "all" {
+        for name in [
+            "fig1",
+            "table1",
+            "fig8",
+            "fig9",
+            "lora",
+            "shiftadd",
+            "power",
+            "area",
+            "ablation-buffer",
+            "ablation-slices",
+            "hazards",
+            "ablation-dist",
+            "ablation-mapping",
+            "ablation-bits",
+        ] {
+            run(name)?;
+        }
+        Ok(())
+    } else {
+        run(exp)
+    }
+}
+
+fn cmd_simulate(args: &cli::Args) -> Result<(), String> {
+    let name = args.flag("model").ok_or("simulate: --model is required")?;
+    let model_cfg = model_by_name(name).ok_or_else(|| format!("unknown model: {name}"))?;
+    let mut cfg = AcceleratorConfig::paper();
+    cfg.lanes = args.get("lanes", cfg.lanes)?;
+    cfg.buffer_entries = args.get("buffers", cfg.buffer_entries)?;
+    cfg.slices = args.get("slices", cfg.slices)?;
+    cfg.validate().map_err(|e| e.to_string())?;
+    let seed = args.get("seed", 42u64)?;
+    let sample_rows = args.get("sample-rows", 64usize)?;
+
+    let model = Model::new(model_cfg.clone(), seed);
+    let acc = if args.get_bool("baseline") {
+        Accelerator::baseline(cfg)
+    } else if args.get_bool("sliced") {
+        Accelerator::axllm(cfg).with_lane_model(LaneModel::Sliced)
+    } else {
+        Accelerator::axllm(cfg)
+    };
+    let summary = acc.run_model(&model, sample_rows, seed);
+    let s = &summary.total;
+    println!("model: {} ({} layers)", model_cfg.name, model_cfg.n_layers);
+    println!("lane model: {:?}", acc.lane_model);
+    println!("cycles/token:        {}", count(s.cycles));
+    println!("elements:            {}", count(s.elements));
+    println!(
+        "multiplications:     {} ({:.1}% reduction)",
+        count(s.mults),
+        s.mult_reduction() * 100.0
+    );
+    println!("reuse rate:          {:.1}%", s.reuse_rate() * 100.0);
+    println!(
+        "hazard stalls:       {} ({:.2}%)",
+        count(s.hazard_stalls),
+        s.hazard_rate() * 100.0
+    );
+    println!("collisions:          {}", count(s.collisions));
+    let em = axllm::energy::EnergyModel::default();
+    println!("energy/token:        {:.2} µJ", em.energy(s).total_pj / 1e6);
+    Ok(())
+}
+
+fn cmd_serve(args: &cli::Args) -> Result<(), String> {
+    let n = args.get("requests", 64usize)?;
+    let rate = args.get("rate", 200.0f64)?;
+    let dataset =
+        dataset_by_name(args.flag("dataset").unwrap_or("imdb")).ok_or("unknown dataset")?;
+    let dir = PathBuf::from(args.flag("artifacts").unwrap_or("artifacts"));
+    let policy = BatchPolicy {
+        max_batch: args.get("batch", 4usize)?,
+        max_wait_s: args.get("max-wait-ms", 10.0f64)? / 1e3,
+    };
+    let engine = Engine::load(&dir, AcceleratorConfig::paper()).map_err(|e| format!("{e:#}"))?;
+    let trace = TraceGenerator::new(dataset, rate, 7).take(n);
+    let (_results, s) = engine
+        .serve_trace(trace, policy)
+        .map_err(|e| format!("{e:#}"))?;
+    println!(
+        "served {} requests in {} batches over {:.3}s",
+        s.requests, s.batches, s.span_s
+    );
+    println!(
+        "tokens: {}  throughput: {:.1} req/s, {:.0} tok/s",
+        s.tokens, s.throughput_rps, s.throughput_tps
+    );
+    println!(
+        "latency: mean {:.2}ms p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms max {:.2}ms",
+        s.latency.mean_s * 1e3,
+        s.latency.p50_s * 1e3,
+        s.latency.p95_s * 1e3,
+        s.latency.p99_s * 1e3,
+        s.latency.max_s * 1e3
+    );
+    println!(
+        "accelerator attribution: {} simulated cycles, reuse {:.1}%, {:.2} µJ, speedup vs baseline {:.2}x",
+        count(s.sim_cycles),
+        s.sim_reuse_rate * 100.0,
+        s.sim_energy_j * 1e6,
+        s.sim_speedup
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &cli::Args) -> Result<(), String> {
+    let dir = PathBuf::from(args.flag("artifacts").unwrap_or("artifacts"));
+    println!(
+        "axllm {} — AxLLM paper reproduction",
+        env!("CARGO_PKG_VERSION")
+    );
+    println!("benchmarks (Table I):");
+    for b in table1_benchmarks() {
+        let (r, c) = b.weight_matrix();
+        println!("  {:45} {}x{}", b.key(), r, c);
+    }
+    match axllm::runtime::Runtime::cpu() {
+        Ok(rt) => {
+            println!(
+                "PJRT: platform={} devices={}",
+                rt.platform(),
+                rt.device_count()
+            );
+            match axllm::runtime::ArtifactSet::load(&rt, &dir) {
+                Ok(a) => println!(
+                    "artifacts: OK ({} kernels, tiny model B={} S={} D={})",
+                    a.kernels.len(),
+                    a.manifest.batch,
+                    a.manifest.seq,
+                    a.manifest.d_model
+                ),
+                Err(e) => println!("artifacts: NOT LOADED ({e:#}) — run `make artifacts`"),
+            }
+        }
+        Err(e) => println!("PJRT: unavailable ({e:#})"),
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli::Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    let result = match cmd {
+        "reproduce" => cmd_reproduce(&args),
+        "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(&args),
+        "" | "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command: {other}\n{USAGE}")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

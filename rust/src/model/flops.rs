@@ -1,0 +1,140 @@
+//! Analytic per-component computation breakdown of one transformer layer
+//! (reproduces Fig. 1 of the paper).
+//!
+//! Counts multiply-accumulate operations (MACs) for the matmul components
+//! and elementwise op counts for softmax/activation/layernorm, for a given
+//! sequence length. The two targets of AxLLM — linear projections and the
+//! feed-forward network — dominate, which is the paper's motivation for
+//! focusing reuse there.
+
+use crate::config::ModelConfig;
+
+/// One component of a transformer layer's compute.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ComponentFlops {
+    pub name: &'static str,
+    /// Operation count (MACs for matmuls, elementwise ops otherwise).
+    pub ops: u64,
+    /// Whether AxLLM's reuse datapath accelerates this component (it
+    /// targets weight-matrix multiplications: value locality requires the
+    /// *static* quantized weight operand; dynamic QK^T / attn×V products
+    /// have two activation operands).
+    pub reuse_target: bool,
+}
+
+/// Per-component op counts for one layer at sequence length `seq`.
+pub fn layer_breakdown(cfg: &ModelConfig, seq: usize) -> Vec<ComponentFlops> {
+    let s = seq as u64;
+    let d = cfg.d_model as u64;
+    let ff = cfg.d_ff as u64;
+    vec![
+        ComponentFlops {
+            name: "QKV projections",
+            ops: 3 * s * d * d,
+            reuse_target: true,
+        },
+        ComponentFlops {
+            name: "Attention scores (QK^T)",
+            ops: s * s * d,
+            reuse_target: false,
+        },
+        ComponentFlops {
+            name: "Softmax",
+            ops: 5 * s * s * cfg.n_heads as u64,
+            reuse_target: false,
+        },
+        ComponentFlops {
+            name: "Attention x V",
+            ops: s * s * d,
+            reuse_target: false,
+        },
+        ComponentFlops {
+            name: "Output projection",
+            ops: s * d * d,
+            reuse_target: true,
+        },
+        ComponentFlops {
+            name: "Feed-forward FF1",
+            ops: s * d * ff,
+            reuse_target: true,
+        },
+        ComponentFlops {
+            name: "Activation",
+            ops: s * ff,
+            reuse_target: false,
+        },
+        ComponentFlops {
+            name: "Feed-forward FF2",
+            ops: s * ff * d,
+            reuse_target: true,
+        },
+        ComponentFlops {
+            name: "LayerNorm (x2)",
+            ops: 2 * 5 * s * d,
+            reuse_target: false,
+        },
+    ]
+}
+
+/// Total ops of a breakdown.
+pub fn total_ops(parts: &[ComponentFlops]) -> u64 {
+    parts.iter().map(|p| p.ops).sum()
+}
+
+/// Fraction of a layer's ops covered by AxLLM's reuse targets.
+pub fn reuse_target_fraction(parts: &[ComponentFlops]) -> f64 {
+    let covered: u64 = parts.iter().filter(|p| p.reuse_target).map(|p| p.ops).sum();
+    covered as f64 / total_ops(parts) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distilbert_targets_dominate() {
+        // Paper Fig. 1: linear projections + feed-forward dominate one
+        // DistilBERT layer's compute.
+        let parts = layer_breakdown(&ModelConfig::distilbert(), 128);
+        let frac = reuse_target_fraction(&parts);
+        assert!(frac > 0.9, "reuse-target fraction {frac}");
+    }
+
+    #[test]
+    fn ffn_is_majority_component() {
+        // "The feedforward layer ... accounts for the majority of
+        // computations in transformers (see Fig. 1)".
+        let parts = layer_breakdown(&ModelConfig::distilbert(), 128);
+        let total = total_ops(&parts) as f64;
+        let ffn: u64 = parts
+            .iter()
+            .filter(|p| p.name.starts_with("Feed-forward"))
+            .map(|p| p.ops)
+            .sum();
+        assert!(ffn as f64 / total > 0.5, "ffn share {}", ffn as f64 / total);
+    }
+
+    #[test]
+    fn attention_grows_with_sequence_length() {
+        let cfg = ModelConfig::distilbert();
+        let short = layer_breakdown(&cfg, 32);
+        let long = layer_breakdown(&cfg, 512);
+        let share = |parts: &[ComponentFlops]| {
+            let attn: u64 = parts
+                .iter()
+                .filter(|p| p.name.contains("Attention"))
+                .map(|p| p.ops)
+                .sum();
+            attn as f64 / total_ops(parts) as f64
+        };
+        assert!(share(&long) > share(&short));
+    }
+
+    #[test]
+    fn component_count_and_names_stable() {
+        let parts = layer_breakdown(&ModelConfig::tiny(), 16);
+        assert_eq!(parts.len(), 9);
+        assert_eq!(parts[0].name, "QKV projections");
+        assert!(parts.iter().all(|p| p.ops > 0));
+    }
+}

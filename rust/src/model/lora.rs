@@ -1,0 +1,172 @@
+//! LoRA adaptors and the W∥A combined-matrix reuse trick (paper §III.c,
+//! Fig. 5).
+//!
+//! LoRA replaces `xW` with `xW + xAB`. Since both `W` (d×d) and `A` (d×r)
+//! are multiplied by the same input vector `x`, AxLLM concatenates `A`
+//! beside `W` column-wise: the lane that streams row i of W simply keeps
+//! streaming row i of A, and every A element whose folded value already
+//! appeared in the W row reuses the cached product for free.
+//!
+//! For code-level sharing the A matrix must live on the **same quantization
+//! grid** as W (equal dequantized values ⇒ equal codes); the synthesizer
+//! re-codes A onto W's scale, matching what a deployment would do when
+//! preparing adaptors for this accelerator.
+
+use crate::config::LoraConfig;
+use crate::model::synth::{synthesize_on_grid, WeightDistribution};
+use crate::quant::{stats::overlap_fraction, QuantMatrix};
+use crate::util::rng::Rng;
+
+/// A quantized LoRA adaptor pair (A: d×r, B: r×d) attached to a base W.
+#[derive(Clone, Debug)]
+pub struct LoraAdaptor {
+    pub a: QuantMatrix,
+    pub b: QuantMatrix,
+    pub config: LoraConfig,
+}
+
+impl LoraAdaptor {
+    /// Synthesize an adaptor for base matrix `w`. A is re-coded onto W's
+    /// quantization grid (see module docs); B gets its own fitted grid (it
+    /// multiplies the r-dimensional intermediate, not x, so it does not
+    /// participate in W-sharing).
+    pub fn synthesize(
+        w: &QuantMatrix,
+        config: LoraConfig,
+        dist: WeightDistribution,
+        rng: &mut Rng,
+    ) -> LoraAdaptor {
+        // LoRA init: A ~ N(0, σ_A). Trained adaptors keep magnitudes close
+        // to the base-weight scale; we use the same σ as the base weights
+        // so re-coding onto W's grid is representative.
+        let a = synthesize_on_grid(w.rows, config.rank, dist, w.params, rng);
+        let bdist = dist;
+        let bdata: Vec<f32> = (0..config.rank * w.cols)
+            .map(|_| bdist.sample(rng))
+            .collect();
+        let b = QuantMatrix::from_f32(config.rank, w.cols, &bdata, dist.bits);
+        LoraAdaptor { a, b, config }
+    }
+
+    /// The paper's Fig. 5 combined matrix: `[W ∥ A]`, streamed as one
+    /// wider matrix so RC contents carry over from W columns into A
+    /// columns within each row.
+    pub fn combined(&self, w: &QuantMatrix) -> QuantMatrix {
+        w.concat_cols(&self.a)
+    }
+
+    /// Mean fraction of A-row elements whose folded value also occurs in
+    /// the matching W row (paper §V reports ≈90% on its benchmarks).
+    pub fn overlap_with(&self, w: &QuantMatrix) -> f64 {
+        assert_eq!(w.rows, self.a.rows);
+        let mut acc = 0.0;
+        for r in 0..w.rows {
+            acc += overlap_fraction(w.row(r), self.a.row(r));
+        }
+        acc / w.rows as f64
+    }
+
+    /// Extra MACs per input vector introduced by this adaptor (xA then
+    /// (xA)B), before any reuse.
+    pub fn extra_macs(&self) -> u64 {
+        (self.a.rows * self.a.cols + self.b.rows * self.b.cols) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synth::synthesize_matrix;
+    use crate::quant::fold;
+
+    fn setup(rank: usize) -> (QuantMatrix, LoraAdaptor) {
+        let mut rng = Rng::new(77);
+        let dist = WeightDistribution::default();
+        let w = synthesize_matrix(96, 96, dist, &mut rng);
+        let lora = LoraAdaptor::synthesize(
+            &w,
+            LoraConfig {
+                rank,
+                alpha: 16.0,
+            },
+            dist,
+            &mut rng,
+        );
+        (w, lora)
+    }
+
+    #[test]
+    fn shapes() {
+        let (w, l) = setup(8);
+        assert_eq!(l.a.rows, w.rows);
+        assert_eq!(l.a.cols, 8);
+        assert_eq!(l.b.rows, 8);
+        assert_eq!(l.b.cols, w.cols);
+        assert_eq!(l.extra_macs(), (96 * 8 + 8 * 96) as u64);
+    }
+
+    #[test]
+    fn a_lives_on_w_grid() {
+        let (w, l) = setup(8);
+        assert_eq!(l.a.params, w.params);
+    }
+
+    #[test]
+    fn combined_matrix_streams_w_then_a() {
+        let (w, l) = setup(4);
+        let c = l.combined(&w);
+        assert_eq!(c.cols, w.cols + 4);
+        assert_eq!(&c.row(5)[..w.cols], w.row(5));
+        assert_eq!(&c.row(5)[w.cols..], l.a.row(5));
+    }
+
+    #[test]
+    fn overlap_is_high_for_matched_distributions() {
+        // The paper reports ≈90% A∩W overlap; with matched σ and a 96-col
+        // W row the overlap is high but not total. Sanity band:
+        let (w, l) = setup(8);
+        let f = l.overlap_with(&w);
+        assert!(f > 0.5, "overlap {f}");
+    }
+
+    #[test]
+    fn overlap_approaches_paper_value_at_realistic_width() {
+        // DistilBERT-sized: W row = 768 cols → nearly every A value folded
+        // appears in the W row.
+        let mut rng = Rng::new(3);
+        let dist = WeightDistribution::default();
+        let w = synthesize_matrix(32, 768, dist, &mut rng);
+        let l = LoraAdaptor::synthesize(&w, LoraConfig::default(), dist, &mut rng);
+        let f = l.overlap_with(&w);
+        assert!(f > 0.85, "overlap {f}");
+    }
+
+    #[test]
+    fn combined_reuse_exceeds_separate() {
+        // Streaming A after W (combined) must yield at least as many RC
+        // hits for A elements as streaming A alone.
+        let (w, l) = setup(8);
+        let mut hits_combined = 0usize;
+        let mut hits_alone = 0usize;
+        for r in 0..w.rows {
+            let mut seen = [false; 128];
+            for &q in w.row(r) {
+                seen[fold(q).0 as usize] = true;
+            }
+            for &q in l.a.row(r) {
+                if seen[fold(q).0 as usize] {
+                    hits_combined += 1;
+                }
+            }
+            let mut seen_a = [false; 128];
+            for &q in l.a.row(r) {
+                let i = fold(q).0 as usize;
+                if seen_a[i] {
+                    hits_alone += 1;
+                }
+                seen_a[i] = true;
+            }
+        }
+        assert!(hits_combined >= hits_alone);
+    }
+}

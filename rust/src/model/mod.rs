@@ -1,0 +1,272 @@
+//! Synthetic quantized transformer models mirroring the paper's Table I
+//! benchmarks.
+//!
+//! Real pre-trained checkpoints are unavailable offline (substitution S1 in
+//! DESIGN.md): weights are synthesized from near-Gaussian distributions —
+//! the empirically documented shape of trained transformer weights — then
+//! pushed through the *real* quantizer from [`crate::quant`], so every
+//! locality statistic downstream is **measured**, never assumed.
+
+pub mod flops;
+pub mod lora;
+pub mod synth;
+
+pub use flops::{layer_breakdown, ComponentFlops};
+pub use lora::LoraAdaptor;
+pub use synth::{synthesize_matrix, WeightDistribution};
+
+use crate::config::ModelConfig;
+use crate::quant::QuantMatrix;
+use crate::util::rng::Rng;
+
+/// Which weight matrix of a layer (the matmuls AxLLM accelerates).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MatKind {
+    /// Query projection W_q (d×d).
+    Wq,
+    /// Key projection W_k (d×d).
+    Wk,
+    /// Value projection W_v (d×d).
+    Wv,
+    /// Attention output projection W_o (d×d).
+    Wo,
+    /// First feed-forward matrix (d×d_ff).
+    Ff1,
+    /// Second feed-forward matrix (d_ff×d).
+    Ff2,
+}
+
+impl MatKind {
+    pub const ALL: [MatKind; 6] = [
+        MatKind::Wq,
+        MatKind::Wk,
+        MatKind::Wv,
+        MatKind::Wo,
+        MatKind::Ff1,
+        MatKind::Ff2,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MatKind::Wq => "Wq",
+            MatKind::Wk => "Wk",
+            MatKind::Wv => "Wv",
+            MatKind::Wo => "Wo",
+            MatKind::Ff1 => "FF1",
+            MatKind::Ff2 => "FF2",
+        }
+    }
+
+    /// (rows, cols) of this matrix in the given model.
+    pub fn shape(&self, cfg: &ModelConfig) -> (usize, usize) {
+        let d = cfg.d_model;
+        let ff = cfg.d_ff;
+        match self {
+            MatKind::Wq | MatKind::Wk | MatKind::Wv | MatKind::Wo => (d, d),
+            MatKind::Ff1 => (d, ff),
+            MatKind::Ff2 => (ff, d),
+        }
+    }
+}
+
+/// One transformer layer's quantized weights (+ optional LoRA on Q and V,
+/// the standard attachment points).
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub layer_idx: usize,
+    pub mats: Vec<(MatKind, QuantMatrix)>,
+    pub lora_q: Option<LoraAdaptor>,
+    pub lora_v: Option<LoraAdaptor>,
+}
+
+impl LayerWeights {
+    pub fn get(&self, kind: MatKind) -> &QuantMatrix {
+        &self
+            .mats
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .unwrap_or_else(|| panic!("missing matrix {kind:?}"))
+            .1
+    }
+}
+
+/// A synthesized model: configuration plus a per-layer weight generator.
+///
+/// Layers are materialized **on demand** ([`Model::layer`]) so that
+/// Llama-13B-scale experiments never hold the full parameter set (≈10 GB)
+/// in memory; determinism comes from hashing (seed, layer, matrix kind)
+/// into the per-matrix RNG stream.
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub config: ModelConfig,
+    pub seed: u64,
+    pub dist: WeightDistribution,
+}
+
+impl Model {
+    pub fn new(config: ModelConfig, seed: u64) -> Model {
+        Model {
+            config,
+            seed,
+            dist: WeightDistribution::default(),
+        }
+    }
+
+    pub fn with_distribution(mut self, dist: WeightDistribution) -> Model {
+        self.dist = dist;
+        self
+    }
+
+    fn mat_seed(&self, layer: usize, kind: MatKind) -> u64 {
+        // Mix seed, layer, and matrix kind into one stream id.
+        let k = kind as u64 + 1;
+        self.seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add((layer as u64) << 8)
+            .wrapping_add(k)
+    }
+
+    fn layer_sigma(&self, layer: usize) -> f64 {
+        // Per-layer σ drift mimics the depth-dependent scale variation of
+        // trained transformers (later layers slightly wider).
+        self.dist.sigma * (1.0 + 0.05 * layer as f64 / self.config.n_layers.max(1) as f64)
+    }
+
+    /// Sigma multiple at which the quantization grid clips: the
+    /// percentile-calibrated clipping used by practical post-training
+    /// quantizers (AWQ-style), which trades ~0.006% clipped outliers for
+    /// finer resolution of the bulk. Besides being standard practice, this
+    /// is the calibration that reproduces the paper's measured locality:
+    /// DistilBERT full-row reuse ≈ 87–91%, 256-entry-buffer reuse ≈ 70%.
+    pub const CLIP_SIGMAS: f64 = 4.0;
+
+    /// The quantization grid of one matrix, derived **analytically** from
+    /// the synthesis distribution rather than fit to the sampled data
+    /// (`amax = CLIP_SIGMAS·σ`). This keeps row-sampled prefixes
+    /// code-identical to the full matrix — per-tensor max-fit would couple
+    /// every code to every sample.
+    pub fn grid(&self, layer: usize, _kind: MatKind) -> crate::quant::QuantParams {
+        let sigma = self.layer_sigma(layer);
+        let amax = sigma * Self::CLIP_SIGMAS;
+        let qmax = ((1i32 << (self.dist.bits - 1)) - 1) as f32;
+        crate::quant::QuantParams {
+            scale: (amax as f32 / qmax).max(f32::MIN_POSITIVE),
+            bits: self.dist.bits,
+        }
+    }
+
+    /// Materialize one full weight matrix.
+    pub fn matrix(&self, layer: usize, kind: MatKind) -> QuantMatrix {
+        let (rows, cols) = kind.shape(&self.config);
+        self.matrix_rows_inner(layer, kind, rows, cols)
+    }
+
+    /// Materialize only the first `n_rows` of a matrix — enough for
+    /// row-sampled locality/cycle measurements on Llama-scale models.
+    /// Rows are generated by the same stream and quantization grid as
+    /// [`Model::matrix`], so a prefix here equals a prefix of the full
+    /// matrix.
+    pub fn matrix_rows(&self, layer: usize, kind: MatKind, n_rows: usize) -> QuantMatrix {
+        let (rows, cols) = kind.shape(&self.config);
+        self.matrix_rows_inner(layer, kind, n_rows.min(rows), cols)
+    }
+
+    fn matrix_rows_inner(
+        &self,
+        layer: usize,
+        kind: MatKind,
+        n_rows: usize,
+        cols: usize,
+    ) -> QuantMatrix {
+        let mut rng = Rng::new(self.mat_seed(layer, kind));
+        let dist = self.dist.with_sigma(self.layer_sigma(layer));
+        synth::synthesize_on_grid(n_rows, cols, dist, self.grid(layer, kind), &mut rng)
+    }
+
+    /// Materialize one full layer (with LoRA adaptors when configured).
+    pub fn layer(&self, layer: usize) -> LayerWeights {
+        let mats = MatKind::ALL
+            .iter()
+            .map(|&k| (k, self.matrix(layer, k)))
+            .collect::<Vec<_>>();
+        let (lora_q, lora_v) = match self.config.lora {
+            None => (None, None),
+            Some(lc) => {
+                let wq = &mats[0].1;
+                let wv = &mats[2].1;
+                let mk = |w: &QuantMatrix, tag: u64| {
+                    let mut rng = Rng::new(self.mat_seed(layer, MatKind::Wq) ^ (0xA0A0 + tag));
+                    LoraAdaptor::synthesize(w, lc, self.dist, &mut rng)
+                };
+                (Some(mk(wq, 1)), Some(mk(wv, 2)))
+            }
+        };
+        LayerWeights {
+            layer_idx: layer,
+            mats,
+            lora_q,
+            lora_v,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LoraConfig, ModelConfig};
+
+    #[test]
+    fn shapes_match_config() {
+        let cfg = ModelConfig::tiny();
+        let m = Model::new(cfg.clone(), 7);
+        let l = m.layer(0);
+        assert_eq!(l.get(MatKind::Wq).rows, cfg.d_model);
+        assert_eq!(l.get(MatKind::Ff1).cols, cfg.d_ff);
+        assert_eq!(l.get(MatKind::Ff2).rows, cfg.d_ff);
+        assert!(l.lora_q.is_none());
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let m1 = Model::new(ModelConfig::tiny(), 42);
+        let m2 = Model::new(ModelConfig::tiny(), 42);
+        assert_eq!(
+            m1.matrix(1, MatKind::Wk).data,
+            m2.matrix(1, MatKind::Wk).data
+        );
+        let m3 = Model::new(ModelConfig::tiny(), 43);
+        assert_ne!(
+            m1.matrix(1, MatKind::Wk).data,
+            m3.matrix(1, MatKind::Wk).data
+        );
+    }
+
+    #[test]
+    fn distinct_streams_per_layer_and_kind() {
+        let m = Model::new(ModelConfig::tiny(), 1);
+        assert_ne!(m.matrix(0, MatKind::Wq).data, m.matrix(1, MatKind::Wq).data);
+        assert_ne!(m.matrix(0, MatKind::Wq).data, m.matrix(0, MatKind::Wk).data);
+    }
+
+    #[test]
+    fn row_prefix_matches_full_matrix() {
+        let m = Model::new(ModelConfig::tiny(), 5);
+        let full = m.matrix(0, MatKind::Wo);
+        let part = m.matrix_rows(0, MatKind::Wo, 3);
+        assert_eq!(part.rows, 3);
+        assert_eq!(part.data[..], full.data[..3 * full.cols]);
+    }
+
+    #[test]
+    fn lora_layers_materialize_adaptors() {
+        let cfg = ModelConfig::tiny().with_lora(LoraConfig { rank: 4, alpha: 8.0 });
+        let m = Model::new(cfg, 9);
+        let l = m.layer(0);
+        let a = l.lora_q.as_ref().unwrap();
+        assert_eq!(a.a.rows, 128);
+        assert_eq!(a.a.cols, 4);
+        assert_eq!(a.b.rows, 4);
+        assert_eq!(a.b.cols, 128);
+        assert!(l.lora_v.is_some());
+    }
+}

@@ -1,0 +1,216 @@
+//! Synthetic weight generation (DESIGN.md §8 substitution S1).
+//!
+//! Trained transformer weight matrices are near-Gaussian per tensor, with
+//! occasional heavier-tailed layers; the reuse statistics AxLLM exploits
+//! depend only on this value-locality profile after quantization. The
+//! default generator is Gaussian; Laplace and Student-t generators support
+//! the distribution-sensitivity study (`report::ablation`), demonstrating
+//! that the paper's reuse-rate conclusion is not an artifact of the
+//! Gaussian choice.
+
+use crate::quant::{QuantMatrix, QuantParams};
+use crate::util::rng::Rng;
+
+/// Family of the synthetic weight distribution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DistKind {
+    Gaussian,
+    Laplace,
+    /// Student-t with the given degrees of freedom (heavier tails).
+    StudentT(u32),
+    /// Uniform over [-a, a] — worst case for locality (flat histogram).
+    Uniform,
+}
+
+/// Distribution + scale for weight synthesis.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WeightDistribution {
+    pub kind: DistKind,
+    /// Standard-deviation-like scale parameter.
+    pub sigma: f64,
+    /// Quantization bit width applied after synthesis.
+    pub bits: u8,
+}
+
+impl Default for WeightDistribution {
+    fn default() -> Self {
+        WeightDistribution {
+            kind: DistKind::Gaussian,
+            // ~N(0, 0.02): typical magnitude for trained transformer
+            // weights (initialization-scale, preserved by training).
+            sigma: 0.02,
+            bits: 8,
+        }
+    }
+}
+
+impl WeightDistribution {
+    pub fn with_sigma(mut self, sigma: f64) -> Self {
+        self.sigma = sigma;
+        self
+    }
+
+    pub fn with_kind(mut self, kind: DistKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    pub fn with_bits(mut self, bits: u8) -> Self {
+        self.bits = bits;
+        self
+    }
+
+    /// Draw one float sample.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> f32 {
+        let x = match self.kind {
+            DistKind::Gaussian => rng.normal(),
+            DistKind::Laplace => rng.laplace(1.0 / std::f64::consts::SQRT_2), // unit variance
+            DistKind::StudentT(nu) => {
+                let x = rng.student_t(nu);
+                // Normalize to unit variance when it exists (nu > 2).
+                if nu > 2 {
+                    x / (nu as f64 / (nu as f64 - 2.0)).sqrt()
+                } else {
+                    x
+                }
+            }
+            DistKind::Uniform => (rng.f64() * 2.0 - 1.0) * 3.0f64.sqrt(), // unit variance
+        };
+        (x * self.sigma) as f32
+    }
+}
+
+/// Synthesize a quantized `rows×cols` matrix.
+///
+/// The float samples go through [`QuantParams::fit`] — the same symmetric
+/// quantizer a real checkpoint would — so clipping and rounding behaviour
+/// (and therefore the folded-value histogram) match the real pipeline.
+pub fn synthesize_matrix(
+    rows: usize,
+    cols: usize,
+    dist: WeightDistribution,
+    rng: &mut Rng,
+) -> QuantMatrix {
+    let n = rows * cols;
+    let mut data = Vec::with_capacity(n);
+    for _ in 0..n {
+        data.push(dist.sample(rng));
+    }
+    QuantMatrix::from_f32(rows, cols, &data, dist.bits)
+}
+
+/// Synthesize a quantized matrix whose codes live on a **given** grid
+/// (scale), clamping instead of refitting. Used to re-code LoRA A onto W's
+/// grid so equal dequantized values produce equal codes (Fig. 5 sharing).
+pub fn synthesize_on_grid(
+    rows: usize,
+    cols: usize,
+    dist: WeightDistribution,
+    params: QuantParams,
+    rng: &mut Rng,
+) -> QuantMatrix {
+    let n = rows * cols;
+    let mut data = Vec::with_capacity(n);
+    for _ in 0..n {
+        data.push(params.quantize(dist.sample(rng)));
+    }
+    QuantMatrix::from_q(rows, cols, data, params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::stats::measure_locality;
+
+    #[test]
+    fn gaussian_matrix_has_gaussian_histogram() {
+        let mut rng = Rng::new(1);
+        let m = synthesize_matrix(16, 512, WeightDistribution::default(), &mut rng);
+        // Center-heavy: |q| <= 42 (±1σ after fit maps σ→~max/3... loosely)
+        // must hold far more mass than the tails.
+        let center = m.data.iter().filter(|&&q| q.unsigned_abs() <= 42).count();
+        let tails = m.data.len() - center;
+        assert!(center > tails * 2, "center {center} tails {tails}");
+    }
+
+    #[test]
+    fn uniform_has_flat_histogram() {
+        let mut rng = Rng::new(2);
+        let dist = WeightDistribution::default().with_kind(DistKind::Uniform);
+        let m = synthesize_matrix(16, 512, dist, &mut rng);
+        let center = m.data.iter().filter(|&&q| q.unsigned_abs() <= 42).count() as f64;
+        let frac = center / m.data.len() as f64;
+        // Uniform ±max → |q|≤42 covers about a third of the mass.
+        assert!((0.25..0.45).contains(&frac), "{frac}");
+    }
+
+    #[test]
+    fn gaussian_localizes_better_than_uniform() {
+        let mut rng = Rng::new(3);
+        let g = synthesize_matrix(8, 512, WeightDistribution::default(), &mut rng);
+        let u = synthesize_matrix(
+            8,
+            512,
+            WeightDistribution::default().with_kind(DistKind::Uniform),
+            &mut rng,
+        );
+        let rg = measure_locality(&g, 512).reuse_rate();
+        let ru = measure_locality(&u, 512).reuse_rate();
+        assert!(rg > ru, "gaussian {rg} uniform {ru}");
+        // Even uniform over 128 folded values reuses heavily at chunk 512.
+        assert!(ru > 0.7, "{ru}");
+    }
+
+    #[test]
+    fn student_t_heavier_tails_than_gaussian() {
+        let mut rng = Rng::new(4);
+        let g = synthesize_matrix(8, 1024, WeightDistribution::default(), &mut rng);
+        let t = synthesize_matrix(
+            8,
+            1024,
+            WeightDistribution::default().with_kind(DistKind::StudentT(3)),
+            &mut rng,
+        );
+        // After fit, heavy tails compress the center → more codes near 0.
+        let gz = g.data.iter().filter(|&&q| q == 0).count();
+        let tz = t.data.iter().filter(|&&q| q == 0).count();
+        assert!(tz > gz, "t zeros {tz} gaussian zeros {gz}");
+    }
+
+    #[test]
+    fn on_grid_synthesis_respects_params() {
+        let mut rng = Rng::new(5);
+        let params = QuantParams { scale: 0.0001, bits: 8 };
+        let m = synthesize_on_grid(4, 64, WeightDistribution::default(), params, &mut rng);
+        assert_eq!(m.params, params);
+        // σ=0.02 on scale 0.0001 → lots of clamping to ±127.
+        assert!(m.data.iter().any(|&q| q == 127 || q == -127));
+        assert!(m.data.iter().all(|&q| q != i8::MIN));
+    }
+
+    #[test]
+    fn unit_variance_normalizations() {
+        let mut rng = Rng::new(6);
+        for kind in [
+            DistKind::Gaussian,
+            DistKind::Laplace,
+            DistKind::StudentT(5),
+            DistKind::Uniform,
+        ] {
+            let dist = WeightDistribution {
+                kind,
+                sigma: 1.0,
+                bits: 8,
+            };
+            let n = 100_000;
+            let mut sum2 = 0.0;
+            for _ in 0..n {
+                let x = dist.sample(&mut rng) as f64;
+                sum2 += x * x;
+            }
+            let var = sum2 / n as f64;
+            assert!((0.85..1.25).contains(&var), "{kind:?} var {var}");
+        }
+    }
+}

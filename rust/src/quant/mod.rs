@@ -1,0 +1,318 @@
+//! Symmetric fixed-point quantization and the value-locality statistics
+//! that computation reuse exploits (paper §III.a–b).
+//!
+//! All AxLLM experiments quantize weights to **signed 8-bit fixed point**
+//! (`i8` in `[-127, 127]`; −128 is excluded so that a value and its
+//! negation always fold onto the same Result-Cache slot — paper §V
+//! "Simulation setup": *"we maintain a 128-element reuse cache (instead of
+//! 256) and map each value and its negative to the same cell"*).
+
+pub mod stats;
+
+pub use stats::{chunk_unique_counts, LocalityStats};
+
+/// Number of distinct folded values with sign-folding 8-bit quantization.
+pub const RC_ENTRIES_8BIT: usize = 128;
+
+/// Quantization parameters for one tensor (symmetric: zero-point = 0).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantParams {
+    /// Dequantized value = scale * q.
+    pub scale: f32,
+    /// Bit width (≤ 8; experiments use 8).
+    pub bits: u8,
+}
+
+impl QuantParams {
+    /// Largest representable magnitude at this bit width (symmetric range
+    /// `[-qmax, qmax]`, excluding the asymmetric minimum).
+    pub fn qmax(&self) -> i32 {
+        (1i32 << (self.bits - 1)) - 1
+    }
+
+    /// Derive parameters from data: scale chosen so max |x| maps to qmax.
+    pub fn fit(data: &[f32], bits: u8) -> QuantParams {
+        assert!((2..=8).contains(&bits), "bits must be in 2..=8");
+        let amax = data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+        let scale = if amax > 0.0 { amax / qmax } else { 1.0 };
+        QuantParams { scale, bits }
+    }
+
+    /// Quantize one value (round-to-nearest, clamp to symmetric range).
+    #[inline]
+    pub fn quantize(&self, x: f32) -> i8 {
+        let q = (x / self.scale).round();
+        let qmax = self.qmax() as f32;
+        q.clamp(-qmax, qmax) as i8
+    }
+
+    /// Dequantize one value.
+    #[inline]
+    pub fn dequantize(&self, q: i8) -> f32 {
+        self.scale * q as f32
+    }
+
+    /// Quantize a slice.
+    pub fn quantize_all(&self, xs: &[f32]) -> Vec<i8> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+
+    /// Dequantize a slice.
+    pub fn dequantize_all(&self, qs: &[i8]) -> Vec<f32> {
+        qs.iter().map(|&q| self.dequantize(q)).collect()
+    }
+}
+
+/// Fold a signed quantized value onto its Result-Cache index: `v` and `-v`
+/// share a slot (paper §V), so the RC needs `2^(q-1)` entries.
+///
+/// Returns `(index, negated)`: `negated` tells the datapath to negate the
+/// cached product on reuse.
+#[inline]
+pub fn fold(q: i8) -> (u8, bool) {
+    debug_assert!(q != i8::MIN, "quantizer must exclude -128");
+    if q < 0 {
+        ((-q) as u8, true)
+    } else {
+        (q as u8, false)
+    }
+}
+
+/// Inverse of [`fold`].
+#[inline]
+pub fn unfold(index: u8, negated: bool) -> i8 {
+    if negated {
+        -(index as i8)
+    } else {
+        index as i8
+    }
+}
+
+/// Number of RC entries needed at a bit width with sign folding.
+pub fn rc_entries(bits: u8) -> usize {
+    1usize << (bits - 1)
+}
+
+/// A quantized matrix in row-major order, carrying its parameters.
+///
+/// This is the weight representation everything downstream consumes: the
+/// cycle simulator streams its rows, the functional executor multiplies it,
+/// and the AOT path exports it as uint8 RC indices.
+#[derive(Clone, Debug)]
+pub struct QuantMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i8>,
+    pub params: QuantParams,
+}
+
+impl QuantMatrix {
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32], bits: u8) -> QuantMatrix {
+        assert_eq!(data.len(), rows * cols);
+        let params = QuantParams::fit(data, bits);
+        QuantMatrix {
+            rows,
+            cols,
+            data: params.quantize_all(data),
+            params,
+        }
+    }
+
+    /// Build directly from quantized values (tests, synthetic models).
+    pub fn from_q(rows: usize, cols: usize, data: Vec<i8>, params: QuantParams) -> QuantMatrix {
+        assert_eq!(data.len(), rows * cols);
+        assert!(
+            data.iter().all(|&q| q != i8::MIN),
+            "-128 excluded by the symmetric quantizer"
+        );
+        QuantMatrix {
+            rows,
+            cols,
+            data,
+            params,
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> i8 {
+        self.data[r * self.cols + c]
+    }
+
+    /// Dequantize the whole matrix (row-major f32).
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.params.dequantize_all(&self.data)
+    }
+
+    /// Export as folded RC indices + sign bits (the "weights as pointers
+    /// into the RC" representation of paper §III.b).
+    pub fn to_rc_indices(&self) -> (Vec<u8>, Vec<bool>) {
+        let mut idx = Vec::with_capacity(self.data.len());
+        let mut neg = Vec::with_capacity(self.data.len());
+        for &q in &self.data {
+            let (i, n) = fold(q);
+            idx.push(i);
+            neg.push(n);
+        }
+        (idx, neg)
+    }
+
+    /// Export as unsigned byte offsets `q + 127` in `[0, 254]` — the
+    /// representation the Pallas kernel's 255-entry product table uses.
+    pub fn to_u8_offset(&self) -> Vec<u8> {
+        self.data.iter().map(|&q| (q as i16 + 127) as u8).collect()
+    }
+
+    /// Concatenate another matrix on the column axis (same row count).
+    /// This is the paper's Fig. 5 W∥A trick for LoRA reuse sharing.
+    pub fn concat_cols(&self, other: &QuantMatrix) -> QuantMatrix {
+        assert_eq!(self.rows, other.rows, "W and A must share row count");
+        let cols = self.cols + other.cols;
+        let mut data = Vec::with_capacity(self.rows * cols);
+        for r in 0..self.rows {
+            data.extend_from_slice(self.row(r));
+            data.extend_from_slice(other.row(r));
+        }
+        QuantMatrix {
+            rows: self.rows,
+            cols,
+            data,
+            // Reuse requires only equal *quantized codes*; the combined
+            // matrix keeps W's params (A is re-coded onto W's grid by the
+            // model builder before concatenation).
+            params: self.params,
+        }
+    }
+}
+
+/// Quantization error metrics (used to check the "<1% accuracy impact"
+/// premise on synthetic activations).
+pub fn quant_snr_db(original: &[f32], params: &QuantParams) -> f64 {
+    let mut sig = 0.0f64;
+    let mut noise = 0.0f64;
+    for &x in original {
+        let q = params.dequantize(params.quantize(x));
+        sig += (x as f64) * (x as f64);
+        let e = (x - q) as f64;
+        noise += e * e;
+    }
+    if noise == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (sig / noise).log10()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fit_covers_range_symmetric() {
+        let data = [-2.0f32, -1.0, 0.0, 1.0, 2.0];
+        let p = QuantParams::fit(&data, 8);
+        assert_eq!(p.quantize(2.0), 127);
+        assert_eq!(p.quantize(-2.0), -127);
+        assert_eq!(p.quantize(0.0), 0);
+    }
+
+    #[test]
+    fn never_produces_i8_min() {
+        let mut rng = Rng::new(1);
+        let data: Vec<f32> = (0..10_000).map(|_| rng.normal() as f32 * 3.0).collect();
+        let p = QuantParams::fit(&data, 8);
+        for &x in &data {
+            assert_ne!(p.quantize(x * 2.0), i8::MIN); // even out-of-range clamps to -127
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_scale() {
+        let mut rng = Rng::new(2);
+        let data: Vec<f32> = (0..1000).map(|_| rng.normal() as f32).collect();
+        let p = QuantParams::fit(&data, 8);
+        for &x in &data {
+            let err = (x - p.dequantize(p.quantize(x))).abs();
+            assert!(err <= p.scale / 2.0 + 1e-6, "err {err} scale {}", p.scale);
+        }
+    }
+
+    #[test]
+    fn fold_unfold_involutive() {
+        for q in -127i8..=127 {
+            let (i, n) = fold(q);
+            assert!(i <= 127);
+            assert_eq!(unfold(i, n), q);
+        }
+    }
+
+    #[test]
+    fn fold_maps_negatives_to_same_slot() {
+        for q in 1i8..=127 {
+            assert_eq!(fold(q).0, fold(-q).0);
+            assert!(fold(-q).1);
+            assert!(!fold(q).1);
+        }
+    }
+
+    #[test]
+    fn rc_entries_by_bits() {
+        assert_eq!(rc_entries(8), 128);
+        assert_eq!(rc_entries(4), 8);
+        assert_eq!(RC_ENTRIES_8BIT, 128);
+    }
+
+    #[test]
+    fn matrix_row_access_and_indices() {
+        let params = QuantParams { scale: 0.5, bits: 8 };
+        let m = QuantMatrix::from_q(2, 3, vec![1, -1, 2, 3, -3, 0], params);
+        assert_eq!(m.row(0), &[1, -1, 2]);
+        assert_eq!(m.get(1, 1), -3);
+        let (idx, neg) = m.to_rc_indices();
+        assert_eq!(idx, vec![1, 1, 2, 3, 3, 0]);
+        assert_eq!(neg, vec![false, true, false, false, true, false]);
+    }
+
+    #[test]
+    fn u8_offset_range() {
+        let params = QuantParams { scale: 1.0, bits: 8 };
+        let m = QuantMatrix::from_q(1, 3, vec![-127, 0, 127], params);
+        assert_eq!(m.to_u8_offset(), vec![0, 127, 254]);
+    }
+
+    #[test]
+    fn concat_cols_layout() {
+        let params = QuantParams { scale: 1.0, bits: 8 };
+        let w = QuantMatrix::from_q(2, 2, vec![1, 2, 3, 4], params);
+        let a = QuantMatrix::from_q(2, 1, vec![9, 8], params);
+        let c = w.concat_cols(&a);
+        assert_eq!(c.cols, 3);
+        assert_eq!(c.row(0), &[1, 2, 9]);
+        assert_eq!(c.row(1), &[3, 4, 8]);
+    }
+
+    #[test]
+    fn snr_reasonable_for_8bit_gaussian() {
+        let mut rng = Rng::new(3);
+        let data: Vec<f32> = (0..20_000).map(|_| rng.normal() as f32).collect();
+        let p = QuantParams::fit(&data, 8);
+        let snr = quant_snr_db(&data, &p);
+        // 8-bit on ±4σ-ish data: comfortably above 30 dB.
+        assert!(snr > 30.0, "snr {snr}");
+    }
+
+    #[test]
+    fn lower_bits_lower_snr() {
+        let mut rng = Rng::new(4);
+        let data: Vec<f32> = (0..20_000).map(|_| rng.normal() as f32).collect();
+        let p8 = QuantParams::fit(&data, 8);
+        let p4 = QuantParams::fit(&data, 4);
+        assert!(quant_snr_db(&data, &p8) > quant_snr_db(&data, &p4) + 10.0);
+    }
+}

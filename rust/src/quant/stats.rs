@@ -1,0 +1,218 @@
+//! Value-locality statistics over quantized weight matrices.
+//!
+//! The computation-reuse opportunity (paper §III.a) is a pure function of
+//! how many *distinct folded values* appear per row chunk: within a chunk
+//! of `C` weights holding `U` unique folded values, `C − U` multiplications
+//! are reusable, so the structural reuse rate is `1 − U/C`. These helpers
+//! measure exactly that, independent of any timing model, and feed Fig. 8.
+
+use super::{fold, QuantMatrix};
+
+/// Locality statistics for one matrix at a given chunk (buffer) size.
+#[derive(Clone, Debug, Default)]
+pub struct LocalityStats {
+    /// Total weight elements scanned.
+    pub elements: u64,
+    /// Total unique folded values across all (row, chunk) pairs — i.e. the
+    /// number of multiplications an ideal reuse datapath must perform.
+    pub unique: u64,
+    /// Histogram of unique-count per chunk (index = unique count).
+    pub unique_hist: Vec<u64>,
+    /// Chunk size used.
+    pub chunk: usize,
+}
+
+impl LocalityStats {
+    /// Structural reuse rate: fraction of multiplications served by reuse.
+    pub fn reuse_rate(&self) -> f64 {
+        if self.elements == 0 {
+            0.0
+        } else {
+            1.0 - self.unique as f64 / self.elements as f64
+        }
+    }
+
+    /// Mean unique folded values per chunk.
+    pub fn mean_unique(&self) -> f64 {
+        let chunks: u64 = self.unique_hist.iter().sum();
+        if chunks == 0 {
+            0.0
+        } else {
+            self.unique as f64 / chunks as f64
+        }
+    }
+}
+
+/// Count unique folded values per `chunk`-sized piece of each row.
+///
+/// `chunk` mirrors the W_buff size limit (§IV "Buffer size management"):
+/// the RC persists only while one input element's row chunk streams through
+/// a lane, so reuse cannot cross chunk boundaries.
+pub fn measure_locality(m: &QuantMatrix, chunk: usize) -> LocalityStats {
+    assert!(chunk > 0);
+    let mut stats = LocalityStats {
+        elements: 0,
+        unique: 0,
+        unique_hist: vec![0; chunk.min(129) + 1],
+        chunk,
+    };
+    // 128 possible folded values → fixed-size seen-marker with epoch trick
+    // (no clearing between chunks).
+    let mut seen = [0u32; 128];
+    let mut epoch = 0u32;
+    for r in 0..m.rows {
+        let row = m.row(r);
+        for piece in row.chunks(chunk) {
+            epoch += 1;
+            let mut unique = 0u64;
+            for &q in piece {
+                let (idx, _) = fold(q);
+                if seen[idx as usize] != epoch {
+                    seen[idx as usize] = epoch;
+                    unique += 1;
+                }
+            }
+            stats.elements += piece.len() as u64;
+            stats.unique += unique;
+            let h = (unique as usize).min(stats.unique_hist.len() - 1);
+            stats.unique_hist[h] += 1;
+        }
+    }
+    stats
+}
+
+/// Unique counts per chunk for a single row (used by the LoRA A∩W study
+/// and by tests).
+pub fn chunk_unique_counts(row: &[i8], chunk: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut seen = [false; 128];
+    for piece in row.chunks(chunk) {
+        seen.fill(false);
+        let mut u = 0;
+        for &q in piece {
+            let (idx, _) = fold(q);
+            if !seen[idx as usize] {
+                seen[idx as usize] = true;
+                u += 1;
+            }
+        }
+        out.push(u);
+    }
+    out
+}
+
+/// Fraction of elements of `a_row` whose folded value also appears in the
+/// matching `w_row` (paper §V: "an average of 90% of the elements of each
+/// row of the adaptor matrix A repeats in the corresponding row in W").
+pub fn overlap_fraction(w_row: &[i8], a_row: &[i8]) -> f64 {
+    if a_row.is_empty() {
+        return 0.0;
+    }
+    let mut in_w = [false; 128];
+    for &q in w_row {
+        in_w[fold(q).0 as usize] = true;
+    }
+    let hits = a_row.iter().filter(|&&q| in_w[fold(q).0 as usize]).count();
+    hits as f64 / a_row.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantParams;
+    use crate::util::rng::Rng;
+
+    fn q(rows: usize, cols: usize, data: Vec<i8>) -> QuantMatrix {
+        QuantMatrix::from_q(rows, cols, data, QuantParams { scale: 1.0, bits: 8 })
+    }
+
+    #[test]
+    fn all_same_value_maximal_reuse() {
+        let m = q(1, 100, vec![5; 100]);
+        let s = measure_locality(&m, 100);
+        assert_eq!(s.unique, 1);
+        assert!((s.reuse_rate() - 0.99).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_distinct_no_reuse() {
+        let data: Vec<i8> = (0..100).map(|i| i as i8).collect();
+        let m = q(1, 100, data);
+        let s = measure_locality(&m, 100);
+        assert_eq!(s.unique, 100);
+        assert_eq!(s.reuse_rate(), 0.0);
+    }
+
+    #[test]
+    fn sign_folding_counts_negatives_as_reuse() {
+        let m = q(1, 4, vec![7, -7, 7, -7]);
+        let s = measure_locality(&m, 4);
+        assert_eq!(s.unique, 1);
+    }
+
+    #[test]
+    fn chunking_resets_reuse() {
+        // Same 4 values in each chunk of 4 → unique=4 per chunk.
+        let m = q(1, 8, vec![1, 2, 3, 4, 1, 2, 3, 4]);
+        let full = measure_locality(&m, 8);
+        let halves = measure_locality(&m, 4);
+        assert_eq!(full.unique, 4);
+        assert_eq!(halves.unique, 8);
+        assert!(full.reuse_rate() > halves.reuse_rate());
+    }
+
+    #[test]
+    fn unique_cannot_exceed_128_or_chunk() {
+        let mut rng = Rng::new(9);
+        let data: Vec<i8> = (0..4096)
+            .map(|_| rng.range_i64(-127, 127) as i8)
+            .collect();
+        let m = q(4, 1024, data);
+        for &chunk in &[64usize, 512, 1024] {
+            let s = measure_locality(&m, chunk);
+            assert!(s.mean_unique() <= 128.0_f64.min(chunk as f64));
+        }
+    }
+
+    #[test]
+    fn reuse_grows_with_chunk_size_uniform_values() {
+        let mut rng = Rng::new(10);
+        let data: Vec<i8> = (0..8192)
+            .map(|_| rng.range_i64(-127, 127) as i8)
+            .collect();
+        let m = q(2, 4096, data);
+        let r64 = measure_locality(&m, 64).reuse_rate();
+        let r512 = measure_locality(&m, 512).reuse_rate();
+        let r4096 = measure_locality(&m, 4096).reuse_rate();
+        assert!(r64 < r512 && r512 < r4096, "{r64} {r512} {r4096}");
+        // Llama-style full row over 128 folded values: ≥ 1 - 128/4096.
+        assert!(r4096 >= 1.0 - 128.0 / 4096.0 - 1e-9);
+    }
+
+    #[test]
+    fn chunk_unique_counts_per_piece() {
+        let row = [1i8, 1, 2, 2, 3, 3, 4, 4];
+        assert_eq!(chunk_unique_counts(&row, 4), vec![2, 2]);
+        assert_eq!(chunk_unique_counts(&row, 8), vec![4]);
+    }
+
+    #[test]
+    fn overlap_fraction_bounds_and_folding() {
+        let w = [1i8, 2, 3];
+        assert_eq!(overlap_fraction(&w, &[-1, -2, -3]), 1.0);
+        assert_eq!(overlap_fraction(&w, &[4, 5, 6]), 0.0);
+        assert!((overlap_fraction(&w, &[1, 9]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hist_sums_to_chunk_count() {
+        let mut rng = Rng::new(11);
+        let data: Vec<i8> = (0..2048)
+            .map(|_| rng.range_i64(-50, 50) as i8)
+            .collect();
+        let m = q(4, 512, data);
+        let s = measure_locality(&m, 128);
+        let chunks: u64 = s.unique_hist.iter().sum();
+        assert_eq!(chunks, (4 * 512 / 128) as u64);
+    }
+}

@@ -1,0 +1,328 @@
+//! E9–E11 ablations and claim checks:
+//!
+//! - **buffer sweep** (§IV "Buffer size management"): reuse rate and area
+//!   vs W_buff/Out_buff size 64→4096 — the trade-off behind the paper's
+//!   choice of 256–512.
+//! - **slice sweep** (§IV "Partitioning for Higher Throughput"): sliced-
+//!   lane throughput, collisions, and backpressure vs P ∈ {1, 2, 4, 8}.
+//! - **hazard rate** (§IV pipeline): the <2% read-after-compute stall
+//!   claim, measured on the sliced micro-architecture.
+//! - **distribution sensitivity** (DESIGN.md §8 S1): reuse rate under
+//!   Gaussian / Laplace / Student-t / uniform weight synthesis — the
+//!   reuse conclusion must not be an artifact of the Gaussian choice.
+
+use crate::config::{AcceleratorConfig, ModelConfig};
+use crate::energy::AreaModel;
+use crate::model::synth::{DistKind, WeightDistribution};
+use crate::model::{MatKind, Model};
+use crate::quant::stats::measure_locality;
+use crate::report::RunCtx;
+use crate::sim::{Accelerator, LaneModel};
+use crate::util::rng::Rng;
+use crate::util::table::{fnum, pct, Table};
+
+/// E9: buffer-size sweep on DistilBERT weights.
+pub fn buffer_sweep(ctx: RunCtx) -> Table {
+    let model = Model::new(ModelConfig::distilbert(), ctx.seed);
+    let w = model.matrix_rows(0, MatKind::Ff1, ctx.sample_rows);
+    let area = AreaModel::default();
+    let mut t = Table::new(
+        "Ablation — buffer size vs reuse rate and area (DistilBERT FF1)",
+        &["buffer entries", "reuse rate", "speedup (serial lane)", "area (k gates)"],
+    );
+    for &buf in &[64usize, 128, 256, 512, 1024, 2048, 4096] {
+        let r = measure_locality(&w, buf).reuse_rate();
+        let speedup = 3.0 / (3.0 * (1.0 - r) + r);
+        let cfg = AcceleratorConfig {
+            buffer_entries: buf,
+            slices: if buf >= 4 { 4 } else { 1 },
+            ..AcceleratorConfig::paper()
+        };
+        t.row(vec![
+            buf.to_string(),
+            pct(r),
+            format!("{speedup:.2}x"),
+            fnum(area.area(&cfg).total / 1e3, 1),
+        ]);
+    }
+    t
+}
+
+/// E11: slice-count sweep on the cycle-accurate sliced lane.
+pub struct SliceRow {
+    pub slices: usize,
+    pub cycles: u64,
+    pub throughput_elems_per_cycle: f64,
+    pub collisions: u64,
+    pub backpressure: u64,
+    pub hazard_rate: f64,
+}
+
+pub fn slice_sweep(ctx: RunCtx) -> Vec<SliceRow> {
+    let model = Model::new(ModelConfig::distilbert(), ctx.seed);
+    let w = model.matrix_rows(0, MatKind::Wq, ctx.sample_rows);
+    let x = crate::sim::accelerator::synth_input(w.rows, ctx.seed);
+    [1usize, 2, 4, 8]
+        .iter()
+        .map(|&p| {
+            let cfg = AcceleratorConfig {
+                slices: p,
+                buffer_entries: 256,
+                ..AcceleratorConfig::paper()
+            };
+            let acc = Accelerator::axllm(cfg).with_lane_model(LaneModel::Sliced);
+            let s = acc.matmul(&x, &w).stats;
+            // Counters are summed over all concurrent lanes while cycles
+            // are group-maxed — normalize the stall rate per lane-cycle.
+            let lanes = cfg.lanes.min(w.rows) as u64;
+            SliceRow {
+                slices: p,
+                cycles: s.cycles,
+                throughput_elems_per_cycle: s.elements as f64 / s.cycles as f64,
+                collisions: s.collisions,
+                backpressure: s.backpressure_stalls,
+                hazard_rate: s.hazard_stalls as f64 / (s.cycles * lanes) as f64,
+            }
+        })
+        .collect()
+}
+
+pub fn slice_sweep_table(ctx: RunCtx) -> Table {
+    let mut t = Table::new(
+        "Ablation — P-way slicing (sliced lane model, DistilBERT Wq)",
+        &["slices", "cycles", "elems/cycle", "collisions", "backpressure", "hazard rate"],
+    );
+    for r in slice_sweep(ctx) {
+        t.row(vec![
+            r.slices.to_string(),
+            r.cycles.to_string(),
+            fnum(r.throughput_elems_per_cycle, 3),
+            r.collisions.to_string(),
+            r.backpressure.to_string(),
+            pct(r.hazard_rate),
+        ]);
+    }
+    t
+}
+
+/// E10: the paper's <2% hazard-stall claim, measured on the §IV pipeline
+/// model it is stated for (single lane, 1 fetch/cycle, repeat-in-flight
+/// stalls; see [`crate::sim::lane::pipelined_hazard_scan`]). The sliced
+/// micro-architecture's hazard behaviour is reported separately in the
+/// slice-sweep table.
+pub fn hazard_rates(ctx: RunCtx) -> Table {
+    let mut t = Table::new(
+        "Read-after-compute hazard stalls, §IV pipeline (paper claim: <2% of cycles)",
+        &["benchmark", "hazard stall cycles", "pipeline cycles", "rate"],
+    );
+    let cfg = AcceleratorConfig::paper();
+    for b in crate::config::table1_benchmarks() {
+        let model = Model::new(b.model.clone(), ctx.seed);
+        let w = model.matrix_rows(0, MatKind::Wq, ctx.sample_rows.min(16));
+        let mut stalls = 0u64;
+        let mut cycles = 0u64;
+        for row in 0..w.rows {
+            for chunk in w.row(row).chunks(cfg.buffer_entries) {
+                let (s, c) = crate::sim::lane::pipelined_hazard_scan(chunk, &cfg);
+                stalls += s;
+                cycles += c;
+            }
+        }
+        t.row(vec![
+            b.key(),
+            stalls.to_string(),
+            cycles.to_string(),
+            pct(stalls as f64 / cycles.max(1) as f64),
+        ]);
+    }
+    t
+}
+
+/// Distribution-sensitivity study: reuse at 256/512/full-row chunk for
+/// four synthesis families.
+pub fn distribution_sensitivity(ctx: RunCtx) -> Table {
+    let mut t = Table::new(
+        "Sensitivity — weight distribution family vs reuse rate (768-wide rows)",
+        &["distribution", "reuse @256", "reuse @512", "reuse @full row"],
+    );
+    for (name, kind) in [
+        ("Gaussian", DistKind::Gaussian),
+        ("Laplace", DistKind::Laplace),
+        ("Student-t (nu=4)", DistKind::StudentT(4)),
+        ("Uniform (worst case)", DistKind::Uniform),
+    ] {
+        let dist = WeightDistribution::default().with_kind(kind);
+        let mut rng = Rng::new(ctx.seed);
+        let w = crate::model::synth::synthesize_matrix(ctx.sample_rows, 768, dist, &mut rng);
+        t.row(vec![
+            name.to_string(),
+            pct(measure_locality(&w, 256).reuse_rate()),
+            pct(measure_locality(&w, 512).reuse_rate()),
+            pct(measure_locality(&w, 768).reuse_rate()),
+        ]);
+    }
+    t
+}
+
+/// Bit-width ablation: the RC holds `2^(q-1)` sign-folded entries, so the
+/// quantization width q sets both the reuse opportunity and the reuse
+/// cache's area. The paper fixes q=8 ("an effective tradeoff"); this
+/// sweep shows why: below 8 bits reuse saturates near 100% but model
+/// accuracy (SNR) collapses, above costs area.
+pub fn bitwidth_sweep(ctx: RunCtx) -> Table {
+    use crate::quant::quant_snr_db;
+    let area = AreaModel::default();
+    let mut t = Table::new(
+        "Ablation — quantization bit width vs reuse, RC area, and weight SNR",
+        &["bits", "RC entries", "reuse @256", "reuse @512", "RC area (k gates)", "SNR (dB)"],
+    );
+    for bits in [2u8, 3, 4, 5, 6, 7, 8] {
+        let dist = WeightDistribution::default().with_bits(bits);
+        let mut rng = Rng::new(ctx.seed);
+        // Float samples + fitted grid at this width (SNR needs the floats).
+        let n = ctx.sample_rows * 768;
+        let samples: Vec<f32> = (0..n).map(|_| dist.sample(&mut rng)).collect();
+        let params = crate::quant::QuantParams::fit(&samples, bits);
+        let snr = quant_snr_db(&samples, &params);
+        let data: Vec<i8> = samples.iter().map(|&v| params.quantize(v)).collect();
+        let w = crate::quant::QuantMatrix::from_q(ctx.sample_rows, 768, data, params);
+        let cfg = AcceleratorConfig {
+            weight_bits: bits,
+            ..AcceleratorConfig::paper()
+        };
+        t.row(vec![
+            bits.to_string(),
+            cfg.rc_entries().to_string(),
+            pct(measure_locality(&w, 256).reuse_rate()),
+            pct(measure_locality(&w, 512).reuse_rate()),
+            fnum(area.area(&cfg).rc / 1e3, 1),
+            fnum(snr, 1),
+        ]);
+    }
+    t
+}
+
+/// Design-choice ablation: range vs interleaved RC-slice mapping. The
+/// paper's prose implies range partitioning ("identical or close values
+/// ... the same RC slice"); this quantifies what that costs vs an
+/// interleaved (value mod P) mapping under value-concentrated weights.
+pub fn rc_mapping_note(ctx: RunCtx) -> Table {
+    // The sliced model uses range mapping (rc_slice_of); emulate
+    // interleaved mapping by permuting folded values so that range
+    // mapping of the permuted values equals interleaved mapping of the
+    // originals: perm(u) = (u % P) * (128/P) + u / P.
+    let model = Model::new(ModelConfig::distilbert(), ctx.seed);
+    let w = model.matrix_rows(0, MatKind::Wq, ctx.sample_rows.min(16));
+    let x = crate::sim::accelerator::synth_input(w.rows, ctx.seed);
+    let cfg = AcceleratorConfig::paper();
+    let p = cfg.slices as i16;
+    let stride = 128i16 / p;
+    let permuted_data: Vec<i8> = w
+        .data
+        .iter()
+        .map(|&q| {
+            let (u, neg) = crate::quant::fold(q);
+            let u = u as i16;
+            let pu = ((u % p) * stride + u / p) as u8;
+            crate::quant::unfold(pu, neg)
+        })
+        .collect();
+    let wp = crate::quant::QuantMatrix::from_q(w.rows, w.cols, permuted_data, w.params);
+    let acc = Accelerator::axllm(cfg).with_lane_model(LaneModel::Sliced);
+    let range = acc.matmul(&x, &w).stats;
+    let inter = acc.matmul(&x, &wp).stats;
+    let mut t = Table::new(
+        "Design ablation — RC slice mapping under Gaussian-concentrated values",
+        &["mapping", "cycles", "collisions", "elems/cycle"],
+    );
+    for (name, s) in [("range (paper)", range), ("interleaved (mod P)", inter)] {
+        t.row(vec![
+            name.to_string(),
+            s.cycles.to_string(),
+            s.collisions.to_string(),
+            fnum(s.elements as f64 / s.cycles as f64, 3),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pct_of(t: &Table, r: usize, c: usize) -> f64 {
+        t.cell(r, c).trim_end_matches('%').parse().unwrap()
+    }
+
+    #[test]
+    fn buffer_sweep_monotone_reuse() {
+        let t = buffer_sweep(RunCtx::default());
+        let mut prev = 0.0;
+        for r in 0..t.n_rows() {
+            let v = pct_of(&t, r, 1);
+            assert!(v >= prev, "reuse must grow with buffer size");
+            prev = v;
+        }
+        // 256-entry row is the knee the paper picks: ≥65%.
+        assert!(pct_of(&t, 2, 1) > 65.0);
+    }
+
+    #[test]
+    fn slice_sweep_throughput_improves_then_saturates() {
+        let rows = slice_sweep(RunCtx::default());
+        assert!(rows[1].throughput_elems_per_cycle > rows[0].throughput_elems_per_cycle);
+        assert!(rows[2].throughput_elems_per_cycle > rows[1].throughput_elems_per_cycle * 0.9);
+    }
+
+    #[test]
+    fn hazard_rates_below_5pct() {
+        // Paper claims <2%; allow margin for synthetic weights.
+        let t = hazard_rates(RunCtx::default());
+        for r in 0..t.n_rows() {
+            assert!(pct_of(&t, r, 3) < 5.0, "row {r}: {}", t.cell(r, 3));
+        }
+    }
+
+    #[test]
+    fn bitwidth_sweep_tradeoff_shape() {
+        let t = bitwidth_sweep(RunCtx::default());
+        assert_eq!(t.n_rows(), 7);
+        // Reuse @256 falls as bits grow (more distinct codes)...
+        let first = pct_of(&t, 0, 2);
+        let last = pct_of(&t, 6, 2);
+        assert!(first > last, "reuse must fall with bit width: {first} vs {last}");
+        // ...while SNR rises monotonically (the accuracy side of the
+        // paper's "8-bit is an effective tradeoff").
+        let mut prev = f64::NEG_INFINITY;
+        for r in 0..t.n_rows() {
+            let snr: f64 = t.cell(r, 5).parse().unwrap();
+            assert!(snr > prev, "SNR must grow with bits");
+            prev = snr;
+        }
+        // 8-bit row: reuse still ≥65% at 256 buffers and SNR > 30 dB.
+        assert!(pct_of(&t, 6, 2) > 65.0);
+        assert!(t.cell(6, 5).parse::<f64>().unwrap() > 30.0);
+    }
+
+    #[test]
+    fn gaussian_beats_uniform_everywhere() {
+        let t = distribution_sensitivity(RunCtx::default());
+        for c in 1..=3 {
+            assert!(pct_of(&t, 0, c) > pct_of(&t, 3, c));
+        }
+        // Even the uniform worst case reuses heavily at full-row width:
+        // the pigeonhole core of the paper holds for any distribution.
+        assert!(pct_of(&t, 3, 3) > 60.0);
+    }
+
+    #[test]
+    fn interleaved_mapping_outperforms_range_under_concentration() {
+        let t = rc_mapping_note(RunCtx::default());
+        let range_cyc: f64 = t.cell(0, 1).parse().unwrap();
+        let inter_cyc: f64 = t.cell(1, 1).parse().unwrap();
+        assert!(
+            inter_cyc <= range_cyc * 1.02,
+            "interleaved {inter_cyc} should not lose to range {range_cyc}"
+        );
+    }
+}

@@ -1,0 +1,75 @@
+//! E1 / Fig. 1 — contribution of each part to the total computation of one
+//! DistilBERT layer, and the fraction AxLLM's reuse targets cover.
+
+use crate::config::{Dataset, ModelConfig};
+use crate::model::flops::{layer_breakdown, reuse_target_fraction, total_ops};
+use crate::util::table::{pct, Table};
+
+/// Generate the Fig. 1 breakdown for `model` at `seq` tokens.
+pub fn generate_for(model: &ModelConfig, seq: usize) -> Table {
+    let parts = layer_breakdown(model, seq);
+    let total = total_ops(&parts) as f64;
+    let mut t = Table::new(
+        &format!(
+            "Fig. 1 — computation breakdown, one {} layer (seq={seq})",
+            model.name
+        ),
+        &["component", "ops (M)", "share", "reuse target"],
+    );
+    for p in &parts {
+        t.row(vec![
+            p.name.to_string(),
+            format!("{:.1}", p.ops as f64 / 1e6),
+            pct(p.ops as f64 / total),
+            if p.reuse_target { "yes" } else { "-" }.to_string(),
+        ]);
+    }
+    t.row(vec![
+        "TOTAL".into(),
+        format!("{:.1}", total / 1e6),
+        pct(1.0),
+        pct(reuse_target_fraction(&parts)),
+    ]);
+    t
+}
+
+/// The paper's Fig. 1 setting: DistilBERT at its AG News mean length.
+pub fn generate() -> Table {
+    generate_for(&ModelConfig::distilbert(), Dataset::AgNews.mean_len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuse_targets_dominate_distilbert() {
+        let t = generate();
+        // Last row, last column: covered fraction ≥ 90% (the paper's
+        // motivation for targeting projections + FFN).
+        let covered: f64 = t
+            .cell(t.n_rows() - 1, 3)
+            .trim_end_matches('%')
+            .parse()
+            .unwrap();
+        assert!(covered > 90.0, "covered {covered}%");
+    }
+
+    #[test]
+    fn nine_components_plus_total() {
+        let t = generate();
+        assert_eq!(t.n_rows(), 10);
+    }
+
+    #[test]
+    fn ffn_rows_largest() {
+        let t = generate();
+        let share = |r: usize| -> f64 {
+            t.cell(r, 2).trim_end_matches('%').parse().unwrap()
+        };
+        // FF1 (row 5) and FF2 (row 7) each larger than attention scores
+        // (row 1).
+        assert!(share(5) > share(1));
+        assert!(share(7) > share(1));
+    }
+}

@@ -1,0 +1,144 @@
+//! E2+E3 / Table I + Fig. 8 — the benchmark suite and the computation
+//! reuse rate of every model, with full-row buffers vs 256-entry buffers.
+//!
+//! Paper claims: ≥87% minimum reuse (full-row series), ≈70% average with
+//! 256-entry buffers, and reuse growing with matrix size.
+
+use crate::config::table1_benchmarks;
+use crate::model::{MatKind, Model};
+use crate::quant::stats::measure_locality;
+use crate::report::RunCtx;
+use crate::util::table::{pct, Table};
+
+/// Table I: the benchmark suite.
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table I — datasets, tasks, and pre-trained models",
+        &["model", "dataset", "weight matrix"],
+    );
+    for b in table1_benchmarks() {
+        let (r, c) = b.weight_matrix();
+        t.row(vec![
+            b.model.name.clone(),
+            b.dataset.name().to_string(),
+            format!("{r}x{c}"),
+        ]);
+    }
+    t
+}
+
+/// Measured reuse rates per benchmark. Rates average over all six weight
+/// matrices of the first and middle layer (row-sampled on Llama-scale
+/// models), mirroring the paper's "across different layers and across the
+/// vectors in each layer".
+pub struct Fig8Row {
+    pub model: String,
+    pub reuse_full_row: f64,
+    pub reuse_512: f64,
+    pub reuse_256: f64,
+}
+
+pub fn measure(ctx: RunCtx) -> Vec<Fig8Row> {
+    table1_benchmarks()
+        .into_iter()
+        .map(|b| {
+            let model = Model::new(b.model.clone(), ctx.seed);
+            let layers = [0, b.model.n_layers / 2];
+            let mut acc = [0.0f64; 3];
+            let mut n = 0usize;
+            for &l in &layers {
+                for kind in MatKind::ALL {
+                    let w = model.matrix_rows(l, kind, ctx.sample_rows);
+                    acc[0] += measure_locality(&w, w.cols).reuse_rate();
+                    acc[1] += measure_locality(&w, 512).reuse_rate();
+                    acc[2] += measure_locality(&w, 256).reuse_rate();
+                    n += 1;
+                }
+            }
+            Fig8Row {
+                model: b.key(),
+                reuse_full_row: acc[0] / n as f64,
+                reuse_512: acc[1] / n as f64,
+                reuse_256: acc[2] / n as f64,
+            }
+        })
+        .collect()
+}
+
+/// Fig. 8 as a table.
+pub fn generate(ctx: RunCtx) -> Table {
+    let rows = measure(ctx);
+    let mut t = Table::new(
+        "Fig. 8 — computation reuse rate (weights 8-bit, sign-folded 128-entry RC)",
+        &["benchmark", "full-row buffers", "512-entry buffers", "256-entry buffers"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.model.clone(),
+            pct(r.reuse_full_row),
+            pct(r.reuse_512),
+            pct(r.reuse_256),
+        ]);
+    }
+    let mean = |f: fn(&Fig8Row) -> f64| rows.iter().map(f).sum::<f64>() / rows.len() as f64;
+    t.row(vec![
+        "MEAN".into(),
+        pct(mean(|r| r.reuse_full_row)),
+        pct(mean(|r| r.reuse_512)),
+        pct(mean(|r| r.reuse_256)),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_seven_benchmarks() {
+        let t = table1();
+        assert_eq!(t.n_rows(), 7);
+        assert_eq!(t.cell(5, 2), "4096x4096");
+    }
+
+    #[test]
+    fn full_row_reuse_at_least_87pct_band() {
+        // Paper: "this rate is 87% at minimum" (full-row series).
+        let rows = measure(RunCtx::default());
+        for r in &rows {
+            assert!(
+                r.reuse_full_row > 0.85,
+                "{}: full-row reuse {}",
+                r.model,
+                r.reuse_full_row
+            );
+        }
+    }
+
+    #[test]
+    fn reuse_256_averages_near_70pct() {
+        // Paper: "all models achieve a similar reuse rate, averaging
+        // about 70%" with 256-entry buffers.
+        let rows = measure(RunCtx::default());
+        let mean: f64 =
+            rows.iter().map(|r| r.reuse_256).sum::<f64>() / rows.len() as f64;
+        assert!((0.62..0.80).contains(&mean), "mean 256-buffer reuse {mean}");
+    }
+
+    #[test]
+    fn reuse_grows_with_matrix_size() {
+        // Paper: "The reuse rate grows with matrix size".
+        let rows = measure(RunCtx::default());
+        let distil = rows[0].reuse_full_row;
+        let llama13 = rows[6].reuse_full_row;
+        assert!(llama13 > distil, "llama {llama13} !> distilbert {distil}");
+    }
+
+    #[test]
+    fn chunked_rates_ordered() {
+        for r in measure(RunCtx::default()) {
+            assert!(r.reuse_full_row >= r.reuse_512);
+            assert!(r.reuse_512 >= r.reuse_256);
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! E5 — LoRA adaptor reuse (paper §III.c Fig. 5 + §V):
+//! ≈90% of each A-row's values repeat in the matching W row, and the
+//! adaptor-matrix execution speeds up ≈1.8× through W∥A sharing.
+
+use crate::config::{AcceleratorConfig, LoraConfig, ModelConfig};
+use crate::model::{LoraAdaptor, MatKind, Model};
+use crate::report::RunCtx;
+use crate::util::table::{pct, Table};
+
+pub struct LoraRow {
+    pub model: String,
+    /// Mean fraction of A-row values present in the matching W row.
+    pub overlap: f64,
+    /// Speedup of the adaptor-matrix (A) execution via the combined W∥A
+    /// stream vs the multiply-only baseline on A alone.
+    pub adaptor_speedup: f64,
+    /// Reuse rate observed on the A columns of the combined stream.
+    pub a_reuse: f64,
+}
+
+fn measure_one(cfg: &ModelConfig, ctx: RunCtx) -> LoraRow {
+    let lora_cfg = cfg.lora.unwrap_or_default();
+    let model = Model::new(
+        ModelConfig {
+            lora: None,
+            ..cfg.clone()
+        },
+        ctx.seed,
+    );
+    let acc_cfg = AcceleratorConfig::paper();
+    let rows = ctx.sample_rows;
+    let mut overlap = 0.0;
+    let mut a_cycles_combined = 0u64;
+    let mut a_cycles_base = 0u64;
+    let mut a_hits = 0u64;
+    let mut a_elems = 0u64;
+    // Q and V attachments of layer 0 (the standard LoRA points).
+    for kind in [MatKind::Wq, MatKind::Wv] {
+        let w = model.matrix_rows(0, kind, rows);
+        let mut rng = crate::util::rng::Rng::new(ctx.seed ^ 0xA0A0 ^ kind as u64);
+        let adaptor = LoraAdaptor::synthesize(&w, lora_cfg, model.dist, &mut rng);
+        overlap += adaptor.overlap_with(&w);
+
+        // Cycle accounting for the A columns (paper Fig. 5): the lane's
+        // final W_buff chunk of each row holds the last
+        // (buffer − rank) W columns followed by the row's rank A
+        // columns, so A streams against an RC warmed by W. The marginal
+        // cycles of the A columns = chunk(W-tail ∥ A) − chunk(W-tail);
+        // the comparison baseline is multiply-only on A alone.
+        let r = lora_cfg.rank;
+        let tail = acc_cfg.buffer_entries - r;
+        let x = crate::sim::accelerator::synth_input(rows, ctx.seed ^ 7);
+        for row in 0..w.rows {
+            let wrow = w.row(row);
+            let wtail = &wrow[wrow.len() - tail..];
+            let mut chunk: Vec<i8> = wtail.to_vec();
+            chunk.extend_from_slice(adaptor.a.row(row));
+            let with_a = crate::sim::lane::simulate_chunk(x[row], &chunk, &acc_cfg).stats;
+            let w_only = crate::sim::lane::simulate_chunk(x[row], wtail, &acc_cfg).stats;
+            let base_a =
+                crate::sim::baseline::simulate_chunk(x[row], adaptor.a.row(row), &acc_cfg).stats;
+            a_cycles_combined += with_a.cycles - w_only.cycles;
+            a_cycles_base += base_a.cycles - acc_cfg.buf_latency as u64; // marginal, no refill
+            a_hits += with_a.rc_hits - w_only.rc_hits;
+            a_elems += r as u64;
+        }
+    }
+    LoraRow {
+        model: cfg.name.clone(),
+        overlap: overlap / 2.0,
+        adaptor_speedup: a_cycles_base as f64 / a_cycles_combined.max(1) as f64,
+        a_reuse: a_hits as f64 / a_elems.max(1) as f64,
+    }
+}
+
+/// Measure the two fine-tuned benchmarks of Table I.
+pub fn measure(ctx: RunCtx) -> Vec<LoraRow> {
+    vec![
+        measure_one(
+            &ModelConfig::bert_base().with_lora(LoraConfig::default()),
+            ctx,
+        ),
+        measure_one(
+            &ModelConfig::distilbert().with_lora(LoraConfig::default()),
+            ctx,
+        ),
+    ]
+}
+
+pub fn generate(ctx: RunCtx) -> Table {
+    let mut t = Table::new(
+        "LoRA adaptor reuse via the combined W||A stream (Fig. 5)",
+        &["model", "A-in-W overlap", "A reuse rate", "adaptor speedup"],
+    );
+    for r in measure(ctx) {
+        t.row(vec![
+            r.model,
+            pct(r.overlap),
+            pct(r.a_reuse),
+            format!("{:.2}x", r.adaptor_speedup),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overlap_near_90pct() {
+        // Paper: "an average of 90% of the elements of each row of the
+        // adaptor matrix A repeats in the corresponding row in W".
+        for r in measure(RunCtx::default()) {
+            assert!((0.80..1.0).contains(&r.overlap), "{}: {}", r.model, r.overlap);
+        }
+    }
+
+    #[test]
+    fn adaptor_speedup_at_least_paper_value() {
+        // Paper: 1.82× (BERT/IMDb) and 1.81× (DistilBERT/Yelp). Our
+        // Fig. 5 implementation lands ≈2.5× because ≥90% A-in-W overlap
+        // makes the marginal A-element cost ≈1.2 cycles vs 3; the paper's
+        // lower figure suggests their accounting also charges cold chunks
+        // or the (x·A)·B stage (see EXPERIMENTS.md E5).
+        for r in measure(RunCtx::default()) {
+            assert!(
+                (1.5..2.9).contains(&r.adaptor_speedup),
+                "{}: {}",
+                r.model,
+                r.adaptor_speedup
+            );
+        }
+    }
+
+    #[test]
+    fn a_reuse_exceeds_standalone() {
+        // Sharing W's RC must make A's reuse at least as high as the
+        // overlap statistic implies.
+        for r in measure(RunCtx::default()) {
+            assert!(r.a_reuse > 0.6, "{}: a_reuse {}", r.model, r.a_reuse);
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! Report generators: one per figure/table of the paper's evaluation
+//! (DESIGN.md §5 experiment index), shared by the CLI (`axllm reproduce`),
+//! the benches, and the integration tests.
+//!
+//! Each generator returns [`Table`]s whose cells tests assert on, so the
+//! reproduction claims in EXPERIMENTS.md are themselves regression-tested.
+
+pub mod ablation;
+pub mod fig1;
+pub mod fig8;
+pub mod fig9;
+pub mod lora;
+pub mod power;
+pub mod shiftadd;
+
+pub use crate::util::table::Table;
+
+/// Shared run parameters for the report generators.
+#[derive(Clone, Copy, Debug)]
+pub struct RunCtx {
+    /// Weight-synthesis seed.
+    pub seed: u64,
+    /// Row-sampling bound for Llama-scale matrices (whole lane groups).
+    pub sample_rows: usize,
+}
+
+impl Default for RunCtx {
+    fn default() -> Self {
+        RunCtx {
+            seed: 42,
+            sample_rows: 64,
+        }
+    }
+}

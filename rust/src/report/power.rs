@@ -1,0 +1,175 @@
+//! E7+E8 — power/energy (§V "Power consumption") and area (§V "Area").
+//!
+//! Power: the paper reports "average power ... reduced from 0.94 W to
+//! 0.67 W" (−28%) alongside a 1.87× speedup. We anchor the baseline at
+//! 0.94 W via calibration (substitution S3) and report AxLLM's **energy
+//! normalized to the baseline runtime** — the quantity for which the
+//! "0.94 → 0.67, −28%" statement is self-consistent (see
+//! `energy::power` module docs and EXPERIMENTS.md).
+
+use crate::config::{AcceleratorConfig, ModelConfig};
+use crate::energy::{AreaModel, EnergyModel};
+use crate::model::Model;
+use crate::report::RunCtx;
+use crate::sim::{Accelerator, SimStats};
+use crate::util::table::{fnum, pct, Table};
+
+pub struct PowerResult {
+    pub base_stats: SimStats,
+    pub ax_stats: SimStats,
+    pub base_power_w: f64,
+    pub ax_iso_time_power_w: f64,
+    pub ax_true_power_w: f64,
+    pub energy_ratio: f64,
+    pub mult_energy_share_base: f64,
+}
+
+/// Simulate one DistilBERT layer on both datapaths and calibrate the
+/// energy model so the baseline dissipates the paper's 0.94 W.
+pub fn measure(ctx: RunCtx) -> PowerResult {
+    let cfg = AcceleratorConfig::paper();
+    let mut model_cfg = ModelConfig::distilbert();
+    model_cfg.n_layers = 1; // one layer, as in the paper's power experiment
+    let model = Model::new(model_cfg, ctx.seed);
+    let ax_stats = Accelerator::axllm(cfg)
+        .run_model(&model, ctx.sample_rows, ctx.seed)
+        .total;
+    let base_stats = Accelerator::baseline(cfg)
+        .run_model(&model, ctx.sample_rows, ctx.seed)
+        .total;
+    let em = EnergyModel::default().calibrate(&base_stats, 0.94, cfg.freq_ghz);
+    let base_e = em.energy(&base_stats);
+    let ax_e = em.energy(&ax_stats);
+    PowerResult {
+        base_stats,
+        ax_stats,
+        base_power_w: em.avg_power_w(&base_stats, cfg.freq_ghz),
+        ax_iso_time_power_w: em.iso_time_power_w(&ax_stats, base_stats.cycles, cfg.freq_ghz),
+        ax_true_power_w: em.avg_power_w(&ax_stats, cfg.freq_ghz),
+        energy_ratio: ax_e.total_pj / base_e.total_pj,
+        mult_energy_share_base: base_e.mult_pj / base_e.total_pj,
+    }
+}
+
+pub fn generate(ctx: RunCtx) -> Table {
+    let r = measure(ctx);
+    let mut t = Table::new(
+        "Power & energy — one DistilBERT layer (baseline anchored at the paper's 0.94 W)",
+        &["metric", "baseline", "AxLLM", "reduction"],
+    );
+    t.row(vec![
+        "energy-derived power @ baseline runtime (W)".into(),
+        fnum(r.base_power_w, 2),
+        fnum(r.ax_iso_time_power_w, 2),
+        pct(1.0 - r.energy_ratio),
+    ]);
+    t.row(vec![
+        "true average power over own runtime (W)".into(),
+        fnum(r.base_power_w, 2),
+        fnum(r.ax_true_power_w, 2),
+        pct(1.0 - r.ax_true_power_w / r.base_power_w),
+    ]);
+    t.row(vec![
+        "multiplications (M)".into(),
+        fnum(r.base_stats.mults as f64 / 1e6, 2),
+        fnum(r.ax_stats.mults as f64 / 1e6, 2),
+        pct(1.0 - r.ax_stats.mults as f64 / r.base_stats.mults as f64),
+    ]);
+    t.row(vec![
+        "cycles (M)".into(),
+        fnum(r.base_stats.cycles as f64 / 1e6, 2),
+        fnum(r.ax_stats.cycles as f64 / 1e6, 2),
+        pct(1.0 - r.ax_stats.cycles as f64 / r.base_stats.cycles as f64),
+    ]);
+    t
+}
+
+/// E8 — the area table.
+pub fn generate_area() -> Table {
+    let m = AreaModel::default();
+    let ax = m.area(&AcceleratorConfig::paper());
+    let base = m.area(&AcceleratorConfig::baseline());
+    let mut t = Table::new(
+        "Area — 64-lane AxLLM, 15nm-class gate equivalents (paper: 132k gates, 28/44/19/9%)",
+        &["component", "gates (k)", "share"],
+    );
+    for (name, gates) in [
+        ("input/output buffers", ax.buffers),
+        ("multipliers + accumulators", ax.mult_acc),
+        ("reuse cache", ax.rc),
+        ("controller (incl. queues)", ax.controller),
+    ] {
+        t.row(vec![
+            name.to_string(),
+            fnum(gates / 1e3, 1),
+            pct(gates / ax.total),
+        ]);
+    }
+    t.row(vec![
+        "TOTAL".into(),
+        fnum(ax.total / 1e3, 1),
+        pct(1.0),
+    ]);
+    t.row(vec![
+        "baseline (no reuse)".into(),
+        fnum(base.total / 1e3, 1),
+        "-".into(),
+    ]);
+    t.row(vec![
+        "reuse overhead".into(),
+        fnum(ax.reuse_overhead / 1e3, 1),
+        pct(ax.overhead_fraction()),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_anchored_at_paper_power() {
+        let r = measure(RunCtx::default());
+        assert!((r.base_power_w - 0.94).abs() < 1e-6);
+    }
+
+    #[test]
+    fn iso_time_power_near_067() {
+        // Paper: 0.94 W → 0.67 W.
+        let r = measure(RunCtx::default());
+        assert!(
+            (0.60..0.75).contains(&r.ax_iso_time_power_w),
+            "AxLLM iso-time power {}",
+            r.ax_iso_time_power_w
+        );
+    }
+
+    #[test]
+    fn energy_reduction_near_28pct() {
+        let r = measure(RunCtx::default());
+        let red = 1.0 - r.energy_ratio;
+        assert!((0.22..0.36).contains(&red), "energy reduction {red}");
+    }
+
+    #[test]
+    fn mult_energy_dominates_baseline() {
+        // "replacing power-hungry multipliers with more power-efficient
+        // buffer reuse" requires multipliers to dominate baseline energy.
+        let r = measure(RunCtx::default());
+        assert!(
+            r.mult_energy_share_base > 0.5,
+            "mult share {}",
+            r.mult_energy_share_base
+        );
+    }
+
+    #[test]
+    fn area_table_matches_paper_shape() {
+        let t = generate_area();
+        assert_eq!(t.n_rows(), 7);
+        let total: f64 = t.cell(4, 1).parse().unwrap();
+        assert!((125.0..139.0).contains(&total), "total {total}k");
+        let overhead: f64 = t.cell(6, 2).trim_end_matches('%').parse().unwrap();
+        assert!((19.0..27.0).contains(&overhead), "overhead {overhead}%");
+    }
+}

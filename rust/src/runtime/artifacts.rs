@@ -1,0 +1,191 @@
+//! Artifact registry: the manifest written by `python/compile/aot.py` and
+//! the set of compiled executables the coordinator serves from.
+
+use crate::model::MatKind;
+use crate::runtime::weights::TinyWeights;
+use crate::runtime::{Executable, Runtime};
+use crate::util::tomlite;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Parsed `artifacts/manifest.toml`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    pub batch: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_classes: usize,
+    pub seed: u64,
+    pub kernel_shapes: Vec<usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.toml");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = tomlite::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let geti = |key: &str| -> Result<usize> {
+            doc.get("tiny", key)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("manifest missing [tiny].{key}"))
+        };
+        let kernel_shapes = doc
+            .get("kernels", "shapes")
+            .and_then(|v| v.as_array())
+            .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+            .unwrap_or_default();
+        Ok(Manifest {
+            batch: geti("batch")?,
+            seq: geti("seq")?,
+            d_model: geti("d_model")?,
+            n_layers: geti("n_layers")?,
+            n_heads: geti("n_heads")?,
+            d_ff: geti("d_ff")?,
+            n_classes: geti("n_classes")?,
+            seed: geti("seed")? as u64,
+            kernel_shapes,
+        })
+    }
+
+    /// The rust-side model configuration matching the artifact.
+    pub fn model_config(&self) -> crate::config::ModelConfig {
+        crate::config::ModelConfig {
+            name: "Tiny (artifact)".into(),
+            d_model: self.d_model,
+            n_layers: self.n_layers,
+            n_heads: self.n_heads,
+            d_ff: self.d_ff,
+            lora: None,
+        }
+    }
+}
+
+/// All compiled artifacts the serving path uses, plus the persistent
+/// weight-parameter literals.
+///
+/// Weight codes travel as **runtime parameters** (not baked constants —
+/// xla_extension 0.5.1 mis-constant-folds the gather over baked weight
+/// tensors); the canonical order is per layer `wq wk wv wo ff1 ff2`, then
+/// the classifier head.
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    pub tiny_model: Executable,
+    pub tiny_layer: Executable,
+    pub kernels: Vec<(usize, Executable)>,
+    pub weights: TinyWeights,
+    /// Weight-offset literals for `tiny_model`, canonical order.
+    model_weight_lits: Vec<xla::Literal>,
+    /// Layer-0 weight-offset literals for `tiny_layer`.
+    layer_weight_lits: Vec<xla::Literal>,
+}
+
+fn offset_literal(m: &crate::quant::QuantMatrix) -> Result<xla::Literal> {
+    let off: Vec<i32> = m.data.iter().map(|&q| q as i32 + 127).collect();
+    Ok(xla::Literal::vec1(&off).reshape(&[m.rows as i64, m.cols as i64])?)
+}
+
+impl ArtifactSet {
+    /// Load + compile everything under `dir` (built by `make artifacts`).
+    pub fn load(rt: &Runtime, dir: &Path) -> Result<ArtifactSet> {
+        let manifest = Manifest::load(dir)?;
+        let tiny_model = rt.load_hlo_text(&dir.join("tiny_model.hlo.txt"))?;
+        let tiny_layer = rt.load_hlo_text(&dir.join("tiny_layer.hlo.txt"))?;
+        let mut kernels = Vec::new();
+        for &r in &manifest.kernel_shapes {
+            let exe = rt.load_hlo_text(&dir.join(format!("reuse_matmul_{r}.hlo.txt")))?;
+            kernels.push((r, exe));
+        }
+        let weights = crate::runtime::weights::load_weights_bin(&dir.join("tiny_weights.bin"))?;
+        let mut model_weight_lits = Vec::new();
+        for layer in &weights.layers {
+            for kind in MatKind::ALL {
+                model_weight_lits.push(offset_literal(layer.get(kind))?);
+            }
+        }
+        model_weight_lits.push(offset_literal(&weights.head)?);
+        let mut layer_weight_lits = Vec::new();
+        for kind in MatKind::ALL {
+            layer_weight_lits.push(offset_literal(weights.layers[0].get(kind))?);
+        }
+        Ok(ArtifactSet {
+            dir: dir.to_path_buf(),
+            manifest,
+            tiny_model,
+            tiny_layer,
+            kernels,
+            weights,
+            model_weight_lits,
+            layer_weight_lits,
+        })
+    }
+
+    /// Run the end-to-end tiny classifier: `x` is `[batch, seq, d_model]`
+    /// row-major f32; returns `[batch, n_classes]` logits.
+    pub fn run_tiny_model(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        anyhow::ensure!(x.len() == m.batch * m.seq * m.d_model, "bad input size");
+        let x_lit = xla::Literal::vec1(x).reshape(&[
+            m.batch as i64,
+            m.seq as i64,
+            m.d_model as i64,
+        ])?;
+        let mut args: Vec<&xla::Literal> = vec![&x_lit];
+        args.extend(self.model_weight_lits.iter());
+        let out = self.tiny_model.run_refs(&args)?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Run one transformer layer (layer 0): `x` is `[seq, d_model]` f32.
+    pub fn run_tiny_layer(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        anyhow::ensure!(x.len() == m.seq * m.d_model, "bad input size");
+        let x_lit = xla::Literal::vec1(x).reshape(&[m.seq as i64, m.d_model as i64])?;
+        let mut args: Vec<&xla::Literal> = vec![&x_lit];
+        args.extend(self.layer_weight_lits.iter());
+        let out = self.tiny_layer.run_refs(&args)?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Default artifact directory: `$AXLLM_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("AXLLM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_generated_format() {
+        let dir = std::env::temp_dir().join("axllm_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.toml"),
+            "[tiny]\nbatch = 4\nseq = 32\nd_model = 128\nn_layers = 2\nn_heads = 4\nd_ff = 256\nn_classes = 4\nseed = 20250710\n\n[kernels]\nshapes = [128, 768]\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.batch, 4);
+        assert_eq!(m.d_model, 128);
+        assert_eq!(m.kernel_shapes, vec![128, 768]);
+        let cfg = m.model_config();
+        assert_eq!(cfg.n_layers, 2);
+        assert_eq!(cfg.d_head(), 32);
+    }
+
+    #[test]
+    fn manifest_missing_key_errors() {
+        let dir = std::env::temp_dir().join("axllm_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.toml"), "[tiny]\nbatch = 4\n").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

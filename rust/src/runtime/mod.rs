@@ -1,0 +1,113 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts and execute them
+//! from Rust — the request path never touches Python.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. All artifacts were lowered with
+//! `return_tuple=True`, so results unwrap with `to_tuple1`.
+
+pub mod artifacts;
+pub mod weights;
+
+pub use artifacts::{ArtifactSet, Manifest};
+pub use weights::{load_weights_bin, TinyWeights};
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled executable bound to the shared PJRT CPU client.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+/// The PJRT runtime: one CPU client, many compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let path_str = path
+            .to_str()
+            .context("artifact path is not valid UTF-8")?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with literal inputs; returns the unwrapped 1-tuple result.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let refs: Vec<&xla::Literal> = inputs.iter().collect();
+        self.run_refs(&refs)
+    }
+
+    /// Execute with borrowed literal inputs (avoids cloning persistent
+    /// weight literals on the hot path).
+    pub fn run_refs(&self, inputs: &[&xla::Literal]) -> Result<xla::Literal> {
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // Artifacts are lowered with return_tuple=True.
+        Ok(lit.to_tuple1()?)
+    }
+
+    /// Convenience: f32 tensors in (row-major data + dims) → f32 vec out.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        let lits = inputs
+            .iter()
+            .map(|(data, dims)| Ok(xla::Literal::vec1(data).reshape(dims)?))
+            .collect::<Result<Vec<_>>>()?;
+        let out = self.run(&lits)?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Convenience: i32 tensors in → i32 vec out.
+    pub fn run_i32(&self, inputs: &[(&[i32], &[i64])]) -> Result<Vec<i32>> {
+        let lits = inputs
+            .iter()
+            .map(|(data, dims)| Ok(xla::Literal::vec1(data).reshape(dims)?))
+            .collect::<Result<Vec<_>>>()?;
+        let out = self.run(&lits)?;
+        Ok(out.to_vec::<i32>()?)
+    }
+}
+
+// PJRT-dependent tests live in rust/tests/integration_runtime.rs so
+// `cargo test --lib` stays independent of the artifacts directory.

@@ -1,0 +1,191 @@
+//! Parser for `artifacts/tiny_weights.bin` — the quantized weights the AOT
+//! model baked in, exported so the Rust functional path can run the same
+//! model and cross-check the PJRT executable.
+//!
+//! Layout (little endian), written by `python/compile/model.py
+//! export_weights_bin`:
+//!
+//! ```text
+//! u32 magic "AXLM", u32 version, u32 n_layers, u32 d_model, u32 n_heads,
+//! u32 d_ff, u32 n_classes
+//! repeated matrix records (per layer: wq wk wv wo ff1 ff2; then head):
+//!   u32 rows, u32 cols, f32 scale, rows*cols i8 codes
+//! ```
+
+use crate::model::{LayerWeights, MatKind};
+use crate::quant::{QuantMatrix, QuantParams};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+const MAGIC: u32 = 0x41584C4D;
+
+/// The tiny model's weights, layer by layer, plus the classifier head.
+#[derive(Clone, Debug)]
+pub struct TinyWeights {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_classes: usize,
+    pub layers: Vec<LayerWeights>,
+    pub head: QuantMatrix,
+}
+
+struct Reader<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn u32(&mut self) -> Result<u32> {
+        let b = self
+            .data
+            .get(self.pos..self.pos + 4)
+            .ok_or_else(|| anyhow!("truncated weights file at {}", self.pos))?;
+        self.pos += 4;
+        Ok(u32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn codes(&mut self, n: usize) -> Result<&'a [u8]> {
+        let b = self
+            .data
+            .get(self.pos..self.pos + n)
+            .ok_or_else(|| anyhow!("truncated codes at {}", self.pos))?;
+        self.pos += n;
+        Ok(b)
+    }
+
+    fn matrix(&mut self) -> Result<QuantMatrix> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let scale = self.f32()?;
+        let raw = self.codes(rows * cols)?;
+        let data: Vec<i8> = raw.iter().map(|&b| b as i8).collect();
+        Ok(QuantMatrix::from_q(
+            rows,
+            cols,
+            data,
+            QuantParams { scale, bits: 8 },
+        ))
+    }
+}
+
+/// Parse the weight binary.
+pub fn load_weights_bin(path: &Path) -> Result<TinyWeights> {
+    let data =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut r = Reader {
+        data: &data,
+        pos: 0,
+    };
+    let magic = r.u32()?;
+    if magic != MAGIC {
+        return Err(anyhow!("bad magic {magic:#x} (expected AXLM)"));
+    }
+    let version = r.u32()?;
+    if version != 1 {
+        return Err(anyhow!("unsupported weights version {version}"));
+    }
+    let n_layers = r.u32()? as usize;
+    let d_model = r.u32()? as usize;
+    let n_heads = r.u32()? as usize;
+    let d_ff = r.u32()? as usize;
+    let n_classes = r.u32()? as usize;
+
+    let mut layers = Vec::with_capacity(n_layers);
+    for layer_idx in 0..n_layers {
+        let mut mats = Vec::with_capacity(6);
+        for kind in MatKind::ALL {
+            let m = r.matrix()?;
+            mats.push((kind, m));
+        }
+        layers.push(LayerWeights {
+            layer_idx,
+            mats,
+            lora_q: None,
+            lora_v: None,
+        });
+    }
+    let head = r.matrix()?;
+    if r.pos != data.len() {
+        return Err(anyhow!(
+            "trailing bytes in weights file: {} of {}",
+            data.len() - r.pos,
+            data.len()
+        ));
+    }
+    Ok(TinyWeights {
+        n_layers,
+        d_model,
+        n_heads,
+        d_ff,
+        n_classes,
+        layers,
+        head,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_sample(path: &Path) {
+        // 1 layer of 2×2 matrices (shapes unrealistic but format-valid)
+        // + 2×1 head.
+        let mut bytes = Vec::new();
+        for v in [MAGIC, 1u32, 1, 2, 1, 2, 1] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for _ in 0..6 {
+            bytes.extend_from_slice(&2u32.to_le_bytes());
+            bytes.extend_from_slice(&2u32.to_le_bytes());
+            bytes.extend_from_slice(&0.5f32.to_le_bytes());
+            bytes.extend_from_slice(&[1i8 as u8, (-2i8) as u8, 3, 0]);
+        }
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1.0f32.to_le_bytes());
+        bytes.extend_from_slice(&[(-1i8) as u8, 5]);
+        std::fs::write(path, bytes).unwrap();
+    }
+
+    #[test]
+    fn parses_valid_file() {
+        let dir = std::env::temp_dir().join("axllm_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        write_sample(&path);
+        let w = load_weights_bin(&path).unwrap();
+        assert_eq!(w.n_layers, 1);
+        assert_eq!(w.layers[0].mats.len(), 6);
+        let wq = w.layers[0].get(MatKind::Wq);
+        assert_eq!(wq.data, vec![1, -2, 3, 0]);
+        assert_eq!(wq.params.scale, 0.5);
+        assert_eq!(w.head.data, vec![-1, 5]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("axllm_weights_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        std::fs::write(&path, [0u8; 64]).unwrap();
+        let err = load_weights_bin(&path).unwrap_err();
+        assert!(err.to_string().contains("bad magic"));
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let dir = std::env::temp_dir().join("axllm_weights_trunc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        write_sample(&path);
+        let data = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &data[..data.len() - 1]).unwrap();
+        assert!(load_weights_bin(&path).is_err());
+    }
+}

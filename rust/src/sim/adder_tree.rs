@@ -1,0 +1,122 @@
+//! The adder tree accumulating per-lane partial sums into the global
+//! output buffer (paper Fig. 3).
+//!
+//! Lane i produces `x[i]·W[i,j]` for every column j of the current round;
+//! the tree sums across lanes element-wise. It is a pipelined binary tree
+//! of depth ⌈log₂ L⌉ draining `slices` columns per cycle (one output per
+//! Out_buff slice port).
+
+use crate::sim::SimStats;
+
+/// Accumulate `lane_partials` (one vector per active lane, equal lengths)
+/// into `acc`, updating `stats` with the add count and drain cycles.
+///
+/// `overlap_drain`: with double-buffered output buffers the drain of round
+/// k overlaps the compute of round k+1, so only the pipeline depth shows
+/// up in the critical path; without it the full drain serializes.
+pub fn accumulate(
+    acc: &mut [i32],
+    lane_partials: &[Vec<i32>],
+    slices: usize,
+    overlap_drain: bool,
+    stats: &mut SimStats,
+) {
+    if lane_partials.is_empty() {
+        return;
+    }
+    let width = lane_partials[0].len();
+    assert!(
+        lane_partials.iter().all(|p| p.len() == width),
+        "ragged lane partials"
+    );
+    assert!(acc.len() >= width);
+
+    let lanes = lane_partials.len();
+    for j in 0..width {
+        let mut s = 0i64;
+        for p in lane_partials {
+            s += p[j] as i64;
+        }
+        // Tree adds: lanes-1 per column, +1 accumulate into the global
+        // output buffer (across lane groups).
+        acc[j] = acc[j].wrapping_add(s as i32);
+        stats.adds += lanes as u64; // (lanes-1) tree + 1 global accumulate
+    }
+
+    let depth = (lanes.max(2) as f64).log2().ceil() as u64;
+    let drain = (width as u64).div_ceil(slices as u64);
+    stats.cycles += if overlap_drain { depth } else { drain + depth };
+}
+
+/// Account the adder-tree cost of one lane group without materializing
+/// per-lane partial vectors (the accelerator accumulates in place):
+/// `lanes` adds per column (tree + global accumulate) plus the drain
+/// cycles of [`accumulate`].
+pub fn drain_cost(
+    lanes: usize,
+    width: usize,
+    slices: usize,
+    overlap_drain: bool,
+    stats: &mut SimStats,
+) {
+    if lanes == 0 || width == 0 {
+        return;
+    }
+    stats.adds += (lanes * width) as u64;
+    let depth = (lanes.max(2) as f64).log2().ceil() as u64;
+    let drain = (width as u64).div_ceil(slices as u64);
+    stats.cycles += if overlap_drain { depth } else { drain + depth };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sums_across_lanes() {
+        let mut acc = vec![0i32; 4];
+        let parts = vec![vec![1, 2, 3, 4], vec![10, 20, 30, 40], vec![-1, -2, -3, -4]];
+        let mut stats = SimStats::default();
+        accumulate(&mut acc, &parts, 4, true, &mut stats);
+        assert_eq!(acc, vec![10, 20, 30, 40]);
+        assert_eq!(stats.adds, 12);
+    }
+
+    #[test]
+    fn accumulates_into_existing_values() {
+        let mut acc = vec![100i32, 200];
+        let parts = vec![vec![1, 1]];
+        let mut stats = SimStats::default();
+        accumulate(&mut acc, &parts, 1, true, &mut stats);
+        assert_eq!(acc, vec![101, 201]);
+    }
+
+    #[test]
+    fn drain_cycles_depend_on_overlap() {
+        let parts = vec![vec![0i32; 256]; 64];
+        let mut acc = vec![0i32; 256];
+        let mut s_overlap = SimStats::default();
+        accumulate(&mut acc, &parts, 4, true, &mut s_overlap);
+        let mut s_serial = SimStats::default();
+        accumulate(&mut acc, &parts, 4, false, &mut s_serial);
+        assert_eq!(s_overlap.cycles, 6); // log2(64)
+        assert_eq!(s_serial.cycles, 64 + 6); // 256/4 + depth
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_inputs_rejected() {
+        let mut acc = vec![0i32; 2];
+        let parts = vec![vec![1, 2], vec![3]];
+        accumulate(&mut acc, &parts, 1, true, &mut SimStats::default());
+    }
+
+    #[test]
+    fn empty_lane_set_is_noop() {
+        let mut acc = vec![5i32];
+        let mut stats = SimStats::default();
+        accumulate(&mut acc, &[], 4, true, &mut stats);
+        assert_eq!(acc, vec![5]);
+        assert_eq!(stats.cycles, 0);
+    }
+}

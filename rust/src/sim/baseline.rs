@@ -1,0 +1,57 @@
+//! The Fig. 9 normalization baseline: *"the AxLLM architecture with just
+//! multipliers (and not the reuse buffer)"* — identical lane/buffer
+//! organization, but every weight element takes the compute path.
+
+use crate::config::AcceleratorConfig;
+use crate::sim::{ChunkResult, SimStats};
+
+/// Simulate one (input element × weight chunk) pass through a multiply-only
+/// lane: every element occupies the multiplier for `mult_latency` cycles.
+pub fn simulate_chunk(x: i8, weights: &[i8], cfg: &AcceleratorConfig) -> ChunkResult {
+    assert!(
+        weights.len() <= cfg.buffer_entries,
+        "chunk ({}) exceeds W_buff ({})",
+        weights.len(),
+        cfg.buffer_entries
+    );
+    let mut stats = SimStats {
+        x_loads: 1,
+        ..Default::default()
+    };
+    let mut partials = Vec::with_capacity(weights.len());
+    for &w in weights {
+        stats.w_reads += 1;
+        stats.elements += 1;
+        stats.mults += 1;
+        stats.out_writes += 1;
+        partials.push(x as i32 * w as i32);
+    }
+    stats.cycles = cfg.buf_latency as u64 + weights.len() as u64 * cfg.mult_latency as u64;
+    ChunkResult { stats, partials }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_element_multiplied() {
+        let cfg = AcceleratorConfig::baseline();
+        let weights: Vec<i8> = vec![5, 5, 5, -5, 0];
+        let r = simulate_chunk(3, &weights, &cfg);
+        assert_eq!(r.stats.mults, 5);
+        assert_eq!(r.stats.rc_hits, 0);
+        assert_eq!(r.stats.cycles, 1 + 5 * 3);
+        assert_eq!(r.partials, vec![15, 15, 15, -15, 0]);
+    }
+
+    #[test]
+    fn matches_reuse_lane_functionally() {
+        let cfg = AcceleratorConfig::default();
+        let weights: Vec<i8> = (0..100).map(|i| ((i * 37) % 255 - 127) as i8).collect();
+        let b = simulate_chunk(-9, &weights, &cfg);
+        let a = crate::sim::lane::simulate_chunk(-9, &weights, &cfg);
+        assert_eq!(a.partials, b.partials);
+        assert!(a.stats.cycles <= b.stats.cycles);
+    }
+}

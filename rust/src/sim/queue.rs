@@ -1,0 +1,167 @@
+//! Fixed-capacity FIFO with credit-based backpressure (paper §IV:
+//! *"A credit-based back-pressure flow control mechanism is used between
+//! upstream and downstream buffers (e.g., between W_buff and the RC) to
+//! prevent writes to full queues"*).
+//!
+//! The upstream holds one credit per free slot; `try_push` models a
+//! credit-gated write (fails ⇒ the producer stalls this cycle).
+
+/// Bounded FIFO. Capacity is fixed at construction (queue depth S).
+#[derive(Clone, Debug)]
+pub struct Queue<T> {
+    items: std::collections::VecDeque<T>,
+    cap: usize,
+}
+
+impl<T> Queue<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "queue capacity must be ≥ 1");
+        Queue {
+            items: std::collections::VecDeque::with_capacity(cap),
+            cap,
+        }
+    }
+
+    /// Remaining credits (free slots).
+    #[inline]
+    pub fn credits(&self) -> usize {
+        self.cap - self.items.len()
+    }
+
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.items.len() == self.cap
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Credit-gated push: `false` means no credit — the producer must
+    /// stall and retry next cycle.
+    #[inline]
+    pub fn try_push(&mut self, item: T) -> bool {
+        if self.is_full() {
+            false
+        } else {
+            self.items.push_back(item);
+            true
+        }
+    }
+
+    #[inline]
+    pub fn pop(&mut self) -> Option<T> {
+        self.items.pop_front()
+    }
+
+    #[inline]
+    pub fn peek(&self) -> Option<&T> {
+        self.items.front()
+    }
+
+    pub fn clear(&mut self) {
+        self.items.clear();
+    }
+}
+
+/// Round-robin arbiter over `n` requesters: remembers the last grant and
+/// starts the next scan after it (paper §IV: *"inputs are read in a
+/// round-robin fashion"*).
+#[derive(Clone, Debug)]
+pub struct RoundRobin {
+    n: usize,
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        RoundRobin { n, next: 0 }
+    }
+
+    /// Grant to the first index (in round-robin order) for which `ready`
+    /// returns true; advances the pointer past the grant.
+    pub fn grant<F: FnMut(usize) -> bool>(&mut self, mut ready: F) -> Option<usize> {
+        for k in 0..self.n {
+            let i = (self.next + k) % self.n;
+            if ready(i) {
+                self.next = (i + 1) % self.n;
+                return Some(i);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let mut q = Queue::new(3);
+        assert!(q.try_push(1));
+        assert!(q.try_push(2));
+        assert!(q.try_push(3));
+        assert!(!q.try_push(4), "full queue must refuse");
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert!(q.try_push(4));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), Some(4));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn credits_track_occupancy() {
+        let mut q = Queue::new(4);
+        assert_eq!(q.credits(), 4);
+        q.try_push(());
+        q.try_push(());
+        assert_eq!(q.credits(), 2);
+        q.pop();
+        assert_eq!(q.credits(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity must be")]
+    fn zero_capacity_rejected() {
+        let _ = Queue::<u8>::new(0);
+    }
+
+    #[test]
+    fn round_robin_is_fair() {
+        let mut rr = RoundRobin::new(3);
+        // All always ready → grants cycle 0,1,2,0,1,2.
+        let grants: Vec<usize> = (0..6).map(|_| rr.grant(|_| true).unwrap()).collect();
+        assert_eq!(grants, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_skips_not_ready() {
+        let mut rr = RoundRobin::new(3);
+        assert_eq!(rr.grant(|i| i == 2), Some(2));
+        // pointer now past 2 → next scan starts at 0
+        assert_eq!(rr.grant(|_| true), Some(0));
+        assert_eq!(rr.grant(|_| false), None);
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let mut q = Queue::new(2);
+        q.try_push(7);
+        assert_eq!(q.peek(), Some(&7));
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop(), Some(7));
+    }
+}

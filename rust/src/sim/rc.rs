@@ -1,0 +1,220 @@
+//! The Result Cache (RC) — the key enabler of computation reuse (paper
+//! §III.b–c).
+//!
+//! One RC per lane, `2^(q-1)` entries after sign folding (128 at 8-bit).
+//! Entry `u` caches the product `X · u` of the lane's stationary input
+//! element with folded weight magnitude `u`. Each entry carries a state:
+//!
+//! - `Invalid` — value not yet seen for the current input element;
+//! - `Pending` — first occurrence issued to the multiplier, result not yet
+//!   written back (a repeat arriving now is the §IV read-after-compute
+//!   hazard);
+//! - `Valid(p)` — product available for 1-cycle reuse.
+//!
+//! Clearing between input elements resets all valid flags; we use an epoch
+//! counter so the clear is O(1), matching the paper's "resetting the valid
+//! flags" without a costly sweep in the simulator's hot loop.
+
+/// Entry state as seen by the datapath.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RcState {
+    Invalid,
+    Pending,
+    Valid(i32),
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Slot {
+    epoch: u32,
+    pending: bool,
+    product: i32,
+}
+
+/// Epoch-cleared result cache.
+#[derive(Clone, Debug)]
+pub struct ResultCache {
+    slots: Vec<Slot>,
+    epoch: u32,
+    /// Reads and writes this epoch (activity factors).
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl ResultCache {
+    pub fn new(entries: usize) -> Self {
+        assert!(entries > 0 && entries <= 256);
+        ResultCache {
+            slots: vec![
+                Slot {
+                    epoch: 0,
+                    pending: false,
+                    product: 0,
+                };
+                entries
+            ],
+            epoch: 1,
+            reads: 0,
+            writes: 0,
+        }
+    }
+
+    pub fn entries(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// State of entry `u` for the current input element. The valid-flag
+    /// check itself is a flag-register read — not counted as a buffer
+    /// access (paper §III.c "lightweight logic block").
+    #[inline]
+    pub fn state(&self, u: u8) -> RcState {
+        let s = &self.slots[u as usize];
+        if s.epoch != self.epoch {
+            RcState::Invalid
+        } else if s.pending {
+            RcState::Pending
+        } else {
+            RcState::Valid(s.product)
+        }
+    }
+
+    /// Mark `u` as issued to the multiplier.
+    #[inline]
+    pub fn mark_pending(&mut self, u: u8) {
+        let e = self.epoch;
+        let s = &mut self.slots[u as usize];
+        debug_assert!(s.epoch != e, "mark_pending on live entry");
+        s.epoch = e;
+        s.pending = true;
+    }
+
+    /// Multiplier writeback: fill the entry and set the valid flag.
+    #[inline]
+    pub fn fill(&mut self, u: u8, product: i32) {
+        let e = self.epoch;
+        let s = &mut self.slots[u as usize];
+        debug_assert!(
+            s.epoch == e && s.pending,
+            "fill must follow mark_pending in the same epoch"
+        );
+        s.pending = false;
+        s.product = product;
+        self.writes += 1;
+    }
+
+    /// Reuse read of a valid entry (1-cycle buffer access).
+    #[inline]
+    pub fn read(&mut self, u: u8) -> i32 {
+        match self.state(u) {
+            RcState::Valid(p) => {
+                self.reads += 1;
+                p
+            }
+            other => panic!("RC read of non-valid entry {u}: {other:?}"),
+        }
+    }
+
+    /// O(1) clear for the next input element ("The RC is also cleared (by
+    /// resetting the valid flags) and the algorithm continues with the
+    /// next inputs", §III.c).
+    #[inline]
+    pub fn clear(&mut self) {
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // Epoch wrapped: physically reset so stale epochs cannot alias.
+            for s in &mut self.slots {
+                s.epoch = 0;
+                s.pending = false;
+            }
+            self.epoch = 1;
+        }
+    }
+
+    /// Count of currently-valid entries (diagnostics/tests).
+    pub fn valid_count(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| s.epoch == self.epoch && !s.pending)
+            .count()
+    }
+}
+
+/// Map a folded value to its RC slice under range partitioning (paper §IV:
+/// *"input slices 1 and 2 may fetch weights with identical or close values
+/// at the same time, both requiring the partial result stored in RC slice
+/// 2"* — close values share a slice ⇒ contiguous value ranges).
+#[inline]
+pub fn rc_slice_of(u: u8, entries: usize, slices: usize) -> usize {
+    debug_assert!((u as usize) < entries);
+    u as usize * slices / entries
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_invalid_pending_valid() {
+        let mut rc = ResultCache::new(128);
+        assert_eq!(rc.state(5), RcState::Invalid);
+        rc.mark_pending(5);
+        assert_eq!(rc.state(5), RcState::Pending);
+        rc.fill(5, -350);
+        assert_eq!(rc.state(5), RcState::Valid(-350));
+        assert_eq!(rc.read(5), -350);
+        assert_eq!(rc.reads, 1);
+        assert_eq!(rc.writes, 1);
+    }
+
+    #[test]
+    fn clear_invalidates_everything() {
+        let mut rc = ResultCache::new(16);
+        for u in 0..16u8 {
+            rc.mark_pending(u);
+            rc.fill(u, u as i32 * 10);
+        }
+        assert_eq!(rc.valid_count(), 16);
+        rc.clear();
+        assert_eq!(rc.valid_count(), 0);
+        for u in 0..16u8 {
+            assert_eq!(rc.state(u), RcState::Invalid);
+        }
+    }
+
+    #[test]
+    fn epoch_wrap_resets_cleanly() {
+        let mut rc = ResultCache::new(4);
+        rc.mark_pending(1);
+        rc.fill(1, 42);
+        // Force many clears past the wrap point.
+        rc.epoch = u32::MAX - 1;
+        rc.clear(); // → MAX
+        rc.clear(); // wraps → physical reset, epoch = 1
+        for u in 0..4u8 {
+            assert_eq!(rc.state(u), RcState::Invalid);
+        }
+        rc.mark_pending(2);
+        rc.fill(2, 7);
+        assert_eq!(rc.state(2), RcState::Valid(7));
+    }
+
+    #[test]
+    #[should_panic(expected = "RC read of non-valid entry")]
+    fn read_invalid_panics() {
+        let mut rc = ResultCache::new(8);
+        rc.read(3);
+    }
+
+    #[test]
+    fn range_partitioning_keeps_close_values_together() {
+        // 128 entries, 4 slices → values 0..31 → slice 0, ..., 96..127 → 3.
+        assert_eq!(rc_slice_of(0, 128, 4), 0);
+        assert_eq!(rc_slice_of(31, 128, 4), 0);
+        assert_eq!(rc_slice_of(32, 128, 4), 1);
+        assert_eq!(rc_slice_of(95, 128, 4), 2);
+        assert_eq!(rc_slice_of(127, 128, 4), 3);
+        // Single slice: everything maps to 0.
+        for u in 0..128u8 {
+            assert_eq!(rc_slice_of(u, 128, 1), 0);
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Simulation counters: cycles, operation counts, stall taxonomy, and the
+//! per-component activity factors the energy model consumes.
+
+/// Counters accumulated by every lane/accelerator simulation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SimStats {
+    /// Simulated clock cycles.
+    pub cycles: u64,
+    /// Weight elements processed.
+    pub elements: u64,
+    /// Multiplications actually performed (compute-path traversals).
+    pub mults: u64,
+    /// Reuse-path traversals (RC hits).
+    pub rc_hits: u64,
+    /// RC fills (valid-flag sets; equals compute-path traversals that
+    /// cached their result).
+    pub rc_writes: u64,
+    /// RC reads (hit lookups; the valid-flag check itself is free — a
+    /// flag-register file, paper §III.c "lightweight logic block").
+    pub rc_reads: u64,
+    /// Cycles stalled on the read-after-compute hazard (repeat of a value
+    /// whose multiply is still in flight, §IV).
+    pub hazard_stalls: u64,
+    /// Cycles a fetch stalled because a collision queue was full
+    /// (credit-based backpressure, §IV).
+    pub backpressure_stalls: u64,
+    /// Requests that found their RC slice busy with another slice's
+    /// request in the same cycle (collision serialization, §IV).
+    pub collisions: u64,
+    /// W_buff reads.
+    pub w_reads: u64,
+    /// Out_buff writes (partial-sum commits).
+    pub out_writes: u64,
+    /// Queue push+pop pairs through the collision/output queues.
+    pub queue_ops: u64,
+    /// Adder-tree additions (accumulation across lanes).
+    pub adds: u64,
+    /// Input-register loads (one per (input element, round)).
+    pub x_loads: u64,
+}
+
+impl SimStats {
+    /// Fraction of products served by the Result Cache.
+    pub fn reuse_rate(&self) -> f64 {
+        if self.elements == 0 {
+            0.0
+        } else {
+            self.rc_hits as f64 / self.elements as f64
+        }
+    }
+
+    /// Fraction of cycles lost to RAW hazards (the paper claims <2%).
+    pub fn hazard_rate(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.hazard_stalls as f64 / self.cycles as f64
+        }
+    }
+
+    /// Multiplication reduction vs. performing every product.
+    pub fn mult_reduction(&self) -> f64 {
+        if self.elements == 0 {
+            0.0
+        } else {
+            1.0 - self.mults as f64 / self.elements as f64
+        }
+    }
+
+    /// Merge counters (cycles add — use [`SimStats::merge_parallel`] for
+    /// lanes that run concurrently).
+    pub fn merge(&mut self, o: &SimStats) {
+        self.cycles += o.cycles;
+        self.merge_activity(o);
+    }
+
+    /// Merge counters from a concurrent unit: cycles take the max (lanes
+    /// run in lock-step; the slowest one gates the group), activity adds.
+    pub fn merge_parallel(&mut self, o: &SimStats) {
+        self.cycles = self.cycles.max(o.cycles);
+        self.merge_activity(o);
+    }
+
+    fn merge_activity(&mut self, o: &SimStats) {
+        self.elements += o.elements;
+        self.mults += o.mults;
+        self.rc_hits += o.rc_hits;
+        self.rc_writes += o.rc_writes;
+        self.rc_reads += o.rc_reads;
+        self.hazard_stalls += o.hazard_stalls;
+        self.backpressure_stalls += o.backpressure_stalls;
+        self.collisions += o.collisions;
+        self.w_reads += o.w_reads;
+        self.out_writes += o.out_writes;
+        self.queue_ops += o.queue_ops;
+        self.adds += o.adds;
+        self.x_loads += o.x_loads;
+    }
+
+    /// Scale all counters by an integer factor (row-sampled measurements
+    /// extrapolating to the full matrix).
+    pub fn scaled(&self, num: u64, den: u64) -> SimStats {
+        let s = |v: u64| (v as u128 * num as u128 / den as u128) as u64;
+        SimStats {
+            cycles: s(self.cycles),
+            elements: s(self.elements),
+            mults: s(self.mults),
+            rc_hits: s(self.rc_hits),
+            rc_writes: s(self.rc_writes),
+            rc_reads: s(self.rc_reads),
+            hazard_stalls: s(self.hazard_stalls),
+            backpressure_stalls: s(self.backpressure_stalls),
+            collisions: s(self.collisions),
+            w_reads: s(self.w_reads),
+            out_writes: s(self.out_writes),
+            queue_ops: s(self.queue_ops),
+            adds: s(self.adds),
+            x_loads: s(self.x_loads),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SimStats {
+        SimStats {
+            cycles: 100,
+            elements: 80,
+            mults: 24,
+            rc_hits: 56,
+            rc_writes: 24,
+            rc_reads: 56,
+            hazard_stalls: 1,
+            w_reads: 80,
+            out_writes: 80,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn rates() {
+        let s = sample();
+        assert!((s.reuse_rate() - 0.7).abs() < 1e-12);
+        assert!((s.mult_reduction() - 0.7).abs() < 1e-12);
+        assert!((s.hazard_rate() - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_rates_are_zero() {
+        let s = SimStats::default();
+        assert_eq!(s.reuse_rate(), 0.0);
+        assert_eq!(s.hazard_rate(), 0.0);
+        assert_eq!(s.mult_reduction(), 0.0);
+    }
+
+    #[test]
+    fn merge_serial_adds_cycles() {
+        let mut a = sample();
+        a.merge(&sample());
+        assert_eq!(a.cycles, 200);
+        assert_eq!(a.elements, 160);
+    }
+
+    #[test]
+    fn merge_parallel_maxes_cycles() {
+        let mut a = sample();
+        let mut b = sample();
+        b.cycles = 250;
+        a.merge_parallel(&b);
+        assert_eq!(a.cycles, 250);
+        assert_eq!(a.mults, 48);
+    }
+
+    #[test]
+    fn scaled_is_proportional() {
+        let s = sample().scaled(3, 1);
+        assert_eq!(s.cycles, 300);
+        assert_eq!(s.rc_hits, 168);
+        let h = sample().scaled(1, 2);
+        assert_eq!(h.elements, 40);
+    }
+}

@@ -1,0 +1,215 @@
+//! Micro-benchmark harness (criterion is not available offline).
+//!
+//! `harness = false` bench targets call [`Bench::new`] and register
+//! closures; each is warmed up, then timed over enough iterations to pass a
+//! minimum measurement window, and median/mean/σ are reported in a
+//! criterion-like format. Results can also be dumped as CSV for the
+//! EXPERIMENTS.md §Perf log.
+
+use std::time::{Duration, Instant};
+
+/// One measured benchmark result.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub median: Duration,
+    pub mean: Duration,
+    pub stddev: Duration,
+    /// Optional throughput denominator (elements per iteration).
+    pub elements: Option<u64>,
+}
+
+impl Measurement {
+    /// Elements per second, if a throughput denominator was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements
+            .map(|e| e as f64 / self.median.as_secs_f64())
+    }
+}
+
+/// Benchmark runner configuration.
+pub struct Bench {
+    warmup: Duration,
+    window: Duration,
+    min_iters: u64,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn human(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // AXLLM_BENCH_FAST=1 shrinks the window so `cargo bench` in CI
+        // finishes quickly; default window targets stable medians.
+        let fast = std::env::var("AXLLM_BENCH_FAST").is_ok();
+        Bench {
+            warmup: if fast {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(300)
+            },
+            window: if fast {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_secs(1)
+            },
+            min_iters: 5,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, reporting elements/sec using `elements` per iteration.
+    pub fn run_throughput<F: FnMut()>(&mut self, name: &str, elements: u64, f: F) {
+        self.run_inner(name, Some(elements), f);
+    }
+
+    /// Time `f`.
+    pub fn run<F: FnMut()>(&mut self, name: &str, f: F) {
+        self.run_inner(name, None, f);
+    }
+
+    fn run_inner<F: FnMut()>(&mut self, name: &str, elements: Option<u64>, mut f: F) {
+        // Warmup and single-iteration estimate.
+        let wstart = Instant::now();
+        let mut witers = 0u64;
+        while wstart.elapsed() < self.warmup || witers == 0 {
+            f();
+            witers += 1;
+        }
+        let est = wstart.elapsed() / witers.max(1) as u32;
+
+        // Choose a per-sample iteration count so each sample is ≥ ~1ms.
+        let per_sample = if est.as_nanos() == 0 {
+            1000
+        } else {
+            (1_000_000 / est.as_nanos().max(1)).max(1) as u64
+        };
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        let mut total_iters = 0u64;
+        while (start.elapsed() < self.window || samples.len() < self.min_iters as usize)
+            && samples.len() < 5000
+        {
+            let s = Instant::now();
+            for _ in 0..per_sample {
+                f();
+            }
+            samples.push(s.elapsed() / per_sample as u32);
+            total_iters += per_sample;
+        }
+        samples.sort_unstable();
+        let median = samples[samples.len() / 2];
+        let mean_ns =
+            samples.iter().map(|d| d.as_nanos() as f64).sum::<f64>() / samples.len() as f64;
+        let var = samples
+            .iter()
+            .map(|d| {
+                let x = d.as_nanos() as f64 - mean_ns;
+                x * x
+            })
+            .sum::<f64>()
+            / samples.len() as f64;
+        let m = Measurement {
+            name: name.to_string(),
+            iters: total_iters,
+            median,
+            mean: Duration::from_nanos(mean_ns as u64),
+            stddev: Duration::from_nanos(var.sqrt() as u64),
+            elements,
+        };
+        let mut line = format!(
+            "{:<44} time: [{} ± {}]  ({} iters)",
+            m.name,
+            human(m.median),
+            human(m.stddev),
+            m.iters
+        );
+        if let Some(t) = m.throughput() {
+            line.push_str(&format!("  thrpt: {:.2} Melem/s", t / 1e6));
+        }
+        println!("{line}");
+        self.results.push(m);
+    }
+
+    /// All measurements so far.
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// CSV dump (name,median_ns,mean_ns,stddev_ns,throughput_eps).
+    pub fn csv(&self) -> String {
+        let mut out = String::from("name,median_ns,mean_ns,stddev_ns,throughput_eps\n");
+        for m in &self.results {
+            out.push_str(&format!(
+                "{},{},{},{},{}\n",
+                m.name,
+                m.median.as_nanos(),
+                m.mean.as_nanos(),
+                m.stddev.as_nanos(),
+                m.throughput().map(|t| format!("{t:.1}")).unwrap_or_default()
+            ));
+        }
+        out
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("AXLLM_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        let mut acc = 0u64;
+        b.run("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].iters > 0);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        std::env::set_var("AXLLM_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        b.run_throughput("sum1k", 1000, || {
+            let s: u64 = black_box((0..1000u64).sum());
+            black_box(s);
+        });
+        assert!(b.results()[0].throughput().unwrap() > 0.0);
+        assert!(b.csv().lines().count() == 2);
+    }
+
+    #[test]
+    fn human_format_units() {
+        assert!(human(Duration::from_nanos(500)).ends_with("ns"));
+        assert!(human(Duration::from_micros(50)).ends_with("µs"));
+        assert!(human(Duration::from_millis(50)).ends_with("ms"));
+        assert!(human(Duration::from_secs(2)).ends_with(" s"));
+    }
+}

@@ -1,0 +1,15 @@
+//! In-crate substrates: deterministic RNG, micro-benchmark harness,
+//! property-test runner, TOML-subset parser, ASCII/CSV table printer,
+//! and a small scoped thread pool.
+//!
+//! These exist because the build environment is fully offline: only the
+//! `xla` crate closure is vendored, so `rand`, `criterion`, `proptest`,
+//! `serde`/`toml` and `rayon` are reimplemented here at the scale this
+//! project needs.
+
+pub mod bench;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod table;
+pub mod tomlite;

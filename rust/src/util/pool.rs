@@ -1,0 +1,90 @@
+//! Scoped parallel-map over OS threads (rayon is not available offline).
+//!
+//! The simulator sweeps are embarrassingly parallel across matrices/layers;
+//! [`par_map`] splits the items over `min(n_items, available_parallelism)`
+//! scoped threads and preserves input order in the output.
+
+/// Parallel map preserving order. Falls back to sequential for tiny inputs.
+pub fn par_map<T, U, F>(items: Vec<T>, f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    F: Fn(T) -> U + Sync,
+{
+    let n = items.len();
+    if n <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(n);
+    if threads <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+
+    // Pre-size the output with None slots, hand each thread a strided set
+    // of indices so long items spread across workers.
+    let mut slots: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    let items: Vec<Option<T>> = items.into_iter().map(Some).collect();
+    let items = std::sync::Mutex::new(items);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..threads {
+            let items = &items;
+            let next = &next;
+            let f = &f;
+            handles.push(scope.spawn(move || {
+                let mut out: Vec<(usize, U)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let item = items.lock().unwrap()[i].take().unwrap();
+                    out.push((i, f(item)));
+                }
+                out
+            }));
+        }
+        for h in handles {
+            for (i, u) in h.join().unwrap() {
+                slots[i] = Some(u);
+            }
+        }
+    });
+    slots.into_iter().map(|s| s.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let xs: Vec<u64> = (0..100).collect();
+        let ys = par_map(xs, |x| x * 2);
+        assert_eq!(ys, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        assert_eq!(par_map(Vec::<u32>::new(), |x| x), Vec::<u32>::new());
+        assert_eq!(par_map(vec![7], |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn actually_runs_work() {
+        // Heavier payloads so multiple threads engage; result must match
+        // the sequential reference exactly.
+        let xs: Vec<u64> = (0..32).collect();
+        let ys = par_map(xs.clone(), |x| (0..10_000).fold(x, |a, b| a.wrapping_add(b)));
+        let expect: Vec<u64> = xs
+            .into_iter()
+            .map(|x| (0..10_000).fold(x, |a, b| a.wrapping_add(b)))
+            .collect();
+        assert_eq!(ys, expect);
+    }
+}

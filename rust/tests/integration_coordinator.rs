@@ -1,0 +1,156 @@
+//! Integration: the serving coordinator over real artifacts (requires
+//! `make artifacts`) — trace serving, batching behaviour, attribution,
+//! and the threaded server front-end.
+
+use axllm::config::{AcceleratorConfig, Dataset};
+use axllm::coordinator::{BatchPolicy, Engine, Server};
+use axllm::runtime::ArtifactSet;
+use axllm::workload::{Request, TraceGenerator};
+
+fn engine() -> Engine {
+    let dir = ArtifactSet::default_dir();
+    assert!(
+        dir.join("manifest.toml").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    Engine::load(&dir, AcceleratorConfig::paper()).unwrap()
+}
+
+#[test]
+fn serve_trace_answers_every_request() {
+    let e = engine();
+    let trace = TraceGenerator::new(Dataset::AgNews, 300.0, 11).take(40);
+    let ids: Vec<u64> = trace.iter().map(|r| r.id).collect();
+    let (results, summary) = e
+        .serve_trace(
+            trace,
+            BatchPolicy {
+                max_batch: 4,
+                max_wait_s: 0.005,
+            },
+        )
+        .unwrap();
+    assert_eq!(results.len(), 40);
+    let mut got: Vec<u64> = results.iter().map(|r| r.id).collect();
+    got.sort_unstable();
+    assert_eq!(got, ids);
+    assert_eq!(summary.requests, 40);
+    assert!(summary.batches >= 10, "≥10 batches at max_batch=4");
+    assert!(summary.throughput_rps > 0.0);
+    assert!(summary.sim_cycles > 0);
+    assert!(summary.sim_speedup > 1.3);
+    assert!(results.iter().all(|r| r.logits.len() == 4));
+    assert!(results
+        .iter()
+        .all(|r| r.logits.iter().all(|v| v.is_finite())));
+}
+
+#[test]
+fn identical_request_ids_get_identical_logits() {
+    // Embeddings derive deterministically from request id — the same id
+    // served in different batches must produce the same logits.
+    let e = engine();
+    let mk = |arrival: f64| Request {
+        id: 123,
+        dataset: Dataset::Imdb,
+        seq_len: 20,
+        arrival_s: arrival,
+    };
+    let (r1, _) = e
+        .serve_trace(vec![mk(0.0)], BatchPolicy::default())
+        .unwrap();
+    let (r2, _) = e
+        .serve_trace(vec![mk(5.0)], BatchPolicy::default())
+        .unwrap();
+    assert_eq!(r1[0].logits, r2[0].logits);
+}
+
+#[test]
+fn attribution_scales_with_sequence_length() {
+    let e = engine();
+    let mk = |id: u64, len: usize| Request {
+        id,
+        dataset: Dataset::Imdb,
+        seq_len: len,
+        arrival_s: id as f64 * 0.001,
+    };
+    let (results, _) = e
+        .serve_trace(
+            vec![mk(0, 8), mk(1, 32)],
+            BatchPolicy {
+                max_batch: 2,
+                max_wait_s: 0.01,
+            },
+        )
+        .unwrap();
+    let short = results.iter().find(|r| r.id == 0).unwrap();
+    let long = results.iter().find(|r| r.id == 1).unwrap();
+    assert!(long.sim_cycles > 3 * short.sim_cycles);
+    assert!(long.sim_energy_j > 3.0 * short.sim_energy_j);
+}
+
+#[test]
+fn queue_wait_reflects_batching_policy() {
+    let e = engine();
+    // Two requests far apart with a long max_wait: the first waits for
+    // the timeout, not for the second request.
+    let trace = vec![
+        Request {
+            id: 0,
+            dataset: Dataset::AgNews,
+            seq_len: 16,
+            arrival_s: 0.0,
+        },
+        Request {
+            id: 1,
+            dataset: Dataset::AgNews,
+            seq_len: 16,
+            arrival_s: 1.0,
+        },
+    ];
+    let (results, summary) = e
+        .serve_trace(
+            trace,
+            BatchPolicy {
+                max_batch: 4,
+                max_wait_s: 0.02,
+            },
+        )
+        .unwrap();
+    let first = results.iter().find(|r| r.id == 0).unwrap();
+    assert!(
+        (first.queue_wait_s - 0.02).abs() < 1e-6,
+        "first request should wait exactly max_wait: {}",
+        first.queue_wait_s
+    );
+    assert_eq!(summary.batches, 2);
+}
+
+#[test]
+fn threaded_server_round_trips() {
+    let server = Server::start(
+        ArtifactSet::default_dir(),
+        AcceleratorConfig::paper(),
+        BatchPolicy {
+            max_batch: 4,
+            max_wait_s: 0.005,
+        },
+    );
+    let mut rxs = Vec::new();
+    for id in 0..8u64 {
+        rxs.push(server.submit(Request {
+            id,
+            dataset: Dataset::Squad,
+            seq_len: 24,
+            arrival_s: 0.0,
+        }));
+    }
+    for (id, rx) in rxs.into_iter().enumerate() {
+        let res = rx
+            .recv_timeout(std::time::Duration::from_secs(60))
+            .expect("server must answer");
+        assert_eq!(res.id, id as u64);
+        assert_eq!(res.logits.len(), 4);
+    }
+    server.shutdown().unwrap();
+}

@@ -1,0 +1,120 @@
+//! Integration: PJRT runtime against the AOT artifacts (requires
+//! `make artifacts`). These tests prove the three layers compose: the
+//! Pallas kernel's HLO runs from Rust bit-exactly against the Rust
+//! functional executor, and the JAX tiny model matches the Rust layer
+//! implementation on the exported weights.
+
+use axllm::exec::dense_matmul;
+use axllm::exec::LayerExec;
+use axllm::quant::{QuantMatrix, QuantParams};
+use axllm::runtime::{load_weights_bin, ArtifactSet, Runtime};
+use axllm::util::rng::Rng;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    let dir = ArtifactSet::default_dir();
+    assert!(
+        dir.join("manifest.toml").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    dir
+}
+
+#[test]
+fn kernel_artifact_bit_exact_vs_rust_executor() {
+    let rt = Runtime::cpu().unwrap();
+    let dir = artifacts_dir();
+    let arts = ArtifactSet::load(&rt, &dir).unwrap();
+    let mut rng = Rng::new(99);
+    for (r, exe) in &arts.kernels {
+        let n = *r;
+        // Random codes and input; artifact takes (x i32[n], w i32[n,n]
+        // offsets) and returns i32[n].
+        let x_codes: Vec<i32> = (0..n).map(|_| rng.range_i64(-127, 127) as i32).collect();
+        let w_off: Vec<i32> = (0..n * n).map(|_| rng.range_i64(0, 254) as i32).collect();
+        let y = exe
+            .run_i32(&[
+                (&x_codes, &[n as i64]),
+                (&w_off, &[n as i64, n as i64]),
+            ])
+            .unwrap();
+        // Rust side: same arithmetic through the reuse executor.
+        let x_i8: Vec<i8> = x_codes.iter().map(|&v| v as i8).collect();
+        let w_q: Vec<i8> = w_off.iter().map(|&v| (v - 127) as i8).collect();
+        let wm = QuantMatrix::from_q(n, n, w_q, QuantParams { scale: 1.0, bits: 8 });
+        let expect = dense_matmul(&x_i8, &wm);
+        assert_eq!(y, expect, "kernel artifact {n}x{n} must be bit-exact");
+    }
+}
+
+#[test]
+fn tiny_model_artifact_produces_finite_batch_logits() {
+    let rt = Runtime::cpu().unwrap();
+    let dir = artifacts_dir();
+    let arts = ArtifactSet::load(&rt, &dir).unwrap();
+    let m = &arts.manifest;
+    let mut rng = Rng::new(5);
+    let x: Vec<f32> = (0..m.batch * m.seq * m.d_model)
+        .map(|_| rng.normal() as f32)
+        .collect();
+    let logits = arts.run_tiny_model(&x).unwrap();
+    assert_eq!(logits.len(), m.batch * m.n_classes);
+    assert!(logits.iter().all(|v| v.is_finite()));
+    // Different batch elements produce different (nonzero) logits.
+    assert!(logits.iter().any(|&v| v != 0.0));
+    assert_ne!(logits[..m.n_classes], logits[m.n_classes..2 * m.n_classes]);
+}
+
+#[test]
+fn tiny_layer_artifact_matches_rust_layer_exec_on_exported_weights() {
+    let rt = Runtime::cpu().unwrap();
+    let dir = artifacts_dir();
+    let arts = ArtifactSet::load(&rt, &dir).unwrap();
+    let weights = load_weights_bin(&dir.join("tiny_weights.bin")).unwrap();
+    let m = &arts.manifest;
+    assert_eq!(weights.n_layers, m.n_layers);
+    assert_eq!(weights.d_model, m.d_model);
+
+    let mut rng = Rng::new(17);
+    let x: Vec<f32> = (0..m.seq * m.d_model).map(|_| rng.normal() as f32).collect();
+    let jax_out = arts.run_tiny_layer(&x).unwrap();
+
+    let cfg = m.model_config();
+    let mut layer = LayerExec::new(&cfg, &weights.layers[0], 128);
+    let rust_out = layer.forward(&x, m.seq);
+
+    assert_eq!(jax_out.len(), rust_out.len());
+    // Two independent implementations of the same quantized layer: equal
+    // up to activation-quantization rounding-mode differences (rust
+    // rounds half-away, XLA rounds half-even) amplified by layer norm.
+    let mut max_err = 0f32;
+    for (a, b) in jax_out.iter().zip(&rust_out) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(
+        max_err < 0.15,
+        "JAX vs Rust layer divergence too large: {max_err}"
+    );
+    // And they must be strongly correlated (same transform, not noise).
+    let dot: f32 = jax_out.iter().zip(&rust_out).map(|(a, b)| a * b).sum();
+    let na: f32 = jax_out.iter().map(|a| a * a).sum::<f32>().sqrt();
+    let nb: f32 = rust_out.iter().map(|b| b * b).sum::<f32>().sqrt();
+    let cos = dot / (na * nb);
+    assert!(cos > 0.999, "cosine similarity {cos}");
+}
+
+#[test]
+fn weights_bin_consistent_with_manifest() {
+    let dir = artifacts_dir();
+    let w = load_weights_bin(&dir.join("tiny_weights.bin")).unwrap();
+    use axllm::model::MatKind;
+    for layer in &w.layers {
+        assert_eq!(layer.get(MatKind::Wq).rows, w.d_model);
+        assert_eq!(layer.get(MatKind::Ff1).cols, w.d_ff);
+        assert_eq!(layer.get(MatKind::Ff2).rows, w.d_ff);
+        // The exported weights must show the value locality AxLLM needs.
+        let loc = axllm::quant::stats::measure_locality(layer.get(MatKind::Wq), 128);
+        assert!(loc.reuse_rate() > 0.3, "reuse {}", loc.reuse_rate());
+    }
+    assert_eq!(w.head.cols, w.n_classes);
+}

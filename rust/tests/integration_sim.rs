@@ -1,0 +1,133 @@
+//! Integration: the cycle simulator across modules — model zoo →
+//! quantization → accelerator → stats, including cross-lane-model
+//! functional equivalence and the paper's headline bands.
+
+use axllm::config::{table1_benchmarks, AcceleratorConfig, ModelConfig};
+use axllm::exec::dense_matmul;
+use axllm::model::{MatKind, Model};
+use axllm::sim::accelerator::synth_input;
+use axllm::sim::{Accelerator, LaneModel};
+
+#[test]
+fn all_lane_models_agree_with_dense_on_all_matrix_kinds() {
+    let model = Model::new(ModelConfig::tiny(), 3);
+    let cfg = AcceleratorConfig {
+        lanes: 16,
+        ..AcceleratorConfig::paper()
+    };
+    for kind in MatKind::ALL {
+        let w = model.matrix(0, kind);
+        let x = synth_input(w.rows, kind as u64);
+        let dense = dense_matmul(&x, &w);
+        for lm in [LaneModel::Baseline, LaneModel::Serial, LaneModel::Sliced] {
+            let out = Accelerator::axllm(cfg).with_lane_model(lm).matmul(&x, &w);
+            assert_eq!(out.output, dense, "{kind:?} {lm:?}");
+        }
+    }
+}
+
+#[test]
+fn element_conservation_across_all_benchmarks() {
+    // Every weight element is processed exactly once: elements ==
+    // mults + rc_hits == out_writes, for every Table-I model.
+    let cfg = AcceleratorConfig::paper();
+    for b in table1_benchmarks() {
+        let model = Model::new(b.model.clone(), 1);
+        let w = model.matrix_rows(0, MatKind::Wk, 64);
+        let x = synth_input(w.rows, 2);
+        let s = Accelerator::axllm(cfg).matmul(&x, &w).stats;
+        assert_eq!(s.elements, s.mults + s.rc_hits, "{}", b.key());
+        assert_eq!(s.elements, s.out_writes, "{}", b.key());
+        assert_eq!(s.elements, (w.rows * w.cols) as u64, "{}", b.key());
+    }
+}
+
+#[test]
+fn speedup_grows_with_buffer_size() {
+    let model = Model::new(ModelConfig::bert_large(), 5);
+    let w = model.matrix_rows(0, MatKind::Ff1, 64);
+    let x = synth_input(w.rows, 3);
+    let mut prev = 0.0;
+    for buffers in [64usize, 256, 1024] {
+        let cfg = AcceleratorConfig {
+            buffer_entries: buffers,
+            slices: 4,
+            ..AcceleratorConfig::paper()
+        };
+        let ax = Accelerator::axllm(cfg).matmul(&x, &w).stats;
+        let base = Accelerator::baseline(cfg).matmul(&x, &w).stats;
+        let speedup = base.cycles as f64 / ax.cycles as f64;
+        assert!(speedup > prev, "buffers={buffers}: {speedup} !> {prev}");
+        prev = speedup;
+    }
+}
+
+#[test]
+fn lane_count_scales_group_cycles_inverse_linearly() {
+    let model = Model::new(ModelConfig::distilbert(), 7);
+    let w = model.matrix_rows(0, MatKind::Wo, 64);
+    let x = synth_input(w.rows, 4);
+    let c16 = Accelerator::axllm(AcceleratorConfig {
+        lanes: 16,
+        ..AcceleratorConfig::paper()
+    })
+    .matmul(&x, &w)
+    .stats
+    .cycles;
+    let c64 = Accelerator::axllm(AcceleratorConfig::paper())
+        .matmul(&x, &w)
+        .stats
+        .cycles;
+    let ratio = c16 as f64 / c64 as f64;
+    assert!((3.0..5.0).contains(&ratio), "16→64 lanes ratio {ratio}");
+}
+
+#[test]
+fn sliced_model_beats_serial_on_this_workload() {
+    // The §IV parallel architecture exists to go faster; confirm it does
+    // on realistic weights at P=4.
+    let model = Model::new(ModelConfig::distilbert(), 9);
+    let w = model.matrix_rows(0, MatKind::Wq, 64);
+    let x = synth_input(w.rows, 5);
+    let cfg = AcceleratorConfig::paper();
+    let serial = Accelerator::axllm(cfg).matmul(&x, &w).stats.cycles;
+    let sliced = Accelerator::axllm(cfg)
+        .with_lane_model(LaneModel::Sliced)
+        .matmul(&x, &w)
+        .stats
+        .cycles;
+    assert!(
+        sliced < serial,
+        "sliced ({sliced}) should beat serial ({serial})"
+    );
+}
+
+#[test]
+fn mult_reduction_up_to_90_percent_with_full_rows() {
+    // Headline claim: "up to 90% reduction in computations" — holds for
+    // large matrices with full-row buffers.
+    let model = Model::new(ModelConfig::llama_7b(), 11);
+    let w = model.matrix_rows(0, MatKind::Wq, 64);
+    let x = synth_input(w.rows, 6);
+    let cfg = AcceleratorConfig {
+        buffer_entries: 4096,
+        slices: 4,
+        round_cols: 4096,
+        ..AcceleratorConfig::paper()
+    };
+    let s = Accelerator::axllm(cfg).matmul(&x, &w).stats;
+    assert!(
+        s.mult_reduction() > 0.90,
+        "mult reduction {}",
+        s.mult_reduction()
+    );
+}
+
+#[test]
+fn run_model_parallelism_is_deterministic() {
+    let model = Model::new(ModelConfig::tiny(), 13);
+    let acc = Accelerator::axllm(AcceleratorConfig::paper());
+    let a = acc.run_model(&model, 64, 9).total;
+    let b = acc.run_model(&model, 64, 9).total;
+    assert_eq!(a, b);
+}

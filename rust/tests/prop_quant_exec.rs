@@ -1,0 +1,151 @@
+//! Property tests over quantization and the functional executor.
+
+use axllm::exec::{dense_matmul, lora_matmul, reuse_matmul_chunked};
+use axllm::model::synth::{DistKind, WeightDistribution};
+use axllm::model::LoraAdaptor;
+use axllm::quant::{fold, unfold, QuantMatrix, QuantParams};
+use axllm::util::prop::{check, check_default, Config};
+use axllm::{prop_assert, prop_assert_eq};
+
+#[test]
+fn prop_quant_roundtrip_error_bounded() {
+    check_default("quant-roundtrip", |rng| {
+        let bits = 2 + rng.below(7) as u8;
+        let data: Vec<f32> = (0..200).map(|_| (rng.normal() * 3.0) as f32).collect();
+        let p = QuantParams::fit(&data, bits);
+        for &x in &data {
+            let q = p.quantize(x);
+            prop_assert!(q != i8::MIN, "must never emit -128");
+            let err = (x - p.dequantize(q)).abs();
+            prop_assert!(
+                err <= p.scale / 2.0 + 1e-5,
+                "err {} scale {}",
+                err,
+                p.scale
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fold_unfold_bijection() {
+    check_default("fold-bijection", |rng| {
+        let q = rng.range_i64(-127, 127) as i8;
+        let (u, neg) = fold(q);
+        prop_assert!(u <= 127);
+        prop_assert_eq!(unfold(u, neg), q);
+        prop_assert_eq!(fold(q).0, fold(-q.max(-127)).0);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reuse_matmul_exact_all_distributions() {
+    check("reuse-exact", Config { cases: 48, seed: 0xE8 }, |rng| {
+        let rows = 1 + rng.index(64);
+        let cols = 1 + rng.index(300);
+        let kind = *rng.choose(&[
+            DistKind::Gaussian,
+            DistKind::Laplace,
+            DistKind::StudentT(3),
+            DistKind::Uniform,
+        ]);
+        let dist = WeightDistribution::default().with_kind(kind);
+        let w = axllm::model::synth::synthesize_matrix(rows, cols, dist, rng);
+        let x: Vec<i8> = (0..rows).map(|_| rng.range_i64(-127, 127) as i8).collect();
+        let chunk = 1 + rng.index(cols.max(1));
+        let (y, stats) = reuse_matmul_chunked(&x, &w, chunk);
+        prop_assert_eq!(y, dense_matmul(&x, &w));
+        prop_assert_eq!(stats.mults + stats.reuses, (rows * cols) as u64);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chunk_monotone_reuse() {
+    check_default("chunk-monotone", |rng| {
+        let rows = 1 + rng.index(16);
+        let cols = 64 + rng.index(448);
+        let w = axllm::model::synth::synthesize_matrix(
+            rows,
+            cols,
+            WeightDistribution::default(),
+            rng,
+        );
+        let x: Vec<i8> = (0..rows).map(|_| rng.range_i64(-127, 127) as i8).collect();
+        let small = 8 + rng.index(32);
+        let big = small * 2;
+        let (_, s_small) = reuse_matmul_chunked(&x, &w, small);
+        let (_, s_big) = reuse_matmul_chunked(&x, &w, big);
+        // A chunk of size 2k can always reuse at least as much as two
+        // chunks of size k.
+        prop_assert!(
+            s_big.reuses >= s_small.reuses,
+            "reuse not monotone: {} vs {}",
+            s_big.reuses,
+            s_small.reuses
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lora_matmul_matches_explicit() {
+    check("lora-exact", Config { cases: 24, seed: 0x10A }, |rng| {
+        let d = 16 + rng.index(48);
+        let rank = 1 + rng.index(8);
+        let dist = WeightDistribution::default();
+        let w = axllm::model::synth::synthesize_matrix(d, d, dist, rng);
+        let adaptor = LoraAdaptor::synthesize(
+            &w,
+            axllm::config::LoraConfig {
+                rank,
+                alpha: 1.0,
+            },
+            dist,
+            rng,
+        );
+        let x: Vec<i8> = (0..d).map(|_| rng.range_i64(-127, 127) as i8).collect();
+        let chunk = d + rank;
+        let (y, _) = lora_matmul(&x, &w, &adaptor, chunk);
+        let yw = dense_matmul(&x, &w);
+        let ya = dense_matmul(&x, &adaptor.a);
+        for j in 0..d {
+            let mut expect = yw[j] as i64;
+            for k in 0..rank {
+                expect += ya[k] as i64 * adaptor.b.get(k, j) as i64;
+            }
+            prop_assert_eq!(y[j], expect);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matrix_concat_preserves_row_contents() {
+    check_default("concat-rows", |rng| {
+        let rows = 1 + rng.index(16);
+        let c1 = 1 + rng.index(32);
+        let c2 = 1 + rng.index(8);
+        let p = QuantParams { scale: 1.0, bits: 8 };
+        let a = QuantMatrix::from_q(
+            rows,
+            c1,
+            (0..rows * c1).map(|_| rng.range_i64(-127, 127) as i8).collect(),
+            p,
+        );
+        let b = QuantMatrix::from_q(
+            rows,
+            c2,
+            (0..rows * c2).map(|_| rng.range_i64(-127, 127) as i8).collect(),
+            p,
+        );
+        let c = a.concat_cols(&b);
+        for r in 0..rows {
+            prop_assert_eq!(&c.row(r)[..c1], a.row(r));
+            prop_assert_eq!(&c.row(r)[c1..], b.row(r));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,187 @@
+//! Property tests over the cycle simulator (in-crate property runner —
+//! see `util::prop`). Each property runs 64 seeded cases by default
+//! (AXLLM_PROP_CASES overrides).
+
+use axllm::config::AcceleratorConfig;
+use axllm::quant::{QuantMatrix, QuantParams};
+use axllm::sim::{baseline, lane, sliced, Accelerator, LaneModel};
+use axllm::util::prop::{check_default, Config};
+use axllm::util::rng::Rng;
+use axllm::{prop_assert, prop_assert_eq};
+
+fn random_weights(rng: &mut Rng, n: usize) -> Vec<i8> {
+    // Mix of distributions: uniform, concentrated, constant runs.
+    match rng.index(3) {
+        0 => (0..n).map(|_| rng.range_i64(-127, 127) as i8).collect(),
+        1 => (0..n)
+            .map(|_| (rng.normal() * 12.0).round().clamp(-127.0, 127.0) as i8)
+            .collect(),
+        _ => {
+            let v = rng.range_i64(-127, 127) as i8;
+            let mut out = vec![v; n];
+            for _ in 0..n / 4 {
+                let i = rng.index(n);
+                out[i] = rng.range_i64(-127, 127) as i8;
+            }
+            out
+        }
+    }
+}
+
+fn rand_cfg(rng: &mut Rng) -> AcceleratorConfig {
+    let slices = *rng.choose(&[1usize, 2, 4, 8]);
+    AcceleratorConfig {
+        lanes: *rng.choose(&[1usize, 4, 16, 64]),
+        buffer_entries: *rng.choose(&[64usize, 128, 256, 512]),
+        slices,
+        queue_depth: *rng.choose(&[1usize, 2, 4, 8]),
+        ..AcceleratorConfig::paper()
+    }
+}
+
+#[test]
+fn prop_all_lane_models_functionally_equivalent() {
+    check_default("lane-models-equivalent", |rng| {
+        let n = 1 + rng.index(256);
+        let weights = random_weights(rng, n);
+        let x = rng.range_i64(-127, 127) as i8;
+        let cfg = rand_cfg(rng);
+        let cfg = AcceleratorConfig {
+            buffer_entries: cfg.buffer_entries.max(n),
+            ..cfg
+        };
+        let expect: Vec<i32> = weights.iter().map(|&w| x as i32 * w as i32).collect();
+        prop_assert_eq!(lane::simulate_chunk(x, &weights, &cfg).partials, expect);
+        prop_assert_eq!(baseline::simulate_chunk(x, &weights, &cfg).partials, expect);
+        prop_assert_eq!(sliced::simulate_chunk(x, &weights, &cfg).partials, expect);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_element_conservation_and_reuse_bounds() {
+    check_default("element-conservation", |rng| {
+        let n = 1 + rng.index(256);
+        let weights = random_weights(rng, n);
+        let x = rng.range_i64(-127, 127) as i8;
+        let cfg = AcceleratorConfig {
+            buffer_entries: 256,
+            ..rand_cfg(rng)
+        };
+        for s in [
+            lane::simulate_chunk(x, &weights, &cfg).stats,
+            sliced::simulate_chunk(x, &weights, &cfg).stats,
+        ] {
+            prop_assert_eq!(s.elements, n as u64);
+            prop_assert_eq!(s.mults + s.rc_hits, s.elements);
+            prop_assert_eq!(s.out_writes, s.elements);
+            prop_assert_eq!(s.rc_writes, s.mults);
+            prop_assert_eq!(s.rc_reads, s.rc_hits);
+            prop_assert!(s.mults <= 128.min(n) as u64, "mults {} n {}", s.mults, n);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_serial_cycles_closed_form() {
+    check_default("serial-closed-form", |rng| {
+        let n = 1 + rng.index(256);
+        let weights = random_weights(rng, n);
+        let x = rng.range_i64(-127, 127) as i8;
+        let cfg = AcceleratorConfig::paper();
+        let r = lane::simulate_chunk(x, &weights, &cfg);
+        prop_assert_eq!(
+            r.stats.cycles,
+            lane::serial_cycles(n as u64, r.stats.mults, &cfg)
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reuse_never_slower_than_baseline() {
+    check_default("reuse-never-slower", |rng| {
+        let n = 1 + rng.index(256);
+        let weights = random_weights(rng, n);
+        let x = rng.range_i64(-127, 127) as i8;
+        let cfg = AcceleratorConfig::paper();
+        let ax = lane::simulate_chunk(x, &weights, &cfg).stats.cycles;
+        let ba = baseline::simulate_chunk(x, &weights, &cfg).stats.cycles;
+        prop_assert!(ax <= ba, "ax {} > baseline {}", ax, ba);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sliced_worst_case_bounded_by_serialization() {
+    // The §IV claim: worst case degrades to the non-parallel baseline —
+    // never worse than a small constant over the serial lane (queue
+    // effects can add a few cycles of pipeline fill).
+    check_default("sliced-worst-case", |rng| {
+        let n = 1 + rng.index(256);
+        let weights = random_weights(rng, n);
+        let x = rng.range_i64(-127, 127) as i8;
+        let cfg = AcceleratorConfig {
+            buffer_entries: 256,
+            ..rand_cfg(rng)
+        };
+        let s = sliced::simulate_chunk(x, &weights, &cfg).stats.cycles;
+        let serial = lane::simulate_chunk(x, &weights, &cfg).stats.cycles;
+        prop_assert!(
+            s <= serial + 16 + n as u64 / 4,
+            "sliced {} vs serial bound {}",
+            s,
+            serial
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_accelerator_matmul_equals_dense_random_shapes() {
+    axllm::util::prop::check(
+        "accelerator-dense",
+        Config { cases: 24, seed: 0xACC },
+        |rng| {
+            let rows = 1 + rng.index(96);
+            let cols = 1 + rng.index(160);
+            let data: Vec<i8> = (0..rows * cols)
+                .map(|_| rng.range_i64(-127, 127) as i8)
+                .collect();
+            let w = QuantMatrix::from_q(rows, cols, data, QuantParams { scale: 1.0, bits: 8 });
+            let x: Vec<i8> = (0..rows).map(|_| rng.range_i64(-127, 127) as i8).collect();
+            let cfg = AcceleratorConfig {
+                lanes: *rng.choose(&[1usize, 8, 32]),
+                ..AcceleratorConfig::paper()
+            };
+            let lm = *rng.choose(&[LaneModel::Baseline, LaneModel::Serial, LaneModel::Sliced]);
+            let out = Accelerator::axllm(cfg).with_lane_model(lm).matmul(&x, &w);
+            let mut dense = vec![0i32; cols];
+            for i in 0..rows {
+                for j in 0..cols {
+                    dense[j] += x[i] as i32 * w.get(i, j) as i32;
+                }
+            }
+            prop_assert_eq!(out.output, dense);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_stats_scaled_consistency() {
+    check_default("stats-scaling", |rng| {
+        let n = 1 + rng.index(200);
+        let weights = random_weights(rng, n);
+        let x = rng.range_i64(-127, 127) as i8;
+        let s = lane::simulate_chunk(x, &weights, &AcceleratorConfig::paper()).stats;
+        let k = 1 + rng.below(7);
+        let scaled = s.scaled(k, 1);
+        prop_assert_eq!(scaled.cycles, s.cycles * k);
+        prop_assert_eq!(scaled.mults + scaled.rc_hits, scaled.elements);
+        // Rates are scale-invariant.
+        prop_assert!((scaled.reuse_rate() - s.reuse_rate()).abs() < 1e-9);
+        Ok(())
+    });
+}
