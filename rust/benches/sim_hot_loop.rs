@@ -1,6 +1,10 @@
 //! Perf bench for the §Perf pass: the simulator's hot loops in
-//! weight-elements/second. Targets (DESIGN.md §9): ≥50M elem/s for the
+//! weight-elements/second. Targets (rust/DESIGN.md): ≥50M elem/s for the
 //! serial lane, with the functional executor well above it.
+//!
+//! Besides the stdout report, emits `BENCH_sim_hot_loop.json`
+//! (name/iterations/ns-per-op) so future PRs have a machine-readable perf
+//! trajectory to compare against.
 
 use axllm::config::AcceleratorConfig;
 use axllm::exec::{dense_matmul, reuse_matmul};
@@ -43,4 +47,8 @@ fn main() {
         },
     );
     println!("\ncsv:\n{}", b.csv());
+    match std::fs::write("BENCH_sim_hot_loop.json", b.json()) {
+        Ok(()) => println!("wrote BENCH_sim_hot_loop.json"),
+        Err(e) => eprintln!("could not write BENCH_sim_hot_loop.json: {e}"),
+    }
 }

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Local mirror of .github/workflows/ci.yml: the tier-1 gate plus lints.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+if [ ! -f Cargo.toml ]; then
+  echo "ci: rust/Cargo.toml not in-tree (provisioned by the offline build env); nothing to run here" >&2
+  exit 0
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy -- -D warnings =="
+cargo clippy -- -D warnings
+
+echo "ci: all green"

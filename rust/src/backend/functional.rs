@@ -1,0 +1,255 @@
+//! Bit-exact functional backend: execute the full layer stack in-process
+//! through the reuse datapath — no artifacts, no PJRT.
+//!
+//! Every weight matmul goes through
+//! [`reuse_matmul_chunked`](crate::exec::reuse_matmul_chunked) (proven
+//! bit-identical to dense GEMM by the crate's property tests), so this
+//! backend serves **real logits** whose arithmetic is exactly what the
+//! accelerator computes: layers → mean-pool → quantized classifier head,
+//! mirroring the compiled tiny artifact's structure. Used for
+//! correctness soak tests and artifact-free end-to-end serving.
+
+use crate::backend::{BatchOutcome, CostModel, ExecutionBackend, COST_SAMPLE_ROWS, DEFAULT_SEQ_LIMIT};
+use crate::config::{AcceleratorConfig, ModelConfig};
+use crate::exec::layer::qmatmul;
+use crate::exec::{ExecStats, LayerExec};
+use crate::model::{synthesize_matrix, LayerWeights, Model, WeightDistribution};
+use crate::quant::QuantMatrix;
+use crate::sim::{Accelerator, SimStats};
+use crate::util::rng::Rng;
+use crate::workload::{request_seed, synth_embeddings, Request};
+use anyhow::Result;
+
+/// Classifier classes produced by the logit head (matches the compiled
+/// tiny artifact).
+const N_CLASSES: usize = 4;
+
+/// Largest model the functional backend will materialize. Functional
+/// execution holds every layer's quantized weights in memory and runs
+/// every product on the host, so Llama-scale models (≫1B params) would
+/// hang or OOM — serve those with `SimBackend` instead.
+const MAX_PARAMS: u64 = 1_000_000_000;
+
+/// In-process functional execution backend.
+pub struct FunctionalBackend {
+    model_cfg: ModelConfig,
+    layers: Vec<LayerWeights>,
+    head: QuantMatrix,
+    chunk: usize,
+    seq_limit: usize,
+    max_batch: usize,
+    embed_seed: u64,
+    cost: CostModel,
+}
+
+impl FunctionalBackend {
+    /// Materialize every layer of a synthesized `model_cfg` model (plus a
+    /// classifier head) and derive the per-token cost model on a
+    /// builder-validated accelerator sizing.
+    pub fn new(
+        model_cfg: ModelConfig,
+        acc_cfg: AcceleratorConfig,
+        seed: u64,
+    ) -> Result<FunctionalBackend> {
+        // Gate the sizing through the checked constructor before paying
+        // for weight materialization.
+        let acc = Accelerator::builder().config(acc_cfg).build()?;
+        anyhow::ensure!(
+            model_cfg.param_count() <= MAX_PARAMS,
+            "model {} ({} params) is too large for functional execution (limit {}); use the sim backend",
+            model_cfg.name,
+            model_cfg.param_count(),
+            MAX_PARAMS
+        );
+        let model = Model::new(model_cfg.clone(), seed);
+        let layers: Vec<LayerWeights> = (0..model_cfg.n_layers).map(|l| model.layer(l)).collect();
+        let mut rng = Rng::new(seed ^ 0x4EAD);
+        let head = synthesize_matrix(
+            model_cfg.d_model,
+            N_CLASSES,
+            WeightDistribution::default(),
+            &mut rng,
+        );
+        // Row-sampled cost derivation (identical to SimBackend's, via the
+        // shared helper) so construction stays fast at BERT-large scale.
+        let (cost, _ax_run) = CostModel::from_sampled(&model, acc_cfg, COST_SAMPLE_ROWS)?;
+        Ok(FunctionalBackend {
+            model_cfg,
+            layers,
+            head,
+            chunk: acc.chunk_cols(),
+            seq_limit: DEFAULT_SEQ_LIMIT,
+            max_batch: 64,
+            embed_seed: seed,
+            cost,
+        })
+    }
+
+    /// The W_buff-bounded Result-Cache chunk every logit-path matmul runs
+    /// with (reuse cannot cross chunk boundaries).
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// Override the per-request sequence cap (default
+    /// [`DEFAULT_SEQ_LIMIT`]).
+    pub fn with_seq_limit(mut self, seq: usize) -> FunctionalBackend {
+        self.seq_limit = seq.max(1);
+        self
+    }
+
+    /// Synthesize the embedding block for one request — the same
+    /// (seed, request id) derivation the PJRT backend uses, so identical
+    /// ids see identical inputs across backends.
+    fn request_embeddings(&self, req: &Request) -> (Vec<f32>, usize) {
+        let seq = req.seq_len.min(self.seq_limit).max(1);
+        let e = synth_embeddings(
+            seq,
+            self.model_cfg.d_model,
+            request_seed(self.embed_seed, req.id),
+        );
+        (e, seq)
+    }
+
+    /// Forward one request through layers → mean-pool → quantized head.
+    /// Returns the logits and the reuse counters the pass accumulated.
+    pub fn forward(&self, req: &Request) -> (Vec<f32>, ExecStats) {
+        let (mut x, seq) = self.request_embeddings(req);
+        let mut stats = ExecStats::default();
+        for lw in &self.layers {
+            let mut le = LayerExec::new(&self.model_cfg, lw, self.chunk);
+            x = le.forward(&x, seq);
+            stats.mults += le.stats.mults;
+            stats.reuses += le.stats.reuses;
+        }
+        let d = self.model_cfg.d_model;
+        let mut pooled = vec![0f32; d];
+        for s in 0..seq {
+            for (j, p) in pooled.iter_mut().enumerate() {
+                *p += x[s * d + j];
+            }
+        }
+        for p in pooled.iter_mut() {
+            *p /= seq as f32;
+        }
+        let logits = qmatmul(&pooled, 1, &self.head, self.chunk, &mut stats);
+        (logits, stats)
+    }
+}
+
+/// Map functional reuse counters onto the simulator's counter taxonomy
+/// (operation counts only — the functional path measures no cycles).
+fn exec_to_sim(e: &ExecStats) -> SimStats {
+    SimStats {
+        elements: e.mults + e.reuses,
+        mults: e.mults,
+        rc_hits: e.reuses,
+        rc_writes: e.mults,
+        rc_reads: e.reuses,
+        out_writes: e.mults + e.reuses,
+        ..Default::default()
+    }
+}
+
+impl ExecutionBackend for FunctionalBackend {
+    fn name(&self) -> &'static str {
+        "functional"
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn seq_limit(&self) -> usize {
+        self.seq_limit
+    }
+
+    fn n_classes(&self) -> usize {
+        N_CLASSES
+    }
+
+    fn cost(&self) -> &CostModel {
+        &self.cost
+    }
+
+    fn run_batch(&self, requests: &[Request]) -> crate::Result<BatchOutcome> {
+        anyhow::ensure!(
+            requests.len() <= self.max_batch,
+            "batch {} exceeds functional backend capacity {}",
+            requests.len(),
+            self.max_batch
+        );
+        let t0 = std::time::Instant::now();
+        let mut logits = Vec::with_capacity(requests.len());
+        let mut total = ExecStats::default();
+        for req in requests {
+            let (l, s) = self.forward(req);
+            logits.push(l);
+            total.mults += s.mults;
+            total.reuses += s.reuses;
+        }
+        Ok(BatchOutcome {
+            logits,
+            exec_s: t0.elapsed().as_secs_f64(),
+            stats: exec_to_sim(&total),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Dataset;
+
+    fn backend() -> FunctionalBackend {
+        FunctionalBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper(), 42).unwrap()
+    }
+
+    fn req(id: u64, seq_len: usize) -> Request {
+        Request {
+            id,
+            dataset: Dataset::AgNews,
+            seq_len,
+            arrival_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn forward_produces_finite_logits_with_reuse() {
+        let b = backend();
+        let (logits, stats) = b.forward(&req(5, 12));
+        assert_eq!(logits.len(), N_CLASSES);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert!(stats.mults > 0);
+        assert!(stats.reuse_rate() > 0.2, "rate {}", stats.reuse_rate());
+    }
+
+    #[test]
+    fn identical_request_ids_get_identical_logits() {
+        let b = backend();
+        let (l1, _) = b.forward(&req(123, 20));
+        let (l2, _) = b.forward(&req(123, 20));
+        assert_eq!(l1, l2);
+        let (l3, _) = b.forward(&req(124, 20));
+        assert_ne!(l1, l3);
+    }
+
+    #[test]
+    fn rejects_llama_scale_models() {
+        let err =
+            FunctionalBackend::new(ModelConfig::llama_7b(), AcceleratorConfig::paper(), 1)
+                .unwrap_err();
+        assert!(err.to_string().contains("too large"), "{err}");
+    }
+
+    #[test]
+    fn batch_outcome_covers_every_request() {
+        let b = backend();
+        let reqs: Vec<Request> = (0..3).map(|i| req(i, 8)).collect();
+        let out = b.run_batch(&reqs).unwrap();
+        assert_eq!(out.logits.len(), 3);
+        assert!(out.logits.iter().all(|l| l.len() == N_CLASSES));
+        assert_eq!(out.stats.elements, out.stats.mults + out.stats.rc_hits);
+        assert!(out.stats.rc_hits > 0);
+    }
+}

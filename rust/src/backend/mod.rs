@@ -1,0 +1,145 @@
+//! Execution backends: the unified API for running a batch of requests.
+//!
+//! The repo can execute a batch three ways, and before this module each
+//! way had its own ad-hoc entry point. [`ExecutionBackend`] unifies them:
+//!
+//! - [`SimBackend`] — cycle-level attribution only. No logits, no
+//!   artifacts, no PJRT: per-token cycles/energy come from the
+//!   [`Accelerator`] simulator. This is what CI serves traffic with.
+//! - [`FunctionalBackend`] — bit-exact in-process execution of the layer
+//!   stack through [`crate::exec::reuse_matmul_chunked`] (the functional
+//!   reuse datapath), producing real logits with no artifact directory.
+//! - [`PjrtBackend`] — the compiled-artifact runtime: AOT-lowered
+//!   JAX/Pallas HLO executed through PJRT (requires `make artifacts`).
+//!
+//! Every backend returns the same [`BatchOutcome`] (per-request logits,
+//! host execution seconds, simulated activity counters), so
+//! [`crate::coordinator::Engine`] — and everything above it: batcher,
+//! server, CLI, reports — is generic over the execution strategy.
+//! `rust/DESIGN.md` diagrams the `Engine → ExecutionBackend →
+//! Accelerator` layering.
+
+pub mod functional;
+pub mod pjrt;
+pub mod sim;
+
+pub use functional::FunctionalBackend;
+pub use pjrt::PjrtBackend;
+pub use sim::SimBackend;
+
+use crate::config::AcceleratorConfig;
+use crate::energy::EnergyModel;
+use crate::model::Model;
+use crate::sim::{Accelerator, ModelCycleSummary, SimStats};
+use crate::workload::Request;
+
+/// Sequence cap shared by the artifact-free backends. Matches the compiled
+/// tiny artifact's `seq` so that every backend truncates, batches, and
+/// attributes tokens identically for the same trace and policy.
+pub const DEFAULT_SEQ_LIMIT: usize = 32;
+
+/// Row-sampling bound shared by the artifact-free backends when deriving
+/// their per-token cost model: whole matrices for tiny/BERT-scale models,
+/// sampled-and-scaled for Llama-scale.
+pub const COST_SAMPLE_ROWS: usize = 512;
+
+/// What one executed batch produced, regardless of backend.
+#[derive(Clone, Debug)]
+pub struct BatchOutcome {
+    /// Per-request logits, in request order. Backends that do not compute
+    /// logits (pure simulation) return empty rows.
+    pub logits: Vec<Vec<f32>>,
+    /// Execution time of the batch in seconds: host wall-clock for
+    /// functional/PJRT execution, simulated accelerator service time for
+    /// the sim backend.
+    pub exec_s: f64,
+    /// Simulated/functional activity counters attributed to the batch
+    /// (all-zero when the backend measures nothing itself; per-request
+    /// attribution always comes from [`ExecutionBackend::cost`]).
+    pub stats: SimStats,
+}
+
+/// A way to execute one batch of requests. Implementations own whatever
+/// state they need (compiled artifacts, materialized weights, or a cost
+/// model) and must answer every batch whose size respects
+/// [`ExecutionBackend::max_batch`].
+pub trait ExecutionBackend {
+    /// Stable identifier (`"sim"`, `"functional"`, `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    /// Largest batch the backend accepts.
+    fn max_batch(&self) -> usize;
+
+    /// Longest per-request sequence processed; longer requests truncate.
+    fn seq_limit(&self) -> usize;
+
+    /// Logit width per request (0 when the backend produces no logits).
+    fn n_classes(&self) -> usize;
+
+    /// Per-token accelerator cost model used for request attribution.
+    fn cost(&self) -> &CostModel;
+
+    /// Execute one batch; `requests.len()` must be ≤ `max_batch()`.
+    fn run_batch(&self, requests: &[Request]) -> crate::Result<BatchOutcome>;
+}
+
+/// Precomputed per-token accelerator costs for the served model
+/// (cycles/energy per token of matmul work, AxLLM vs baseline).
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    pub cycles_per_token_ax: f64,
+    pub cycles_per_token_base: f64,
+    pub energy_pj_per_token_ax: f64,
+    pub energy_pj_per_token_base: f64,
+    pub reuse_rate: f64,
+    pub freq_ghz: f64,
+}
+
+impl CostModel {
+    /// Derive from already-simulated per-token totals (AxLLM vs baseline).
+    pub fn from_totals(ax: &SimStats, base: &SimStats, freq_ghz: f64) -> CostModel {
+        let em = EnergyModel::default();
+        CostModel {
+            cycles_per_token_ax: ax.cycles as f64,
+            cycles_per_token_base: base.cycles as f64,
+            energy_pj_per_token_ax: em.energy(ax).total_pj,
+            energy_pj_per_token_base: em.energy(base).total_pj,
+            reuse_rate: ax.reuse_rate(),
+            freq_ghz,
+        }
+    }
+
+    /// Row-sampled derivation shared by the artifact-free backends: build
+    /// builder-validated AxLLM + multiply-only-baseline accelerators,
+    /// simulate one token of `model` on each, and return the cost model
+    /// together with the AxLLM run (per-token stats + model name).
+    pub fn from_sampled(
+        model: &Model,
+        acc_cfg: AcceleratorConfig,
+        sample_rows: usize,
+    ) -> crate::Result<(CostModel, ModelCycleSummary)> {
+        let acc = Accelerator::builder().config(acc_cfg).build()?;
+        let base = Accelerator::builder().config(acc_cfg).reuse(false).build()?;
+        let ax_run = acc.run_model(model, sample_rows, 11);
+        let base_run = base.run_model(model, sample_rows, 11);
+        let cost = Self::from_totals(&ax_run.total, &base_run.total, acc_cfg.freq_ghz);
+        Ok((cost, ax_run))
+    }
+
+    /// Derive from one simulated token (one input vector through every
+    /// weight matrix of the model).
+    pub fn from_sim(model: &Model, acc_cfg: AcceleratorConfig) -> CostModel {
+        let ax = Accelerator::axllm(acc_cfg).run_model(model, usize::MAX, 11);
+        let base = Accelerator::baseline(acc_cfg).run_model(model, usize::MAX, 11);
+        Self::from_totals(&ax.total, &base.total, acc_cfg.freq_ghz)
+    }
+
+    pub fn speedup(&self) -> f64 {
+        self.cycles_per_token_base / self.cycles_per_token_ax
+    }
+
+    /// Simulated accelerator service time for `tokens` tokens, seconds.
+    pub fn sim_time_s(&self, tokens: u64) -> f64 {
+        self.cycles_per_token_ax * tokens as f64 / (self.freq_ghz * 1e9)
+    }
+}

@@ -1,0 +1,135 @@
+//! Pure-simulation backend: serve traffic with cycle/energy attribution
+//! and no functional execution at all.
+//!
+//! One token is simulated through every weight matrix of the model at
+//! construction time (row-sampled for Llama-scale matrices); serving then
+//! scales those per-token counters by each batch's token count. `exec_s`
+//! is the **simulated accelerator service time** — the latency the batch
+//! would take on the modeled hardware — so queueing metrics stay
+//! meaningful without any host execution. Logits are empty: this backend
+//! exists for CI serving paths, capacity studies, and batcher tests where
+//! no artifact directory (and no PJRT runtime) is available.
+
+use crate::backend::{BatchOutcome, CostModel, ExecutionBackend, COST_SAMPLE_ROWS, DEFAULT_SEQ_LIMIT};
+use crate::config::{AcceleratorConfig, ModelConfig};
+use crate::model::Model;
+use crate::sim::SimStats;
+use crate::workload::Request;
+use anyhow::Result;
+
+/// Cycle-attribution-only execution backend.
+pub struct SimBackend {
+    model_name: String,
+    cost: CostModel,
+    per_token: SimStats,
+    seq_limit: usize,
+}
+
+impl SimBackend {
+    /// Simulate one token of `model_cfg` on builder-validated
+    /// accelerators (AxLLM and multiply-only baseline) and cache the
+    /// per-token costs.
+    pub fn new(model_cfg: ModelConfig, acc_cfg: AcceleratorConfig) -> Result<SimBackend> {
+        let model = Model::new(model_cfg, 11);
+        let (cost, ax_run) = CostModel::from_sampled(&model, acc_cfg, COST_SAMPLE_ROWS)?;
+        Ok(SimBackend {
+            model_name: ax_run.model,
+            cost,
+            per_token: ax_run.total,
+            seq_limit: DEFAULT_SEQ_LIMIT,
+        })
+    }
+
+    /// Override the per-request sequence cap (default
+    /// [`DEFAULT_SEQ_LIMIT`]).
+    pub fn with_seq_limit(mut self, seq: usize) -> SimBackend {
+        self.seq_limit = seq.max(1);
+        self
+    }
+
+    /// Name of the simulated model.
+    pub fn model_name(&self) -> &str {
+        &self.model_name
+    }
+}
+
+impl ExecutionBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn max_batch(&self) -> usize {
+        // No compiled shape to respect — the batching policy is the only
+        // batch-size bound.
+        usize::MAX
+    }
+
+    fn seq_limit(&self) -> usize {
+        self.seq_limit
+    }
+
+    fn n_classes(&self) -> usize {
+        0
+    }
+
+    fn cost(&self) -> &CostModel {
+        &self.cost
+    }
+
+    fn run_batch(&self, requests: &[Request]) -> crate::Result<BatchOutcome> {
+        let tokens: u64 = requests
+            .iter()
+            .map(|r| r.seq_len.min(self.seq_limit) as u64)
+            .sum();
+        Ok(BatchOutcome {
+            logits: vec![Vec::new(); requests.len()],
+            exec_s: self.cost.sim_time_s(tokens),
+            stats: self.per_token.scaled(tokens, 1),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Dataset;
+
+    fn req(id: u64, seq_len: usize) -> Request {
+        Request {
+            id,
+            dataset: Dataset::Imdb,
+            seq_len,
+            arrival_s: id as f64 * 0.001,
+        }
+    }
+
+    #[test]
+    fn sim_backend_attributes_per_token() {
+        let b = SimBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper()).unwrap();
+        assert_eq!(b.name(), "sim");
+        assert!(b.cost().speedup() > 1.3);
+        let one = b.run_batch(&[req(0, 16)]).unwrap();
+        let two = b.run_batch(&[req(0, 16), req(1, 16)]).unwrap();
+        assert_eq!(one.logits, vec![Vec::<f32>::new()]);
+        assert!(two.exec_s > one.exec_s);
+        assert_eq!(two.stats.elements, 2 * one.stats.elements);
+        assert!(one.stats.cycles > 0);
+    }
+
+    #[test]
+    fn sim_backend_truncates_to_seq_limit() {
+        let b = SimBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper()).unwrap();
+        let capped = b.run_batch(&[req(0, 10_000)]).unwrap();
+        let exact = b.run_batch(&[req(0, DEFAULT_SEQ_LIMIT)]).unwrap();
+        assert_eq!(capped.stats, exact.stats);
+    }
+
+    #[test]
+    fn sim_backend_rejects_invalid_sizing() {
+        let bad = AcceleratorConfig {
+            lanes: 0,
+            ..AcceleratorConfig::paper()
+        };
+        assert!(SimBackend::new(ModelConfig::tiny(), bad).is_err());
+    }
+}

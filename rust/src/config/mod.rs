@@ -87,6 +87,9 @@ impl AcceleratorConfig {
         if self.lanes == 0 {
             return Err(anyhow!("lanes must be > 0"));
         }
+        if self.buffer_entries == 0 {
+            return Err(anyhow!("buffer_entries must be > 0"));
+        }
         if self.slices == 0 || self.buffer_entries % self.slices != 0 {
             return Err(anyhow!(
                 "slices ({}) must divide buffer_entries ({})",

@@ -1,64 +1,30 @@
-//! The inference engine: PJRT functional execution + simulated
-//! accelerator attribution for every batch.
+//! The serving engine, generic over [`ExecutionBackend`]: batches flow
+//! from the trace batcher into whichever backend the deployment selected
+//! (pure-sim, functional, or PJRT), and every request gets simulated
+//! accelerator cycles/energy attributed through the backend's cost model.
 
+use crate::backend::{ExecutionBackend, PjrtBackend};
+pub use crate::backend::CostModel;
 use crate::config::AcceleratorConfig;
 use crate::coordinator::batcher::{Batch, BatchPolicy, DynamicBatcher};
 use crate::coordinator::metrics::{LatencyStats, ServeSummary};
 use crate::energy::EnergyModel;
-use crate::model::Model;
-use crate::runtime::{ArtifactSet, Runtime, TinyWeights};
-use crate::sim::{Accelerator, SimStats};
-use crate::workload::{synth_embeddings, Request};
+use crate::sim::SimStats;
+use crate::workload::Request;
 use anyhow::Result;
 use std::path::Path;
-
-/// Precomputed per-token accelerator costs for the served model
-/// (cycles/energy per token of matmul work, AxLLM vs baseline).
-#[derive(Clone, Copy, Debug)]
-pub struct CostModel {
-    pub cycles_per_token_ax: f64,
-    pub cycles_per_token_base: f64,
-    pub energy_pj_per_token_ax: f64,
-    pub energy_pj_per_token_base: f64,
-    pub reuse_rate: f64,
-    pub freq_ghz: f64,
-}
-
-impl CostModel {
-    /// Derive from one simulated token (one input vector through every
-    /// weight matrix of the model).
-    pub fn from_sim(model: &Model, acc_cfg: AcceleratorConfig) -> CostModel {
-        let ax = Accelerator::axllm(acc_cfg).run_model(model, usize::MAX, 11);
-        let base = Accelerator::baseline(acc_cfg).run_model(model, usize::MAX, 11);
-        let em = EnergyModel::default();
-        CostModel {
-            cycles_per_token_ax: ax.total.cycles as f64,
-            cycles_per_token_base: base.total.cycles as f64,
-            energy_pj_per_token_ax: em.energy(&ax.total).total_pj,
-            energy_pj_per_token_base: em.energy(&base.total).total_pj,
-            reuse_rate: ax.total.reuse_rate(),
-            freq_ghz: acc_cfg.freq_ghz,
-        }
-    }
-
-    pub fn speedup(&self) -> f64 {
-        self.cycles_per_token_base / self.cycles_per_token_ax
-    }
-
-    /// Simulated accelerator service time for `tokens` tokens, seconds.
-    pub fn sim_time_s(&self, tokens: u64) -> f64 {
-        self.cycles_per_token_ax * tokens as f64 / (self.freq_ghz * 1e9)
-    }
-}
 
 /// Per-request outcome.
 #[derive(Clone, Debug)]
 pub struct RequestResult {
     pub id: u64,
+    /// Logits for this request (empty when the backend computes none,
+    /// e.g. [`crate::backend::SimBackend`]).
     pub logits: Vec<f32>,
     /// Time spent queued before the batch dispatched.
     pub queue_wait_s: f64,
-    /// Host (PJRT) execution time of the batch this request rode in.
+    /// Execution time of the batch this request rode in (host wall-clock
+    /// for functional/PJRT, simulated service time for the sim backend).
     pub exec_s: f64,
     /// queue_wait + exec.
     pub latency_s: f64,
@@ -68,88 +34,62 @@ pub struct RequestResult {
     pub sim_energy_j: f64,
 }
 
-/// The serving engine: compiled artifacts (incl. weights) + cost model.
-pub struct Engine {
-    _rt: Runtime,
-    pub artifacts: ArtifactSet,
-    pub cost: CostModel,
-    /// Embedding seed base — request `id` deterministically derives its
-    /// synthetic embedding stream.
-    pub embed_seed: u64,
+/// The serving engine: a batching/attribution shell around any
+/// [`ExecutionBackend`]. Defaults to the PJRT artifact backend so
+/// existing call sites (`Engine::load`) keep their meaning.
+pub struct Engine<B: ExecutionBackend = PjrtBackend> {
+    /// The execution backend every batch dispatches through.
+    pub backend: B,
 }
 
-impl Engine {
-    /// Load everything from an artifact directory (built by
-    /// `make artifacts`).
-    pub fn load(dir: &Path, acc_cfg: AcceleratorConfig) -> Result<Engine> {
-        let rt = Runtime::cpu()?;
-        let artifacts = ArtifactSet::load(&rt, dir)?;
-        let model = Model::new(artifacts.manifest.model_config(), artifacts.manifest.seed);
-        let cost = CostModel::from_sim(&model, acc_cfg);
-        let embed_seed = artifacts.manifest.seed;
-        Ok(Engine {
-            _rt: rt,
-            artifacts,
-            cost,
-            embed_seed,
-        })
+impl<B: ExecutionBackend> Engine<B> {
+    /// Wrap a constructed backend.
+    pub fn new(backend: B) -> Engine<B> {
+        Engine { backend }
     }
 
-    /// The quantized weights the artifact executes with.
-    pub fn weights(&self) -> &TinyWeights {
-        &self.artifacts.weights
+    /// Per-token accelerator cost model used for attribution.
+    pub fn cost(&self) -> &CostModel {
+        self.backend.cost()
     }
 
-    /// Batch capacity of the compiled model artifact.
+    /// Batch capacity of the backend.
     pub fn max_batch(&self) -> usize {
-        self.artifacts.manifest.batch
+        self.backend.max_batch()
     }
 
-    /// Synthesize the (padded/truncated) embedding block for one request.
-    pub fn request_embeddings(&self, req: &Request) -> Vec<f32> {
-        let m = &self.artifacts.manifest;
-        let mut e = synth_embeddings(
-            req.seq_len.min(m.seq),
-            m.d_model,
-            self.embed_seed ^ req.id.wrapping_mul(0x9E3779B97F4A7C15),
-        );
-        e.resize(m.seq * m.d_model, 0.0);
-        e
-    }
-
-    /// Execute one batch through the PJRT model; returns per-request
+    /// Execute one batch through the backend; returns per-request
     /// results (logits + attribution).
     pub fn run_batch(&self, batch: &Batch) -> Result<Vec<RequestResult>> {
-        let m = &self.artifacts.manifest;
         assert!(
-            batch.requests.len() <= m.batch,
-            "batch {} exceeds artifact capacity {}",
+            batch.requests.len() <= self.backend.max_batch(),
+            "batch {} exceeds backend capacity {}",
             batch.requests.len(),
-            m.batch
+            self.backend.max_batch()
         );
-        // Pad the batch to the compiled size with zero sequences.
-        let mut data = vec![0f32; m.batch * m.seq * m.d_model];
-        for (slot, req) in batch.requests.iter().enumerate() {
-            let e = self.request_embeddings(req);
-            data[slot * m.seq * m.d_model..(slot + 1) * m.seq * m.d_model]
-                .copy_from_slice(&e);
-        }
-        let t0 = std::time::Instant::now();
-        let logits = self.artifacts.run_tiny_model(&data)?;
-        let exec_s = t0.elapsed().as_secs_f64();
-
+        let outcome = self.backend.run_batch(&batch.requests)?;
+        anyhow::ensure!(
+            outcome.logits.len() == batch.requests.len(),
+            "backend {} returned {} logit rows for {} requests",
+            self.backend.name(),
+            outcome.logits.len(),
+            batch.requests.len()
+        );
+        let cost = self.backend.cost();
+        let seq_limit = self.backend.seq_limit();
+        let exec_s = outcome.exec_s;
         let mut out = Vec::with_capacity(batch.requests.len());
-        for (slot, req) in batch.requests.iter().enumerate() {
-            let tokens = req.seq_len.min(m.seq) as u64;
+        for (req, logits) in batch.requests.iter().zip(outcome.logits) {
+            let tokens = req.seq_len.min(seq_limit) as u64;
             let queue_wait_s = (batch.dispatch_s - req.arrival_s).max(0.0);
             out.push(RequestResult {
                 id: req.id,
-                logits: logits[slot * m.n_classes..(slot + 1) * m.n_classes].to_vec(),
+                logits,
                 queue_wait_s,
                 exec_s,
                 latency_s: queue_wait_s + exec_s,
-                sim_cycles: (self.cost.cycles_per_token_ax * tokens as f64) as u64,
-                sim_energy_j: self.cost.energy_pj_per_token_ax * tokens as f64 * 1e-12,
+                sim_cycles: (cost.cycles_per_token_ax * tokens as f64) as u64,
+                sim_energy_j: cost.energy_pj_per_token_ax * tokens as f64 * 1e-12,
             });
         }
         Ok(out)
@@ -168,9 +108,10 @@ impl Engine {
         };
         let n_req = trace.len();
         let first_arrival = trace.first().map(|r| r.arrival_s).unwrap_or(0.0);
+        let seq_limit = self.backend.seq_limit();
         let tokens: u64 = trace
             .iter()
-            .map(|r| r.seq_len.min(self.artifacts.manifest.seq) as u64)
+            .map(|r| r.seq_len.min(seq_limit) as u64)
             .sum();
         let batches = DynamicBatcher::batch_trace(policy, trace);
         let mut results = Vec::with_capacity(n_req);
@@ -183,6 +124,7 @@ impl Engine {
         let span_s = (batches.last().map(|b| b.dispatch_s).unwrap_or(0.0) - first_arrival
             + latency.max_s)
             .max(1e-9);
+        let cost = self.backend.cost();
         let summary = ServeSummary {
             requests: n_req,
             batches: batches.len(),
@@ -192,11 +134,19 @@ impl Engine {
             throughput_rps: n_req as f64 / span_s,
             throughput_tps: tokens as f64 / span_s,
             sim_cycles,
-            sim_reuse_rate: self.cost.reuse_rate,
+            sim_reuse_rate: cost.reuse_rate,
             sim_energy_j,
-            sim_speedup: self.cost.speedup(),
+            sim_speedup: cost.speedup(),
         };
         Ok((results, summary))
+    }
+}
+
+impl Engine {
+    /// Load a PJRT-backed engine from an artifact directory (built by
+    /// `make artifacts`).
+    pub fn load(dir: &Path, acc_cfg: AcceleratorConfig) -> Result<Engine> {
+        Ok(Engine::new(PjrtBackend::load(dir, acc_cfg)?))
     }
 }
 
@@ -212,6 +162,7 @@ pub fn attribute(stats: &SimStats, freq_ghz: f64) -> (f64, f64) {
 mod tests {
     use super::*;
     use crate::config::ModelConfig;
+    use crate::model::Model;
 
     #[test]
     fn cost_model_reflects_reuse() {

@@ -1,12 +1,24 @@
-//! The serving coordinator: request queue → dynamic batcher → router that
-//! dispatches every batch to the PJRT functional model while attributing
-//! simulated accelerator cycles/energy to each request.
+//! The serving coordinator: request queue → dynamic batcher → engine that
+//! dispatches every batch through a pluggable execution backend while
+//! attributing simulated accelerator cycles/energy to each request.
 //!
-//! The paper's contribution lives at the micro-architecture level, so L3
-//! here is the thin-but-real serving harness a deployment of AxLLM would
-//! sit behind (DESIGN.md §2): admission, batching, padding, execution,
-//! per-request metrics, and throughput/latency reporting. Rust owns the
-//! event loop; Python never runs on this path.
+//! The paper's contribution lives at the micro-architecture level, so the
+//! coordinator is the thin-but-real serving harness a deployment of AxLLM
+//! would sit behind: admission, batching, padding, execution, per-request
+//! metrics, and throughput/latency reporting. [`Engine`] is generic over
+//! [`crate::backend::ExecutionBackend`], so the same batching and
+//! attribution code serves traffic three ways:
+//!
+//! - `Engine::new(SimBackend::…)` — cycle-attribution-only serving, no
+//!   artifacts or PJRT (CI, capacity studies);
+//! - `Engine::new(FunctionalBackend::…)` — bit-exact in-process execution
+//!   with real logits (correctness soaks);
+//! - `Engine::load(dir, …)` — the compiled PJRT artifact runtime
+//!   (production-shaped path; requires `make artifacts`).
+//!
+//! Rust owns the event loop; Python never runs on this path. See
+//! `rust/DESIGN.md` for the `Engine → ExecutionBackend → Accelerator`
+//! layering diagram.
 
 pub mod batcher;
 pub mod engine;

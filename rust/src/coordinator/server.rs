@@ -1,7 +1,8 @@
-//! Threaded serving front-end: a live request queue in front of the
-//! engine.
+//! Threaded serving front-end: a live request queue in front of a
+//! PJRT-backed engine.
 //!
-//! The engine (and its PJRT client) is constructed inside the worker
+//! The engine (and the PJRT client inside its
+//! [`crate::backend::PjrtBackend`]) is constructed inside the worker
 //! thread — PJRT handles are not `Send`, so the worker owns the whole
 //! execution stack and the outside world talks to it through channels.
 //! Batching uses wall-clock `recv_timeout`, mirroring the deterministic

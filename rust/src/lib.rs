@@ -26,9 +26,13 @@
 //!   calibrated to the paper's 15nm synthesis anchors.
 //! - [`runtime`] — PJRT CPU runtime that loads the AOT-compiled JAX/Pallas
 //!   artifacts (HLO text) and executes them from Rust.
+//! - [`backend`] — the unified `ExecutionBackend` API: pure-sim,
+//!   functional (bit-exact), and PJRT execution behind one trait, so the
+//!   serving stack is generic over how a batch actually runs.
 //! - [`coordinator`] — a serving layer (request queue, dynamic batcher,
-//!   router) that drives batched inference through the functional runtime
-//!   while attributing cycles/energy through the simulator.
+//!   backend-generic engine) that drives batched inference through any
+//!   execution backend while attributing cycles/energy through the
+//!   simulator.
 //! - [`report`] — generators for every figure and table in the paper's
 //!   evaluation (Fig. 1, Fig. 8, Fig. 9, LoRA, ShiftAddLLM, power, area,
 //!   plus ablations).
@@ -36,9 +40,10 @@
 //!   property-test runner, TOML-subset config parser, table printer) so the
 //!   crate builds fully offline.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `rust/DESIGN.md` for the architecture, the module map, and the
+//! `Engine → ExecutionBackend → Accelerator` layering diagram.
 
+pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod energy;

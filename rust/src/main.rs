@@ -4,13 +4,14 @@
 //! axllm reproduce <experiment> [--csv] [--seed N] [--sample-rows N]
 //! axllm simulate --model <name> [--baseline|--sliced] [--lanes N]
 //!                [--buffers N] [--slices P] [--seed N] [--sample-rows N]
-//! axllm serve [--requests N] [--rate R] [--dataset D] [--batch B]
-//!             [--artifacts DIR]
+//! axllm serve [--backend sim|functional|pjrt] [--model M] [--requests N]
+//!             [--rate R] [--dataset D] [--batch B] [--artifacts DIR]
 //! axllm info [--artifacts DIR]
 //! ```
 //!
 //! Argument parsing is hand-rolled (no clap offline); see `cli::Args`.
 
+use axllm::backend::{ExecutionBackend, FunctionalBackend, SimBackend};
 use axllm::config::{table1_benchmarks, AcceleratorConfig, Dataset, ModelConfig};
 use axllm::coordinator::{BatchPolicy, Engine};
 use axllm::model::Model;
@@ -22,6 +23,11 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 mod cli {
+    /// Flags that never take a value. Without this list, `--csv fig1`
+    /// would greedily swallow `fig1` as the flag's value and lose the
+    /// positional experiment name.
+    const BOOL_FLAGS: &[&str] = &["csv", "baseline", "sliced"];
+
     /// Minimal flag parser: positionals plus `--key value` / `--flag`.
     pub struct Args {
         pub positional: Vec<String>,
@@ -38,9 +44,26 @@ mod cli {
                     if name.is_empty() {
                         return Err("stray `--`".into());
                     }
-                    let value = match it.peek() {
-                        Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
-                        _ => "true".to_string(),
+                    let value = if BOOL_FLAGS.contains(&name) {
+                        // Boolean flags only consume an explicit boolean
+                        // literal (`--csv false` still works); anything
+                        // else stays a positional.
+                        match it.peek() {
+                            Some(v)
+                                if matches!(
+                                    v.as_str(),
+                                    "true" | "false" | "1" | "0" | "yes" | "no"
+                                ) =>
+                            {
+                                it.next().unwrap().clone()
+                            }
+                            _ => "true".to_string(),
+                        }
+                    } else {
+                        match it.peek() {
+                            Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                            _ => "true".to_string(),
+                        }
                     };
                     flags.insert(name.to_string(), value);
                 } else {
@@ -80,8 +103,17 @@ USAGE:
   axllm simulate --model <distilbert|bert-base|bert-large|llama-7b|llama-13b|tiny>
                  [--baseline|--sliced] [--lanes N] [--buffers N] [--slices P]
                  [--seed N] [--sample-rows N]
-  axllm serve [--requests N] [--rate R] [--dataset <agnews|yelp|squad|imdb>]
-              [--batch B] [--max-wait-ms W] [--artifacts DIR]
+  axllm serve [--backend <sim|functional|pjrt>] [--model M] [--requests N]
+              [--rate R] [--dataset <agnews|yelp|squad|imdb>] [--batch B]
+              [--max-wait-ms W] [--artifacts DIR] [--seed N]
+      backends:
+        sim         cycle/energy attribution only — no logits, no artifacts
+        functional  bit-exact in-process reuse-datapath execution, no artifacts
+        pjrt        compiled HLO artifacts through the PJRT runtime (default)
+      examples:
+        axllm serve --backend sim --requests 64 --model tiny
+        axllm serve --backend functional --requests 16 --dataset squad
+        axllm serve --backend pjrt --artifacts artifacts --batch 4
   axllm info [--artifacts DIR]
 ";
 
@@ -187,18 +219,19 @@ fn cmd_simulate(args: &cli::Args) -> Result<(), String> {
     cfg.lanes = args.get("lanes", cfg.lanes)?;
     cfg.buffer_entries = args.get("buffers", cfg.buffer_entries)?;
     cfg.slices = args.get("slices", cfg.slices)?;
-    cfg.validate().map_err(|e| e.to_string())?;
     let seed = args.get("seed", 42u64)?;
     let sample_rows = args.get("sample-rows", 64usize)?;
 
     let model = Model::new(model_cfg.clone(), seed);
+    let builder = Accelerator::builder().config(cfg);
     let acc = if args.get_bool("baseline") {
-        Accelerator::baseline(cfg)
+        builder.reuse(false).build()
     } else if args.get_bool("sliced") {
-        Accelerator::axllm(cfg).with_lane_model(LaneModel::Sliced)
+        builder.lane_model(LaneModel::Sliced).build()
     } else {
-        Accelerator::axllm(cfg)
-    };
+        builder.build()
+    }
+    .map_err(|e| e.to_string())?;
     let summary = acc.run_model(&model, sample_rows, seed);
     let s = &summary.total;
     println!("model: {} ({} layers)", model_cfg.name, model_cfg.n_layers);
@@ -222,18 +255,26 @@ fn cmd_simulate(args: &cli::Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_serve(args: &cli::Args) -> Result<(), String> {
-    let n = args.get("requests", 64usize)?;
-    let rate = args.get("rate", 200.0f64)?;
-    let dataset =
-        dataset_by_name(args.flag("dataset").unwrap_or("imdb")).ok_or("unknown dataset")?;
-    let dir = PathBuf::from(args.flag("artifacts").unwrap_or("artifacts"));
-    let policy = BatchPolicy {
-        max_batch: args.get("batch", 4usize)?,
-        max_wait_s: args.get("max-wait-ms", 10.0f64)? / 1e3,
-    };
-    let engine = Engine::load(&dir, AcceleratorConfig::paper()).map_err(|e| format!("{e:#}"))?;
-    let trace = TraceGenerator::new(dataset, rate, 7).take(n);
+/// Serve a synthetic trace through any backend and print the summary.
+/// `seed` drives the trace generator (and, for the functional backend,
+/// the synthesized weights too).
+fn run_serve<B: ExecutionBackend>(
+    engine: &Engine<B>,
+    n: usize,
+    rate: f64,
+    dataset: Dataset,
+    policy: BatchPolicy,
+    seed: u64,
+) -> Result<(), String> {
+    println!(
+        "backend: {} — cost model: {:.0} cycles/token AxLLM vs {:.0} baseline ({:.2}x), reuse {:.1}%",
+        engine.backend.name(),
+        engine.cost().cycles_per_token_ax,
+        engine.cost().cycles_per_token_base,
+        engine.cost().speedup(),
+        engine.cost().reuse_rate * 100.0
+    );
+    let trace = TraceGenerator::new(dataset, rate, seed).take(n);
     let (_results, s) = engine
         .serve_trace(trace, policy)
         .map_err(|e| format!("{e:#}"))?;
@@ -261,6 +302,45 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
         s.sim_speedup
     );
     Ok(())
+}
+
+fn cmd_serve(args: &cli::Args) -> Result<(), String> {
+    let n = args.get("requests", 64usize)?;
+    let rate = args.get("rate", 200.0f64)?;
+    let dataset =
+        dataset_by_name(args.flag("dataset").unwrap_or("imdb")).ok_or("unknown dataset")?;
+    let policy = BatchPolicy {
+        max_batch: args.get("batch", 4usize)?,
+        max_wait_s: args.get("max-wait-ms", 10.0f64)? / 1e3,
+    };
+    // Default 7 keeps the historical `axllm serve` trace (earlier
+    // versions hardcoded trace seed 7), so recorded outputs stay
+    // comparable.
+    let seed = args.get("seed", 7u64)?;
+    let acc_cfg = AcceleratorConfig::paper();
+    let backend = args.flag("backend").unwrap_or("pjrt");
+    match backend {
+        "sim" => {
+            let name = args.flag("model").unwrap_or("tiny");
+            let model_cfg = model_by_name(name).ok_or_else(|| format!("unknown model: {name}"))?;
+            let b = SimBackend::new(model_cfg, acc_cfg).map_err(|e| format!("{e:#}"))?;
+            run_serve(&Engine::new(b), n, rate, dataset, policy, seed)
+        }
+        "functional" => {
+            let name = args.flag("model").unwrap_or("tiny");
+            let model_cfg = model_by_name(name).ok_or_else(|| format!("unknown model: {name}"))?;
+            let b = FunctionalBackend::new(model_cfg, acc_cfg, seed).map_err(|e| format!("{e:#}"))?;
+            run_serve(&Engine::new(b), n, rate, dataset, policy, seed)
+        }
+        "pjrt" => {
+            let dir = PathBuf::from(args.flag("artifacts").unwrap_or("artifacts"));
+            let engine = Engine::load(&dir, acc_cfg).map_err(|e| format!("{e:#}"))?;
+            run_serve(&engine, n, rate, dataset, policy, seed)
+        }
+        other => Err(format!(
+            "unknown backend: {other} (expected sim|functional|pjrt)"
+        )),
+    }
 }
 
 fn cmd_info(args: &cli::Args) -> Result<(), String> {
@@ -324,5 +404,61 @@ fn main() -> ExitCode {
             eprintln!("error: {e}");
             ExitCode::FAILURE
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::cli::Args;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn bool_flags_do_not_swallow_positionals() {
+        let a = Args::parse(&argv(&["reproduce", "--csv", "fig1"])).unwrap();
+        assert_eq!(a.positional, vec!["reproduce", "fig1"]);
+        assert!(a.get_bool("csv"));
+        // Trailing bool flag still parses.
+        let b = Args::parse(&argv(&["reproduce", "fig1", "--csv"])).unwrap();
+        assert_eq!(b.positional, vec!["reproduce", "fig1"]);
+        assert!(b.get_bool("csv"));
+    }
+
+    #[test]
+    fn bool_flags_between_valued_flags() {
+        let a = Args::parse(&argv(&[
+            "simulate", "--baseline", "--model", "tiny", "--sliced", "--lanes", "8",
+        ]))
+        .unwrap();
+        assert_eq!(a.positional, vec!["simulate"]);
+        assert!(a.get_bool("baseline"));
+        assert!(a.get_bool("sliced"));
+        assert_eq!(a.flag("model"), Some("tiny"));
+        assert_eq!(a.get("lanes", 0usize).unwrap(), 8);
+    }
+
+    #[test]
+    fn bool_flags_still_accept_explicit_literals() {
+        let a = Args::parse(&argv(&["reproduce", "--csv", "false", "fig1"])).unwrap();
+        assert!(!a.get_bool("csv"));
+        assert_eq!(a.positional, vec!["reproduce", "fig1"]);
+        let b = Args::parse(&argv(&["reproduce", "--csv", "yes", "fig1"])).unwrap();
+        assert!(b.get_bool("csv"));
+        assert_eq!(b.positional, vec!["reproduce", "fig1"]);
+    }
+
+    #[test]
+    fn valued_flags_still_consume_values() {
+        let a = Args::parse(&argv(&["serve", "--backend", "sim", "--requests", "64"])).unwrap();
+        assert_eq!(a.flag("backend"), Some("sim"));
+        assert_eq!(a.get("requests", 0usize).unwrap(), 64);
+        assert_eq!(a.positional, vec!["serve"]);
+    }
+
+    #[test]
+    fn stray_double_dash_rejected() {
+        assert!(Args::parse(&argv(&["reproduce", "--"])).is_err());
     }
 }

@@ -19,8 +19,9 @@
 use crate::config::AcceleratorConfig;
 use crate::model::{MatKind, Model};
 use crate::quant::QuantMatrix;
-use crate::sim::{adder_tree, baseline, lane, sliced, LaneModel, SimStats};
+use crate::sim::{adder_tree, LaneModel, SimStats};
 use crate::util::pool::par_map;
+use anyhow::anyhow;
 
 /// Result of one simulated vector×matrix multiplication.
 #[derive(Clone, Debug)]
@@ -40,7 +41,123 @@ pub struct Accelerator {
     pub overlap_drain: bool,
 }
 
+/// Validating constructor for [`Accelerator`] instances.
+///
+/// `Accelerator::axllm` / `Accelerator::baseline` accept whatever sizing
+/// they are given; the builder is the checked front door — it rejects
+/// nonsense sizings (zero lanes, non-power-of-two slicing, slices wider
+/// than the buffer, a reuse-pipeline lane model with the Result Cache
+/// disabled) before a single cycle is simulated.
+#[derive(Clone, Copy, Debug)]
+pub struct AcceleratorBuilder {
+    cfg: AcceleratorConfig,
+    lane_model: Option<LaneModel>,
+    overlap_drain: bool,
+}
+
+impl Default for AcceleratorBuilder {
+    fn default() -> Self {
+        Accelerator::builder()
+    }
+}
+
+impl AcceleratorBuilder {
+    /// Start from a whole config (field setters below still apply on top).
+    pub fn config(mut self, cfg: AcceleratorConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Number of parallel lanes (L).
+    pub fn lanes(mut self, n: usize) -> Self {
+        self.cfg.lanes = n;
+        self
+    }
+
+    /// W_buff / Out_buff entries per lane.
+    pub fn buffer_entries(mut self, n: usize) -> Self {
+        self.cfg.buffer_entries = n;
+        self
+    }
+
+    /// Buffer/RC slices per lane (P-way parallelism).
+    pub fn slices(mut self, n: usize) -> Self {
+        self.cfg.slices = n;
+        self
+    }
+
+    /// Collision-queue depth in front of RC/Out_buff slices.
+    pub fn queue_depth(mut self, n: usize) -> Self {
+        self.cfg.queue_depth = n;
+        self
+    }
+
+    /// Enable or disable the Result Cache (reuse path).
+    pub fn reuse(mut self, enabled: bool) -> Self {
+        self.cfg.reuse_enabled = enabled;
+        self
+    }
+
+    /// Force a specific lane model (default: derived from `reuse`).
+    pub fn lane_model(mut self, m: LaneModel) -> Self {
+        self.lane_model = Some(m);
+        self
+    }
+
+    /// Double-buffered Out_buffs (adder-tree drain overlaps next round).
+    pub fn overlap_drain(mut self, v: bool) -> Self {
+        self.overlap_drain = v;
+        self
+    }
+
+    /// Validate the sizing and construct the accelerator.
+    pub fn build(self) -> crate::Result<Accelerator> {
+        // Builder-specific checks run first so their messages are the ones
+        // users see (validate()'s divisibility rule also catches a slice
+        // count above the buffer size, with a less direct message).
+        if !self.cfg.slices.is_power_of_two() {
+            return Err(anyhow!(
+                "slices ({}) must be a power of two",
+                self.cfg.slices
+            ));
+        }
+        if self.cfg.slices > self.cfg.buffer_entries {
+            return Err(anyhow!(
+                "slices ({}) must not exceed buffer_entries ({})",
+                self.cfg.slices,
+                self.cfg.buffer_entries
+            ));
+        }
+        self.cfg.validate()?;
+        let lane_model = self.lane_model.unwrap_or(if self.cfg.reuse_enabled {
+            LaneModel::Serial
+        } else {
+            LaneModel::Baseline
+        });
+        if !self.cfg.reuse_enabled && lane_model != LaneModel::Baseline {
+            return Err(anyhow!(
+                "lane model {lane_model:?} needs the reuse path; enable reuse or use LaneModel::Baseline"
+            ));
+        }
+        Ok(Accelerator {
+            cfg: self.cfg,
+            lane_model,
+            overlap_drain: self.overlap_drain,
+        })
+    }
+}
+
 impl Accelerator {
+    /// Checked construction: start from the paper sizing, override fields,
+    /// and validate with [`AcceleratorBuilder::build`].
+    pub fn builder() -> AcceleratorBuilder {
+        AcceleratorBuilder {
+            cfg: AcceleratorConfig::paper(),
+            lane_model: None,
+            overlap_drain: true,
+        }
+    }
+
     /// AxLLM in its paper configuration.
     pub fn axllm(cfg: AcceleratorConfig) -> Self {
         let lane_model = if cfg.reuse_enabled {
@@ -73,16 +190,21 @@ impl Accelerator {
         self
     }
 
-    fn chunk_cols(&self) -> usize {
+    /// W_buff-bounded column-chunk width: the number of weight elements a
+    /// lane streams per round, and therefore the span one Result-Cache
+    /// fill can be reused across. The functional backend uses the same
+    /// bound so its reuse accounting matches the simulated datapath.
+    pub fn chunk_cols(&self) -> usize {
         self.cfg.buffer_entries.min(self.cfg.round_cols)
     }
 
+    /// The lane timing model this instance dispatches through.
+    pub fn lane_sim(&self) -> &'static dyn crate::sim::LaneSim {
+        self.lane_model.sim()
+    }
+
     fn run_chunk(&self, x: i8, weights: &[i8]) -> crate::sim::ChunkResult {
-        match self.lane_model {
-            LaneModel::Baseline => baseline::simulate_chunk(x, weights, &self.cfg),
-            LaneModel::Serial => lane::simulate_chunk(x, weights, &self.cfg),
-            LaneModel::Sliced => sliced::simulate_chunk(x, weights, &self.cfg),
-        }
+        self.lane_sim().simulate_chunk(x, weights, &self.cfg)
     }
 
     /// Simulate `y = x·W` completely (cycles + functional output).
@@ -326,6 +448,60 @@ mod tests {
         // element count.
         assert_eq!(summary.total.elements, expect_elems);
         assert!(summary.total.reuse_rate() > 0.5);
+    }
+
+    #[test]
+    fn builder_rejects_nonsense_sizings() {
+        assert!(Accelerator::builder().lanes(0).build().is_err());
+        assert!(Accelerator::builder().buffer_entries(0).build().is_err());
+        // 3 divides 192, but slices must be a power of two.
+        assert!(Accelerator::builder()
+            .buffer_entries(192)
+            .slices(3)
+            .build()
+            .is_err());
+        // Slices wider than the buffer.
+        assert!(Accelerator::builder()
+            .buffer_entries(256)
+            .slices(512)
+            .build()
+            .is_err());
+        // Reuse-pipeline lane models need the Result Cache.
+        assert!(Accelerator::builder()
+            .reuse(false)
+            .lane_model(LaneModel::Sliced)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn builder_derives_lane_model_from_reuse() {
+        let ax = Accelerator::builder().lanes(16).build().unwrap();
+        assert_eq!(ax.lane_model, LaneModel::Serial);
+        assert_eq!(ax.cfg.lanes, 16);
+        assert!(ax.overlap_drain);
+        let base = Accelerator::builder().reuse(false).build().unwrap();
+        assert_eq!(base.lane_model, LaneModel::Baseline);
+        let sliced = Accelerator::builder()
+            .lane_model(LaneModel::Sliced)
+            .overlap_drain(false)
+            .build()
+            .unwrap();
+        assert_eq!(sliced.lane_model, LaneModel::Sliced);
+        assert!(!sliced.overlap_drain);
+    }
+
+    #[test]
+    fn builder_matmul_matches_legacy_constructors() {
+        let (x, w) = small_case(64, 48, 21);
+        let cfg = AcceleratorConfig {
+            lanes: 16,
+            ..AcceleratorConfig::default()
+        };
+        let built = Accelerator::builder().config(cfg).build().unwrap().matmul(&x, &w);
+        let legacy = Accelerator::axllm(cfg).matmul(&x, &w);
+        assert_eq!(built.output, legacy.output);
+        assert_eq!(built.stats, legacy.stats);
     }
 
     #[test]

@@ -1,0 +1,132 @@
+//! Trait-based lane micro-architecture models.
+//!
+//! [`LaneSim`] is the open extension point for lane timing models: anything
+//! that can turn one (stationary input element × weight chunk) pass into a
+//! [`ChunkResult`] can drive the [`Accelerator`](crate::sim::Accelerator)
+//! schedule. The three built-in implementations mirror the paper:
+//!
+//! - [`BaselineLane`] — multipliers only, no Result Cache (Fig. 9 baseline);
+//! - [`SerialLane`] — the serial dual compute/reuse pipeline (paper-default);
+//! - [`SlicedLane`] — P-way sliced buffers with collision queues (§IV).
+//!
+//! [`LaneModel`] remains the closed, `Copy` *identifier* of the built-in
+//! models (it travels inside configs and CLI flags); [`LaneModel::sim`]
+//! resolves it to the corresponding `&'static dyn LaneSim`, which is what
+//! the accelerator actually dispatches through.
+
+use crate::config::AcceleratorConfig;
+use crate::sim::{baseline, lane, sliced, ChunkResult, LaneModel};
+
+/// A lane timing model: simulates one input element streaming one weight
+/// chunk, producing cycle/activity counters and the functional partial
+/// sums. Implementations must be functionally exact — every built-in model
+/// is property-tested bit-identical against dense multiplication.
+pub trait LaneSim: Send + Sync {
+    /// Which built-in [`LaneModel`] this implementation realizes.
+    fn kind(&self) -> LaneModel;
+
+    /// Short identifier for tables and CLI output.
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// Simulate one (input element × weight chunk) pass through the lane.
+    fn simulate_chunk(&self, x: i8, weights: &[i8], cfg: &AcceleratorConfig) -> ChunkResult;
+}
+
+/// Multiply-only lane: every element takes the compute path.
+pub struct BaselineLane;
+
+/// Serial dual-pipeline lane: compute path on first occurrence of a folded
+/// value, 1-cycle reuse path on repeats (paper-calibrated default).
+pub struct SerialLane;
+
+/// P-way sliced lane: parallel buffer/RC slices with collision queues and
+/// credit-based backpressure (§IV "Partitioning for Higher Throughput").
+pub struct SlicedLane;
+
+impl LaneSim for BaselineLane {
+    fn kind(&self) -> LaneModel {
+        LaneModel::Baseline
+    }
+
+    fn simulate_chunk(&self, x: i8, weights: &[i8], cfg: &AcceleratorConfig) -> ChunkResult {
+        baseline::simulate_chunk(x, weights, cfg)
+    }
+}
+
+impl LaneSim for SerialLane {
+    fn kind(&self) -> LaneModel {
+        LaneModel::Serial
+    }
+
+    fn simulate_chunk(&self, x: i8, weights: &[i8], cfg: &AcceleratorConfig) -> ChunkResult {
+        lane::simulate_chunk(x, weights, cfg)
+    }
+}
+
+impl LaneSim for SlicedLane {
+    fn kind(&self) -> LaneModel {
+        LaneModel::Sliced
+    }
+
+    fn simulate_chunk(&self, x: i8, weights: &[i8], cfg: &AcceleratorConfig) -> ChunkResult {
+        sliced::simulate_chunk(x, weights, cfg)
+    }
+}
+
+/// Every built-in lane model as a trait object, for sweeps and
+/// equivalence tests.
+pub static ALL_LANE_SIMS: [&dyn LaneSim; 3] = [&BaselineLane, &SerialLane, &SlicedLane];
+
+impl LaneModel {
+    /// All built-in lane models.
+    pub const ALL: [LaneModel; 3] = [LaneModel::Baseline, LaneModel::Serial, LaneModel::Sliced];
+
+    /// Short identifier for tables and CLI output.
+    pub fn name(self) -> &'static str {
+        match self {
+            LaneModel::Baseline => "baseline",
+            LaneModel::Serial => "serial",
+            LaneModel::Sliced => "sliced",
+        }
+    }
+
+    /// Resolve to the lane timing model the accelerator dispatches through.
+    pub fn sim(self) -> &'static dyn LaneSim {
+        match self {
+            LaneModel::Baseline => &BaselineLane,
+            LaneModel::Serial => &SerialLane,
+            LaneModel::Sliced => &SlicedLane,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_round_trips_through_sim() {
+        for lm in LaneModel::ALL {
+            assert_eq!(lm.sim().kind(), lm);
+            assert_eq!(lm.sim().name(), lm.name());
+        }
+    }
+
+    #[test]
+    fn trait_objects_match_free_functions() {
+        let cfg = AcceleratorConfig::paper();
+        let weights: Vec<i8> = (0..64).map(|i| ((i * 31) % 255 - 127) as i8).collect();
+        let direct = lane::simulate_chunk(7, &weights, &cfg);
+        let via_trait = LaneModel::Serial.sim().simulate_chunk(7, &weights, &cfg);
+        assert_eq!(direct.partials, via_trait.partials);
+        assert_eq!(direct.stats, via_trait.stats);
+    }
+
+    #[test]
+    fn all_lane_sims_cover_all_models() {
+        let kinds: Vec<LaneModel> = ALL_LANE_SIMS.iter().map(|s| s.kind()).collect();
+        assert_eq!(kinds, LaneModel::ALL.to_vec());
+    }
+}

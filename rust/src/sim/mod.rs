@@ -1,49 +1,66 @@
 //! Cycle-level simulator of the AxLLM accelerator (paper §III.c–§IV).
 //!
+//! ## Architecture
+//!
+//! The simulator is layered around two abstractions:
+//!
+//! - [`LaneSim`] — the lane timing-model trait. A lane model turns one
+//!   (stationary input element × weight chunk) pass into a [`ChunkResult`]
+//!   (cycle/activity counters + functional partial sums). The built-in
+//!   implementations are [`BaselineLane`], [`SerialLane`], and
+//!   [`SlicedLane`]; new micro-architectures plug in by implementing the
+//!   trait — the accelerator schedule never names a concrete model.
+//! - [`Accelerator`] — the L-lane instance that orchestrates a lane model
+//!   over the input-stationary schedule with bounded-column rounds and
+//!   adder-tree accumulation. Construct it with [`Accelerator::builder`],
+//!   which validates the sizing (lanes > 0, slices a power of two that
+//!   divides the buffer entries, …) before any cycle is simulated.
+//!
 //! ## Timing model
 //!
 //! Latencies come from the paper's 15nm RTL synthesis (§IV): multiplier =
-//! 3 cycles, buffer/RC access = 1 cycle. Three lane models are provided:
+//! 3 cycles, buffer/RC access = 1 cycle. The three built-in lane models:
 //!
-//! - [`baseline`] — multipliers only, no Result Cache: every weight element
-//!   occupies the lane's multiplier for `mult_latency` cycles. This is the
-//!   normalization baseline of Fig. 9 (*"the AxLLM architecture with just
-//!   multipliers (and not the reuse buffer)"*).
-//! - [`lane`] — the **serial dual-pipeline** lane: the first occurrence of
-//!   a folded value takes the compute path (`mult_latency` cycles on the
-//!   single in-order write port), repeats take the reuse path (1-cycle RC
-//!   read). This model reproduces the paper's published absolute numbers:
-//!   DistilBERT baseline/AxLLM = 159.34M/85.11M cycles ⇒ ratio 0.534 =
-//!   ((1−r)·3 + r·1)/3 at r ≈ 0.70 — i.e. the Fig. 9 numbers follow
-//!   hit-cost 1 / miss-cost `mult_latency` serialization. (The paper's §IV
-//!   pipeline prose suggests more overlap than its own numbers exhibit; we
-//!   document the discrepancy in EXPERIMENTS.md and expose the more
-//!   aggressive model separately.)
-//! - [`sliced`] — the §IV "Partitioning for Higher Throughput"
-//!   micro-architecture: P-way sliced W/Out/RC buffers, per-slice
-//!   collision queues with credit-based backpressure, round-robin
-//!   arbitration, a single shared (pipelined) multiplier per lane, and
-//!   RAW-hazard stalls. Used for the slicing ablation (E11) and the
-//!   hazard-rate claim (E10).
+//! - [`baseline`] / [`BaselineLane`] — multipliers only, no Result Cache:
+//!   every weight element occupies the lane's multiplier for
+//!   `mult_latency` cycles. This is the normalization baseline of Fig. 9
+//!   (*"the AxLLM architecture with just multipliers (and not the reuse
+//!   buffer)"*).
+//! - [`lane`] / [`SerialLane`] — the **serial dual-pipeline** lane: the
+//!   first occurrence of a folded value takes the compute path
+//!   (`mult_latency` cycles on the single in-order write port), repeats
+//!   take the reuse path (1-cycle RC read). This model reproduces the
+//!   paper's published absolute numbers: DistilBERT baseline/AxLLM =
+//!   159.34M/85.11M cycles ⇒ ratio 0.534 = ((1−r)·3 + r·1)/3 at r ≈ 0.70.
+//! - [`sliced`] / [`SlicedLane`] — the §IV "Partitioning for Higher
+//!   Throughput" micro-architecture: P-way sliced W/Out/RC buffers,
+//!   per-slice collision queues with credit-based backpressure,
+//!   round-robin arbitration, a single shared (pipelined) multiplier per
+//!   lane, and RAW-hazard stalls.
 //!
-//! All lane models also compute the actual partial sums, which tests
-//! cross-check against dense multiplication — the simulator cannot drift
-//! from the functional semantics.
+//! All lane models also compute the actual partial sums, which tests and
+//! property tests cross-check against dense multiplication — the simulator
+//! cannot drift from the functional semantics. See `rust/DESIGN.md` for
+//! how the simulator slots under the serving stack
+//! (`Engine → ExecutionBackend → Accelerator → LaneSim`).
 
 pub mod accelerator;
 pub mod adder_tree;
 pub mod baseline;
 pub mod lane;
+pub mod lane_model;
 pub mod queue;
 pub mod rc;
 pub mod shiftadd;
 pub mod sliced;
 pub mod stats;
 
-pub use accelerator::{Accelerator, MatmulResult, ModelCycleSummary};
+pub use accelerator::{Accelerator, AcceleratorBuilder, MatmulResult, ModelCycleSummary};
+pub use lane_model::{BaselineLane, LaneSim, SerialLane, SlicedLane, ALL_LANE_SIMS};
 pub use stats::SimStats;
 
-/// Which lane micro-architecture model to simulate.
+/// Identifier of a built-in lane micro-architecture model. Resolve to the
+/// timing model itself with [`LaneModel::sim`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LaneModel {
     /// Multiply-only baseline (no RC).

@@ -3,8 +3,8 @@
 //! `harness = false` bench targets call [`Bench::new`] and register
 //! closures; each is warmed up, then timed over enough iterations to pass a
 //! minimum measurement window, and median/mean/σ are reported in a
-//! criterion-like format. Results can also be dumped as CSV for the
-//! EXPERIMENTS.md §Perf log.
+//! criterion-like format. Results can also be dumped as CSV or as the
+//! machine-readable JSON perf log (see `rust/DESIGN.md` §Perf).
 
 use std::time::{Duration, Instant};
 
@@ -154,6 +154,31 @@ impl Bench {
         &self.results
     }
 
+    /// Machine-readable JSON dump:
+    /// `[{"name": …, "iterations": N, "ns_per_op": N, …}]` where
+    /// `ns_per_op` is the median. Bench targets write this next to their
+    /// stdout report (e.g. `BENCH_sim_hot_loop.json`) so successive PRs
+    /// have a perf trajectory to compare against.
+    pub fn json(&self) -> String {
+        let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+        let mut out = String::from("[\n");
+        for (i, m) in self.results.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            out.push_str(&format!(
+                "  {{\"name\": \"{}\", \"iterations\": {}, \"ns_per_op\": {}, \"mean_ns\": {}, \"stddev_ns\": {}}}",
+                esc(&m.name),
+                m.iters,
+                m.median.as_nanos(),
+                m.mean.as_nanos(),
+                m.stddev.as_nanos()
+            ));
+        }
+        out.push_str("\n]\n");
+        out
+    }
+
     /// CSV dump (name,median_ns,mean_ns,stddev_ns,throughput_eps).
     pub fn csv(&self) -> String {
         let mut out = String::from("name,median_ns,mean_ns,stddev_ns,throughput_eps\n");
@@ -203,6 +228,24 @@ mod tests {
         });
         assert!(b.results()[0].throughput().unwrap() > 0.0);
         assert!(b.csv().lines().count() == 2);
+    }
+
+    #[test]
+    fn json_lists_every_measurement() {
+        std::env::set_var("AXLLM_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        b.run("alpha \"quoted\"", || {
+            black_box(1u64 + 1);
+        });
+        b.run("beta", || {
+            black_box(2u64 + 2);
+        });
+        let j = b.json();
+        assert!(j.starts_with('[') && j.trim_end().ends_with(']'));
+        assert_eq!(j.matches("\"name\"").count(), 2);
+        assert!(j.contains("\\\"quoted\\\""));
+        assert!(j.contains("\"ns_per_op\""));
+        assert!(j.contains("\"iterations\""));
     }
 
     #[test]

@@ -75,6 +75,13 @@ impl TraceGenerator {
     }
 }
 
+/// Derive the per-request embedding seed from a backend's base seed and
+/// the request id. Every execution backend must use this same derivation
+/// so one request id sees bit-identical inputs across backends.
+pub fn request_seed(embed_seed: u64, id: u64) -> u64 {
+    embed_seed ^ id.wrapping_mul(0x9E3779B97F4A7C15)
+}
+
 /// Synthesize a sequence of token embeddings: `seq_len × d_model` f32,
 /// unit-variance entries, deterministic in (seed, request id).
 pub fn synth_embeddings(seq_len: usize, d_model: usize, seed: u64) -> Vec<f32> {

@@ -1,0 +1,124 @@
+//! Property tests over the execution-backend API (in-crate property
+//! runner — see `util::prop`).
+//!
+//! Two equivalence claims anchor the backend redesign:
+//! 1. the `FunctionalBackend` logit path (reuse matmul at the backend's
+//!    W_buff chunk) is bit-identical to dense int8×int8→i32 GEMM;
+//! 2. every built-in `LaneSim` implementation produces identical
+//!    functional output and element counts — lane models differ only in
+//!    timing, never in arithmetic.
+
+use axllm::backend::FunctionalBackend;
+use axllm::config::{AcceleratorConfig, ModelConfig};
+use axllm::exec::{dense_matmul, reuse_matmul_chunked};
+use axllm::quant::{QuantMatrix, QuantParams};
+use axllm::sim::{Accelerator, LaneModel, ALL_LANE_SIMS};
+use axllm::util::prop::{check, Config};
+use axllm::util::rng::Rng;
+use axllm::{prop_assert, prop_assert_eq};
+
+fn random_matrix(rng: &mut Rng, rows: usize, cols: usize) -> QuantMatrix {
+    let data: Vec<i8> = (0..rows * cols)
+        .map(|_| rng.range_i64(-127, 127) as i8)
+        .collect();
+    QuantMatrix::from_q(rows, cols, data, QuantParams { scale: 1.0, bits: 8 })
+}
+
+fn random_input(rng: &mut Rng, n: usize) -> Vec<i8> {
+    (0..n).map(|_| rng.range_i64(-127, 127) as i8).collect()
+}
+
+#[test]
+fn prop_functional_logit_path_bit_identical_to_dense() {
+    let backend =
+        FunctionalBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper(), 42).unwrap();
+    let chunk = backend.chunk();
+    assert!(chunk > 0);
+    check(
+        "functional-dense-exact",
+        Config {
+            cases: 48,
+            seed: 0xF0,
+        },
+        |rng| {
+            let rows = 1 + rng.index(96);
+            let cols = 1 + rng.index(160);
+            let w = random_matrix(rng, rows, cols);
+            let x = random_input(rng, rows);
+            let (y, stats) = reuse_matmul_chunked(&x, &w, chunk);
+            prop_assert_eq!(y, dense_matmul(&x, &w));
+            prop_assert_eq!(stats.mults + stats.reuses, (rows * cols) as u64);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lane_sim_trait_objects_agree_on_chunks() {
+    check(
+        "lane-sim-chunks-agree",
+        Config {
+            cases: 64,
+            seed: 0x1A,
+        },
+        |rng| {
+            let n = 1 + rng.index(256);
+            let weights = random_input(rng, n);
+            let x = rng.range_i64(-127, 127) as i8;
+            let cfg = AcceleratorConfig::paper();
+            let base = ALL_LANE_SIMS[0].simulate_chunk(x, &weights, &cfg);
+            prop_assert_eq!(base.stats.elements, n as u64);
+            for sim in &ALL_LANE_SIMS[1..] {
+                let r = sim.simulate_chunk(x, &weights, &cfg);
+                prop_assert_eq!(r.partials, base.partials);
+                prop_assert_eq!(r.stats.elements, base.stats.elements);
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lane_sim_impls_agree_on_matmuls() {
+    // Generalizes the fixed-case `matmul_matches_dense_all_lane_models`
+    // unit test: randomized shapes/configs, dispatched through the
+    // builder-constructed trait objects.
+    check(
+        "lane-sim-matmuls-agree",
+        Config {
+            cases: 24,
+            seed: 0x1B,
+        },
+        |rng| {
+            let rows = 1 + rng.index(80);
+            let cols = 1 + rng.index(128);
+            let w = random_matrix(rng, rows, cols);
+            let x = random_input(rng, rows);
+            let cfg = AcceleratorConfig {
+                lanes: *rng.choose(&[1usize, 8, 32]),
+                ..AcceleratorConfig::paper()
+            };
+            let dense = dense_matmul(&x, &w);
+            let mut outputs = Vec::new();
+            for lm in LaneModel::ALL {
+                let acc = Accelerator::builder()
+                    .config(cfg)
+                    .lane_model(lm)
+                    .build()
+                    .map_err(|e| e.to_string())?;
+                let r = acc.matmul(&x, &w);
+                prop_assert_eq!(r.output, dense);
+                outputs.push((r.stats.elements, lm));
+            }
+            for (elems, lm) in &outputs[1..] {
+                prop_assert!(
+                    *elems == outputs[0].0,
+                    "{lm:?} elements {} != {}",
+                    elems,
+                    outputs[0].0
+                );
+            }
+            Ok(())
+        },
+    );
+}
