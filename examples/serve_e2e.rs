@@ -11,10 +11,14 @@
 //!   cargo run --release --example serve_e2e            # pjrt (needs `make artifacts`)
 //!   cargo run --release --example serve_e2e sim        # attribution only, no artifacts
 //!   cargo run --release --example serve_e2e functional # bit-exact, no artifacts
+//!
+//! The artifact-free backends additionally demo the *live* path: a
+//! threaded `Server` replica pool serving the same scheduler core as the
+//! trace batcher, aggregated into the same `ServeSummary`.
 
 use axllm::backend::{ExecutionBackend, FunctionalBackend, SimBackend};
 use axllm::config::{AcceleratorConfig, Dataset, ModelConfig};
-use axllm::coordinator::{BatchPolicy, Engine};
+use axllm::coordinator::{BatchPolicy, Engine, Server};
 use axllm::util::table::{count, fnum, Table};
 use axllm::workload::TraceGenerator;
 use std::path::PathBuf;
@@ -78,6 +82,44 @@ fn serve_all<B: ExecutionBackend>(engine: &Engine<B>, check_logits: bool) -> any
     Ok(())
 }
 
+/// Drive the live path: a 2-replica pool, burst-submitted trace, results
+/// aggregated through the same `ServeSummary` the trace path reports.
+fn live_pool_demo<B, F>(make: F, check_logits: bool) -> anyhow::Result<()>
+where
+    B: ExecutionBackend + 'static,
+    F: Fn(usize) -> anyhow::Result<Engine<B>> + Send + Clone + 'static,
+{
+    const REPLICAS: usize = 2;
+    let pool = Server::start_pool(
+        REPLICAS,
+        make,
+        BatchPolicy {
+            max_batch: 4,
+            max_wait_s: 0.010,
+        },
+    );
+    let trace = TraceGenerator::new(Dataset::Imdb, 400.0, 7).take(64);
+    // run() prefers the worker's real error over channel failures.
+    let run = pool.run(trace, false)?;
+    assert_eq!(run.results.len(), 64);
+    if check_logits {
+        assert!(run
+            .results
+            .iter()
+            .all(|r| !r.logits.is_empty() && r.logits.iter().all(|v| v.is_finite())));
+    }
+    let s = &run.summary;
+    println!(
+        "live pool ({} replicas): {} requests in {} batches, {:.1} req/s, p95 {:.2}ms",
+        REPLICAS,
+        s.requests,
+        s.batches,
+        s.throughput_rps,
+        s.latency.p95_s * 1e3
+    );
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let backend = std::env::args().nth(1).unwrap_or_else(|| "pjrt".into());
     let acc_cfg = AcceleratorConfig::paper();
@@ -85,11 +127,25 @@ fn main() -> anyhow::Result<()> {
         "sim" => {
             let engine = Engine::new(SimBackend::new(ModelConfig::tiny(), acc_cfg)?);
             serve_all(&engine, false)?;
+            live_pool_demo(
+                move |_i| Ok(Engine::new(SimBackend::new(ModelConfig::tiny(), acc_cfg)?)),
+                false,
+            )?;
             println!("Sim backend: batching + attribution with zero artifact/PJRT dependency. ✓");
         }
         "functional" => {
             let engine = Engine::new(FunctionalBackend::new(ModelConfig::tiny(), acc_cfg, 42)?);
             serve_all(&engine, true)?;
+            live_pool_demo(
+                move |_i| {
+                    Ok(Engine::new(FunctionalBackend::new(
+                        ModelConfig::tiny(),
+                        acc_cfg,
+                        42,
+                    )?))
+                },
+                true,
+            )?;
             println!("Functional backend: bit-exact reuse-datapath serving, no artifacts. ✓");
         }
         "pjrt" => {

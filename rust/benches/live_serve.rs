@@ -1,0 +1,95 @@
+//! Live serving throughput: one shared burst trace through the threaded
+//! `Server` replica pool, single-replica vs multi-replica.
+//!
+//! The sim backend runs *paced* (`SimBackend::with_paced`): every batch
+//! occupies its worker for the simulated accelerator service time, so
+//! replica scaling measures real queue/pool dynamics instead of
+//! zero-cost execution. Throughput is reported in requests/second
+//! (`throughput_eps` in the JSON — elements are requests here).
+//!
+//! Emits `BENCH_live_serve.json` so successive PRs can compare the live
+//! serving trajectory; the pool entry is expected to show strictly higher
+//! requests/second than the single replica on the same trace.
+
+use axllm::backend::SimBackend;
+use axllm::config::{AcceleratorConfig, Dataset, ModelConfig};
+use axllm::coordinator::{BatchPolicy, Engine, Server, ServerPool};
+use axllm::util::bench::Bench;
+use axllm::workload::{Request, TraceGenerator};
+
+const N_REQUESTS: usize = 256;
+const POOL_REPLICAS: usize = 4;
+
+fn make_engine(_replica: usize) -> axllm::Result<Engine<SimBackend>> {
+    Ok(Engine::new(
+        SimBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper())?.with_paced(true),
+    ))
+}
+
+/// Burst-submit the whole trace and wait for every answer.
+fn serve_burst(pool: &ServerPool<SimBackend>, trace: &[Request]) {
+    let results = pool.serve(trace.to_vec(), false).expect("live workers must answer");
+    assert_eq!(results.len(), trace.len());
+}
+
+fn main() {
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait_s: 0.002,
+    };
+    let mut trace = TraceGenerator::new(Dataset::Imdb, 400.0, 7).take(N_REQUESTS);
+    // Pin every request to the full sequence cap so each paced batch
+    // sleeps for a few milliseconds of simulated service time — the
+    // 1-vs-N comparison then measures pool parallelism, not channel
+    // noise (keeps the `many > one` gate below robust on loaded CI).
+    for r in &mut trace {
+        r.seq_len = 32;
+    }
+
+    let single = Server::start_pool(1, make_engine, policy);
+    let pool = Server::start_pool(POOL_REPLICAS, make_engine, policy);
+    // Wait for every engine before timing anything.
+    single.cost().expect("single-replica engine must construct");
+    pool.cost().expect("pool engines must construct");
+
+    let mut b = Bench::new();
+    b.run_throughput("live_serve/sim-paced replicas=1", N_REQUESTS as u64, || {
+        serve_burst(&single, &trace);
+    });
+    b.run_throughput(
+        &format!("live_serve/sim-paced replicas={POOL_REPLICAS}"),
+        N_REQUESTS as u64,
+        || {
+            serve_burst(&pool, &trace);
+        },
+    );
+
+    let r = b.results();
+    let (one, many) = (
+        r[0].throughput().expect("single-replica throughput"),
+        r[1].throughput().expect("pool throughput"),
+    );
+    println!(
+        "\npool scaling: {:.0} req/s @1 replica → {:.0} req/s @{} replicas ({:.2}x)",
+        one,
+        many,
+        POOL_REPLICAS,
+        many / one
+    );
+    // Acceptance gate (ISSUE 2 / DESIGN.md §Perf): the replica pool must
+    // serve the same trace at strictly higher requests/second than a
+    // single replica. Failing loudly here makes CI catch any change that
+    // serializes the pool.
+    assert!(
+        many > one,
+        "replica pool ({many:.0} req/s) must beat a single replica ({one:.0} req/s)"
+    );
+    println!("\ncsv:\n{}", b.csv());
+    match std::fs::write("BENCH_live_serve.json", b.json()) {
+        Ok(()) => println!("wrote BENCH_live_serve.json"),
+        Err(e) => eprintln!("could not write BENCH_live_serve.json: {e}"),
+    }
+
+    single.shutdown().expect("single-replica shutdown");
+    pool.shutdown().expect("pool shutdown");
+}

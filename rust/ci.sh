@@ -1,5 +1,7 @@
 #!/usr/bin/env bash
-# Local mirror of .github/workflows/ci.yml: the tier-1 gate plus lints.
+# Local mirror of .github/workflows/ci.yml: the tier-1 gate plus lints,
+# the artifact-free live-server integration tests, and the live-serving
+# perf log.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -12,7 +14,14 @@ echo "== cargo build --release =="
 cargo build --release
 
 echo "== cargo test -q =="
+# Includes the artifact-free live-server integration suite
+# (rust/tests/live_server.rs): trickle-starvation regression,
+# live-vs-trace attribution equivalence, replica pool. Sim/functional
+# backends only — no artifacts needed.
 cargo test -q
+
+echo "== live serve bench (writes BENCH_live_serve.json) =="
+AXLLM_BENCH_FAST=1 cargo bench --bench live_serve
 
 echo "== cargo fmt --check =="
 cargo fmt --check

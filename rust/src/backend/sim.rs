@@ -23,6 +23,7 @@ pub struct SimBackend {
     cost: CostModel,
     per_token: SimStats,
     seq_limit: usize,
+    paced: bool,
 }
 
 impl SimBackend {
@@ -37,6 +38,7 @@ impl SimBackend {
             cost,
             per_token: ax_run.total,
             seq_limit: DEFAULT_SEQ_LIMIT,
+            paced: false,
         })
     }
 
@@ -44,6 +46,17 @@ impl SimBackend {
     /// [`DEFAULT_SEQ_LIMIT`]).
     pub fn with_seq_limit(mut self, seq: usize) -> SimBackend {
         self.seq_limit = seq.max(1);
+        self
+    }
+
+    /// When paced, `run_batch` *sleeps* for the simulated accelerator
+    /// service time instead of returning instantly. Live serving uses
+    /// this so a sim-backed worker is occupied for as long as the modeled
+    /// hardware would be — queueing dynamics and replica scaling then
+    /// behave like the modeled deployment instead of degenerating to
+    /// zero-cost execution. Trace-driven serving should stay unpaced.
+    pub fn with_paced(mut self, paced: bool) -> SimBackend {
+        self.paced = paced;
         self
     }
 
@@ -81,9 +94,13 @@ impl ExecutionBackend for SimBackend {
             .iter()
             .map(|r| r.seq_len.min(self.seq_limit) as u64)
             .sum();
+        let exec_s = self.cost.sim_time_s(tokens);
+        if self.paced {
+            std::thread::sleep(std::time::Duration::from_secs_f64(exec_s));
+        }
         Ok(BatchOutcome {
             logits: vec![Vec::new(); requests.len()],
-            exec_s: self.cost.sim_time_s(tokens),
+            exec_s,
             stats: self.per_token.scaled(tokens, 1),
         })
     }
@@ -122,6 +139,20 @@ mod tests {
         let capped = b.run_batch(&[req(0, 10_000)]).unwrap();
         let exact = b.run_batch(&[req(0, DEFAULT_SEQ_LIMIT)]).unwrap();
         assert_eq!(capped.stats, exact.stats);
+    }
+
+    #[test]
+    fn paced_run_batch_occupies_the_worker() {
+        let b = SimBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper())
+            .unwrap()
+            .with_paced(true);
+        let reqs: Vec<Request> = (0..8).map(|i| req(i, 32)).collect();
+        let t0 = std::time::Instant::now();
+        let out = b.run_batch(&reqs).unwrap();
+        // sleep() guarantees at-least semantics, so wall time bounds the
+        // simulated service time from above.
+        assert!(t0.elapsed().as_secs_f64() >= out.exec_s);
+        assert!(out.exec_s > 0.0);
     }
 
     #[test]

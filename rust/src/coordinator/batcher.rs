@@ -1,10 +1,22 @@
-//! Dynamic batching over a request trace.
+//! Dynamic batching: one scheduler core shared by trace-driven and live
+//! serving.
 //!
 //! Requests arrive with timestamps (from [`crate::workload::TraceGenerator`]
-//! or a live queue); the batcher forms a batch when either `max_batch`
-//! requests are waiting or the oldest request has waited `max_wait_s`.
-//! This is the standard serving trade-off: larger batches amortize
-//! executable dispatch, longer waits hurt tail latency.
+//! or a live queue); a batch forms when either `max_batch` requests are
+//! waiting or the oldest request has waited `max_wait_s`. This is the
+//! standard serving trade-off: larger batches amortize executable dispatch,
+//! longer waits hurt tail latency.
+//!
+//! [`BatchScheduler`] owns the closure rules against an *externally
+//! supplied* clock, so the same logic drives both callers:
+//!
+//! - trace serving ([`BatchScheduler::batch_trace`]) advances the clock to
+//!   each request's arrival stamp — fully deterministic, no wall clock;
+//! - the live [`crate::coordinator::Server`] worker advances the clock with
+//!   wall time and uses [`BatchScheduler::deadline_s`] to sleep *exactly
+//!   until the oldest pending request's deadline* — never a fresh
+//!   `max_wait_s` window per message, which is what used to let a steady
+//!   trickle of arrivals starve the oldest request indefinitely.
 
 use crate::workload::Request;
 
@@ -27,26 +39,34 @@ impl Default for BatchPolicy {
 }
 
 /// A closed batch: the requests plus the time at which it was dispatched.
+/// Scheduler closures (`offer`/`admit`/`poll`/`flush`) never emit an
+/// empty batch.
 #[derive(Clone, Debug)]
 pub struct Batch {
     pub requests: Vec<Request>,
     pub dispatch_s: f64,
 }
 
-/// Deterministic trace-driven batcher (no wall clock — simulation time
-/// comes from request arrival stamps, making tests and experiments
-/// reproducible).
+/// Deadline-tracking batch scheduler. Holds the pending request set and
+/// applies the closure rules; time is supplied by the caller (arrival
+/// stamps for traces, a shared epoch clock for live serving), making the
+/// policy logic identical — and identically testable — on both paths.
 #[derive(Clone, Debug)]
-pub struct DynamicBatcher {
+pub struct BatchScheduler {
     policy: BatchPolicy,
     pending: Vec<Request>,
 }
 
-impl DynamicBatcher {
+/// Trace-driving name for the scheduler (the original API). Both names
+/// refer to the *same* closure implementation — there is deliberately no
+/// second copy of the batching rules anywhere in the crate.
+pub type DynamicBatcher = BatchScheduler;
+
+impl BatchScheduler {
     pub fn new(policy: BatchPolicy) -> Self {
         assert!(policy.max_batch > 0);
         assert!(policy.max_wait_s >= 0.0);
-        DynamicBatcher {
+        BatchScheduler {
             policy,
             pending: Vec::new(),
         }
@@ -56,44 +76,98 @@ impl DynamicBatcher {
         self.pending.len()
     }
 
-    /// Offer one request; returns a batch if this arrival closed one.
+    /// Absolute deadline (seconds on the caller's clock) by which the
+    /// pending set must dispatch: the oldest arrival plus `max_wait_s`.
+    /// `None` when nothing is pending — there is nothing to wait for.
+    /// Scans all pending arrivals (bounded by `max_batch`) rather than
+    /// trusting insertion order, for the same reason the `max_batch`
+    /// closure folds over arrivals: concurrent submitters can deliver
+    /// slightly out-of-order stamps, and the wait bound must track the
+    /// true oldest request.
+    pub fn deadline_s(&self) -> Option<f64> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let oldest = self
+            .pending
+            .iter()
+            .map(|r| r.arrival_s)
+            .fold(f64::INFINITY, f64::min);
+        Some(oldest + self.policy.max_wait_s)
+    }
+
+    /// Close the pending batch if its deadline has passed at `now`.
+    /// The batch dispatches *at the deadline*, not at `now`: queue-wait
+    /// attribution is bounded by the policy even when the caller observes
+    /// the deadline late.
+    pub fn poll(&mut self, now: f64) -> Option<Batch> {
+        let deadline = self.deadline_s()?;
+        if now >= deadline {
+            Some(Batch {
+                requests: std::mem::take(&mut self.pending),
+                dispatch_s: deadline,
+            })
+        } else {
+            None
+        }
+    }
+
+    /// Offer one request at its arrival time; returns any batches this
+    /// arrival closed.
     ///
-    /// Closure rules, evaluated at the new request's arrival time `now`:
-    /// 1. if the oldest pending request has waited ≥ `max_wait_s`, the
-    ///    pending set (without the new arrival) dispatches first;
-    /// 2. if pending reaches `max_batch`, it dispatches immediately.
+    /// Closure rules, evaluated at the new request's arrival time:
+    /// 1. if the oldest pending request's deadline has passed, the pending
+    ///    set (without the new arrival) dispatches first, at its deadline;
+    /// 2. if pending then reaches `max_batch`, it dispatches immediately.
     pub fn offer(&mut self, req: Request) -> Vec<Batch> {
         let now = req.arrival_s;
         let mut out = Vec::new();
-        if let Some(oldest) = self.pending.first() {
-            if now - oldest.arrival_s >= self.policy.max_wait_s && !self.pending.is_empty() {
-                let dispatch_s = oldest.arrival_s + self.policy.max_wait_s;
-                out.push(Batch {
-                    requests: std::mem::take(&mut self.pending),
-                    dispatch_s,
-                });
-            }
+        if let Some(due) = self.poll(now) {
+            out.push(due);
         }
-        self.pending.push(req);
-        if self.pending.len() >= self.policy.max_batch {
-            out.push(Batch {
-                requests: std::mem::take(&mut self.pending),
-                dispatch_s: now,
-            });
+        if let Some(full) = self.admit(req) {
+            out.push(full);
         }
         out
     }
 
-    /// Flush the remaining requests at end of trace.
+    /// Admit one request applying only the `max_batch` closure — the
+    /// deadline rule is NOT evaluated. The live worker uses this while
+    /// draining a backlog, deferring deadline closures to one [`poll`] at
+    /// the current wall time once the queue is empty: requests that are
+    /// all already late then batch together (up to `max_batch`) instead
+    /// of replaying their stale inter-arrival gaps as singleton batches.
+    /// Deterministic trace replay must use [`offer`] instead.
+    ///
+    /// [`poll`]: BatchScheduler::poll
+    /// [`offer`]: BatchScheduler::offer
+    pub fn admit(&mut self, req: Request) -> Option<Batch> {
+        self.pending.push(req);
+        if self.pending.len() >= self.policy.max_batch {
+            // Dispatch at the latest member arrival (robust to slightly
+            // out-of-order stamps from concurrent submitters, so queue
+            // waits can never go negative).
+            let dispatch_s = self
+                .pending
+                .iter()
+                .map(|r| r.arrival_s)
+                .fold(f64::NEG_INFINITY, f64::max);
+            Some(Batch {
+                requests: std::mem::take(&mut self.pending),
+                dispatch_s,
+            })
+        } else {
+            None
+        }
+    }
+
+    /// Flush the remaining requests (end of trace / server shutdown).
+    /// Dispatches at the pending deadline or `now`, whichever is earlier.
     pub fn flush(&mut self, now: f64) -> Option<Batch> {
         if self.pending.is_empty() {
             None
         } else {
-            let dispatch_s = self
-                .pending
-                .first()
-                .map(|r| (r.arrival_s + self.policy.max_wait_s).min(now))
-                .unwrap_or(now);
+            let dispatch_s = self.deadline_s().map(|d| d.min(now)).unwrap_or(now);
             Some(Batch {
                 requests: std::mem::take(&mut self.pending),
                 dispatch_s,
@@ -103,7 +177,7 @@ impl DynamicBatcher {
 
     /// Batch an entire trace (requests must be arrival-ordered).
     pub fn batch_trace(policy: BatchPolicy, trace: Vec<Request>) -> Vec<Batch> {
-        let mut b = DynamicBatcher::new(policy);
+        let mut b = BatchScheduler::new(policy);
         let mut out = Vec::new();
         let end = trace.last().map(|r| r.arrival_s).unwrap_or(0.0);
         for r in trace {
@@ -194,6 +268,87 @@ mod tests {
         let batches = DynamicBatcher::batch_trace(BatchPolicy::default(), trace);
         for w in batches.windows(2) {
             assert!(w[1].dispatch_s >= w[0].dispatch_s);
+        }
+    }
+
+    #[test]
+    fn deadline_tracks_oldest_pending() {
+        let mut b = BatchScheduler::new(BatchPolicy {
+            max_batch: 8,
+            max_wait_s: 0.05,
+        });
+        assert_eq!(b.deadline_s(), None);
+        b.offer(req(0, 1.0));
+        assert!((b.deadline_s().unwrap() - 1.05).abs() < 1e-12);
+        // Later arrivals do NOT push the deadline out — this is the
+        // starvation bug the live server used to have.
+        b.offer(req(1, 1.02));
+        b.offer(req(2, 1.04));
+        assert!((b.deadline_s().unwrap() - 1.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn poll_dispatches_at_deadline_not_at_now() {
+        let mut b = BatchScheduler::new(BatchPolicy {
+            max_batch: 8,
+            max_wait_s: 0.05,
+        });
+        b.offer(req(0, 0.0));
+        // Not due yet.
+        assert!(b.poll(0.049).is_none());
+        assert_eq!(b.pending(), 1);
+        // Observed late: still attributed to the deadline.
+        let batch = b.poll(0.30).unwrap();
+        assert!((batch.dispatch_s - 0.05).abs() < 1e-12);
+        assert_eq!(b.pending(), 0);
+        assert!(b.poll(1.0).is_none());
+    }
+
+    #[test]
+    fn poll_driven_schedule_matches_batch_trace() {
+        // Drive the scheduler the way the live worker does — poll at each
+        // deadline that elapses between arrivals, then offer — and check
+        // the result is identical to the one-shot trace batching. Mixed
+        // inter-arrival gaps exercise both closure rules.
+        let policy = BatchPolicy {
+            max_batch: 3,
+            max_wait_s: 0.01,
+        };
+        let gaps = [
+            0.0, 0.002, 0.02, 0.001, 0.001, 0.03, 0.004, 0.004, 0.004, 0.004, 0.05, 0.001,
+        ];
+        let mut t = 0.0;
+        let mut trace = Vec::new();
+        for (i, g) in gaps.iter().enumerate() {
+            t += g;
+            trace.push(req(i as u64, t));
+        }
+
+        let expected = BatchScheduler::batch_trace(policy, trace.clone());
+
+        let mut live = BatchScheduler::new(policy);
+        let mut got = Vec::new();
+        for r in trace {
+            let arrival = r.arrival_s;
+            // The worker wakes at every deadline before the next message.
+            while let Some(d) = live.deadline_s() {
+                if d > arrival {
+                    break;
+                }
+                got.extend(live.poll(d));
+            }
+            got.extend(live.offer(r));
+        }
+        if let Some(last) = live.flush(t + policy.max_wait_s) {
+            got.push(last);
+        }
+
+        assert_eq!(expected.len(), got.len());
+        for (e, g) in expected.iter().zip(&got) {
+            assert!((e.dispatch_s - g.dispatch_s).abs() < 1e-12);
+            let eid: Vec<u64> = e.requests.iter().map(|r| r.id).collect();
+            let gid: Vec<u64> = g.requests.iter().map(|r| r.id).collect();
+            assert_eq!(eid, gid);
         }
     }
 }

@@ -7,7 +7,7 @@ use crate::backend::{ExecutionBackend, PjrtBackend};
 pub use crate::backend::CostModel;
 use crate::config::AcceleratorConfig;
 use crate::coordinator::batcher::{Batch, BatchPolicy, DynamicBatcher};
-use crate::coordinator::metrics::{LatencyStats, ServeSummary};
+use crate::coordinator::metrics::ServeSummary;
 use crate::energy::EnergyModel;
 use crate::sim::SimStats;
 use crate::workload::Request;
@@ -21,6 +21,8 @@ pub struct RequestResult {
     /// Logits for this request (empty when the backend computes none,
     /// e.g. [`crate::backend::SimBackend`]).
     pub logits: Vec<f32>,
+    /// Tokens attributed (sequence length truncated to the backend cap).
+    pub tokens: u64,
     /// Time spent queued before the batch dispatched.
     pub queue_wait_s: f64,
     /// Execution time of the batch this request rode in (host wall-clock
@@ -28,6 +30,11 @@ pub struct RequestResult {
     pub exec_s: f64,
     /// queue_wait + exec.
     pub latency_s: f64,
+    /// Dispatch time of the batch this request rode in (same clock as
+    /// `Request::arrival_s`).
+    pub dispatch_s: f64,
+    /// Number of requests in that batch.
+    pub batch_size: usize,
     /// Simulated accelerator cycles attributed to this request.
     pub sim_cycles: u64,
     /// Simulated accelerator energy (J).
@@ -81,13 +88,29 @@ impl<B: ExecutionBackend> Engine<B> {
         let mut out = Vec::with_capacity(batch.requests.len());
         for (req, logits) in batch.requests.iter().zip(outcome.logits) {
             let tokens = req.seq_len.min(seq_limit) as u64;
-            let queue_wait_s = (batch.dispatch_s - req.arrival_s).max(0.0);
+            let wait_s = batch.dispatch_s - req.arrival_s;
+            // The scheduler never dispatches a batch before one of its
+            // requests arrived; a negative wait means the submit-side and
+            // dispatch-side clocks use different epochs (the bug the shared
+            // server epoch fixed) and must not be clamped away silently.
+            debug_assert!(
+                wait_s >= -1e-9,
+                "negative queue wait {wait_s}s for request {} (dispatch {} < arrival {}): \
+                 batching clock epochs are skewed",
+                req.id,
+                batch.dispatch_s,
+                req.arrival_s
+            );
+            let queue_wait_s = wait_s.max(0.0);
             out.push(RequestResult {
                 id: req.id,
                 logits,
+                tokens,
                 queue_wait_s,
                 exec_s,
                 latency_s: queue_wait_s + exec_s,
+                dispatch_s: batch.dispatch_s,
+                batch_size: batch.requests.len(),
                 sim_cycles: (cost.cycles_per_token_ax * tokens as f64) as u64,
                 sim_energy_j: cost.energy_pj_per_token_ax * tokens as f64 * 1e-12,
             });
@@ -107,37 +130,12 @@ impl<B: ExecutionBackend> Engine<B> {
             ..policy
         };
         let n_req = trace.len();
-        let first_arrival = trace.first().map(|r| r.arrival_s).unwrap_or(0.0);
-        let seq_limit = self.backend.seq_limit();
-        let tokens: u64 = trace
-            .iter()
-            .map(|r| r.seq_len.min(seq_limit) as u64)
-            .sum();
         let batches = DynamicBatcher::batch_trace(policy, trace);
         let mut results = Vec::with_capacity(n_req);
         for b in &batches {
             results.extend(self.run_batch(b)?);
         }
-        let latency = LatencyStats::from_samples(results.iter().map(|r| r.latency_s).collect());
-        let sim_cycles: u64 = results.iter().map(|r| r.sim_cycles).sum();
-        let sim_energy_j: f64 = results.iter().map(|r| r.sim_energy_j).sum();
-        let span_s = (batches.last().map(|b| b.dispatch_s).unwrap_or(0.0) - first_arrival
-            + latency.max_s)
-            .max(1e-9);
-        let cost = self.backend.cost();
-        let summary = ServeSummary {
-            requests: n_req,
-            batches: batches.len(),
-            tokens,
-            span_s,
-            latency,
-            throughput_rps: n_req as f64 / span_s,
-            throughput_tps: tokens as f64 / span_s,
-            sim_cycles,
-            sim_reuse_rate: cost.reuse_rate,
-            sim_energy_j,
-            sim_speedup: cost.speedup(),
-        };
+        let summary = ServeSummary::from_results(&results, batches.len(), self.backend.cost());
         Ok((results, summary))
     }
 }

@@ -1,5 +1,10 @@
 //! Serving metrics: latency percentiles, throughput, and accelerator
-//! attribution (cycles, reuse, energy) aggregated over a run.
+//! attribution (cycles, reuse, energy) aggregated over a run — trace-driven
+//! or live ([`ServeSummary::from_results`] is the one aggregation both
+//! paths share).
+
+use crate::backend::CostModel;
+use crate::coordinator::engine::RequestResult;
 
 /// Latency distribution summary (seconds).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -20,7 +25,14 @@ impl LatencyStats {
         }
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let n = samples.len();
-        let pct = |p: f64| samples[(((n as f64) * p) as usize).min(n - 1)];
+        // Nearest-rank percentile: the smallest sample such that at least
+        // p·n samples are ≤ it, i.e. 1-indexed rank ⌈n·p⌉. The previous
+        // ⌊n·p⌋ 0-indexed form over-indexed by one rank (p50 of 1..=100
+        // returned the 51st sample, 0.51).
+        let pct = |p: f64| {
+            let rank = ((n as f64) * p).ceil().max(1.0) as usize;
+            samples[rank.min(n) - 1]
+        };
         LatencyStats {
             count: n,
             mean_s: samples.iter().sum::<f64>() / n as f64,
@@ -55,6 +67,49 @@ pub struct ServeSummary {
     pub sim_speedup: f64,
 }
 
+impl ServeSummary {
+    /// Aggregate per-request results into the end-of-run summary. Used by
+    /// `Engine::serve_trace` and by live serving (`Server` / `ServerPool`
+    /// drivers), so both report identical metrics for identical results.
+    ///
+    /// The span runs from the earliest arrival (`dispatch - queue_wait`)
+    /// to the latest completion (`dispatch + exec`).
+    pub fn from_results(
+        results: &[RequestResult],
+        batches: usize,
+        cost: &CostModel,
+    ) -> ServeSummary {
+        let latency = LatencyStats::from_samples(results.iter().map(|r| r.latency_s).collect());
+        let tokens: u64 = results.iter().map(|r| r.tokens).sum();
+        let first_arrival = results
+            .iter()
+            .map(|r| r.dispatch_s - r.queue_wait_s)
+            .fold(f64::INFINITY, f64::min);
+        let last_completion = results
+            .iter()
+            .map(|r| r.dispatch_s + r.exec_s)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let span_s = if results.is_empty() {
+            1e-9
+        } else {
+            (last_completion - first_arrival).max(1e-9)
+        };
+        ServeSummary {
+            requests: results.len(),
+            batches,
+            tokens,
+            span_s,
+            latency,
+            throughput_rps: results.len() as f64 / span_s,
+            throughput_tps: tokens as f64 / span_s,
+            sim_cycles: results.iter().map(|r| r.sim_cycles).sum(),
+            sim_reuse_rate: cost.reuse_rate,
+            sim_energy_j: results.iter().map(|r| r.sim_energy_j).sum(),
+            sim_speedup: cost.speedup(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -66,8 +121,21 @@ mod tests {
         assert_eq!(l.count, 100);
         assert!(l.p50_s <= l.p95_s && l.p95_s <= l.p99_s && l.p99_s <= l.max_s);
         assert!((l.mean_s - 0.505).abs() < 1e-9);
-        assert!((l.p50_s - 0.51).abs() < 1e-9);
+        // Nearest-rank: p50 of 1..=100 is the 50th sample (0.50), not the
+        // 51st — the off-by-one the ⌊n·p⌋ indexing used to produce.
+        assert!((l.p50_s - 0.50).abs() < 1e-9);
+        assert!((l.p95_s - 0.95).abs() < 1e-9);
+        assert!((l.p99_s - 0.99).abs() < 1e-9);
         assert!((l.max_s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nearest_rank_on_odd_counts() {
+        // n=5, p50 → rank ⌈2.5⌉ = 3 → third-smallest.
+        let l = LatencyStats::from_samples(vec![0.5, 0.1, 0.4, 0.2, 0.3]);
+        assert!((l.p50_s - 0.3).abs() < 1e-12);
+        // p99 → rank ⌈4.95⌉ = 5 → max.
+        assert!((l.p99_s - 0.5).abs() < 1e-12);
     }
 
     #[test]

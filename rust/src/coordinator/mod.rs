@@ -1,4 +1,4 @@
-//! The serving coordinator: request queue → dynamic batcher → engine that
+//! The serving coordinator: request queue → batch scheduler → engine that
 //! dispatches every batch through a pluggable execution backend while
 //! attributing simulated accelerator cycles/energy to each request.
 //!
@@ -16,16 +16,25 @@
 //! - `Engine::load(dir, …)` — the compiled PJRT artifact runtime
 //!   (production-shaped path; requires `make artifacts`).
 //!
+//! Trace-driven and live serving share one batch-closure implementation:
+//! [`BatchScheduler`] owns the deadline tracking and closure rules, the
+//! trace path drives it with arrival stamps
+//! ([`BatchScheduler::batch_trace`]), and the threaded [`Server`] worker
+//! drives it with wall time against a single shared epoch. [`ServerPool`]
+//! ([`Server::start_pool`]) scales live serving across N replica engines
+//! with least-loaded dispatch, and [`ServeSummary::from_results`] is the
+//! one aggregation both paths report through.
+//!
 //! Rust owns the event loop; Python never runs on this path. See
-//! `rust/DESIGN.md` for the `Engine → ExecutionBackend → Accelerator`
-//! layering diagram.
+//! `rust/DESIGN.md` for the `Server<B> → BatchScheduler → Engine<B>`
+//! layering diagram and the live-vs-trace invariants.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod server;
 
-pub use batcher::{Batch, BatchPolicy, DynamicBatcher};
+pub use batcher::{Batch, BatchPolicy, BatchScheduler, DynamicBatcher};
 pub use engine::{CostModel, Engine, RequestResult};
 pub use metrics::{LatencyStats, ServeSummary};
-pub use server::Server;
+pub use server::{LiveRun, Server, ServerPool, ServerStats};

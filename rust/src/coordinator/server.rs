@@ -1,20 +1,49 @@
 //! Threaded serving front-end: a live request queue in front of a
-//! PJRT-backed engine.
+//! backend-generic engine, plus a multi-replica worker pool.
 //!
-//! The engine (and the PJRT client inside its
-//! [`crate::backend::PjrtBackend`]) is constructed inside the worker
-//! thread — PJRT handles are not `Send`, so the worker owns the whole
-//! execution stack and the outside world talks to it through channels.
-//! Batching uses wall-clock `recv_timeout`, mirroring the deterministic
-//! trace batcher's policy.
+//! [`Server<B>`] is generic over [`ExecutionBackend`], like
+//! [`Engine<B>`]: live serving works artifact-free with
+//! [`crate::backend::SimBackend`] / [`crate::backend::FunctionalBackend`]
+//! and production-shaped with [`PjrtBackend`]. The engine is constructed
+//! *inside* the worker thread through a caller-supplied factory — PJRT
+//! handles are not `Send`, so the worker owns the whole execution stack
+//! and the outside world talks to it through channels.
+//!
+//! Two invariants shared with the trace path:
+//!
+//! - **One closure implementation.** The worker drives the same
+//!   [`BatchScheduler`] that `batch_trace` uses; its `recv_timeout` is the
+//!   time until the *oldest pending request's* deadline
+//!   (`oldest.arrival_s + max_wait_s − now`), never a fresh `max_wait_s`
+//!   window per message. A steady trickle of arrivals therefore cannot
+//!   starve the head of the queue: whenever the engine keeps up, queue
+//!   wait is bounded by `max_wait_s` (plus wake-up slop) by construction.
+//!   Under backlog the worker drains the queue before consulting the
+//!   clock (so batches still fill to `max_batch`) and stamps dispatches
+//!   at actual wall time, so overload shows up honestly in `queue_wait_s`
+//!   instead of being clipped to the policy bound.
+//! - **One clock.** The epoch `Instant` is created before the worker
+//!   spawns and moved into it, so submit-side arrival stamps and
+//!   worker-side dispatch stamps share an epoch and `queue_wait_s` cannot
+//!   absorb engine-construction time (or go negative and get silently
+//!   clamped).
+//!
+//! [`ServerPool`] ([`Server::start_pool`]) scales the same front-end
+//! across N replica workers — each with its own engine — using
+//! least-loaded dispatch with a round-robin tie-break.
 
+use crate::backend::{CostModel, ExecutionBackend, PjrtBackend};
 use crate::config::AcceleratorConfig;
-use crate::coordinator::batcher::{Batch, BatchPolicy};
+use crate::coordinator::batcher::{Batch, BatchPolicy, BatchScheduler};
 use crate::coordinator::engine::{Engine, RequestResult};
+use crate::coordinator::metrics::ServeSummary;
 use crate::workload::Request;
 use anyhow::Result;
+use std::collections::VecDeque;
+use std::marker::PhantomData;
 use std::path::PathBuf;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 enum Msg {
@@ -22,34 +51,133 @@ enum Msg {
     Shutdown,
 }
 
-/// A running server instance.
-pub struct Server {
-    tx: mpsc::Sender<Msg>,
-    handle: Option<std::thread::JoinHandle<Result<()>>>,
-    started: Instant,
+/// Live counters shared between a server front-end and its worker.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    /// Requests accepted by `submit`.
+    pub submitted: AtomicUsize,
+    /// Requests answered by the worker.
+    pub completed: AtomicUsize,
+    /// Batches the worker has dispatched.
+    pub batches: AtomicUsize,
 }
 
-impl Server {
-    /// Start the worker. Fails later (on first submit) if the artifacts
-    /// are missing; startup errors surface through `shutdown()`.
-    pub fn start(artifact_dir: PathBuf, acc_cfg: AcceleratorConfig, policy: BatchPolicy) -> Server {
+impl ServerStats {
+    /// Requests submitted but not yet answered.
+    pub fn in_flight(&self) -> usize {
+        let done = self.completed.load(Ordering::Relaxed);
+        self.submitted.load(Ordering::Relaxed).saturating_sub(done)
+    }
+}
+
+/// A running server instance over execution backend `B`.
+pub struct Server<B: ExecutionBackend = PjrtBackend> {
+    tx: mpsc::Sender<Msg>,
+    handle: Option<std::thread::JoinHandle<Result<()>>>,
+    /// Shared epoch for submit-side arrival stamps and worker-side
+    /// dispatch stamps.
+    epoch: Instant,
+    stats: Arc<ServerStats>,
+    /// Guarded so `Server` stays `Sync` (shared-reference submitters).
+    cost_rx: Mutex<mpsc::Receiver<CostModel>>,
+    cost_cache: OnceLock<CostModel>,
+    _backend: PhantomData<fn() -> B>,
+}
+
+impl<B: ExecutionBackend + 'static> Server<B> {
+    /// Start a worker whose engine is built by `make` inside the worker
+    /// thread. Construction failures surface through `shutdown()` (and
+    /// through `cost()` returning `None`).
+    pub fn start_with<F>(make: F, policy: BatchPolicy) -> Server<B>
+    where
+        F: FnOnce() -> Result<Engine<B>> + Send + 'static,
+    {
+        Self::start_with_epoch(make, policy, Instant::now())
+    }
+
+    /// `start_with` against a caller-supplied epoch — every replica of a
+    /// pool shares one epoch so cross-replica timestamps are comparable.
+    fn start_with_epoch<F>(make: F, policy: BatchPolicy, epoch: Instant) -> Server<B>
+    where
+        F: FnOnce() -> Result<Engine<B>> + Send + 'static,
+    {
         let (tx, rx) = mpsc::channel::<Msg>();
-        let handle = std::thread::spawn(move || worker(artifact_dir, acc_cfg, policy, rx));
+        let (cost_tx, cost_rx) = mpsc::channel::<CostModel>();
+        let stats = Arc::new(ServerStats::default());
+        let wstats = Arc::clone(&stats);
+        let handle = std::thread::spawn(move || worker(make, policy, epoch, wstats, cost_tx, rx));
         Server {
             tx,
             handle: Some(handle),
-            started: Instant::now(),
+            epoch,
+            stats,
+            cost_rx: Mutex::new(cost_rx),
+            cost_cache: OnceLock::new(),
+            _backend: PhantomData,
+        }
+    }
+
+    /// Start `n` identical replicas; `make(i)` builds replica `i`'s engine
+    /// inside that replica's worker thread.
+    pub fn start_pool<F>(n: usize, make: F, policy: BatchPolicy) -> ServerPool<B>
+    where
+        F: Fn(usize) -> Result<Engine<B>> + Send + Clone + 'static,
+    {
+        assert!(n > 0, "pool needs at least one replica");
+        // One epoch for the whole pool: arrival/dispatch stamps from
+        // different replicas land on the same clock, so aggregated
+        // summaries (span, first arrival, last completion) are coherent.
+        let epoch = Instant::now();
+        let replicas = (0..n)
+            .map(|i| {
+                let make = make.clone();
+                Server::start_with_epoch(move || make(i), policy, epoch)
+            })
+            .collect();
+        ServerPool {
+            replicas,
+            rr: AtomicUsize::new(0),
         }
     }
 
     /// Submit a request; the result arrives on the returned channel.
     pub fn submit(&self, mut req: Request) -> mpsc::Receiver<RequestResult> {
-        // Stamp arrival with server-relative wall time so queue-wait
-        // accounting matches the live batcher.
-        req.arrival_s = self.started.elapsed().as_secs_f64();
+        // Stamp arrival on the epoch the worker's dispatch clock uses.
+        req.arrival_s = self.epoch.elapsed().as_secs_f64();
+        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = mpsc::channel();
         let _ = self.tx.send(Msg::Submit(req, rtx));
         rrx
+    }
+
+    /// Live counters (submitted / completed / batches).
+    pub fn stats(&self) -> &ServerStats {
+        &self.stats
+    }
+
+    /// Requests submitted but not yet answered.
+    pub fn in_flight(&self) -> usize {
+        self.stats.in_flight()
+    }
+
+    /// The worker engine's cost model. Blocks until the engine finishes
+    /// constructing; `None` if the worker failed before reporting one.
+    pub fn cost(&self) -> Option<CostModel> {
+        if let Some(c) = self.cost_cache.get() {
+            return Some(*c);
+        }
+        let rx = self.cost_rx.lock().ok()?;
+        // Another caller may have filled the cache while we waited.
+        if let Some(c) = self.cost_cache.get() {
+            return Some(*c);
+        }
+        match rx.recv() {
+            Ok(c) => {
+                let _ = self.cost_cache.set(c);
+                Some(c)
+            }
+            Err(_) => None,
+        }
     }
 
     /// Stop the worker and propagate any error it hit.
@@ -62,7 +190,15 @@ impl Server {
     }
 }
 
-impl Drop for Server {
+impl Server<PjrtBackend> {
+    /// Start a PJRT-backed worker. Fails later (on first submit) if the
+    /// artifacts are missing; startup errors surface through `shutdown()`.
+    pub fn start(artifact_dir: PathBuf, acc_cfg: AcceleratorConfig, policy: BatchPolicy) -> Server {
+        Server::start_with(move || Engine::load(&artifact_dir, acc_cfg), policy)
+    }
+}
+
+impl<B: ExecutionBackend> Drop for Server<B> {
     fn drop(&mut self) {
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(h) = self.handle.take() {
@@ -71,57 +207,289 @@ impl Drop for Server {
     }
 }
 
-fn worker(
-    dir: PathBuf,
-    acc_cfg: AcceleratorConfig,
-    policy: BatchPolicy,
-    rx: mpsc::Receiver<Msg>,
-) -> Result<()> {
-    let engine = Engine::load(&dir, acc_cfg)?;
-    let max_batch = policy.max_batch.min(engine.max_batch());
-    let started = Instant::now();
-    let mut pending: Vec<(Request, mpsc::Sender<RequestResult>)> = Vec::new();
+/// A pool of N identical server replicas behind least-loaded dispatch.
+pub struct ServerPool<B: ExecutionBackend = PjrtBackend> {
+    replicas: Vec<Server<B>>,
+    /// Round-robin cursor used as the tie-break starting point.
+    rr: AtomicUsize,
+}
 
-    let dispatch = |pending: &mut Vec<(Request, mpsc::Sender<RequestResult>)>| -> Result<()> {
-        if pending.is_empty() {
-            return Ok(());
-        }
-        let now = started.elapsed().as_secs_f64();
-        let taken: Vec<_> = pending.drain(..).collect();
-        let batch = Batch {
-            requests: taken.iter().map(|(r, _)| r.clone()).collect(),
-            dispatch_s: now,
+/// Outcome of a one-shot live run ([`ServerPool::run`]).
+pub struct LiveRun {
+    /// Aggregate over all replicas — the same `ServeSummary` the
+    /// trace-driven path reports.
+    pub summary: ServeSummary,
+    /// Per-request results in submit order.
+    pub results: Vec<RequestResult>,
+    /// Per-replica `(batches, completed)` counters at the end of the run.
+    pub replica_stats: Vec<(usize, usize)>,
+}
+
+impl<B: ExecutionBackend + 'static> ServerPool<B> {
+    /// Number of replica workers.
+    pub fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// One-shot live run: wait for every replica engine, drive the whole
+    /// trace ([`ServerPool::serve`]), shut the pool down, and aggregate.
+    /// On any failure the *worker's* error (engine construction, failed
+    /// batch) is preferred over generic channel failures, so the root
+    /// cause is never lost in a dropped reply channel.
+    pub fn run(self, trace: Vec<Request>, pace: bool) -> Result<LiveRun> {
+        let cost = self.cost();
+        let served = match cost {
+            Some(_) => self.serve(trace, pace),
+            None => Err(anyhow::anyhow!(
+                "live worker exited before reporting its cost model"
+            )),
         };
-        let results = engine.run_batch(&batch)?;
-        for (res, (_, tx)) in results.into_iter().zip(taken) {
-            let _ = tx.send(res);
+        let batches = self.batches();
+        let replica_stats = self.replica_stats();
+        let stopped = self.shutdown();
+        if let Err(worker_err) = stopped {
+            return Err(worker_err);
         }
-        Ok(())
-    };
+        let results = served?;
+        let cost = cost.expect("serve() succeeded, so every replica reported its cost");
+        Ok(LiveRun {
+            summary: ServeSummary::from_results(&results, batches, &cost),
+            results,
+            replica_stats,
+        })
+    }
 
-    loop {
-        let timeout = Duration::from_secs_f64(policy.max_wait_s.max(1e-4));
-        match rx.recv_timeout(timeout) {
-            Ok(Msg::Submit(req, tx)) => {
-                pending.push((req, tx));
-                if pending.len() >= max_batch {
-                    dispatch(&mut pending)?;
+    /// Drive a whole trace through the pool: submit every request —
+    /// sleeping until each request's `arrival_s` offset when `pace` is
+    /// true, burst-submitting otherwise — then block for all results, in
+    /// submit order. Fails if any worker dies before answering.
+    pub fn serve(&self, trace: Vec<Request>, pace: bool) -> Result<Vec<RequestResult>> {
+        let t0 = Instant::now();
+        let mut rxs = Vec::with_capacity(trace.len());
+        for req in trace {
+            if pace {
+                let target = Duration::from_secs_f64(req.arrival_s.max(0.0));
+                if let Some(sleep) = target.checked_sub(t0.elapsed()) {
+                    std::thread::sleep(sleep);
                 }
             }
-            Ok(Msg::Shutdown) => {
-                dispatch(&mut pending)?;
-                return Ok(());
+            rxs.push(self.submit(req));
+        }
+        let mut results = Vec::with_capacity(rxs.len());
+        for rx in rxs {
+            results.push(
+                rx.recv()
+                    .map_err(|_| anyhow::anyhow!("live worker dropped a request"))?,
+            );
+        }
+        Ok(results)
+    }
+
+    /// Submit to the least-loaded replica (fewest in-flight requests),
+    /// breaking ties round-robin so idle pools still rotate.
+    pub fn submit(&self, req: Request) -> mpsc::Receiver<RequestResult> {
+        let n = self.replicas.len();
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let mut best = start;
+        let mut best_load = self.replicas[start].in_flight();
+        for k in 1..n {
+            let i = (start + k) % n;
+            let load = self.replicas[i].in_flight();
+            if load < best_load {
+                best = i;
+                best_load = load;
             }
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                dispatch(&mut pending)?;
+        }
+        self.replicas[best].submit(req)
+    }
+
+    /// Total batches dispatched across all replicas.
+    pub fn batches(&self) -> usize {
+        self.replicas
+            .iter()
+            .map(|s| s.stats().batches.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Per-replica `(batches, completed)` counters.
+    pub fn replica_stats(&self) -> Vec<(usize, usize)> {
+        self.replicas
+            .iter()
+            .map(|s| {
+                (
+                    s.stats().batches.load(Ordering::Relaxed),
+                    s.stats().completed.load(Ordering::Relaxed),
+                )
+            })
+            .collect()
+    }
+
+    /// Cost model of the replica engines (identical by construction).
+    /// Blocks until EVERY replica finishes constructing, so a `Some`
+    /// means the whole pool is ready to serve; `None` means at least one
+    /// worker failed before reporting (its error surfaces through
+    /// `shutdown()`).
+    pub fn cost(&self) -> Option<CostModel> {
+        let mut first = None;
+        for s in &self.replicas {
+            let c = s.cost()?;
+            first.get_or_insert(c);
+        }
+        first
+    }
+
+    /// Stop every replica; the first worker error wins.
+    pub fn shutdown(self) -> Result<()> {
+        let mut first_err = None;
+        for s in self.replicas {
+            if let Err(e) = s.shutdown() {
+                first_err.get_or_insert(e);
             }
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                dispatch(&mut pending)?;
-                return Ok(());
-            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
         }
     }
 }
 
-// Integration coverage lives in rust/tests/integration_coordinator.rs
-// (requires built artifacts).
+/// Reply channels for queued requests, FIFO. The scheduler drains its
+/// entire pending set (in arrival order) on every closure, so batch
+/// results always map onto the front of this queue.
+type Waiters = VecDeque<(u64, mpsc::Sender<RequestResult>)>;
+
+fn dispatch<B: ExecutionBackend>(
+    engine: &Engine<B>,
+    mut batch: Batch,
+    epoch: Instant,
+    waiters: &mut Waiters,
+    stats: &ServerStats,
+) -> Result<()> {
+    debug_assert!(
+        !batch.requests.is_empty(),
+        "scheduler closures never emit empty batches"
+    );
+    // The scheduler stamps deadline-closed batches at their *deadline*
+    // (trace-replay semantics). Live attribution must report the time the
+    // batch actually left the queue, or an overloaded worker would
+    // under-report queue waits by however far it has fallen behind.
+    batch.dispatch_s = batch.dispatch_s.max(epoch.elapsed().as_secs_f64());
+    stats.batches.fetch_add(1, Ordering::Relaxed);
+    let results = engine.run_batch(&batch)?;
+    for res in results {
+        let (queued_id, tx) = waiters
+            .pop_front()
+            .expect("every batched request has a queued waiter");
+        debug_assert_eq!(queued_id, res.id, "batch order diverged from FIFO");
+        // Count BEFORE sending: the channel's send→recv edge then makes
+        // the counter visible to anyone who has received this result, so
+        // post-serve snapshots (ServerPool::run) can never under-count.
+        stats.completed.fetch_add(1, Ordering::Relaxed);
+        let _ = tx.send(res);
+    }
+    Ok(())
+}
+
+struct WorkerState<B: ExecutionBackend> {
+    engine: Engine<B>,
+    sched: BatchScheduler,
+    waiters: Waiters,
+    epoch: Instant,
+    stats: Arc<ServerStats>,
+}
+
+impl<B: ExecutionBackend> WorkerState<B> {
+    /// Queue one request, applying only the `max_batch` closure. Deadline
+    /// closures happen in the worker loop's single wall-clock `poll`, so
+    /// a drained backlog batches together instead of replaying its stale
+    /// inter-arrival gaps as singleton deadline batches.
+    fn admit(&mut self, req: Request, tx: mpsc::Sender<RequestResult>) -> Result<()> {
+        self.waiters.push_back((req.id, tx));
+        if let Some(b) = self.sched.admit(req) {
+            dispatch(&self.engine, b, self.epoch, &mut self.waiters, &self.stats)?;
+        }
+        Ok(())
+    }
+
+    /// Flush whatever is pending and end the worker (shutdown or all
+    /// senders gone).
+    fn finish(&mut self) -> Result<()> {
+        let now = self.epoch.elapsed().as_secs_f64();
+        if let Some(b) = self.sched.flush(now) {
+            dispatch(&self.engine, b, self.epoch, &mut self.waiters, &self.stats)?;
+        }
+        Ok(())
+    }
+}
+
+fn worker<B: ExecutionBackend, F>(
+    make: F,
+    policy: BatchPolicy,
+    epoch: Instant,
+    stats: Arc<ServerStats>,
+    cost_tx: mpsc::Sender<CostModel>,
+    rx: mpsc::Receiver<Msg>,
+) -> Result<()>
+where
+    F: FnOnce() -> Result<Engine<B>>,
+{
+    let engine = make()?;
+    let _ = cost_tx.send(*engine.cost());
+    let policy = BatchPolicy {
+        max_batch: policy.max_batch.min(engine.max_batch()),
+        ..policy
+    };
+    let mut st = WorkerState {
+        engine,
+        sched: BatchScheduler::new(policy),
+        waiters: VecDeque::new(),
+        epoch,
+        stats,
+    };
+
+    loop {
+        // 1. Drain every message already queued BEFORE consulting the
+        //    clock: when the worker falls behind (engine slower than the
+        //    arrival rate), the backlog must still batch up to max_batch
+        //    instead of degenerating into deadline-expired singletons.
+        loop {
+            match rx.try_recv() {
+                Ok(Msg::Submit(req, tx)) => st.admit(req, tx)?,
+                Ok(Msg::Shutdown) | Err(mpsc::TryRecvError::Disconnected) => {
+                    return st.finish();
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+            }
+        }
+        // 2. Close an overdue batch, then re-drain — messages may have
+        //    arrived while the engine ran.
+        let now = st.epoch.elapsed().as_secs_f64();
+        if let Some(b) = st.sched.poll(now) {
+            dispatch(&st.engine, b, st.epoch, &mut st.waiters, &st.stats)?;
+            continue;
+        }
+        // 3. Nothing due: sleep until the oldest pending request's
+        //    absolute deadline (`oldest.arrival_s + max_wait_s − now`),
+        //    or indefinitely when idle — NEVER a fresh max_wait_s window
+        //    per message (that reset is the trickle-starvation bug).
+        let msg = match st.sched.deadline_s() {
+            Some(deadline) => {
+                rx.recv_timeout(Duration::from_secs_f64((deadline - now).max(1e-6)))
+            }
+            None => rx.recv().map_err(|_| mpsc::RecvTimeoutError::Disconnected),
+        };
+        match msg {
+            // Deadline evaluation happens at the loop top on the next
+            // pass (drain, then one wall-clock poll).
+            Ok(Msg::Submit(req, tx)) => st.admit(req, tx)?,
+            Ok(Msg::Shutdown) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                return st.finish();
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+        }
+    }
+}
+
+// Artifact-free coverage lives in rust/tests/live_server.rs (sim and
+// functional backends); PJRT coverage in
+// rust/tests/integration_coordinator.rs (requires built artifacts).

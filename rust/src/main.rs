@@ -26,7 +26,7 @@ mod cli {
     /// Flags that never take a value. Without this list, `--csv fig1`
     /// would greedily swallow `fig1` as the flag's value and lose the
     /// positional experiment name.
-    const BOOL_FLAGS: &[&str] = &["csv", "baseline", "sliced"];
+    const BOOL_FLAGS: &[&str] = &["csv", "baseline", "sliced", "live"];
 
     /// Minimal flag parser: positionals plus `--key value` / `--flag`.
     pub struct Args {
@@ -106,14 +106,19 @@ USAGE:
   axllm serve [--backend <sim|functional|pjrt>] [--model M] [--requests N]
               [--rate R] [--dataset <agnews|yelp|squad|imdb>] [--batch B]
               [--max-wait-ms W] [--artifacts DIR] [--seed N]
+              [--live] [--replicas N]
       backends:
         sim         cycle/energy attribution only — no logits, no artifacts
         functional  bit-exact in-process reuse-datapath execution, no artifacts
         pjrt        compiled HLO artifacts through the PJRT runtime (default)
+      --live runs the threaded server (real clock, paced arrivals) instead
+      of deterministic trace serving; --replicas N (default 1) spreads the
+      live queue across N engine replicas with least-loaded dispatch.
       examples:
         axllm serve --backend sim --requests 64 --model tiny
         axllm serve --backend functional --requests 16 --dataset squad
         axllm serve --backend pjrt --artifacts artifacts --batch 4
+        axllm serve --live --replicas 4 --backend sim --requests 64
   axllm info [--artifacts DIR]
 ";
 
@@ -255,29 +260,18 @@ fn cmd_simulate(args: &cli::Args) -> Result<(), String> {
     Ok(())
 }
 
-/// Serve a synthetic trace through any backend and print the summary.
-/// `seed` drives the trace generator (and, for the functional backend,
-/// the synthesized weights too).
-fn run_serve<B: ExecutionBackend>(
-    engine: &Engine<B>,
-    n: usize,
-    rate: f64,
-    dataset: Dataset,
-    policy: BatchPolicy,
-    seed: u64,
-) -> Result<(), String> {
+fn print_cost(backend: &str, cost: &axllm::coordinator::CostModel) {
     println!(
         "backend: {} — cost model: {:.0} cycles/token AxLLM vs {:.0} baseline ({:.2}x), reuse {:.1}%",
-        engine.backend.name(),
-        engine.cost().cycles_per_token_ax,
-        engine.cost().cycles_per_token_base,
-        engine.cost().speedup(),
-        engine.cost().reuse_rate * 100.0
+        backend,
+        cost.cycles_per_token_ax,
+        cost.cycles_per_token_base,
+        cost.speedup(),
+        cost.reuse_rate * 100.0
     );
-    let trace = TraceGenerator::new(dataset, rate, seed).take(n);
-    let (_results, s) = engine
-        .serve_trace(trace, policy)
-        .map_err(|e| format!("{e:#}"))?;
+}
+
+fn print_summary(s: &axllm::coordinator::ServeSummary) {
     println!(
         "served {} requests in {} batches over {:.3}s",
         s.requests, s.batches, s.span_s
@@ -301,41 +295,129 @@ fn run_serve<B: ExecutionBackend>(
         s.sim_energy_j * 1e6,
         s.sim_speedup
     );
+}
+
+/// Shared `serve` options (trace generation + batching policy).
+#[derive(Clone, Copy)]
+struct ServeOpts {
+    n: usize,
+    rate: f64,
+    dataset: Dataset,
+    policy: BatchPolicy,
+    seed: u64,
+    replicas: usize,
+}
+
+/// Serve a synthetic trace through any backend and print the summary.
+/// `opts.seed` drives the trace generator (and, for the functional
+/// backend, the synthesized weights too).
+fn run_serve<B: ExecutionBackend>(engine: &Engine<B>, opts: &ServeOpts) -> Result<(), String> {
+    print_cost(engine.backend.name(), engine.cost());
+    let trace = TraceGenerator::new(opts.dataset, opts.rate, opts.seed).take(opts.n);
+    let (_results, s) = engine
+        .serve_trace(trace, opts.policy)
+        .map_err(|e| format!("{e:#}"))?;
+    print_summary(&s);
+    Ok(())
+}
+
+/// Live serving: start a replica pool, pace the trace's arrivals on the
+/// wall clock, and aggregate the per-request results into the same
+/// `ServeSummary` trace serving reports.
+fn run_live<B, F>(backend: &str, make: F, opts: &ServeOpts) -> Result<(), String>
+where
+    B: ExecutionBackend + 'static,
+    F: Fn(usize) -> axllm::Result<Engine<B>> + Send + Clone + 'static,
+{
+    use axllm::coordinator::Server;
+
+    let trace = TraceGenerator::new(opts.dataset, opts.rate, opts.seed).take(opts.n);
+    let pool = Server::start_pool(opts.replicas, make, opts.policy);
+    // cost() is cached, so printing it first costs nothing; on failure
+    // run() below surfaces the worker's real construction error.
+    if let Some(cost) = pool.cost() {
+        print_cost(backend, &cost);
+        println!(
+            "live: {} replica(s), arrivals paced at {:.0} req/s",
+            opts.replicas, opts.rate
+        );
+    }
+    // Replay the trace's arrival offsets on the wall clock.
+    let run = pool.run(trace, true).map_err(|e| format!("{e:#}"))?;
+    print_summary(&run.summary);
+    for (i, (b, r)) in run.replica_stats.iter().enumerate() {
+        println!("replica {i}: {b} batches, {r} requests");
+    }
     Ok(())
 }
 
 fn cmd_serve(args: &cli::Args) -> Result<(), String> {
-    let n = args.get("requests", 64usize)?;
-    let rate = args.get("rate", 200.0f64)?;
-    let dataset =
-        dataset_by_name(args.flag("dataset").unwrap_or("imdb")).ok_or("unknown dataset")?;
-    let policy = BatchPolicy {
-        max_batch: args.get("batch", 4usize)?,
-        max_wait_s: args.get("max-wait-ms", 10.0f64)? / 1e3,
-    };
     // Default 7 keeps the historical `axllm serve` trace (earlier
     // versions hardcoded trace seed 7), so recorded outputs stay
     // comparable.
-    let seed = args.get("seed", 7u64)?;
+    let opts = ServeOpts {
+        n: args.get("requests", 64usize)?,
+        rate: args.get("rate", 200.0f64)?,
+        dataset: dataset_by_name(args.flag("dataset").unwrap_or("imdb"))
+            .ok_or("unknown dataset")?,
+        policy: BatchPolicy {
+            max_batch: args.get("batch", 4usize)?,
+            max_wait_s: args.get("max-wait-ms", 10.0f64)? / 1e3,
+        },
+        seed: args.get("seed", 7u64)?,
+        replicas: args.get("replicas", 1usize)?,
+    };
+    if opts.replicas == 0 {
+        return Err("--replicas must be ≥ 1".into());
+    }
+    let live = args.get_bool("live");
+    if !live && opts.replicas > 1 {
+        return Err("--replicas needs --live (trace serving is single-engine)".into());
+    }
     let acc_cfg = AcceleratorConfig::paper();
     let backend = args.flag("backend").unwrap_or("pjrt");
     match backend {
         "sim" => {
             let name = args.flag("model").unwrap_or("tiny");
             let model_cfg = model_by_name(name).ok_or_else(|| format!("unknown model: {name}"))?;
-            let b = SimBackend::new(model_cfg, acc_cfg).map_err(|e| format!("{e:#}"))?;
-            run_serve(&Engine::new(b), n, rate, dataset, policy, seed)
+            if live {
+                // Paced: the live worker is occupied for the simulated
+                // service time, so queueing and replica scaling behave
+                // like the modeled deployment.
+                let make = move |_i: usize| {
+                    SimBackend::new(model_cfg.clone(), acc_cfg)
+                        .map(|b| Engine::new(b.with_paced(true)))
+                };
+                run_live("sim", make, &opts)
+            } else {
+                let b = SimBackend::new(model_cfg, acc_cfg).map_err(|e| format!("{e:#}"))?;
+                run_serve(&Engine::new(b), &opts)
+            }
         }
         "functional" => {
             let name = args.flag("model").unwrap_or("tiny");
             let model_cfg = model_by_name(name).ok_or_else(|| format!("unknown model: {name}"))?;
-            let b = FunctionalBackend::new(model_cfg, acc_cfg, seed).map_err(|e| format!("{e:#}"))?;
-            run_serve(&Engine::new(b), n, rate, dataset, policy, seed)
+            let seed = opts.seed;
+            if live {
+                let make = move |_i: usize| {
+                    FunctionalBackend::new(model_cfg.clone(), acc_cfg, seed).map(Engine::new)
+                };
+                run_live("functional", make, &opts)
+            } else {
+                let b = FunctionalBackend::new(model_cfg, acc_cfg, seed)
+                    .map_err(|e| format!("{e:#}"))?;
+                run_serve(&Engine::new(b), &opts)
+            }
         }
         "pjrt" => {
             let dir = PathBuf::from(args.flag("artifacts").unwrap_or("artifacts"));
-            let engine = Engine::load(&dir, acc_cfg).map_err(|e| format!("{e:#}"))?;
-            run_serve(&engine, n, rate, dataset, policy, seed)
+            if live {
+                let make = move |_i: usize| Engine::load(&dir, acc_cfg);
+                run_live("pjrt", make, &opts)
+            } else {
+                let engine = Engine::load(&dir, acc_cfg).map_err(|e| format!("{e:#}"))?;
+                run_serve(&engine, &opts)
+            }
         }
         other => Err(format!(
             "unknown backend: {other} (expected sim|functional|pjrt)"
@@ -454,6 +536,23 @@ mod tests {
         let a = Args::parse(&argv(&["serve", "--backend", "sim", "--requests", "64"])).unwrap();
         assert_eq!(a.flag("backend"), Some("sim"));
         assert_eq!(a.get("requests", 0usize).unwrap(), 64);
+        assert_eq!(a.positional, vec!["serve"]);
+    }
+
+    #[test]
+    fn live_flag_composes_with_valued_flags() {
+        let a = Args::parse(&argv(&[
+            "serve",
+            "--live",
+            "--replicas",
+            "4",
+            "--backend",
+            "sim",
+        ]))
+        .unwrap();
+        assert!(a.get_bool("live"));
+        assert_eq!(a.get("replicas", 1usize).unwrap(), 4);
+        assert_eq!(a.flag("backend"), Some("sim"));
         assert_eq!(a.positional, vec!["serve"]);
     }
 

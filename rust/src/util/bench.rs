@@ -156,9 +156,12 @@ impl Bench {
 
     /// Machine-readable JSON dump:
     /// `[{"name": …, "iterations": N, "ns_per_op": N, …}]` where
-    /// `ns_per_op` is the median. Bench targets write this next to their
-    /// stdout report (e.g. `BENCH_sim_hot_loop.json`) so successive PRs
-    /// have a perf trajectory to compare against.
+    /// `ns_per_op` is the median. Measurements registered through
+    /// [`Bench::run_throughput`] also carry `throughput_eps`
+    /// (elements/second — requests/second when the element is a request).
+    /// Bench targets write this next to their stdout report (e.g.
+    /// `BENCH_sim_hot_loop.json`, `BENCH_live_serve.json`) so successive
+    /// PRs have a perf trajectory to compare against.
     pub fn json(&self) -> String {
         let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
         let mut out = String::from("[\n");
@@ -167,13 +170,17 @@ impl Bench {
                 out.push_str(",\n");
             }
             out.push_str(&format!(
-                "  {{\"name\": \"{}\", \"iterations\": {}, \"ns_per_op\": {}, \"mean_ns\": {}, \"stddev_ns\": {}}}",
+                "  {{\"name\": \"{}\", \"iterations\": {}, \"ns_per_op\": {}, \"mean_ns\": {}, \"stddev_ns\": {}",
                 esc(&m.name),
                 m.iters,
                 m.median.as_nanos(),
                 m.mean.as_nanos(),
                 m.stddev.as_nanos()
             ));
+            if let Some(t) = m.throughput() {
+                out.push_str(&format!(", \"throughput_eps\": {t:.3}"));
+            }
+            out.push('}');
         }
         out.push_str("\n]\n");
         out
@@ -246,6 +253,18 @@ mod tests {
         assert!(j.contains("\\\"quoted\\\""));
         assert!(j.contains("\"ns_per_op\""));
         assert!(j.contains("\"iterations\""));
+        // Plain `run` measurements carry no throughput field…
+        assert!(!j.contains("throughput_eps"));
+    }
+
+    #[test]
+    fn json_carries_throughput_for_throughput_runs() {
+        std::env::set_var("AXLLM_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        b.run_throughput("tp", 64, || {
+            black_box(1u64 + 1);
+        });
+        assert!(b.json().contains("\"throughput_eps\""));
     }
 
     #[test]

@@ -75,11 +75,15 @@ fn sim_and_functional_backends_batch_identically() {
     assert_eq!(ss.tokens, sf.tokens, "token totals must match");
     assert_eq!(ss.requests, sf.requests);
     assert_eq!(rs.len(), rf.len());
-    // Request → batch assignment identical: queue waits match pairwise
-    // (attributed cycles differ — the backends model different weights).
+    // Request → batch assignment identical: queue waits, dispatch stamps
+    // and batch sizes match pairwise (attributed cycles differ — the
+    // backends model different weights).
     for (a, b) in rs.iter().zip(&rf) {
         assert_eq!(a.id, b.id);
         assert!((a.queue_wait_s - b.queue_wait_s).abs() < 1e-12);
+        assert!((a.dispatch_s - b.dispatch_s).abs() < 1e-12);
+        assert_eq!(a.batch_size, b.batch_size);
+        assert_eq!(a.tokens, b.tokens);
     }
 }
 

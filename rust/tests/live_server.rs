@@ -1,0 +1,270 @@
+//! Live serving without artifacts: `Server<SimBackend>` and
+//! `Server<FunctionalBackend>` integration coverage — deadline-bounded
+//! queue waits under a trickle (the starvation regression), batch-policy
+//! conformance, monotone dispatch, live-vs-trace attribution equivalence,
+//! and the multi-replica pool. No PJRT runtime, no artifact directory:
+//! this is the live path CI can actually execute.
+
+use axllm::backend::{FunctionalBackend, SimBackend};
+use axllm::config::{AcceleratorConfig, Dataset, ModelConfig};
+use axllm::coordinator::{BatchPolicy, Engine, RequestResult, Server};
+use axllm::workload::{Request, TraceGenerator};
+use std::time::{Duration, Instant};
+
+fn sim_engine() -> axllm::Result<Engine<SimBackend>> {
+    Ok(Engine::new(SimBackend::new(
+        ModelConfig::tiny(),
+        AcceleratorConfig::paper(),
+    )?))
+}
+
+fn functional_engine() -> axllm::Result<Engine<FunctionalBackend>> {
+    Ok(Engine::new(FunctionalBackend::new(
+        ModelConfig::tiny(),
+        AcceleratorConfig::paper(),
+        42,
+    )?))
+}
+
+fn req(id: u64, seq_len: usize) -> Request {
+    Request {
+        id,
+        dataset: Dataset::Imdb,
+        seq_len,
+        // Overwritten by Server::submit with the shared-epoch stamp.
+        arrival_s: 0.0,
+    }
+}
+
+/// Regression test for the worker-timeout starvation bug: a steady
+/// trickle of sub-`max_batch` arrivals must NOT keep resetting the wait
+/// window. The oldest request's wall-clock wait is bounded by
+/// `max_wait_s` plus scheduling slop.
+#[test]
+fn trickle_cannot_starve_oldest_request() {
+    const MAX_WAIT_S: f64 = 0.06;
+    const TRICKLE_GAP: Duration = Duration::from_millis(30);
+    const N: u64 = 12;
+    // Generous CI slop, still far below the ≥0.39s wait the old
+    // fresh-window-per-message loop produced for the first request.
+    const BOUND_S: f64 = 0.2;
+
+    let server = Server::start_with(
+        sim_engine,
+        BatchPolicy {
+            max_batch: 64,
+            max_wait_s: MAX_WAIT_S,
+        },
+    );
+    // Block until the engine is constructed so load time does not eat
+    // into the measured waits.
+    assert!(server.cost().is_some(), "worker must report a cost model");
+
+    let mut watchers = Vec::new();
+    for id in 0..N {
+        let rx = server.submit(req(id, 16));
+        // Measure end-to-end wall wait per request from its own submit
+        // instant (receiving in a thread so later submissions cannot
+        // inflate earlier measurements).
+        let t0 = Instant::now();
+        watchers.push(std::thread::spawn(move || {
+            let res = rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("server must answer");
+            (res, t0.elapsed().as_secs_f64())
+        }));
+        std::thread::sleep(TRICKLE_GAP);
+    }
+
+    let mut max_wall = 0.0f64;
+    for (id, w) in watchers.into_iter().enumerate() {
+        let (res, wall_s) = w.join().expect("watcher thread");
+        assert_eq!(res.id, id as u64);
+        // Attributed queue wait is the *actual* wall time the request
+        // spent queued (live dispatches stamp at dispatch time, not at
+        // the scheduler deadline), so the same bound applies to it.
+        assert!(
+            res.queue_wait_s <= BOUND_S,
+            "request {id} attributed wait {} > {BOUND_S}",
+            res.queue_wait_s
+        );
+        max_wall = max_wall.max(wall_s);
+    }
+    assert!(
+        max_wall <= BOUND_S,
+        "max wall-clock wait {max_wall}s exceeds {BOUND_S}s — trickle starvation is back"
+    );
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn live_sim_matches_trace_attribution() {
+    let trace = TraceGenerator::new(Dataset::AgNews, 300.0, 11).take(32);
+    let (trace_results, _) = sim_engine()
+        .unwrap()
+        .serve_trace(trace.clone(), BatchPolicy::default())
+        .unwrap();
+
+    let server = Server::start_with(sim_engine, BatchPolicy::default());
+    let rxs: Vec<_> = trace.iter().map(|r| server.submit(r.clone())).collect();
+    let live_results: Vec<RequestResult> = rxs
+        .into_iter()
+        .map(|rx| rx.recv_timeout(Duration::from_secs(30)).unwrap())
+        .collect();
+    server.shutdown().unwrap();
+
+    assert_eq!(trace_results.len(), live_results.len());
+    for (t, l) in trace_results.iter().zip(&live_results) {
+        assert_eq!(t.id, l.id);
+        // Attribution is per-token and batch-independent: identical
+        // across the trace-driven and live paths for the same request.
+        assert_eq!(t.tokens, l.tokens);
+        assert_eq!(t.sim_cycles, l.sim_cycles);
+        assert!((t.sim_energy_j - l.sim_energy_j).abs() < 1e-15);
+        assert!(l.logits.is_empty());
+        assert!(l.sim_cycles > 0);
+    }
+}
+
+#[test]
+fn live_functional_matches_trace_logits() {
+    let trace = TraceGenerator::new(Dataset::Squad, 300.0, 23).take(12);
+    let (trace_results, _) = functional_engine()
+        .unwrap()
+        .serve_trace(trace.clone(), BatchPolicy::default())
+        .unwrap();
+
+    let server = Server::start_with(functional_engine, BatchPolicy::default());
+    let rxs: Vec<_> = trace.iter().map(|r| server.submit(r.clone())).collect();
+    let live_results: Vec<RequestResult> = rxs
+        .into_iter()
+        .map(|rx| rx.recv_timeout(Duration::from_secs(60)).unwrap())
+        .collect();
+    server.shutdown().unwrap();
+
+    for (t, l) in trace_results.iter().zip(&live_results) {
+        assert_eq!(t.id, l.id);
+        // Embeddings derive from (seed, id): live batching differences
+        // cannot change the logits.
+        assert_eq!(t.logits, l.logits);
+        assert_eq!(t.sim_cycles, l.sim_cycles);
+        assert!(!l.logits.is_empty());
+        assert!(l.logits.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn live_batches_respect_policy_and_monotone_dispatch() {
+    const MAX_BATCH: usize = 4;
+    const N: usize = 32;
+    let server = Server::start_with(
+        sim_engine,
+        BatchPolicy {
+            max_batch: MAX_BATCH,
+            max_wait_s: 0.02,
+        },
+    );
+    let rxs: Vec<_> = (0..N).map(|i| server.submit(req(i as u64, 16))).collect();
+    let results: Vec<RequestResult> = rxs
+        .into_iter()
+        .map(|rx| rx.recv_timeout(Duration::from_secs(30)).unwrap())
+        .collect();
+
+    let stats = server.stats();
+    let batches = stats.batches.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(stats.submitted.load(std::sync::atomic::Ordering::Relaxed), N);
+    assert_eq!(stats.completed.load(std::sync::atomic::Ordering::Relaxed), N);
+    assert!(batches >= N / MAX_BATCH, "{batches} batches for {N} requests");
+
+    // Single replica, FIFO scheduler: results in submit order must have
+    // non-decreasing dispatch stamps and policy-bounded batch sizes.
+    for w in results.windows(2) {
+        assert!(w[1].dispatch_s >= w[0].dispatch_s);
+    }
+    for r in &results {
+        assert!(r.batch_size >= 1 && r.batch_size <= MAX_BATCH);
+        assert!(r.queue_wait_s >= 0.0);
+        assert!(r.latency_s >= r.exec_s);
+    }
+    // Batch-size claims are consistent: requests sharing a dispatch stamp
+    // are exactly one batch.
+    let mut i = 0;
+    while i < results.len() {
+        let size = results[i].batch_size;
+        let group = &results[i..i + size];
+        assert!(group.iter().all(|r| r.dispatch_s == results[i].dispatch_s));
+        assert!(group.iter().all(|r| r.batch_size == size));
+        i += size;
+    }
+    assert_eq!(i, results.len());
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn shutdown_flushes_pending_requests() {
+    let server = Server::start_with(
+        sim_engine,
+        BatchPolicy {
+            max_batch: 64,
+            max_wait_s: 10.0,
+        },
+    );
+    assert!(server.cost().is_some());
+    let rx0 = server.submit(req(0, 16));
+    let rx1 = server.submit(req(1, 16));
+    server.shutdown().unwrap();
+    assert_eq!(rx0.recv().unwrap().id, 0);
+    assert_eq!(rx1.recv().unwrap().id, 1);
+}
+
+#[test]
+fn pool_spreads_load_and_aggregates_a_summary() {
+    const N: usize = 30;
+    let pool = Server::start_pool(
+        3,
+        |_i| sim_engine(),
+        BatchPolicy {
+            max_batch: 4,
+            max_wait_s: 0.005,
+        },
+    );
+    assert!(pool.cost().is_some(), "every replica must construct");
+    let trace: Vec<Request> = (0..N).map(|i| req(i as u64, 16)).collect();
+    let run = pool.run(trace, false).expect("live run must complete");
+
+    assert_eq!(run.results.len(), N);
+    let answered: usize = run.replica_stats.iter().map(|(_, c)| c).sum();
+    assert_eq!(answered, N);
+    let active = run.replica_stats.iter().filter(|(_, c)| *c > 0).count();
+    assert!(active >= 2, "dispatch must spread: {:?}", run.replica_stats);
+
+    let summary = &run.summary;
+    assert_eq!(summary.requests, N);
+    assert!(summary.batches >= 1);
+    assert!(summary.tokens > 0);
+    assert!(summary.throughput_rps > 0.0);
+    assert!(summary.sim_cycles > 0);
+    assert!(summary.sim_speedup > 1.3);
+    assert!(summary.latency.p50_s <= summary.latency.p99_s);
+}
+
+#[test]
+fn backend_capacity_clamps_live_batches() {
+    // FunctionalBackend caps batches at 64; a policy asking for more must
+    // be clamped by the worker, not tripped as an engine assert.
+    let server = Server::start_with(
+        functional_engine,
+        BatchPolicy {
+            max_batch: usize::MAX,
+            max_wait_s: 0.005,
+        },
+    );
+    assert!(server.cost().is_some());
+    let rxs: Vec<_> = (0..8).map(|i| server.submit(req(i, 8))).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let res = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(res.id, i as u64);
+        assert_eq!(res.logits.len(), 4);
+    }
+    server.shutdown().unwrap();
+}
