@@ -23,6 +23,11 @@ cargo test -q
 echo "== live serve bench (writes BENCH_live_serve.json) =="
 AXLLM_BENCH_FAST=1 cargo bench --bench live_serve
 
+echo "== decode serve bench (writes BENCH_decode_serve.json) =="
+# Asserts continuous batching out-serves closed-batch decode on a
+# mixed-output-length trace (simulated token throughput).
+AXLLM_BENCH_FAST=1 cargo bench --bench decode_serve
+
 echo "== cargo fmt --check =="
 cargo fmt --check
 

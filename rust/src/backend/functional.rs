@@ -9,15 +9,18 @@
 //! mirroring the compiled tiny artifact's structure. Used for
 //! correctness soak tests and artifact-free end-to-end serving.
 
-use crate::backend::{BatchOutcome, CostModel, ExecutionBackend, COST_SAMPLE_ROWS, DEFAULT_SEQ_LIMIT};
+use crate::backend::{
+    argmax_token, BatchOutcome, CostModel, ExecutionBackend, KvHandle, KvState, StepOutcome,
+    COST_SAMPLE_ROWS, DEFAULT_SEQ_LIMIT,
+};
 use crate::config::{AcceleratorConfig, ModelConfig};
 use crate::exec::layer::qmatmul;
-use crate::exec::{ExecStats, LayerExec};
+use crate::exec::{qmatmul_rowwise, ExecStats, LayerExec, LayerKv};
 use crate::model::{synthesize_matrix, LayerWeights, Model, WeightDistribution};
 use crate::quant::QuantMatrix;
 use crate::sim::{Accelerator, SimStats};
 use crate::util::rng::Rng;
-use crate::workload::{request_seed, synth_embeddings, Request};
+use crate::workload::{request_seed, synth_embeddings, token_embedding, Request};
 use anyhow::Result;
 
 /// Classifier classes produced by the logit head (matches the compiled
@@ -135,6 +138,50 @@ impl FunctionalBackend {
         let logits = qmatmul(&pooled, 1, &self.head, self.chunk, &mut stats);
         (logits, stats)
     }
+
+    /// One causal pass of `n_new` embedding rows through every layer's
+    /// KV cache; returns the hidden rows of the new positions.
+    fn causal_pass(
+        &self,
+        x: Vec<f32>,
+        n_new: usize,
+        caches: &mut [LayerKv],
+        stats: &mut ExecStats,
+    ) -> Vec<f32> {
+        let mut x = x;
+        for (lw, kv) in self.layers.iter().zip(caches.iter_mut()) {
+            let mut le = LayerExec::new(&self.model_cfg, lw, self.chunk);
+            x = le.forward_causal(&x, n_new, kv);
+            stats.mults += le.stats.mults;
+            stats.reuses += le.stats.reuses;
+        }
+        x
+    }
+
+    /// LM-head logits at one hidden row (row-wise quantized, so the
+    /// result depends only on that row).
+    fn head_logits(&self, row: &[f32], stats: &mut ExecStats) -> Vec<f32> {
+        qmatmul_rowwise(row, 1, &self.head, self.chunk, stats)
+    }
+
+    /// Reference path for the decode-exactness property: recompute the
+    /// last position's logits of `prompt + tokens` from scratch with one
+    /// causal pass — fresh caches, no incremental reuse.
+    /// `rust/tests/prop_decode.rs` proves the KV-cached step path
+    /// bit-identical to this.
+    pub fn recompute_logits(&self, req: &Request, tokens: &[u32]) -> Vec<f32> {
+        let (mut x, prompt_len) = self.request_embeddings(req);
+        let seed = request_seed(self.embed_seed, req.id);
+        let d = self.model_cfg.d_model;
+        for (i, &t) in tokens.iter().enumerate() {
+            x.extend_from_slice(&token_embedding(d, seed, prompt_len + i, t));
+        }
+        let n = prompt_len + tokens.len();
+        let mut caches = vec![LayerKv::new(); self.model_cfg.n_layers];
+        let mut stats = ExecStats::default();
+        let hidden = self.causal_pass(x, n, &mut caches, &mut stats);
+        self.head_logits(&hidden[(n - 1) * d..], &mut stats)
+    }
 }
 
 /// Map functional reuse counters onto the simulator's counter taxonomy
@@ -194,6 +241,70 @@ impl ExecutionBackend for FunctionalBackend {
             stats: exec_to_sim(&total),
         })
     }
+
+    fn prefill(&self, req: &Request, budget: u32) -> crate::Result<(KvHandle, StepOutcome)> {
+        anyhow::ensure!(budget >= 1, "decode budget must be ≥ 1");
+        let t0 = std::time::Instant::now();
+        let (x, prompt_len) = self.request_embeddings(req);
+        let mut caches = vec![LayerKv::new(); self.model_cfg.n_layers];
+        let mut stats = ExecStats::default();
+        let hidden = self.causal_pass(x, prompt_len, &mut caches, &mut stats);
+        let d = self.model_cfg.d_model;
+        let logits = self.head_logits(&hidden[(prompt_len - 1) * d..], &mut stats);
+        let token = argmax_token(&logits);
+        let kv = KvHandle {
+            id: req.id,
+            prompt_len,
+            budget,
+            generated: vec![token],
+            embed_seed: request_seed(self.embed_seed, req.id),
+            state: KvState::Functional(caches),
+        };
+        Ok((
+            kv,
+            StepOutcome {
+                logits,
+                token,
+                exec_s: t0.elapsed().as_secs_f64(),
+                stats: exec_to_sim(&stats),
+            },
+        ))
+    }
+
+    fn decode_step(&self, kv: &mut KvHandle) -> crate::Result<StepOutcome> {
+        anyhow::ensure!(
+            !kv.done(),
+            "decode_step on a finished session (request {})",
+            kv.id
+        );
+        let last = *kv
+            .generated
+            .last()
+            .expect("prefill always produces the first token");
+        // The embedding position of the token fed into this step.
+        let pos = kv.context_len() - 1;
+        let t0 = std::time::Instant::now();
+        let d = self.model_cfg.d_model;
+        let x = token_embedding(d, kv.embed_seed, pos, last);
+        let caches = match &mut kv.state {
+            KvState::Functional(c) => c,
+            _ => anyhow::bail!(
+                "session for request {} was not created by the functional backend",
+                kv.id
+            ),
+        };
+        let mut stats = ExecStats::default();
+        let hidden = self.causal_pass(x, 1, caches, &mut stats);
+        let logits = self.head_logits(&hidden, &mut stats);
+        let token = argmax_token(&logits);
+        kv.generated.push(token);
+        Ok(StepOutcome {
+            logits,
+            token,
+            exec_s: t0.elapsed().as_secs_f64(),
+            stats: exec_to_sim(&stats),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -211,6 +322,7 @@ mod tests {
             dataset: Dataset::AgNews,
             seq_len,
             arrival_s: 0.0,
+            gen_tokens: 0,
         }
     }
 
@@ -240,6 +352,56 @@ mod tests {
             FunctionalBackend::new(ModelConfig::llama_7b(), AcceleratorConfig::paper(), 1)
                 .unwrap_err();
         assert!(err.to_string().contains("too large"), "{err}");
+    }
+
+    #[test]
+    fn prefill_then_decode_generates_the_budget() {
+        let b = backend();
+        let (mut kv, first) = b.prefill(&req(9, 10), 4).unwrap();
+        assert_eq!(kv.prompt_len, 10);
+        assert_eq!(kv.generated, vec![first.token]);
+        assert_eq!(first.logits.len(), N_CLASSES);
+        assert!(first.logits.iter().all(|v| v.is_finite()));
+        assert!(!kv.done());
+        while !kv.done() {
+            let out = b.decode_step(&mut kv).unwrap();
+            assert_eq!(out.logits.len(), N_CLASSES);
+            assert!(out.stats.mults > 0);
+        }
+        assert_eq!(kv.generated.len(), 4);
+        assert_eq!(kv.context_len(), 10 + 4);
+        assert_eq!(kv.remaining(), 0);
+        assert!(b.decode_step(&mut kv).is_err(), "finished session");
+    }
+
+    #[test]
+    fn decode_steps_match_full_recompute_bitexactly() {
+        // The KV-cached step path vs one-shot causal recomputation of the
+        // extended sequence — the crate's decode exactness claim (the
+        // property test generalizes this fixed case).
+        let b = backend();
+        let r = req(77, 8);
+        let (mut kv, first) = b.prefill(&r, 3).unwrap();
+        assert_eq!(first.logits, b.recompute_logits(&r, &[]));
+        for _ in 0..2 {
+            let before: Vec<u32> = kv.generated.clone();
+            let out = b.decode_step(&mut kv).unwrap();
+            assert_eq!(out.logits, b.recompute_logits(&r, &before));
+        }
+    }
+
+    #[test]
+    fn decode_rejects_foreign_sessions() {
+        let b = backend();
+        let mut kv = KvHandle {
+            id: 1,
+            prompt_len: 4,
+            budget: 2,
+            generated: vec![0],
+            embed_seed: 1,
+            state: KvState::Analytic,
+        };
+        assert!(b.decode_step(&mut kv).is_err());
     }
 
     #[test]

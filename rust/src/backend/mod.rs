@@ -16,6 +16,16 @@
 //! host execution seconds, simulated activity counters), so
 //! [`crate::coordinator::Engine`] — and everything above it: batcher,
 //! server, CLI, reports — is generic over the execution strategy.
+//!
+//! The API is **phase-aware**: besides batch prefill
+//! ([`ExecutionBackend::run_batch`]), every backend serves
+//! autoregressive decode as a session/step interface —
+//! [`ExecutionBackend::prefill`] creates a [`KvHandle`] and the first
+//! generated token, [`ExecutionBackend::decode_step`] advances it one
+//! token per call until the generated-token budget exhausts. [`CostModel`]
+//! carries both regimes: the per-token prefill costs and the decode
+//! (seq=1 GEMV) regime with its KV-attention term and the
+//! continuous-batching [`CostModel::iteration_time_s`].
 //! `rust/DESIGN.md` diagrams the `Engine → ExecutionBackend →
 //! Accelerator` layering.
 
@@ -27,8 +37,9 @@ pub use functional::FunctionalBackend;
 pub use pjrt::PjrtBackend;
 pub use sim::SimBackend;
 
-use crate::config::AcceleratorConfig;
+use crate::config::{AcceleratorConfig, ModelConfig};
 use crate::energy::EnergyModel;
+use crate::exec::LayerKv;
 use crate::model::Model;
 use crate::sim::{Accelerator, ModelCycleSummary, SimStats};
 use crate::workload::Request;
@@ -59,10 +70,93 @@ pub struct BatchOutcome {
     pub stats: SimStats,
 }
 
-/// A way to execute one batch of requests. Implementations own whatever
-/// state they need (compiled artifacts, materialized weights, or a cost
-/// model) and must answer every batch whose size respects
-/// [`ExecutionBackend::max_batch`].
+/// One autoregressive decode session: the per-request state that carries
+/// a request from its prefill through its generated-token budget. Created
+/// by [`ExecutionBackend::prefill`], advanced one token at a time by
+/// [`ExecutionBackend::decode_step`].
+#[derive(Clone, Debug)]
+pub struct KvHandle {
+    /// Request id the session belongs to.
+    pub id: u64,
+    /// Prompt length after the backend's sequence truncation.
+    pub prompt_len: usize,
+    /// Generated-token budget: the session is [`KvHandle::done`] once
+    /// `generated` reaches this many tokens.
+    pub budget: u32,
+    /// Tokens generated so far (the first one comes from prefill).
+    pub generated: Vec<u32>,
+    /// Per-request seed deriving prompt and generated-token embeddings.
+    pub embed_seed: u64,
+    /// Backend-owned cache state.
+    pub(crate) state: KvState,
+}
+
+/// Backend-specific session state behind a [`KvHandle`].
+#[derive(Clone, Debug)]
+pub(crate) enum KvState {
+    /// Cost-model-only sessions ([`SimBackend`]): the context length held
+    /// by the handle is the only state a step needs.
+    Analytic,
+    /// Functional per-layer K/V caches ([`FunctionalBackend`]).
+    Functional(Vec<LayerKv>),
+    /// Growing embedding buffer for decode-by-recompute ([`PjrtBackend`]:
+    /// the AOT artifact has a fixed shape, so each step re-executes the
+    /// whole window).
+    Recompute(Vec<f32>),
+}
+
+impl KvHandle {
+    /// Context length (prompt + generated) the next decode step attends
+    /// over.
+    pub fn context_len(&self) -> usize {
+        self.prompt_len + self.generated.len()
+    }
+
+    /// True once the generated-token budget is exhausted.
+    pub fn done(&self) -> bool {
+        self.generated.len() >= self.budget as usize
+    }
+
+    /// Tokens still to generate.
+    pub fn remaining(&self) -> u32 {
+        (self.budget as usize).saturating_sub(self.generated.len()) as u32
+    }
+}
+
+/// What one prefill or decode step produced for one session.
+#[derive(Clone, Debug)]
+pub struct StepOutcome {
+    /// Logits at the just-processed position (empty when the backend
+    /// computes none, e.g. [`SimBackend`]).
+    pub logits: Vec<f32>,
+    /// The generated token: greedy argmax over the logit head (a
+    /// deterministic synthetic stream for the sim backend).
+    pub token: u32,
+    /// Execution time of this step: host wall-clock for functional/PJRT,
+    /// simulated standalone service time for the sim backend.
+    pub exec_s: f64,
+    /// Activity counters attributed to the step (all-zero when the
+    /// backend measures nothing itself).
+    pub stats: SimStats,
+}
+
+/// Greedy sampling: index of the largest logit (lowest index wins ties)
+/// as the generated token id.
+pub fn argmax_token(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// A way to execute one batch of requests — and, phase-aware, to run one
+/// request as an autoregressive session (prefill then token-by-token
+/// decode). Implementations own whatever state they need (compiled
+/// artifacts, materialized weights, or a cost model) and must answer
+/// every batch whose size respects [`ExecutionBackend::max_batch`].
 pub trait ExecutionBackend {
     /// Stable identifier (`"sim"`, `"functional"`, `"pjrt"`).
     fn name(&self) -> &'static str;
@@ -81,6 +175,16 @@ pub trait ExecutionBackend {
 
     /// Execute one batch; `requests.len()` must be ≤ `max_batch()`.
     fn run_batch(&self, requests: &[Request]) -> crate::Result<BatchOutcome>;
+
+    /// Run the prefill phase of one request: build a decode session over
+    /// the (truncated) prompt and produce the session's first generated
+    /// token. `budget` is the generated-token budget (must be ≥ 1).
+    fn prefill(&self, req: &Request, budget: u32) -> crate::Result<(KvHandle, StepOutcome)>;
+
+    /// Advance a session by one generated token. Must not be called on a
+    /// finished session ([`KvHandle::done`]) or on a handle created by a
+    /// different backend.
+    fn decode_step(&self, kv: &mut KvHandle) -> crate::Result<StepOutcome>;
 }
 
 /// Precomputed per-token accelerator costs for the served model
@@ -93,10 +197,22 @@ pub struct CostModel {
     pub energy_pj_per_token_base: f64,
     pub reuse_rate: f64,
     pub freq_ghz: f64,
+    /// Decode (seq=1 GEMV) regime: incremental KV-attention cycles per
+    /// context token of one decode step. Attention products are
+    /// activation×activation — the Result Cache only accelerates
+    /// weight-side reuse, so this term takes the plain multiply path and
+    /// is identical for AxLLM and the baseline. Zero until filled by
+    /// [`CostModel::with_decode_regime`].
+    pub attn_cycles_per_ctx_token: f64,
+    /// Incremental KV-attention energy (pJ) per context token per step.
+    pub attn_energy_pj_per_ctx_token: f64,
 }
 
 impl CostModel {
     /// Derive from already-simulated per-token totals (AxLLM vs baseline).
+    /// The decode-attention terms start at zero; call
+    /// [`CostModel::with_decode_regime`] with the model shape to fill
+    /// them.
     pub fn from_totals(ax: &SimStats, base: &SimStats, freq_ghz: f64) -> CostModel {
         let em = EnergyModel::default();
         CostModel {
@@ -106,7 +222,33 @@ impl CostModel {
             energy_pj_per_token_base: em.energy(base).total_pj,
             reuse_rate: ax.reuse_rate(),
             freq_ghz,
+            attn_cycles_per_ctx_token: 0.0,
+            attn_energy_pj_per_ctx_token: 0.0,
         }
+    }
+
+    /// Fill the decode (seq=1 GEMV) regime from the model shape: one
+    /// decode step performs, per context token, `2·d_model` MACs per
+    /// layer (q·kᵀ plus attn·v) on the multiply path — lanes in parallel,
+    /// each occupied for `mult_latency` cycles per element.
+    pub fn with_decode_regime(
+        mut self,
+        model_cfg: &ModelConfig,
+        acc_cfg: AcceleratorConfig,
+    ) -> CostModel {
+        let macs = 2 * model_cfg.d_model as u64 * model_cfg.n_layers as u64;
+        let cycles = (macs as f64 / acc_cfg.lanes as f64).ceil() * acc_cfg.mult_latency as f64;
+        let stats = SimStats {
+            cycles: cycles as u64,
+            elements: macs,
+            mults: macs,
+            w_reads: macs,
+            out_writes: macs,
+            ..Default::default()
+        };
+        self.attn_cycles_per_ctx_token = cycles;
+        self.attn_energy_pj_per_ctx_token = EnergyModel::default().energy(&stats).total_pj;
+        self
     }
 
     /// Row-sampled derivation shared by the artifact-free backends: build
@@ -122,7 +264,8 @@ impl CostModel {
         let base = Accelerator::builder().config(acc_cfg).reuse(false).build()?;
         let ax_run = acc.run_model(model, sample_rows, 11);
         let base_run = base.run_model(model, sample_rows, 11);
-        let cost = Self::from_totals(&ax_run.total, &base_run.total, acc_cfg.freq_ghz);
+        let cost = Self::from_totals(&ax_run.total, &base_run.total, acc_cfg.freq_ghz)
+            .with_decode_regime(&model.config, acc_cfg);
         Ok((cost, ax_run))
     }
 
@@ -132,6 +275,7 @@ impl CostModel {
         let ax = Accelerator::axllm(acc_cfg).run_model(model, usize::MAX, 11);
         let base = Accelerator::baseline(acc_cfg).run_model(model, usize::MAX, 11);
         Self::from_totals(&ax.total, &base.total, acc_cfg.freq_ghz)
+            .with_decode_regime(&model.config, acc_cfg)
     }
 
     pub fn speedup(&self) -> f64 {
@@ -141,5 +285,39 @@ impl CostModel {
     /// Simulated accelerator service time for `tokens` tokens, seconds.
     pub fn sim_time_s(&self, tokens: u64) -> f64 {
         self.cycles_per_token_ax * tokens as f64 / (self.freq_ghz * 1e9)
+    }
+
+    /// Simulated cycles of one decode step at `context` cached tokens:
+    /// one token of weight traffic plus the KV-attention term.
+    pub fn decode_step_cycles(&self, context: u64) -> f64 {
+        self.cycles_per_token_ax + self.attn_cycles_per_ctx_token * context as f64
+    }
+
+    /// Energy (pJ) of one decode step at `context` cached tokens.
+    pub fn decode_step_energy_pj(&self, context: u64) -> f64 {
+        self.energy_pj_per_token_ax + self.attn_energy_pj_per_ctx_token * context as f64
+    }
+
+    /// Simulated standalone service time of one decode step, seconds.
+    pub fn decode_step_time_s(&self, context: u64) -> f64 {
+        self.decode_step_cycles(context) / (self.freq_ghz * 1e9)
+    }
+
+    /// Service time of one continuous-batching iteration that prefills
+    /// `prefill_tokens` prompt tokens and takes one decode step for each
+    /// session in `decode_contexts` (one entry per session, holding its
+    /// context length).
+    ///
+    /// Decode GEMV is weight-bound (the FineQuant regime): every prefill
+    /// token needs its own pass over the model weights, but all decode
+    /// steps of an iteration ride a **single shared weight pass** (a
+    /// batched GEMV), plus their per-session KV-attention terms. This is
+    /// the term continuous batching optimizes — the fuller the running
+    /// batch, the more tokens amortize each weight pass.
+    pub fn iteration_time_s(&self, prefill_tokens: u64, decode_contexts: &[u64]) -> f64 {
+        let weight_passes = prefill_tokens + u64::from(!decode_contexts.is_empty());
+        let attn = decode_contexts.iter().map(|&c| c as f64).sum::<f64>()
+            * self.attn_cycles_per_ctx_token;
+        (self.cycles_per_token_ax * weight_passes as f64 + attn) / (self.freq_ghz * 1e9)
     }
 }

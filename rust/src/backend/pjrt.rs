@@ -6,12 +6,14 @@
 //! per-request logits. This is the production-shaped path — the other
 //! backends exist so the serving stack above it never requires it.
 
-use crate::backend::{BatchOutcome, CostModel, ExecutionBackend};
+use crate::backend::{
+    argmax_token, BatchOutcome, CostModel, ExecutionBackend, KvHandle, KvState, StepOutcome,
+};
 use crate::config::AcceleratorConfig;
 use crate::model::Model;
 use crate::runtime::{ArtifactSet, Runtime, TinyWeights};
 use crate::sim::SimStats;
-use crate::workload::{request_seed, synth_embeddings, Request};
+use crate::workload::{request_seed, synth_embeddings, token_embedding, Request};
 use anyhow::Result;
 use std::path::Path;
 
@@ -57,6 +59,21 @@ impl PjrtBackend {
         );
         e.resize(m.seq * m.d_model, 0.0);
         e
+    }
+
+    /// Run one session window through the compiled tiny model: pad
+    /// `buf` (context × d_model) to the fixed `[batch, seq]` artifact
+    /// shape and return slot 0's logits. The AOT artifact cannot grow a
+    /// KV cache, so decode is **by recompute**: every step re-executes
+    /// the whole (still tiny) window — production-shaped plumbing, not a
+    /// production-shaped cost.
+    fn run_window(&self, buf: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.artifacts.manifest;
+        let mut data = vec![0f32; m.batch * m.seq * m.d_model];
+        let n = buf.len().min(m.seq * m.d_model);
+        data[..n].copy_from_slice(&buf[..n]);
+        let flat = self.artifacts.run_tiny_model(&data)?;
+        Ok(flat[..m.n_classes].to_vec())
     }
 }
 
@@ -106,6 +123,71 @@ impl ExecutionBackend for PjrtBackend {
             exec_s,
             // The artifact runtime measures no cycles itself; attribution
             // comes from the cost model.
+            stats: SimStats::default(),
+        })
+    }
+
+    fn prefill(&self, req: &Request, budget: u32) -> crate::Result<(KvHandle, StepOutcome)> {
+        anyhow::ensure!(budget >= 1, "decode budget must be ≥ 1");
+        let m = &self.artifacts.manifest;
+        let prompt_len = req.seq_len.min(m.seq).max(1);
+        let embed_seed = request_seed(self.embed_seed, req.id);
+        let buf = synth_embeddings(prompt_len, m.d_model, embed_seed);
+        let t0 = std::time::Instant::now();
+        let logits = self.run_window(&buf)?;
+        let token = argmax_token(&logits);
+        let kv = KvHandle {
+            id: req.id,
+            prompt_len,
+            budget,
+            generated: vec![token],
+            embed_seed,
+            state: KvState::Recompute(buf),
+        };
+        Ok((
+            kv,
+            StepOutcome {
+                logits,
+                token,
+                exec_s: t0.elapsed().as_secs_f64(),
+                stats: SimStats::default(),
+            },
+        ))
+    }
+
+    fn decode_step(&self, kv: &mut KvHandle) -> crate::Result<StepOutcome> {
+        anyhow::ensure!(
+            !kv.done(),
+            "decode_step on a finished session (request {})",
+            kv.id
+        );
+        let m = &self.artifacts.manifest;
+        let last = *kv
+            .generated
+            .last()
+            .expect("prefill always produces the first token");
+        let pos = kv.context_len() - 1;
+        let embed_seed = kv.embed_seed;
+        let buf = match &mut kv.state {
+            KvState::Recompute(b) => b,
+            _ => anyhow::bail!(
+                "session for request {} was not created by the PJRT backend",
+                kv.id
+            ),
+        };
+        // Grow the window until the compiled sequence saturates; beyond
+        // that the context is frozen at the artifact's `seq`.
+        if buf.len() / m.d_model < m.seq {
+            buf.extend_from_slice(&token_embedding(m.d_model, embed_seed, pos, last));
+        }
+        let t0 = std::time::Instant::now();
+        let logits = self.run_window(buf)?;
+        let token = argmax_token(&logits);
+        kv.generated.push(token);
+        Ok(StepOutcome {
+            logits,
+            token,
+            exec_s: t0.elapsed().as_secs_f64(),
             stats: SimStats::default(),
         })
     }

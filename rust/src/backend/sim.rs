@@ -10,12 +10,26 @@
 //! exists for CI serving paths, capacity studies, and batcher tests where
 //! no artifact directory (and no PJRT runtime) is available.
 
-use crate::backend::{BatchOutcome, CostModel, ExecutionBackend, COST_SAMPLE_ROWS, DEFAULT_SEQ_LIMIT};
+use crate::backend::{
+    BatchOutcome, CostModel, ExecutionBackend, KvHandle, KvState, StepOutcome, COST_SAMPLE_ROWS,
+    DEFAULT_SEQ_LIMIT,
+};
 use crate::config::{AcceleratorConfig, ModelConfig};
 use crate::model::Model;
 use crate::sim::SimStats;
-use crate::workload::Request;
+use crate::workload::{request_seed, Request};
 use anyhow::Result;
+
+/// Seed of the simulated model (also the base of the synthetic decode
+/// token stream, so identical requests generate identical streams).
+const SIM_MODEL_SEED: u64 = 11;
+
+/// Deterministic synthetic token for a (session, position): the sim
+/// backend computes no logits, but sessions still need a token stream so
+/// the serving layers above treat every backend identically.
+fn pseudo_token(embed_seed: u64, pos: usize) -> u32 {
+    (request_seed(embed_seed, pos as u64) & 0xFFFF) as u32
+}
 
 /// Cycle-attribution-only execution backend.
 pub struct SimBackend {
@@ -31,7 +45,7 @@ impl SimBackend {
     /// accelerators (AxLLM and multiply-only baseline) and cache the
     /// per-token costs.
     pub fn new(model_cfg: ModelConfig, acc_cfg: AcceleratorConfig) -> Result<SimBackend> {
-        let model = Model::new(model_cfg, 11);
+        let model = Model::new(model_cfg, SIM_MODEL_SEED);
         let (cost, ax_run) = CostModel::from_sampled(&model, acc_cfg, COST_SAMPLE_ROWS)?;
         Ok(SimBackend {
             model_name: ax_run.model,
@@ -49,12 +63,18 @@ impl SimBackend {
         self
     }
 
-    /// When paced, `run_batch` *sleeps* for the simulated accelerator
-    /// service time instead of returning instantly. Live serving uses
-    /// this so a sim-backed worker is occupied for as long as the modeled
-    /// hardware would be — queueing dynamics and replica scaling then
-    /// behave like the modeled deployment instead of degenerating to
-    /// zero-cost execution. Trace-driven serving should stay unpaced.
+    /// When paced, `run_batch` (and `prefill`/`decode_step`) *sleep* for
+    /// the simulated accelerator service time instead of returning
+    /// instantly. Closed-batch live serving uses this so a sim-backed
+    /// worker is occupied for as long as the modeled hardware would be —
+    /// queueing dynamics and replica scaling then behave like the
+    /// modeled deployment instead of degenerating to zero-cost
+    /// execution. Trace-driven serving should stay unpaced, and so
+    /// should **continuous-batching decode serving**: its decode weight
+    /// pass is shared across the running batch, so the live decode
+    /// worker paces at the iteration level
+    /// ([`crate::coordinator::DecodeOpts`]) — per-step pacing here would
+    /// charge one full weight pass per session per step.
     pub fn with_paced(mut self, paced: bool) -> SimBackend {
         self.paced = paced;
         self
@@ -104,6 +124,60 @@ impl ExecutionBackend for SimBackend {
             stats: self.per_token.scaled(tokens, 1),
         })
     }
+
+    fn prefill(&self, req: &Request, budget: u32) -> crate::Result<(KvHandle, StepOutcome)> {
+        anyhow::ensure!(budget >= 1, "decode budget must be ≥ 1");
+        let prompt_len = req.seq_len.min(self.seq_limit).max(1);
+        let exec_s = self.cost.sim_time_s(prompt_len as u64);
+        if self.paced {
+            std::thread::sleep(std::time::Duration::from_secs_f64(exec_s));
+        }
+        let embed_seed = request_seed(SIM_MODEL_SEED, req.id);
+        let token = pseudo_token(embed_seed, prompt_len);
+        let kv = KvHandle {
+            id: req.id,
+            prompt_len,
+            budget,
+            generated: vec![token],
+            embed_seed,
+            state: KvState::Analytic,
+        };
+        Ok((
+            kv,
+            StepOutcome {
+                logits: Vec::new(),
+                token,
+                exec_s,
+                stats: self.per_token.scaled(prompt_len as u64, 1),
+            },
+        ))
+    }
+
+    fn decode_step(&self, kv: &mut KvHandle) -> crate::Result<StepOutcome> {
+        anyhow::ensure!(
+            !kv.done(),
+            "decode_step on a finished session (request {})",
+            kv.id
+        );
+        anyhow::ensure!(
+            matches!(kv.state, KvState::Analytic),
+            "session for request {} was not created by the sim backend",
+            kv.id
+        );
+        let context = kv.context_len() as u64;
+        let exec_s = self.cost.decode_step_time_s(context);
+        if self.paced {
+            std::thread::sleep(std::time::Duration::from_secs_f64(exec_s));
+        }
+        let token = pseudo_token(kv.embed_seed, kv.context_len());
+        kv.generated.push(token);
+        Ok(StepOutcome {
+            logits: Vec::new(),
+            token,
+            exec_s,
+            stats: self.per_token.scaled(1, 1),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -117,6 +191,7 @@ mod tests {
             dataset: Dataset::Imdb,
             seq_len,
             arrival_s: id as f64 * 0.001,
+            gen_tokens: 0,
         }
     }
 
@@ -153,6 +228,45 @@ mod tests {
         // simulated service time from above.
         assert!(t0.elapsed().as_secs_f64() >= out.exec_s);
         assert!(out.exec_s > 0.0);
+    }
+
+    #[test]
+    fn decode_step_cost_grows_with_context() {
+        let b = SimBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper()).unwrap();
+        assert!(b.cost().attn_cycles_per_ctx_token > 0.0);
+        let (mut kv, first) = b.prefill(&req(3, 16), 5).unwrap();
+        assert!(first.exec_s > 0.0);
+        assert!(first.logits.is_empty());
+        let mut last = 0.0f64;
+        while !kv.done() {
+            let out = b.decode_step(&mut kv).unwrap();
+            // Context grows every step, so does the simulated step time.
+            assert!(out.exec_s > last, "{} vs {last}", out.exec_s);
+            last = out.exec_s;
+        }
+        assert_eq!(kv.generated.len(), 5);
+        // Token stream is deterministic in (request, position).
+        let (mut kv2, _) = b.prefill(&req(3, 16), 5).unwrap();
+        while !kv2.done() {
+            b.decode_step(&mut kv2).unwrap();
+        }
+        assert_eq!(kv.generated, kv2.generated);
+    }
+
+    #[test]
+    fn iteration_time_amortizes_the_decode_weight_pass() {
+        let b = SimBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper()).unwrap();
+        let c = b.cost();
+        // 8 decode steps in one iteration share one weight pass: far
+        // cheaper than 8 standalone steps.
+        let ctxs = [16u64; 8];
+        let together = c.iteration_time_s(0, &ctxs);
+        let alone: f64 = ctxs.iter().map(|&x| c.decode_step_time_s(x)).sum();
+        assert!(together < alone / 2.0, "{together} vs {alone}");
+        // And prefill tokens do not amortize.
+        let pf = c.iteration_time_s(10, &[]);
+        assert!((pf - c.sim_time_s(10)).abs() < 1e-12);
+        assert_eq!(c.iteration_time_s(0, &[]), 0.0);
     }
 
     #[test]

@@ -174,6 +174,20 @@ impl Dataset {
             Dataset::Imdb => 512,
         }
     }
+
+    /// Mean generated-output length for autoregressive decode workloads:
+    /// label-like outputs for the classification corpora, longer spans
+    /// for QA. (Synthetic calibration — the corpora publish no generation
+    /// statistics; what matters downstream is the per-dataset *mix* of
+    /// output lengths, which drives continuous-batching raggedness.)
+    pub fn mean_gen_len(&self) -> usize {
+        match self {
+            Dataset::AgNews => 8,
+            Dataset::YelpReviewFull => 24,
+            Dataset::Squad => 48,
+            Dataset::Imdb => 16,
+        }
+    }
 }
 
 /// One Table-I row: a model/dataset pair.
@@ -285,6 +299,9 @@ mod tests {
             Dataset::Imdb,
         ] {
             assert!(d.mean_len() <= d.max_len());
+            assert!(d.mean_gen_len() >= 1);
+            assert!(d.mean_gen_len() < d.max_len());
         }
+        assert!(Dataset::Squad.mean_gen_len() > Dataset::AgNews.mean_gen_len());
     }
 }

@@ -161,6 +161,36 @@ impl BatchScheduler {
         }
     }
 
+    /// Queue one request for **continuous batching** without evaluating
+    /// any closure rule. Continuous batching has no closed batches:
+    /// admission happens at step boundaries through
+    /// [`BatchScheduler::take_ready`], so the deadline/`max_batch` rules
+    /// never fire. Closed-batch callers must keep using
+    /// [`BatchScheduler::offer`] / [`BatchScheduler::admit`].
+    ///
+    /// [`offer`]: BatchScheduler::offer
+    /// [`admit`]: BatchScheduler::admit
+    pub fn enqueue(&mut self, req: Request) {
+        self.pending.push(req);
+    }
+
+    /// Continuous-batching admission: remove and return up to `n` pending
+    /// requests, oldest arrival first. Free session slots are refilled
+    /// FIFO at every iteration boundary, so a long-running session can
+    /// delay — but never permanently starve — a waiting request; the
+    /// arrival sort keeps the rule honest under slightly out-of-order
+    /// stamps from concurrent submitters (same reasoning as
+    /// [`BatchScheduler::deadline_s`]).
+    pub fn take_ready(&mut self, n: usize) -> Vec<Request> {
+        if n == 0 || self.pending.is_empty() {
+            return Vec::new();
+        }
+        self.pending
+            .sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        let k = n.min(self.pending.len());
+        self.pending.drain(..k).collect()
+    }
+
     /// Flush the remaining requests (end of trace / server shutdown).
     /// Dispatches at the pending deadline or `now`, whichever is earlier.
     pub fn flush(&mut self, now: f64) -> Option<Batch> {
@@ -201,6 +231,7 @@ mod tests {
             dataset: Dataset::Imdb,
             seq_len: 32,
             arrival_s: t,
+            gen_tokens: 0,
         }
     }
 
@@ -302,6 +333,43 @@ mod tests {
         assert!((batch.dispatch_s - 0.05).abs() < 1e-12);
         assert_eq!(b.pending(), 0);
         assert!(b.poll(1.0).is_none());
+    }
+
+    #[test]
+    fn take_ready_is_fifo_by_arrival_and_bounded() {
+        let mut b = BatchScheduler::new(BatchPolicy {
+            max_batch: 64,
+            max_wait_s: 10.0,
+        });
+        assert!(b.take_ready(4).is_empty());
+        // Out-of-order enqueues (concurrent submitters): admission must
+        // still be oldest-first.
+        b.enqueue(req(2, 0.03));
+        b.enqueue(req(0, 0.01));
+        b.enqueue(req(1, 0.02));
+        assert_eq!(b.pending(), 3);
+        assert!(b.take_ready(0).is_empty());
+        let first: Vec<u64> = b.take_ready(2).iter().map(|r| r.id).collect();
+        assert_eq!(first, vec![0, 1]);
+        assert_eq!(b.pending(), 1);
+        let rest: Vec<u64> = b.take_ready(8).iter().map(|r| r.id).collect();
+        assert_eq!(rest, vec![2]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn enqueue_never_closes_a_batch() {
+        let mut b = BatchScheduler::new(BatchPolicy {
+            max_batch: 2,
+            max_wait_s: 0.0,
+        });
+        // Past-deadline, over-capacity enqueues: no closure fires.
+        for i in 0..5 {
+            b.enqueue(req(i, i as f64));
+        }
+        assert_eq!(b.pending(), 5);
+        // The deadline is still visible for idle-sleep computation.
+        assert!((b.deadline_s().unwrap() - 0.0).abs() < 1e-12);
     }
 
     #[test]

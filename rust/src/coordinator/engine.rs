@@ -2,11 +2,25 @@
 //! from the trace batcher into whichever backend the deployment selected
 //! (pure-sim, functional, or PJRT), and every request gets simulated
 //! accelerator cycles/energy attributed through the backend's cost model.
+//!
+//! Two serving shapes share the engine:
+//!
+//! - **prefill-only** ([`Engine::serve_trace`]) — the original
+//!   closed-batch path: one request = one forward pass;
+//! - **decode** ([`Engine::serve_trace_decode`]) — phase-aware
+//!   continuous batching: requests become autoregressive sessions
+//!   (`prefill` → `decode_step`×budget) and the iteration loop admits
+//!   new sessions / retires finished ones at every step boundary, on a
+//!   deterministic virtual clock driven by
+//!   [`CostModel::iteration_time_s`]. The closed-batch decode
+//!   comparator ([`Engine::serve_trace_decode_closed`]) exists so
+//!   `benches/decode_serve.rs` can measure what continuous batching
+//!   buys.
 
-use crate::backend::{ExecutionBackend, PjrtBackend};
+use crate::backend::{ExecutionBackend, KvHandle, PjrtBackend};
 pub use crate::backend::CostModel;
 use crate::config::AcceleratorConfig;
-use crate::coordinator::batcher::{Batch, BatchPolicy, DynamicBatcher};
+use crate::coordinator::batcher::{Batch, BatchPolicy, BatchScheduler, DynamicBatcher};
 use crate::coordinator::metrics::ServeSummary;
 use crate::energy::EnergyModel;
 use crate::sim::SimStats;
@@ -39,6 +53,15 @@ pub struct RequestResult {
     pub sim_cycles: u64,
     /// Simulated accelerator energy (J).
     pub sim_energy_j: f64,
+    /// Generated tokens (decode sessions; 0 for prefill-only serving).
+    pub gen_tokens: u64,
+    /// Time to first token: arrival → first generated token (prefill
+    /// completion). Equals `latency_s` for prefill-only serving, where
+    /// the first "token" is the whole answer.
+    pub ttft_s: f64,
+    /// Time per output token after the first (0 when fewer than two
+    /// tokens were generated).
+    pub tpot_s: f64,
 }
 
 /// The serving engine: a batching/attribution shell around any
@@ -113,6 +136,9 @@ impl<B: ExecutionBackend> Engine<B> {
                 batch_size: batch.requests.len(),
                 sim_cycles: (cost.cycles_per_token_ax * tokens as f64) as u64,
                 sim_energy_j: cost.energy_pj_per_token_ax * tokens as f64 * 1e-12,
+                gen_tokens: 0,
+                ttft_s: queue_wait_s + exec_s,
+                tpot_s: 0.0,
             });
         }
         Ok(out)
@@ -137,6 +163,279 @@ impl<B: ExecutionBackend> Engine<B> {
         }
         let summary = ServeSummary::from_results(&results, batches.len(), self.backend.cost());
         Ok((results, summary))
+    }
+
+    /// Continuous-batching decode serving over an arrival-ordered trace,
+    /// on a deterministic virtual clock.
+    ///
+    /// The loop is token-level: each iteration (a) admits pending
+    /// arrivals into free session slots (FIFO through the shared
+    /// [`BatchScheduler::take_ready`] rule), (b) takes one decode step
+    /// for every running session and prefills the newly admitted ones,
+    /// and (c) retires sessions that exhausted their generated-token
+    /// budget. The clock advances by [`CostModel::iteration_time_s`]:
+    /// prefill tokens pay per-token weight passes; all decode steps of an
+    /// iteration share one weight pass (the weight-bound GEMV regime).
+    /// Keeping the running batch full is therefore what buys throughput
+    /// — exactly what closed batches can't do
+    /// ([`Engine::serve_trace_decode_closed`]).
+    ///
+    /// `default_gen` is the generated-token budget for requests whose
+    /// `gen_tokens` is 0. Backends execute for real (logits and tokens
+    /// are theirs); the clock is always the modeled accelerator time, so
+    /// results are deterministic and backend-comparable.
+    pub fn serve_trace_decode(
+        &self,
+        trace: Vec<Request>,
+        policy: BatchPolicy,
+        default_gen: u32,
+    ) -> Result<(Vec<RequestResult>, ServeSummary)> {
+        let cap = policy.max_batch.min(self.max_batch()).max(1);
+        let cost = *self.cost();
+        let mut sched = BatchScheduler::new(BatchPolicy {
+            max_batch: cap,
+            ..policy
+        });
+        let mut arrivals = trace.into_iter().peekable();
+        let mut active: Vec<DecodeSession> = Vec::new();
+        let mut results: Vec<RequestResult> = Vec::new();
+        let mut iterations = 0usize;
+        let mut clock = 0.0f64;
+
+        loop {
+            while arrivals.peek().map_or(false, |r| r.arrival_s <= clock) {
+                sched.enqueue(arrivals.next().expect("peeked"));
+            }
+            let admitted = sched.take_ready(cap - active.len());
+            if active.is_empty() && admitted.is_empty() {
+                // Idle: jump to the next arrival, or finish.
+                match arrivals.peek() {
+                    Some(r) => {
+                        clock = clock.max(r.arrival_s);
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+
+            iterations += 1;
+            let batch_now = active.len() + admitted.len();
+            let mut prefill_tokens = 0u64;
+            let mut decode_ctxs: Vec<u64> = Vec::with_capacity(active.len());
+            for s in active.iter_mut() {
+                let ctx = s.kv.context_len() as u64;
+                decode_ctxs.push(ctx);
+                let out = self.backend.decode_step(&mut s.kv)?;
+                s.record_step(ctx, out, &cost);
+                s.peak_batch = s.peak_batch.max(batch_now);
+            }
+            for req in admitted {
+                let budget = decode_budget(&req, default_gen);
+                let (kv, out) = self.backend.prefill(&req, budget)?;
+                prefill_tokens += kv.prompt_len as u64;
+                active.push(DecodeSession::admit(
+                    kv,
+                    out,
+                    req.arrival_s,
+                    clock,
+                    &cost,
+                    batch_now,
+                ));
+            }
+            clock += cost.iteration_time_s(prefill_tokens, &decode_ctxs);
+            let mut i = 0;
+            while i < active.len() {
+                let s = &mut active[i];
+                if s.ttft_abs.is_none() {
+                    // The session's first token (from prefill) completed
+                    // within this iteration.
+                    s.ttft_abs = Some(clock);
+                }
+                if s.kv.done() {
+                    let mut done = active.swap_remove(i);
+                    done.finish_abs = Some(clock);
+                    results.push(done.into_result());
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        let summary = ServeSummary::from_results(&results, iterations, self.backend.cost());
+        Ok((results, summary))
+    }
+
+    /// Closed-batch decode comparator: batches form through the
+    /// closed-batch `batch_trace` rules and then **run to completion** —
+    /// no admissions at step boundaries, so slots retired by short
+    /// sessions idle until the whole batch drains. This is the baseline
+    /// `benches/decode_serve.rs` measures continuous batching against;
+    /// attribution and per-step execution are identical to
+    /// [`Engine::serve_trace_decode`].
+    pub fn serve_trace_decode_closed(
+        &self,
+        trace: Vec<Request>,
+        policy: BatchPolicy,
+        default_gen: u32,
+    ) -> Result<(Vec<RequestResult>, ServeSummary)> {
+        let policy = BatchPolicy {
+            max_batch: policy.max_batch.min(self.max_batch()).max(1),
+            ..policy
+        };
+        let cost = *self.cost();
+        let batches = DynamicBatcher::batch_trace(policy, trace);
+        let mut results: Vec<RequestResult> = Vec::new();
+        let mut iterations = 0usize;
+        let mut clock = 0.0f64;
+        for b in batches {
+            clock = clock.max(b.dispatch_s);
+            let batch_size = b.requests.len();
+            // Iteration 1: prefill the whole batch.
+            iterations += 1;
+            let mut sessions: Vec<DecodeSession> = Vec::with_capacity(batch_size);
+            let mut prefill_tokens = 0u64;
+            for req in &b.requests {
+                let budget = decode_budget(req, default_gen);
+                let (kv, out) = self.backend.prefill(req, budget)?;
+                prefill_tokens += kv.prompt_len as u64;
+                sessions.push(DecodeSession::admit(
+                    kv,
+                    out,
+                    req.arrival_s,
+                    clock,
+                    &cost,
+                    batch_size,
+                ));
+            }
+            clock += cost.iteration_time_s(prefill_tokens, &[]);
+            for s in sessions.iter_mut() {
+                s.ttft_abs = Some(clock);
+                if s.kv.done() {
+                    s.finish_abs = Some(clock);
+                }
+            }
+            // Lockstep decode until the whole batch drains; finished
+            // sessions idle their slot (the closed-batch cost).
+            while sessions.iter().any(|s| s.finish_abs.is_none()) {
+                iterations += 1;
+                let mut decode_ctxs = Vec::new();
+                for s in sessions.iter_mut().filter(|s| s.finish_abs.is_none()) {
+                    let ctx = s.kv.context_len() as u64;
+                    decode_ctxs.push(ctx);
+                    let out = self.backend.decode_step(&mut s.kv)?;
+                    s.record_step(ctx, out, &cost);
+                }
+                clock += cost.iteration_time_s(0, &decode_ctxs);
+                for s in sessions.iter_mut() {
+                    if s.kv.done() && s.finish_abs.is_none() {
+                        s.finish_abs = Some(clock);
+                    }
+                }
+            }
+            results.extend(sessions.into_iter().map(DecodeSession::into_result));
+        }
+        let summary = ServeSummary::from_results(&results, iterations, self.backend.cost());
+        Ok((results, summary))
+    }
+}
+
+/// Budget resolution shared by every decode path: the request's own
+/// `gen_tokens` wins; 0 falls back to the caller's default; the result is
+/// always ≥ 1 (a session produces at least its prefill token).
+pub(crate) fn decode_budget(req: &Request, default_gen: u32) -> u32 {
+    let g = if req.gen_tokens > 0 {
+        req.gen_tokens
+    } else {
+        default_gen
+    };
+    g.max(1)
+}
+
+/// Bookkeeping for one in-flight decode session. ONE implementation for
+/// both decode serving paths — the engine's virtual-clock loops and the
+/// live `Server` decode worker — so cost accumulation and the TTFT/TPOT
+/// result math cannot drift between trace and live reporting (the same
+/// reason `ServeSummary::from_results` is shared).
+pub(crate) struct DecodeSession {
+    pub(crate) kv: KvHandle,
+    pub(crate) arrival_s: f64,
+    pub(crate) admit_s: f64,
+    /// Completion stamp of the first generated token (prefill); `None`
+    /// until the caller's clock observes it.
+    pub(crate) ttft_abs: Option<f64>,
+    /// Completion stamp of the last generated token.
+    pub(crate) finish_abs: Option<f64>,
+    pub(crate) prompt_tokens: u64,
+    pub(crate) last_logits: Vec<f32>,
+    pub(crate) cycles: f64,
+    pub(crate) energy_pj: f64,
+    pub(crate) peak_batch: usize,
+}
+
+impl DecodeSession {
+    /// Open a session from a completed prefill, attributing the prompt's
+    /// weight passes. TTFT/finish stamps are left for the caller's clock.
+    pub(crate) fn admit(
+        kv: KvHandle,
+        first: crate::backend::StepOutcome,
+        arrival_s: f64,
+        admit_s: f64,
+        cost: &CostModel,
+        batch_now: usize,
+    ) -> DecodeSession {
+        let prompt_tokens = kv.prompt_len as u64;
+        DecodeSession {
+            kv,
+            arrival_s,
+            admit_s,
+            ttft_abs: None,
+            finish_abs: None,
+            prompt_tokens,
+            last_logits: first.logits,
+            cycles: cost.cycles_per_token_ax * prompt_tokens as f64,
+            energy_pj: cost.energy_pj_per_token_ax * prompt_tokens as f64,
+            peak_batch: batch_now,
+        }
+    }
+
+    /// Record one completed decode step taken at context length `ctx`
+    /// (standalone attribution — batch-independent by construction).
+    pub(crate) fn record_step(
+        &mut self,
+        ctx: u64,
+        out: crate::backend::StepOutcome,
+        cost: &CostModel,
+    ) {
+        if !out.logits.is_empty() {
+            self.last_logits = out.logits;
+        }
+        self.cycles += cost.decode_step_cycles(ctx);
+        self.energy_pj += cost.decode_step_energy_pj(ctx);
+    }
+
+    pub(crate) fn into_result(self) -> RequestResult {
+        let gen = self.kv.generated.len() as u64;
+        let finish = self.finish_abs.unwrap_or(self.admit_s);
+        let ttft_abs = self.ttft_abs.unwrap_or(finish);
+        let tpot_s = if gen > 1 {
+            ((finish - ttft_abs) / (gen - 1) as f64).max(0.0)
+        } else {
+            0.0
+        };
+        RequestResult {
+            id: self.kv.id,
+            logits: self.last_logits,
+            tokens: self.prompt_tokens + gen,
+            queue_wait_s: (self.admit_s - self.arrival_s).max(0.0),
+            exec_s: (finish - self.admit_s).max(0.0),
+            latency_s: (finish - self.arrival_s).max(0.0),
+            dispatch_s: self.admit_s,
+            batch_size: self.peak_batch.max(1),
+            sim_cycles: self.cycles as u64,
+            sim_energy_j: self.energy_pj * 1e-12,
+            gen_tokens: gen,
+            ttft_s: (ttft_abs - self.arrival_s).max(0.0),
+            tpot_s,
+        }
     }
 }
 
@@ -170,6 +469,36 @@ mod tests {
         assert!(cm.reuse_rate > 0.5);
         assert!(cm.energy_pj_per_token_ax < cm.energy_pj_per_token_base);
         assert!(cm.sim_time_s(100) > 0.0);
+    }
+
+    #[test]
+    fn decode_budget_resolution() {
+        use crate::config::Dataset;
+        let mk = |gen_tokens: u32| crate::workload::Request {
+            id: 0,
+            dataset: Dataset::Imdb,
+            seq_len: 8,
+            arrival_s: 0.0,
+            gen_tokens,
+        };
+        assert_eq!(decode_budget(&mk(5), 2), 5, "request budget wins");
+        assert_eq!(decode_budget(&mk(0), 2), 2, "0 falls back to default");
+        assert_eq!(decode_budget(&mk(0), 0), 1, "budget is always ≥ 1");
+    }
+
+    #[test]
+    fn cost_model_carries_the_decode_regime() {
+        let model = Model::new(ModelConfig::tiny(), 3);
+        let cm = CostModel::from_sim(&model, AcceleratorConfig::paper());
+        assert!(cm.attn_cycles_per_ctx_token > 0.0);
+        assert!(cm.attn_energy_pj_per_ctx_token > 0.0);
+        // Step cost grows linearly with context.
+        let d0 = cm.decode_step_cycles(0);
+        let d8 = cm.decode_step_cycles(8);
+        let d16 = cm.decode_step_cycles(16);
+        assert!(((d16 - d8) - (d8 - d0)).abs() < 1e-9);
+        assert!(d16 > d8 && d8 > d0);
+        assert!((d0 - cm.cycles_per_token_ax).abs() < 1e-9);
     }
 
     #[test]

@@ -50,9 +50,18 @@ pub struct ServeSummary {
     pub requests: usize,
     pub batches: usize,
     pub tokens: u64,
+    /// Generated tokens across all requests (decode serving; 0 for
+    /// prefill-only runs).
+    pub gen_tokens: u64,
     /// Wall-clock span of the trace (first arrival → last completion).
     pub span_s: f64,
     pub latency: LatencyStats,
+    /// Time-to-first-token distribution (arrival → first generated
+    /// token; equals `latency` for prefill-only serving).
+    pub ttft: LatencyStats,
+    /// Time-per-output-token distribution over decode sessions that
+    /// generated ≥ 2 tokens (empty/zero otherwise).
+    pub tpot: LatencyStats,
     /// Requests per second over the span.
     pub throughput_rps: f64,
     /// Tokens per second over the span.
@@ -73,14 +82,25 @@ impl ServeSummary {
     /// drivers), so both report identical metrics for identical results.
     ///
     /// The span runs from the earliest arrival (`dispatch - queue_wait`)
-    /// to the latest completion (`dispatch + exec`).
+    /// to the latest completion (`dispatch + exec`). An empty result set
+    /// is well-defined: zero counts, default (all-zero) latency stats,
+    /// and zero — never NaN or infinite — throughputs.
     pub fn from_results(
         results: &[RequestResult],
         batches: usize,
         cost: &CostModel,
     ) -> ServeSummary {
         let latency = LatencyStats::from_samples(results.iter().map(|r| r.latency_s).collect());
+        let ttft = LatencyStats::from_samples(results.iter().map(|r| r.ttft_s).collect());
+        let tpot = LatencyStats::from_samples(
+            results
+                .iter()
+                .filter(|r| r.gen_tokens > 1)
+                .map(|r| r.tpot_s)
+                .collect(),
+        );
         let tokens: u64 = results.iter().map(|r| r.tokens).sum();
+        let gen_tokens: u64 = results.iter().map(|r| r.gen_tokens).sum();
         let first_arrival = results
             .iter()
             .map(|r| r.dispatch_s - r.queue_wait_s)
@@ -98,8 +118,11 @@ impl ServeSummary {
             requests: results.len(),
             batches,
             tokens,
+            gen_tokens,
             span_s,
             latency,
+            ttft,
+            tpot,
             throughput_rps: results.len() as f64 / span_s,
             throughput_tps: tokens as f64 / span_s,
             sim_cycles: results.iter().map(|r| r.sim_cycles).sum(),
@@ -141,8 +164,46 @@ mod tests {
     #[test]
     fn empty_samples_are_zero() {
         let l = LatencyStats::from_samples(vec![]);
+        assert_eq!(l, LatencyStats::default());
         assert_eq!(l.count, 0);
         assert_eq!(l.max_s, 0.0);
+        // No NaN can leak out of an empty distribution.
+        assert!(l.mean_s == 0.0 && l.p50_s == 0.0 && l.p99_s == 0.0);
+    }
+
+    #[test]
+    fn empty_result_set_summarizes_without_panic_or_nan() {
+        // Regression pin: zero served requests (an empty trace, or a
+        // live run that was shut down before any completion) must
+        // produce a well-formed summary — zero counts and throughputs,
+        // never a NaN span or a divide-by-zero panic.
+        let cost = CostModel {
+            cycles_per_token_ax: 100.0,
+            cycles_per_token_base: 300.0,
+            energy_pj_per_token_ax: 1.0,
+            energy_pj_per_token_base: 3.0,
+            reuse_rate: 0.7,
+            freq_ghz: 1.0,
+            attn_cycles_per_ctx_token: 1.0,
+            attn_energy_pj_per_ctx_token: 0.1,
+        };
+        let s = ServeSummary::from_results(&[], 0, &cost);
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.batches, 0);
+        assert_eq!(s.tokens, 0);
+        assert_eq!(s.gen_tokens, 0);
+        assert_eq!(s.latency, LatencyStats::default());
+        assert_eq!(s.ttft, LatencyStats::default());
+        assert_eq!(s.tpot, LatencyStats::default());
+        assert!(s.span_s > 0.0 && s.span_s.is_finite(), "span {}", s.span_s);
+        assert_eq!(s.throughput_rps, 0.0);
+        assert_eq!(s.throughput_tps, 0.0);
+        assert!(s.throughput_rps.is_finite() && s.throughput_tps.is_finite());
+        assert_eq!(s.sim_cycles, 0);
+        assert_eq!(s.sim_energy_j, 0.0);
+        // Cost-model-derived rates pass through unchanged.
+        assert!((s.sim_speedup - 3.0).abs() < 1e-12);
+        assert!((s.sim_reuse_rate - 0.7).abs() < 1e-12);
     }
 
     #[test]

@@ -25,6 +25,15 @@
 //! with least-loaded dispatch, and [`ServeSummary::from_results`] is the
 //! one aggregation both paths report through.
 //!
+//! Serving is **phase-aware**: besides the closed-batch prefill path,
+//! both the engine ([`Engine::serve_trace_decode`]) and the server
+//! ([`Server::start_decode_with`] / [`Server::start_decode_pool`]) run
+//! autoregressive decode with **token-level continuous batching** — an
+//! iteration loop that admits waiting requests into free session slots
+//! at step boundaries ([`BatchScheduler::take_ready`]) and retires
+//! sessions as their generated-token budgets exhaust, reporting
+//! TTFT/TPOT alongside the end-to-end latency percentiles.
+//!
 //! Rust owns the event loop; Python never runs on this path. See
 //! `rust/DESIGN.md` for the `Server<B> → BatchScheduler → Engine<B>`
 //! layering diagram and the live-vs-trace invariants.
@@ -37,4 +46,4 @@ pub mod server;
 pub use batcher::{Batch, BatchPolicy, BatchScheduler, DynamicBatcher};
 pub use engine::{CostModel, Engine, RequestResult};
 pub use metrics::{LatencyStats, ServeSummary};
-pub use server::{LiveRun, Server, ServerPool, ServerStats};
+pub use server::{DecodeOpts, LiveRun, Server, ServerPool, ServerStats};

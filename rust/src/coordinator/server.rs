@@ -35,7 +35,7 @@
 use crate::backend::{CostModel, ExecutionBackend, PjrtBackend};
 use crate::config::AcceleratorConfig;
 use crate::coordinator::batcher::{Batch, BatchPolicy, BatchScheduler};
-use crate::coordinator::engine::{Engine, RequestResult};
+use crate::coordinator::engine::{decode_budget, DecodeSession, Engine, RequestResult};
 use crate::coordinator::metrics::ServeSummary;
 use crate::workload::Request;
 use anyhow::Result;
@@ -49,6 +49,44 @@ use std::time::{Duration, Instant};
 enum Msg {
     Submit(Request, mpsc::Sender<RequestResult>),
     Shutdown,
+}
+
+/// Options for continuous-batching decode serving
+/// ([`Server::start_decode_with`] / [`Server::start_decode_pool`]).
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeOpts {
+    /// Generated-token budget for requests whose `gen_tokens` is 0.
+    pub default_gen: u32,
+    /// Sleep each iteration for the modeled accelerator time
+    /// ([`CostModel::iteration_time_s`]) so a sim-backed worker is
+    /// occupied like the modeled hardware. Pacing lives at the
+    /// *iteration* level because that is where the decode weight pass is
+    /// shared across the running batch — per-step backend pacing
+    /// ([`crate::backend::SimBackend::with_paced`]) would charge one
+    /// full weight pass per session per step and break the
+    /// continuous-batching cost model, so keep the backend itself
+    /// unpaced when setting this. Leave false for host-executing
+    /// backends (functional/PJRT), whose steps take real time already.
+    pub pace: bool,
+}
+
+impl DecodeOpts {
+    /// Unpaced decode serving with the given default budget.
+    pub fn new(default_gen: u32) -> DecodeOpts {
+        DecodeOpts {
+            default_gen,
+            pace: false,
+        }
+    }
+}
+
+/// How a worker serves its queue: closed batches (the original
+/// prefill-only path) or token-level continuous batching over
+/// autoregressive decode sessions.
+#[derive(Clone, Copy, Debug)]
+enum WorkerMode {
+    Batch,
+    Decode(DecodeOpts),
 }
 
 /// Live counters shared between a server front-end and its worker.
@@ -92,12 +130,30 @@ impl<B: ExecutionBackend + 'static> Server<B> {
     where
         F: FnOnce() -> Result<Engine<B>> + Send + 'static,
     {
-        Self::start_with_epoch(make, policy, Instant::now())
+        Self::start_with_epoch(make, policy, WorkerMode::Batch, Instant::now())
+    }
+
+    /// Start a **continuous-batching decode** worker: every request
+    /// becomes an autoregressive session (budget = its `gen_tokens`, or
+    /// `opts.default_gen` when 0); the worker's iteration loop admits
+    /// waiting requests into free session slots at step boundaries and
+    /// answers each request when its budget is exhausted, with TTFT/TPOT
+    /// stamps in the result.
+    pub fn start_decode_with<F>(make: F, policy: BatchPolicy, opts: DecodeOpts) -> Server<B>
+    where
+        F: FnOnce() -> Result<Engine<B>> + Send + 'static,
+    {
+        Self::start_with_epoch(make, policy, WorkerMode::Decode(opts), Instant::now())
     }
 
     /// `start_with` against a caller-supplied epoch — every replica of a
     /// pool shares one epoch so cross-replica timestamps are comparable.
-    fn start_with_epoch<F>(make: F, policy: BatchPolicy, epoch: Instant) -> Server<B>
+    fn start_with_epoch<F>(
+        make: F,
+        policy: BatchPolicy,
+        mode: WorkerMode,
+        epoch: Instant,
+    ) -> Server<B>
     where
         F: FnOnce() -> Result<Engine<B>> + Send + 'static,
     {
@@ -105,7 +161,12 @@ impl<B: ExecutionBackend + 'static> Server<B> {
         let (cost_tx, cost_rx) = mpsc::channel::<CostModel>();
         let stats = Arc::new(ServerStats::default());
         let wstats = Arc::clone(&stats);
-        let handle = std::thread::spawn(move || worker(make, policy, epoch, wstats, cost_tx, rx));
+        let handle = std::thread::spawn(move || match mode {
+            WorkerMode::Batch => worker(make, policy, epoch, wstats, cost_tx, rx),
+            WorkerMode::Decode(opts) => {
+                decode_worker(make, policy, opts, epoch, wstats, cost_tx, rx)
+            }
+        });
         Server {
             tx,
             handle: Some(handle),
@@ -123,6 +184,27 @@ impl<B: ExecutionBackend + 'static> Server<B> {
     where
         F: Fn(usize) -> Result<Engine<B>> + Send + Clone + 'static,
     {
+        Self::pool_with_mode(n, make, policy, WorkerMode::Batch)
+    }
+
+    /// [`Server::start_pool`] with continuous-batching decode replicas
+    /// ([`Server::start_decode_with`] semantics per worker).
+    pub fn start_decode_pool<F>(
+        n: usize,
+        make: F,
+        policy: BatchPolicy,
+        opts: DecodeOpts,
+    ) -> ServerPool<B>
+    where
+        F: Fn(usize) -> Result<Engine<B>> + Send + Clone + 'static,
+    {
+        Self::pool_with_mode(n, make, policy, WorkerMode::Decode(opts))
+    }
+
+    fn pool_with_mode<F>(n: usize, make: F, policy: BatchPolicy, mode: WorkerMode) -> ServerPool<B>
+    where
+        F: Fn(usize) -> Result<Engine<B>> + Send + Clone + 'static,
+    {
         assert!(n > 0, "pool needs at least one replica");
         // One epoch for the whole pool: arrival/dispatch stamps from
         // different replicas land on the same clock, so aggregated
@@ -131,7 +213,7 @@ impl<B: ExecutionBackend + 'static> Server<B> {
         let replicas = (0..n)
             .map(|i| {
                 let make = make.clone();
-                Server::start_with_epoch(move || make(i), policy, epoch)
+                Server::start_with_epoch(move || make(i), policy, mode, epoch)
             })
             .collect();
         ServerPool {
@@ -490,6 +572,135 @@ where
     }
 }
 
+/// The continuous-batching decode worker loop.
+///
+/// Iteration shape (mirrors `Engine::serve_trace_decode`, but on the
+/// wall clock): drain the channel, admit waiting requests FIFO into free
+/// session slots (prefill runs at admission — TTFT is its completion
+/// stamp), take one decode step for every running session, retire and
+/// answer finished ones. Session bookkeeping and the TTFT/TPOT result
+/// math are the engine's [`DecodeSession`] — one implementation for the
+/// trace and live paths. Starvation-freedom is structural: admission is
+/// FIFO and every iteration retires-or-advances every running session,
+/// so a waiting request is delayed by at most the remaining budgets of
+/// the `max_batch` sessions ahead of it — there is no deadline to reset,
+/// which is why the closed-batch trickle bug cannot recur here.
+///
+/// Admission applies the engine's oldest-first `take_ready` rule, but on
+/// a local `(Request, reply)` queue rather than the `BatchScheduler`
+/// itself: a request must stay coupled to its reply channel, and the
+/// single-channel worker receives submissions already in arrival order,
+/// so FIFO here *is* oldest-first without risking a result being paired
+/// with another request's waiter.
+///
+/// When `opts.pace` is set, the worker sleeps each iteration for the
+/// modeled [`CostModel::iteration_time_s`] — prefill weight passes plus
+/// ONE shared decode weight pass — so sim-backed live decode exhibits
+/// the same amortization economics as the deterministic path instead of
+/// charging a full weight pass per session per step.
+fn decode_worker<B: ExecutionBackend, F>(
+    make: F,
+    policy: BatchPolicy,
+    opts: DecodeOpts,
+    epoch: Instant,
+    stats: Arc<ServerStats>,
+    cost_tx: mpsc::Sender<CostModel>,
+    rx: mpsc::Receiver<Msg>,
+) -> Result<()>
+where
+    F: FnOnce() -> Result<Engine<B>>,
+{
+    let engine = make()?;
+    let cost = *engine.cost();
+    let _ = cost_tx.send(cost);
+    let cap = policy.max_batch.min(engine.max_batch()).max(1);
+    let mut pending: VecDeque<(Request, mpsc::Sender<RequestResult>)> = VecDeque::new();
+    let mut active: Vec<(DecodeSession, mpsc::Sender<RequestResult>)> = Vec::new();
+    let mut stopping = false;
+
+    loop {
+        // 1. Drain every queued message without blocking.
+        loop {
+            match rx.try_recv() {
+                Ok(Msg::Submit(req, tx)) => pending.push_back((req, tx)),
+                Ok(Msg::Shutdown) | Err(mpsc::TryRecvError::Disconnected) => {
+                    stopping = true;
+                    break;
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+            }
+        }
+        // 2. Fully idle: block for work (or finish on shutdown — running
+        //    sessions always drain to completion first).
+        if active.is_empty() && pending.is_empty() {
+            if stopping {
+                return Ok(());
+            }
+            match rx.recv() {
+                Ok(Msg::Submit(req, tx)) => {
+                    pending.push_back((req, tx));
+                    continue;
+                }
+                Ok(Msg::Shutdown) | Err(_) => return Ok(()),
+            }
+        }
+        // 3. Admit FIFO into free slots at this step boundary; prefill at
+        //    admission (the session's first token).
+        let mut prefill_tokens = 0u64;
+        while active.len() < cap {
+            let (req, tx) = match pending.pop_front() {
+                Some(p) => p,
+                None => break,
+            };
+            let admit_s = epoch.elapsed().as_secs_f64();
+            let budget = decode_budget(&req, opts.default_gen);
+            let (kv, out) = engine.backend.prefill(&req, budget)?;
+            prefill_tokens += kv.prompt_len as u64;
+            let mut s = DecodeSession::admit(kv, out, req.arrival_s, admit_s, &cost, 0);
+            // First token completed at prefill return (wall clock).
+            s.ttft_abs = Some(epoch.elapsed().as_secs_f64());
+            active.push((s, tx));
+        }
+        let batch_now = active.len();
+        // 4. One decode step per running session (one "iteration batch").
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        let mut decode_ctxs: Vec<u64> = Vec::with_capacity(active.len());
+        for (s, _) in active.iter_mut() {
+            s.peak_batch = s.peak_batch.max(batch_now);
+            if s.kv.done() {
+                // Budget-1 session: finished at prefill, retires below.
+                continue;
+            }
+            let ctx = s.kv.context_len() as u64;
+            decode_ctxs.push(ctx);
+            let out = engine.backend.decode_step(&mut s.kv)?;
+            s.record_step(ctx, out, &cost);
+        }
+        if opts.pace {
+            let iter_s = cost.iteration_time_s(prefill_tokens, &decode_ctxs);
+            if iter_s > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(iter_s));
+            }
+        }
+        // 5. Retire finished sessions and answer their waiters.
+        let now = epoch.elapsed().as_secs_f64();
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].0.kv.done() {
+                let (mut s, tx) = active.swap_remove(i);
+                s.finish_abs = Some(now);
+                // Count BEFORE sending (same visibility argument as the
+                // closed-batch dispatch path).
+                stats.completed.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(s.into_result());
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
 // Artifact-free coverage lives in rust/tests/live_server.rs (sim and
-// functional backends); PJRT coverage in
+// functional backends: closed-batch regressions plus the decode
+// continuous-batching sessions); PJRT coverage in
 // rust/tests/integration_coordinator.rs (requires built artifacts).

@@ -72,6 +72,64 @@ pub fn qmatmul(
     y
 }
 
+/// Row-wise-quantized matmul through the reuse path: like [`qmatmul`],
+/// but the activation grid is fit per sequence position instead of per
+/// block, so each output row depends only on its own input row.
+///
+/// This is the property KV-cached decode needs: a position's K/V (and
+/// downstream logits) are bit-identical whether the position is processed
+/// alone (one decode step) or as part of a longer block (prefill or full
+/// recompute). Per-token dynamic activation grids are also the standard
+/// practical choice for int8 serving datapaths.
+pub fn qmatmul_rowwise(
+    x: &[f32],
+    seq: usize,
+    w: &QuantMatrix,
+    chunk: usize,
+    stats: &mut ExecStats,
+) -> Vec<f32> {
+    let d = w.rows;
+    assert_eq!(x.len(), seq * d);
+    let mut y = vec![0f32; seq * w.cols];
+    for s in 0..seq {
+        let row = &x[s * d..(s + 1) * d];
+        let xq_params = QuantParams::fit(row, 8);
+        let scale = xq_params.scale * w.params.scale;
+        let xq: Vec<i8> = row.iter().map(|&v| xq_params.quantize(v)).collect();
+        let (yq, st) = reuse_matmul_chunked(&xq, w, chunk);
+        stats.mults += st.mults;
+        stats.reuses += st.reuses;
+        for (yj, &v) in y[s * w.cols..(s + 1) * w.cols].iter_mut().zip(&yq) {
+            *yj = v as f32 * scale;
+        }
+    }
+    y
+}
+
+/// One layer's K/V cache for causal autoregressive decode: the keys and
+/// values of every position processed so far, `len × d_model` row-major.
+#[derive(Clone, Debug, Default)]
+pub struct LayerKv {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    len: usize,
+}
+
+impl LayerKv {
+    pub fn new() -> LayerKv {
+        LayerKv::default()
+    }
+
+    /// Cached positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
 /// One transformer layer bound to its quantized weights.
 pub struct LayerExec<'a> {
     pub cfg: &'a ModelConfig,
@@ -153,6 +211,79 @@ impl<'a> LayerExec<'a> {
         layer_norm(&mut out, seq, d);
         out
     }
+
+    /// Causal incremental forward: process `n_new` new positions given
+    /// `kv` holding this layer's K/V for every earlier position, and
+    /// append the new positions' K/V to the cache.
+    ///
+    /// Every matmul is row-wise-quantized ([`qmatmul_rowwise`]) and
+    /// attention is causal (position p attends to 0..=p), so each output
+    /// row depends only on its own position and the immutable cache
+    /// prefix. Consequence, pinned by `rust/tests/prop_decode.rs`:
+    /// prefill-then-N-decode-steps is **bit-identical** to one causal
+    /// pass over the full extended sequence — the KV cache is a pure
+    /// scheduling transformation, exactly like the Result Cache itself.
+    pub fn forward_causal(&mut self, x_new: &[f32], n_new: usize, kv: &mut LayerKv) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let h = self.cfg.n_heads;
+        let dh = self.cfg.d_head();
+        assert_eq!(x_new.len(), n_new * d);
+        let p0 = kv.len;
+
+        let wq = self.weights.get(MatKind::Wq);
+        let wk = self.weights.get(MatKind::Wk);
+        let wv = self.weights.get(MatKind::Wv);
+        let q = qmatmul_rowwise(x_new, n_new, wq, self.chunk, &mut self.stats);
+        let k_new = qmatmul_rowwise(x_new, n_new, wk, self.chunk, &mut self.stats);
+        let v_new = qmatmul_rowwise(x_new, n_new, wv, self.chunk, &mut self.stats);
+        kv.k.extend_from_slice(&k_new);
+        kv.v.extend_from_slice(&v_new);
+        kv.len += n_new;
+
+        // Causal attention of each new position over the cache prefix
+        // (which now includes the new positions themselves).
+        let mut ctx = vec![0f32; n_new * d];
+        let scale = 1.0 / (dh as f32).sqrt();
+        for t in 0..n_new {
+            let span = p0 + t + 1;
+            for head in 0..h {
+                let off = head * dh;
+                let mut scores = vec![0f32; span];
+                for (j, sc) in scores.iter_mut().enumerate() {
+                    let mut s = 0f32;
+                    for u in 0..dh {
+                        s += q[t * d + off + u] * kv.k[j * d + off + u];
+                    }
+                    *sc = s * scale;
+                }
+                softmax_rows(&mut scores, 1, span);
+                for (j, &a) in scores.iter().enumerate() {
+                    for u in 0..dh {
+                        ctx[t * d + off + u] += a * kv.v[j * d + off + u];
+                    }
+                }
+            }
+        }
+
+        let wo = self.weights.get(MatKind::Wo);
+        let attn_out = qmatmul_rowwise(&ctx, n_new, wo, self.chunk, &mut self.stats);
+
+        // Residual + LN, then the FFN — all row-local.
+        let mut h1: Vec<f32> = x_new.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
+        layer_norm(&mut h1, n_new, d);
+
+        let w1 = self.weights.get(MatKind::Ff1);
+        let w2 = self.weights.get(MatKind::Ff2);
+        let mut ff = qmatmul_rowwise(&h1, n_new, w1, self.chunk, &mut self.stats);
+        for v in ff.iter_mut() {
+            *v = v.max(0.0);
+        }
+        let ff2 = qmatmul_rowwise(&ff, n_new, w2, self.chunk, &mut self.stats);
+
+        let mut out: Vec<f32> = h1.iter().zip(&ff2).map(|(a, b)| a + b).collect();
+        layer_norm(&mut out, n_new, d);
+        out
+    }
 }
 
 #[cfg(test)]
@@ -222,6 +353,67 @@ mod tests {
             assert!(mean.abs() < 1e-3, "mean {mean}");
             assert!((var - 1.0).abs() < 0.05, "var {var}");
         }
+    }
+
+    #[test]
+    fn causal_incremental_matches_block_forward_bitexactly() {
+        // One causal pass over 6 positions vs the same 6 positions fed
+        // through the KV cache one at a time — outputs must be
+        // bit-identical at every position.
+        let (cfg, w) = tiny();
+        let seq = 6;
+        let d = cfg.d_model;
+        let x = synth_embeddings(seq, d, 31);
+
+        let mut block = LayerExec::new(&cfg, &w, 256);
+        let mut kv_block = LayerKv::new();
+        let y_block = block.forward_causal(&x, seq, &mut kv_block);
+
+        let mut step = LayerExec::new(&cfg, &w, 256);
+        let mut kv_step = LayerKv::new();
+        let mut y_step = Vec::new();
+        for s in 0..seq {
+            let row = &x[s * d..(s + 1) * d];
+            y_step.extend(step.forward_causal(row, 1, &mut kv_step));
+        }
+
+        assert_eq!(y_block, y_step);
+        assert_eq!(kv_block.len(), seq);
+        assert_eq!(kv_step.len(), seq);
+        assert_eq!(block.stats, step.stats, "reuse counters must agree too");
+    }
+
+    #[test]
+    fn causal_prefix_stable_under_extension() {
+        // Appending new positions must not change earlier outputs: the
+        // causal property the KV cache relies on.
+        let (cfg, w) = tiny();
+        let d = cfg.d_model;
+        let x = synth_embeddings(5, d, 33);
+
+        let mut short = LayerExec::new(&cfg, &w, 128);
+        let y_short = short.forward_causal(&x[..3 * d], 3, &mut LayerKv::new());
+
+        let mut long = LayerExec::new(&cfg, &w, 128);
+        let y_long = long.forward_causal(&x, 5, &mut LayerKv::new());
+
+        assert_eq!(y_short[..], y_long[..3 * d]);
+    }
+
+    #[test]
+    fn rowwise_qmatmul_rows_are_independent() {
+        let (cfg, w) = tiny();
+        let wq = w.get(crate::model::MatKind::Wq);
+        let d = cfg.d_model;
+        let x = synth_embeddings(4, d, 35);
+        let mut stats = ExecStats::default();
+        let all = qmatmul_rowwise(&x, 4, wq, 256, &mut stats);
+        for s in 0..4 {
+            let mut st = ExecStats::default();
+            let one = qmatmul_rowwise(&x[s * d..(s + 1) * d], 1, wq, 256, &mut st);
+            assert_eq!(one[..], all[s * wq.cols..(s + 1) * wq.cols]);
+        }
+        assert!(stats.reuse_rate() > 0.2);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 
 pub mod layer;
 
-pub use layer::{softmax_rows, LayerExec};
+pub use layer::{qmatmul_rowwise, softmax_rows, LayerExec, LayerKv};
 
 use crate::model::LoraAdaptor;
 use crate::quant::{fold, QuantMatrix};
@@ -30,6 +30,74 @@ impl ExecStats {
         } else {
             self.reuses as f64 / n as f64
         }
+    }
+}
+
+/// Epoch-tagged first-occurrence tracker — the branch-free Result-Cache
+/// *accounting* used by [`reuse_matmul_chunked`]. A fresh epoch starts per
+/// RC chunk; a tag equal to the current epoch means "this folded value was
+/// already seen this chunk".
+///
+/// Hardened against counter wraparound: after 2^32 epochs the `u32`
+/// counter revisits old values, and a stale tag written 2^32 chunks ago
+/// would silently alias a live epoch (a first occurrence would be
+/// miscounted as a reuse). [`EpochTags::next_epoch`] therefore physically
+/// resets the tag array when the counter wraps — O(1) everywhere else —
+/// mirroring the wrap reset in [`crate::sim::rc::ResultCache::clear`].
+#[derive(Clone, Debug)]
+pub struct EpochTags {
+    /// 256-wide so a `u8` index provably never bounds-checks.
+    tags: [u32; 256],
+    epoch: u32,
+}
+
+impl Default for EpochTags {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EpochTags {
+    pub fn new() -> EpochTags {
+        // Epoch starts at 1 (the same value the wrap reset restarts at):
+        // a zeroed tag must never equal a live epoch, so a fresh tracker
+        // counts first occurrences correctly even before any
+        // `next_epoch` call.
+        EpochTags {
+            tags: [0; 256],
+            epoch: 1,
+        }
+    }
+
+    /// Start a fresh epoch (O(1); O(entries) only on the 2^32 wrap, where
+    /// the tags are physically reset so no stale tag can alias).
+    #[inline]
+    pub fn next_epoch(&mut self) {
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            self.tags = [0; 256];
+            self.epoch = 1;
+        }
+    }
+
+    /// True the first time `u` is seen in the current epoch (and tags it).
+    #[inline]
+    pub fn first_occurrence(&mut self, u: u8) -> bool {
+        let first = self.tags[u as usize] != self.epoch;
+        self.tags[u as usize] = self.epoch;
+        first
+    }
+
+    /// Current epoch counter (diagnostics / wrap tests).
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    /// Jump the counter to an arbitrary epoch. Exists so the wraparound
+    /// regression test can exercise the 2^32 boundary without performing
+    /// 2^32 clears; production callers never need it.
+    pub fn force_epoch(&mut self, epoch: u32) {
+        self.epoch = epoch;
     }
 }
 
@@ -64,10 +132,8 @@ pub fn reuse_matmul_chunked(x: &[i8], w: &QuantMatrix, chunk: usize) -> (Vec<i32
     assert!(chunk > 0);
     let mut y = vec![0i32; w.cols];
     let mut stats = ExecStats::default();
-    // Folded-value first-occurrence tags (epoch-cleared; 256-wide so the
-    // u8 index provably never bounds-checks).
-    let mut tag = [u32::MAX; 256];
-    let mut epoch = 0u32;
+    // Folded-value first-occurrence tags (epoch-cleared, wrap-hardened).
+    let mut tags = EpochTags::new();
     // Signed product table: products[q + 127] = x_i * q (256-wide, u8
     // indexed — entry 255 unused).
     let mut products = [0i32; 256];
@@ -80,7 +146,7 @@ pub fn reuse_matmul_chunked(x: &[i8], w: &QuantMatrix, chunk: usize) -> (Vec<i32
         let mut col = 0;
         while col < w.cols {
             let end = (col + chunk).min(w.cols);
-            epoch += 1;
+            tags.next_epoch();
             // Value datapath: pure gather+accumulate, no branches.
             for (&wij, yj) in row[col..end].iter().zip(&mut y[col..end]) {
                 *yj += products[(wij as i32 + 127) as u8 as usize];
@@ -88,9 +154,7 @@ pub fn reuse_matmul_chunked(x: &[i8], w: &QuantMatrix, chunk: usize) -> (Vec<i32
             // RC accounting: first-occurrence count per chunk.
             let mut unique = 0u64;
             for &wij in &row[col..end] {
-                let u = wij.unsigned_abs() as usize;
-                unique += (tag[u] != epoch) as u64;
-                tag[u] = epoch;
+                unique += tags.first_occurrence(wij.unsigned_abs()) as u64;
             }
             stats.mults += unique;
             stats.reuses += (end - col) as u64 - unique;
@@ -164,6 +228,52 @@ mod tests {
             let (y, _) = reuse_matmul_chunked(&x, &w, chunk);
             assert_eq!(y, dense, "chunk={chunk}");
         }
+    }
+
+    #[test]
+    fn epoch_tags_survive_u32_wraparound() {
+        // Regression: the u32 epoch counter revisits old values after
+        // 2^32 chunk clears; a stale tag must never alias a live epoch.
+        let mut t = EpochTags::new();
+        // A fresh tracker is immediately usable: zeroed tags never alias
+        // the starting epoch.
+        assert!(t.first_occurrence(3));
+        assert!(!t.first_occurrence(3));
+        t.force_epoch(u32::MAX - 1);
+        t.next_epoch(); // → u32::MAX
+        assert_eq!(t.epoch(), u32::MAX);
+        assert!(t.first_occurrence(7));
+        assert!(!t.first_occurrence(7), "second sighting must be a reuse");
+        t.next_epoch(); // wraps → physical reset, epoch restarts at 1
+        assert_eq!(t.epoch(), 1);
+        for u in [0u8, 7, 127, 255] {
+            assert!(
+                t.first_occurrence(u),
+                "value {u} aliased a stale tag across the epoch wrap"
+            );
+        }
+        // And the fresh epoch still deduplicates correctly.
+        assert!(!t.first_occurrence(127));
+    }
+
+    #[test]
+    fn epoch_tags_counting_matches_matmul_accounting() {
+        // The extracted tracker and the matmul's counters must agree:
+        // drive one row through both and compare unique counts.
+        let (x, w) = case(1, 300, 17);
+        let chunk = 64;
+        let (_, stats) = reuse_matmul_chunked(&x, &w, chunk);
+        let mut t = EpochTags::new();
+        let mut unique = 0u64;
+        let row = w.row(0);
+        for c in row.chunks(chunk) {
+            t.next_epoch();
+            for &wij in c {
+                unique += t.first_occurrence(wij.unsigned_abs()) as u64;
+            }
+        }
+        assert_eq!(stats.mults, unique);
+        assert_eq!(stats.mults + stats.reuses, 300);
     }
 
     #[test]

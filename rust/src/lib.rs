@@ -26,11 +26,14 @@
 //!   calibrated to the paper's 15nm synthesis anchors.
 //! - [`runtime`] — PJRT CPU runtime that loads the AOT-compiled JAX/Pallas
 //!   artifacts (HLO text) and executes them from Rust.
-//! - [`backend`] — the unified `ExecutionBackend` API: pure-sim,
-//!   functional (bit-exact), and PJRT execution behind one trait, so the
-//!   serving stack is generic over how a batch actually runs.
+//! - [`backend`] — the unified, phase-aware `ExecutionBackend` API:
+//!   pure-sim, functional (bit-exact), and PJRT execution behind one
+//!   trait — batch prefill plus a session/step decode surface
+//!   (`prefill`/`decode_step` over KV-cached sessions) — so the serving
+//!   stack is generic over how a batch or a token actually runs.
 //! - [`coordinator`] — a serving layer (request queue, dynamic batcher,
-//!   backend-generic engine) that drives batched inference through any
+//!   backend-generic engine, token-level continuous batching for decode
+//!   with TTFT/TPOT metrics) that drives batched inference through any
 //!   execution backend while attributing cycles/energy through the
 //!   simulator.
 //! - [`report`] — generators for every figure and table in the paper's

@@ -26,7 +26,7 @@ mod cli {
     /// Flags that never take a value. Without this list, `--csv fig1`
     /// would greedily swallow `fig1` as the flag's value and lose the
     /// positional experiment name.
-    const BOOL_FLAGS: &[&str] = &["csv", "baseline", "sliced", "live"];
+    const BOOL_FLAGS: &[&str] = &["csv", "baseline", "sliced", "live", "decode"];
 
     /// Minimal flag parser: positionals plus `--key value` / `--flag`.
     pub struct Args {
@@ -106,7 +106,7 @@ USAGE:
   axllm serve [--backend <sim|functional|pjrt>] [--model M] [--requests N]
               [--rate R] [--dataset <agnews|yelp|squad|imdb>] [--batch B]
               [--max-wait-ms W] [--artifacts DIR] [--seed N]
-              [--live] [--replicas N]
+              [--live] [--replicas N] [--decode] [--gen-tokens N]
       backends:
         sim         cycle/energy attribution only — no logits, no artifacts
         functional  bit-exact in-process reuse-datapath execution, no artifacts
@@ -114,11 +114,17 @@ USAGE:
       --live runs the threaded server (real clock, paced arrivals) instead
       of deterministic trace serving; --replicas N (default 1) spreads the
       live queue across N engine replicas with least-loaded dispatch.
+      --decode serves autoregressive sessions (KV-cached prefill + decode)
+      with token-level continuous batching, reporting TTFT/TPOT;
+      --gen-tokens N fixes every request's generated-token budget
+      (default: sampled per dataset).
       examples:
         axllm serve --backend sim --requests 64 --model tiny
         axllm serve --backend functional --requests 16 --dataset squad
         axllm serve --backend pjrt --artifacts artifacts --batch 4
         axllm serve --live --replicas 4 --backend sim --requests 64
+        axllm serve --decode --gen-tokens 16 --backend functional
+        axllm serve --decode --live --backend sim --requests 64
   axllm info [--artifacts DIR]
 ";
 
@@ -288,6 +294,16 @@ fn print_summary(s: &axllm::coordinator::ServeSummary) {
         s.latency.p99_s * 1e3,
         s.latency.max_s * 1e3
     );
+    if s.gen_tokens > 0 {
+        println!(
+            "decode: {} generated tokens  TTFT p50 {:.2}ms p95 {:.2}ms  TPOT p50 {:.3}ms p95 {:.3}ms",
+            s.gen_tokens,
+            s.ttft.p50_s * 1e3,
+            s.ttft.p95_s * 1e3,
+            s.tpot.p50_s * 1e3,
+            s.tpot.p95_s * 1e3
+        );
+    }
     println!(
         "accelerator attribution: {} simulated cycles, reuse {:.1}%, {:.2} µJ, speedup vs baseline {:.2}x",
         count(s.sim_cycles),
@@ -306,6 +322,22 @@ struct ServeOpts {
     policy: BatchPolicy,
     seed: u64,
     replicas: usize,
+    /// Serve autoregressive decode sessions (continuous batching).
+    decode: bool,
+    /// Fixed generated-token budget; 0 = sampled per dataset.
+    gen_tokens: u32,
+}
+
+impl ServeOpts {
+    /// The (prefill-only or decode) trace these options describe.
+    fn trace(&self) -> Vec<axllm::workload::Request> {
+        let mut gen = TraceGenerator::new(self.dataset, self.rate, self.seed);
+        if self.decode {
+            gen.take_decode(self.n, (self.gen_tokens > 0).then_some(self.gen_tokens))
+        } else {
+            gen.take(self.n)
+        }
+    }
 }
 
 /// Serve a synthetic trace through any backend and print the summary.
@@ -313,10 +345,15 @@ struct ServeOpts {
 /// backend, the synthesized weights too).
 fn run_serve<B: ExecutionBackend>(engine: &Engine<B>, opts: &ServeOpts) -> Result<(), String> {
     print_cost(engine.backend.name(), engine.cost());
-    let trace = TraceGenerator::new(opts.dataset, opts.rate, opts.seed).take(opts.n);
-    let (_results, s) = engine
-        .serve_trace(trace, opts.policy)
-        .map_err(|e| format!("{e:#}"))?;
+    let trace = opts.trace();
+    let served = if opts.decode {
+        // take_decode stamps every request's budget, so the fallback
+        // default is never consulted; 1 keeps it well-formed.
+        engine.serve_trace_decode(trace, opts.policy, 1)
+    } else {
+        engine.serve_trace(trace, opts.policy)
+    };
+    let (_results, s) = served.map_err(|e| format!("{e:#}"))?;
     print_summary(&s);
     Ok(())
 }
@@ -329,17 +366,31 @@ where
     B: ExecutionBackend + 'static,
     F: Fn(usize) -> axllm::Result<Engine<B>> + Send + Clone + 'static,
 {
-    use axllm::coordinator::Server;
+    use axllm::coordinator::{DecodeOpts, Server};
 
-    let trace = TraceGenerator::new(opts.dataset, opts.rate, opts.seed).take(opts.n);
-    let pool = Server::start_pool(opts.replicas, make, opts.policy);
+    let trace = opts.trace();
+    let pool = if opts.decode {
+        // Sim-backed live decode paces at the *iteration* level (the
+        // decode weight pass is shared across the running batch), so the
+        // sim backend itself must stay unpaced; host-executing backends
+        // (functional/PJRT) take real time per step already.
+        let dopts = DecodeOpts {
+            default_gen: 1,
+            pace: backend == "sim",
+        };
+        Server::start_decode_pool(opts.replicas, make, opts.policy, dopts)
+    } else {
+        Server::start_pool(opts.replicas, make, opts.policy)
+    };
     // cost() is cached, so printing it first costs nothing; on failure
     // run() below surfaces the worker's real construction error.
     if let Some(cost) = pool.cost() {
         print_cost(backend, &cost);
         println!(
-            "live: {} replica(s), arrivals paced at {:.0} req/s",
-            opts.replicas, opts.rate
+            "live{}: {} replica(s), arrivals paced at {:.0} req/s",
+            if opts.decode { " decode" } else { "" },
+            opts.replicas,
+            opts.rate
         );
     }
     // Replay the trace's arrival offsets on the wall clock.
@@ -366,7 +417,12 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
         },
         seed: args.get("seed", 7u64)?,
         replicas: args.get("replicas", 1usize)?,
+        decode: args.get_bool("decode"),
+        gen_tokens: args.get("gen-tokens", 0u32)?,
     };
+    if opts.gen_tokens > 0 && !opts.decode {
+        return Err("--gen-tokens needs --decode".into());
+    }
     if opts.replicas == 0 {
         return Err("--replicas must be ≥ 1".into());
     }
@@ -383,10 +439,13 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
             if live {
                 // Paced: the live worker is occupied for the simulated
                 // service time, so queueing and replica scaling behave
-                // like the modeled deployment.
+                // like the modeled deployment. Decode mode paces at the
+                // worker's iteration level instead (see run_live), so
+                // its backend stays unpaced.
+                let decode = opts.decode;
                 let make = move |_i: usize| {
                     SimBackend::new(model_cfg.clone(), acc_cfg)
-                        .map(|b| Engine::new(b.with_paced(true)))
+                        .map(|b| Engine::new(b.with_paced(!decode)))
                 };
                 run_live("sim", make, &opts)
             } else {
@@ -554,6 +613,27 @@ mod tests {
         assert_eq!(a.get("replicas", 1usize).unwrap(), 4);
         assert_eq!(a.flag("backend"), Some("sim"));
         assert_eq!(a.positional, vec!["serve"]);
+    }
+
+    #[test]
+    fn decode_flag_composes_with_gen_tokens() {
+        let a = Args::parse(&argv(&[
+            "serve",
+            "--decode",
+            "--gen-tokens",
+            "16",
+            "--backend",
+            "functional",
+        ]))
+        .unwrap();
+        assert!(a.get_bool("decode"));
+        assert_eq!(a.get("gen-tokens", 0u32).unwrap(), 16);
+        assert_eq!(a.flag("backend"), Some("functional"));
+        assert_eq!(a.positional, vec!["serve"]);
+        // --decode directly before a valued flag must not swallow it.
+        let b = Args::parse(&argv(&["serve", "--decode", "--requests", "8"])).unwrap();
+        assert!(b.get_bool("decode"));
+        assert_eq!(b.get("requests", 0usize).unwrap(), 8);
     }
 
     #[test]

@@ -11,7 +11,8 @@
 use crate::config::Dataset;
 use crate::util::rng::Rng;
 
-/// One inference request: a sequence of synthetic token embeddings.
+/// One inference request: a sequence of synthetic token embeddings, plus
+/// an optional autoregressive-decode budget.
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
@@ -19,6 +20,10 @@ pub struct Request {
     pub seq_len: usize,
     /// Arrival time in seconds since trace start (serving experiments).
     pub arrival_s: f64,
+    /// Generated-token budget for decode serving. 0 means prefill-only
+    /// (the classifier path); decode serving treats 0 as "use the
+    /// server's default budget".
+    pub gen_tokens: u32,
 }
 
 /// Sample a sequence length from the dataset's profile: log-normal with
@@ -31,6 +36,18 @@ pub fn sample_seq_len(dataset: Dataset, rng: &mut Rng) -> usize {
     let mu = mean.ln() - sigma * sigma / 2.0;
     let len = (mu + sigma * rng.normal()).exp().round() as usize;
     len.clamp(4, dataset.max_len())
+}
+
+/// Sample a generated-output length from the dataset's decode profile:
+/// log-normal around [`Dataset::mean_gen_len`], truncated to
+/// `[1, 4 × mean]`. Output lengths are what make decode traces ragged —
+/// the raggedness continuous batching exists to absorb.
+pub fn sample_gen_len(dataset: Dataset, rng: &mut Rng) -> u32 {
+    let mean = dataset.mean_gen_len() as f64;
+    let sigma = 0.5f64;
+    let mu = mean.ln() - sigma * sigma / 2.0;
+    let len = (mu + sigma * rng.normal()).exp().round() as i64;
+    len.clamp(1, (mean * 4.0) as i64) as u32
 }
 
 /// A deterministic stream of requests with Poisson arrivals.
@@ -56,7 +73,8 @@ impl TraceGenerator {
         }
     }
 
-    /// Generate the next request in the trace.
+    /// Generate the next request in the trace (prefill-only:
+    /// `gen_tokens` = 0).
     pub fn next_request(&mut self) -> Request {
         self.clock_s += self.rng.exponential(self.rate);
         let r = Request {
@@ -64,6 +82,7 @@ impl TraceGenerator {
             dataset: self.dataset,
             seq_len: sample_seq_len(self.dataset, &mut self.rng),
             arrival_s: self.clock_s,
+            gen_tokens: 0,
         };
         self.next_id += 1;
         r
@@ -72,6 +91,24 @@ impl TraceGenerator {
     /// Generate a fixed-size trace.
     pub fn take(&mut self, n: usize) -> Vec<Request> {
         (0..n).map(|_| self.next_request()).collect()
+    }
+
+    /// Generate a fixed-size **decode** trace: like
+    /// [`TraceGenerator::take`], but every request carries a
+    /// generated-token budget — `fixed` when given (the CLI's
+    /// `--gen-tokens N`), otherwise sampled from the dataset's
+    /// output-length profile ([`sample_gen_len`]).
+    pub fn take_decode(&mut self, n: usize, fixed: Option<u32>) -> Vec<Request> {
+        (0..n)
+            .map(|_| {
+                let mut r = self.next_request();
+                r.gen_tokens = match fixed {
+                    Some(g) => g.max(1),
+                    None => sample_gen_len(self.dataset, &mut self.rng),
+                };
+                r
+            })
+            .collect()
     }
 }
 
@@ -89,6 +126,18 @@ pub fn synth_embeddings(seq_len: usize, d_model: usize, seed: u64) -> Vec<f32> {
     (0..seq_len * d_model)
         .map(|_| rng.normal() as f32)
         .collect()
+}
+
+/// Synthesize the embedding of generated token `token` at absolute
+/// position `pos` — the decode-side analogue of [`synth_embeddings`].
+/// Deterministic in (seed, position, token), so every backend — and the
+/// full-recompute reference path the decode-exactness property checks
+/// against — sees bit-identical decode inputs.
+pub fn token_embedding(d_model: usize, seed: u64, pos: usize, token: u32) -> Vec<f32> {
+    let s = seed
+        ^ (pos as u64 + 1).wrapping_mul(0xD1B54A32D192ED03)
+        ^ (token as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);
+    synth_embeddings(1, d_model, s)
 }
 
 /// Quantize activations to int8 on a shared symmetric grid — the input
@@ -161,6 +210,63 @@ mod tests {
             a.iter().map(|r| r.seq_len).collect::<Vec<_>>(),
             b.iter().map(|r| r.seq_len).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn gen_len_respects_bounds_and_tracks_means() {
+        let mut rng = Rng::new(6);
+        for ds in [
+            Dataset::AgNews,
+            Dataset::YelpReviewFull,
+            Dataset::Squad,
+            Dataset::Imdb,
+        ] {
+            let n = 5000;
+            let mut sum = 0u64;
+            for _ in 0..n {
+                let g = sample_gen_len(ds, &mut rng);
+                assert!((1..=4 * ds.mean_gen_len() as u32).contains(&g), "{ds:?} {g}");
+                sum += g as u64;
+            }
+            let mean = sum as f64 / n as f64;
+            let target = ds.mean_gen_len() as f64;
+            assert!(
+                (target * 0.7..target * 1.3).contains(&mean),
+                "{ds:?} mean {mean} target {target}"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_traces_carry_budgets() {
+        let plain = TraceGenerator::new(Dataset::Squad, 10.0, 5).take(20);
+        assert!(plain.iter().all(|r| r.gen_tokens == 0));
+        let sampled = TraceGenerator::new(Dataset::Squad, 10.0, 5).take_decode(20, None);
+        assert!(sampled.iter().all(|r| r.gen_tokens >= 1));
+        assert!(
+            sampled.iter().map(|r| r.gen_tokens).max()
+                != sampled.iter().map(|r| r.gen_tokens).min(),
+            "sampled budgets must be ragged"
+        );
+        let fixed = TraceGenerator::new(Dataset::Squad, 10.0, 5).take_decode(20, Some(12));
+        assert!(fixed.iter().all(|r| r.gen_tokens == 12));
+        // Arrivals and lengths stay identical to the plain trace.
+        for (a, b) in plain.iter().zip(&fixed) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.seq_len, b.seq_len);
+            assert!((a.arrival_s - b.arrival_s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn token_embeddings_deterministic_and_distinct() {
+        let a = token_embedding(16, 9, 3, 2);
+        let b = token_embedding(16, 9, 3, 2);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 16);
+        assert_ne!(a, token_embedding(16, 9, 4, 2), "position must matter");
+        assert_ne!(a, token_embedding(16, 9, 3, 3), "token must matter");
+        assert_ne!(a, token_embedding(16, 8, 3, 2), "seed must matter");
     }
 
     #[test]

@@ -55,6 +55,7 @@ fn identical_request_ids_get_identical_logits() {
         dataset: Dataset::Imdb,
         seq_len: 20,
         arrival_s: arrival,
+        gen_tokens: 0,
     };
     let (r1, _) = e
         .serve_trace(vec![mk(0.0)], BatchPolicy::default())
@@ -73,6 +74,7 @@ fn attribution_scales_with_sequence_length() {
         dataset: Dataset::Imdb,
         seq_len: len,
         arrival_s: id as f64 * 0.001,
+        gen_tokens: 0,
     };
     let (results, _) = e
         .serve_trace(
@@ -100,12 +102,14 @@ fn queue_wait_reflects_batching_policy() {
             dataset: Dataset::AgNews,
             seq_len: 16,
             arrival_s: 0.0,
+            gen_tokens: 0,
         },
         Request {
             id: 1,
             dataset: Dataset::AgNews,
             seq_len: 16,
             arrival_s: 1.0,
+            gen_tokens: 0,
         },
     ];
     let (results, summary) = e
@@ -143,6 +147,7 @@ fn threaded_server_round_trips() {
             dataset: Dataset::Squad,
             seq_len: 24,
             arrival_s: 0.0,
+            gen_tokens: 0,
         }));
     }
     for (id, rx) in rxs.into_iter().enumerate() {

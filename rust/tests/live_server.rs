@@ -7,7 +7,7 @@
 
 use axllm::backend::{FunctionalBackend, SimBackend};
 use axllm::config::{AcceleratorConfig, Dataset, ModelConfig};
-use axllm::coordinator::{BatchPolicy, Engine, RequestResult, Server};
+use axllm::coordinator::{BatchPolicy, DecodeOpts, Engine, RequestResult, Server};
 use axllm::workload::{Request, TraceGenerator};
 use std::time::{Duration, Instant};
 
@@ -33,6 +33,7 @@ fn req(id: u64, seq_len: usize) -> Request {
         seq_len,
         // Overwritten by Server::submit with the shared-epoch stamp.
         arrival_s: 0.0,
+        gen_tokens: 0,
     }
 }
 
@@ -246,6 +247,134 @@ fn pool_spreads_load_and_aggregates_a_summary() {
     assert!(summary.sim_cycles > 0);
     assert!(summary.sim_speedup > 1.3);
     assert!(summary.latency.p50_s <= summary.latency.p99_s);
+}
+
+fn req_gen(id: u64, seq_len: usize, gen_tokens: u32) -> Request {
+    Request {
+        gen_tokens,
+        ..req(id, seq_len)
+    }
+}
+
+#[test]
+fn live_decode_sessions_round_trip_with_ttft_tpot() {
+    const N: u64 = 12;
+    let server = Server::start_decode_with(
+        sim_engine,
+        BatchPolicy {
+            max_batch: 4,
+            max_wait_s: 0.01,
+        },
+        // Default budget of 5 for requests that carry none; unpaced.
+        DecodeOpts::new(5),
+    );
+    assert!(server.cost().is_some(), "worker must report a cost model");
+    let rxs: Vec<_> = (0..N)
+        .map(|id| {
+            // Mix per-request budgets with the server default.
+            let gen = if id % 3 == 0 { 0 } else { (id % 7) as u32 + 1 };
+            server.submit(req_gen(id, 16, gen))
+        })
+        .collect();
+    for (id, rx) in rxs.into_iter().enumerate() {
+        let res = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("decode server must answer");
+        assert_eq!(res.id, id as u64);
+        let expect = if id % 3 == 0 { 5 } else { (id % 7) as u64 + 1 };
+        assert_eq!(res.gen_tokens, expect, "request {id} budget");
+        assert_eq!(res.tokens, 16 + expect, "prompt + generated tokens");
+        assert!(res.ttft_s >= 0.0 && res.ttft_s <= res.latency_s + 1e-9);
+        assert!(res.tpot_s >= 0.0);
+        assert!(res.queue_wait_s >= 0.0);
+        assert!(res.sim_cycles > 0);
+        assert!(res.batch_size >= 1 && res.batch_size <= 4);
+    }
+    let stats = server.stats();
+    assert_eq!(
+        stats.completed.load(std::sync::atomic::Ordering::Relaxed),
+        N as usize
+    );
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn live_decode_functional_streams_final_logits() {
+    let server = Server::start_decode_with(
+        functional_engine,
+        BatchPolicy {
+            max_batch: 2,
+            max_wait_s: 0.01,
+        },
+        DecodeOpts::new(3),
+    );
+    assert!(server.cost().is_some());
+    let rxs: Vec<_> = (0..4).map(|id| server.submit(req_gen(id, 8, 3))).collect();
+    for (id, rx) in rxs.into_iter().enumerate() {
+        let res = rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("functional decode server must answer");
+        assert_eq!(res.id, id as u64);
+        assert_eq!(res.gen_tokens, 3);
+        assert_eq!(res.logits.len(), 4, "final-step logits");
+        assert!(res.logits.iter().all(|v| v.is_finite()));
+    }
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn live_decode_paced_occupies_the_worker_per_iteration() {
+    // Paced decode sleeps the modeled iteration time (shared decode
+    // weight pass + per-token prefill passes) at the worker level — the
+    // backend itself stays unpaced. Lower bound: every prompt token's
+    // weight pass is charged in some iteration's sleep before the last
+    // session completes.
+    const N: u64 = 6;
+    const SEQ: usize = 32;
+    let server = Server::start_decode_with(
+        sim_engine,
+        BatchPolicy {
+            max_batch: 8,
+            max_wait_s: 0.01,
+        },
+        DecodeOpts {
+            default_gen: 4,
+            pace: true,
+        },
+    );
+    let cost = server.cost().expect("worker must report a cost model");
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..N).map(|id| server.submit(req_gen(id, SEQ, 4))).collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let floor = cost.sim_time_s((N as usize * SEQ) as u64) * 0.9;
+    assert!(
+        elapsed >= floor,
+        "paced decode worker finished in {elapsed}s < modeled floor {floor}s"
+    );
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn live_decode_shutdown_drains_running_sessions() {
+    let server = Server::start_decode_with(
+        sim_engine,
+        BatchPolicy {
+            max_batch: 8,
+            max_wait_s: 10.0,
+        },
+        DecodeOpts::new(4),
+    );
+    assert!(server.cost().is_some());
+    let rx0 = server.submit(req_gen(0, 16, 6));
+    let rx1 = server.submit(req_gen(1, 16, 2));
+    server.shutdown().unwrap();
+    let r0 = rx0.recv().unwrap();
+    let r1 = rx1.recv().unwrap();
+    assert_eq!((r0.id, r0.gen_tokens), (0, 6));
+    assert_eq!((r1.id, r1.gen_tokens), (1, 2));
 }
 
 #[test]

@@ -1,0 +1,129 @@
+//! Property tests for phase-aware decode (in-crate property runner —
+//! see `util::prop`).
+//!
+//! Two claims anchor the step-based execution API:
+//! 1. **KV-cache exactness** — on `FunctionalBackend`, every decode
+//!    step's logits are bit-identical to a full causal recomputation of
+//!    the extended sequence from scratch. The KV cache (like the Result
+//!    Cache) is a scheduling transformation, never an approximation.
+//! 2. **Batch-independent attribution** — simulated decode cost depends
+//!    only on each session's own context trajectory, never on which
+//!    sessions it was continuously batched with.
+
+use axllm::backend::{ExecutionBackend, FunctionalBackend, SimBackend};
+use axllm::config::{AcceleratorConfig, Dataset, ModelConfig};
+use axllm::coordinator::{BatchPolicy, Engine, RequestResult};
+use axllm::util::prop::{check, Config};
+use axllm::workload::Request;
+use axllm::{prop_assert, prop_assert_eq};
+
+fn req(id: u64, seq_len: usize, gen_tokens: u32, arrival_s: f64) -> Request {
+    Request {
+        id,
+        dataset: Dataset::Imdb,
+        seq_len,
+        arrival_s,
+        gen_tokens,
+    }
+}
+
+#[test]
+fn prop_kv_cached_decode_bit_identical_to_full_recompute() {
+    check(
+        "kv-decode-exact",
+        Config {
+            cases: 6,
+            seed: 0xDEC0,
+        },
+        |rng| {
+            // A fresh random model per case (weights derive from the
+            // seed), plus a random prompt and step count.
+            let model_seed = rng.below(1_000_000);
+            let backend = FunctionalBackend::new(
+                ModelConfig::tiny(),
+                AcceleratorConfig::paper(),
+                model_seed,
+            )
+            .map_err(|e| e.to_string())?;
+            let r = req(rng.below(10_000), 2 + rng.index(12), 0, 0.0);
+            let steps = 1 + rng.index(4);
+            let (mut kv, first) = backend
+                .prefill(&r, (steps + 1) as u32)
+                .map_err(|e| e.to_string())?;
+            // Prefill logits == one-shot causal pass over the bare prompt.
+            prop_assert_eq!(first.logits, backend.recompute_logits(&r, &[]));
+            prop_assert_eq!(kv.generated.len(), 1);
+            for step in 0..steps {
+                let tokens_before = kv.generated.clone();
+                let out = backend.decode_step(&mut kv).map_err(|e| e.to_string())?;
+                // Step logits == full recompute of prompt + all tokens
+                // fed so far, bit for bit.
+                prop_assert_eq!(out.logits, backend.recompute_logits(&r, &tokens_before));
+                prop_assert_eq!(kv.generated.len(), step + 2);
+                prop_assert!(
+                    out.stats.mults > 0 && out.stats.rc_hits > 0,
+                    "decode steps must exercise the reuse datapath"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sim_decode_attribution_batch_independent() {
+    let engine = Engine::new(
+        SimBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper()).unwrap(),
+    );
+    let attribution = |results: &[RequestResult]| {
+        let mut v: Vec<(u64, u64, u64, u64)> = results
+            .iter()
+            .map(|r| (r.id, r.tokens, r.gen_tokens, r.sim_cycles))
+            .collect();
+        v.sort_unstable();
+        v
+    };
+    check(
+        "sim-decode-attribution-batch-independent",
+        Config {
+            cases: 12,
+            seed: 0xBA7C,
+        },
+        |rng| {
+            let n = 4 + rng.index(12);
+            let trace: Vec<Request> = (0..n)
+                .map(|i| {
+                    req(
+                        i as u64,
+                        4 + rng.index(28),
+                        1 + rng.index(12) as u32,
+                        i as f64 * 0.0004,
+                    )
+                })
+                .collect();
+            let narrow = BatchPolicy {
+                max_batch: 2,
+                max_wait_s: 0.001,
+            };
+            let wide = BatchPolicy {
+                max_batch: 16,
+                max_wait_s: 0.001,
+            };
+            let (rn, _) = engine
+                .serve_trace_decode(trace.clone(), narrow, 4)
+                .map_err(|e| e.to_string())?;
+            let (rw, _) = engine
+                .serve_trace_decode(trace.clone(), wide, 4)
+                .map_err(|e| e.to_string())?;
+            let (rcl, _) = engine
+                .serve_trace_decode_closed(trace, wide, 4)
+                .map_err(|e| e.to_string())?;
+            prop_assert_eq!(rn.len(), n);
+            // Per-request cycles/tokens identical at any concurrency —
+            // and identical on the closed-batch comparator too.
+            prop_assert_eq!(attribution(&rn), attribution(&rw));
+            prop_assert_eq!(attribution(&rn), attribution(&rcl));
+            Ok(())
+        },
+    );
+}
