@@ -1,0 +1,150 @@
+//! Multi-tenant LoRA decode serving: mixed-adapter continuous batching
+//! vs per-adapter serialized batches on one shared ragged burst trace.
+//!
+//! The multi-tenant question: N fine-tuned tenants share one quantized
+//! base model — must the scheduler segregate batches by adapter? AxLLM's
+//! dual pipelines say no: the base weight pass (and its reuse discount)
+//! is adapter-independent, and each session's rank-r side pipe rides
+//! along per request. Mixing tenants in one continuous batch therefore
+//! keeps the shared decode weight pass amortized across ALL live
+//! sessions, while the per-adapter serialized schedule drains each
+//! tenant's ragged tail with idle slots — N times over.
+//!
+//! Emits `BENCH_lora_serve.json` and **asserts** (a) mixed-adapter
+//! continuous batching out-serves per-adapter serialized batches, and
+//! (b) the base-pipeline reuse rate of every adapter group matches the
+//! adapter-free run — the paper's "reuse survives LoRA" claim, end to
+//! end.
+
+use axllm::backend::SimBackend;
+use axllm::config::{AcceleratorConfig, Dataset, ModelConfig};
+use axllm::coordinator::{BatchPolicy, Engine};
+use axllm::util::bench::Bench;
+use axllm::workload::{Request, TraceGenerator};
+
+const N_REQUESTS: usize = 64;
+const N_ADAPTERS: u32 = 8;
+const RANK: usize = 16;
+
+fn main() {
+    let engine = Engine::new(
+        SimBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper())
+            .expect("sim backend must construct")
+            .with_adapters(N_ADAPTERS as usize, RANK),
+    );
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait_s: 0.001,
+    };
+    // Burst arrivals, short prompts, ragged sampled output lengths, and
+    // a uniform tenant mix across N_ADAPTERS adapters.
+    let mut trace = TraceGenerator::new(Dataset::Squad, 100_000.0, 7)
+        .with_adapters(N_ADAPTERS)
+        .take_decode(N_REQUESTS, None);
+    for r in &mut trace {
+        r.seq_len = 8;
+    }
+    let gen_total: u64 = trace.iter().map(|r| r.gen_tokens as u64).sum();
+
+    // Mixed: every tenant in one continuous batch.
+    let (_, mixed) = engine
+        .serve_trace_decode(trace.clone(), policy, 1)
+        .expect("mixed-adapter decode serve");
+
+    // Serialized: one continuous-batching run per tenant, back to back —
+    // the adapter-homogeneous schedule a weight-swapping serving stack
+    // would be forced into. Same sessions, same per-request attribution;
+    // only the schedule differs.
+    let serialize = |engine: &Engine<SimBackend>| -> f64 {
+        (0..N_ADAPTERS)
+            .map(|a| {
+                let group: Vec<Request> = trace
+                    .iter()
+                    .filter(|r| r.adapter == Some(a))
+                    .cloned()
+                    .collect();
+                let (_, s) = engine
+                    .serve_trace_decode(group, policy, 1)
+                    .expect("per-adapter decode serve");
+                s.span_s
+            })
+            .sum()
+    };
+    let serialized_span = serialize(&engine);
+    let serialized_tps = gen_total as f64 / serialized_span;
+
+    // Adapter-free twin for the reuse-parity check.
+    let plain: Vec<Request> = trace
+        .iter()
+        .map(|r| Request {
+            adapter: None,
+            ..r.clone()
+        })
+        .collect();
+    let (_, base_run) = engine
+        .serve_trace_decode(plain, policy, 1)
+        .expect("adapter-free decode serve");
+
+    let mut b = Bench::new();
+    b.run_throughput("lora_serve/mixed-adapters", gen_total, || {
+        let _ = engine
+            .serve_trace_decode(trace.clone(), policy, 1)
+            .expect("mixed-adapter decode serve");
+    });
+    b.run_throughput("lora_serve/per-adapter-serialized", gen_total, || {
+        let _ = serialize(&engine);
+    });
+
+    println!(
+        "\nsimulated multi-tenant decode serving ({} requests, {} adapters rank {}, {} generated tokens):",
+        N_REQUESTS, N_ADAPTERS, RANK, gen_total
+    );
+    println!(
+        "  mixed continuous batch: {:>8.0} tok/s over {:.4}s",
+        mixed.throughput_tps, mixed.span_s
+    );
+    println!(
+        "  per-adapter serialized: {:>8.0} tok/s over {:.4}s",
+        serialized_tps, serialized_span
+    );
+    println!(
+        "  mixed/serialized throughput: {:.2}x  (side-pipe MACs: {})",
+        mixed.throughput_tps / serialized_tps,
+        mixed.adapter_ops
+    );
+    let base_free = base_run.by_adapter[0].base_reuse_rate;
+    for g in &mixed.by_adapter {
+        println!(
+            "  adapter {:?}: {} requests, base reuse {:.2}% (adapter-free: {:.2}%)",
+            g.adapter,
+            g.requests,
+            g.base_reuse_rate * 100.0,
+            base_free * 100.0
+        );
+        // Acceptance gate (ISSUE 4b): the base pipeline's reuse rate
+        // must survive LoRA — every tenant group within noise of the
+        // adapter-free run.
+        assert!(
+            (g.base_reuse_rate - base_free).abs() < 1e-6,
+            "adapter {:?} base reuse {} drifted from adapter-free {}",
+            g.adapter,
+            g.base_reuse_rate,
+            base_free
+        );
+    }
+    // Acceptance gate (ISSUE 4a): mixing tenants in one continuous batch
+    // must out-serve adapter-homogeneous serialized batches.
+    assert!(
+        mixed.throughput_tps > serialized_tps,
+        "mixed-adapter continuous batching ({:.0} tok/s) must beat per-adapter serialized batches ({:.0} tok/s)",
+        mixed.throughput_tps,
+        serialized_tps
+    );
+    assert!(mixed.adapter_ops > 0, "tenant sessions must do side-pipe work");
+
+    println!("\ncsv:\n{}", b.csv());
+    match std::fs::write("BENCH_lora_serve.json", b.json()) {
+        Ok(()) => println!("wrote BENCH_lora_serve.json"),
+        Err(e) => eprintln!("could not write BENCH_lora_serve.json: {e}"),
+    }
+}

@@ -28,6 +28,15 @@ echo "== decode serve bench (writes BENCH_decode_serve.json) =="
 # mixed-output-length trace (simulated token throughput).
 AXLLM_BENCH_FAST=1 cargo bench --bench decode_serve
 
+echo "== lora serve bench (writes BENCH_lora_serve.json) =="
+# Asserts mixed-adapter continuous batching out-serves per-adapter
+# serialized batches, and that the base-pipeline reuse rate survives
+# LoRA (every tenant group within noise of the adapter-free run).
+AXLLM_BENCH_FAST=1 cargo bench --bench lora_serve
+
+echo "== cargo doc --no-deps (rustdoc must stay warning-free) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
 echo "== cargo fmt --check =="
 cargo fmt --check
 

@@ -10,14 +10,20 @@
 //! correctness soak tests and artifact-free end-to-end serving.
 
 use crate::backend::{
-    argmax_token, BatchOutcome, CostModel, ExecutionBackend, KvHandle, KvState, StepOutcome,
-    COST_SAMPLE_ROWS, DEFAULT_SEQ_LIMIT,
+    argmax_token, BatchOutcome, CostModel, ExecutionBackend, KvHandle, KvState, ReqActivity,
+    StepOutcome, COST_SAMPLE_ROWS, DEFAULT_SEQ_LIMIT,
 };
 use crate::config::{AcceleratorConfig, ModelConfig};
-use crate::exec::layer::qmatmul;
-use crate::exec::{qmatmul_rowwise, ExecStats, LayerExec, LayerKv};
-use crate::model::{synthesize_matrix, LayerWeights, Model, WeightDistribution};
+use crate::exec::{
+    lora_side_matmul, qmatmul_rowwise, quantize_row, reuse_matmul_chunked, ExecStats, LayerExec,
+    LayerKv,
+};
+use crate::model::{
+    synthesize_matrix, AdapterId, AdapterRegistry, LayerWeights, LoraAdaptor, Model,
+    WeightDistribution,
+};
 use crate::quant::QuantMatrix;
+use crate::runtime::adapters::{provision, AdapterMisses};
 use crate::sim::{Accelerator, SimStats};
 use crate::util::rng::Rng;
 use crate::workload::{request_seed, synth_embeddings, token_embedding, Request};
@@ -36,6 +42,7 @@ const MAX_PARAMS: u64 = 1_000_000_000;
 /// In-process functional execution backend.
 pub struct FunctionalBackend {
     model_cfg: ModelConfig,
+    acc_cfg: AcceleratorConfig,
     layers: Vec<LayerWeights>,
     head: QuantMatrix,
     chunk: usize,
@@ -43,6 +50,10 @@ pub struct FunctionalBackend {
     max_batch: usize,
     embed_seed: u64,
     cost: CostModel,
+    /// Per-tenant LoRA adaptors served next to the base head (empty =
+    /// base-model-only deployment).
+    adapters: Option<AdapterRegistry>,
+    misses: AdapterMisses,
 }
 
 impl FunctionalBackend {
@@ -78,6 +89,7 @@ impl FunctionalBackend {
         let (cost, _ax_run) = CostModel::from_sampled(&model, acc_cfg, COST_SAMPLE_ROWS)?;
         Ok(FunctionalBackend {
             model_cfg,
+            acc_cfg,
             layers,
             head,
             chunk: acc.chunk_cols(),
@@ -85,7 +97,50 @@ impl FunctionalBackend {
             max_batch: 64,
             embed_seed: seed,
             cost,
+            adapters: None,
+            misses: AdapterMisses::new(),
         })
+    }
+
+    /// Serve `count` rank-`rank` LoRA tenants next to the base model:
+    /// a registry of adaptor pairs is synthesized against the logit head
+    /// (on the head's quantization grid — [`crate::model::lora`]), and
+    /// every request carrying `adapter: Some(id)` routes through the
+    /// base reuse pipeline **plus** tenant `id`'s dense rank-r side
+    /// pipeline. `adapter: None` requests are byte-for-byte unaffected.
+    /// The cost model charges the dual-pipeline regime
+    /// ([`CostModel::with_adapter_regime`]).
+    pub fn with_adapters(mut self, count: usize, rank: usize) -> FunctionalBackend {
+        if count == 0 {
+            return self;
+        }
+        let rank = rank.max(1);
+        self.adapters = Some(provision(&self.head, count, rank, self.embed_seed));
+        self.cost = self
+            .cost
+            .with_adapter_regime(&self.model_cfg, self.acc_cfg, rank);
+        self
+    }
+
+    /// Pure registry lookup (no miss accounting — serving entry points
+    /// record misses; recompute/reference paths must not double-count).
+    fn adaptor_for(&self, adapter: Option<AdapterId>) -> Option<&LoraAdaptor> {
+        adapter.and_then(|id| self.adapters.as_ref().and_then(|r| r.get(id)))
+    }
+
+    /// Serving-side routing: like [`FunctionalBackend::adaptor_for`],
+    /// but an unresolvable adapter id records a base-only miss.
+    fn route_adapter(&self, adapter: Option<AdapterId>) -> Option<&LoraAdaptor> {
+        match adapter {
+            None => None,
+            Some(id) => {
+                let found = self.adaptor_for(Some(id));
+                if found.is_none() {
+                    self.misses.record();
+                }
+                found
+            }
+        }
     }
 
     /// The W_buff-bounded Result-Cache chunk every logit-path matmul runs
@@ -114,9 +169,18 @@ impl FunctionalBackend {
         (e, seq)
     }
 
-    /// Forward one request through layers → mean-pool → quantized head.
+    /// Forward one request through layers → mean-pool → quantized head
+    /// (routing the request's adapter through the head's side pipeline).
     /// Returns the logits and the reuse counters the pass accumulated.
     pub fn forward(&self, req: &Request) -> (Vec<f32>, ExecStats) {
+        self.forward_with(self.route_adapter(req.adapter), req)
+    }
+
+    fn forward_with(
+        &self,
+        adaptor: Option<&LoraAdaptor>,
+        req: &Request,
+    ) -> (Vec<f32>, ExecStats) {
         let (mut x, seq) = self.request_embeddings(req);
         let mut stats = ExecStats::default();
         for lw in &self.layers {
@@ -135,7 +199,7 @@ impl FunctionalBackend {
         for p in pooled.iter_mut() {
             *p /= seq as f32;
         }
-        let logits = qmatmul(&pooled, 1, &self.head, self.chunk, &mut stats);
+        let logits = self.head_logits_for(adaptor, &pooled, &mut stats);
         (logits, stats)
     }
 
@@ -159,16 +223,53 @@ impl FunctionalBackend {
     }
 
     /// LM-head logits at one hidden row (row-wise quantized, so the
-    /// result depends only on that row).
-    fn head_logits(&self, row: &[f32], stats: &mut ExecStats) -> Vec<f32> {
-        qmatmul_rowwise(row, 1, &self.head, self.chunk, stats)
+    /// result depends only on that row), routed through the adapter's
+    /// side pipeline when one is given.
+    ///
+    /// `None` takes exactly the adapter-free path
+    /// ([`qmatmul_rowwise`]), so base-model requests are byte-for-byte
+    /// unaffected by adapters elsewhere in the batch. `Some(a)` keeps
+    /// the identical base-pipe computation and accounting, and adds the
+    /// dense side term `(x·A)·B` on the same quantized input — the
+    /// serving-side decomposition proven value-identical to the offline
+    /// combined [`crate::exec::lora_matmul`] kernel
+    /// (`tests/prop_lora.rs`).
+    fn head_logits_for(
+        &self,
+        adaptor: Option<&LoraAdaptor>,
+        row: &[f32],
+        stats: &mut ExecStats,
+    ) -> Vec<f32> {
+        match adaptor {
+            None => qmatmul_rowwise(row, 1, &self.head, self.chunk, stats),
+            Some(a) => {
+                // Base pipe: the SAME quantization step as the
+                // adapter-free path ([`quantize_row`] is qmatmul_rowwise's
+                // input side), same RC pass, same dequantization
+                // expression — bit-identical base term by construction.
+                let (xq, xq_params) = quantize_row(row);
+                let scale = xq_params.scale * self.head.params.scale;
+                let (yq, st) = reuse_matmul_chunked(&xq, &self.head, self.chunk);
+                stats.mults += st.mults;
+                stats.reuses += st.reuses;
+                // Side pipe: dense rank-r (x·A)·B on the same input.
+                let (side, sst) = lora_side_matmul(&xq, a);
+                stats.adapter_mults += sst.adapter_mults;
+                let side_scale = scale * a.b.params.scale;
+                yq.iter()
+                    .zip(&side)
+                    .map(|(&b, &s)| b as f32 * scale + s as f32 * side_scale)
+                    .collect()
+            }
+        }
     }
 
     /// Reference path for the decode-exactness property: recompute the
     /// last position's logits of `prompt + tokens` from scratch with one
-    /// causal pass — fresh caches, no incremental reuse.
-    /// `rust/tests/prop_decode.rs` proves the KV-cached step path
-    /// bit-identical to this.
+    /// causal pass — fresh caches, no incremental reuse — routing the
+    /// request's adapter exactly like the serving path.
+    /// `rust/tests/prop_decode.rs` and `rust/tests/prop_lora.rs` prove
+    /// the KV-cached step path bit-identical to this.
     pub fn recompute_logits(&self, req: &Request, tokens: &[u32]) -> Vec<f32> {
         let (mut x, prompt_len) = self.request_embeddings(req);
         let seed = request_seed(self.embed_seed, req.id);
@@ -180,7 +281,11 @@ impl FunctionalBackend {
         let mut caches = vec![LayerKv::new(); self.model_cfg.n_layers];
         let mut stats = ExecStats::default();
         let hidden = self.causal_pass(x, n, &mut caches, &mut stats);
-        self.head_logits(&hidden[(n - 1) * d..], &mut stats)
+        self.head_logits_for(
+            self.adaptor_for(req.adapter),
+            &hidden[(n - 1) * d..],
+            &mut stats,
+        )
     }
 }
 
@@ -219,6 +324,14 @@ impl ExecutionBackend for FunctionalBackend {
         &self.cost
     }
 
+    fn adapter_count(&self) -> usize {
+        self.adapters.as_ref().map_or(0, |r| r.len())
+    }
+
+    fn adapter_misses(&self) -> u64 {
+        self.misses.count()
+    }
+
     fn run_batch(&self, requests: &[Request]) -> crate::Result<BatchOutcome> {
         anyhow::ensure!(
             requests.len() <= self.max_batch,
@@ -228,29 +341,38 @@ impl ExecutionBackend for FunctionalBackend {
         );
         let t0 = std::time::Instant::now();
         let mut logits = Vec::with_capacity(requests.len());
+        let mut activity = Vec::with_capacity(requests.len());
         let mut total = ExecStats::default();
         for req in requests {
             let (l, s) = self.forward(req);
             logits.push(l);
             total.mults += s.mults;
             total.reuses += s.reuses;
+            total.adapter_mults += s.adapter_mults;
+            activity.push(ReqActivity {
+                base_mults: s.mults,
+                base_reuses: s.reuses,
+                adapter_ops: s.adapter_mults,
+            });
         }
         Ok(BatchOutcome {
             logits,
             exec_s: t0.elapsed().as_secs_f64(),
             stats: exec_to_sim(&total),
+            activity,
         })
     }
 
     fn prefill(&self, req: &Request, budget: u32) -> crate::Result<(KvHandle, StepOutcome)> {
         anyhow::ensure!(budget >= 1, "decode budget must be ≥ 1");
         let t0 = std::time::Instant::now();
+        let adaptor = self.route_adapter(req.adapter);
         let (x, prompt_len) = self.request_embeddings(req);
         let mut caches = vec![LayerKv::new(); self.model_cfg.n_layers];
         let mut stats = ExecStats::default();
         let hidden = self.causal_pass(x, prompt_len, &mut caches, &mut stats);
         let d = self.model_cfg.d_model;
-        let logits = self.head_logits(&hidden[(prompt_len - 1) * d..], &mut stats);
+        let logits = self.head_logits_for(adaptor, &hidden[(prompt_len - 1) * d..], &mut stats);
         let token = argmax_token(&logits);
         let kv = KvHandle {
             id: req.id,
@@ -258,6 +380,9 @@ impl ExecutionBackend for FunctionalBackend {
             budget,
             generated: vec![token],
             embed_seed: request_seed(self.embed_seed, req.id),
+            // A missed adapter id is dropped from the session so decode
+            // steps stay base-only (one recorded miss per request).
+            adapter: if adaptor.is_some() { req.adapter } else { None },
             state: KvState::Functional(caches),
         };
         Ok((
@@ -267,6 +392,11 @@ impl ExecutionBackend for FunctionalBackend {
                 token,
                 exec_s: t0.elapsed().as_secs_f64(),
                 stats: exec_to_sim(&stats),
+                activity: ReqActivity {
+                    base_mults: stats.mults,
+                    base_reuses: stats.reuses,
+                    adapter_ops: stats.adapter_mults,
+                },
             },
         ))
     }
@@ -286,6 +416,7 @@ impl ExecutionBackend for FunctionalBackend {
         let t0 = std::time::Instant::now();
         let d = self.model_cfg.d_model;
         let x = token_embedding(d, kv.embed_seed, pos, last);
+        let adaptor = self.adaptor_for(kv.adapter);
         let caches = match &mut kv.state {
             KvState::Functional(c) => c,
             _ => anyhow::bail!(
@@ -295,7 +426,7 @@ impl ExecutionBackend for FunctionalBackend {
         };
         let mut stats = ExecStats::default();
         let hidden = self.causal_pass(x, 1, caches, &mut stats);
-        let logits = self.head_logits(&hidden, &mut stats);
+        let logits = self.head_logits_for(adaptor, &hidden, &mut stats);
         let token = argmax_token(&logits);
         kv.generated.push(token);
         Ok(StepOutcome {
@@ -303,6 +434,11 @@ impl ExecutionBackend for FunctionalBackend {
             token,
             exec_s: t0.elapsed().as_secs_f64(),
             stats: exec_to_sim(&stats),
+            activity: ReqActivity {
+                base_mults: stats.mults,
+                base_reuses: stats.reuses,
+                adapter_ops: stats.adapter_mults,
+            },
         })
     }
 }
@@ -323,6 +459,7 @@ mod tests {
             seq_len,
             arrival_s: 0.0,
             gen_tokens: 0,
+            adapter: None,
         }
     }
 
@@ -399,9 +536,68 @@ mod tests {
             budget: 2,
             generated: vec![0],
             embed_seed: 1,
+            adapter: None,
             state: KvState::Analytic,
         };
         assert!(b.decode_step(&mut kv).is_err());
+    }
+
+    #[test]
+    fn adapters_shift_logits_and_leave_base_requests_untouched() {
+        let base = backend();
+        let tenants = backend().with_adapters(2, 8);
+        assert_eq!(tenants.adapter_count(), 2);
+        let plain = req(7, 12);
+        let t0 = Request {
+            adapter: Some(0),
+            ..req(7, 12)
+        };
+        let t1 = Request {
+            adapter: Some(1),
+            ..req(7, 12)
+        };
+        // Base-model requests are byte-identical whether or not the
+        // deployment holds adapters.
+        let (lp, sp) = base.forward(&plain);
+        let (lp2, sp2) = tenants.forward(&plain);
+        assert_eq!(lp, lp2);
+        assert_eq!(sp, sp2);
+        assert_eq!(sp2.adapter_mults, 0);
+        // Tenants see different logits — from the base model and from
+        // each other — with identical base-pipe accounting.
+        let (l0, s0) = tenants.forward(&t0);
+        let (l1, s1) = tenants.forward(&t1);
+        assert_ne!(l0, lp);
+        assert_ne!(l0, l1);
+        assert!(s0.adapter_mults > 0);
+        assert_eq!((s0.mults, s0.reuses), (sp.mults, sp.reuses));
+        assert_eq!(s0.reuse_rate(), sp.reuse_rate());
+        assert_eq!((s1.mults, s1.reuses), (sp.mults, sp.reuses));
+        // Decode sessions carry the adapter through every step, and the
+        // stepped logits match the full offline recompute bit-for-bit.
+        let (mut kv, first) = tenants.prefill(&t1, 3).unwrap();
+        assert_eq!(kv.adapter, Some(1));
+        assert!(first.activity.adapter_ops > 0);
+        assert_eq!(first.logits, tenants.recompute_logits(&t1, &[]));
+        while !kv.done() {
+            let before = kv.generated.clone();
+            let out = tenants.decode_step(&mut kv).unwrap();
+            assert_eq!(out.logits, tenants.recompute_logits(&t1, &before));
+            assert!(out.activity.adapter_ops > 0);
+        }
+        // Unknown tenants fall back to base-only with a recorded miss.
+        assert_eq!(tenants.adapter_misses(), 0);
+        let stranger = Request {
+            adapter: Some(9),
+            ..req(7, 12)
+        };
+        let (ls, ss) = tenants.forward(&stranger);
+        assert_eq!(ls, lp);
+        assert_eq!(ss.adapter_mults, 0);
+        assert_eq!(tenants.adapter_misses(), 1);
+        let (kv_s, _) = tenants.prefill(&stranger, 2).unwrap();
+        assert_eq!(kv_s.adapter, None, "missed adapter never sticks to a session");
+        assert_eq!(tenants.adapter_misses(), 2);
     }
 
     #[test]

@@ -40,7 +40,7 @@ pub use sim::SimBackend;
 use crate::config::{AcceleratorConfig, ModelConfig};
 use crate::energy::EnergyModel;
 use crate::exec::LayerKv;
-use crate::model::Model;
+use crate::model::{AdapterId, Model};
 use crate::sim::{Accelerator, ModelCycleSummary, SimStats};
 use crate::workload::Request;
 
@@ -53,6 +53,43 @@ pub const DEFAULT_SEQ_LIMIT: usize = 32;
 /// their per-token cost model: whole matrices for tiny/BERT-scale models,
 /// sampled-and-scaled for Llama-scale.
 pub const COST_SAMPLE_ROWS: usize = 512;
+
+/// Per-request activity split between the base reuse pipeline and the
+/// LoRA adapter side pipeline, as measured (functional) or modeled (sim)
+/// by the executing backend. All-zero when the backend measures nothing
+/// itself (PJRT).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReqActivity {
+    /// Base-pipeline multiplications (Result-Cache fills).
+    pub base_mults: u64,
+    /// Base-pipeline reuses (Result-Cache hits).
+    pub base_reuses: u64,
+    /// Dense MACs on the rank-r adapter side pipeline (0 for base-model
+    /// requests and for backends that serve adapters base-only).
+    pub adapter_ops: u64,
+}
+
+impl ReqActivity {
+    /// Base-pipeline reuse rate of this request's work (0 when the
+    /// backend measured no base ops). Adapter side-pipe MACs are
+    /// excluded by construction: the base pipe's reuse accounting is
+    /// unchanged by adapters.
+    pub fn base_reuse_rate(&self) -> f64 {
+        let n = self.base_mults + self.base_reuses;
+        if n == 0 {
+            0.0
+        } else {
+            self.base_reuses as f64 / n as f64
+        }
+    }
+
+    /// Accumulate another activity record into this one.
+    pub fn add(&mut self, other: &ReqActivity) {
+        self.base_mults += other.base_mults;
+        self.base_reuses += other.base_reuses;
+        self.adapter_ops += other.adapter_ops;
+    }
+}
 
 /// What one executed batch produced, regardless of backend.
 #[derive(Clone, Debug)]
@@ -68,6 +105,9 @@ pub struct BatchOutcome {
     /// (all-zero when the backend measures nothing itself; per-request
     /// attribution always comes from [`ExecutionBackend::cost`]).
     pub stats: SimStats,
+    /// Per-request base-vs-adapter activity split, in request order
+    /// (same length as `logits`).
+    pub activity: Vec<ReqActivity>,
 }
 
 /// One autoregressive decode session: the per-request state that carries
@@ -87,6 +127,10 @@ pub struct KvHandle {
     pub generated: Vec<u32>,
     /// Per-request seed deriving prompt and generated-token embeddings.
     pub embed_seed: u64,
+    /// LoRA adapter this session is served with (copied from the
+    /// request at prefill), so every decode step of the session routes
+    /// through the same side pipeline.
+    pub adapter: Option<AdapterId>,
     /// Backend-owned cache state.
     pub(crate) state: KvState,
 }
@@ -138,6 +182,8 @@ pub struct StepOutcome {
     /// Activity counters attributed to the step (all-zero when the
     /// backend measures nothing itself).
     pub stats: SimStats,
+    /// Base-vs-adapter activity split of this step.
+    pub activity: ReqActivity,
 }
 
 /// Greedy sampling: index of the largest logit (lowest index wins ties)
@@ -173,6 +219,20 @@ pub trait ExecutionBackend {
     /// Per-token accelerator cost model used for request attribution.
     fn cost(&self) -> &CostModel;
 
+    /// Number of LoRA adapters this backend can serve per request
+    /// (0 = base-model only). Requests naming an adapter the backend
+    /// does not hold are served base-only and counted by
+    /// [`ExecutionBackend::adapter_misses`].
+    fn adapter_count(&self) -> usize {
+        0
+    }
+
+    /// Requests that asked for an adapter the backend could not honor
+    /// and were served base-only instead.
+    fn adapter_misses(&self) -> u64 {
+        0
+    }
+
     /// Execute one batch; `requests.len()` must be ≤ `max_batch()`.
     fn run_batch(&self, requests: &[Request]) -> crate::Result<BatchOutcome>;
 
@@ -191,11 +251,17 @@ pub trait ExecutionBackend {
 /// (cycles/energy per token of matmul work, AxLLM vs baseline).
 #[derive(Clone, Copy, Debug)]
 pub struct CostModel {
+    /// Simulated AxLLM cycles for one token of weight traffic.
     pub cycles_per_token_ax: f64,
+    /// Simulated multiply-only-baseline cycles for the same token.
     pub cycles_per_token_base: f64,
+    /// Simulated AxLLM energy (pJ) for one token of weight traffic.
     pub energy_pj_per_token_ax: f64,
+    /// Simulated baseline energy (pJ) for the same token.
     pub energy_pj_per_token_base: f64,
+    /// Measured weight-side reuse rate of the simulated run.
     pub reuse_rate: f64,
+    /// Clock frequency in GHz (converts cycles to seconds).
     pub freq_ghz: f64,
     /// Decode (seq=1 GEMV) regime: incremental KV-attention cycles per
     /// context token of one decode step. Attention products are
@@ -206,6 +272,15 @@ pub struct CostModel {
     pub attn_cycles_per_ctx_token: f64,
     /// Incremental KV-attention energy (pJ) per context token per step.
     pub attn_energy_pj_per_ctx_token: f64,
+    /// LoRA **side-pipeline** cycles per token processed for an
+    /// adapter-carrying request. The side pipe is a dense rank-r
+    /// computation (`xA` then `(xA)B` at the model's Q/V attachment
+    /// points) on the multiply path — adapters never touch the base
+    /// pipe's reuse discount, they only add this term. Zero until
+    /// filled by [`CostModel::with_adapter_regime`].
+    pub adapter_cycles_per_token: f64,
+    /// LoRA side-pipeline energy (pJ) per adapter-request token.
+    pub adapter_energy_pj_per_token: f64,
 }
 
 impl CostModel {
@@ -224,6 +299,8 @@ impl CostModel {
             freq_ghz,
             attn_cycles_per_ctx_token: 0.0,
             attn_energy_pj_per_ctx_token: 0.0,
+            adapter_cycles_per_token: 0.0,
+            adapter_energy_pj_per_token: 0.0,
         }
     }
 
@@ -248,6 +325,34 @@ impl CostModel {
         };
         self.attn_cycles_per_ctx_token = cycles;
         self.attn_energy_pj_per_ctx_token = EnergyModel::default().energy(&stats).total_pj;
+        self
+    }
+
+    /// Fill the LoRA dual-pipeline regime for rank-`rank` adapters: one
+    /// adapter-request token performs, per layer, `2·(2·d_model·r)`
+    /// dense side-pipe MACs (rank-r A/B pairs at the standard Q and V
+    /// attachment points), lanes in parallel on the multiply path. The
+    /// base pipe's per-token cost — and its reuse discount — is
+    /// untouched: adapters are purely additive.
+    pub fn with_adapter_regime(
+        mut self,
+        model_cfg: &ModelConfig,
+        acc_cfg: AcceleratorConfig,
+        rank: usize,
+    ) -> CostModel {
+        let macs =
+            4 * model_cfg.d_model as u64 * rank as u64 * model_cfg.n_layers as u64;
+        let cycles = (macs as f64 / acc_cfg.lanes as f64).ceil() * acc_cfg.mult_latency as f64;
+        let stats = SimStats {
+            cycles: cycles as u64,
+            elements: macs,
+            mults: macs,
+            w_reads: macs,
+            out_writes: macs,
+            ..Default::default()
+        };
+        self.adapter_cycles_per_token = cycles;
+        self.adapter_energy_pj_per_token = EnergyModel::default().energy(&stats).total_pj;
         self
     }
 
@@ -278,8 +383,17 @@ impl CostModel {
             .with_decode_regime(&model.config, acc_cfg)
     }
 
+    /// Simulated speedup of AxLLM over the multiply-only baseline.
     pub fn speedup(&self) -> f64 {
         self.cycles_per_token_base / self.cycles_per_token_ax
+    }
+
+    /// Simulated side-pipeline service time for `tokens` tokens of
+    /// adapter-carrying requests, seconds. The side pipe is per-request
+    /// dense work: unlike the shared decode weight pass, it never
+    /// amortizes across co-batched sessions.
+    pub fn adapter_time_s(&self, tokens: u64) -> f64 {
+        self.adapter_cycles_per_token * tokens as f64 / (self.freq_ghz * 1e9)
     }
 
     /// Simulated accelerator service time for `tokens` tokens, seconds.

@@ -7,11 +7,12 @@
 //! backends exist so the serving stack above it never requires it.
 
 use crate::backend::{
-    argmax_token, BatchOutcome, CostModel, ExecutionBackend, KvHandle, KvState, StepOutcome,
+    argmax_token, BatchOutcome, CostModel, ExecutionBackend, KvHandle, KvState, ReqActivity,
+    StepOutcome,
 };
 use crate::config::AcceleratorConfig;
 use crate::model::Model;
-use crate::runtime::{ArtifactSet, Runtime, TinyWeights};
+use crate::runtime::{AdapterMisses, ArtifactSet, Runtime, TinyWeights};
 use crate::sim::SimStats;
 use crate::workload::{request_seed, synth_embeddings, token_embedding, Request};
 use anyhow::Result;
@@ -20,11 +21,16 @@ use std::path::Path;
 /// Compiled-artifact execution backend (PJRT CPU runtime).
 pub struct PjrtBackend {
     _rt: Runtime,
+    /// The loaded artifact set (manifest, kernels, tiny model, weights).
     pub artifacts: ArtifactSet,
     cost: CostModel,
     /// Embedding seed base — request `id` deterministically derives its
     /// synthetic embedding stream.
     pub embed_seed: u64,
+    /// The AOT-compiled artifacts bake the base weights into fixed-shape
+    /// HLO — there is no per-request adapter surface to route through,
+    /// so every adapter request is served base-only and counted here.
+    misses: AdapterMisses,
 }
 
 impl PjrtBackend {
@@ -41,7 +47,18 @@ impl PjrtBackend {
             artifacts,
             cost,
             embed_seed,
+            misses: AdapterMisses::new(),
         })
+    }
+
+    /// Record a base-only fallback for every adapter-carrying request in
+    /// the slice (the artifact runtime has no adapter surface).
+    fn record_adapter_misses(&self, requests: &[Request]) {
+        for r in requests {
+            if r.adapter.is_some() {
+                self.misses.record();
+            }
+        }
     }
 
     /// The quantized weights the artifact executes with.
@@ -98,6 +115,10 @@ impl ExecutionBackend for PjrtBackend {
         &self.cost
     }
 
+    fn adapter_misses(&self) -> u64 {
+        self.misses.count()
+    }
+
     fn run_batch(&self, requests: &[Request]) -> crate::Result<BatchOutcome> {
         let m = &self.artifacts.manifest;
         anyhow::ensure!(
@@ -106,6 +127,7 @@ impl ExecutionBackend for PjrtBackend {
             requests.len(),
             m.batch
         );
+        self.record_adapter_misses(requests);
         // Pad the batch to the compiled size with zero sequences.
         let mut data = vec![0f32; m.batch * m.seq * m.d_model];
         for (slot, req) in requests.iter().enumerate() {
@@ -124,11 +146,13 @@ impl ExecutionBackend for PjrtBackend {
             // The artifact runtime measures no cycles itself; attribution
             // comes from the cost model.
             stats: SimStats::default(),
+            activity: vec![ReqActivity::default(); requests.len()],
         })
     }
 
     fn prefill(&self, req: &Request, budget: u32) -> crate::Result<(KvHandle, StepOutcome)> {
         anyhow::ensure!(budget >= 1, "decode budget must be ≥ 1");
+        self.record_adapter_misses(std::slice::from_ref(req));
         let m = &self.artifacts.manifest;
         let prompt_len = req.seq_len.min(m.seq).max(1);
         let embed_seed = request_seed(self.embed_seed, req.id);
@@ -142,6 +166,8 @@ impl ExecutionBackend for PjrtBackend {
             budget,
             generated: vec![token],
             embed_seed,
+            // Served base-only: the session never claims the adapter.
+            adapter: None,
             state: KvState::Recompute(buf),
         };
         Ok((
@@ -151,6 +177,7 @@ impl ExecutionBackend for PjrtBackend {
                 token,
                 exec_s: t0.elapsed().as_secs_f64(),
                 stats: SimStats::default(),
+                activity: ReqActivity::default(),
             },
         ))
     }
@@ -189,6 +216,7 @@ impl ExecutionBackend for PjrtBackend {
             token,
             exec_s: t0.elapsed().as_secs_f64(),
             stats: SimStats::default(),
+            activity: ReqActivity::default(),
         })
     }
 }

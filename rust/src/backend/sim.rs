@@ -11,11 +11,12 @@
 //! no artifact directory (and no PJRT runtime) is available.
 
 use crate::backend::{
-    BatchOutcome, CostModel, ExecutionBackend, KvHandle, KvState, StepOutcome, COST_SAMPLE_ROWS,
-    DEFAULT_SEQ_LIMIT,
+    BatchOutcome, CostModel, ExecutionBackend, KvHandle, KvState, ReqActivity, StepOutcome,
+    COST_SAMPLE_ROWS, DEFAULT_SEQ_LIMIT,
 };
 use crate::config::{AcceleratorConfig, ModelConfig};
 use crate::model::Model;
+use crate::runtime::AdapterMisses;
 use crate::sim::SimStats;
 use crate::workload::{request_seed, Request};
 use anyhow::Result;
@@ -34,10 +35,18 @@ fn pseudo_token(embed_seed: u64, pos: usize) -> u32 {
 /// Cycle-attribution-only execution backend.
 pub struct SimBackend {
     model_name: String,
+    model_cfg: ModelConfig,
+    acc_cfg: AcceleratorConfig,
     cost: CostModel,
     per_token: SimStats,
     seq_limit: usize,
     paced: bool,
+    /// Adapters the modeled deployment holds (analytic: ids `0..count`).
+    adapter_count: usize,
+    /// Dense side-pipe MACs per adapter-request token (matches the
+    /// [`CostModel::with_adapter_regime`] derivation).
+    adapter_macs_per_token: u64,
+    misses: AdapterMisses,
 }
 
 impl SimBackend {
@@ -45,14 +54,19 @@ impl SimBackend {
     /// accelerators (AxLLM and multiply-only baseline) and cache the
     /// per-token costs.
     pub fn new(model_cfg: ModelConfig, acc_cfg: AcceleratorConfig) -> Result<SimBackend> {
-        let model = Model::new(model_cfg, SIM_MODEL_SEED);
+        let model = Model::new(model_cfg.clone(), SIM_MODEL_SEED);
         let (cost, ax_run) = CostModel::from_sampled(&model, acc_cfg, COST_SAMPLE_ROWS)?;
         Ok(SimBackend {
             model_name: ax_run.model,
+            model_cfg,
+            acc_cfg,
             cost,
             per_token: ax_run.total,
             seq_limit: DEFAULT_SEQ_LIMIT,
             paced: false,
+            adapter_count: 0,
+            adapter_macs_per_token: 0,
+            misses: AdapterMisses::new(),
         })
     }
 
@@ -61,6 +75,38 @@ impl SimBackend {
     pub fn with_seq_limit(mut self, seq: usize) -> SimBackend {
         self.seq_limit = seq.max(1);
         self
+    }
+
+    /// Model a deployment holding `count` rank-`rank` LoRA adapters:
+    /// requests carrying `adapter: Some(id < count)` are charged the
+    /// dual-pipeline cost — the base pipe keeps its reuse discount, the
+    /// rank-r side pipe is dense ([`CostModel::with_adapter_regime`]).
+    /// Ids at or beyond `count` serve base-only and record a miss.
+    pub fn with_adapters(mut self, count: usize, rank: usize) -> SimBackend {
+        if count == 0 {
+            return self;
+        }
+        self.adapter_count = count;
+        let rank = rank.max(1);
+        self.adapter_macs_per_token =
+            4 * self.model_cfg.d_model as u64 * rank as u64 * self.model_cfg.n_layers as u64;
+        self.cost = self
+            .cost
+            .with_adapter_regime(&self.model_cfg, self.acc_cfg, rank);
+        self
+    }
+
+    /// True when the request's adapter is served (side pipe charged);
+    /// false for base-model requests. Unknown ids record a miss.
+    fn routes_adapter(&self, adapter: Option<u32>) -> bool {
+        match adapter {
+            None => false,
+            Some(id) if (id as usize) < self.adapter_count => true,
+            Some(_) => {
+                self.misses.record();
+                false
+            }
+        }
     }
 
     /// When paced, `run_batch` (and `prefill`/`decode_step`) *sleep* for
@@ -109,12 +155,35 @@ impl ExecutionBackend for SimBackend {
         &self.cost
     }
 
+    fn adapter_count(&self) -> usize {
+        self.adapter_count
+    }
+
+    fn adapter_misses(&self) -> u64 {
+        self.misses.count()
+    }
+
     fn run_batch(&self, requests: &[Request]) -> crate::Result<BatchOutcome> {
-        let tokens: u64 = requests
-            .iter()
-            .map(|r| r.seq_len.min(self.seq_limit) as u64)
-            .sum();
-        let exec_s = self.cost.sim_time_s(tokens);
+        let mut tokens = 0u64;
+        let mut adapter_tokens = 0u64;
+        let mut activity = Vec::with_capacity(requests.len());
+        for r in requests {
+            let t = r.seq_len.min(self.seq_limit) as u64;
+            tokens += t;
+            let base = self.per_token.scaled(t, 1);
+            let adapter_ops = if self.routes_adapter(r.adapter) {
+                adapter_tokens += t;
+                self.adapter_macs_per_token * t
+            } else {
+                0
+            };
+            activity.push(ReqActivity {
+                base_mults: base.mults,
+                base_reuses: base.rc_hits,
+                adapter_ops,
+            });
+        }
+        let exec_s = self.cost.sim_time_s(tokens) + self.cost.adapter_time_s(adapter_tokens);
         if self.paced {
             std::thread::sleep(std::time::Duration::from_secs_f64(exec_s));
         }
@@ -122,24 +191,36 @@ impl ExecutionBackend for SimBackend {
             logits: vec![Vec::new(); requests.len()],
             exec_s,
             stats: self.per_token.scaled(tokens, 1),
+            activity,
         })
     }
 
     fn prefill(&self, req: &Request, budget: u32) -> crate::Result<(KvHandle, StepOutcome)> {
         anyhow::ensure!(budget >= 1, "decode budget must be ≥ 1");
         let prompt_len = req.seq_len.min(self.seq_limit).max(1);
-        let exec_s = self.cost.sim_time_s(prompt_len as u64);
+        let routed = self.routes_adapter(req.adapter);
+        let adapter_ops = if routed {
+            self.adapter_macs_per_token * prompt_len as u64
+        } else {
+            0
+        };
+        let exec_s = self.cost.sim_time_s(prompt_len as u64)
+            + self
+                .cost
+                .adapter_time_s(if routed { prompt_len as u64 } else { 0 });
         if self.paced {
             std::thread::sleep(std::time::Duration::from_secs_f64(exec_s));
         }
         let embed_seed = request_seed(SIM_MODEL_SEED, req.id);
         let token = pseudo_token(embed_seed, prompt_len);
+        let base = self.per_token.scaled(prompt_len as u64, 1);
         let kv = KvHandle {
             id: req.id,
             prompt_len,
             budget,
             generated: vec![token],
             embed_seed,
+            adapter: if routed { req.adapter } else { None },
             state: KvState::Analytic,
         };
         Ok((
@@ -148,7 +229,12 @@ impl ExecutionBackend for SimBackend {
                 logits: Vec::new(),
                 token,
                 exec_s,
-                stats: self.per_token.scaled(prompt_len as u64, 1),
+                stats: base,
+                activity: ReqActivity {
+                    base_mults: base.mults,
+                    base_reuses: base.rc_hits,
+                    adapter_ops,
+                },
             },
         ))
     }
@@ -165,17 +251,25 @@ impl ExecutionBackend for SimBackend {
             kv.id
         );
         let context = kv.context_len() as u64;
-        let exec_s = self.cost.decode_step_time_s(context);
+        let routed = kv.adapter.is_some();
+        let exec_s = self.cost.decode_step_time_s(context)
+            + self.cost.adapter_time_s(routed as u64);
         if self.paced {
             std::thread::sleep(std::time::Duration::from_secs_f64(exec_s));
         }
         let token = pseudo_token(kv.embed_seed, kv.context_len());
         kv.generated.push(token);
+        let base = self.per_token.scaled(1, 1);
         Ok(StepOutcome {
             logits: Vec::new(),
             token,
             exec_s,
-            stats: self.per_token.scaled(1, 1),
+            stats: base,
+            activity: ReqActivity {
+                base_mults: base.mults,
+                base_reuses: base.rc_hits,
+                adapter_ops: if routed { self.adapter_macs_per_token } else { 0 },
+            },
         })
     }
 }
@@ -192,6 +286,7 @@ mod tests {
             seq_len,
             arrival_s: id as f64 * 0.001,
             gen_tokens: 0,
+            adapter: None,
         }
     }
 
@@ -267,6 +362,55 @@ mod tests {
         let pf = c.iteration_time_s(10, &[]);
         assert!((pf - c.sim_time_s(10)).abs() < 1e-12);
         assert_eq!(c.iteration_time_s(0, &[]), 0.0);
+    }
+
+    #[test]
+    fn adapters_charge_the_dense_side_pipe_only() {
+        let b = SimBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper())
+            .unwrap()
+            .with_adapters(2, 8);
+        assert_eq!(b.adapter_count(), 2);
+        assert!(b.cost().adapter_cycles_per_token > 0.0);
+        let base = req(0, 16);
+        let tenant = Request {
+            adapter: Some(1),
+            ..req(0, 16)
+        };
+        let ob = b.run_batch(&[base.clone()]).unwrap();
+        let ot = b.run_batch(&[tenant.clone()]).unwrap();
+        // Side pipe is purely additive: base-pipe stats identical, the
+        // adapter run strictly slower, adapter ops recorded per request.
+        assert_eq!(ob.stats, ot.stats);
+        assert!(ot.exec_s > ob.exec_s);
+        assert_eq!(ob.activity[0].adapter_ops, 0);
+        assert!(ot.activity[0].adapter_ops > 0);
+        assert_eq!(ob.activity[0].base_mults, ot.activity[0].base_mults);
+        assert_eq!(ob.activity[0].base_reuses, ot.activity[0].base_reuses);
+        assert_eq!(
+            ob.activity[0].base_reuse_rate(),
+            ot.activity[0].base_reuse_rate(),
+            "base-pipe reuse is unchanged by the adapter"
+        );
+        // Decode sessions route the adapter through every step.
+        let (mut kv, first) = b.prefill(&tenant, 3).unwrap();
+        assert_eq!(kv.adapter, Some(1));
+        assert!(first.activity.adapter_ops > 0);
+        let (mut kv_base, first_base) = b.prefill(&base, 3).unwrap();
+        assert!(first.exec_s > first_base.exec_s);
+        let step = b.decode_step(&mut kv).unwrap();
+        let step_base = b.decode_step(&mut kv_base).unwrap();
+        assert!(step.exec_s > step_base.exec_s);
+        assert_eq!(step.activity.adapter_ops, b.adapter_macs_per_token);
+        assert_eq!(step_base.activity.adapter_ops, 0);
+        // Unknown tenant: served base-only, miss recorded.
+        assert_eq!(b.adapter_misses(), 0);
+        let stranger = Request {
+            adapter: Some(9),
+            ..req(1, 16)
+        };
+        let os = b.run_batch(&[stranger]).unwrap();
+        assert_eq!(os.activity[0].adapter_ops, 0);
+        assert_eq!(b.adapter_misses(), 1);
     }
 
     #[test]

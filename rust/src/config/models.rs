@@ -21,11 +21,14 @@ impl Default for LoraConfig {
 /// Architectural description of one transformer model.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelConfig {
+    /// Human-readable model name (Table I row label).
     pub name: String,
     /// Hidden size (== rows/cols of the attention projection matrices, the
     /// "Weight Matrix Size" column of Table I).
     pub d_model: usize,
+    /// Transformer layer count.
     pub n_layers: usize,
+    /// Attention head count.
     pub n_heads: usize,
     /// Feed-forward inner dimension.
     pub d_ff: usize,
@@ -34,6 +37,7 @@ pub struct ModelConfig {
 }
 
 impl ModelConfig {
+    /// DistilBERT (Table I rows 1–2).
     pub fn distilbert() -> Self {
         ModelConfig {
             name: "DistilBERT".into(),
@@ -45,6 +49,7 @@ impl ModelConfig {
         }
     }
 
+    /// BERT Base Uncased (Table I rows 3–4).
     pub fn bert_base() -> Self {
         ModelConfig {
             name: "BERT Base Uncased".into(),
@@ -56,6 +61,7 @@ impl ModelConfig {
         }
     }
 
+    /// Large BERT (Table I row 5).
     pub fn bert_large() -> Self {
         ModelConfig {
             name: "Large BERT".into(),
@@ -67,6 +73,7 @@ impl ModelConfig {
         }
     }
 
+    /// Llama 7B (Table I row 6).
     pub fn llama_7b() -> Self {
         ModelConfig {
             name: "Llama 7B".into(),
@@ -78,6 +85,7 @@ impl ModelConfig {
         }
     }
 
+    /// Llama 13B (Table I row 7).
     pub fn llama_13b() -> Self {
         ModelConfig {
             name: "Llama 13B".into(),
@@ -138,13 +146,18 @@ impl ModelConfig {
 /// request mixes only).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Dataset {
+    /// AG News (news-topic classification, short texts).
     AgNews,
+    /// Yelp Review Full (review classification, medium texts).
     YelpReviewFull,
+    /// SQuAD (question answering, long contexts).
     Squad,
+    /// IMDb (sentiment classification, long reviews).
     Imdb,
 }
 
 impl Dataset {
+    /// Human-readable dataset name (Table I column).
     pub fn name(&self) -> &'static str {
         match self {
             Dataset::AgNews => "AG News",
@@ -193,7 +206,9 @@ impl Dataset {
 /// One Table-I row: a model/dataset pair.
 #[derive(Clone, Debug)]
 pub struct Benchmark {
+    /// Model variant of the benchmark row.
     pub model: ModelConfig,
+    /// Dataset profile of the benchmark row.
     pub dataset: Dataset,
 }
 

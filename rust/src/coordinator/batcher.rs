@@ -43,7 +43,9 @@ impl Default for BatchPolicy {
 /// empty batch.
 #[derive(Clone, Debug)]
 pub struct Batch {
+    /// The batched requests, in admission order.
     pub requests: Vec<Request>,
+    /// Dispatch time on the caller's clock.
     pub dispatch_s: f64,
 }
 
@@ -63,6 +65,7 @@ pub struct BatchScheduler {
 pub type DynamicBatcher = BatchScheduler;
 
 impl BatchScheduler {
+    /// New scheduler with an empty pending set.
     pub fn new(policy: BatchPolicy) -> Self {
         assert!(policy.max_batch > 0);
         assert!(policy.max_wait_s >= 0.0);
@@ -72,6 +75,7 @@ impl BatchScheduler {
         }
     }
 
+    /// Number of requests waiting for a closure rule to fire.
     pub fn pending(&self) -> usize {
         self.pending.len()
     }
@@ -232,6 +236,7 @@ mod tests {
             seq_len: 32,
             arrival_s: t,
             gen_tokens: 0,
+            adapter: None,
         }
     }
 

@@ -17,12 +17,13 @@
 //!   `benches/decode_serve.rs` can measure what continuous batching
 //!   buys.
 
-use crate::backend::{ExecutionBackend, KvHandle, PjrtBackend};
+use crate::backend::{ExecutionBackend, KvHandle, PjrtBackend, ReqActivity};
 pub use crate::backend::CostModel;
 use crate::config::AcceleratorConfig;
 use crate::coordinator::batcher::{Batch, BatchPolicy, BatchScheduler, DynamicBatcher};
 use crate::coordinator::metrics::ServeSummary;
 use crate::energy::EnergyModel;
+use crate::model::AdapterId;
 use crate::sim::SimStats;
 use crate::workload::Request;
 use anyhow::Result;
@@ -31,6 +32,7 @@ use std::path::Path;
 /// Per-request outcome.
 #[derive(Clone, Debug)]
 pub struct RequestResult {
+    /// Request id this result answers.
     pub id: u64,
     /// Logits for this request (empty when the backend computes none,
     /// e.g. [`crate::backend::SimBackend`]).
@@ -62,6 +64,16 @@ pub struct RequestResult {
     /// Time per output token after the first (0 when fewer than two
     /// tokens were generated).
     pub tpot_s: f64,
+    /// LoRA adapter the request was actually served with (`None` when
+    /// base-only — including adapter requests the backend missed).
+    pub adapter: Option<AdapterId>,
+    /// Measured base-pipeline multiplications (Result-Cache fills);
+    /// 0 when the backend measures nothing itself.
+    pub base_mults: u64,
+    /// Measured base-pipeline reuses (Result-Cache hits).
+    pub base_reuses: u64,
+    /// Dense MACs on the adapter side pipeline (0 for base-only serving).
+    pub adapter_ops: u64,
 }
 
 /// The serving engine: a batching/attribution shell around any
@@ -105,12 +117,37 @@ impl<B: ExecutionBackend> Engine<B> {
             outcome.logits.len(),
             batch.requests.len()
         );
+        anyhow::ensure!(
+            outcome.activity.len() == batch.requests.len(),
+            "backend {} returned {} activity records for {} requests",
+            self.backend.name(),
+            outcome.activity.len(),
+            batch.requests.len()
+        );
         let cost = self.backend.cost();
         let seq_limit = self.backend.seq_limit();
         let exec_s = outcome.exec_s;
         let mut out = Vec::with_capacity(batch.requests.len());
-        for (req, logits) in batch.requests.iter().zip(outcome.logits) {
+        for ((req, logits), activity) in batch
+            .requests
+            .iter()
+            .zip(outcome.logits)
+            .zip(outcome.activity)
+        {
             let tokens = req.seq_len.min(seq_limit) as u64;
+            // A request was served with its adapter iff the backend did
+            // side-pipe work for it; missed adapters attribute base-only.
+            let routed = activity.adapter_ops > 0;
+            let adapter_cycles = if routed {
+                cost.adapter_cycles_per_token * tokens as f64
+            } else {
+                0.0
+            };
+            let adapter_energy_pj = if routed {
+                cost.adapter_energy_pj_per_token * tokens as f64
+            } else {
+                0.0
+            };
             let wait_s = batch.dispatch_s - req.arrival_s;
             // The scheduler never dispatches a batch before one of its
             // requests arrived; a negative wait means the submit-side and
@@ -134,11 +171,16 @@ impl<B: ExecutionBackend> Engine<B> {
                 latency_s: queue_wait_s + exec_s,
                 dispatch_s: batch.dispatch_s,
                 batch_size: batch.requests.len(),
-                sim_cycles: (cost.cycles_per_token_ax * tokens as f64) as u64,
-                sim_energy_j: cost.energy_pj_per_token_ax * tokens as f64 * 1e-12,
+                sim_cycles: (cost.cycles_per_token_ax * tokens as f64 + adapter_cycles) as u64,
+                sim_energy_j: (cost.energy_pj_per_token_ax * tokens as f64 + adapter_energy_pj)
+                    * 1e-12,
                 gen_tokens: 0,
                 ttft_s: queue_wait_s + exec_s,
                 tpot_s: 0.0,
+                adapter: if routed { req.adapter } else { None },
+                base_mults: activity.base_mults,
+                base_reuses: activity.base_reuses,
+                adapter_ops: activity.adapter_ops,
             });
         }
         Ok(out)
@@ -221,10 +263,14 @@ impl<B: ExecutionBackend> Engine<B> {
             iterations += 1;
             let batch_now = active.len() + admitted.len();
             let mut prefill_tokens = 0u64;
+            // Adapter side-pipe tokens this iteration: per-session dense
+            // work, never amortized by the shared decode weight pass.
+            let mut adapter_tokens = 0u64;
             let mut decode_ctxs: Vec<u64> = Vec::with_capacity(active.len());
             for s in active.iter_mut() {
                 let ctx = s.kv.context_len() as u64;
                 decode_ctxs.push(ctx);
+                adapter_tokens += s.kv.adapter.is_some() as u64;
                 let out = self.backend.decode_step(&mut s.kv)?;
                 s.record_step(ctx, out, &cost);
                 s.peak_batch = s.peak_batch.max(batch_now);
@@ -233,6 +279,9 @@ impl<B: ExecutionBackend> Engine<B> {
                 let budget = decode_budget(&req, default_gen);
                 let (kv, out) = self.backend.prefill(&req, budget)?;
                 prefill_tokens += kv.prompt_len as u64;
+                if kv.adapter.is_some() {
+                    adapter_tokens += kv.prompt_len as u64;
+                }
                 active.push(DecodeSession::admit(
                     kv,
                     out,
@@ -242,7 +291,8 @@ impl<B: ExecutionBackend> Engine<B> {
                     batch_now,
                 ));
             }
-            clock += cost.iteration_time_s(prefill_tokens, &decode_ctxs);
+            clock += cost.iteration_time_s(prefill_tokens, &decode_ctxs)
+                + cost.adapter_time_s(adapter_tokens);
             let mut i = 0;
             while i < active.len() {
                 let s = &mut active[i];
@@ -293,10 +343,14 @@ impl<B: ExecutionBackend> Engine<B> {
             iterations += 1;
             let mut sessions: Vec<DecodeSession> = Vec::with_capacity(batch_size);
             let mut prefill_tokens = 0u64;
+            let mut adapter_tokens = 0u64;
             for req in &b.requests {
                 let budget = decode_budget(req, default_gen);
                 let (kv, out) = self.backend.prefill(req, budget)?;
                 prefill_tokens += kv.prompt_len as u64;
+                if kv.adapter.is_some() {
+                    adapter_tokens += kv.prompt_len as u64;
+                }
                 sessions.push(DecodeSession::admit(
                     kv,
                     out,
@@ -306,7 +360,8 @@ impl<B: ExecutionBackend> Engine<B> {
                     batch_size,
                 ));
             }
-            clock += cost.iteration_time_s(prefill_tokens, &[]);
+            clock += cost.iteration_time_s(prefill_tokens, &[])
+                + cost.adapter_time_s(adapter_tokens);
             for s in sessions.iter_mut() {
                 s.ttft_abs = Some(clock);
                 if s.kv.done() {
@@ -318,13 +373,16 @@ impl<B: ExecutionBackend> Engine<B> {
             while sessions.iter().any(|s| s.finish_abs.is_none()) {
                 iterations += 1;
                 let mut decode_ctxs = Vec::new();
+                let mut adapter_steps = 0u64;
                 for s in sessions.iter_mut().filter(|s| s.finish_abs.is_none()) {
                     let ctx = s.kv.context_len() as u64;
                     decode_ctxs.push(ctx);
+                    adapter_steps += s.kv.adapter.is_some() as u64;
                     let out = self.backend.decode_step(&mut s.kv)?;
                     s.record_step(ctx, out, &cost);
                 }
-                clock += cost.iteration_time_s(0, &decode_ctxs);
+                clock += cost.iteration_time_s(0, &decode_ctxs)
+                    + cost.adapter_time_s(adapter_steps);
                 for s in sessions.iter_mut() {
                     if s.kv.done() && s.finish_abs.is_none() {
                         s.finish_abs = Some(clock);
@@ -369,11 +427,14 @@ pub(crate) struct DecodeSession {
     pub(crate) cycles: f64,
     pub(crate) energy_pj: f64,
     pub(crate) peak_batch: usize,
+    /// Accumulated base-vs-adapter activity across prefill + steps.
+    pub(crate) activity: ReqActivity,
 }
 
 impl DecodeSession {
     /// Open a session from a completed prefill, attributing the prompt's
-    /// weight passes. TTFT/finish stamps are left for the caller's clock.
+    /// weight passes (plus the adapter side pipe for adapter sessions).
+    /// TTFT/finish stamps are left for the caller's clock.
     pub(crate) fn admit(
         kv: KvHandle,
         first: crate::backend::StepOutcome,
@@ -383,6 +444,11 @@ impl DecodeSession {
         batch_now: usize,
     ) -> DecodeSession {
         let prompt_tokens = kv.prompt_len as u64;
+        let adapter_tokens = if kv.adapter.is_some() {
+            prompt_tokens
+        } else {
+            0
+        };
         DecodeSession {
             kv,
             arrival_s,
@@ -391,14 +457,19 @@ impl DecodeSession {
             finish_abs: None,
             prompt_tokens,
             last_logits: first.logits,
-            cycles: cost.cycles_per_token_ax * prompt_tokens as f64,
-            energy_pj: cost.energy_pj_per_token_ax * prompt_tokens as f64,
+            cycles: cost.cycles_per_token_ax * prompt_tokens as f64
+                + cost.adapter_cycles_per_token * adapter_tokens as f64,
+            energy_pj: cost.energy_pj_per_token_ax * prompt_tokens as f64
+                + cost.adapter_energy_pj_per_token * adapter_tokens as f64,
             peak_batch: batch_now,
+            activity: first.activity,
         }
     }
 
     /// Record one completed decode step taken at context length `ctx`
-    /// (standalone attribution — batch-independent by construction).
+    /// (standalone attribution — batch-independent by construction:
+    /// base step cost from the session's own context, adapter side-pipe
+    /// cost from the session's own adapter).
     pub(crate) fn record_step(
         &mut self,
         ctx: u64,
@@ -408,8 +479,13 @@ impl DecodeSession {
         if !out.logits.is_empty() {
             self.last_logits = out.logits;
         }
+        self.activity.add(&out.activity);
         self.cycles += cost.decode_step_cycles(ctx);
         self.energy_pj += cost.decode_step_energy_pj(ctx);
+        if self.kv.adapter.is_some() {
+            self.cycles += cost.adapter_cycles_per_token;
+            self.energy_pj += cost.adapter_energy_pj_per_token;
+        }
     }
 
     pub(crate) fn into_result(self) -> RequestResult {
@@ -423,6 +499,7 @@ impl DecodeSession {
         };
         RequestResult {
             id: self.kv.id,
+            adapter: self.kv.adapter,
             logits: self.last_logits,
             tokens: self.prompt_tokens + gen,
             queue_wait_s: (self.admit_s - self.arrival_s).max(0.0),
@@ -435,6 +512,9 @@ impl DecodeSession {
             gen_tokens: gen,
             ttft_s: (ttft_abs - self.arrival_s).max(0.0),
             tpot_s,
+            base_mults: self.activity.base_mults,
+            base_reuses: self.activity.base_reuses,
+            adapter_ops: self.activity.adapter_ops,
         }
     }
 }
@@ -480,6 +560,7 @@ mod tests {
             seq_len: 8,
             arrival_s: 0.0,
             gen_tokens,
+            adapter: None,
         };
         assert_eq!(decode_budget(&mk(5), 2), 5, "request budget wins");
         assert_eq!(decode_budget(&mk(0), 2), 2, "0 falls back to default");
@@ -499,6 +580,25 @@ mod tests {
         assert!(((d16 - d8) - (d8 - d0)).abs() < 1e-9);
         assert!(d16 > d8 && d8 > d0);
         assert!((d0 - cm.cycles_per_token_ax).abs() < 1e-9);
+    }
+
+    #[test]
+    fn adapter_regime_is_purely_additive() {
+        let model = Model::new(ModelConfig::tiny(), 3);
+        let cm = CostModel::from_sim(&model, AcceleratorConfig::paper());
+        assert_eq!(cm.adapter_cycles_per_token, 0.0);
+        assert_eq!(cm.adapter_time_s(10), 0.0);
+        let with = cm.with_adapter_regime(&ModelConfig::tiny(), AcceleratorConfig::paper(), 16);
+        assert!(with.adapter_cycles_per_token > 0.0);
+        assert!(with.adapter_energy_pj_per_token > 0.0);
+        assert!(with.adapter_time_s(10) > 0.0);
+        // The base pipe — and its reuse discount — is untouched.
+        assert_eq!(with.cycles_per_token_ax, cm.cycles_per_token_ax);
+        assert_eq!(with.energy_pj_per_token_ax, cm.energy_pj_per_token_ax);
+        assert_eq!(with.reuse_rate, cm.reuse_rate);
+        // Rank scales the dense side pipe linearly.
+        let wide = cm.with_adapter_regime(&ModelConfig::tiny(), AcceleratorConfig::paper(), 32);
+        assert!(wide.adapter_cycles_per_token > with.adapter_cycles_per_token);
     }
 
     #[test]

@@ -5,15 +5,22 @@
 
 use crate::backend::CostModel;
 use crate::coordinator::engine::RequestResult;
+use crate::model::AdapterId;
 
 /// Latency distribution summary (seconds).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct LatencyStats {
+    /// Sample count.
     pub count: usize,
+    /// Arithmetic mean, seconds.
     pub mean_s: f64,
+    /// Median (nearest-rank), seconds.
     pub p50_s: f64,
+    /// 95th percentile (nearest-rank), seconds.
     pub p95_s: f64,
+    /// 99th percentile (nearest-rank), seconds.
     pub p99_s: f64,
+    /// Largest sample, seconds.
     pub max_s: f64,
 }
 
@@ -44,17 +51,46 @@ impl LatencyStats {
     }
 }
 
+/// One row of the per-adapter serving rollup: how requests served with a
+/// given adapter (or base-only, `adapter: None`) fared over the run.
+/// This is the measurement channel for the paper's "reuse survives LoRA"
+/// claim: the base-pipeline reuse rate of every adapter group should sit
+/// within noise of the base-only group's.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AdapterUsage {
+    /// Adapter the group was served with (`None` = base-only, including
+    /// adapter requests the backend missed).
+    pub adapter: Option<AdapterId>,
+    /// Requests in the group.
+    pub requests: usize,
+    /// Total tokens (prompt + generated) attributed to the group.
+    pub tokens: u64,
+    /// Generated tokens of the group (decode serving).
+    pub gen_tokens: u64,
+    /// Group tokens per second over the run's span.
+    pub throughput_tps: f64,
+    /// Dense side-pipeline MACs the group's adapters added.
+    pub adapter_ops: u64,
+    /// Measured base-pipeline reuse rate of the group (0 when the
+    /// backend measured no base ops, e.g. PJRT).
+    pub base_reuse_rate: f64,
+}
+
 /// End-of-run summary for a served trace.
 #[derive(Clone, Debug, Default)]
 pub struct ServeSummary {
+    /// Requests served.
     pub requests: usize,
+    /// Batches (closed-batch serving) or iterations (decode serving).
     pub batches: usize,
+    /// Total tokens (prompt + generated) attributed across all requests.
     pub tokens: u64,
     /// Generated tokens across all requests (decode serving; 0 for
     /// prefill-only runs).
     pub gen_tokens: u64,
     /// Wall-clock span of the trace (first arrival → last completion).
     pub span_s: f64,
+    /// End-to-end latency distribution (arrival → completion).
     pub latency: LatencyStats,
     /// Time-to-first-token distribution (arrival → first generated
     /// token; equals `latency` for prefill-only serving).
@@ -74,6 +110,13 @@ pub struct ServeSummary {
     pub sim_energy_j: f64,
     /// Simulated speedup vs the multiply-only baseline for this workload.
     pub sim_speedup: f64,
+    /// Dense adapter side-pipeline MACs across all requests (0 for
+    /// base-model-only runs).
+    pub adapter_ops: u64,
+    /// Per-adapter rollup, base-only group (`adapter: None`) first, then
+    /// ascending adapter id. Empty for an empty result set; a single
+    /// `None` entry for an adapter-free run.
+    pub by_adapter: Vec<AdapterUsage>,
 }
 
 impl ServeSummary {
@@ -114,6 +157,35 @@ impl ServeSummary {
         } else {
             (last_completion - first_arrival).max(1e-9)
         };
+        // Per-adapter rollup: group results by the adapter they were
+        // actually served with, base-only (`None`) first.
+        let mut groups: Vec<Option<AdapterId>> = results.iter().map(|r| r.adapter).collect();
+        groups.sort_unstable();
+        groups.dedup();
+        let by_adapter = groups
+            .into_iter()
+            .map(|adapter| {
+                let rs: Vec<&RequestResult> =
+                    results.iter().filter(|r| r.adapter == adapter).collect();
+                let tokens: u64 = rs.iter().map(|r| r.tokens).sum();
+                let base_mults: u64 = rs.iter().map(|r| r.base_mults).sum();
+                let base_reuses: u64 = rs.iter().map(|r| r.base_reuses).sum();
+                let base_ops = base_mults + base_reuses;
+                AdapterUsage {
+                    adapter,
+                    requests: rs.len(),
+                    tokens,
+                    gen_tokens: rs.iter().map(|r| r.gen_tokens).sum(),
+                    throughput_tps: tokens as f64 / span_s,
+                    adapter_ops: rs.iter().map(|r| r.adapter_ops).sum(),
+                    base_reuse_rate: if base_ops == 0 {
+                        0.0
+                    } else {
+                        base_reuses as f64 / base_ops as f64
+                    },
+                }
+            })
+            .collect();
         ServeSummary {
             requests: results.len(),
             batches,
@@ -129,6 +201,8 @@ impl ServeSummary {
             sim_reuse_rate: cost.reuse_rate,
             sim_energy_j: results.iter().map(|r| r.sim_energy_j).sum(),
             sim_speedup: cost.speedup(),
+            adapter_ops: results.iter().map(|r| r.adapter_ops).sum(),
+            by_adapter,
         }
     }
 }
@@ -136,6 +210,93 @@ impl ServeSummary {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn test_cost() -> CostModel {
+        CostModel {
+            cycles_per_token_ax: 100.0,
+            cycles_per_token_base: 300.0,
+            energy_pj_per_token_ax: 1.0,
+            energy_pj_per_token_base: 3.0,
+            reuse_rate: 0.7,
+            freq_ghz: 1.0,
+            attn_cycles_per_ctx_token: 1.0,
+            attn_energy_pj_per_ctx_token: 0.1,
+            adapter_cycles_per_token: 10.0,
+            adapter_energy_pj_per_token: 0.2,
+        }
+    }
+
+    /// A minimal served-request record for rollup tests.
+    fn result(id: u64, adapter: Option<AdapterId>, tokens: u64) -> RequestResult {
+        RequestResult {
+            id,
+            logits: Vec::new(),
+            tokens,
+            queue_wait_s: 0.0,
+            exec_s: 0.001,
+            latency_s: 0.001,
+            dispatch_s: 0.0,
+            batch_size: 1,
+            sim_cycles: 100 * tokens,
+            sim_energy_j: 1e-12,
+            gen_tokens: 0,
+            ttft_s: 0.001,
+            tpot_s: 0.0,
+            adapter,
+            base_mults: 30 * tokens,
+            base_reuses: 70 * tokens,
+            adapter_ops: if adapter.is_some() { 10 * tokens } else { 0 },
+        }
+    }
+
+    #[test]
+    fn by_adapter_rollup_none_only_run_pins_a_single_base_group() {
+        // Mirror of the PR 3 empty-summary pin, one dimension up: an
+        // adapter-free run must roll up to exactly one `None` group that
+        // restates the run totals — no phantom adapter rows.
+        let cost = test_cost();
+        let rs = vec![result(0, None, 10), result(1, None, 20)];
+        let s = ServeSummary::from_results(&rs, 1, &cost);
+        assert_eq!(s.adapter_ops, 0);
+        assert_eq!(s.by_adapter.len(), 1);
+        let g = &s.by_adapter[0];
+        assert_eq!(g.adapter, None);
+        assert_eq!(g.requests, 2);
+        assert_eq!(g.tokens, 30);
+        assert_eq!(g.adapter_ops, 0);
+        assert!((g.base_reuse_rate - 0.7).abs() < 1e-12);
+        assert!((g.throughput_tps - s.throughput_tps).abs() < 1e-9);
+    }
+
+    #[test]
+    fn by_adapter_rollup_groups_and_orders_mixed_runs() {
+        let cost = test_cost();
+        let rs = vec![
+            result(0, Some(1), 10),
+            result(1, None, 5),
+            result(2, Some(0), 10),
+            result(3, Some(1), 10),
+        ];
+        let s = ServeSummary::from_results(&rs, 1, &cost);
+        // None first, then ascending adapter id.
+        let order: Vec<Option<AdapterId>> =
+            s.by_adapter.iter().map(|g| g.adapter).collect();
+        assert_eq!(order, vec![None, Some(0), Some(1)]);
+        assert_eq!(s.by_adapter[0].requests, 1);
+        assert_eq!(s.by_adapter[1].requests, 1);
+        assert_eq!(s.by_adapter[2].requests, 2);
+        assert_eq!(s.by_adapter[2].tokens, 20);
+        assert_eq!(s.by_adapter[2].adapter_ops, 200);
+        assert_eq!(s.adapter_ops, 300);
+        // The paper's claim, measurable: every group's base-pipe reuse
+        // rate matches the base-only group's.
+        for g in &s.by_adapter {
+            assert!((g.base_reuse_rate - s.by_adapter[0].base_reuse_rate).abs() < 1e-12);
+        }
+        // Groups partition the run.
+        let n: usize = s.by_adapter.iter().map(|g| g.requests).sum();
+        assert_eq!(n, s.requests);
+    }
 
     #[test]
     fn percentiles_ordered() {
@@ -177,16 +338,7 @@ mod tests {
         // live run that was shut down before any completion) must
         // produce a well-formed summary — zero counts and throughputs,
         // never a NaN span or a divide-by-zero panic.
-        let cost = CostModel {
-            cycles_per_token_ax: 100.0,
-            cycles_per_token_base: 300.0,
-            energy_pj_per_token_ax: 1.0,
-            energy_pj_per_token_base: 3.0,
-            reuse_rate: 0.7,
-            freq_ghz: 1.0,
-            attn_cycles_per_ctx_token: 1.0,
-            attn_energy_pj_per_ctx_token: 0.1,
-        };
+        let cost = test_cost();
         let s = ServeSummary::from_results(&[], 0, &cost);
         assert_eq!(s.requests, 0);
         assert_eq!(s.batches, 0);
@@ -204,6 +356,9 @@ mod tests {
         // Cost-model-derived rates pass through unchanged.
         assert!((s.sim_speedup - 3.0).abs() < 1e-12);
         assert!((s.sim_reuse_rate - 0.7).abs() < 1e-12);
+        // The adapter rollup of an empty run is empty, never a panic.
+        assert_eq!(s.adapter_ops, 0);
+        assert!(s.by_adapter.is_empty());
     }
 
     #[test]

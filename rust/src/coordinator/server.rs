@@ -98,6 +98,11 @@ pub struct ServerStats {
     pub completed: AtomicUsize,
     /// Batches the worker has dispatched.
     pub batches: AtomicUsize,
+    /// Adapter requests the worker's backend served base-only (mirrors
+    /// [`crate::backend::ExecutionBackend::adapter_misses`], published
+    /// after every dispatch/iteration so the front-end can report silent
+    /// fallbacks without reaching into the worker-owned engine).
+    pub adapter_misses: AtomicUsize,
 }
 
 impl ServerStats {
@@ -305,6 +310,9 @@ pub struct LiveRun {
     pub results: Vec<RequestResult>,
     /// Per-replica `(batches, completed)` counters at the end of the run.
     pub replica_stats: Vec<(usize, usize)>,
+    /// Adapter requests served base-only across all replicas (a non-zero
+    /// value means some tenants were silently downgraded — report it).
+    pub adapter_misses: u64,
 }
 
 impl<B: ExecutionBackend + 'static> ServerPool<B> {
@@ -328,6 +336,7 @@ impl<B: ExecutionBackend + 'static> ServerPool<B> {
         };
         let batches = self.batches();
         let replica_stats = self.replica_stats();
+        let adapter_misses = self.adapter_misses();
         let stopped = self.shutdown();
         if let Err(worker_err) = stopped {
             return Err(worker_err);
@@ -338,6 +347,7 @@ impl<B: ExecutionBackend + 'static> ServerPool<B> {
             summary: ServeSummary::from_results(&results, batches, &cost),
             results,
             replica_stats,
+            adapter_misses,
         })
     }
 
@@ -390,6 +400,15 @@ impl<B: ExecutionBackend + 'static> ServerPool<B> {
         self.replicas
             .iter()
             .map(|s| s.stats().batches.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Adapter requests served base-only across all replicas (as last
+    /// published by each worker).
+    pub fn adapter_misses(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|s| s.stats().adapter_misses.load(Ordering::Relaxed) as u64)
             .sum()
     }
 
@@ -458,6 +477,9 @@ fn dispatch<B: ExecutionBackend>(
     batch.dispatch_s = batch.dispatch_s.max(epoch.elapsed().as_secs_f64());
     stats.batches.fetch_add(1, Ordering::Relaxed);
     let results = engine.run_batch(&batch)?;
+    stats
+        .adapter_misses
+        .store(engine.backend.adapter_misses() as usize, Ordering::Relaxed);
     for res in results {
         let (queued_id, tx) = waiters
             .pop_front()
@@ -647,6 +669,9 @@ where
         // 3. Admit FIFO into free slots at this step boundary; prefill at
         //    admission (the session's first token).
         let mut prefill_tokens = 0u64;
+        // Adapter side-pipe tokens of this iteration (per-session dense
+        // work — never amortized by the shared decode weight pass).
+        let mut adapter_tokens = 0u64;
         while active.len() < cap {
             let (req, tx) = match pending.pop_front() {
                 Some(p) => p,
@@ -656,6 +681,9 @@ where
             let budget = decode_budget(&req, opts.default_gen);
             let (kv, out) = engine.backend.prefill(&req, budget)?;
             prefill_tokens += kv.prompt_len as u64;
+            if kv.adapter.is_some() {
+                adapter_tokens += kv.prompt_len as u64;
+            }
             let mut s = DecodeSession::admit(kv, out, req.arrival_s, admit_s, &cost, 0);
             // First token completed at prefill return (wall clock).
             s.ttft_abs = Some(epoch.elapsed().as_secs_f64());
@@ -673,16 +701,22 @@ where
             }
             let ctx = s.kv.context_len() as u64;
             decode_ctxs.push(ctx);
+            adapter_tokens += s.kv.adapter.is_some() as u64;
             let out = engine.backend.decode_step(&mut s.kv)?;
             s.record_step(ctx, out, &cost);
         }
         if opts.pace {
-            let iter_s = cost.iteration_time_s(prefill_tokens, &decode_ctxs);
+            let iter_s = cost.iteration_time_s(prefill_tokens, &decode_ctxs)
+                + cost.adapter_time_s(adapter_tokens);
             if iter_s > 0.0 {
                 std::thread::sleep(Duration::from_secs_f64(iter_s));
             }
         }
-        // 5. Retire finished sessions and answer their waiters.
+        // 5. Publish the backend's miss counter and retire finished
+        //    sessions, answering their waiters.
+        stats
+            .adapter_misses
+            .store(engine.backend.adapter_misses() as usize, Ordering::Relaxed);
         let now = epoch.elapsed().as_secs_f64();
         let mut i = 0;
         while i < active.len() {

@@ -44,10 +44,15 @@ impl Default for AreaModel {
 /// Area breakdown in gate equivalents.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct AreaReport {
+    /// W_buff + Out_buff gates.
     pub buffers: f64,
+    /// Multiplier/accumulator + adder-tree gates.
     pub mult_acc: f64,
+    /// Result-Cache gates.
     pub rc: f64,
+    /// Controller gates (arbiters, credits, sequencing).
     pub controller: f64,
+    /// Total gate count.
     pub total: f64,
     /// Gates attributable to reuse support (RC + reuse share of the
     /// controller) — the paper's "23% overhead".
@@ -55,6 +60,7 @@ pub struct AreaReport {
 }
 
 impl AreaReport {
+    /// Reuse-support gates as a fraction of the total.
     pub fn overhead_fraction(&self) -> f64 {
         self.reuse_overhead / self.total
     }

@@ -61,12 +61,19 @@ impl Default for EnergyModel {
 /// Energy breakdown in pJ.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct EnergyReport {
+    /// Multiplier + accumulator energy.
     pub mult_pj: f64,
+    /// W_buff/Out_buff/input-register energy.
     pub buffer_pj: f64,
+    /// Result-Cache access energy.
     pub rc_pj: f64,
+    /// Adder-tree energy.
     pub adder_pj: f64,
+    /// Collision/output queue energy.
     pub queue_pj: f64,
+    /// Controller + clock energy.
     pub ctrl_pj: f64,
+    /// Sum of all components.
     pub total_pj: f64,
 }
 

@@ -72,6 +72,16 @@ pub fn qmatmul(
     y
 }
 
+/// Fit a per-row int8 activation grid and quantize one row — the shared
+/// input-side step of [`qmatmul_rowwise`] and the LoRA head path
+/// (`FunctionalBackend::head_logits_for`). One implementation, so the
+/// adapter side pipeline provably consumes the **same** quantized input
+/// (and grid) as the base pipeline it rides next to.
+pub fn quantize_row(row: &[f32]) -> (Vec<i8>, QuantParams) {
+    let params = QuantParams::fit(row, 8);
+    (row.iter().map(|&v| params.quantize(v)).collect(), params)
+}
+
 /// Row-wise-quantized matmul through the reuse path: like [`qmatmul`],
 /// but the activation grid is fit per sequence position instead of per
 /// block, so each output row depends only on its own input row.
@@ -93,9 +103,8 @@ pub fn qmatmul_rowwise(
     let mut y = vec![0f32; seq * w.cols];
     for s in 0..seq {
         let row = &x[s * d..(s + 1) * d];
-        let xq_params = QuantParams::fit(row, 8);
+        let (xq, xq_params) = quantize_row(row);
         let scale = xq_params.scale * w.params.scale;
-        let xq: Vec<i8> = row.iter().map(|&v| xq_params.quantize(v)).collect();
         let (yq, st) = reuse_matmul_chunked(&xq, w, chunk);
         stats.mults += st.mults;
         stats.reuses += st.reuses;
@@ -116,6 +125,7 @@ pub struct LayerKv {
 }
 
 impl LayerKv {
+    /// Fresh, empty cache.
     pub fn new() -> LayerKv {
         LayerKv::default()
     }
@@ -125,6 +135,7 @@ impl LayerKv {
         self.len
     }
 
+    /// True when no positions are cached yet.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
@@ -132,7 +143,9 @@ impl LayerKv {
 
 /// One transformer layer bound to its quantized weights.
 pub struct LayerExec<'a> {
+    /// Model shape the layer belongs to.
     pub cfg: &'a ModelConfig,
+    /// The layer's quantized weight matrices.
     pub weights: &'a LayerWeights,
     /// RC chunk bound (W_buff size).
     pub chunk: usize,
@@ -141,6 +154,7 @@ pub struct LayerExec<'a> {
 }
 
 impl<'a> LayerExec<'a> {
+    /// Bind a layer executor to a model shape and weight set.
     pub fn new(cfg: &'a ModelConfig, weights: &'a LayerWeights, chunk: usize) -> Self {
         LayerExec {
             cfg,

@@ -10,19 +10,29 @@
 
 pub mod layer;
 
-pub use layer::{qmatmul_rowwise, softmax_rows, LayerExec, LayerKv};
+pub use layer::{qmatmul_rowwise, quantize_row, softmax_rows, LayerExec, LayerKv};
 
 use crate::model::LoraAdaptor;
 use crate::quant::{fold, QuantMatrix};
 
-/// Per-call counters of the functional executor.
+/// Per-call counters of the functional executor, split between the base
+/// reuse pipeline and the LoRA side pipeline.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ExecStats {
+    /// Base-pipeline multiplications (Result-Cache fills).
     pub mults: u64,
+    /// Base-pipeline reuses (Result-Cache hits).
     pub reuses: u64,
+    /// Dense MACs performed on the rank-r adapter side pipeline
+    /// ([`lora_side_matmul`]). Kept out of [`ExecStats::reuse_rate`] so
+    /// the base pipe's reuse accounting is unchanged by adapters — the
+    /// invariant behind the paper's "reuse survives LoRA" claim.
+    pub adapter_mults: u64,
 }
 
 impl ExecStats {
+    /// Base-pipeline reuse rate: reuses over (mults + reuses). Adapter
+    /// side-pipe MACs are excluded by construction.
     pub fn reuse_rate(&self) -> f64 {
         let n = self.mults + self.reuses;
         if n == 0 {
@@ -58,6 +68,7 @@ impl Default for EpochTags {
 }
 
 impl EpochTags {
+    /// Fresh tracker: zeroed tags, epoch 1.
     pub fn new() -> EpochTags {
         // Epoch starts at 1 (the same value the wrap reset restarts at):
         // a zeroed tag must never equal a live epoch, so a fresh tracker
@@ -194,6 +205,47 @@ pub fn lora_matmul(
     (y, stats)
 }
 
+/// The adapter **side pipeline** of per-request LoRA serving: the dense
+/// rank-r computation `(x·A)·B` on its own, leaving the base `x·W` pass
+/// (and its Result-Cache accounting) untouched.
+///
+/// This is how the serving path routes adapters — base pipe keeps its
+/// reuse discount, the side pipe is dense — whereas [`lora_matmul`] is
+/// the offline combined-`[W ∥ A]` kernel (paper Fig. 5). The two are
+/// value-identical: for any input,
+/// `reuse_matmul_chunked(x, w, c).0[j] + lora_side_matmul(x, a).0[j]
+///  == lora_matmul(x, w, a, c).0[j]` exactly (`tests/prop_lora.rs`
+/// proves this property; a fixed case is pinned below).
+///
+/// Returns `(y_side, stats)` where `y_side[j] = Σ_k (x·A)[k]·B[k,j]` in
+/// integer code space (B applied at i64 precision) and `stats` counts
+/// every side-pipe MAC in [`ExecStats::adapter_mults`].
+pub fn lora_side_matmul(x: &[i8], adaptor: &LoraAdaptor) -> (Vec<i64>, ExecStats) {
+    assert_eq!(x.len(), adaptor.a.rows);
+    let r = adaptor.a.cols;
+    let cols = adaptor.b.cols;
+    // x·A in i64 (dense multiply path — no RC on the side pipe).
+    let mut xa = vec![0i64; r];
+    for (i, &xi) in x.iter().enumerate() {
+        let xi = xi as i64;
+        for (k, xak) in xa.iter_mut().enumerate() {
+            *xak += xi * adaptor.a.get(i, k) as i64;
+        }
+    }
+    // (x·A)·B in i64.
+    let mut y = vec![0i64; cols];
+    for (k, &xak) in xa.iter().enumerate() {
+        for (j, yj) in y.iter_mut().enumerate() {
+            *yj += xak * adaptor.b.get(k, j) as i64;
+        }
+    }
+    let stats = ExecStats {
+        adapter_mults: adaptor.extra_macs(),
+        ..ExecStats::default()
+    };
+    (y, stats)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -307,7 +359,8 @@ mod tests {
         let mut rng = Rng::new(11);
         let dist = WeightDistribution::default();
         let w = synthesize_matrix(48, 48, dist, &mut rng);
-        let adaptor = LoraAdaptor::synthesize(&w, LoraConfig { rank: 4, alpha: 8.0 }, dist, &mut rng);
+        let adaptor =
+            LoraAdaptor::synthesize(&w, LoraConfig { rank: 4, alpha: 8.0 }, dist, &mut rng);
         let x: Vec<i8> = (0..48).map(|_| rng.range_i64(-100, 100) as i8).collect();
         let (y, stats) = lora_matmul(&x, &w, &adaptor, 48 + 4);
         // Explicit: x·W + (x·A)·B.
@@ -321,6 +374,34 @@ mod tests {
         }
         assert_eq!(y, expect);
         assert!(stats.reuse_rate() > 0.3);
+    }
+
+    #[test]
+    fn side_pipe_plus_base_equals_offline_combined_kernel() {
+        // The serving decomposition (base reuse pipe + dense rank-r side
+        // pipe) must be value-identical to the offline combined [W ∥ A]
+        // kernel — the generalized property lives in tests/prop_lora.rs.
+        let mut rng = Rng::new(21);
+        let dist = WeightDistribution::default();
+        let w = synthesize_matrix(48, 64, dist, &mut rng);
+        let adaptor =
+            LoraAdaptor::synthesize(&w, LoraConfig { rank: 4, alpha: 8.0 }, dist, &mut rng);
+        let x: Vec<i8> = (0..48).map(|_| rng.range_i64(-100, 100) as i8).collect();
+        let (base, base_stats) = reuse_matmul_chunked(&x, &w, 64);
+        let (side, side_stats) = lora_side_matmul(&x, &adaptor);
+        let (combined, _) = lora_matmul(&x, &w, &adaptor, 64 + 4);
+        for j in 0..w.cols {
+            assert_eq!(base[j] as i64 + side[j], combined[j], "col {j}");
+        }
+        // Base-pipe accounting is untouched by the side pipe…
+        assert_eq!(base_stats.adapter_mults, 0);
+        let (_, base_alone) = reuse_matmul_chunked(&x, &w, 64);
+        assert_eq!(base_stats, base_alone);
+        // …and the side pipe is fully dense.
+        assert_eq!(side_stats.mults, 0);
+        assert_eq!(side_stats.reuses, 0);
+        assert_eq!(side_stats.adapter_mults, adaptor.extra_macs());
+        assert_eq!(side_stats.reuse_rate(), 0.0, "side MACs never count as reuse");
     }
 
     #[test]

@@ -17,7 +17,8 @@
 //! - [`quant`] — symmetric int8 quantization and the value-locality
 //!   statistics the reuse mechanism exploits.
 //! - [`model`] — a synthetic quantized transformer model zoo mirroring the
-//!   paper's Table I benchmarks, with LoRA adaptor support.
+//!   paper's Table I benchmarks, with LoRA adaptors and the multi-tenant
+//!   [`model::AdapterRegistry`].
 //! - [`workload`] — dataset-calibrated synthetic workload and request-trace
 //!   generation.
 //! - [`exec`] — a functional (bit-exact) implementation of the reuse
@@ -33,9 +34,16 @@
 //!   stack is generic over how a batch or a token actually runs.
 //! - [`coordinator`] — a serving layer (request queue, dynamic batcher,
 //!   backend-generic engine, token-level continuous batching for decode
-//!   with TTFT/TPOT metrics) that drives batched inference through any
-//!   execution backend while attributing cycles/energy through the
-//!   simulator.
+//!   with TTFT/TPOT metrics and a per-adapter rollup) that drives batched
+//!   inference through any execution backend while attributing
+//!   cycles/energy through the simulator.
+//!
+//! Serving is **multi-tenant**: every request may name a LoRA adapter
+//! ([`workload::Request::adapter`]); backends route it through the base
+//! reuse pipeline plus the adapter's dense rank-r side pipeline without
+//! touching the base weights — the paper's "serves fine-tuned models
+//! with no parameter change" claim, measurable end-to-end through
+//! [`coordinator::ServeSummary::by_adapter`].
 //! - [`report`] — generators for every figure and table in the paper's
 //!   evaluation (Fig. 1, Fig. 8, Fig. 9, LoRA, ShiftAddLLM, power, area,
 //!   plus ablations).
@@ -44,7 +52,11 @@
 //!   crate builds fully offline.
 //!
 //! See `rust/DESIGN.md` for the architecture, the module map, and the
-//! `Engine → ExecutionBackend → Accelerator` layering diagram.
+//! `Engine → ExecutionBackend → Accelerator` layering diagram; the
+//! top-level `README.md` has the quickstart and the bench-reproduction
+//! table.
+
+#![warn(missing_docs)]
 
 pub mod backend;
 pub mod config;

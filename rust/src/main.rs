@@ -6,6 +6,7 @@
 //!                [--buffers N] [--slices P] [--seed N] [--sample-rows N]
 //! axllm serve [--backend sim|functional|pjrt] [--model M] [--requests N]
 //!             [--rate R] [--dataset D] [--batch B] [--artifacts DIR]
+//!             [--adapters N] [--adapter-rank R]
 //! axllm info [--artifacts DIR]
 //! ```
 //!
@@ -107,6 +108,7 @@ USAGE:
               [--rate R] [--dataset <agnews|yelp|squad|imdb>] [--batch B]
               [--max-wait-ms W] [--artifacts DIR] [--seed N]
               [--live] [--replicas N] [--decode] [--gen-tokens N]
+              [--adapters N] [--adapter-rank R]
       backends:
         sim         cycle/energy attribution only — no logits, no artifacts
         functional  bit-exact in-process reuse-datapath execution, no artifacts
@@ -118,6 +120,12 @@ USAGE:
       with token-level continuous batching, reporting TTFT/TPOT;
       --gen-tokens N fixes every request's generated-token budget
       (default: sampled per dataset).
+      --adapters N serves N LoRA fine-tuned tenants off the one base
+      model: each request routes through the base reuse pipeline plus
+      its adapter's rank-R side pipeline (--adapter-rank R, default 16),
+      mixed freely within one continuous batch. The summary then splits
+      base-vs-adapter work per tenant. sim/functional backends serve
+      adapters for real; pjrt serves base-only and reports the misses.
       examples:
         axllm serve --backend sim --requests 64 --model tiny
         axllm serve --backend functional --requests 16 --dataset squad
@@ -125,6 +133,8 @@ USAGE:
         axllm serve --live --replicas 4 --backend sim --requests 64
         axllm serve --decode --gen-tokens 16 --backend functional
         axllm serve --decode --live --backend sim --requests 64
+        axllm serve --decode --adapters 4 --backend functional
+        axllm serve --decode --adapters 8 --adapter-rank 8 --backend sim
   axllm info [--artifacts DIR]
 ";
 
@@ -304,6 +314,24 @@ fn print_summary(s: &axllm::coordinator::ServeSummary) {
             s.tpot.p95_s * 1e3
         );
     }
+    // Per-adapter rollup — only worth printing when the run actually
+    // mixed serving dimensions (any adapter group, or side-pipe work).
+    if s.by_adapter.len() > 1 || s.adapter_ops > 0 {
+        for g in &s.by_adapter {
+            let name = match g.adapter {
+                None => "base".to_string(),
+                Some(id) => format!("adapter {id}"),
+            };
+            println!(
+                "  {name:>10}: {} requests, {} tokens ({:.0} tok/s), base reuse {:.1}%, {} side-pipe MACs",
+                g.requests,
+                g.tokens,
+                g.throughput_tps,
+                g.base_reuse_rate * 100.0,
+                g.adapter_ops
+            );
+        }
+    }
     println!(
         "accelerator attribution: {} simulated cycles, reuse {:.1}%, {:.2} µJ, speedup vs baseline {:.2}x",
         count(s.sim_cycles),
@@ -326,12 +354,17 @@ struct ServeOpts {
     decode: bool,
     /// Fixed generated-token budget; 0 = sampled per dataset.
     gen_tokens: u32,
+    /// LoRA tenants served off the base model; 0 = base-only.
+    adapters: u32,
+    /// Low-rank dimension of every served adapter.
+    adapter_rank: usize,
 }
 
 impl ServeOpts {
     /// The (prefill-only or decode) trace these options describe.
     fn trace(&self) -> Vec<axllm::workload::Request> {
-        let mut gen = TraceGenerator::new(self.dataset, self.rate, self.seed);
+        let mut gen =
+            TraceGenerator::new(self.dataset, self.rate, self.seed).with_adapters(self.adapters);
         if self.decode {
             gen.take_decode(self.n, (self.gen_tokens > 0).then_some(self.gen_tokens))
         } else {
@@ -355,6 +388,10 @@ fn run_serve<B: ExecutionBackend>(engine: &Engine<B>, opts: &ServeOpts) -> Resul
     };
     let (_results, s) = served.map_err(|e| format!("{e:#}"))?;
     print_summary(&s);
+    let misses = engine.backend.adapter_misses();
+    if misses > 0 {
+        println!("adapter misses (served base-only): {misses}");
+    }
     Ok(())
 }
 
@@ -396,6 +433,9 @@ where
     // Replay the trace's arrival offsets on the wall clock.
     let run = pool.run(trace, true).map_err(|e| format!("{e:#}"))?;
     print_summary(&run.summary);
+    if run.adapter_misses > 0 {
+        println!("adapter misses (served base-only): {}", run.adapter_misses);
+    }
     for (i, (b, r)) in run.replica_stats.iter().enumerate() {
         println!("replica {i}: {b} batches, {r} requests");
     }
@@ -419,9 +459,17 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
         replicas: args.get("replicas", 1usize)?,
         decode: args.get_bool("decode"),
         gen_tokens: args.get("gen-tokens", 0u32)?,
+        adapters: args.get("adapters", 0u32)?,
+        adapter_rank: args.get("adapter-rank", 16usize)?,
     };
     if opts.gen_tokens > 0 && !opts.decode {
         return Err("--gen-tokens needs --decode".into());
+    }
+    if args.flag("adapter-rank").is_some() && opts.adapters == 0 {
+        return Err("--adapter-rank needs --adapters".into());
+    }
+    if opts.adapter_rank == 0 {
+        return Err("--adapter-rank must be ≥ 1".into());
     }
     if opts.replicas == 0 {
         return Err("--replicas must be ≥ 1".into());
@@ -436,6 +484,7 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
         "sim" => {
             let name = args.flag("model").unwrap_or("tiny");
             let model_cfg = model_by_name(name).ok_or_else(|| format!("unknown model: {name}"))?;
+            let (n_adapters, rank) = (opts.adapters as usize, opts.adapter_rank);
             if live {
                 // Paced: the live worker is occupied for the simulated
                 // service time, so queueing and replica scaling behave
@@ -445,11 +494,13 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
                 let decode = opts.decode;
                 let make = move |_i: usize| {
                     SimBackend::new(model_cfg.clone(), acc_cfg)
-                        .map(|b| Engine::new(b.with_paced(!decode)))
+                        .map(|b| Engine::new(b.with_paced(!decode).with_adapters(n_adapters, rank)))
                 };
                 run_live("sim", make, &opts)
             } else {
-                let b = SimBackend::new(model_cfg, acc_cfg).map_err(|e| format!("{e:#}"))?;
+                let b = SimBackend::new(model_cfg, acc_cfg)
+                    .map_err(|e| format!("{e:#}"))?
+                    .with_adapters(n_adapters, rank);
                 run_serve(&Engine::new(b), &opts)
             }
         }
@@ -457,19 +508,31 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
             let name = args.flag("model").unwrap_or("tiny");
             let model_cfg = model_by_name(name).ok_or_else(|| format!("unknown model: {name}"))?;
             let seed = opts.seed;
+            let (n_adapters, rank) = (opts.adapters as usize, opts.adapter_rank);
             if live {
                 let make = move |_i: usize| {
-                    FunctionalBackend::new(model_cfg.clone(), acc_cfg, seed).map(Engine::new)
+                    FunctionalBackend::new(model_cfg.clone(), acc_cfg, seed)
+                        .map(|b| Engine::new(b.with_adapters(n_adapters, rank)))
                 };
                 run_live("functional", make, &opts)
             } else {
                 let b = FunctionalBackend::new(model_cfg, acc_cfg, seed)
-                    .map_err(|e| format!("{e:#}"))?;
+                    .map_err(|e| format!("{e:#}"))?
+                    .with_adapters(n_adapters, rank);
                 run_serve(&Engine::new(b), &opts)
             }
         }
         "pjrt" => {
             let dir = PathBuf::from(args.flag("artifacts").unwrap_or("artifacts"));
+            if opts.adapters > 0 {
+                // The AOT artifacts bake the base weights into fixed-shape
+                // HLO: adapter requests are served base-only and counted
+                // as misses by the backend.
+                println!(
+                    "note: pjrt has no adapter surface — {} adapter(s) will serve base-only",
+                    opts.adapters
+                );
+            }
             if live {
                 let make = move |_i: usize| Engine::load(&dir, acc_cfg);
                 run_live("pjrt", make, &opts)
@@ -634,6 +697,26 @@ mod tests {
         let b = Args::parse(&argv(&["serve", "--decode", "--requests", "8"])).unwrap();
         assert!(b.get_bool("decode"));
         assert_eq!(b.get("requests", 0usize).unwrap(), 8);
+    }
+
+    #[test]
+    fn adapter_flags_parse_next_to_decode() {
+        let a = Args::parse(&argv(&[
+            "serve",
+            "--decode",
+            "--adapters",
+            "4",
+            "--adapter-rank",
+            "8",
+            "--backend",
+            "sim",
+        ]))
+        .unwrap();
+        assert!(a.get_bool("decode"));
+        assert_eq!(a.get("adapters", 0u32).unwrap(), 4);
+        assert_eq!(a.get("adapter-rank", 16usize).unwrap(), 8);
+        assert_eq!(a.flag("backend"), Some("sim"));
+        assert_eq!(a.positional, vec!["serve"]);
     }
 
     #[test]

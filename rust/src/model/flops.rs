@@ -12,6 +12,7 @@ use crate::config::ModelConfig;
 /// One component of a transformer layer's compute.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ComponentFlops {
+    /// Human-readable component name (Fig. 1 legend entry).
     pub name: &'static str,
     /// Operation count (MACs for matmuls, elementwise ops otherwise).
     pub ops: u64,

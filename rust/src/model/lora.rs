@@ -17,11 +17,19 @@ use crate::model::synth::{synthesize_on_grid, WeightDistribution};
 use crate::quant::{stats::overlap_fraction, QuantMatrix};
 use crate::util::rng::Rng;
 
+/// Identifier of one LoRA adapter within an [`AdapterRegistry`] — the
+/// per-request serving dimension carried by
+/// [`crate::workload::Request::adapter`].
+pub type AdapterId = u32;
+
 /// A quantized LoRA adaptor pair (A: d×r, B: r×d) attached to a base W.
 #[derive(Clone, Debug)]
 pub struct LoraAdaptor {
+    /// Down-projection A (d×r), re-coded onto the base matrix's grid.
     pub a: QuantMatrix,
+    /// Up-projection B (r×d), on its own fitted grid.
     pub b: QuantMatrix,
+    /// Rank/α hyper-parameters the pair was synthesized with.
     pub config: LoraConfig,
 }
 
@@ -70,6 +78,77 @@ impl LoraAdaptor {
     /// (xA)B), before any reuse.
     pub fn extra_macs(&self) -> u64 {
         (self.a.rows * self.a.cols + self.b.rows * self.b.cols) as u64
+    }
+}
+
+/// The set of LoRA adaptors a serving deployment holds for one base
+/// model — the multi-tenant registry behind per-request adapter routing.
+///
+/// Every adaptor is an independent rank-r A/B pair against the same base
+/// matrix; each A is re-coded onto the base matrix's quantization grid
+/// (see module docs), so any tenant's side pipeline can share the base
+/// pipeline's Result Cache without touching the base weights — the
+/// paper's "no parameter change, no retraining, no offline
+/// preprocessing" claim applied per request instead of per model.
+/// Adapter ids are dense indices `0..len`.
+#[derive(Clone, Debug)]
+pub struct AdapterRegistry {
+    adaptors: Vec<LoraAdaptor>,
+    rank: usize,
+}
+
+impl AdapterRegistry {
+    /// Synthesize `n` independent adaptors of the given rank against one
+    /// base matrix. Deterministic in `seed`; adapter `i` draws from its
+    /// own forked stream, so registries are stable under re-ordering of
+    /// lookups and identical across backends with the same seed.
+    ///
+    /// The rank is clamped to ≥ 1 here — the single enforcement point —
+    /// so no caller can produce degenerate d×0 adaptors whose zero
+    /// side-pipe work would be indistinguishable from base-only serving.
+    pub fn synthesize(
+        base: &QuantMatrix,
+        n: usize,
+        config: LoraConfig,
+        dist: WeightDistribution,
+        seed: u64,
+    ) -> AdapterRegistry {
+        let config = LoraConfig {
+            rank: config.rank.max(1),
+            ..config
+        };
+        let adaptors = (0..n)
+            .map(|i| {
+                let mut rng =
+                    Rng::new(seed ^ (i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+                LoraAdaptor::synthesize(base, config, dist, &mut rng)
+            })
+            .collect();
+        AdapterRegistry {
+            adaptors,
+            rank: config.rank,
+        }
+    }
+
+    /// Look up one adaptor; `None` for ids outside the registry (the
+    /// caller decides whether that is a hard error or a recorded miss).
+    pub fn get(&self, id: AdapterId) -> Option<&LoraAdaptor> {
+        self.adaptors.get(id as usize)
+    }
+
+    /// Number of registered adaptors.
+    pub fn len(&self) -> usize {
+        self.adaptors.len()
+    }
+
+    /// True when no adaptors are registered.
+    pub fn is_empty(&self) -> bool {
+        self.adaptors.is_empty()
+    }
+
+    /// The (uniform) low-rank dimension of every registered adaptor.
+    pub fn rank(&self) -> usize {
+        self.rank
     }
 }
 
@@ -139,6 +218,49 @@ mod tests {
         let l = LoraAdaptor::synthesize(&w, LoraConfig::default(), dist, &mut rng);
         let f = l.overlap_with(&w);
         assert!(f > 0.85, "overlap {f}");
+    }
+
+    #[test]
+    fn registry_holds_independent_adaptors_on_the_base_grid() {
+        let mut rng = Rng::new(5);
+        let dist = WeightDistribution::default();
+        let w = synthesize_matrix(64, 64, dist, &mut rng);
+        let reg = AdapterRegistry::synthesize(
+            &w,
+            3,
+            LoraConfig { rank: 4, alpha: 8.0 },
+            dist,
+            77,
+        );
+        assert_eq!(reg.len(), 3);
+        assert!(!reg.is_empty());
+        assert_eq!(reg.rank(), 4);
+        assert!(reg.get(3).is_none(), "ids are dense 0..len");
+        for id in 0..3 {
+            let a = reg.get(id).expect("registered adaptor");
+            assert_eq!(a.a.params, w.params, "A lives on the base grid");
+            assert_eq!(a.a.cols, 4);
+            assert_eq!(a.b.rows, 4);
+        }
+        // Tenants are distinct…
+        assert_ne!(reg.get(0).unwrap().a.data, reg.get(1).unwrap().a.data);
+        // …and the registry is deterministic in its seed.
+        let again = AdapterRegistry::synthesize(
+            &w,
+            3,
+            LoraConfig { rank: 4, alpha: 8.0 },
+            dist,
+            77,
+        );
+        assert_eq!(reg.get(2).unwrap().a.data, again.get(2).unwrap().a.data);
+        assert_eq!(reg.get(2).unwrap().b.data, again.get(2).unwrap().b.data);
+        // Rank 0 clamps to a well-formed rank-1 pair at the single
+        // enforcement point — no degenerate d×0 adaptors.
+        let clamped =
+            AdapterRegistry::synthesize(&w, 1, LoraConfig { rank: 0, alpha: 1.0 }, dist, 1);
+        assert_eq!(clamped.rank(), 1);
+        assert_eq!(clamped.get(0).unwrap().a.cols, 1);
+        assert!(clamped.get(0).unwrap().extra_macs() > 0);
     }
 
     #[test]

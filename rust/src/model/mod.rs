@@ -12,7 +12,7 @@ pub mod lora;
 pub mod synth;
 
 pub use flops::{layer_breakdown, ComponentFlops};
-pub use lora::LoraAdaptor;
+pub use lora::{AdapterId, AdapterRegistry, LoraAdaptor};
 pub use synth::{synthesize_matrix, WeightDistribution};
 
 use crate::config::ModelConfig;
@@ -37,6 +37,7 @@ pub enum MatKind {
 }
 
 impl MatKind {
+    /// Every weight matrix of one layer, in streaming order.
     pub const ALL: [MatKind; 6] = [
         MatKind::Wq,
         MatKind::Wk,
@@ -46,6 +47,7 @@ impl MatKind {
         MatKind::Ff2,
     ];
 
+    /// Short display name of the matrix kind.
     pub fn name(&self) -> &'static str {
         match self {
             MatKind::Wq => "Wq",
@@ -73,13 +75,18 @@ impl MatKind {
 /// the standard attachment points).
 #[derive(Clone, Debug)]
 pub struct LayerWeights {
+    /// Layer index within the model.
     pub layer_idx: usize,
+    /// The layer's quantized matrices, one per [`MatKind`].
     pub mats: Vec<(MatKind, QuantMatrix)>,
+    /// LoRA adaptor on the Q projection (fine-tuned models).
     pub lora_q: Option<LoraAdaptor>,
+    /// LoRA adaptor on the V projection (fine-tuned models).
     pub lora_v: Option<LoraAdaptor>,
 }
 
 impl LayerWeights {
+    /// The layer's matrix of the given kind (panics if absent).
     pub fn get(&self, kind: MatKind) -> &QuantMatrix {
         &self
             .mats
@@ -98,12 +105,16 @@ impl LayerWeights {
 /// into the per-matrix RNG stream.
 #[derive(Clone, Debug)]
 pub struct Model {
+    /// Architectural shape (Table I row).
     pub config: ModelConfig,
+    /// Seed all weight streams derive from.
     pub seed: u64,
+    /// Synthesis distribution of the weights.
     pub dist: WeightDistribution,
 }
 
 impl Model {
+    /// New model with the default (Gaussian) weight distribution.
     pub fn new(config: ModelConfig, seed: u64) -> Model {
         Model {
             config,
@@ -112,6 +123,7 @@ impl Model {
         }
     }
 
+    /// Override the weight-synthesis distribution.
     pub fn with_distribution(mut self, dist: WeightDistribution) -> Model {
         self.dist = dist;
         self

@@ -14,7 +14,9 @@ use crate::util::rng::Rng;
 /// Family of the synthetic weight distribution.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum DistKind {
+    /// Standard normal (the empirical shape of trained weights; default).
     Gaussian,
+    /// Laplace — heavier tails than normal.
     Laplace,
     /// Student-t with the given degrees of freedom (heavier tails).
     StudentT(u32),
@@ -25,6 +27,7 @@ pub enum DistKind {
 /// Distribution + scale for weight synthesis.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct WeightDistribution {
+    /// Distribution family to draw from.
     pub kind: DistKind,
     /// Standard-deviation-like scale parameter.
     pub sigma: f64,
@@ -45,16 +48,19 @@ impl Default for WeightDistribution {
 }
 
 impl WeightDistribution {
+    /// Override the scale parameter.
     pub fn with_sigma(mut self, sigma: f64) -> Self {
         self.sigma = sigma;
         self
     }
 
+    /// Override the distribution family.
     pub fn with_kind(mut self, kind: DistKind) -> Self {
         self.kind = kind;
         self
     }
 
+    /// Override the post-synthesis quantization bit width.
     pub fn with_bits(mut self, bits: u8) -> Self {
         self.bits = bits;
         self

@@ -101,13 +101,18 @@ pub fn rc_entries(bits: u8) -> usize {
 /// and the AOT path exports it as uint8 RC indices.
 #[derive(Clone, Debug)]
 pub struct QuantMatrix {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Quantized codes, row-major.
     pub data: Vec<i8>,
+    /// The grid the codes live on.
     pub params: QuantParams,
 }
 
 impl QuantMatrix {
+    /// Quantize float data onto a grid fit to its own max magnitude.
     pub fn from_f32(rows: usize, cols: usize, data: &[f32], bits: u8) -> QuantMatrix {
         assert_eq!(data.len(), rows * cols);
         let params = QuantParams::fit(data, bits);
@@ -134,11 +139,13 @@ impl QuantMatrix {
         }
     }
 
+    /// Borrow row `r` of the quantized codes.
     #[inline]
     pub fn row(&self, r: usize) -> &[i8] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// One quantized code at (row, col).
     #[inline]
     pub fn get(&self, r: usize, c: usize) -> i8 {
         self.data[r * self.cols + c]

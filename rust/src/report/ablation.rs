@@ -50,14 +50,21 @@ pub fn buffer_sweep(ctx: RunCtx) -> Table {
 
 /// E11: slice-count sweep on the cycle-accurate sliced lane.
 pub struct SliceRow {
+    /// Slice count (P).
     pub slices: usize,
+    /// Simulated cycles of the swept matmul.
     pub cycles: u64,
+    /// Elements processed per cycle.
     pub throughput_elems_per_cycle: f64,
+    /// Same-cycle RC-slice collisions.
     pub collisions: u64,
+    /// Cycles stalled on full collision queues.
     pub backpressure: u64,
+    /// RAW-hazard stalls per lane-cycle.
     pub hazard_rate: f64,
 }
 
+/// Run the P ∈ {1, 2, 4, 8} slice sweep.
 pub fn slice_sweep(ctx: RunCtx) -> Vec<SliceRow> {
     let model = Model::new(ModelConfig::distilbert(), ctx.seed);
     let w = model.matrix_rows(0, MatKind::Wq, ctx.sample_rows);
@@ -87,6 +94,7 @@ pub fn slice_sweep(ctx: RunCtx) -> Vec<SliceRow> {
         .collect()
 }
 
+/// The slice sweep as a table.
 pub fn slice_sweep_table(ctx: RunCtx) -> Table {
     let mut t = Table::new(
         "Ablation — P-way slicing (sliced lane model, DistilBERT Wq)",

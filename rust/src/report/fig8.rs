@@ -32,12 +32,17 @@ pub fn table1() -> Table {
 /// models), mirroring the paper's "across different layers and across the
 /// vectors in each layer".
 pub struct Fig8Row {
+    /// Benchmark key (model / dataset).
     pub model: String,
+    /// Reuse rate with whole-row caching (unbounded buffer).
     pub reuse_full_row: f64,
+    /// Reuse rate at a 512-entry buffer chunk.
     pub reuse_512: f64,
+    /// Reuse rate at the paper's 256-entry buffer chunk.
     pub reuse_256: f64,
 }
 
+/// Measure every benchmark's reuse-rate profile.
 pub fn measure(ctx: RunCtx) -> Vec<Fig8Row> {
     table1_benchmarks()
         .into_iter()

@@ -17,13 +17,18 @@ use crate::util::table::{count, Table};
 /// are reproduced (≈ two AG News sequences through all 6 layers).
 pub const ANCHOR_TOKENS: u64 = 80;
 
+/// Simulated AxLLM-vs-baseline cycle counts for one benchmark.
 pub struct Fig9Row {
+    /// Benchmark key (model / dataset).
     pub model: String,
+    /// AxLLM simulated counters.
     pub ax: SimStats,
+    /// Multiply-only baseline counters.
     pub base: SimStats,
 }
 
 impl Fig9Row {
+    /// Baseline/AxLLM cycle ratio.
     pub fn speedup(&self) -> f64 {
         self.base.cycles as f64 / self.ax.cycles as f64
     }

@@ -7,7 +7,9 @@ use crate::model::{LoraAdaptor, MatKind, Model};
 use crate::report::RunCtx;
 use crate::util::table::{pct, Table};
 
+/// LoRA reuse measurements for one fine-tuned benchmark.
 pub struct LoraRow {
+    /// Model name.
     pub model: String,
     /// Mean fraction of A-row values present in the matching W row.
     pub overlap: f64,
@@ -87,6 +89,7 @@ pub fn measure(ctx: RunCtx) -> Vec<LoraRow> {
     ]
 }
 
+/// The Fig. 5 LoRA-reuse measurements as a table.
 pub fn generate(ctx: RunCtx) -> Table {
     let mut t = Table::new(
         "LoRA adaptor reuse via the combined W||A stream (Fig. 5)",

@@ -14,13 +14,23 @@ use crate::report::RunCtx;
 use crate::sim::{Accelerator, SimStats};
 use crate::util::table::{fnum, pct, Table};
 
+/// Calibrated power/energy comparison of one DistilBERT layer (paper §V).
 pub struct PowerResult {
+    /// Simulated activity of the multiply-only baseline.
     pub base_stats: SimStats,
+    /// Simulated activity of AxLLM on the same layer.
     pub ax_stats: SimStats,
+    /// Baseline average power (calibrated to the paper's 0.94 W).
     pub base_power_w: f64,
+    /// AxLLM energy normalized to the baseline's runtime (the figure the
+    /// paper's "0.67 W" corresponds to — see module docs).
     pub ax_iso_time_power_w: f64,
+    /// AxLLM average power over its own (shorter) runtime.
     pub ax_true_power_w: f64,
+    /// AxLLM / baseline total-energy ratio.
     pub energy_ratio: f64,
+    /// Multiplier share of the baseline's energy (the paper's motivation
+    /// for attacking multiplications first).
     pub mult_energy_share_base: f64,
 }
 
@@ -51,6 +61,7 @@ pub fn measure(ctx: RunCtx) -> PowerResult {
     }
 }
 
+/// The power/energy comparison as a table.
 pub fn generate(ctx: RunCtx) -> Table {
     let r = measure(ctx);
     let mut t = Table::new(

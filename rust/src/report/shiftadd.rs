@@ -9,14 +9,20 @@ use crate::sim::shiftadd::ShiftAddSim;
 use crate::sim::Accelerator;
 use crate::util::table::{count, Table};
 
+/// AxLLM vs ShiftAddLLM cycle comparison for one model.
 pub struct ShiftAddRow {
+    /// Model name.
     pub model: String,
+    /// AxLLM cycles for one token of matmul work.
     pub ax_cycles: u64,
+    /// ShiftAddLLM cycles for the same work.
     pub sa_cycles: u64,
+    /// LUT-setup share of the ShiftAddLLM cycles.
     pub sa_setup_cycles: u64,
 }
 
 impl ShiftAddRow {
+    /// AxLLM speedup over ShiftAddLLM.
     pub fn axllm_speedup(&self) -> f64 {
         self.sa_cycles as f64 / self.ax_cycles as f64
     }
@@ -47,6 +53,7 @@ pub fn measure_model(cfg: &ModelConfig, ctx: RunCtx) -> ShiftAddRow {
     }
 }
 
+/// The ShiftAddLLM comparison as a table.
 pub fn generate(ctx: RunCtx) -> Table {
     let r = measure_model(&ModelConfig::distilbert(), ctx);
     let mut t = Table::new(

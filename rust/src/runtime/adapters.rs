@@ -1,0 +1,91 @@
+//! Serving-side adapter provisioning: turn a deployment's `--adapters N
+//! --adapter-rank R` request into a concrete [`AdapterRegistry`], and
+//! count the requests a backend had to serve base-only.
+//!
+//! Real deployments would load trained A/B pairs from an adapter store
+//! next to the compiled artifacts; offline, this module synthesizes them
+//! deterministically against the served base matrix — on the base
+//! matrix's quantization grid, exactly as a deployment would re-code
+//! adaptors when preparing them for this accelerator
+//! (see [`crate::model::lora`] for the grid-sharing argument).
+
+use crate::config::LoraConfig;
+use crate::model::{AdapterRegistry, WeightDistribution};
+use crate::quant::QuantMatrix;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Provision a registry of `count` rank-`rank` adaptors for the given
+/// base matrix. Deterministic in `seed`, so every replica of a serving
+/// pool (and every backend sharing the seed) holds byte-identical
+/// tenants. Rank is clamped to ≥ 1 by
+/// [`AdapterRegistry::synthesize`] itself.
+pub fn provision(
+    base: &QuantMatrix,
+    count: usize,
+    rank: usize,
+    seed: u64,
+) -> AdapterRegistry {
+    AdapterRegistry::synthesize(
+        base,
+        count,
+        LoraConfig {
+            rank,
+            ..LoraConfig::default()
+        },
+        WeightDistribution::default(),
+        seed ^ 0xADA9_7E55,
+    )
+}
+
+/// Thread-safe count of adapter requests a backend could not honor and
+/// served base-only instead (unknown adapter id, or a runtime with no
+/// adapter support at all, like the fixed-shape PJRT artifacts).
+#[derive(Debug, Default)]
+pub struct AdapterMisses(AtomicU64);
+
+impl AdapterMisses {
+    /// Fresh counter at zero.
+    pub fn new() -> AdapterMisses {
+        AdapterMisses::default()
+    }
+
+    /// Record one base-only fallback.
+    pub fn record(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total base-only fallbacks recorded so far.
+    pub fn count(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthesize_matrix;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn provision_is_deterministic_and_grid_shared() {
+        let mut rng = Rng::new(3);
+        let base = synthesize_matrix(32, 8, WeightDistribution::default(), &mut rng);
+        let a = provision(&base, 2, 4, 42);
+        let b = provision(&base, 2, 4, 42);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.rank(), 4);
+        assert_eq!(a.get(1).unwrap().a.data, b.get(1).unwrap().a.data);
+        assert_eq!(a.get(0).unwrap().a.params, base.params);
+        // Rank 0 is clamped to a well-formed rank-1 pair.
+        assert_eq!(provision(&base, 1, 0, 1).rank(), 1);
+    }
+
+    #[test]
+    fn misses_accumulate() {
+        let m = AdapterMisses::new();
+        assert_eq!(m.count(), 0);
+        m.record();
+        m.record();
+        assert_eq!(m.count(), 2);
+    }
+}

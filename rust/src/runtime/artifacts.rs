@@ -11,18 +11,28 @@ use std::path::{Path, PathBuf};
 /// Parsed `artifacts/manifest.toml`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Manifest {
+    /// Compiled batch dimension of the tiny model.
     pub batch: usize,
+    /// Compiled sequence length.
     pub seq: usize,
+    /// Hidden size.
     pub d_model: usize,
+    /// Layer count.
     pub n_layers: usize,
+    /// Attention head count.
     pub n_heads: usize,
+    /// Feed-forward inner dimension.
     pub d_ff: usize,
+    /// Classifier classes of the logit head.
     pub n_classes: usize,
+    /// Weight-synthesis seed the artifacts were exported with.
     pub seed: u64,
+    /// Row counts of the standalone reuse-kernel artifacts.
     pub kernel_shapes: Vec<usize>,
 }
 
 impl Manifest {
+    /// Parse `manifest.toml` from an artifact directory.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.toml");
         let text = std::fs::read_to_string(&path)
@@ -72,11 +82,17 @@ impl Manifest {
 /// tensors); the canonical order is per layer `wq wk wv wo ff1 ff2`, then
 /// the classifier head.
 pub struct ArtifactSet {
+    /// Directory the set was loaded from.
     pub dir: PathBuf,
+    /// Parsed manifest.
     pub manifest: Manifest,
+    /// The compiled end-to-end tiny model.
     pub tiny_model: Executable,
+    /// The compiled single-layer executable.
     pub tiny_layer: Executable,
+    /// Standalone reuse kernels, keyed by row count.
     pub kernels: Vec<(usize, Executable)>,
+    /// The exported quantized weights the artifacts execute with.
     pub weights: TinyWeights,
     /// Weight-offset literals for `tiny_model`, canonical order.
     model_weight_lits: Vec<xla::Literal>,

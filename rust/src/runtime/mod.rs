@@ -6,9 +6,11 @@
 //! `client.compile` → `execute`. All artifacts were lowered with
 //! `return_tuple=True`, so results unwrap with `to_tuple1`.
 
+pub mod adapters;
 pub mod artifacts;
 pub mod weights;
 
+pub use adapters::AdapterMisses;
 pub use artifacts::{ArtifactSet, Manifest};
 pub use weights::{load_weights_bin, TinyWeights};
 
@@ -33,10 +35,12 @@ impl Runtime {
         Ok(Runtime { client })
     }
 
+    /// PJRT platform name (e.g. `"cpu"`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// Number of PJRT devices the client sees.
     pub fn device_count(&self) -> usize {
         self.client.device_count()
     }
@@ -64,6 +68,7 @@ impl Runtime {
 }
 
 impl Executable {
+    /// File-stem name of the compiled artifact.
     pub fn name(&self) -> &str {
         &self.name
     }

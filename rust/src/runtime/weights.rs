@@ -22,12 +22,19 @@ const MAGIC: u32 = 0x41584C4D;
 /// The tiny model's weights, layer by layer, plus the classifier head.
 #[derive(Clone, Debug)]
 pub struct TinyWeights {
+    /// Layer count.
     pub n_layers: usize,
+    /// Hidden size.
     pub d_model: usize,
+    /// Attention head count.
     pub n_heads: usize,
+    /// Feed-forward inner dimension.
     pub d_ff: usize,
+    /// Classifier classes of the logit head.
     pub n_classes: usize,
+    /// Per-layer quantized matrices.
     pub layers: Vec<LayerWeights>,
+    /// The classifier/logit head matrix.
     pub head: QuantMatrix,
 }
 

@@ -26,6 +26,7 @@ use anyhow::anyhow;
 /// Result of one simulated vector×matrix multiplication.
 #[derive(Clone, Debug)]
 pub struct MatmulResult {
+    /// Cycle/activity counters of the simulated multiplication.
     pub stats: SimStats,
     /// `y = x·W` in i32 accumulator precision (empty for sampled runs).
     pub output: Vec<i32>,
@@ -34,7 +35,9 @@ pub struct MatmulResult {
 /// The simulated accelerator instance.
 #[derive(Clone, Copy, Debug)]
 pub struct Accelerator {
+    /// Micro-architecture sizing of this instance.
     pub cfg: AcceleratorConfig,
+    /// Lane timing model chunks dispatch through.
     pub lane_model: LaneModel,
     /// Double-buffered Out_buffs: adder-tree drain overlaps the next
     /// round (design choice ablated in `report::ablation`).
@@ -331,8 +334,11 @@ pub fn synth_input(n: usize, seed: u64) -> Vec<i8> {
 /// Cycle/activity summary of one model run.
 #[derive(Clone, Debug)]
 pub struct ModelCycleSummary {
+    /// Name of the simulated model.
     pub model: String,
+    /// Counters summed over every layer.
     pub total: SimStats,
+    /// Per-layer counters, in layer order.
     pub per_layer: Vec<SimStats>,
 }
 

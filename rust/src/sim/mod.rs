@@ -75,6 +75,7 @@ pub enum LaneModel {
 /// functional partial sums the chunk produced.
 #[derive(Clone, Debug)]
 pub struct ChunkResult {
+    /// Cycle/activity counters of the chunk pass.
     pub stats: SimStats,
     /// Partial sums `x * w[j]` for each chunk position j (i32 accumulator
     /// precision, as in the int8×int8→i32 datapath).

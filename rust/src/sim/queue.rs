@@ -14,6 +14,7 @@ pub struct Queue<T> {
 }
 
 impl<T> Queue<T> {
+    /// New empty queue with `cap` slots.
     pub fn new(cap: usize) -> Self {
         assert!(cap > 0, "queue capacity must be ≥ 1");
         Queue {
@@ -28,21 +29,25 @@ impl<T> Queue<T> {
         self.cap - self.items.len()
     }
 
+    /// True when no credits remain.
     #[inline]
     pub fn is_full(&self) -> bool {
         self.items.len() == self.cap
     }
 
+    /// True when nothing is queued.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.items.is_empty()
     }
 
+    /// Queued item count.
     #[inline]
     pub fn len(&self) -> usize {
         self.items.len()
     }
 
+    /// Fixed capacity (queue depth S).
     pub fn capacity(&self) -> usize {
         self.cap
     }
@@ -59,16 +64,19 @@ impl<T> Queue<T> {
         }
     }
 
+    /// Pop the oldest item, if any.
     #[inline]
     pub fn pop(&mut self) -> Option<T> {
         self.items.pop_front()
     }
 
+    /// Borrow the oldest item without popping.
     #[inline]
     pub fn peek(&self) -> Option<&T> {
         self.items.front()
     }
 
+    /// Drop every queued item (epoch boundary).
     pub fn clear(&mut self) {
         self.items.clear();
     }
@@ -84,6 +92,7 @@ pub struct RoundRobin {
 }
 
 impl RoundRobin {
+    /// New arbiter over `n` requesters, starting at index 0.
     pub fn new(n: usize) -> Self {
         assert!(n > 0);
         RoundRobin { n, next: 0 }

@@ -18,8 +18,11 @@
 /// Entry state as seen by the datapath.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RcState {
+    /// Value not yet seen for the current input element.
     Invalid,
+    /// First occurrence in flight; a repeat now is the RAW hazard.
     Pending,
+    /// Cached product available for 1-cycle reuse.
     Valid(i32),
 }
 
@@ -35,12 +38,14 @@ struct Slot {
 pub struct ResultCache {
     slots: Vec<Slot>,
     epoch: u32,
-    /// Reads and writes this epoch (activity factors).
+    /// Reads this epoch (activity factor).
     pub reads: u64,
+    /// Writes this epoch (activity factor).
     pub writes: u64,
 }
 
 impl ResultCache {
+    /// New cache with `entries` slots (≤ 256), all invalid.
     pub fn new(entries: usize) -> Self {
         assert!(entries > 0 && entries <= 256);
         ResultCache {
@@ -58,6 +63,7 @@ impl ResultCache {
         }
     }
 
+    /// Slot count of the cache.
     pub fn entries(&self) -> usize {
         self.slots.len()
     }

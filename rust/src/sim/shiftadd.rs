@@ -25,7 +25,9 @@ use crate::quant::QuantMatrix;
 /// Binary decomposition of one weight matrix: `q` ±1 matrices + scales.
 #[derive(Clone, Debug)]
 pub struct BinaryDecomposition {
+    /// Row count of the decomposed matrix.
     pub rows: usize,
+    /// Column count of the decomposed matrix.
     pub cols: usize,
     /// Base matrices, each rows×cols of ±1 stored as i8.
     pub bases: Vec<Vec<i8>>,
@@ -148,6 +150,7 @@ impl BinaryDecomposition {
 /// units (paper comparison: 64 units vs 64-lane AxLLM).
 #[derive(Clone, Copy, Debug)]
 pub struct ShiftAddSim {
+    /// Parallel shift-add units.
     pub units: usize,
     /// Bases (= weight bit width).
     pub q: usize,
@@ -171,14 +174,20 @@ impl Default for ShiftAddSim {
 /// Cycle/operation counts of one ShiftAddLLM vector×matrix multiplication.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ShiftAddStats {
+    /// LUT-fill (setup-phase) cycles.
     pub setup_cycles: u64,
+    /// Main-phase (read + accumulate) cycles.
     pub main_cycles: u64,
+    /// LUT entries written during setup.
     pub lut_fills: u64,
+    /// LUT reads during the main phase.
     pub lut_reads: u64,
+    /// Additions performed.
     pub adds: u64,
 }
 
 impl ShiftAddStats {
+    /// Total cycles (setup + main).
     pub fn cycles(&self) -> u64 {
         self.setup_cycles + self.main_cycles
     }

@@ -11,10 +11,15 @@ use std::time::{Duration, Instant};
 /// One measured benchmark result.
 #[derive(Clone, Debug)]
 pub struct Measurement {
+    /// Benchmark name.
     pub name: String,
+    /// Total timed iterations.
     pub iters: u64,
+    /// Median per-iteration time.
     pub median: Duration,
+    /// Mean per-iteration time.
     pub mean: Duration,
+    /// Standard deviation of the per-sample times.
     pub stddev: Duration,
     /// Optional throughput denominator (elements per iteration).
     pub elements: Option<u64>,
@@ -56,6 +61,7 @@ fn human(d: Duration) -> String {
 }
 
 impl Bench {
+    /// New runner (honors `AXLLM_BENCH_FAST=1` for short CI windows).
     pub fn new() -> Self {
         // AXLLM_BENCH_FAST=1 shrinks the window so `cargo bench` in CI
         // finishes quickly; default window targets stable medians.

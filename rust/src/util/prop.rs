@@ -16,7 +16,9 @@ use super::rng::Rng;
 /// Configuration for a property run.
 #[derive(Clone, Copy, Debug)]
 pub struct Config {
+    /// Number of random cases to run.
     pub cases: u32,
+    /// Base seed the per-case seeds derive from.
     pub seed: u64,
 }
 

@@ -7,7 +7,9 @@
 /// Column alignment.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Align {
+    /// Left-align the column.
     Left,
+    /// Right-align the column (default for numeric columns).
     Right,
 }
 
@@ -21,6 +23,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// New empty table with a title and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Table {
             title: title.to_string(),
@@ -41,6 +44,7 @@ impl Table {
         self
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(
             cells.len(),
@@ -52,6 +56,7 @@ impl Table {
         self
     }
 
+    /// Number of data rows.
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }
@@ -61,6 +66,7 @@ impl Table {
         &self.rows[r][c]
     }
 
+    /// Column headers.
     pub fn headers(&self) -> &[String] {
         &self.headers
     }

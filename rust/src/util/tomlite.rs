@@ -21,23 +21,31 @@ use std::collections::BTreeMap;
 /// A parsed scalar or array value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// Integer literal.
     Int(i64),
+    /// Float literal.
     Float(f64),
+    /// Boolean literal.
     Bool(bool),
+    /// Quoted string.
     Str(String),
+    /// Bracketed array of values.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// The integer value, if this is an `Int`.
     pub fn as_int(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
             _ => None,
         }
     }
+    /// The integer value as a usize, if non-negative.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_int().and_then(|i| usize::try_from(i).ok())
     }
+    /// The numeric value as f64 (`Float` or widened `Int`).
     pub fn as_float(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -45,18 +53,21 @@ impl Value {
             _ => None,
         }
     }
+    /// The boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The string value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The array elements, if this is an `Array`.
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Array(v) => Some(v),
@@ -77,10 +88,12 @@ impl Doc {
         self.sections.get(section).and_then(|m| m.get(key))
     }
 
+    /// Iterate over (section name, key→value map) pairs.
     pub fn sections(&self) -> impl Iterator<Item = (&str, &BTreeMap<String, Value>)> {
         self.sections.iter().map(|(k, v)| (k.as_str(), v))
     }
 
+    /// Insert or overwrite one key in a section.
     pub fn set(&mut self, section: &str, key: &str, value: Value) {
         self.sections
             .entry(section.to_string())
@@ -125,7 +138,9 @@ impl Doc {
 /// Parse error with line number.
 #[derive(Debug)]
 pub struct ParseError {
+    /// 1-based line the error was detected on.
     pub line: usize,
+    /// Human-readable description.
     pub msg: String,
 }
 

@@ -9,14 +9,18 @@
 //! serving experiments.
 
 use crate::config::Dataset;
+use crate::model::AdapterId;
 use crate::util::rng::Rng;
 
 /// One inference request: a sequence of synthetic token embeddings, plus
-/// an optional autoregressive-decode budget.
+/// an optional autoregressive-decode budget and an optional LoRA adapter.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Stable request identifier (derives the embedding stream).
     pub id: u64,
+    /// Dataset profile the request was sampled from.
     pub dataset: Dataset,
+    /// Prompt length in tokens (before backend truncation).
     pub seq_len: usize,
     /// Arrival time in seconds since trace start (serving experiments).
     pub arrival_s: f64,
@@ -24,6 +28,12 @@ pub struct Request {
     /// (the classifier path); decode serving treats 0 as "use the
     /// server's default budget".
     pub gen_tokens: u32,
+    /// LoRA adapter the request must be served with: `None` runs the
+    /// base model, `Some(id)` routes the request through the base reuse
+    /// pipeline **plus** adapter `id`'s low-rank side pipeline. Backends
+    /// that cannot honor the adapter serve base-only and record a miss
+    /// ([`crate::backend::ExecutionBackend::adapter_misses`]).
+    pub adapter: Option<AdapterId>,
 }
 
 /// Sample a sequence length from the dataset's profile: log-normal with
@@ -53,36 +63,63 @@ pub fn sample_gen_len(dataset: Dataset, rng: &mut Rng) -> u32 {
 /// A deterministic stream of requests with Poisson arrivals.
 #[derive(Clone, Debug)]
 pub struct TraceGenerator {
+    /// Dataset profile driving lengths and output budgets.
     pub dataset: Dataset,
     /// Mean request rate (requests/second).
     pub rate: f64,
     rng: Rng,
+    /// Adapter assignment stream, independent of the length/arrival
+    /// stream so adapter-annotated traces keep identical ids, lengths,
+    /// and arrivals to their base-model twins.
+    adapter_rng: Rng,
+    /// Size of this dataset's adapter pool (0 = base-model trace).
+    adapters: u32,
     next_id: u64,
     clock_s: f64,
 }
 
 impl TraceGenerator {
+    /// New generator for one dataset profile at a mean arrival rate.
     pub fn new(dataset: Dataset, rate: f64, seed: u64) -> Self {
         assert!(rate > 0.0);
         TraceGenerator {
             dataset,
             rate,
             rng: Rng::new(seed),
+            adapter_rng: Rng::new(seed ^ 0xADA9_7E55),
+            adapters: 0,
             next_id: 0,
             clock_s: 0.0,
         }
+    }
+
+    /// Assign every generated request an adapter sampled uniformly from
+    /// this dataset's pool of `n` fine-tuned variants (multi-tenant
+    /// serving: each dataset is a tenant with its own adapter set).
+    /// `n = 0` keeps the base-model trace. Assignment draws from an
+    /// independent RNG stream, so ids, lengths, and arrivals are
+    /// byte-identical to the same-seed base trace.
+    pub fn with_adapters(mut self, n: u32) -> Self {
+        self.adapters = n;
+        self
     }
 
     /// Generate the next request in the trace (prefill-only:
     /// `gen_tokens` = 0).
     pub fn next_request(&mut self) -> Request {
         self.clock_s += self.rng.exponential(self.rate);
+        let adapter = if self.adapters > 0 {
+            Some(self.adapter_rng.below(self.adapters as u64) as AdapterId)
+        } else {
+            None
+        };
         let r = Request {
             id: self.next_id,
             dataset: self.dataset,
             seq_len: sample_seq_len(self.dataset, &mut self.rng),
             arrival_s: self.clock_s,
             gen_tokens: 0,
+            adapter,
         };
         self.next_id += 1;
         r
@@ -256,6 +293,37 @@ mod tests {
             assert_eq!(a.seq_len, b.seq_len);
             assert!((a.arrival_s - b.arrival_s).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn adapter_assignment_covers_pool_without_perturbing_the_trace() {
+        let base = TraceGenerator::new(Dataset::Imdb, 50.0, 9).take(200);
+        assert!(base.iter().all(|r| r.adapter.is_none()));
+        let tenants = TraceGenerator::new(Dataset::Imdb, 50.0, 9)
+            .with_adapters(4)
+            .take(200);
+        // Same ids, lengths, arrivals — the adapter stream is independent.
+        for (a, b) in base.iter().zip(&tenants) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.seq_len, b.seq_len);
+            assert!((a.arrival_s - b.arrival_s).abs() < 1e-12);
+        }
+        // Every adapter id in [0, 4) appears; nothing outside the pool.
+        let mut seen = [false; 4];
+        for r in &tenants {
+            let id = r.adapter.expect("every request carries an adapter");
+            assert!(id < 4, "adapter {id} outside the pool");
+            seen[id as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "200 draws must cover 4 adapters");
+        // Deterministic by seed.
+        let again = TraceGenerator::new(Dataset::Imdb, 50.0, 9)
+            .with_adapters(4)
+            .take(200);
+        assert_eq!(
+            tenants.iter().map(|r| r.adapter).collect::<Vec<_>>(),
+            again.iter().map(|r| r.adapter).collect::<Vec<_>>()
+        );
     }
 
     #[test]

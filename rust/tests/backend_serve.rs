@@ -196,6 +196,7 @@ fn identical_request_ids_get_identical_logits_functionally() {
         seq_len: 20,
         arrival_s: arrival,
         gen_tokens: 0,
+        adapter: None,
     };
     let (r1, _) = e
         .serve_trace(vec![mk(0.0)], BatchPolicy::default())

@@ -56,6 +56,7 @@ fn identical_request_ids_get_identical_logits() {
         seq_len: 20,
         arrival_s: arrival,
         gen_tokens: 0,
+        adapter: None,
     };
     let (r1, _) = e
         .serve_trace(vec![mk(0.0)], BatchPolicy::default())
@@ -75,6 +76,7 @@ fn attribution_scales_with_sequence_length() {
         seq_len: len,
         arrival_s: id as f64 * 0.001,
         gen_tokens: 0,
+        adapter: None,
     };
     let (results, _) = e
         .serve_trace(
@@ -103,6 +105,7 @@ fn queue_wait_reflects_batching_policy() {
             seq_len: 16,
             arrival_s: 0.0,
             gen_tokens: 0,
+            adapter: None,
         },
         Request {
             id: 1,
@@ -110,6 +113,7 @@ fn queue_wait_reflects_batching_policy() {
             seq_len: 16,
             arrival_s: 1.0,
             gen_tokens: 0,
+            adapter: None,
         },
     ];
     let (results, summary) = e
@@ -148,6 +152,7 @@ fn threaded_server_round_trips() {
             seq_len: 24,
             arrival_s: 0.0,
             gen_tokens: 0,
+            adapter: None,
         }));
     }
     for (id, rx) in rxs.into_iter().enumerate() {
