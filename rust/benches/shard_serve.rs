@@ -1,0 +1,110 @@
+//! Shard-parallel serving: the tensor-parallel speedup curve and the
+//! per-shard reuse accounting, end to end through `Engine::serve_trace`
+//! on the sim backend.
+//!
+//! The multi-accelerator question AxLLM's single-instance evaluation
+//! leaves open: when the model shards column-wise across N instances,
+//! each shard's **independent** Result Cache sees only `cols/N` of every
+//! weight matrix — per-shard reuse rates sit below the monolithic Fig. 8
+//! rates — while service time divides by N and pays the all-gather
+//! collective instead. This bench measures both effects on one burst
+//! trace.
+//!
+//! Emits `BENCH_shard_serve.json` and **asserts** (a) the sim-backend
+//! shard speedup is > 1 at n=4 (and sub-linear: the collective does not
+//! shard away), and (b) per-shard reuse rates are reported and
+//! sum-consistent with the run's total base ops.
+
+use axllm::backend::SimBackend;
+use axllm::config::{AcceleratorConfig, Dataset, ModelConfig};
+use axllm::coordinator::{BatchPolicy, Engine};
+use axllm::util::bench::Bench;
+use axllm::workload::TraceGenerator;
+
+const N_REQUESTS: usize = 64;
+const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+fn main() {
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait_s: 0.001,
+    };
+    // One burst trace shared by every shard count (identical batching).
+    let trace = TraceGenerator::new(Dataset::Imdb, 100_000.0, 7).take(N_REQUESTS);
+
+    let mut b = Bench::new();
+    let mut spans = Vec::new();
+    println!("simulated shard-parallel serving ({N_REQUESTS} requests, tiny model):");
+    for &n in &SHARD_COUNTS {
+        let engine = Engine::new(
+            SimBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper())
+                .expect("sim backend must construct")
+                .with_shards(n),
+        );
+        let (results, summary) = engine
+            .serve_trace(trace.clone(), policy)
+            .expect("sharded serve");
+        let tokens = summary.tokens;
+        spans.push((n, summary.span_s));
+        println!(
+            "  shards={n}: span {:.4}s, {:>9.0} tok/s, modeled pass speedup {:.2}x",
+            summary.span_s,
+            summary.throughput_tps,
+            engine.cost().shard_speedup(tokens),
+        );
+        for g in &summary.per_shard {
+            println!(
+                "    shard {}: reuse {:.2}% ({} ops)",
+                g.shard,
+                g.reuse_rate * 100.0,
+                g.base_mults + g.base_reuses
+            );
+        }
+        // Acceptance gate (ISSUE 5): per-shard reuse is reported and
+        // sum-consistent with the run's total attributed base ops.
+        if n > 1 {
+            assert_eq!(summary.per_shard.len(), n);
+            let shard_ops: u64 = summary
+                .per_shard
+                .iter()
+                .map(|g| g.base_mults + g.base_reuses)
+                .sum();
+            let total_ops: u64 = results.iter().map(|r| r.base_mults + r.base_reuses).sum();
+            assert_eq!(
+                shard_ops, total_ops,
+                "shards={n}: per-shard ops must partition the total"
+            );
+            assert!(
+                summary.per_shard.iter().all(|g| g.reuse_rate > 0.0),
+                "shards={n}: every shard must see reuse"
+            );
+        } else {
+            assert!(summary.per_shard.is_empty());
+        }
+        b.run_throughput(&format!("shard_serve/shards-{n}"), tokens, || {
+            let _ = engine
+                .serve_trace(trace.clone(), policy)
+                .expect("sharded serve");
+        });
+    }
+
+    // Acceptance gate (ISSUE 5): shard speedup > 1 at n=4, sub-linear.
+    let span_1 = spans.iter().find(|(n, _)| *n == 1).unwrap().1;
+    let span_4 = spans.iter().find(|(n, _)| *n == 4).unwrap().1;
+    let speedup = span_1 / span_4;
+    println!("\nshard speedup at n=4 (span ratio): {speedup:.2}x");
+    assert!(
+        speedup > 1.0,
+        "4-shard serving ({span_4:.4}s) must beat monolithic ({span_1:.4}s)"
+    );
+    assert!(
+        speedup < 4.0,
+        "speedup {speedup} must stay sub-linear: the all-gather does not shard away"
+    );
+
+    println!("\ncsv:\n{}", b.csv());
+    match std::fs::write("BENCH_shard_serve.json", b.json()) {
+        Ok(()) => println!("wrote BENCH_shard_serve.json"),
+        Err(e) => eprintln!("could not write BENCH_shard_serve.json: {e}"),
+    }
+}

@@ -34,13 +34,20 @@ echo "== lora serve bench (writes BENCH_lora_serve.json) =="
 # LoRA (every tenant group within noise of the adapter-free run).
 AXLLM_BENCH_FAST=1 cargo bench --bench lora_serve
 
+echo "== shard serve bench (writes BENCH_shard_serve.json) =="
+# Asserts the sim-backend shard speedup is > 1 (and sub-linear) at n=4,
+# and that per-shard reuse rates are reported sum-consistent with the
+# run's total base ops.
+AXLLM_BENCH_FAST=1 cargo bench --bench shard_serve
+
 echo "== cargo doc --no-deps (rustdoc must stay warning-free) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 echo "== cargo fmt --check =="
 cargo fmt --check
 
-echo "== cargo clippy -- -D warnings =="
-cargo clippy -- -D warnings
+echo "== cargo clippy --all-targets -- -D warnings =="
+# --all-targets lints the tests and benches too, not just the library.
+cargo clippy --all-targets -- -D warnings
 
 echo "ci: all green"

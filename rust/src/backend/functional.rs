@@ -11,12 +11,12 @@
 
 use crate::backend::{
     argmax_token, BatchOutcome, CostModel, ExecutionBackend, KvHandle, KvState, ReqActivity,
-    StepOutcome, COST_SAMPLE_ROWS, DEFAULT_SEQ_LIMIT,
+    ShardActivity, StepOutcome, COST_SAMPLE_ROWS, DEFAULT_SEQ_LIMIT,
 };
 use crate::config::{AcceleratorConfig, ModelConfig};
 use crate::exec::{
-    lora_side_matmul, qmatmul_rowwise, quantize_row, reuse_matmul_chunked, ExecStats, LayerExec,
-    LayerKv,
+    lora_side_matmul, quantize_row, reuse_matmul_chunked, sharded_reuse_matmul_chunked, ExecStats,
+    LayerExec, LayerKv,
 };
 use crate::model::{
     synthesize_matrix, AdapterId, AdapterRegistry, LayerWeights, LoraAdaptor, Model,
@@ -54,6 +54,11 @@ pub struct FunctionalBackend {
     /// base-model-only deployment).
     adapters: Option<AdapterRegistry>,
     misses: AdapterMisses,
+    /// Tensor-parallel shards every weight matmul splits across (1 =
+    /// monolithic). Column partitioning is exact, so sharded logits are
+    /// bit-identical to the monolithic path; only the per-shard reuse
+    /// accounting (independent Result Caches) changes.
+    shards: usize,
 }
 
 impl FunctionalBackend {
@@ -99,7 +104,22 @@ impl FunctionalBackend {
             cost,
             adapters: None,
             misses: AdapterMisses::new(),
+            shards: 1,
         })
+    }
+
+    /// Execute every projection column-sharded across `n` tensor-parallel
+    /// shards, each owning an independent Result Cache. Logits are
+    /// **bit-identical** to the unsharded deployment by construction of
+    /// exact column partitioning (`tests/prop_shard.rs` proves this for
+    /// prefill and KV-cached decode); what changes is the accounting —
+    /// [`ReqActivity::per_shard`] reports each shard's reuse split — and
+    /// the cost model, which charges the collective regime
+    /// ([`CostModel::with_shard_regime`]).
+    pub fn with_shards(mut self, n: usize) -> FunctionalBackend {
+        self.shards = n.max(1);
+        self.cost = self.cost.with_shard_regime(&self.model_cfg, self.shards);
+        self
     }
 
     /// Serve `count` rank-`rank` LoRA tenants next to the base model:
@@ -173,21 +193,23 @@ impl FunctionalBackend {
     /// (routing the request's adapter through the head's side pipeline).
     /// Returns the logits and the reuse counters the pass accumulated.
     pub fn forward(&self, req: &Request) -> (Vec<f32>, ExecStats) {
-        self.forward_with(self.route_adapter(req.adapter), req)
+        let (logits, stats, _) = self.forward_full(self.route_adapter(req.adapter), req);
+        (logits, stats)
     }
 
-    fn forward_with(
+    fn forward_full(
         &self,
         adaptor: Option<&LoraAdaptor>,
         req: &Request,
-    ) -> (Vec<f32>, ExecStats) {
+    ) -> (Vec<f32>, ExecStats, Vec<ExecStats>) {
         let (mut x, seq) = self.request_embeddings(req);
         let mut stats = ExecStats::default();
+        let mut shard: Vec<ExecStats> = Vec::new();
         for lw in &self.layers {
-            let mut le = LayerExec::new(&self.model_cfg, lw, self.chunk);
+            let mut le = LayerExec::new(&self.model_cfg, lw, self.chunk).with_shards(self.shards);
             x = le.forward(&x, seq);
-            stats.mults += le.stats.mults;
-            stats.reuses += le.stats.reuses;
+            stats.add(&le.stats);
+            merge_shards(&mut shard, &le.shard_stats);
         }
         let d = self.model_cfg.d_model;
         let mut pooled = vec![0f32; d];
@@ -199,8 +221,8 @@ impl FunctionalBackend {
         for p in pooled.iter_mut() {
             *p /= seq as f32;
         }
-        let logits = self.head_logits_for(adaptor, &pooled, &mut stats);
-        (logits, stats)
+        let logits = self.head_logits_for(adaptor, &pooled, &mut stats, &mut shard);
+        (logits, stats, shard)
     }
 
     /// One causal pass of `n_new` embedding rows through every layer's
@@ -211,13 +233,14 @@ impl FunctionalBackend {
         n_new: usize,
         caches: &mut [LayerKv],
         stats: &mut ExecStats,
+        shard: &mut Vec<ExecStats>,
     ) -> Vec<f32> {
         let mut x = x;
         for (lw, kv) in self.layers.iter().zip(caches.iter_mut()) {
-            let mut le = LayerExec::new(&self.model_cfg, lw, self.chunk);
+            let mut le = LayerExec::new(&self.model_cfg, lw, self.chunk).with_shards(self.shards);
             x = le.forward_causal(&x, n_new, kv);
-            stats.mults += le.stats.mults;
-            stats.reuses += le.stats.reuses;
+            stats.add(&le.stats);
+            merge_shards(shard, &le.shard_stats);
         }
         x
     }
@@ -226,32 +249,45 @@ impl FunctionalBackend {
     /// result depends only on that row), routed through the adapter's
     /// side pipeline when one is given.
     ///
-    /// `None` takes exactly the adapter-free path
-    /// ([`qmatmul_rowwise`]), so base-model requests are byte-for-byte
-    /// unaffected by adapters elsewhere in the batch. `Some(a)` keeps
-    /// the identical base-pipe computation and accounting, and adds the
-    /// dense side term `(x·A)·B` on the same quantized input — the
-    /// serving-side decomposition proven value-identical to the offline
-    /// combined [`crate::exec::lora_matmul`] kernel
-    /// (`tests/prop_lora.rs`).
+    /// The base term is one [`quantize_row`] + RC pass + dequantization —
+    /// exactly `qmatmul_rowwise` over one row — so `None` is the
+    /// adapter-free path bit for bit, and base-model requests are
+    /// byte-for-byte unaffected by adapters elsewhere in the batch.
+    /// `Some(a)` keeps the identical base-pipe computation and
+    /// accounting, and adds the dense side term `(x·A)·B` on the same
+    /// quantized input — the serving-side decomposition proven
+    /// value-identical to the offline combined
+    /// [`crate::exec::lora_matmul`] kernel (`tests/prop_lora.rs`). When
+    /// sharded, the base RC pass splits column-wise like every other
+    /// matmul; the rank-r side pipe stays per-request dense work
+    /// (replicated with the activations in a real shard group, so it
+    /// contributes no per-shard reuse).
     fn head_logits_for(
         &self,
         adaptor: Option<&LoraAdaptor>,
         row: &[f32],
         stats: &mut ExecStats,
+        shard: &mut Vec<ExecStats>,
     ) -> Vec<f32> {
-        match adaptor {
-            None => qmatmul_rowwise(row, 1, &self.head, self.chunk, stats),
-            Some(a) => {
-                // Base pipe: the SAME quantization step as the
-                // adapter-free path ([`quantize_row`] is qmatmul_rowwise's
-                // input side), same RC pass, same dequantization
-                // expression — bit-identical base term by construction.
-                let (xq, xq_params) = quantize_row(row);
-                let scale = xq_params.scale * self.head.params.scale;
-                let (yq, st) = reuse_matmul_chunked(&xq, &self.head, self.chunk);
+        let (xq, xq_params) = quantize_row(row);
+        let scale = xq_params.scale * self.head.params.scale;
+        let yq = if self.shards <= 1 {
+            let (yq, st) = reuse_matmul_chunked(&xq, &self.head, self.chunk);
+            stats.mults += st.mults;
+            stats.reuses += st.reuses;
+            yq
+        } else {
+            let (yq, per) = sharded_reuse_matmul_chunked(&xq, &self.head, self.chunk, self.shards);
+            for st in &per {
                 stats.mults += st.mults;
                 stats.reuses += st.reuses;
+            }
+            merge_shards(shard, &per);
+            yq
+        };
+        match adaptor {
+            None => yq.iter().map(|&v| v as f32 * scale).collect(),
+            Some(a) => {
                 // Side pipe: dense rank-r (x·A)·B on the same input.
                 let (side, sst) = lora_side_matmul(&xq, a);
                 stats.adapter_mults += sst.adapter_mults;
@@ -280,13 +316,37 @@ impl FunctionalBackend {
         let n = prompt_len + tokens.len();
         let mut caches = vec![LayerKv::new(); self.model_cfg.n_layers];
         let mut stats = ExecStats::default();
-        let hidden = self.causal_pass(x, n, &mut caches, &mut stats);
+        let mut shard = Vec::new();
+        let hidden = self.causal_pass(x, n, &mut caches, &mut stats, &mut shard);
         self.head_logits_for(
             self.adaptor_for(req.adapter),
             &hidden[(n - 1) * d..],
             &mut stats,
+            &mut shard,
         )
     }
+}
+
+/// Accumulate per-shard counters from one pass segment into the
+/// pass-level accumulator (widening to the longer record).
+fn merge_shards(acc: &mut Vec<ExecStats>, add: &[ExecStats]) {
+    if acc.len() < add.len() {
+        acc.resize(add.len(), ExecStats::default());
+    }
+    for (a, b) in acc.iter_mut().zip(add) {
+        a.add(b);
+    }
+}
+
+/// Map a pass's per-shard counters onto the serving-layer taxonomy.
+fn shard_activity(shard: &[ExecStats]) -> Vec<ShardActivity> {
+    shard
+        .iter()
+        .map(|s| ShardActivity {
+            base_mults: s.mults,
+            base_reuses: s.reuses,
+        })
+        .collect()
 }
 
 /// Map functional reuse counters onto the simulator's counter taxonomy
@@ -332,6 +392,10 @@ impl ExecutionBackend for FunctionalBackend {
         self.misses.count()
     }
 
+    fn shard_count(&self) -> usize {
+        self.shards
+    }
+
     fn run_batch(&self, requests: &[Request]) -> crate::Result<BatchOutcome> {
         anyhow::ensure!(
             requests.len() <= self.max_batch,
@@ -344,15 +408,14 @@ impl ExecutionBackend for FunctionalBackend {
         let mut activity = Vec::with_capacity(requests.len());
         let mut total = ExecStats::default();
         for req in requests {
-            let (l, s) = self.forward(req);
+            let (l, s, shard) = self.forward_full(self.route_adapter(req.adapter), req);
             logits.push(l);
-            total.mults += s.mults;
-            total.reuses += s.reuses;
-            total.adapter_mults += s.adapter_mults;
+            total.add(&s);
             activity.push(ReqActivity {
                 base_mults: s.mults,
                 base_reuses: s.reuses,
                 adapter_ops: s.adapter_mults,
+                per_shard: shard_activity(&shard),
             });
         }
         Ok(BatchOutcome {
@@ -370,9 +433,11 @@ impl ExecutionBackend for FunctionalBackend {
         let (x, prompt_len) = self.request_embeddings(req);
         let mut caches = vec![LayerKv::new(); self.model_cfg.n_layers];
         let mut stats = ExecStats::default();
-        let hidden = self.causal_pass(x, prompt_len, &mut caches, &mut stats);
+        let mut shard = Vec::new();
+        let hidden = self.causal_pass(x, prompt_len, &mut caches, &mut stats, &mut shard);
         let d = self.model_cfg.d_model;
-        let logits = self.head_logits_for(adaptor, &hidden[(prompt_len - 1) * d..], &mut stats);
+        let logits =
+            self.head_logits_for(adaptor, &hidden[(prompt_len - 1) * d..], &mut stats, &mut shard);
         let token = argmax_token(&logits);
         let kv = KvHandle {
             id: req.id,
@@ -396,6 +461,7 @@ impl ExecutionBackend for FunctionalBackend {
                     base_mults: stats.mults,
                     base_reuses: stats.reuses,
                     adapter_ops: stats.adapter_mults,
+                    per_shard: shard_activity(&shard),
                 },
             },
         ))
@@ -425,8 +491,9 @@ impl ExecutionBackend for FunctionalBackend {
             ),
         };
         let mut stats = ExecStats::default();
-        let hidden = self.causal_pass(x, 1, caches, &mut stats);
-        let logits = self.head_logits_for(adaptor, &hidden, &mut stats);
+        let mut shard = Vec::new();
+        let hidden = self.causal_pass(x, 1, caches, &mut stats, &mut shard);
+        let logits = self.head_logits_for(adaptor, &hidden, &mut stats, &mut shard);
         let token = argmax_token(&logits);
         kv.generated.push(token);
         Ok(StepOutcome {
@@ -438,6 +505,7 @@ impl ExecutionBackend for FunctionalBackend {
                 base_mults: stats.mults,
                 base_reuses: stats.reuses,
                 adapter_ops: stats.adapter_mults,
+                per_shard: shard_activity(&shard),
             },
         })
     }
@@ -598,6 +666,44 @@ mod tests {
         let (kv_s, _) = tenants.prefill(&stranger, 2).unwrap();
         assert_eq!(kv_s.adapter, None, "missed adapter never sticks to a session");
         assert_eq!(tenants.adapter_misses(), 2);
+    }
+
+    #[test]
+    fn sharded_backend_is_bit_identical_with_per_shard_accounting() {
+        let mono = backend();
+        let sharded = backend().with_shards(4);
+        assert_eq!(sharded.shard_count(), 4);
+        assert!(sharded.cost().shards == 4);
+        let r = req(3, 10);
+        let (lm, sm) = mono.forward(&r);
+        let (ls, ss) = sharded.forward(&r);
+        // Column sharding never changes values…
+        assert_eq!(lm, ls);
+        // …and never changes total element counts, only their RC split.
+        assert_eq!(sm.mults + sm.reuses, ss.mults + ss.reuses);
+        assert!(ss.mults >= sm.mults, "per-shard caches can only lose reuse");
+        // Per-request per-shard split is reported and sum-consistent.
+        let out = sharded.run_batch(&[r.clone()]).unwrap();
+        let a = &out.activity[0];
+        assert_eq!(a.per_shard.len(), 4);
+        let ops: u64 = a.per_shard.iter().map(|s| s.ops()).sum();
+        assert_eq!(ops, a.base_mults + a.base_reuses);
+        assert!(a.per_shard.iter().all(|s| s.reuse_rate() > 0.0));
+        // The monolithic deployment reports no shard dimension.
+        let out_m = mono.run_batch(&[r.clone()]).unwrap();
+        assert!(out_m.activity[0].per_shard.is_empty());
+        // Decode sessions stay bit-identical too (prop_shard.rs
+        // generalizes; one fixed case pinned here).
+        let (mut kv_m, f_m) = mono.prefill(&r, 3).unwrap();
+        let (mut kv_s, f_s) = sharded.prefill(&r, 3).unwrap();
+        assert_eq!(f_m.logits, f_s.logits);
+        assert!(!f_s.activity.per_shard.is_empty());
+        while !kv_m.done() {
+            let om = mono.decode_step(&mut kv_m).unwrap();
+            let os = sharded.decode_step(&mut kv_s).unwrap();
+            assert_eq!(om.logits, os.logits);
+            assert_eq!(om.token, os.token);
+        }
     }
 
     #[test]

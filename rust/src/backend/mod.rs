@@ -26,6 +26,15 @@
 //! carries both regimes: the per-token prefill costs and the decode
 //! (seq=1 GEMV) regime with its KV-attention term and the
 //! continuous-batching [`CostModel::iteration_time_s`].
+//!
+//! The API is also **shard-aware**: `with_shards(n)` on the artifact-free
+//! backends splits every projection column-wise across `n` tensor-parallel
+//! shards, each with an independent Result Cache
+//! ([`crate::exec::sharded`]), reporting the per-shard reuse split in
+//! [`ReqActivity::per_shard`]; [`CostModel::with_shard_regime`] adds the
+//! interconnect collective term ([`CostModel::allreduce_time_s`]) to the
+//! simulated times. Shard-unaware backends (PJRT) fall back monolithic
+//! and record the capability miss ([`ExecutionBackend::shard_misses`]).
 //! `rust/DESIGN.md` diagrams the `Engine → ExecutionBackend →
 //! Accelerator` layering.
 
@@ -54,19 +63,67 @@ pub const DEFAULT_SEQ_LIMIT: usize = 32;
 /// sampled-and-scaled for Llama-scale.
 pub const COST_SAMPLE_ROWS: usize = 512;
 
+/// Modeled shard-interconnect bandwidth (bytes/second): an NVLink-class
+/// link between the accelerator instances of one shard group.
+pub const SHARD_LINK_BYTES_PER_S: f64 = 100e9;
+
+/// Modeled per-collective latency (seconds) of the shard interconnect.
+pub const SHARD_LINK_LATENCY_S: f64 = 2e-6;
+
+/// One shard's base-pipeline activity for a request served
+/// tensor-parallel: each shard owns an independent Result Cache over its
+/// column slice, so per-shard reuse rates differ from the monolithic
+/// rate (and from each other) while the element counts partition exactly
+/// (`Σ_s ops_s == total base ops` — see [`crate::exec::sharded`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardActivity {
+    /// This shard's base-pipeline multiplications (Result-Cache fills).
+    pub base_mults: u64,
+    /// This shard's base-pipeline reuses (Result-Cache hits).
+    pub base_reuses: u64,
+}
+
+impl ShardActivity {
+    /// Elements this shard processed (mults + reuses).
+    pub fn ops(&self) -> u64 {
+        self.base_mults + self.base_reuses
+    }
+
+    /// This shard's Result-Cache hit rate (0 when the shard did no work).
+    pub fn reuse_rate(&self) -> f64 {
+        let n = self.ops();
+        if n == 0 {
+            0.0
+        } else {
+            self.base_reuses as f64 / n as f64
+        }
+    }
+
+    /// Accumulate another shard record into this one.
+    pub fn add(&mut self, other: &ShardActivity) {
+        self.base_mults += other.base_mults;
+        self.base_reuses += other.base_reuses;
+    }
+}
+
 /// Per-request activity split between the base reuse pipeline and the
 /// LoRA adapter side pipeline, as measured (functional) or modeled (sim)
 /// by the executing backend. All-zero when the backend measures nothing
 /// itself (PJRT).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ReqActivity {
-    /// Base-pipeline multiplications (Result-Cache fills).
+    /// Base-pipeline multiplications (Result-Cache fills). Total across
+    /// all shards for sharded execution.
     pub base_mults: u64,
     /// Base-pipeline reuses (Result-Cache hits).
     pub base_reuses: u64,
     /// Dense MACs on the rank-r adapter side pipeline (0 for base-model
     /// requests and for backends that serve adapters base-only).
     pub adapter_ops: u64,
+    /// Per-shard split of the base-pipeline counters (empty for
+    /// unsharded execution; one entry per shard otherwise, summing to
+    /// `base_mults`/`base_reuses`).
+    pub per_shard: Vec<ShardActivity>,
 }
 
 impl ReqActivity {
@@ -83,11 +140,19 @@ impl ReqActivity {
         }
     }
 
-    /// Accumulate another activity record into this one.
+    /// Accumulate another activity record into this one (per-shard
+    /// entries merge index-wise; a shorter record widens to the longer).
     pub fn add(&mut self, other: &ReqActivity) {
         self.base_mults += other.base_mults;
         self.base_reuses += other.base_reuses;
         self.adapter_ops += other.adapter_ops;
+        if self.per_shard.len() < other.per_shard.len() {
+            self.per_shard
+                .resize(other.per_shard.len(), ShardActivity::default());
+        }
+        for (a, b) in self.per_shard.iter_mut().zip(&other.per_shard) {
+            a.add(b);
+        }
     }
 }
 
@@ -233,6 +298,22 @@ pub trait ExecutionBackend {
         0
     }
 
+    /// Tensor-parallel shards this backend actually executes across
+    /// (1 = monolithic). Shard-aware backends split every projection
+    /// column-wise over this many per-shard Result Caches and report the
+    /// per-shard split in [`ReqActivity::per_shard`].
+    fn shard_count(&self) -> usize {
+        1
+    }
+
+    /// Requests a shard-unaware backend served monolithically even
+    /// though the deployment asked for sharded execution (the capability
+    /// miss the PJRT artifact path records, mirroring
+    /// [`ExecutionBackend::adapter_misses`]).
+    fn shard_misses(&self) -> u64 {
+        0
+    }
+
     /// Execute one batch; `requests.len()` must be ≤ `max_batch()`.
     fn run_batch(&self, requests: &[Request]) -> crate::Result<BatchOutcome>;
 
@@ -281,6 +362,24 @@ pub struct CostModel {
     pub adapter_cycles_per_token: f64,
     /// LoRA side-pipeline energy (pJ) per adapter-request token.
     pub adapter_energy_pj_per_token: f64,
+    /// Tensor-parallel shards the modeled deployment splits each
+    /// projection across (1 = monolithic). Compute terms divide by this;
+    /// the collective regime below adds the interconnect cost. Set by
+    /// [`CostModel::with_shard_regime`].
+    pub shards: usize,
+    /// Bytes all-gathered per processed token across the shard group:
+    /// one `d_model` f32 activation row per layer. Zero until
+    /// [`CostModel::with_shard_regime`] fills the regime.
+    pub gather_bytes_per_token: f64,
+    /// Collectives per token batch (one per layer): each pays the link
+    /// latency; bytes amortize across the batch.
+    pub shard_collectives: f64,
+    /// Shard-interconnect bandwidth, bytes/second
+    /// ([`SHARD_LINK_BYTES_PER_S`]).
+    pub link_bytes_per_s: f64,
+    /// Per-collective shard-interconnect latency, seconds
+    /// ([`SHARD_LINK_LATENCY_S`]).
+    pub link_latency_s: f64,
 }
 
 impl CostModel {
@@ -301,6 +400,11 @@ impl CostModel {
             attn_energy_pj_per_ctx_token: 0.0,
             adapter_cycles_per_token: 0.0,
             adapter_energy_pj_per_token: 0.0,
+            shards: 1,
+            gather_bytes_per_token: 0.0,
+            shard_collectives: 0.0,
+            link_bytes_per_s: SHARD_LINK_BYTES_PER_S,
+            link_latency_s: SHARD_LINK_LATENCY_S,
         }
     }
 
@@ -383,6 +487,61 @@ impl CostModel {
             .with_decode_regime(&model.config, acc_cfg)
     }
 
+    /// Fill the tensor-parallel collective regime: `shards` instances
+    /// each compute a `cols/N` slice of every projection (compute terms
+    /// divide by N) and an all-gather stitches one `d_model` f32
+    /// activation row per layer per token back together
+    /// (`gather_bytes_per_token`), with one collective per layer paying
+    /// the link latency. `shards = 1` restores the monolithic regime.
+    pub fn with_shard_regime(mut self, model_cfg: &ModelConfig, shards: usize) -> CostModel {
+        self.shards = shards.max(1);
+        if self.shards > 1 {
+            self.gather_bytes_per_token = (model_cfg.n_layers * model_cfg.d_model * 4) as f64;
+            self.shard_collectives = model_cfg.n_layers as f64;
+        } else {
+            self.gather_bytes_per_token = 0.0;
+            self.shard_collectives = 0.0;
+        }
+        self
+    }
+
+    /// Interconnect time of ring-all-gathering `bytes` across `shards`
+    /// instances for one pass over the model: the standard
+    /// `2·(n−1)/n · bytes / bandwidth` bandwidth term plus
+    /// `2·(n−1) · latency` per collective (one collective per layer —
+    /// [`CostModel::shard_collectives`] — regardless of how many tokens
+    /// the pass batches). Zero for a monolithic deployment.
+    ///
+    /// The shard-aware time functions pass `self.shards`; `shards` is a
+    /// parameter so callers can also query the curve at other group
+    /// sizes (the bench sweeps it). On a cost model whose shard regime
+    /// was never filled, `shard_collectives` falls back to one
+    /// collective per pass — a coarse ring estimate, not the layered
+    /// model — so fill [`CostModel::with_shard_regime`] before trusting
+    /// absolute numbers.
+    pub fn allreduce_time_s(&self, bytes: f64, shards: usize) -> f64 {
+        if shards <= 1 {
+            return 0.0;
+        }
+        let n = shards as f64;
+        2.0 * (n - 1.0) / n * bytes / self.link_bytes_per_s
+            + 2.0 * (n - 1.0) * self.link_latency_s * self.shard_collectives.max(1.0)
+    }
+
+    /// Simulated speedup of the sharded deployment over monolithic
+    /// execution of the same `tokens`-token pass (1.0 when unsharded).
+    /// Sub-linear by construction: compute divides by N, the collective
+    /// term does not.
+    pub fn shard_speedup(&self, tokens: u64) -> f64 {
+        let mono = self.cycles_per_token_ax * tokens as f64 / (self.freq_ghz * 1e9);
+        let sharded = self.sim_time_s(tokens);
+        if sharded <= 0.0 {
+            1.0
+        } else {
+            mono / sharded
+        }
+    }
+
     /// Simulated speedup of AxLLM over the multiply-only baseline.
     pub fn speedup(&self) -> f64 {
         self.cycles_per_token_base / self.cycles_per_token_ax
@@ -397,8 +556,15 @@ impl CostModel {
     }
 
     /// Simulated accelerator service time for `tokens` tokens, seconds.
+    /// Shard-aware: a sharded deployment computes its column slices in
+    /// parallel (compute / N) and pays the all-gather for the batch.
     pub fn sim_time_s(&self, tokens: u64) -> f64 {
-        self.cycles_per_token_ax * tokens as f64 / (self.freq_ghz * 1e9)
+        let mono = self.cycles_per_token_ax * tokens as f64 / (self.freq_ghz * 1e9);
+        if self.shards <= 1 || tokens == 0 {
+            return mono;
+        }
+        mono / self.shards as f64
+            + self.allreduce_time_s(self.gather_bytes_per_token * tokens as f64, self.shards)
     }
 
     /// Simulated cycles of one decode step at `context` cached tokens:
@@ -413,8 +579,16 @@ impl CostModel {
     }
 
     /// Simulated standalone service time of one decode step, seconds.
+    /// Shard-aware: compute divides by the shard count and the step's
+    /// single-token all-gather is added — decode is where the collective
+    /// latency bites hardest (one token's gather per step).
     pub fn decode_step_time_s(&self, context: u64) -> f64 {
-        self.decode_step_cycles(context) / (self.freq_ghz * 1e9)
+        let mono = self.decode_step_cycles(context) / (self.freq_ghz * 1e9);
+        if self.shards <= 1 {
+            return mono;
+        }
+        mono / self.shards as f64
+            + self.allreduce_time_s(self.gather_bytes_per_token, self.shards)
     }
 
     /// Service time of one continuous-batching iteration that prefills
@@ -428,10 +602,20 @@ impl CostModel {
     /// batched GEMV), plus their per-session KV-attention terms. This is
     /// the term continuous batching optimizes — the fuller the running
     /// batch, the more tokens amortize each weight pass.
+    /// Shard-aware: a sharded deployment divides the iteration's compute
+    /// by the shard count and all-gathers every token the iteration
+    /// produced or prefilled (one fused collective set per iteration).
     pub fn iteration_time_s(&self, prefill_tokens: u64, decode_contexts: &[u64]) -> f64 {
         let weight_passes = prefill_tokens + u64::from(!decode_contexts.is_empty());
         let attn = decode_contexts.iter().map(|&c| c as f64).sum::<f64>()
             * self.attn_cycles_per_ctx_token;
-        (self.cycles_per_token_ax * weight_passes as f64 + attn) / (self.freq_ghz * 1e9)
+        let compute =
+            (self.cycles_per_token_ax * weight_passes as f64 + attn) / (self.freq_ghz * 1e9);
+        let gathered = prefill_tokens + decode_contexts.len() as u64;
+        if self.shards <= 1 || gathered == 0 {
+            return compute;
+        }
+        compute / self.shards as f64
+            + self.allreduce_time_s(self.gather_bytes_per_token * gathered as f64, self.shards)
     }
 }

@@ -31,6 +31,13 @@ pub struct PjrtBackend {
     /// HLO — there is no per-request adapter surface to route through,
     /// so every adapter request is served base-only and counted here.
     misses: AdapterMisses,
+    /// Shards the deployment asked for. The fixed-shape artifacts cannot
+    /// split their compiled projections, so any value above 1 makes every
+    /// served request record a capability miss in `shard_miss` — the same
+    /// honest-fallback pattern as the adapter path.
+    requested_shards: usize,
+    /// Requests served monolithically despite a sharded deployment ask.
+    shard_miss: AdapterMisses,
 }
 
 impl PjrtBackend {
@@ -48,15 +55,33 @@ impl PjrtBackend {
             cost,
             embed_seed,
             misses: AdapterMisses::new(),
+            requested_shards: 1,
+            shard_miss: AdapterMisses::new(),
         })
     }
 
+    /// Ask for `n`-way tensor-parallel execution. The compiled artifacts
+    /// are shard-unaware (fixed-shape HLO), so the backend keeps serving
+    /// monolithically and records one capability miss per served request
+    /// ([`ExecutionBackend::shard_misses`]) — mirroring the adapter
+    /// fallback, so deployments see the downgrade instead of silently
+    /// believing they sharded.
+    pub fn with_shards(mut self, n: usize) -> PjrtBackend {
+        self.requested_shards = n.max(1);
+        self
+    }
+
     /// Record a base-only fallback for every adapter-carrying request in
-    /// the slice (the artifact runtime has no adapter surface).
+    /// the slice (the artifact runtime has no adapter surface), plus a
+    /// shard capability miss per request when the deployment asked for
+    /// sharded execution.
     fn record_adapter_misses(&self, requests: &[Request]) {
         for r in requests {
             if r.adapter.is_some() {
                 self.misses.record();
+            }
+            if self.requested_shards > 1 {
+                self.shard_miss.record();
             }
         }
     }
@@ -117,6 +142,10 @@ impl ExecutionBackend for PjrtBackend {
 
     fn adapter_misses(&self) -> u64 {
         self.misses.count()
+    }
+
+    fn shard_misses(&self) -> u64 {
+        self.shard_miss.count()
     }
 
     fn run_batch(&self, requests: &[Request]) -> crate::Result<BatchOutcome> {

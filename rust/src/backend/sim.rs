@@ -11,13 +11,14 @@
 //! no artifact directory (and no PJRT runtime) is available.
 
 use crate::backend::{
-    BatchOutcome, CostModel, ExecutionBackend, KvHandle, KvState, ReqActivity, StepOutcome,
-    COST_SAMPLE_ROWS, DEFAULT_SEQ_LIMIT,
+    BatchOutcome, CostModel, ExecutionBackend, KvHandle, KvState, ReqActivity, ShardActivity,
+    StepOutcome, COST_SAMPLE_ROWS, DEFAULT_SEQ_LIMIT,
 };
 use crate::config::{AcceleratorConfig, ModelConfig};
-use crate::model::Model;
+use crate::exec::{shard_accounting, ExecStats};
+use crate::model::{MatKind, Model};
 use crate::runtime::AdapterMisses;
-use crate::sim::SimStats;
+use crate::sim::{Accelerator, SimStats};
 use crate::workload::{request_seed, Request};
 use anyhow::Result;
 
@@ -47,6 +48,15 @@ pub struct SimBackend {
     /// [`CostModel::with_adapter_regime`] derivation).
     adapter_macs_per_token: u64,
     misses: AdapterMisses,
+    /// Tensor-parallel shards the modeled deployment splits each
+    /// projection across (1 = monolithic).
+    shards: usize,
+    /// Per-shard reuse accounting of one token of weight traffic
+    /// (empty when unsharded): measured by scanning the model's weight
+    /// codes with per-shard Result Caches ([`shard_accounting`] — the
+    /// mult/reuse split depends only on the codes, the chunk bound, and
+    /// the shard boundaries, never on the input values).
+    per_token_shard: Vec<ExecStats>,
 }
 
 impl SimBackend {
@@ -67,7 +77,75 @@ impl SimBackend {
             adapter_count: 0,
             adapter_macs_per_token: 0,
             misses: AdapterMisses::new(),
+            shards: 1,
+            per_token_shard: Vec::new(),
         })
+    }
+
+    /// Model a deployment that shards each projection column-wise across
+    /// `n` accelerator instances, each with its own Result Cache and
+    /// quantization-group slice:
+    ///
+    /// - service times take the collective regime
+    ///   ([`CostModel::with_shard_regime`]: sliced-GEMM compute over
+    ///   `cols/N` plus [`CostModel::allreduce_time_s`]);
+    /// - per-request activity reports the **measured** per-shard reuse
+    ///   split ([`ReqActivity::per_shard`]), obtained by scanning the
+    ///   model's weight codes with `n` independent per-shard caches —
+    ///   sharding can only lose reuse, and this is where the loss shows.
+    ///
+    /// Totals are sum-consistent by construction: the per-request base
+    /// counters of a sharded deployment are the sum of its shard
+    /// counters.
+    pub fn with_shards(mut self, n: usize) -> SimBackend {
+        let n = n.max(1);
+        self.shards = n;
+        if n == 1 {
+            self.per_token_shard = Vec::new();
+            self.cost = self.cost.with_shard_regime(&self.model_cfg, 1);
+            return self;
+        }
+        let chunk = Accelerator::axllm(self.acc_cfg).chunk_cols();
+        let model = Model::new(self.model_cfg.clone(), SIM_MODEL_SEED);
+        let mut per = vec![ExecStats::default(); n];
+        for l in 0..self.model_cfg.n_layers {
+            for kind in MatKind::ALL {
+                let (rows, _) = kind.shape(&self.model_cfg);
+                let sample = COST_SAMPLE_ROWS.min(rows);
+                let w = model.matrix_rows(l, kind, sample);
+                for (acc, s) in per
+                    .iter_mut()
+                    .zip(shard_accounting(&w, chunk, n, rows as u64))
+                {
+                    acc.add(&s);
+                }
+            }
+        }
+        self.per_token_shard = per;
+        self.cost = self.cost.with_shard_regime(&self.model_cfg, n);
+        self
+    }
+
+    /// Per-shard activity of `tokens` tokens of weight traffic (empty
+    /// when unsharded), plus the summed totals.
+    fn shard_split(&self, tokens: u64) -> (Vec<ShardActivity>, u64, u64) {
+        if self.shards <= 1 {
+            return (Vec::new(), 0, 0);
+        }
+        let per: Vec<ShardActivity> = self
+            .per_token_shard
+            .iter()
+            .map(|s| {
+                let t = s.scaled(tokens, 1);
+                ShardActivity {
+                    base_mults: t.mults,
+                    base_reuses: t.reuses,
+                }
+            })
+            .collect();
+        let mults = per.iter().map(|s| s.base_mults).sum();
+        let reuses = per.iter().map(|s| s.base_reuses).sum();
+        (per, mults, reuses)
     }
 
     /// Override the per-request sequence cap (default
@@ -105,6 +183,30 @@ impl SimBackend {
             Some(_) => {
                 self.misses.record();
                 false
+            }
+        }
+    }
+
+    /// Per-request activity of `tokens` tokens of weight traffic:
+    /// monolithic counters from the cycle simulation when unsharded; the
+    /// measured per-shard split (summing to the totals by construction)
+    /// when sharded.
+    fn base_activity(&self, tokens: u64, adapter_ops: u64) -> ReqActivity {
+        if self.shards <= 1 {
+            let base = self.per_token.scaled(tokens, 1);
+            ReqActivity {
+                base_mults: base.mults,
+                base_reuses: base.rc_hits,
+                adapter_ops,
+                per_shard: Vec::new(),
+            }
+        } else {
+            let (per, mults, reuses) = self.shard_split(tokens);
+            ReqActivity {
+                base_mults: mults,
+                base_reuses: reuses,
+                adapter_ops,
+                per_shard: per,
             }
         }
     }
@@ -163,6 +265,10 @@ impl ExecutionBackend for SimBackend {
         self.misses.count()
     }
 
+    fn shard_count(&self) -> usize {
+        self.shards
+    }
+
     fn run_batch(&self, requests: &[Request]) -> crate::Result<BatchOutcome> {
         let mut tokens = 0u64;
         let mut adapter_tokens = 0u64;
@@ -170,18 +276,13 @@ impl ExecutionBackend for SimBackend {
         for r in requests {
             let t = r.seq_len.min(self.seq_limit) as u64;
             tokens += t;
-            let base = self.per_token.scaled(t, 1);
             let adapter_ops = if self.routes_adapter(r.adapter) {
                 adapter_tokens += t;
                 self.adapter_macs_per_token * t
             } else {
                 0
             };
-            activity.push(ReqActivity {
-                base_mults: base.mults,
-                base_reuses: base.rc_hits,
-                adapter_ops,
-            });
+            activity.push(self.base_activity(t, adapter_ops));
         }
         let exec_s = self.cost.sim_time_s(tokens) + self.cost.adapter_time_s(adapter_tokens);
         if self.paced {
@@ -190,6 +291,8 @@ impl ExecutionBackend for SimBackend {
         Ok(BatchOutcome {
             logits: vec![Vec::new(); requests.len()],
             exec_s,
+            // Cycle-taxonomy counters stay the monolithic-equivalent work
+            // curve (per-shard splits live in `activity.per_shard`).
             stats: self.per_token.scaled(tokens, 1),
             activity,
         })
@@ -230,11 +333,7 @@ impl ExecutionBackend for SimBackend {
                 token,
                 exec_s,
                 stats: base,
-                activity: ReqActivity {
-                    base_mults: base.mults,
-                    base_reuses: base.rc_hits,
-                    adapter_ops,
-                },
+                activity: self.base_activity(prompt_len as u64, adapter_ops),
             },
         ))
     }
@@ -265,11 +364,8 @@ impl ExecutionBackend for SimBackend {
             token,
             exec_s,
             stats: base,
-            activity: ReqActivity {
-                base_mults: base.mults,
-                base_reuses: base.rc_hits,
-                adapter_ops: if routed { self.adapter_macs_per_token } else { 0 },
-            },
+            activity: self
+                .base_activity(1, if routed { self.adapter_macs_per_token } else { 0 }),
         })
     }
 }
@@ -411,6 +507,57 @@ mod tests {
         let os = b.run_batch(&[stranger]).unwrap();
         assert_eq!(os.activity[0].adapter_ops, 0);
         assert_eq!(b.adapter_misses(), 1);
+    }
+
+    #[test]
+    fn sharded_sim_reports_per_shard_reuse_and_collective_costs() {
+        let mono = SimBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper()).unwrap();
+        let b = SimBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper())
+            .unwrap()
+            .with_shards(4);
+        assert_eq!(b.shard_count(), 4);
+        assert_eq!(b.cost().shards, 4);
+        assert!(b.cost().gather_bytes_per_token > 0.0);
+        let reqs: Vec<Request> = (0..4).map(|i| req(i, 32)).collect();
+        let om = mono.run_batch(&reqs).unwrap();
+        let os = b.run_batch(&reqs).unwrap();
+        // Sharded compute divides by N; the collective term is far below
+        // the tiny model's 128-token batch compute, so the batch is
+        // strictly faster end to end.
+        assert!(os.exec_s < om.exec_s, "{} vs {}", os.exec_s, om.exec_s);
+        // …but sub-linearly: the all-gather does not shard away.
+        assert!(os.exec_s > om.exec_s / 4.0);
+        // Per-shard split reported and sum-consistent with the totals.
+        for a in &os.activity {
+            assert_eq!(a.per_shard.len(), 4);
+            let ops: u64 = a.per_shard.iter().map(|s| s.ops()).sum();
+            assert_eq!(ops, a.base_mults + a.base_reuses);
+            assert!(a.per_shard.iter().all(|s| s.ops() > 0));
+            // Independent per-shard caches: each shard's hit rate sits at
+            // or below the monolithic rate.
+            let mono_rate = om.activity[0].base_reuse_rate();
+            for s in &a.per_shard {
+                assert!(
+                    s.reuse_rate() <= mono_rate + 1e-9,
+                    "shard rate {} above monolithic {}",
+                    s.reuse_rate(),
+                    mono_rate
+                );
+            }
+        }
+        // Monolithic runs report no shard dimension.
+        assert!(om.activity.iter().all(|a| a.per_shard.is_empty()));
+        // The speedup curve is >1 and sub-linear at n=4, exactly 1 at n=1.
+        assert_eq!(mono.cost().shard_speedup(128), 1.0);
+        let s4 = b.cost().shard_speedup(128);
+        assert!(s4 > 1.0 && s4 < 4.0, "speedup {s4}");
+        // Decode sessions carry the shard split per step.
+        let (mut kv, first) = b.prefill(&req(0, 16), 2).unwrap();
+        assert_eq!(first.activity.per_shard.len(), 4);
+        let step = b.decode_step(&mut kv).unwrap();
+        assert_eq!(step.activity.per_shard.len(), 4);
+        let ops: u64 = step.activity.per_shard.iter().map(|s| s.ops()).sum();
+        assert_eq!(ops, step.activity.base_mults + step.activity.base_reuses);
     }
 
     #[test]

@@ -341,6 +341,39 @@ mod tests {
     }
 
     #[test]
+    fn poll_closes_exactly_at_the_deadline_boundary() {
+        // Edge pin for the sharded live path: the closure rule is
+        // `now >= deadline`, so a poll landing EXACTLY on the deadline
+        // instant must close the batch (and stamp it at the deadline) —
+        // an exclusive comparison would leave the batch pending until
+        // the next wake-up, adding a full scheduling quantum of latency.
+        let mut b = BatchScheduler::new(BatchPolicy {
+            max_batch: 8,
+            max_wait_s: 0.05,
+        });
+        b.offer(req(0, 1.0));
+        let deadline = b.deadline_s().unwrap();
+        assert!((deadline - 1.05).abs() < 1e-12);
+        // One tick before the boundary: still pending.
+        assert!(b.poll(deadline - 1e-12).is_none());
+        assert_eq!(b.pending(), 1);
+        // Exactly at the boundary: closes, stamped at the deadline.
+        let batch = b.poll(deadline).expect("now == deadline must close");
+        assert!((batch.dispatch_s - deadline).abs() < 1e-12);
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(b.pending(), 0);
+        // max_wait_s = 0: the deadline IS the arrival; an immediate poll
+        // at the arrival instant closes the singleton.
+        let mut zero = BatchScheduler::new(BatchPolicy {
+            max_batch: 8,
+            max_wait_s: 0.0,
+        });
+        zero.offer(req(1, 2.0));
+        let batch = zero.poll(2.0).expect("zero-wait deadline closes at arrival");
+        assert!((batch.dispatch_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn take_ready_is_fifo_by_arrival_and_bounded() {
         let mut b = BatchScheduler::new(BatchPolicy {
             max_batch: 64,

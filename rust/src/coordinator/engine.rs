@@ -17,7 +17,7 @@
 //!   `benches/decode_serve.rs` can measure what continuous batching
 //!   buys.
 
-use crate::backend::{ExecutionBackend, KvHandle, PjrtBackend, ReqActivity};
+use crate::backend::{ExecutionBackend, KvHandle, PjrtBackend, ReqActivity, ShardActivity};
 pub use crate::backend::CostModel;
 use crate::config::AcceleratorConfig;
 use crate::coordinator::batcher::{Batch, BatchPolicy, BatchScheduler, DynamicBatcher};
@@ -74,6 +74,11 @@ pub struct RequestResult {
     pub base_reuses: u64,
     /// Dense MACs on the adapter side pipeline (0 for base-only serving).
     pub adapter_ops: u64,
+    /// Per-shard split of the base-pipeline counters for tensor-parallel
+    /// serving (empty when the request executed monolithically; one
+    /// entry per shard — summing to `base_mults`/`base_reuses` —
+    /// otherwise).
+    pub per_shard: Vec<ShardActivity>,
 }
 
 /// The serving engine: a batching/attribution shell around any
@@ -162,6 +167,12 @@ impl<B: ExecutionBackend> Engine<B> {
                 req.arrival_s
             );
             let queue_wait_s = wait_s.max(0.0);
+            let ReqActivity {
+                base_mults,
+                base_reuses,
+                adapter_ops,
+                per_shard,
+            } = activity;
             out.push(RequestResult {
                 id: req.id,
                 logits,
@@ -178,9 +189,10 @@ impl<B: ExecutionBackend> Engine<B> {
                 ttft_s: queue_wait_s + exec_s,
                 tpot_s: 0.0,
                 adapter: if routed { req.adapter } else { None },
-                base_mults: activity.base_mults,
-                base_reuses: activity.base_reuses,
-                adapter_ops: activity.adapter_ops,
+                base_mults,
+                base_reuses,
+                adapter_ops,
+                per_shard,
             });
         }
         Ok(out)
@@ -497,6 +509,12 @@ impl DecodeSession {
         } else {
             0.0
         };
+        let ReqActivity {
+            base_mults,
+            base_reuses,
+            adapter_ops,
+            per_shard,
+        } = self.activity;
         RequestResult {
             id: self.kv.id,
             adapter: self.kv.adapter,
@@ -512,9 +530,10 @@ impl DecodeSession {
             gen_tokens: gen,
             ttft_s: (ttft_abs - self.arrival_s).max(0.0),
             tpot_s,
-            base_mults: self.activity.base_mults,
-            base_reuses: self.activity.base_reuses,
-            adapter_ops: self.activity.adapter_ops,
+            base_mults,
+            base_reuses,
+            adapter_ops,
+            per_shard,
         }
     }
 }
@@ -599,6 +618,53 @@ mod tests {
         // Rank scales the dense side pipe linearly.
         let wide = cm.with_adapter_regime(&ModelConfig::tiny(), AcceleratorConfig::paper(), 32);
         assert!(wide.adapter_cycles_per_token > with.adapter_cycles_per_token);
+    }
+
+    #[test]
+    fn shard_regime_divides_compute_and_charges_the_collective() {
+        let model = Model::new(ModelConfig::tiny(), 3);
+        let cm = CostModel::from_sim(&model, AcceleratorConfig::paper());
+        // Monolithic: no collective, speedup exactly 1.
+        assert_eq!(cm.shards, 1);
+        assert_eq!(cm.allreduce_time_s(1e6, 1), 0.0);
+        assert_eq!(cm.shard_speedup(100), 1.0);
+        let sh = cm.with_shard_regime(&ModelConfig::tiny(), 4);
+        assert_eq!(sh.shards, 4);
+        assert!(sh.gather_bytes_per_token > 0.0);
+        // Compute divides by N; the collective term keeps the total above
+        // compute/N but (for a real token batch) below the monolithic
+        // time → sub-linear speedup in (1, N).
+        let tokens = 128;
+        let mono = cm.sim_time_s(tokens);
+        let sharded = sh.sim_time_s(tokens);
+        assert!(sharded > mono / 4.0, "{sharded} vs mono/4 {}", mono / 4.0);
+        assert!(sharded < mono, "{sharded} vs mono {mono}");
+        let s = sh.shard_speedup(tokens);
+        assert!(s > 1.0 && s < 4.0, "speedup {s}");
+        // Zero-token passes pay nothing, sharded or not.
+        assert_eq!(sh.sim_time_s(0), 0.0);
+        assert_eq!(sh.iteration_time_s(0, &[]), 0.0);
+        // Iteration and step times stay shard-consistent: a sharded
+        // iteration with a meaningful token batch is cheaper than the
+        // monolithic one at equal work (tiny single-token iterations can
+        // legitimately lose to the collective latency — decode is
+        // latency-bound under tensor parallelism).
+        let ctxs = [16u64; 8];
+        assert!(sh.iteration_time_s(16, &ctxs) < cm.iteration_time_s(16, &ctxs));
+        // Single-token decode steps are collective-latency-bound: still
+        // charged honestly (compute/N + one token's gather).
+        let step_mono = cm.decode_step_time_s(16);
+        let step_sh = sh.decode_step_time_s(16);
+        assert!(step_sh > step_mono / 4.0);
+        // The base and adapter regimes are untouched by sharding.
+        assert_eq!(sh.cycles_per_token_ax, cm.cycles_per_token_ax);
+        assert_eq!(sh.reuse_rate, cm.reuse_rate);
+        // More shards gather over more hops: collective cost grows.
+        let sh8 = cm.with_shard_regime(&ModelConfig::tiny(), 8);
+        assert!(
+            sh8.allreduce_time_s(1024.0, 8) > sh.allreduce_time_s(1024.0, 4),
+            "latency term must grow with the ring"
+        );
     }
 
     #[test]

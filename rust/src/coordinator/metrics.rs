@@ -25,12 +25,20 @@ pub struct LatencyStats {
 }
 
 impl LatencyStats {
-    /// Compute from raw samples (unordered).
+    /// Compute from raw samples (unordered). Non-finite samples (NaN —
+    /// the signature of an upstream zero-span division or clock bug —
+    /// or ±∞) are dropped before aggregation: they carry no latency
+    /// information, and a single NaN must never panic the summary or
+    /// poison every percentile. `count` reports the finite samples
+    /// actually aggregated.
     pub fn from_samples(mut samples: Vec<f64>) -> LatencyStats {
+        samples.retain(|v| v.is_finite());
         if samples.is_empty() {
             return LatencyStats::default();
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp, not partial_cmp().unwrap(): the comparison itself
+        // must be total even if the finite filter above ever changes.
+        samples.sort_by(f64::total_cmp);
         let n = samples.len();
         // Nearest-rank percentile: the smallest sample such that at least
         // p·n samples are ≤ it, i.e. 1-indexed rank ⌈n·p⌉. The previous
@@ -76,6 +84,24 @@ pub struct AdapterUsage {
     pub base_reuse_rate: f64,
 }
 
+/// One row of the per-shard serving rollup: how one tensor-parallel
+/// shard's Result Cache fared over the run. Per-shard hit rates sit at
+/// or near — never meaningfully above — the monolithic rate, because
+/// each shard's independent cache sees only a column slice of every
+/// weight matrix; the element counts still partition exactly
+/// (`Σ_s (base_mults + base_reuses)` equals the run's total base ops).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ShardUsage {
+    /// Shard index within the shard group.
+    pub shard: usize,
+    /// Base-pipeline multiplications this shard performed.
+    pub base_mults: u64,
+    /// Base-pipeline reuses this shard's Result Cache served.
+    pub base_reuses: u64,
+    /// This shard's measured reuse rate (0 when the shard did no work).
+    pub reuse_rate: f64,
+}
+
 /// End-of-run summary for a served trace.
 #[derive(Clone, Debug, Default)]
 pub struct ServeSummary {
@@ -117,6 +143,9 @@ pub struct ServeSummary {
     /// ascending adapter id. Empty for an empty result set; a single
     /// `None` entry for an adapter-free run.
     pub by_adapter: Vec<AdapterUsage>,
+    /// Per-shard rollup for tensor-parallel runs, ascending shard index.
+    /// Empty when every request executed monolithically.
+    pub per_shard: Vec<ShardUsage>,
 }
 
 impl ServeSummary {
@@ -125,9 +154,11 @@ impl ServeSummary {
     /// drivers), so both report identical metrics for identical results.
     ///
     /// The span runs from the earliest arrival (`dispatch - queue_wait`)
-    /// to the latest completion (`dispatch + exec`). An empty result set
-    /// is well-defined: zero counts, default (all-zero) latency stats,
-    /// and zero — never NaN or infinite — throughputs.
+    /// to the latest completion (`dispatch + exec`). Degenerate spans are
+    /// well-defined: an empty result set, a run whose results all land
+    /// in one instant (single fully-cached request), or non-finite
+    /// stamps all report `span_s = 0` and **zero** throughputs — never
+    /// NaN, never infinity, never a panic.
     pub fn from_results(
         results: &[RequestResult],
         batches: usize,
@@ -152,11 +183,17 @@ impl ServeSummary {
             .iter()
             .map(|r| r.dispatch_s + r.exec_s)
             .fold(f64::NEG_INFINITY, f64::max);
-        let span_s = if results.is_empty() {
-            1e-9
+        // Zero/negative spans (all results in one instant) and non-finite
+        // spans (empty runs, NaN stamps) cannot support a rate: report a
+        // zero span and let `rate` pin every throughput to 0 instead of
+        // letting a division manufacture inf/NaN.
+        let raw_span = last_completion - first_arrival;
+        let span_s = if raw_span.is_finite() && raw_span > 0.0 {
+            raw_span
         } else {
-            (last_completion - first_arrival).max(1e-9)
+            0.0
         };
+        let rate = |x: f64| if span_s > 0.0 { x / span_s } else { 0.0 };
         // Per-adapter rollup: group results by the adapter they were
         // actually served with, base-only (`None`) first.
         let mut groups: Vec<Option<AdapterId>> = results.iter().map(|r| r.adapter).collect();
@@ -176,12 +213,37 @@ impl ServeSummary {
                     requests: rs.len(),
                     tokens,
                     gen_tokens: rs.iter().map(|r| r.gen_tokens).sum(),
-                    throughput_tps: tokens as f64 / span_s,
+                    throughput_tps: rate(tokens as f64),
                     adapter_ops: rs.iter().map(|r| r.adapter_ops).sum(),
                     base_reuse_rate: if base_ops == 0 {
                         0.0
                     } else {
                         base_reuses as f64 / base_ops as f64
+                    },
+                }
+            })
+            .collect();
+        // Per-shard rollup: sum each shard's counters across every
+        // sharded result (monolithic results contribute nothing).
+        let shard_n = results.iter().map(|r| r.per_shard.len()).max().unwrap_or(0);
+        let per_shard = (0..shard_n)
+            .map(|s| {
+                let (base_mults, base_reuses) =
+                    results.iter().fold((0u64, 0u64), |(m, ru), r| {
+                        match r.per_shard.get(s) {
+                            Some(a) => (m + a.base_mults, ru + a.base_reuses),
+                            None => (m, ru),
+                        }
+                    });
+                let ops = base_mults + base_reuses;
+                ShardUsage {
+                    shard: s,
+                    base_mults,
+                    base_reuses,
+                    reuse_rate: if ops == 0 {
+                        0.0
+                    } else {
+                        base_reuses as f64 / ops as f64
                     },
                 }
             })
@@ -195,14 +257,15 @@ impl ServeSummary {
             latency,
             ttft,
             tpot,
-            throughput_rps: results.len() as f64 / span_s,
-            throughput_tps: tokens as f64 / span_s,
+            throughput_rps: rate(results.len() as f64),
+            throughput_tps: rate(tokens as f64),
             sim_cycles: results.iter().map(|r| r.sim_cycles).sum(),
             sim_reuse_rate: cost.reuse_rate,
             sim_energy_j: results.iter().map(|r| r.sim_energy_j).sum(),
             sim_speedup: cost.speedup(),
             adapter_ops: results.iter().map(|r| r.adapter_ops).sum(),
             by_adapter,
+            per_shard,
         }
     }
 }
@@ -223,6 +286,11 @@ mod tests {
             attn_energy_pj_per_ctx_token: 0.1,
             adapter_cycles_per_token: 10.0,
             adapter_energy_pj_per_token: 0.2,
+            shards: 1,
+            gather_bytes_per_token: 0.0,
+            shard_collectives: 0.0,
+            link_bytes_per_s: crate::backend::SHARD_LINK_BYTES_PER_S,
+            link_latency_s: crate::backend::SHARD_LINK_LATENCY_S,
         }
     }
 
@@ -246,6 +314,7 @@ mod tests {
             base_mults: 30 * tokens,
             base_reuses: 70 * tokens,
             adapter_ops: if adapter.is_some() { 10 * tokens } else { 0 },
+            per_shard: Vec::new(),
         }
     }
 
@@ -347,7 +416,10 @@ mod tests {
         assert_eq!(s.latency, LatencyStats::default());
         assert_eq!(s.ttft, LatencyStats::default());
         assert_eq!(s.tpot, LatencyStats::default());
-        assert!(s.span_s > 0.0 && s.span_s.is_finite(), "span {}", s.span_s);
+        // A run with no completions has no span — and, crucially, no
+        // fabricated throughputs.
+        assert_eq!(s.span_s, 0.0);
+        assert!(s.span_s.is_finite());
         assert_eq!(s.throughput_rps, 0.0);
         assert_eq!(s.throughput_tps, 0.0);
         assert!(s.throughput_rps.is_finite() && s.throughput_tps.is_finite());
@@ -356,9 +428,110 @@ mod tests {
         // Cost-model-derived rates pass through unchanged.
         assert!((s.sim_speedup - 3.0).abs() < 1e-12);
         assert!((s.sim_reuse_rate - 0.7).abs() < 1e-12);
-        // The adapter rollup of an empty run is empty, never a panic.
+        // The adapter and shard rollups of an empty run are empty,
+        // never a panic.
         assert_eq!(s.adapter_ops, 0);
         assert!(s.by_adapter.is_empty());
+        assert!(s.per_shard.is_empty());
+    }
+
+    #[test]
+    fn nan_latency_samples_never_panic_the_summary() {
+        // Regression: the sort used partial_cmp().unwrap(), so one NaN
+        // sample — e.g. a zero-span division feeding back through a
+        // summary — panicked the whole serve report. Non-finite samples
+        // are now dropped and the comparison is total.
+        let l = LatencyStats::from_samples(vec![0.2, f64::NAN, 0.1, f64::INFINITY, 0.3]);
+        assert_eq!(l.count, 3, "only the finite samples aggregate");
+        assert!((l.mean_s - 0.2).abs() < 1e-12);
+        assert!((l.p50_s - 0.2).abs() < 1e-12);
+        assert!((l.max_s - 0.3).abs() < 1e-12);
+        assert!(
+            [l.mean_s, l.p50_s, l.p95_s, l.p99_s, l.max_s]
+                .iter()
+                .all(|v| v.is_finite()),
+            "no NaN may survive into the stats"
+        );
+        // All-NaN degrades to the empty distribution, not a panic.
+        assert_eq!(
+            LatencyStats::from_samples(vec![f64::NAN, f64::NAN]),
+            LatencyStats::default()
+        );
+    }
+
+    #[test]
+    fn single_instant_run_reports_zero_not_infinite_throughput() {
+        // Regression: a trace whose results all land in one instant
+        // (single fully-cached request: zero queue wait, zero exec) used
+        // to divide by a zero-width span. The throughputs must come out
+        // zero and finite — in the summary and in every rollup ratio.
+        let cost = test_cost();
+        let mut r = result(0, Some(1), 10);
+        r.exec_s = 0.0;
+        r.latency_s = 0.0;
+        r.ttft_s = 0.0;
+        let s = ServeSummary::from_results(&[r], 1, &cost);
+        assert_eq!(s.span_s, 0.0);
+        assert_eq!(s.throughput_rps, 0.0);
+        assert_eq!(s.throughput_tps, 0.0);
+        assert!(s.throughput_rps.is_finite() && s.throughput_tps.is_finite());
+        assert_eq!(s.by_adapter.len(), 1);
+        assert_eq!(s.by_adapter[0].throughput_tps, 0.0);
+        assert!(s.by_adapter[0].base_reuse_rate.is_finite());
+        // Counts and attribution still report: only the rates zero out.
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.tokens, 10);
+    }
+
+    #[test]
+    fn per_shard_rollup_sums_and_stays_sum_consistent() {
+        use crate::backend::ShardActivity;
+        let cost = test_cost();
+        let mut a = result(0, None, 10);
+        a.per_shard = vec![
+            ShardActivity {
+                base_mults: 200,
+                base_reuses: 300,
+            },
+            ShardActivity {
+                base_mults: 100,
+                base_reuses: 400,
+            },
+        ];
+        a.base_mults = 300;
+        a.base_reuses = 700;
+        let mut b = result(1, None, 10);
+        b.per_shard = vec![
+            ShardActivity {
+                base_mults: 50,
+                base_reuses: 150,
+            },
+            ShardActivity {
+                base_mults: 60,
+                base_reuses: 140,
+            },
+        ];
+        b.base_mults = 110;
+        b.base_reuses = 290;
+        let s = ServeSummary::from_results(&[a, b], 1, &cost);
+        assert_eq!(s.per_shard.len(), 2);
+        assert_eq!(s.per_shard[0].shard, 0);
+        assert_eq!(s.per_shard[1].shard, 1);
+        assert_eq!(s.per_shard[0].base_mults, 250);
+        assert_eq!(s.per_shard[0].base_reuses, 450);
+        assert_eq!(s.per_shard[1].base_mults, 160);
+        assert_eq!(s.per_shard[1].base_reuses, 540);
+        // Sum-consistency: shard ops partition the run's base ops.
+        let shard_ops: u64 = s
+            .per_shard
+            .iter()
+            .map(|g| g.base_mults + g.base_reuses)
+            .sum();
+        assert_eq!(shard_ops, 300 + 700 + 110 + 290);
+        assert!((s.per_shard[0].reuse_rate - 450.0 / 700.0).abs() < 1e-12);
+        // Monolithic-only runs roll up no shard dimension.
+        let mono = ServeSummary::from_results(&[result(2, None, 5)], 1, &cost);
+        assert!(mono.per_shard.is_empty());
     }
 
     #[test]

@@ -45,5 +45,5 @@ pub mod server;
 
 pub use batcher::{Batch, BatchPolicy, BatchScheduler, DynamicBatcher};
 pub use engine::{CostModel, Engine, RequestResult};
-pub use metrics::{AdapterUsage, LatencyStats, ServeSummary};
+pub use metrics::{AdapterUsage, LatencyStats, ServeSummary, ShardUsage};
 pub use server::{DecodeOpts, LiveRun, Server, ServerPool, ServerStats};

@@ -31,6 +31,16 @@
 //! [`ServerPool`] ([`Server::start_pool`]) scales the same front-end
 //! across N replica workers — each with its own engine — using
 //! least-loaded dispatch with a round-robin tie-break.
+//!
+//! **A shard group is one logical replica.** Tensor-parallel sharding
+//! lives *inside* the backend (`with_shards(n)` splits every projection
+//! across n per-shard Result Caches and charges the collective regime),
+//! so the pool keeps dispatching whole requests to replicas — never to
+//! raw shards: one replica = one shard group that answers the request
+//! end to end. Shard capability misses (a shard-unaware backend serving
+//! monolithically) are published per worker in
+//! [`ServerStats::shard_misses`] and aggregated into
+//! [`LiveRun::shard_misses`], mirroring the adapter-miss channel.
 
 use crate::backend::{CostModel, ExecutionBackend, PjrtBackend};
 use crate::config::AcceleratorConfig;
@@ -103,6 +113,11 @@ pub struct ServerStats {
     /// after every dispatch/iteration so the front-end can report silent
     /// fallbacks without reaching into the worker-owned engine).
     pub adapter_misses: AtomicUsize,
+    /// Requests the worker's backend served monolithically despite a
+    /// sharded deployment ask (mirrors
+    /// [`crate::backend::ExecutionBackend::shard_misses`]; published on
+    /// the same schedule as `adapter_misses`).
+    pub shard_misses: AtomicUsize,
 }
 
 impl ServerStats {
@@ -313,6 +328,10 @@ pub struct LiveRun {
     /// Adapter requests served base-only across all replicas (a non-zero
     /// value means some tenants were silently downgraded — report it).
     pub adapter_misses: u64,
+    /// Requests served monolithically despite a sharded deployment ask,
+    /// across all replicas (non-zero means the backend cannot shard —
+    /// report the downgrade).
+    pub shard_misses: u64,
 }
 
 impl<B: ExecutionBackend + 'static> ServerPool<B> {
@@ -337,6 +356,7 @@ impl<B: ExecutionBackend + 'static> ServerPool<B> {
         let batches = self.batches();
         let replica_stats = self.replica_stats();
         let adapter_misses = self.adapter_misses();
+        let shard_misses = self.shard_misses();
         let stopped = self.shutdown();
         if let Err(worker_err) = stopped {
             return Err(worker_err);
@@ -348,6 +368,7 @@ impl<B: ExecutionBackend + 'static> ServerPool<B> {
             results,
             replica_stats,
             adapter_misses,
+            shard_misses,
         })
     }
 
@@ -409,6 +430,15 @@ impl<B: ExecutionBackend + 'static> ServerPool<B> {
         self.replicas
             .iter()
             .map(|s| s.stats().adapter_misses.load(Ordering::Relaxed) as u64)
+            .sum()
+    }
+
+    /// Requests served monolithically despite a sharded deployment ask,
+    /// across all replicas (as last published by each worker).
+    pub fn shard_misses(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|s| s.stats().shard_misses.load(Ordering::Relaxed) as u64)
             .sum()
     }
 
@@ -480,6 +510,9 @@ fn dispatch<B: ExecutionBackend>(
     stats
         .adapter_misses
         .store(engine.backend.adapter_misses() as usize, Ordering::Relaxed);
+    stats
+        .shard_misses
+        .store(engine.backend.shard_misses() as usize, Ordering::Relaxed);
     for res in results {
         let (queued_id, tx) = waiters
             .pop_front()
@@ -712,11 +745,14 @@ where
                 std::thread::sleep(Duration::from_secs_f64(iter_s));
             }
         }
-        // 5. Publish the backend's miss counter and retire finished
+        // 5. Publish the backend's miss counters and retire finished
         //    sessions, answering their waiters.
         stats
             .adapter_misses
             .store(engine.backend.adapter_misses() as usize, Ordering::Relaxed);
+        stats
+            .shard_misses
+            .store(engine.backend.shard_misses() as usize, Ordering::Relaxed);
         let now = epoch.elapsed().as_secs_f64();
         let mut i = 0;
         while i < active.len() {

@@ -8,7 +8,7 @@
 //! in the integration tests.
 
 use crate::config::ModelConfig;
-use crate::exec::{reuse_matmul_chunked, ExecStats};
+use crate::exec::{reuse_matmul_chunked, sharded_reuse_matmul_chunked, ExecStats};
 use crate::model::LayerWeights;
 use crate::model::MatKind;
 use crate::quant::{QuantMatrix, QuantParams};
@@ -115,6 +115,72 @@ pub fn qmatmul_rowwise(
     y
 }
 
+/// Column-sharded [`qmatmul`]: identical block-grid quantization and
+/// bit-identical output, with each shard's Result-Cache accounting kept
+/// separately in `per_shard` (one entry per shard) and the total in
+/// `stats` — the tensor-parallel serving path of the reuse datapath.
+pub fn qmatmul_sharded(
+    x: &[f32],
+    seq: usize,
+    w: &QuantMatrix,
+    chunk: usize,
+    shards: usize,
+    per_shard: &mut [ExecStats],
+    stats: &mut ExecStats,
+) -> Vec<f32> {
+    let d = w.rows;
+    assert_eq!(x.len(), seq * d);
+    assert_eq!(per_shard.len(), shards.max(1));
+    let xq_params = QuantParams::fit(x, 8);
+    let mut y = vec![0f32; seq * w.cols];
+    let scale = xq_params.scale * w.params.scale;
+    for s in 0..seq {
+        let row = &x[s * d..(s + 1) * d];
+        let xq: Vec<i8> = row.iter().map(|&v| xq_params.quantize(v)).collect();
+        let (yq, per) = sharded_reuse_matmul_chunked(&xq, w, chunk, shards);
+        for (acc, st) in per_shard.iter_mut().zip(&per) {
+            acc.add(st);
+            stats.add(st);
+        }
+        for (yj, &v) in y[s * w.cols..(s + 1) * w.cols].iter_mut().zip(&yq) {
+            *yj = v as f32 * scale;
+        }
+    }
+    y
+}
+
+/// Column-sharded [`qmatmul_rowwise`]: identical per-row quantization and
+/// bit-identical output, with per-shard Result-Cache accounting (see
+/// [`qmatmul_sharded`]). This is the kernel KV-cached decode shards with.
+pub fn qmatmul_rowwise_sharded(
+    x: &[f32],
+    seq: usize,
+    w: &QuantMatrix,
+    chunk: usize,
+    shards: usize,
+    per_shard: &mut [ExecStats],
+    stats: &mut ExecStats,
+) -> Vec<f32> {
+    let d = w.rows;
+    assert_eq!(x.len(), seq * d);
+    assert_eq!(per_shard.len(), shards.max(1));
+    let mut y = vec![0f32; seq * w.cols];
+    for s in 0..seq {
+        let row = &x[s * d..(s + 1) * d];
+        let (xq, xq_params) = quantize_row(row);
+        let scale = xq_params.scale * w.params.scale;
+        let (yq, per) = sharded_reuse_matmul_chunked(&xq, w, chunk, shards);
+        for (acc, st) in per_shard.iter_mut().zip(&per) {
+            acc.add(st);
+            stats.add(st);
+        }
+        for (yj, &v) in y[s * w.cols..(s + 1) * w.cols].iter_mut().zip(&yq) {
+            *yj = v as f32 * scale;
+        }
+    }
+    y
+}
+
 /// One layer's K/V cache for causal autoregressive decode: the keys and
 /// values of every position processed so far, `len × d_model` row-major.
 #[derive(Clone, Debug, Default)]
@@ -149,8 +215,15 @@ pub struct LayerExec<'a> {
     pub weights: &'a LayerWeights,
     /// RC chunk bound (W_buff size).
     pub chunk: usize,
-    /// Reuse counters accumulated across forward passes.
+    /// Reuse counters accumulated across forward passes (total over all
+    /// shards when sharded).
     pub stats: ExecStats,
+    /// Tensor-parallel shards every weight matmul splits across (1 =
+    /// monolithic execution).
+    shards: usize,
+    /// Per-shard reuse counters (empty when unsharded; one entry per
+    /// shard otherwise — each shard owns an independent Result Cache).
+    pub shard_stats: Vec<ExecStats>,
 }
 
 impl<'a> LayerExec<'a> {
@@ -161,7 +234,23 @@ impl<'a> LayerExec<'a> {
             weights,
             chunk,
             stats: ExecStats::default(),
+            shards: 1,
+            shard_stats: Vec::new(),
         }
+    }
+
+    /// Split every weight matmul column-wise across `n` shards, each with
+    /// its own Result Cache. Outputs stay bit-identical (column sharding
+    /// is a scheduling transformation); [`LayerExec::shard_stats`] then
+    /// carries one counter record per shard.
+    pub fn with_shards(mut self, n: usize) -> Self {
+        self.shards = n.max(1);
+        self.shard_stats = if self.shards > 1 {
+            vec![ExecStats::default(); self.shards]
+        } else {
+            Vec::new()
+        };
+        self
     }
 
     /// Forward one sequence (`seq × d_model`, row-major) through
@@ -171,13 +260,26 @@ impl<'a> LayerExec<'a> {
         let h = self.cfg.n_heads;
         let dh = self.cfg.d_head();
         assert_eq!(x.len(), seq * d);
+        // Split borrows: the weight references must stay live across the
+        // stat-accumulating matmul closure.
+        let (chunk, shards) = (self.chunk, self.shards);
+        let weights = self.weights;
+        let stats = &mut self.stats;
+        let shard_stats = &mut self.shard_stats;
+        let mut qm = |x: &[f32], seq: usize, w: &QuantMatrix| {
+            if shards <= 1 {
+                qmatmul(x, seq, w, chunk, stats)
+            } else {
+                qmatmul_sharded(x, seq, w, chunk, shards, shard_stats, stats)
+            }
+        };
 
-        let wq = self.weights.get(MatKind::Wq);
-        let wk = self.weights.get(MatKind::Wk);
-        let wv = self.weights.get(MatKind::Wv);
-        let q = qmatmul(x, seq, wq, self.chunk, &mut self.stats);
-        let k = qmatmul(x, seq, wk, self.chunk, &mut self.stats);
-        let v = qmatmul(x, seq, wv, self.chunk, &mut self.stats);
+        let wq = weights.get(MatKind::Wq);
+        let wk = weights.get(MatKind::Wk);
+        let wv = weights.get(MatKind::Wv);
+        let q = qm(x, seq, wq);
+        let k = qm(x, seq, wk);
+        let v = qm(x, seq, wv);
 
         // Per-head scaled dot-product attention.
         let mut ctx = vec![0f32; seq * d];
@@ -205,21 +307,21 @@ impl<'a> LayerExec<'a> {
             }
         }
 
-        let wo = self.weights.get(MatKind::Wo);
-        let attn_out = qmatmul(&ctx, seq, wo, self.chunk, &mut self.stats);
+        let wo = weights.get(MatKind::Wo);
+        let attn_out = qm(&ctx, seq, wo);
 
         // Residual + LN.
         let mut h1: Vec<f32> = x.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
         layer_norm(&mut h1, seq, d);
 
         // FFN: relu(h1·W1)·W2.
-        let w1 = self.weights.get(MatKind::Ff1);
-        let w2 = self.weights.get(MatKind::Ff2);
-        let mut ff = qmatmul(&h1, seq, w1, self.chunk, &mut self.stats);
+        let w1 = weights.get(MatKind::Ff1);
+        let w2 = weights.get(MatKind::Ff2);
+        let mut ff = qm(&h1, seq, w1);
         for v in ff.iter_mut() {
             *v = v.max(0.0);
         }
-        let ff2 = qmatmul(&ff, seq, w2, self.chunk, &mut self.stats);
+        let ff2 = qm(&ff, seq, w2);
 
         let mut out: Vec<f32> = h1.iter().zip(&ff2).map(|(a, b)| a + b).collect();
         layer_norm(&mut out, seq, d);
@@ -243,13 +345,25 @@ impl<'a> LayerExec<'a> {
         let dh = self.cfg.d_head();
         assert_eq!(x_new.len(), n_new * d);
         let p0 = kv.len;
+        // Split borrows, as in [`LayerExec::forward`].
+        let (chunk, shards) = (self.chunk, self.shards);
+        let weights = self.weights;
+        let stats = &mut self.stats;
+        let shard_stats = &mut self.shard_stats;
+        let mut qm = |x: &[f32], seq: usize, w: &QuantMatrix| {
+            if shards <= 1 {
+                qmatmul_rowwise(x, seq, w, chunk, stats)
+            } else {
+                qmatmul_rowwise_sharded(x, seq, w, chunk, shards, shard_stats, stats)
+            }
+        };
 
-        let wq = self.weights.get(MatKind::Wq);
-        let wk = self.weights.get(MatKind::Wk);
-        let wv = self.weights.get(MatKind::Wv);
-        let q = qmatmul_rowwise(x_new, n_new, wq, self.chunk, &mut self.stats);
-        let k_new = qmatmul_rowwise(x_new, n_new, wk, self.chunk, &mut self.stats);
-        let v_new = qmatmul_rowwise(x_new, n_new, wv, self.chunk, &mut self.stats);
+        let wq = weights.get(MatKind::Wq);
+        let wk = weights.get(MatKind::Wk);
+        let wv = weights.get(MatKind::Wv);
+        let q = qm(x_new, n_new, wq);
+        let k_new = qm(x_new, n_new, wk);
+        let v_new = qm(x_new, n_new, wv);
         kv.k.extend_from_slice(&k_new);
         kv.v.extend_from_slice(&v_new);
         kv.len += n_new;
@@ -279,20 +393,20 @@ impl<'a> LayerExec<'a> {
             }
         }
 
-        let wo = self.weights.get(MatKind::Wo);
-        let attn_out = qmatmul_rowwise(&ctx, n_new, wo, self.chunk, &mut self.stats);
+        let wo = weights.get(MatKind::Wo);
+        let attn_out = qm(&ctx, n_new, wo);
 
         // Residual + LN, then the FFN — all row-local.
         let mut h1: Vec<f32> = x_new.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
         layer_norm(&mut h1, n_new, d);
 
-        let w1 = self.weights.get(MatKind::Ff1);
-        let w2 = self.weights.get(MatKind::Ff2);
-        let mut ff = qmatmul_rowwise(&h1, n_new, w1, self.chunk, &mut self.stats);
+        let w1 = weights.get(MatKind::Ff1);
+        let w2 = weights.get(MatKind::Ff2);
+        let mut ff = qm(&h1, n_new, w1);
         for v in ff.iter_mut() {
             *v = v.max(0.0);
         }
-        let ff2 = qmatmul_rowwise(&ff, n_new, w2, self.chunk, &mut self.stats);
+        let ff2 = qm(&ff, n_new, w2);
 
         let mut out: Vec<f32> = h1.iter().zip(&ff2).map(|(a, b)| a + b).collect();
         layer_norm(&mut out, n_new, d);
@@ -428,6 +542,37 @@ mod tests {
             assert_eq!(one[..], all[s * wq.cols..(s + 1) * wq.cols]);
         }
         assert!(stats.reuse_rate() > 0.2);
+    }
+
+    #[test]
+    fn sharded_layer_is_bit_identical_with_partitioned_accounting() {
+        // Column sharding is a scheduling transformation at the layer
+        // level too: outputs bit-identical on the block and causal paths,
+        // per-shard ops partitioning the monolithic element count.
+        let (cfg, w) = tiny();
+        let seq = 5;
+        let x = synth_embeddings(seq, cfg.d_model, 51);
+        for shards in [2usize, 4] {
+            let mut mono = LayerExec::new(&cfg, &w, 256);
+            let y_mono = mono.forward(&x, seq);
+            let mut sh = LayerExec::new(&cfg, &w, 256).with_shards(shards);
+            let y_sh = sh.forward(&x, seq);
+            assert_eq!(y_mono, y_sh, "shards={shards}");
+            assert_eq!(sh.shard_stats.len(), shards);
+            let ops: u64 = sh.shard_stats.iter().map(|s| s.mults + s.reuses).sum();
+            assert_eq!(ops, mono.stats.mults + mono.stats.reuses);
+            assert_eq!(ops, sh.stats.mults + sh.stats.reuses);
+            // Independent per-shard caches can only lose reuse.
+            assert!(sh.stats.mults >= mono.stats.mults, "shards={shards}");
+
+            let mut mono_c = LayerExec::new(&cfg, &w, 256);
+            let yc_mono = mono_c.forward_causal(&x, seq, &mut LayerKv::new());
+            let mut sh_c = LayerExec::new(&cfg, &w, 256).with_shards(shards);
+            let yc_sh = sh_c.forward_causal(&x, seq, &mut LayerKv::new());
+            assert_eq!(yc_mono, yc_sh, "causal shards={shards}");
+            let ops_c: u64 = sh_c.shard_stats.iter().map(|s| s.mults + s.reuses).sum();
+            assert_eq!(ops_c, mono_c.stats.mults + mono_c.stats.reuses);
+        }
     }
 
     #[test]

@@ -9,8 +9,10 @@
 //! approximation.
 
 pub mod layer;
+pub mod sharded;
 
 pub use layer::{qmatmul_rowwise, quantize_row, softmax_rows, LayerExec, LayerKv};
+pub use sharded::{shard_accounting, shard_ranges, sharded_reuse_matmul_chunked};
 
 use crate::model::LoraAdaptor;
 use crate::quant::{fold, QuantMatrix};
@@ -39,6 +41,25 @@ impl ExecStats {
             0.0
         } else {
             self.reuses as f64 / n as f64
+        }
+    }
+
+    /// Accumulate another counter record into this one.
+    pub fn add(&mut self, o: &ExecStats) {
+        self.mults += o.mults;
+        self.reuses += o.reuses;
+        self.adapter_mults += o.adapter_mults;
+    }
+
+    /// Scale all counters by `num/den` (row-sampled measurements
+    /// extrapolating to the full matrix, like
+    /// [`crate::sim::SimStats::scaled`]).
+    pub fn scaled(&self, num: u64, den: u64) -> ExecStats {
+        let s = |v: u64| (v as u128 * num as u128 / den.max(1) as u128) as u64;
+        ExecStats {
+            mults: s(self.mults),
+            reuses: s(self.reuses),
+            adapter_mults: s(self.adapter_mults),
         }
     }
 }

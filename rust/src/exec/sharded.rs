@@ -1,0 +1,299 @@
+//! Tensor-parallel (column-sharded) execution of the reuse datapath.
+//!
+//! Production deployments shard each weight matrix **column-wise** across
+//! `N` accelerator instances: shard `s` owns the contiguous column slice
+//! [`shard_ranges`]`(cols, N)[s]`, computes the partial result `x·W[:, s]`
+//! locally, and an all-gather stitches the slices back into the full
+//! output row. Because every output column `y[j] = Σ_i x[i]·W[i,j]`
+//! depends on no other column, column sharding is a pure scheduling
+//! transformation — [`sharded_reuse_matmul_chunked`] is bit-identical to
+//! the monolithic [`reuse_matmul_chunked`] for every shard count.
+//!
+//! What sharding *does* change is the reuse accounting: each shard owns
+//! an **independent Result Cache** ([`EpochTags`] per shard), so a folded
+//! weight value repeated across a shard boundary is a first occurrence on
+//! both sides. Shard chunk boundaries follow the **global** W_buff round
+//! grid (a shard streaming columns `[a, b)` takes its RC epochs at the
+//! same column multiples of `chunk` the monolithic accelerator would),
+//! so every shard chunk is the intersection of a monolithic chunk with
+//! the shard's slice — a strict refinement of the monolithic chunk
+//! partition. Two theorems follow, for every matrix shape:
+//!
+//! - `Σ_s (mults_s + reuses_s) == mults_mono + reuses_mono` (ops are
+//!   column-additive), and
+//! - `Σ_s mults_s ≥ mults_mono` (refining an RC chunk can only lose
+//!   reuse — were shard chunks instead restarted at each slice start, a
+//!   chunk straddling two monolithic chunks could *gain* reuse and the
+//!   comparison to the paper's Fig. 8 rates would be apples-to-oranges).
+//!
+//! This is the measurable interaction between quantization-locality reuse
+//! and tensor parallelism the shard-aware backends report per shard.
+
+use crate::exec::{EpochTags, ExecStats};
+use crate::quant::QuantMatrix;
+use std::ops::Range;
+
+/// Exact column partition: shard `s` of `n` owns
+/// `[s·cols/n, (s+1)·cols/n)`. Ranges are contiguous, disjoint, cover
+/// `0..cols`, and differ in width by at most one column; shards beyond
+/// the column count receive empty ranges.
+pub fn shard_ranges(cols: usize, shards: usize) -> Vec<Range<usize>> {
+    let n = shards.max(1);
+    (0..n)
+        .map(|s| (s * cols / n)..((s + 1) * cols / n))
+        .collect()
+}
+
+/// Column-sharded reuse-path execution of `y = x·W`: shard `s` runs the
+/// `chunk`-bounded Result-Cache datapath of
+/// [`reuse_matmul_chunked`](crate::exec::reuse_matmul_chunked) over its
+/// own column slice with its own [`EpochTags`] (an independent RC per
+/// shard), and the output concatenates the slices (the all-gather).
+///
+/// Returns the full output row — bit-identical to the monolithic kernel
+/// for any shard count, since output columns are independent and the
+/// per-column accumulation order over `i` is unchanged — plus one
+/// [`ExecStats`] per shard.
+pub fn sharded_reuse_matmul_chunked(
+    x: &[i8],
+    w: &QuantMatrix,
+    chunk: usize,
+    shards: usize,
+) -> (Vec<i32>, Vec<ExecStats>) {
+    assert_eq!(x.len(), w.rows);
+    assert!(chunk > 0);
+    let ranges = shard_ranges(w.cols, shards);
+    let mut y = vec![0i32; w.cols];
+    let mut per_shard = vec![ExecStats::default(); ranges.len()];
+    // One independent Result Cache (accounting tags) per shard.
+    let mut tags: Vec<EpochTags> = (0..ranges.len()).map(|_| EpochTags::new()).collect();
+    // Signed product table shared across shards: a value datapath detail
+    // only — each shard's *accounting* is fully independent.
+    let mut products = [0i32; 256];
+    for (i, &xi) in x.iter().enumerate() {
+        let xi = xi as i32;
+        for (off, p) in products.iter_mut().enumerate().take(255) {
+            *p = xi * (off as i32 - 127);
+        }
+        let row = w.row(i);
+        for (s, range) in ranges.iter().enumerate() {
+            let stats = &mut per_shard[s];
+            let mut col = range.start;
+            while col < range.end {
+                // Global-grid chunking: the next epoch boundary is the
+                // next multiple of `chunk`, not `col + chunk`, so shard
+                // chunks refine the monolithic chunk partition exactly
+                // (see the module docs for why this matters).
+                let end = ((col / chunk + 1) * chunk).min(range.end);
+                tags[s].next_epoch();
+                for (&wij, yj) in row[col..end].iter().zip(&mut y[col..end]) {
+                    *yj += products[(wij as i32 + 127) as u8 as usize];
+                }
+                let mut unique = 0u64;
+                for &wij in &row[col..end] {
+                    unique += tags[s].first_occurrence(wij.unsigned_abs()) as u64;
+                }
+                stats.mults += unique;
+                stats.reuses += (end - col) as u64 - unique;
+                col = end;
+            }
+        }
+    }
+    (y, per_shard)
+}
+
+/// Per-shard reuse accounting of one weight matrix, without executing any
+/// products: the mult/reuse split of the RC depends only on the weight
+/// codes, the chunk bound, and the shard boundaries — never on the input
+/// vector — so shard-aware cost models can measure per-shard hit rates by
+/// scanning a row sample.
+///
+/// Scans every row of `w` (callers pass a row-sampled prefix for
+/// Llama-scale matrices) and scales the counters to `full_rows`, matching
+/// the row-sampled extrapolation the cycle simulator uses.
+pub fn shard_accounting(
+    w: &QuantMatrix,
+    chunk: usize,
+    shards: usize,
+    full_rows: u64,
+) -> Vec<ExecStats> {
+    assert!(chunk > 0);
+    let ranges = shard_ranges(w.cols, shards);
+    let mut per_shard = vec![ExecStats::default(); ranges.len()];
+    let mut tags: Vec<EpochTags> = (0..ranges.len()).map(|_| EpochTags::new()).collect();
+    for i in 0..w.rows {
+        let row = w.row(i);
+        for (s, range) in ranges.iter().enumerate() {
+            let stats = &mut per_shard[s];
+            let mut col = range.start;
+            while col < range.end {
+                // Same global-grid chunking as the executing kernel.
+                let end = ((col / chunk + 1) * chunk).min(range.end);
+                tags[s].next_epoch();
+                let mut unique = 0u64;
+                for &wij in &row[col..end] {
+                    unique += tags[s].first_occurrence(wij.unsigned_abs()) as u64;
+                }
+                stats.mults += unique;
+                stats.reuses += (end - col) as u64 - unique;
+                col = end;
+            }
+        }
+    }
+    let sampled = w.rows.max(1) as u64;
+    per_shard
+        .into_iter()
+        .map(|s| s.scaled(full_rows.max(sampled), sampled))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{dense_matmul, reuse_matmul_chunked};
+    use crate::model::synth::{synthesize_matrix, WeightDistribution};
+    use crate::util::rng::Rng;
+
+    fn case(rows: usize, cols: usize, seed: u64) -> (Vec<i8>, QuantMatrix) {
+        let mut rng = Rng::new(seed);
+        let w = synthesize_matrix(rows, cols, WeightDistribution::default(), &mut rng);
+        let x: Vec<i8> = (0..rows)
+            .map(|_| rng.range_i64(-127, 127) as i8)
+            .collect();
+        (x, w)
+    }
+
+    #[test]
+    fn shard_ranges_partition_exactly() {
+        for (cols, n) in [(10, 3), (128, 4), (4, 8), (0, 2), (7, 1), (200, 7)] {
+            let rs = shard_ranges(cols, n);
+            assert_eq!(rs.len(), n.max(1));
+            let mut next = 0;
+            for r in &rs {
+                assert_eq!(r.start, next, "cols={cols} n={n}");
+                assert!(r.end >= r.start);
+                next = r.end;
+            }
+            assert_eq!(next, cols);
+            let widths: Vec<usize> = rs.iter().map(|r| r.end - r.start).collect();
+            let min = widths.iter().min().unwrap();
+            let max = widths.iter().max().unwrap();
+            assert!(max - min <= 1, "balanced split: {widths:?}");
+        }
+    }
+
+    #[test]
+    fn sharded_values_bit_identical_for_all_shard_counts() {
+        let (x, w) = case(32, 200, 3);
+        let dense = dense_matmul(&x, &w);
+        for shards in [1usize, 2, 3, 4, 8, 200, 500] {
+            for chunk in [7usize, 64, 200] {
+                let (y, per) = sharded_reuse_matmul_chunked(&x, &w, chunk, shards);
+                assert_eq!(y, dense, "shards={shards} chunk={chunk}");
+                assert_eq!(per.len(), shards);
+            }
+        }
+    }
+
+    #[test]
+    fn one_shard_matches_monolithic_stats_exactly() {
+        let (x, w) = case(16, 300, 9);
+        for chunk in [5usize, 64, 300] {
+            let (y_m, mono) = reuse_matmul_chunked(&x, &w, chunk);
+            let (y_s, per) = sharded_reuse_matmul_chunked(&x, &w, chunk, 1);
+            assert_eq!(y_s, y_m);
+            assert_eq!(per.len(), 1);
+            assert_eq!(per[0].mults, mono.mults, "chunk={chunk}");
+            assert_eq!(per[0].reuses, mono.reuses, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn per_shard_ops_partition_and_reuse_only_drops() {
+        let (x, w) = case(24, 512, 11);
+        let chunk = 256;
+        let (_, mono) = reuse_matmul_chunked(&x, &w, chunk);
+        for shards in [2usize, 4, 8] {
+            let (_, per) = sharded_reuse_matmul_chunked(&x, &w, chunk, shards);
+            let ops: u64 = per.iter().map(|s| s.mults + s.reuses).sum();
+            // Ops (elements) are column-additive: the shard split must
+            // partition the monolithic element count exactly.
+            assert_eq!(ops, mono.mults + mono.reuses, "shards={shards}");
+            // Independent per-shard caches can only lose reuse.
+            let mults: u64 = per.iter().map(|s| s.mults).sum();
+            assert!(mults >= mono.mults, "shards={shards}");
+            let reuses: u64 = per.iter().map(|s| s.reuses).sum();
+            assert!(reuses <= mono.reuses, "shards={shards}");
+            // Every non-empty shard did work.
+            assert!(per.iter().all(|s| s.mults + s.reuses > 0));
+        }
+    }
+
+    #[test]
+    fn misaligned_shard_boundaries_still_refine_the_chunk_grid() {
+        // Regression: with 600 columns, chunk 256, and 2 shards, shard 1
+        // starts at column 300 — off the chunk grid. Slice-local
+        // chunking would give it a [300, 556) chunk straddling the
+        // monolithic [256, 512)/[512, 600) boundary and could GAIN
+        // reuse; global-grid chunking must instead epoch at 512, keeping
+        // shard chunks a strict refinement of the monolithic partition
+        // so the "sharding only loses reuse" theorem holds on every
+        // shape, not just chunk-aligned ones.
+        let (x, w) = case(24, 600, 33);
+        let chunk = 256;
+        let (y_mono, mono) = reuse_matmul_chunked(&x, &w, chunk);
+        for shards in [2usize, 3, 4, 5] {
+            let (y, per) = sharded_reuse_matmul_chunked(&x, &w, chunk, shards);
+            assert_eq!(y, y_mono, "shards={shards}");
+            let ops: u64 = per.iter().map(|s| s.mults + s.reuses).sum();
+            assert_eq!(ops, mono.mults + mono.reuses, "shards={shards}");
+            let mults: u64 = per.iter().map(|s| s.mults).sum();
+            assert!(
+                mults >= mono.mults,
+                "shards={shards}: refined chunks must never gain reuse \
+                 ({mults} sharded mults < {} monolithic)",
+                mono.mults
+            );
+            // And the x-free accounting agrees on the same grid.
+            let scan = shard_accounting(&w, chunk, shards, w.rows as u64);
+            for (a, b) in per.iter().zip(&scan) {
+                assert_eq!(a.mults, b.mults, "shards={shards}");
+                assert_eq!(a.reuses, b.reuses, "shards={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_shards_beyond_column_count_count_nothing() {
+        let (x, w) = case(8, 3, 5);
+        let (y, per) = sharded_reuse_matmul_chunked(&x, &w, 64, 8);
+        assert_eq!(y, dense_matmul(&x, &w));
+        assert_eq!(per.len(), 8);
+        let ops: u64 = per.iter().map(|s| s.mults + s.reuses).sum();
+        assert_eq!(ops, 8 * 3);
+        assert!(per.iter().filter(|s| s.mults + s.reuses == 0).count() >= 5);
+    }
+
+    #[test]
+    fn accounting_matches_the_executing_kernel() {
+        // The x-free accounting scan must agree exactly with the
+        // executing kernel's counters (same rows, no scaling).
+        let (x, w) = case(20, 260, 17);
+        for shards in [1usize, 2, 4] {
+            let (_, per_exec) = sharded_reuse_matmul_chunked(&x, &w, 64, shards);
+            let per_scan = shard_accounting(&w, 64, shards, w.rows as u64);
+            for (a, b) in per_exec.iter().zip(&per_scan) {
+                assert_eq!(a.mults, b.mults, "shards={shards}");
+                assert_eq!(a.reuses, b.reuses, "shards={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn accounting_scales_to_full_rows() {
+        let (_, w) = case(16, 128, 21);
+        let per = shard_accounting(&w, 64, 2, (w.rows * 4) as u64);
+        let ops: u64 = per.iter().map(|s| s.mults + s.reuses).sum();
+        assert_eq!(ops, (16 * 128 * 4) as u64, "scaled to 4× the sampled rows");
+    }
+}

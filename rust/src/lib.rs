@@ -32,6 +32,10 @@
 //!   trait — batch prefill plus a session/step decode surface
 //!   (`prefill`/`decode_step` over KV-cached sessions) — so the serving
 //!   stack is generic over how a batch or a token actually runs.
+//!   Shard-aware: `with_shards(n)` splits every projection
+//!   tensor-parallel across `n` per-shard reuse caches (bit-identical
+//!   logits, measured per-shard reuse rates, all-gather collective in
+//!   the cost model).
 //! - [`coordinator`] — a serving layer (request queue, dynamic batcher,
 //!   backend-generic engine, token-level continuous batching for decode
 //!   with TTFT/TPOT metrics and a per-adapter rollup) that drives batched

@@ -12,7 +12,7 @@
 //!
 //! Argument parsing is hand-rolled (no clap offline); see `cli::Args`.
 
-use axllm::backend::{ExecutionBackend, FunctionalBackend, SimBackend};
+use axllm::backend::{ExecutionBackend, FunctionalBackend, PjrtBackend, SimBackend};
 use axllm::config::{table1_benchmarks, AcceleratorConfig, Dataset, ModelConfig};
 use axllm::coordinator::{BatchPolicy, Engine};
 use axllm::model::Model;
@@ -108,7 +108,7 @@ USAGE:
               [--rate R] [--dataset <agnews|yelp|squad|imdb>] [--batch B]
               [--max-wait-ms W] [--artifacts DIR] [--seed N]
               [--live] [--replicas N] [--decode] [--gen-tokens N]
-              [--adapters N] [--adapter-rank R]
+              [--adapters N] [--adapter-rank R] [--shards N]
       backends:
         sim         cycle/energy attribution only — no logits, no artifacts
         functional  bit-exact in-process reuse-datapath execution, no artifacts
@@ -126,6 +126,12 @@ USAGE:
       mixed freely within one continuous batch. The summary then splits
       base-vs-adapter work per tenant. sim/functional backends serve
       adapters for real; pjrt serves base-only and reports the misses.
+      --shards N executes every projection tensor-parallel across N
+      shards, each with its own reuse cache: functional logits stay
+      bit-identical, the sim cost model charges sliced compute plus the
+      all-gather collective, and the summary reports each shard's reuse
+      rate. A shard group is one logical replica (--replicas spreads
+      whole groups). pjrt is shard-unaware and reports the misses.
       examples:
         axllm serve --backend sim --requests 64 --model tiny
         axllm serve --backend functional --requests 16 --dataset squad
@@ -135,6 +141,8 @@ USAGE:
         axllm serve --decode --live --backend sim --requests 64
         axllm serve --decode --adapters 4 --backend functional
         axllm serve --decode --adapters 8 --adapter-rank 8 --backend sim
+        axllm serve --backend sim --shards 4 --requests 64
+        axllm serve --backend functional --decode --shards 2
   axllm info [--artifacts DIR]
 ";
 
@@ -285,6 +293,13 @@ fn print_cost(backend: &str, cost: &axllm::coordinator::CostModel) {
         cost.speedup(),
         cost.reuse_rate * 100.0
     );
+    if cost.shards > 1 {
+        println!(
+            "sharding: {} shards — modeled shard speedup {:.2}x on a 128-token pass",
+            cost.shards,
+            cost.shard_speedup(128)
+        );
+    }
 }
 
 fn print_summary(s: &axllm::coordinator::ServeSummary) {
@@ -313,6 +328,28 @@ fn print_summary(s: &axllm::coordinator::ServeSummary) {
             s.tpot.p50_s * 1e3,
             s.tpot.p95_s * 1e3
         );
+    }
+    // Per-shard rollup — present only for tensor-parallel runs.
+    if !s.per_shard.is_empty() {
+        let total_ops: u64 = s
+            .per_shard
+            .iter()
+            .map(|g| g.base_mults + g.base_reuses)
+            .sum();
+        println!(
+            "sharding: {} shards, {} base ops across the group",
+            s.per_shard.len(),
+            count(total_ops)
+        );
+        for g in &s.per_shard {
+            println!(
+                "  shard {}: reuse {:.1}% ({} mults, {} reuses)",
+                g.shard,
+                g.reuse_rate * 100.0,
+                count(g.base_mults),
+                count(g.base_reuses)
+            );
+        }
     }
     // Per-adapter rollup — only worth printing when the run actually
     // mixed serving dimensions (any adapter group, or side-pipe work).
@@ -358,6 +395,8 @@ struct ServeOpts {
     adapters: u32,
     /// Low-rank dimension of every served adapter.
     adapter_rank: usize,
+    /// Tensor-parallel shards per replica (1 = monolithic).
+    shards: usize,
 }
 
 impl ServeOpts {
@@ -391,6 +430,10 @@ fn run_serve<B: ExecutionBackend>(engine: &Engine<B>, opts: &ServeOpts) -> Resul
     let misses = engine.backend.adapter_misses();
     if misses > 0 {
         println!("adapter misses (served base-only): {misses}");
+    }
+    let shard_misses = engine.backend.shard_misses();
+    if shard_misses > 0 {
+        println!("shard misses (served monolithically): {shard_misses}");
     }
     Ok(())
 }
@@ -436,6 +479,9 @@ where
     if run.adapter_misses > 0 {
         println!("adapter misses (served base-only): {}", run.adapter_misses);
     }
+    if run.shard_misses > 0 {
+        println!("shard misses (served monolithically): {}", run.shard_misses);
+    }
     for (i, (b, r)) in run.replica_stats.iter().enumerate() {
         println!("replica {i}: {b} batches, {r} requests");
     }
@@ -461,9 +507,13 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
         gen_tokens: args.get("gen-tokens", 0u32)?,
         adapters: args.get("adapters", 0u32)?,
         adapter_rank: args.get("adapter-rank", 16usize)?,
+        shards: args.get("shards", 1usize)?,
     };
     if opts.gen_tokens > 0 && !opts.decode {
         return Err("--gen-tokens needs --decode".into());
+    }
+    if opts.shards == 0 {
+        return Err("--shards must be ≥ 1".into());
     }
     if args.flag("adapter-rank").is_some() && opts.adapters == 0 {
         return Err("--adapter-rank needs --adapters".into());
@@ -485,6 +535,7 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
             let name = args.flag("model").unwrap_or("tiny");
             let model_cfg = model_by_name(name).ok_or_else(|| format!("unknown model: {name}"))?;
             let (n_adapters, rank) = (opts.adapters as usize, opts.adapter_rank);
+            let shards = opts.shards;
             if live {
                 // Paced: the live worker is occupied for the simulated
                 // service time, so queueing and replica scaling behave
@@ -493,14 +544,20 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
                 // its backend stays unpaced.
                 let decode = opts.decode;
                 let make = move |_i: usize| {
-                    SimBackend::new(model_cfg.clone(), acc_cfg)
-                        .map(|b| Engine::new(b.with_paced(!decode).with_adapters(n_adapters, rank)))
+                    SimBackend::new(model_cfg.clone(), acc_cfg).map(|b| {
+                        Engine::new(
+                            b.with_paced(!decode)
+                                .with_adapters(n_adapters, rank)
+                                .with_shards(shards),
+                        )
+                    })
                 };
                 run_live("sim", make, &opts)
             } else {
                 let b = SimBackend::new(model_cfg, acc_cfg)
                     .map_err(|e| format!("{e:#}"))?
-                    .with_adapters(n_adapters, rank);
+                    .with_adapters(n_adapters, rank)
+                    .with_shards(shards);
                 run_serve(&Engine::new(b), &opts)
             }
         }
@@ -509,16 +566,18 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
             let model_cfg = model_by_name(name).ok_or_else(|| format!("unknown model: {name}"))?;
             let seed = opts.seed;
             let (n_adapters, rank) = (opts.adapters as usize, opts.adapter_rank);
+            let shards = opts.shards;
             if live {
                 let make = move |_i: usize| {
                     FunctionalBackend::new(model_cfg.clone(), acc_cfg, seed)
-                        .map(|b| Engine::new(b.with_adapters(n_adapters, rank)))
+                        .map(|b| Engine::new(b.with_adapters(n_adapters, rank).with_shards(shards)))
                 };
                 run_live("functional", make, &opts)
             } else {
                 let b = FunctionalBackend::new(model_cfg, acc_cfg, seed)
                     .map_err(|e| format!("{e:#}"))?
-                    .with_adapters(n_adapters, rank);
+                    .with_adapters(n_adapters, rank)
+                    .with_shards(shards);
                 run_serve(&Engine::new(b), &opts)
             }
         }
@@ -533,12 +592,25 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
                     opts.adapters
                 );
             }
+            if opts.shards > 1 {
+                // Fixed-shape artifacts cannot split their projections:
+                // requests serve monolithically with recorded misses.
+                println!(
+                    "note: pjrt is shard-unaware — {} shards requested, serving monolithically",
+                    opts.shards
+                );
+            }
+            let shards = opts.shards;
             if live {
-                let make = move |_i: usize| Engine::load(&dir, acc_cfg);
+                let make = move |_i: usize| {
+                    PjrtBackend::load(&dir, acc_cfg).map(|b| Engine::new(b.with_shards(shards)))
+                };
                 run_live("pjrt", make, &opts)
             } else {
-                let engine = Engine::load(&dir, acc_cfg).map_err(|e| format!("{e:#}"))?;
-                run_serve(&engine, &opts)
+                let b = PjrtBackend::load(&dir, acc_cfg)
+                    .map_err(|e| format!("{e:#}"))?
+                    .with_shards(shards);
+                run_serve(&Engine::new(b), &opts)
             }
         }
         other => Err(format!(
@@ -717,6 +789,21 @@ mod tests {
         assert_eq!(a.get("adapter-rank", 16usize).unwrap(), 8);
         assert_eq!(a.flag("backend"), Some("sim"));
         assert_eq!(a.positional, vec!["serve"]);
+    }
+
+    #[test]
+    fn shards_flag_composes_with_backend_and_decode() {
+        let a = Args::parse(&argv(&[
+            "serve", "--decode", "--shards", "4", "--backend", "sim",
+        ]))
+        .unwrap();
+        assert!(a.get_bool("decode"));
+        assert_eq!(a.get("shards", 1usize).unwrap(), 4);
+        assert_eq!(a.flag("backend"), Some("sim"));
+        assert_eq!(a.positional, vec!["serve"]);
+        // Default is monolithic.
+        let b = Args::parse(&argv(&["serve", "--backend", "sim"])).unwrap();
+        assert_eq!(b.get("shards", 1usize).unwrap(), 1);
     }
 
     #[test]

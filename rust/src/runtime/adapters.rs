@@ -37,9 +37,13 @@ pub fn provision(
     )
 }
 
-/// Thread-safe count of adapter requests a backend could not honor and
-/// served base-only instead (unknown adapter id, or a runtime with no
-/// adapter support at all, like the fixed-shape PJRT artifacts).
+/// Thread-safe count of requests a backend served without a capability
+/// the deployment asked for: an adapter it could not honor (unknown
+/// adapter id, or a runtime with no adapter support at all, like the
+/// fixed-shape PJRT artifacts), or — the same honest-fallback pattern,
+/// counted by a second instance — tensor-parallel sharding a
+/// shard-unaware runtime served monolithically
+/// ([`crate::backend::ExecutionBackend::shard_misses`]).
 #[derive(Debug, Default)]
 pub struct AdapterMisses(AtomicU64);
 

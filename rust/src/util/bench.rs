@@ -26,10 +26,15 @@ pub struct Measurement {
 }
 
 impl Measurement {
-    /// Elements per second, if a throughput denominator was set.
+    /// Elements per second, if a throughput denominator was set. `None`
+    /// also when the median rounded to zero — a 0 ns measurement has no
+    /// finite rate, and emitting ∞ would poison the JSON/CSV logs.
     pub fn throughput(&self) -> Option<f64> {
-        self.elements
-            .map(|e| e as f64 / self.median.as_secs_f64())
+        let s = self.median.as_secs_f64();
+        if s <= 0.0 {
+            return None;
+        }
+        self.elements.map(|e| e as f64 / s)
     }
 }
 
@@ -165,9 +170,12 @@ impl Bench {
     /// `ns_per_op` is the median. Measurements registered through
     /// [`Bench::run_throughput`] also carry `throughput_eps`
     /// (elements/second — requests/second when the element is a request).
-    /// Bench targets write this next to their stdout report (e.g.
-    /// `BENCH_sim_hot_loop.json`, `BENCH_live_serve.json`) so successive
-    /// PRs have a perf trajectory to compare against.
+    /// Non-finite floats are emitted as JSON `null`: `inf`/`NaN` are not
+    /// valid JSON tokens and one degenerate measurement must never make
+    /// the whole perf log unparseable. Bench targets write this next to
+    /// their stdout report (e.g. `BENCH_sim_hot_loop.json`,
+    /// `BENCH_live_serve.json`) so successive PRs have a perf trajectory
+    /// to compare against.
     pub fn json(&self) -> String {
         let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
         let mut out = String::from("[\n");
@@ -184,7 +192,7 @@ impl Bench {
                 m.stddev.as_nanos()
             ));
             if let Some(t) = m.throughput() {
-                out.push_str(&format!(", \"throughput_eps\": {t:.3}"));
+                out.push_str(&format!(", \"throughput_eps\": {}", json_f64(t)));
             }
             out.push('}');
         }
@@ -193,6 +201,7 @@ impl Bench {
     }
 
     /// CSV dump (name,median_ns,mean_ns,stddev_ns,throughput_eps).
+    /// Non-finite rates emit an empty cell, matching the JSON guard.
     pub fn csv(&self) -> String {
         let mut out = String::from("name,median_ns,mean_ns,stddev_ns,throughput_eps\n");
         for m in &self.results {
@@ -202,10 +211,23 @@ impl Bench {
                 m.median.as_nanos(),
                 m.mean.as_nanos(),
                 m.stddev.as_nanos(),
-                m.throughput().map(|t| format!("{t:.1}")).unwrap_or_default()
+                m.throughput()
+                    .filter(|t| t.is_finite())
+                    .map(|t| format!("{t:.1}"))
+                    .unwrap_or_default()
             ));
         }
         out
+    }
+}
+
+/// Render a float for the JSON log: fixed-point when finite, `null`
+/// otherwise (bare `inf`/`NaN` would make the file invalid JSON).
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "null".to_string()
     }
 }
 
@@ -271,6 +293,33 @@ mod tests {
             black_box(1u64 + 1);
         });
         assert!(b.json().contains("\"throughput_eps\""));
+    }
+
+    #[test]
+    fn json_never_emits_non_finite_floats() {
+        // Regression: a 0 ns median (degenerate measurement) used to
+        // serialize `"throughput_eps": inf` — invalid JSON that made the
+        // whole BENCH_*.json unparseable. The rate is withheld for
+        // zero-time medians, and any non-finite float that does reach
+        // the emitter renders as JSON null.
+        let mut b = Bench::new();
+        b.results.push(Measurement {
+            name: "degenerate".into(),
+            iters: 1,
+            median: Duration::ZERO,
+            mean: Duration::ZERO,
+            stddev: Duration::ZERO,
+            elements: Some(1_000),
+        });
+        assert_eq!(b.results[0].throughput(), None, "0 ns has no finite rate");
+        let j = b.json();
+        assert!(!j.contains("inf") && !j.contains("NaN"), "{j}");
+        let c = b.csv();
+        assert!(!c.contains("inf") && !c.contains("NaN"), "{c}");
+        // And the null path itself is well-formed JSON.
+        assert_eq!(json_f64(f64::INFINITY), "null");
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(2.5), "2.500");
     }
 
     #[test]

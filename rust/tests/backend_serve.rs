@@ -130,6 +130,86 @@ fn functional_decode_trace_returns_final_logits() {
 }
 
 #[test]
+fn empty_trace_serves_cleanly_on_every_artifact_free_backend() {
+    // Edge pin for the serve paths the sharded live stack leans on: an
+    // empty trace must produce an empty, well-formed summary — zero
+    // counts, zero span, zero finite throughputs — on both the
+    // closed-batch and decode paths, sharded or not. (The PJRT backend
+    // shares the same engine code; its artifact-dependent twin lives in
+    // tests/integration_coordinator.rs.)
+    let sim = sim_engine();
+    let fun = functional_engine();
+    let sharded = Engine::new(
+        SimBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper())
+            .unwrap()
+            .with_shards(4),
+    );
+    let check = |results: Vec<axllm::coordinator::RequestResult>,
+                 s: axllm::coordinator::ServeSummary| {
+        assert!(results.is_empty());
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.tokens, 0);
+        assert_eq!(s.span_s, 0.0);
+        assert_eq!(s.throughput_rps, 0.0);
+        assert_eq!(s.throughput_tps, 0.0);
+        assert!(s.throughput_rps.is_finite() && s.throughput_tps.is_finite());
+        assert!(s.by_adapter.is_empty());
+        assert!(s.per_shard.is_empty());
+    };
+    let (r, s) = sim.serve_trace(Vec::new(), policy()).unwrap();
+    check(r, s);
+    let (r, s) = fun.serve_trace(Vec::new(), policy()).unwrap();
+    check(r, s);
+    let (r, s) = sim.serve_trace_decode(Vec::new(), policy(), 4).unwrap();
+    check(r, s);
+    let (r, s) = fun.serve_trace_decode(Vec::new(), policy(), 4).unwrap();
+    check(r, s);
+    let (r, s) = sharded.serve_trace_decode(Vec::new(), policy(), 4).unwrap();
+    check(r, s);
+    let (r, s) = sim
+        .serve_trace_decode_closed(Vec::new(), policy(), 4)
+        .unwrap();
+    check(r, s);
+}
+
+#[test]
+fn zero_gen_token_decode_runs_produce_one_token_sessions() {
+    // serve --decode with gen_tokens = 0 everywhere AND a zero default:
+    // the budget floor (≥ 1 — a session always produces its prefill
+    // token) must hold on every backend, with coherent TTFT/TPOT.
+    let trace = |n: u64| -> Vec<axllm::workload::Request> {
+        (0..n)
+            .map(|id| axllm::workload::Request {
+                id,
+                dataset: Dataset::Imdb,
+                seq_len: 8,
+                arrival_s: id as f64 * 0.001,
+                gen_tokens: 0,
+                adapter: None,
+            })
+            .collect()
+    };
+    let (rs, ss) = sim_engine()
+        .serve_trace_decode(trace(6), policy(), 0)
+        .unwrap();
+    let (rf, sf) = functional_engine()
+        .serve_trace_decode(trace(6), policy(), 0)
+        .unwrap();
+    for (results, summary) in [(&rs, &ss), (&rf, &sf)] {
+        assert_eq!(results.len(), 6);
+        assert_eq!(summary.gen_tokens, 6, "budget floors at one token");
+        for r in results.iter() {
+            assert_eq!(r.gen_tokens, 1);
+            assert_eq!(r.tokens, 8 + 1);
+            assert_eq!(r.tpot_s, 0.0, "one-token sessions have no TPOT");
+            assert!(r.ttft_s.is_finite() && r.ttft_s >= 0.0);
+        }
+        assert!(summary.span_s > 0.0);
+        assert!(summary.throughput_tps.is_finite());
+    }
+}
+
+#[test]
 fn continuous_batching_never_loses_to_closed_batches() {
     // Deterministic virtual-time comparison on a ragged burst: the
     // continuous iteration loop refills retired slots, so its span can

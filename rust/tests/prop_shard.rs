@@ -1,0 +1,232 @@
+//! Property tests for tensor-parallel sharded execution (in-crate
+//! property runner — see `util::prop`).
+//!
+//! Three claims anchor the shard-aware serving stack:
+//! 1. **Shard exactness** — `FunctionalBackend::with_shards(n)` logits
+//!    are bit-identical to the unsharded deployment for n ∈ {1, 2, 4},
+//!    on batch prefill AND on KV-cached decode: column partitioning is
+//!    exact, so sharding (like the Result Cache and the KV cache) is a
+//!    scheduling transformation, never an approximation.
+//! 2. **Sum-consistent accounting** — per-shard reuse counters partition
+//!    the request's total base ops exactly, and independent per-shard
+//!    caches can only lose reuse in aggregate.
+//! 3. **Honest collective costs** — the sharded sim deployment serves a
+//!    token batch faster than monolithic (compute / N) but sub-linearly
+//!    (the all-gather does not shard away).
+
+use axllm::backend::{ExecutionBackend, FunctionalBackend, SimBackend};
+use axllm::config::{AcceleratorConfig, Dataset, ModelConfig};
+use axllm::coordinator::{BatchPolicy, Engine};
+use axllm::util::prop::{check, Config};
+use axllm::workload::{Request, TraceGenerator};
+use axllm::{prop_assert, prop_assert_eq};
+
+fn req(id: u64, seq_len: usize, gen_tokens: u32, arrival_s: f64) -> Request {
+    Request {
+        id,
+        dataset: Dataset::Imdb,
+        seq_len,
+        arrival_s,
+        gen_tokens,
+        adapter: None,
+    }
+}
+
+#[test]
+fn prop_sharded_functional_bit_identical_on_prefill_and_decode() {
+    check(
+        "sharded-functional-exact",
+        Config {
+            cases: 4,
+            seed: 0x54A2D,
+        },
+        |rng| {
+            let model_seed = rng.below(1_000_000);
+            let mono = FunctionalBackend::new(
+                ModelConfig::tiny(),
+                AcceleratorConfig::paper(),
+                model_seed,
+            )
+            .map_err(|e| e.to_string())?;
+            let r = req(rng.below(10_000), 2 + rng.index(12), 0, 0.0);
+            let steps = 1 + rng.index(3);
+            let (lm, sm) = mono.forward(&r);
+            for shards in [1usize, 2, 4] {
+                let b = FunctionalBackend::new(
+                    ModelConfig::tiny(),
+                    AcceleratorConfig::paper(),
+                    model_seed,
+                )
+                .map_err(|e| e.to_string())?
+                .with_shards(shards);
+                prop_assert_eq!(b.shard_count(), shards);
+                // Batch-prefill logits: bit-identical.
+                let (ls, ss) = b.forward(&r);
+                prop_assert_eq!(&lm, &ls);
+                // Ops partition exactly; reuse can only drop.
+                prop_assert_eq!(sm.mults + sm.reuses, ss.mults + ss.reuses);
+                prop_assert!(
+                    ss.mults >= sm.mults,
+                    "shards={} mults {} < monolithic {}",
+                    shards,
+                    ss.mults,
+                    sm.mults
+                );
+                // Per-request per-shard split is sum-consistent.
+                let out = b.run_batch(std::slice::from_ref(&r)).map_err(|e| e.to_string())?;
+                let a = &out.activity[0];
+                if shards > 1 {
+                    prop_assert_eq!(a.per_shard.len(), shards);
+                    let ops: u64 = a.per_shard.iter().map(|s| s.ops()).sum();
+                    prop_assert_eq!(ops, a.base_mults + a.base_reuses);
+                } else {
+                    prop_assert!(a.per_shard.is_empty(), "1-shard runs are monolithic");
+                }
+                // KV-cached decode: every step's logits and token match
+                // the unsharded session bit for bit.
+                let (mut kv_m, f_m) =
+                    mono.prefill(&r, (steps + 1) as u32).map_err(|e| e.to_string())?;
+                let (mut kv_s, f_s) =
+                    b.prefill(&r, (steps + 1) as u32).map_err(|e| e.to_string())?;
+                prop_assert_eq!(&f_m.logits, &f_s.logits);
+                prop_assert_eq!(f_m.token, f_s.token);
+                while !kv_m.done() {
+                    let om = mono.decode_step(&mut kv_m).map_err(|e| e.to_string())?;
+                    let os = b.decode_step(&mut kv_s).map_err(|e| e.to_string())?;
+                    prop_assert_eq!(&om.logits, &os.logits);
+                    prop_assert_eq!(om.token, os.token);
+                    if shards > 1 {
+                        let ops: u64 =
+                            os.activity.per_shard.iter().map(|s| s.ops()).sum();
+                        prop_assert_eq!(
+                            ops,
+                            os.activity.base_mults + os.activity.base_reuses
+                        );
+                    }
+                }
+                prop_assert_eq!(&kv_m.generated, &kv_s.generated);
+                // And the decode-exactness reference still holds sharded.
+                prop_assert_eq!(
+                    b.recompute_logits(&r, &kv_m.generated[..kv_m.generated.len() - 1]),
+                    mono.recompute_logits(&r, &kv_m.generated[..kv_m.generated.len() - 1])
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sharded_serve_summary_is_sum_consistent_and_faster() {
+    check(
+        "sharded-serve-summary",
+        Config {
+            cases: 6,
+            seed: 0x54A2E,
+        },
+        |rng| {
+            let n = 8 + rng.index(16);
+            let trace = TraceGenerator::new(Dataset::Imdb, 100_000.0, rng.below(1_000))
+                .take(n);
+            let policy = BatchPolicy {
+                max_batch: 8,
+                max_wait_s: 0.001,
+            };
+            let mono = Engine::new(
+                SimBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper())
+                    .map_err(|e| e.to_string())?,
+            );
+            let sharded = Engine::new(
+                SimBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper())
+                    .map_err(|e| e.to_string())?
+                    .with_shards(4),
+            );
+            let (rm, sm) = mono
+                .serve_trace(trace.clone(), policy)
+                .map_err(|e| e.to_string())?;
+            let (rs, ss) = sharded.serve_trace(trace, policy).map_err(|e| e.to_string())?;
+            prop_assert_eq!(rm.len(), rs.len());
+            // Identical batching and token accounting per request.
+            for (a, b) in rm.iter().zip(&rs) {
+                prop_assert_eq!(a.id, b.id);
+                prop_assert_eq!(a.tokens, b.tokens);
+                prop_assert_eq!(a.batch_size, b.batch_size);
+            }
+            // Sharding wins in aggregate: total simulated service time is
+            // strictly smaller. (A degenerate few-token batch can lose to
+            // the collective latency on its own — that is the honest
+            // physics of tensor parallelism — but the run as a whole
+            // must come out ahead.)
+            let mono_exec: f64 = rm.iter().map(|r| r.exec_s).sum();
+            let shard_exec: f64 = rs.iter().map(|r| r.exec_s).sum();
+            prop_assert!(
+                shard_exec < mono_exec,
+                "sharded total exec {shard_exec} !< monolithic {mono_exec}"
+            );
+            // The summary reports 4 shards, sum-consistent with the
+            // run's total base ops.
+            prop_assert_eq!(ss.per_shard.len(), 4);
+            let shard_ops: u64 = ss
+                .per_shard
+                .iter()
+                .map(|g| g.base_mults + g.base_reuses)
+                .sum();
+            let total_ops: u64 = rs.iter().map(|r| r.base_mults + r.base_reuses).sum();
+            prop_assert_eq!(shard_ops, total_ops);
+            prop_assert!(
+                ss.per_shard.iter().all(|g| g.reuse_rate > 0.0),
+                "every shard must see reuse on Gaussian weights"
+            );
+            prop_assert!(sm.per_shard.is_empty(), "monolithic run has no shard rollup");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sharded_decode_trace_matches_unsharded_logits_end_to_end() {
+    // Engine-level fixed case: the whole continuous-batching decode path
+    // (admission, iteration loop, retirement) under sharding returns the
+    // same final logits per request as the unsharded deployment.
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_wait_s: 0.002,
+    };
+    let trace: Vec<Request> = (0..8).map(|i| req(i, 4 + (i as usize % 7), 3, 0.0)).collect();
+    let mono = Engine::new(
+        FunctionalBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper(), 42).unwrap(),
+    );
+    let sharded = Engine::new(
+        FunctionalBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper(), 42)
+            .unwrap()
+            .with_shards(2),
+    );
+    let (rm, _) = mono.serve_trace_decode(trace.clone(), policy, 1).unwrap();
+    let (rs, ss) = sharded.serve_trace_decode(trace, policy, 1).unwrap();
+    assert_eq!(rm.len(), rs.len());
+    let by_id = |mut v: Vec<axllm::coordinator::RequestResult>| {
+        v.sort_by_key(|r| r.id);
+        v
+    };
+    let (rm, rs) = (by_id(rm), by_id(rs));
+    for (a, b) in rm.iter().zip(&rs) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.logits, b.logits, "request {}", a.id);
+        assert_eq!(a.gen_tokens, b.gen_tokens);
+        assert_eq!(
+            a.base_mults + a.base_reuses,
+            b.base_mults + b.base_reuses,
+            "ops partition for request {}",
+            a.id
+        );
+        assert_eq!(b.per_shard.len(), 2);
+    }
+    assert_eq!(ss.per_shard.len(), 2);
+    let shard_ops: u64 = ss
+        .per_shard
+        .iter()
+        .map(|g| g.base_mults + g.base_reuses)
+        .sum();
+    let total_ops: u64 = rs.iter().map(|r| r.base_mults + r.base_reuses).sum();
+    assert_eq!(shard_ops, total_ops);
+}
