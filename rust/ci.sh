@@ -40,6 +40,12 @@ echo "== shard serve bench (writes BENCH_shard_serve.json) =="
 # run's total base ops.
 AXLLM_BENCH_FAST=1 cargo bench --bench shard_serve
 
+echo "== prefix serve bench (writes BENCH_prefix_serve.json) =="
+# Asserts warm prefix-cache serving beats the cold run's p50 TTFT with a
+# nonzero prefix hit rate, while per-request token accounting stays
+# identical (reuse is a scheduling transformation, not an approximation).
+AXLLM_BENCH_FAST=1 cargo bench --bench prefix_serve
+
 echo "== cargo doc --no-deps (rustdoc must stay warning-free) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 

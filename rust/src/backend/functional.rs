@@ -18,6 +18,7 @@ use crate::exec::{
     lora_side_matmul, quantize_row, reuse_matmul_chunked, sharded_reuse_matmul_chunked, ExecStats,
     LayerExec, LayerKv,
 };
+use crate::kvcache::{aligned_prefix, block_keys, KvCacheConfig, PrefixCache};
 use crate::model::{
     synthesize_matrix, AdapterId, AdapterRegistry, LayerWeights, LoraAdaptor, Model,
     WeightDistribution,
@@ -26,7 +27,7 @@ use crate::quant::QuantMatrix;
 use crate::runtime::adapters::{provision, AdapterMisses};
 use crate::sim::{Accelerator, SimStats};
 use crate::util::rng::Rng;
-use crate::workload::{request_seed, synth_embeddings, token_embedding, Request};
+use crate::workload::{request_seed, synth_prefixed_embeddings, token_embedding, Request};
 use anyhow::Result;
 
 /// Classifier classes produced by the logit head (matches the compiled
@@ -59,6 +60,14 @@ pub struct FunctionalBackend {
     /// bit-identical to the monolithic path; only the per-shard reuse
     /// accounting (independent Result Caches) changes.
     shards: usize,
+    /// Cross-request prefix KV cache: per-layer [`LayerKv`] snapshots at
+    /// block boundaries, keyed by session group. `None` = cache-less
+    /// deployment (every prefill cold). Causal attention plus row-wise
+    /// activation quantization make warm prefill **bit-identical** to
+    /// cold: a position's K/V rows depend only on positions ≤ it, so
+    /// resuming from a truncated snapshot reproduces the cold pass
+    /// exactly (`tests/prop_kvcache.rs`).
+    kv_cache: Option<PrefixCache<Vec<LayerKv>>>,
 }
 
 impl FunctionalBackend {
@@ -105,6 +114,7 @@ impl FunctionalBackend {
             adapters: None,
             misses: AdapterMisses::new(),
             shards: 1,
+            kv_cache: None,
         })
     }
 
@@ -140,6 +150,30 @@ impl FunctionalBackend {
             .cost
             .with_adapter_regime(&self.model_cfg, self.acc_cfg, rank);
         self
+    }
+
+    /// Enable the cross-request prefix KV cache: `blocks` pool blocks of
+    /// `block_size` tokens each ([`crate::kvcache`]). Prefill consults
+    /// the prefix trie for the request's session group and resumes from
+    /// the cached per-layer K/V snapshot, computing only the uncached
+    /// suffix; cold prefills insert their prefix blocks for later
+    /// requests. Logits are bit-identical warm or cold — the cache is a
+    /// scheduling transformation, like sharding. The cost model charges
+    /// the block-copy/eviction regime ([`CostModel::with_kv_regime`]).
+    pub fn with_kv_cache(mut self, blocks: usize, block_size: usize) -> FunctionalBackend {
+        self.kv_cache = Some(PrefixCache::new(KvCacheConfig::new(blocks, block_size)));
+        self.cost = self
+            .cost
+            .with_kv_regime(&self.model_cfg, self.acc_cfg, block_size);
+        self
+    }
+
+    /// Release a session's prefix-cache pin (idempotent per handle: the
+    /// lease is taken out of the handle).
+    fn release_lease(&self, kv: &mut KvHandle) {
+        if let (Some(cache), Some(lease)) = (&self.kv_cache, kv.lease.take()) {
+            cache.release(lease);
+        }
     }
 
     /// Pure registry lookup (no miss accounting — serving entry points
@@ -178,13 +212,18 @@ impl FunctionalBackend {
 
     /// Synthesize the embedding block for one request — the same
     /// (seed, request id) derivation the PJRT backend uses, so identical
-    /// ids see identical inputs across backends.
+    /// ids see identical inputs across backends. Prefix-tagged requests
+    /// derive their shared rows from the session group instead of the
+    /// request id ([`synth_prefixed_embeddings`]), which is what makes
+    /// one group's prefix KV state valid for every request in the group.
     fn request_embeddings(&self, req: &Request) -> (Vec<f32>, usize) {
         let seq = req.seq_len.min(self.seq_limit).max(1);
-        let e = synth_embeddings(
+        let e = synth_prefixed_embeddings(
             seq,
             self.model_cfg.d_model,
-            request_seed(self.embed_seed, req.id),
+            self.embed_seed,
+            req.id,
+            req.prefix,
         );
         (e, seq)
     }
@@ -396,6 +435,10 @@ impl ExecutionBackend for FunctionalBackend {
         self.shards
     }
 
+    fn prefix_stats(&self) -> Option<crate::kvcache::PrefixStats> {
+        self.kv_cache.as_ref().map(|c| c.stats())
+    }
+
     fn run_batch(&self, requests: &[Request]) -> crate::Result<BatchOutcome> {
         anyhow::ensure!(
             requests.len() <= self.max_batch,
@@ -431,15 +474,46 @@ impl ExecutionBackend for FunctionalBackend {
         let t0 = std::time::Instant::now();
         let adaptor = self.route_adapter(req.adapter);
         let (x, prompt_len) = self.request_embeddings(req);
+        let d = self.model_cfg.d_model;
+        // Consult the prefix trie: on a hit, resume from the cached
+        // per-layer snapshot and compute only the uncached suffix. The
+        // layer caches are adapter-independent (adapters attach at the
+        // logit head, never inside `causal_pass`), so one group's chain
+        // serves every tenant.
         let mut caches = vec![LayerKv::new(); self.model_cfg.n_layers];
+        let mut cached_tokens = 0usize;
+        let mut lease = None;
+        if let (Some(cache), Some(tag)) = (&self.kv_cache, req.prefix) {
+            let aligned = aligned_prefix(tag.len, prompt_len, cache.block_size());
+            if aligned > 0 {
+                let keys = block_keys(tag.group, aligned / cache.block_size());
+                if let Some(hit) = cache.lookup_pin(&keys) {
+                    cached_tokens = hit.tokens;
+                    caches = hit.payload;
+                    lease = Some(hit.lease);
+                }
+            }
+        }
+        let n_new = prompt_len - cached_tokens;
+        let suffix = x[cached_tokens * d..].to_vec();
         let mut stats = ExecStats::default();
         let mut shard = Vec::new();
-        let hidden = self.causal_pass(x, prompt_len, &mut caches, &mut stats, &mut shard);
-        let d = self.model_cfg.d_model;
+        let hidden = self.causal_pass(suffix, n_new, &mut caches, &mut stats, &mut shard);
         let logits =
-            self.head_logits_for(adaptor, &hidden[(prompt_len - 1) * d..], &mut stats, &mut shard);
+            self.head_logits_for(adaptor, &hidden[(n_new - 1) * d..], &mut stats, &mut shard);
         let token = argmax_token(&logits);
-        let kv = KvHandle {
+        // Publish the blocks this (possibly partially) cold prefill
+        // computed, snapshotting each layer cache at block boundaries.
+        if let (Some(cache), Some(tag)) = (&self.kv_cache, req.prefix) {
+            let aligned = aligned_prefix(tag.len, prompt_len, cache.block_size());
+            if aligned > cached_tokens {
+                let keys = block_keys(tag.group, aligned / cache.block_size());
+                cache.insert_with(&keys, |tokens| {
+                    caches.iter().map(|kv| kv.truncated(tokens)).collect()
+                });
+            }
+        }
+        let mut kv = KvHandle {
             id: req.id,
             prompt_len,
             budget,
@@ -448,8 +522,14 @@ impl ExecutionBackend for FunctionalBackend {
             // A missed adapter id is dropped from the session so decode
             // steps stay base-only (one recorded miss per request).
             adapter: if adaptor.is_some() { req.adapter } else { None },
+            cached_tokens,
+            lease,
             state: KvState::Functional(caches),
         };
+        if kv.done() {
+            // Budget-1 session: it retires at prefill, so unpin now.
+            self.release_lease(&mut kv);
+        }
         Ok((
             kv,
             StepOutcome {
@@ -496,6 +576,9 @@ impl ExecutionBackend for FunctionalBackend {
         let logits = self.head_logits_for(adaptor, &hidden, &mut stats, &mut shard);
         let token = argmax_token(&logits);
         kv.generated.push(token);
+        if kv.done() {
+            self.release_lease(kv);
+        }
         Ok(StepOutcome {
             logits,
             token,
@@ -528,6 +611,7 @@ mod tests {
             arrival_s: 0.0,
             gen_tokens: 0,
             adapter: None,
+            prefix: None,
         }
     }
 
@@ -605,6 +689,8 @@ mod tests {
             generated: vec![0],
             embed_seed: 1,
             adapter: None,
+            cached_tokens: 0,
+            lease: None,
             state: KvState::Analytic,
         };
         assert!(b.decode_step(&mut kv).is_err());
@@ -704,6 +790,68 @@ mod tests {
             assert_eq!(om.logits, os.logits);
             assert_eq!(om.token, os.token);
         }
+    }
+
+    #[test]
+    fn warm_prefix_prefill_is_bit_identical_to_cold_and_cheaper() {
+        use crate::workload::PrefixTag;
+        let cold = backend();
+        let warm = backend().with_kv_cache(16, 8);
+        let tag = PrefixTag { group: 2, len: 16 };
+        let a = Request {
+            prefix: Some(tag),
+            ..req(11, 24)
+        };
+        let b = Request {
+            prefix: Some(tag),
+            ..req(12, 24)
+        };
+        // Cold reference from a cache-less deployment.
+        let (mut kv_cold, f_cold) = cold.prefill(&b, 3).unwrap();
+        // Prime the cache with another request of the same group…
+        warm.prefill(&a, 1).unwrap();
+        let s = warm.prefix_stats().unwrap();
+        assert_eq!((s.lookups, s.hits), (1, 0));
+        assert_eq!(s.inserted_blocks, 2, "16-token prefix = two 8-token blocks");
+        assert_eq!(s.pinned_blocks, 0, "budget-1 session unpins at prefill");
+        // …then serve the twin warm: bit-identical prefill AND decode.
+        let (mut kv_warm, f_warm) = warm.prefill(&b, 3).unwrap();
+        assert_eq!(kv_warm.cached_tokens, 16);
+        assert_eq!(f_cold.logits, f_warm.logits);
+        assert_eq!(f_cold.token, f_warm.token);
+        assert!(
+            f_warm.activity.base_mults + f_warm.activity.base_reuses
+                < f_cold.activity.base_mults + f_cold.activity.base_reuses,
+            "warm prefill must skip the cached prefix's work"
+        );
+        assert_eq!(warm.prefix_stats().unwrap().pinned_blocks, 2);
+        while !kv_cold.done() {
+            let oc = cold.decode_step(&mut kv_cold).unwrap();
+            let ow = warm.decode_step(&mut kv_warm).unwrap();
+            assert_eq!(oc.logits, ow.logits);
+            assert_eq!(oc.token, ow.token);
+        }
+        assert_eq!(kv_cold.generated, kv_warm.generated);
+        let s = warm.prefix_stats().unwrap();
+        assert_eq!((s.hits, s.hit_tokens), (1, 16));
+        assert_eq!(s.pinned_blocks, 0, "finished session released its lease");
+        // The cache-less deployment reports no prefix surface.
+        assert!(cold.prefix_stats().is_none());
+        assert_eq!(cold.kv_misses(), 0);
+    }
+
+    #[test]
+    fn untagged_requests_ignore_the_prefix_cache() {
+        let plain = backend();
+        let cached = backend().with_kv_cache(8, 8);
+        let r = req(5, 20);
+        let (_, f_plain) = plain.prefill(&r, 2).unwrap();
+        let (kv, f_cached) = cached.prefill(&r, 2).unwrap();
+        assert_eq!(f_plain.logits, f_cached.logits);
+        assert_eq!(kv.cached_tokens, 0);
+        let s = cached.prefix_stats().unwrap();
+        assert_eq!(s.lookups, 0, "untagged prompts never consult the trie");
+        assert_eq!(s.inserted_blocks, 0);
     }
 
     #[test]

@@ -35,6 +35,14 @@
 //! interconnect collective term ([`CostModel::allreduce_time_s`]) to the
 //! simulated times. Shard-unaware backends (PJRT) fall back monolithic
 //! and record the capability miss ([`ExecutionBackend::shard_misses`]).
+//! The API is **prefix-cache-aware**: backends built
+//! `with_kv_cache(blocks, block_size)` consult the [`crate::kvcache`]
+//! prefix trie at [`ExecutionBackend::prefill`] and skip the prompt
+//! tokens whose KV state is already cached from an earlier request of
+//! the same session group ([`KvHandle::cached_tokens`]), reporting
+//! [`ExecutionBackend::prefix_stats`]. [`CostModel::with_kv_regime`]
+//! prices the block-copy and eviction traffic; cache-unaware backends
+//! (PJRT) record the capability miss ([`ExecutionBackend::kv_misses`]).
 //! `rust/DESIGN.md` diagrams the `Engine → ExecutionBackend →
 //! Accelerator` layering.
 
@@ -196,6 +204,14 @@ pub struct KvHandle {
     /// request at prefill), so every decode step of the session routes
     /// through the same side pipeline.
     pub adapter: Option<AdapterId>,
+    /// Prompt tokens served from the cross-request prefix KV cache at
+    /// prefill (0 for untagged requests, cache misses, or backends
+    /// without a cache). The engine charges these at block-copy rate
+    /// ([`CostModel::kv_copy_time_s`]) instead of full prefill rate.
+    pub cached_tokens: usize,
+    /// Pin on the prefix-cache block chain this session reads from,
+    /// released when the session finishes.
+    pub(crate) lease: Option<crate::kvcache::PrefixLease>,
     /// Backend-owned cache state.
     pub(crate) state: KvState,
 }
@@ -314,6 +330,20 @@ pub trait ExecutionBackend {
         0
     }
 
+    /// Cross-request prefix KV-cache counters, when this backend holds a
+    /// [`crate::kvcache::PrefixCache`] (`None` for backends without one
+    /// or deployments that did not enable it).
+    fn prefix_stats(&self) -> Option<crate::kvcache::PrefixStats> {
+        None
+    }
+
+    /// Requests a cache-unaware backend prefilled cold even though the
+    /// deployment asked for prefix KV caching (the capability miss the
+    /// PJRT artifact path records, mirroring the adapter/shard misses).
+    fn kv_misses(&self) -> u64 {
+        0
+    }
+
     /// Execute one batch; `requests.len()` must be ≤ `max_batch()`.
     fn run_batch(&self, requests: &[Request]) -> crate::Result<BatchOutcome>;
 
@@ -380,6 +410,22 @@ pub struct CostModel {
     /// Per-collective shard-interconnect latency, seconds
     /// ([`SHARD_LINK_LATENCY_S`]).
     pub link_latency_s: f64,
+    /// Prefix-KV-cache regime: cycles to copy one cached prompt token's
+    /// K/V rows (`2·d_model` f32 per layer) from the shared block pool
+    /// into the session's working set — pure HBM movement on the lane
+    /// datapath, no multiplies, so it is identical for AxLLM and the
+    /// baseline. Zero until [`CostModel::with_kv_regime`].
+    pub kv_copy_cycles_per_token: f64,
+    /// Energy (pJ) to copy one cached token's K/V rows.
+    pub kv_copy_energy_pj_per_token: f64,
+    /// Cycles to evict one prefix-cache block: the bookkeeping/
+    /// invalidation sweep over the block's `block_size` tokens of K/V
+    /// state. The dominant eviction cost — recomputing the prefix on its
+    /// next miss — is charged naturally at full prefill rate. Zero until
+    /// [`CostModel::with_kv_regime`].
+    pub kv_evict_cycles_per_block: f64,
+    /// Energy (pJ) to evict one prefix-cache block.
+    pub kv_evict_energy_pj_per_block: f64,
 }
 
 impl CostModel {
@@ -405,6 +451,10 @@ impl CostModel {
             shard_collectives: 0.0,
             link_bytes_per_s: SHARD_LINK_BYTES_PER_S,
             link_latency_s: SHARD_LINK_LATENCY_S,
+            kv_copy_cycles_per_token: 0.0,
+            kv_copy_energy_pj_per_token: 0.0,
+            kv_evict_cycles_per_block: 0.0,
+            kv_evict_energy_pj_per_block: 0.0,
         }
     }
 
@@ -457,6 +507,44 @@ impl CostModel {
         };
         self.adapter_cycles_per_token = cycles;
         self.adapter_energy_pj_per_token = EnergyModel::default().energy(&stats).total_pj;
+        self
+    }
+
+    /// Fill the prefix-KV-cache regime for `block_size`-token blocks:
+    /// serving one cached prompt token moves its `2·d_model` f32 K/V
+    /// rows per layer from the shared block pool into the session —
+    /// memory traffic at lane throughput (one element per lane per
+    /// cycle), with **no multiplies**, which is the whole point: a
+    /// prefix hit replaces a full-rate prefill pass with a copy.
+    /// Evicting a block sweeps its `block_size` tokens of K/V
+    /// bookkeeping once.
+    pub fn with_kv_regime(
+        mut self,
+        model_cfg: &ModelConfig,
+        acc_cfg: AcceleratorConfig,
+        block_size: usize,
+    ) -> CostModel {
+        let per_token = 2 * model_cfg.d_model as u64 * model_cfg.n_layers as u64;
+        let copy_cycles = (per_token as f64 / acc_cfg.lanes as f64).ceil();
+        let copy_stats = SimStats {
+            cycles: copy_cycles as u64,
+            elements: per_token,
+            w_reads: per_token,
+            out_writes: per_token,
+            ..Default::default()
+        };
+        self.kv_copy_cycles_per_token = copy_cycles;
+        self.kv_copy_energy_pj_per_token = EnergyModel::default().energy(&copy_stats).total_pj;
+        let per_block = per_token * block_size as u64;
+        let evict_cycles = (per_block as f64 / acc_cfg.lanes as f64).ceil();
+        let evict_stats = SimStats {
+            cycles: evict_cycles as u64,
+            elements: per_block,
+            out_writes: per_block,
+            ..Default::default()
+        };
+        self.kv_evict_cycles_per_block = evict_cycles;
+        self.kv_evict_energy_pj_per_block = EnergyModel::default().energy(&evict_stats).total_pj;
         self
     }
 
@@ -553,6 +641,18 @@ impl CostModel {
     /// amortizes across co-batched sessions.
     pub fn adapter_time_s(&self, tokens: u64) -> f64 {
         self.adapter_cycles_per_token * tokens as f64 / (self.freq_ghz * 1e9)
+    }
+
+    /// Simulated time to serve `tokens` cached prompt tokens from the
+    /// prefix KV cache (block-copy traffic instead of a prefill weight
+    /// pass), seconds. Zero until [`CostModel::with_kv_regime`].
+    pub fn kv_copy_time_s(&self, tokens: u64) -> f64 {
+        self.kv_copy_cycles_per_token * tokens as f64 / (self.freq_ghz * 1e9)
+    }
+
+    /// Simulated time to evict `blocks` prefix-cache blocks, seconds.
+    pub fn kv_evict_time_s(&self, blocks: u64) -> f64 {
+        self.kv_evict_cycles_per_block * blocks as f64 / (self.freq_ghz * 1e9)
     }
 
     /// Simulated accelerator service time for `tokens` tokens, seconds.

@@ -38,6 +38,14 @@ pub struct PjrtBackend {
     requested_shards: usize,
     /// Requests served monolithically despite a sharded deployment ask.
     shard_miss: AdapterMisses,
+    /// Whether the deployment asked for a prefix KV cache. The AOT
+    /// artifacts recompute every window from scratch (fixed-shape HLO,
+    /// no KV surface to share), so the ask cannot be honored: every
+    /// served request records a capability miss in `kv_miss` instead —
+    /// the same honest-fallback pattern as adapters and shards.
+    kv_requested: bool,
+    /// Requests served without prefix reuse despite a KV-cache ask.
+    kv_miss: AdapterMisses,
 }
 
 impl PjrtBackend {
@@ -57,7 +65,21 @@ impl PjrtBackend {
             misses: AdapterMisses::new(),
             requested_shards: 1,
             shard_miss: AdapterMisses::new(),
+            kv_requested: false,
+            kv_miss: AdapterMisses::new(),
         })
+    }
+
+    /// Ask for a paged prefix KV cache. The compiled artifacts execute
+    /// every window as one fixed-shape HLO call — there is no per-layer
+    /// KV tensor to snapshot or resume from — so the backend keeps
+    /// recomputing full windows and records one capability miss per
+    /// served request ([`ExecutionBackend::kv_misses`]). The sizing
+    /// arguments are accepted (and ignored) so deployment configs stay
+    /// portable across backends.
+    pub fn with_kv_cache(mut self, _blocks: usize, _block_size: usize) -> PjrtBackend {
+        self.kv_requested = true;
+        self
     }
 
     /// Ask for `n`-way tensor-parallel execution. The compiled artifacts
@@ -82,6 +104,9 @@ impl PjrtBackend {
             }
             if self.requested_shards > 1 {
                 self.shard_miss.record();
+            }
+            if self.kv_requested {
+                self.kv_miss.record();
             }
         }
     }
@@ -148,6 +173,10 @@ impl ExecutionBackend for PjrtBackend {
         self.shard_miss.count()
     }
 
+    fn kv_misses(&self) -> u64 {
+        self.kv_miss.count()
+    }
+
     fn run_batch(&self, requests: &[Request]) -> crate::Result<BatchOutcome> {
         let m = &self.artifacts.manifest;
         anyhow::ensure!(
@@ -197,6 +226,8 @@ impl ExecutionBackend for PjrtBackend {
             embed_seed,
             // Served base-only: the session never claims the adapter.
             adapter: None,
+            cached_tokens: 0,
+            lease: None,
             state: KvState::Recompute(buf),
         };
         Ok((

@@ -16,6 +16,7 @@ use crate::backend::{
 };
 use crate::config::{AcceleratorConfig, ModelConfig};
 use crate::exec::{shard_accounting, ExecStats};
+use crate::kvcache::{aligned_prefix, block_keys, KvCacheConfig, PrefixCache};
 use crate::model::{MatKind, Model};
 use crate::runtime::AdapterMisses;
 use crate::sim::{Accelerator, SimStats};
@@ -57,6 +58,12 @@ pub struct SimBackend {
     /// mult/reuse split depends only on the codes, the chunk bound, and
     /// the shard boundaries, never on the input values).
     per_token_shard: Vec<ExecStats>,
+    /// Cross-request prefix KV cache. The sim backend computes nothing,
+    /// so the payload is `()` — what the cache contributes here is the
+    /// *capacity model*: HBM blocks, hit/eviction/preemption dynamics,
+    /// and the prefill discount (cached tokens bill at block-copy rate
+    /// instead of a full weight pass).
+    kv_cache: Option<PrefixCache<()>>,
 }
 
 impl SimBackend {
@@ -79,7 +86,32 @@ impl SimBackend {
             misses: AdapterMisses::new(),
             shards: 1,
             per_token_shard: Vec::new(),
+            kv_cache: None,
         })
+    }
+
+    /// Model a paged prefix KV cache of `blocks` fixed-size blocks of
+    /// `block_size` token positions each. Tagged requests whose prefix
+    /// hits the cache skip the full weight pass for the cached tokens
+    /// and are charged the block-copy rate instead
+    /// ([`CostModel::kv_copy_time_s`]); evictions and preemptions
+    /// triggered by an insert bill the write-back sweep
+    /// ([`CostModel::kv_evict_time_s`]). Service times take the KV
+    /// regime ([`CostModel::with_kv_regime`]).
+    pub fn with_kv_cache(mut self, blocks: usize, block_size: usize) -> SimBackend {
+        self.kv_cache = Some(PrefixCache::new(KvCacheConfig::new(blocks, block_size)));
+        self.cost = self
+            .cost
+            .with_kv_regime(&self.model_cfg, self.acc_cfg, block_size);
+        self
+    }
+
+    /// Drop the session's pin on its shared prefix chain (no-op for
+    /// sessions that never hit the cache, and for preempted chains).
+    fn release_lease(&self, kv: &mut KvHandle) {
+        if let (Some(cache), Some(lease)) = (&self.kv_cache, kv.lease.take()) {
+            cache.release(lease);
+        }
     }
 
     /// Model a deployment that shards each projection column-wise across
@@ -269,6 +301,10 @@ impl ExecutionBackend for SimBackend {
         self.shards
     }
 
+    fn prefix_stats(&self) -> Option<crate::kvcache::PrefixStats> {
+        self.kv_cache.as_ref().map(|c| c.stats())
+    }
+
     fn run_batch(&self, requests: &[Request]) -> crate::Result<BatchOutcome> {
         let mut tokens = 0u64;
         let mut adapter_tokens = 0u64;
@@ -302,30 +338,59 @@ impl ExecutionBackend for SimBackend {
         anyhow::ensure!(budget >= 1, "decode budget must be ≥ 1");
         let prompt_len = req.seq_len.min(self.seq_limit).max(1);
         let routed = self.routes_adapter(req.adapter);
+        // Consult the prefix cache: cached tokens skip the weight pass
+        // and bill at block-copy rate; the insert below may trigger
+        // evictions/preemptions, billed as write-back sweeps.
+        let mut cached_tokens = 0usize;
+        let mut lease = None;
+        let mut evicted = 0u64;
+        if let (Some(cache), Some(tag)) = (&self.kv_cache, req.prefix) {
+            let aligned = aligned_prefix(tag.len, prompt_len, cache.block_size());
+            if aligned > 0 {
+                let keys = block_keys(tag.group, aligned / cache.block_size());
+                if let Some(hit) = cache.lookup_pin(&keys) {
+                    cached_tokens = hit.tokens;
+                    lease = Some(hit.lease);
+                }
+                if aligned > cached_tokens {
+                    let before = cache.stats();
+                    cache.insert_with(&keys, |_| ());
+                    let after = cache.stats();
+                    evicted = (after.evictions + after.preemptions)
+                        - (before.evictions + before.preemptions);
+                }
+            }
+        }
+        let suffix = (prompt_len - cached_tokens) as u64;
         let adapter_ops = if routed {
-            self.adapter_macs_per_token * prompt_len as u64
+            self.adapter_macs_per_token * suffix
         } else {
             0
         };
-        let exec_s = self.cost.sim_time_s(prompt_len as u64)
-            + self
-                .cost
-                .adapter_time_s(if routed { prompt_len as u64 } else { 0 });
+        let exec_s = self.cost.sim_time_s(suffix)
+            + self.cost.kv_copy_time_s(cached_tokens as u64)
+            + self.cost.kv_evict_time_s(evicted)
+            + self.cost.adapter_time_s(if routed { suffix } else { 0 });
         if self.paced {
             std::thread::sleep(std::time::Duration::from_secs_f64(exec_s));
         }
         let embed_seed = request_seed(SIM_MODEL_SEED, req.id);
         let token = pseudo_token(embed_seed, prompt_len);
-        let base = self.per_token.scaled(prompt_len as u64, 1);
-        let kv = KvHandle {
+        let base = self.per_token.scaled(suffix, 1);
+        let mut kv = KvHandle {
             id: req.id,
             prompt_len,
             budget,
             generated: vec![token],
             embed_seed,
             adapter: if routed { req.adapter } else { None },
+            cached_tokens,
+            lease,
             state: KvState::Analytic,
         };
+        if kv.done() {
+            self.release_lease(&mut kv);
+        }
         Ok((
             kv,
             StepOutcome {
@@ -333,7 +398,7 @@ impl ExecutionBackend for SimBackend {
                 token,
                 exec_s,
                 stats: base,
-                activity: self.base_activity(prompt_len as u64, adapter_ops),
+                activity: self.base_activity(suffix, adapter_ops),
             },
         ))
     }
@@ -358,6 +423,9 @@ impl ExecutionBackend for SimBackend {
         }
         let token = pseudo_token(kv.embed_seed, kv.context_len());
         kv.generated.push(token);
+        if kv.done() {
+            self.release_lease(kv);
+        }
         let base = self.per_token.scaled(1, 1);
         Ok(StepOutcome {
             logits: Vec::new(),
@@ -383,6 +451,7 @@ mod tests {
             arrival_s: id as f64 * 0.001,
             gen_tokens: 0,
             adapter: None,
+            prefix: None,
         }
     }
 
@@ -558,6 +627,62 @@ mod tests {
         assert_eq!(step.activity.per_shard.len(), 4);
         let ops: u64 = step.activity.per_shard.iter().map(|s| s.ops()).sum();
         assert_eq!(ops, step.activity.base_mults + step.activity.base_reuses);
+    }
+
+    #[test]
+    fn prefix_cache_discounts_warm_prefill_and_bills_copies() {
+        use crate::workload::PrefixTag;
+        let plain = SimBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper()).unwrap();
+        assert!(plain.prefix_stats().is_none());
+        let b = SimBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper())
+            .unwrap()
+            .with_kv_cache(8, 8);
+        assert!(b.cost().kv_copy_cycles_per_token > 0.0);
+        let tag = PrefixTag { group: 0, len: 16 };
+        let first = Request {
+            prefix: Some(tag),
+            ..req(0, 32)
+        };
+        let second = Request {
+            prefix: Some(tag),
+            ..req(1, 32)
+        };
+        let (_kv0, cold) = b.prefill(&first, 1).unwrap();
+        let (kv1, warm) = b.prefill(&second, 1).unwrap();
+        assert_eq!(kv1.cached_tokens, 16);
+        // Cached tokens bill at block-copy rate, far below a weight pass.
+        assert!(warm.exec_s < cold.exec_s, "{} vs {}", warm.exec_s, cold.exec_s);
+        // Cycle attribution follows the computed suffix only.
+        assert_eq!(warm.stats.elements, cold.stats.elements / 2);
+        let s = b.prefix_stats().unwrap();
+        assert_eq!(s.lookups, 2);
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.hit_tokens, 16);
+        assert_eq!(s.blocks_in_use, 2);
+        // Budget-1 sessions finish at prefill and drop their pins.
+        assert_eq!(s.pinned_blocks, 0);
+        // The synthetic token stream is untouched by the cache.
+        let (kv_ref, _) = plain.prefill(&second, 1).unwrap();
+        assert_eq!(kv1.generated, kv_ref.generated);
+        // Overflow: a two-block pool evicts the LRU chain to admit a new
+        // group and bills the write-back sweep on top of the full pass.
+        let tiny = SimBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper())
+            .unwrap()
+            .with_kv_cache(2, 8);
+        let other = Request {
+            prefix: Some(PrefixTag { group: 1, len: 16 }),
+            ..req(1, 32)
+        };
+        tiny.prefill(&first, 1).unwrap();
+        let (_, evict_out) = tiny.prefill(&other, 1).unwrap();
+        let st = tiny.prefix_stats().unwrap();
+        assert!(st.evictions >= 1, "evictions {}", st.evictions);
+        assert!(
+            evict_out.exec_s > cold.exec_s,
+            "{} vs {}",
+            evict_out.exec_s,
+            cold.exec_s
+        );
     }
 
     #[test]

@@ -189,8 +189,11 @@ impl BatchScheduler {
         if n == 0 || self.pending.is_empty() {
             return Vec::new();
         }
+        // total_cmp, not partial_cmp().unwrap(): one NaN arrival stamp
+        // (an upstream clock bug) must never panic the admission path —
+        // NaN sorts last, so well-stamped requests keep strict FIFO.
         self.pending
-            .sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+            .sort_by(|a, b| f64::total_cmp(&a.arrival_s, &b.arrival_s));
         let k = n.min(self.pending.len());
         self.pending.drain(..k).collect()
     }
@@ -237,6 +240,7 @@ mod tests {
             arrival_s: t,
             gen_tokens: 0,
             adapter: None,
+            prefix: None,
         }
     }
 
@@ -393,6 +397,28 @@ mod tests {
         let rest: Vec<u64> = b.take_ready(8).iter().map(|r| r.id).collect();
         assert_eq!(rest, vec![2]);
         assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn take_ready_survives_nan_arrival_stamps() {
+        // Regression: the arrival sort used partial_cmp().unwrap(), so a
+        // single NaN arrival stamp panicked the continuous-batching
+        // admission path. total_cmp orders NaN after every real stamp:
+        // admission must not panic, well-stamped requests must keep
+        // strict arrival order, and the NaN request must still be
+        // admitted (last), never silently dropped.
+        let mut b = BatchScheduler::new(BatchPolicy {
+            max_batch: 64,
+            max_wait_s: 10.0,
+        });
+        b.enqueue(req(0, 0.02));
+        b.enqueue(req(1, f64::NAN));
+        b.enqueue(req(2, 0.01));
+        let first: Vec<u64> = b.take_ready(2).iter().map(|r| r.id).collect();
+        assert_eq!(first, vec![2, 0], "finite stamps stay oldest-first");
+        let rest: Vec<u64> = b.take_ready(8).iter().map(|r| r.id).collect();
+        assert_eq!(rest, vec![1], "the NaN-stamped request sorts last");
+        assert_eq!(b.pending(), 0, "no request may be dropped");
     }
 
     #[test]

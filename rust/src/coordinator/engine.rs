@@ -57,6 +57,11 @@ pub struct RequestResult {
     pub sim_energy_j: f64,
     /// Generated tokens (decode sessions; 0 for prefill-only serving).
     pub gen_tokens: u64,
+    /// Prompt tokens served from the shared prefix KV cache instead of
+    /// being recomputed (0 for untagged requests and cache-less
+    /// backends). Counted inside `tokens`; attribution bills them at
+    /// block-copy rate rather than a full weight pass.
+    pub cached_tokens: u64,
     /// Time to first token: arrival → first generated token (prefill
     /// completion). Equals `latency_s` for prefill-only serving, where
     /// the first "token" is the whole answer.
@@ -186,6 +191,7 @@ impl<B: ExecutionBackend> Engine<B> {
                 sim_energy_j: (cost.energy_pj_per_token_ax * tokens as f64 + adapter_energy_pj)
                     * 1e-12,
                 gen_tokens: 0,
+                cached_tokens: 0,
                 ttft_s: queue_wait_s + exec_s,
                 tpot_s: 0.0,
                 adapter: if routed { req.adapter } else { None },
@@ -275,6 +281,9 @@ impl<B: ExecutionBackend> Engine<B> {
             iterations += 1;
             let batch_now = active.len() + admitted.len();
             let mut prefill_tokens = 0u64;
+            // Prompt tokens resumed from the shared prefix cache this
+            // iteration: billed at block-copy rate, not a weight pass.
+            let mut copied_tokens = 0u64;
             // Adapter side-pipe tokens this iteration: per-session dense
             // work, never amortized by the shared decode weight pass.
             let mut adapter_tokens = 0u64;
@@ -290,9 +299,11 @@ impl<B: ExecutionBackend> Engine<B> {
             for req in admitted {
                 let budget = decode_budget(&req, default_gen);
                 let (kv, out) = self.backend.prefill(&req, budget)?;
-                prefill_tokens += kv.prompt_len as u64;
+                let computed = (kv.prompt_len - kv.cached_tokens) as u64;
+                prefill_tokens += computed;
+                copied_tokens += kv.cached_tokens as u64;
                 if kv.adapter.is_some() {
-                    adapter_tokens += kv.prompt_len as u64;
+                    adapter_tokens += computed;
                 }
                 active.push(DecodeSession::admit(
                     kv,
@@ -304,6 +315,7 @@ impl<B: ExecutionBackend> Engine<B> {
                 ));
             }
             clock += cost.iteration_time_s(prefill_tokens, &decode_ctxs)
+                + cost.kv_copy_time_s(copied_tokens)
                 + cost.adapter_time_s(adapter_tokens);
             let mut i = 0;
             while i < active.len() {
@@ -355,13 +367,16 @@ impl<B: ExecutionBackend> Engine<B> {
             iterations += 1;
             let mut sessions: Vec<DecodeSession> = Vec::with_capacity(batch_size);
             let mut prefill_tokens = 0u64;
+            let mut copied_tokens = 0u64;
             let mut adapter_tokens = 0u64;
             for req in &b.requests {
                 let budget = decode_budget(req, default_gen);
                 let (kv, out) = self.backend.prefill(req, budget)?;
-                prefill_tokens += kv.prompt_len as u64;
+                let computed = (kv.prompt_len - kv.cached_tokens) as u64;
+                prefill_tokens += computed;
+                copied_tokens += kv.cached_tokens as u64;
                 if kv.adapter.is_some() {
-                    adapter_tokens += kv.prompt_len as u64;
+                    adapter_tokens += computed;
                 }
                 sessions.push(DecodeSession::admit(
                     kv,
@@ -373,6 +388,7 @@ impl<B: ExecutionBackend> Engine<B> {
                 ));
             }
             clock += cost.iteration_time_s(prefill_tokens, &[])
+                + cost.kv_copy_time_s(copied_tokens)
                 + cost.adapter_time_s(adapter_tokens);
             for s in sessions.iter_mut() {
                 s.ttft_abs = Some(clock);
@@ -446,7 +462,9 @@ pub(crate) struct DecodeSession {
 impl DecodeSession {
     /// Open a session from a completed prefill, attributing the prompt's
     /// weight passes (plus the adapter side pipe for adapter sessions).
-    /// TTFT/finish stamps are left for the caller's clock.
+    /// Prompt tokens resumed from the prefix cache bill at block-copy
+    /// rate instead of a weight pass. TTFT/finish stamps are left for
+    /// the caller's clock.
     pub(crate) fn admit(
         kv: KvHandle,
         first: crate::backend::StepOutcome,
@@ -456,8 +474,10 @@ impl DecodeSession {
         batch_now: usize,
     ) -> DecodeSession {
         let prompt_tokens = kv.prompt_len as u64;
+        let copied_tokens = kv.cached_tokens as u64;
+        let computed_tokens = prompt_tokens - copied_tokens;
         let adapter_tokens = if kv.adapter.is_some() {
-            prompt_tokens
+            computed_tokens
         } else {
             0
         };
@@ -469,9 +489,11 @@ impl DecodeSession {
             finish_abs: None,
             prompt_tokens,
             last_logits: first.logits,
-            cycles: cost.cycles_per_token_ax * prompt_tokens as f64
+            cycles: cost.cycles_per_token_ax * computed_tokens as f64
+                + cost.kv_copy_cycles_per_token * copied_tokens as f64
                 + cost.adapter_cycles_per_token * adapter_tokens as f64,
-            energy_pj: cost.energy_pj_per_token_ax * prompt_tokens as f64
+            energy_pj: cost.energy_pj_per_token_ax * computed_tokens as f64
+                + cost.kv_copy_energy_pj_per_token * copied_tokens as f64
                 + cost.adapter_energy_pj_per_token * adapter_tokens as f64,
             peak_batch: batch_now,
             activity: first.activity,
@@ -528,6 +550,7 @@ impl DecodeSession {
             sim_cycles: self.cycles as u64,
             sim_energy_j: self.energy_pj * 1e-12,
             gen_tokens: gen,
+            cached_tokens: self.kv.cached_tokens as u64,
             ttft_s: (ttft_abs - self.arrival_s).max(0.0),
             tpot_s,
             base_mults,
@@ -580,6 +603,7 @@ mod tests {
             arrival_s: 0.0,
             gen_tokens,
             adapter: None,
+            prefix: None,
         };
         assert_eq!(decode_budget(&mk(5), 2), 5, "request budget wins");
         assert_eq!(decode_budget(&mk(0), 2), 2, "0 falls back to default");

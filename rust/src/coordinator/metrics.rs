@@ -114,6 +114,13 @@ pub struct ServeSummary {
     /// Generated tokens across all requests (decode serving; 0 for
     /// prefill-only runs).
     pub gen_tokens: u64,
+    /// Prompt tokens served from the shared prefix KV cache across all
+    /// requests (0 for untagged traces and cache-less backends).
+    pub cached_tokens: u64,
+    /// Fraction of prompt tokens served from the prefix cache:
+    /// `cached_tokens / (tokens - gen_tokens)`. 0 for cache-less runs
+    /// and for degenerate runs with no prompt tokens at all.
+    pub prefix_hit_rate: f64,
     /// Wall-clock span of the trace (first arrival → last completion).
     pub span_s: f64,
     /// End-to-end latency distribution (arrival → completion).
@@ -175,6 +182,15 @@ impl ServeSummary {
         );
         let tokens: u64 = results.iter().map(|r| r.tokens).sum();
         let gen_tokens: u64 = results.iter().map(|r| r.gen_tokens).sum();
+        let cached_tokens: u64 = results.iter().map(|r| r.cached_tokens).sum();
+        // Prompt tokens = attributed tokens minus generated ones; the
+        // hit rate is cache coverage of the prompt side only.
+        let prompt_tokens = tokens.saturating_sub(gen_tokens);
+        let prefix_hit_rate = if prompt_tokens == 0 {
+            0.0
+        } else {
+            cached_tokens as f64 / prompt_tokens as f64
+        };
         let first_arrival = results
             .iter()
             .map(|r| r.dispatch_s - r.queue_wait_s)
@@ -253,6 +269,8 @@ impl ServeSummary {
             batches,
             tokens,
             gen_tokens,
+            cached_tokens,
+            prefix_hit_rate,
             span_s,
             latency,
             ttft,
@@ -291,6 +309,10 @@ mod tests {
             shard_collectives: 0.0,
             link_bytes_per_s: crate::backend::SHARD_LINK_BYTES_PER_S,
             link_latency_s: crate::backend::SHARD_LINK_LATENCY_S,
+            kv_copy_cycles_per_token: 0.0,
+            kv_copy_energy_pj_per_token: 0.0,
+            kv_evict_cycles_per_block: 0.0,
+            kv_evict_energy_pj_per_block: 0.0,
         }
     }
 
@@ -308,6 +330,7 @@ mod tests {
             sim_cycles: 100 * tokens,
             sim_energy_j: 1e-12,
             gen_tokens: 0,
+            cached_tokens: 0,
             ttft_s: 0.001,
             tpot_s: 0.0,
             adapter,
@@ -532,6 +555,29 @@ mod tests {
         // Monolithic-only runs roll up no shard dimension.
         let mono = ServeSummary::from_results(&[result(2, None, 5)], 1, &cost);
         assert!(mono.per_shard.is_empty());
+    }
+
+    #[test]
+    fn prefix_hit_rate_covers_the_prompt_side_only() {
+        let cost = test_cost();
+        // Two decode sessions: 16-token prompts + 4 generated each; one
+        // resumed 8 prompt tokens from the prefix cache.
+        let mut warm = result(0, None, 20);
+        warm.gen_tokens = 4;
+        warm.cached_tokens = 8;
+        let mut cold = result(1, None, 20);
+        cold.gen_tokens = 4;
+        let s = ServeSummary::from_results(&[warm, cold], 1, &cost);
+        assert_eq!(s.cached_tokens, 8);
+        // 32 prompt tokens total (generated tokens excluded), 8 cached.
+        assert!((s.prefix_hit_rate - 0.25).abs() < 1e-12);
+        // Cache-less runs report a zero rate, never NaN.
+        let off = ServeSummary::from_results(&[result(2, None, 10)], 1, &cost);
+        assert_eq!(off.cached_tokens, 0);
+        assert_eq!(off.prefix_hit_rate, 0.0);
+        let empty = ServeSummary::from_results(&[], 0, &cost);
+        assert_eq!(empty.prefix_hit_rate, 0.0);
+        assert!(empty.prefix_hit_rate.is_finite());
     }
 
     #[test]

@@ -118,6 +118,11 @@ pub struct ServerStats {
     /// [`crate::backend::ExecutionBackend::shard_misses`]; published on
     /// the same schedule as `adapter_misses`).
     pub shard_misses: AtomicUsize,
+    /// Requests the worker's backend served without prefix reuse despite
+    /// a KV-cache deployment ask (mirrors
+    /// [`crate::backend::ExecutionBackend::kv_misses`]; published on the
+    /// same schedule as `adapter_misses`).
+    pub kv_misses: AtomicUsize,
 }
 
 impl ServerStats {
@@ -332,6 +337,10 @@ pub struct LiveRun {
     /// across all replicas (non-zero means the backend cannot shard —
     /// report the downgrade).
     pub shard_misses: u64,
+    /// Requests served without prefix reuse despite a KV-cache
+    /// deployment ask, across all replicas (non-zero means the backend
+    /// cannot share KV state — report the downgrade).
+    pub kv_misses: u64,
 }
 
 impl<B: ExecutionBackend + 'static> ServerPool<B> {
@@ -357,6 +366,7 @@ impl<B: ExecutionBackend + 'static> ServerPool<B> {
         let replica_stats = self.replica_stats();
         let adapter_misses = self.adapter_misses();
         let shard_misses = self.shard_misses();
+        let kv_misses = self.kv_misses();
         let stopped = self.shutdown();
         if let Err(worker_err) = stopped {
             return Err(worker_err);
@@ -369,6 +379,7 @@ impl<B: ExecutionBackend + 'static> ServerPool<B> {
             replica_stats,
             adapter_misses,
             shard_misses,
+            kv_misses,
         })
     }
 
@@ -439,6 +450,16 @@ impl<B: ExecutionBackend + 'static> ServerPool<B> {
         self.replicas
             .iter()
             .map(|s| s.stats().shard_misses.load(Ordering::Relaxed) as u64)
+            .sum()
+    }
+
+    /// Requests served without prefix reuse despite a KV-cache
+    /// deployment ask, across all replicas (as last published by each
+    /// worker).
+    pub fn kv_misses(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|s| s.stats().kv_misses.load(Ordering::Relaxed) as u64)
             .sum()
     }
 
@@ -513,6 +534,9 @@ fn dispatch<B: ExecutionBackend>(
     stats
         .shard_misses
         .store(engine.backend.shard_misses() as usize, Ordering::Relaxed);
+    stats
+        .kv_misses
+        .store(engine.backend.kv_misses() as usize, Ordering::Relaxed);
     for res in results {
         let (queued_id, tx) = waiters
             .pop_front()
@@ -702,6 +726,9 @@ where
         // 3. Admit FIFO into free slots at this step boundary; prefill at
         //    admission (the session's first token).
         let mut prefill_tokens = 0u64;
+        // Prompt tokens resumed from the shared prefix cache this
+        // iteration (billed at block-copy rate when pacing).
+        let mut copied_tokens = 0u64;
         // Adapter side-pipe tokens of this iteration (per-session dense
         // work — never amortized by the shared decode weight pass).
         let mut adapter_tokens = 0u64;
@@ -713,9 +740,11 @@ where
             let admit_s = epoch.elapsed().as_secs_f64();
             let budget = decode_budget(&req, opts.default_gen);
             let (kv, out) = engine.backend.prefill(&req, budget)?;
-            prefill_tokens += kv.prompt_len as u64;
+            let computed = (kv.prompt_len - kv.cached_tokens) as u64;
+            prefill_tokens += computed;
+            copied_tokens += kv.cached_tokens as u64;
             if kv.adapter.is_some() {
-                adapter_tokens += kv.prompt_len as u64;
+                adapter_tokens += computed;
             }
             let mut s = DecodeSession::admit(kv, out, req.arrival_s, admit_s, &cost, 0);
             // First token completed at prefill return (wall clock).
@@ -740,6 +769,7 @@ where
         }
         if opts.pace {
             let iter_s = cost.iteration_time_s(prefill_tokens, &decode_ctxs)
+                + cost.kv_copy_time_s(copied_tokens)
                 + cost.adapter_time_s(adapter_tokens);
             if iter_s > 0.0 {
                 std::thread::sleep(Duration::from_secs_f64(iter_s));
@@ -753,6 +783,9 @@ where
         stats
             .shard_misses
             .store(engine.backend.shard_misses() as usize, Ordering::Relaxed);
+        stats
+            .kv_misses
+            .store(engine.backend.kv_misses() as usize, Ordering::Relaxed);
         let now = epoch.elapsed().as_secs_f64();
         let mut i = 0;
         while i < active.len() {

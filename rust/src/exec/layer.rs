@@ -205,6 +205,21 @@ impl LayerKv {
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
+
+    /// A copy truncated to the first `n` cached positions — the prefix
+    /// snapshot the cross-request KV cache stores at block boundaries.
+    /// Causal attention makes this exact: position `t`'s K/V rows depend
+    /// only on positions `≤ t`, so a truncated cache is bit-identical to
+    /// one built by processing only those `n` positions.
+    pub fn truncated(&self, n: usize) -> LayerKv {
+        let n = n.min(self.len);
+        let d = if self.len == 0 { 0 } else { self.k.len() / self.len };
+        LayerKv {
+            k: self.k[..n * d].to_vec(),
+            v: self.v[..n * d].to_vec(),
+            len: n,
+        }
+    }
 }
 
 /// One transformer layer bound to its quantized weights.
@@ -526,6 +541,42 @@ mod tests {
         let y_long = long.forward_causal(&x, 5, &mut LayerKv::new());
 
         assert_eq!(y_short[..], y_long[..3 * d]);
+    }
+
+    #[test]
+    fn truncated_kv_matches_short_run_bitexactly() {
+        // The prefix-cache snapshot: truncating a 5-position cache to 3
+        // yields exactly the cache a 3-position run would have built,
+        // and resuming from it reproduces the long run's later outputs.
+        let (cfg, w) = tiny();
+        let d = cfg.d_model;
+        let x = synth_embeddings(5, d, 33);
+
+        let mut long = LayerExec::new(&cfg, &w, 128);
+        let mut kv_long = LayerKv::new();
+        let y_long = long.forward_causal(&x, 5, &mut kv_long);
+
+        let mut short = LayerExec::new(&cfg, &w, 128);
+        let mut kv_short = LayerKv::new();
+        short.forward_causal(&x[..3 * d], 3, &mut kv_short);
+
+        let cut = kv_long.truncated(3);
+        assert_eq!(cut.len(), 3);
+        assert_eq!(cut.k, kv_short.k);
+        assert_eq!(cut.v, kv_short.v);
+
+        // Warm resume over the suffix equals the cold long run.
+        let mut resumed = cut;
+        let mut warm = LayerExec::new(&cfg, &w, 128);
+        let y_tail = warm.forward_causal(&x[3 * d..], 2, &mut resumed);
+        assert_eq!(y_tail[..], y_long[3 * d..]);
+        assert_eq!(resumed.k, kv_long.k);
+        assert_eq!(resumed.v, kv_long.v);
+
+        // Degenerate truncations are safe.
+        assert_eq!(kv_long.truncated(0).len(), 0);
+        assert_eq!(kv_long.truncated(99).len(), 5);
+        assert_eq!(LayerKv::new().truncated(2).len(), 0);
     }
 
     #[test]

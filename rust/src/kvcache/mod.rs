@@ -1,0 +1,726 @@
+//! Paged KV-cache subsystem with cross-request prefix sharing.
+//!
+//! AxLLM's reuse story so far lives *within* a forward pass (the Result
+//! Cache over repeated weight codes). This module adds the serving-side
+//! complement: **cross-request** reuse of the KV prefix shared by
+//! requests that open with the same system prompt or multi-turn history
+//! (the vLLM-style paged prefix cache identified in PAPERS.md as the key
+//! serving-side memory optimization).
+//!
+//! Three pieces, layered:
+//!
+//! - [`BlockPool`] — a ref-counted pool of fixed-size KV blocks with
+//!   capacity accounting and copy-on-extend semantics. Blocks are pure
+//!   capacity tokens here: the *contents* of a cached block live in the
+//!   trie node's payload (e.g. a per-layer KV snapshot on the functional
+//!   backend, `()` on the analytic sim backend).
+//! - [`PrefixCache`] — a prefix trie keyed on block-granular token-prefix
+//!   keys ([`block_keys`]). Each trie node owns exactly one pool block;
+//!   a root-to-node path is a block chain for one shared prefix. Lookups
+//!   pin the matched path ([`PrefixLease`]) so eviction cannot reclaim
+//!   blocks under an active session.
+//! - **Eviction & preemption** — when the pool is exhausted, the LRU
+//!   *unpinned* leaf is evicted (its payload recomputable from scratch).
+//!   If every leaf is pinned, the LRU *pinned* leaf is **preempted**:
+//!   force-evicted with its pins cleared, its holders' leases degrading
+//!   to safe no-ops. Correctness is unaffected either way — sessions own
+//!   clones of the cached payload and a victim prefix is simply
+//!   recomputed (and recharged at full prefill rate) on its next miss.
+//!
+//! Invariants (checked by [`PrefixCache::validate`], property-tested in
+//! `tests/prop_kvcache.rs`):
+//!
+//! - a live node's block refcount is exactly `1 + pins` (one liveness
+//!   ref plus one per outstanding lease);
+//! - refcounts never go negative; a dead node holds no pins;
+//! - blocks-in-use equals the live node count — no block leaks across
+//!   eviction or preemption;
+//! - a zero-capacity pool is safe: lookups miss, inserts no-op, leases
+//!   release cleanly.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Sizing for a [`PrefixCache`]: a fixed number of fixed-size blocks
+/// (HBM capacity expressed in KV blocks, vLLM-style).
+#[derive(Clone, Copy, Debug)]
+pub struct KvCacheConfig {
+    /// Pool capacity in blocks. Zero disables caching (all lookups
+    /// miss, all inserts no-op) without disturbing callers.
+    pub blocks: usize,
+    /// Tokens per block. Prefixes are cached at block granularity: a
+    /// prefix of `n` tokens occupies `n / block_size` full blocks and
+    /// the remainder is recomputed.
+    pub block_size: usize,
+}
+
+impl KvCacheConfig {
+    /// A config with `blocks` blocks of `block_size` tokens each.
+    pub fn new(blocks: usize, block_size: usize) -> KvCacheConfig {
+        assert!(block_size > 0, "block_size must be at least 1 token");
+        KvCacheConfig { blocks, block_size }
+    }
+}
+
+/// Handle to one fixed-size block in a [`BlockPool`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockId(usize);
+
+impl BlockId {
+    /// Slot index inside the pool (stable for the block's lifetime).
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
+/// Ref-counted pool of fixed-size KV blocks with capacity accounting.
+///
+/// The pool tracks *capacity*, not contents: a block is a claim on
+/// `block_size` tokens worth of KV memory. Refcounts support prefix
+/// sharing (many sessions pin one block) and [`copy_on_extend`]
+/// (diverging a shared block before writing).
+///
+/// [`copy_on_extend`]: BlockPool::copy_on_extend
+#[derive(Debug)]
+pub struct BlockPool {
+    /// Refcount per slot; 0 means the slot is free.
+    refs: Vec<u32>,
+    /// Free-list of slot indices.
+    free: Vec<usize>,
+    /// Slots currently allocated (refcount > 0).
+    in_use: usize,
+    /// Tokens per block.
+    block_size: usize,
+}
+
+impl BlockPool {
+    /// A pool of `capacity` blocks of `block_size` tokens each.
+    pub fn new(capacity: usize, block_size: usize) -> BlockPool {
+        assert!(block_size > 0, "block_size must be at least 1 token");
+        BlockPool {
+            refs: vec![0; capacity],
+            free: (0..capacity).rev().collect(),
+            in_use: 0,
+            block_size,
+        }
+    }
+
+    /// Allocate a free block with refcount 1, or `None` when the pool
+    /// is exhausted (callers evict/preempt and retry, or degrade).
+    pub fn try_alloc(&mut self) -> Option<BlockId> {
+        let slot = self.free.pop()?;
+        debug_assert_eq!(self.refs[slot], 0, "free-list slot had live refs");
+        self.refs[slot] = 1;
+        self.in_use += 1;
+        Some(BlockId(slot))
+    }
+
+    /// Add a reference to an allocated block (prefix sharing / pinning).
+    pub fn retain(&mut self, b: BlockId) {
+        assert!(self.refs[b.0] > 0, "retain on a free block");
+        self.refs[b.0] += 1;
+    }
+
+    /// Drop one reference; returns `true` when this was the last ref
+    /// and the block went back on the free list.
+    pub fn release(&mut self, b: BlockId) -> bool {
+        assert!(self.refs[b.0] > 0, "release on a free block (refcount underflow)");
+        self.refs[b.0] -= 1;
+        if self.refs[b.0] == 0 {
+            self.free.push(b.0);
+            self.in_use -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Copy-on-extend: make `b` safe to append to. A uniquely owned
+    /// block (refcount 1) is returned as-is; a shared block loses one
+    /// ref and a fresh private block is allocated for the writer
+    /// (`None` if the pool is full — the caller must evict first).
+    pub fn copy_on_extend(&mut self, b: BlockId) -> Option<BlockId> {
+        assert!(self.refs[b.0] > 0, "copy_on_extend on a free block");
+        if self.refs[b.0] == 1 {
+            return Some(b);
+        }
+        let fresh = self.try_alloc()?;
+        self.release(b);
+        Some(fresh)
+    }
+
+    /// Current refcount of a slot (0 for free slots). For invariant
+    /// checks and tests.
+    pub fn refs(&self, b: BlockId) -> u32 {
+        self.refs[b.0]
+    }
+
+    /// Blocks currently allocated.
+    pub fn in_use(&self) -> usize {
+        self.in_use
+    }
+
+    /// Blocks currently free.
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Total pool capacity in blocks.
+    pub fn capacity(&self) -> usize {
+        self.refs.len()
+    }
+
+    /// Tokens per block.
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+}
+
+/// Counters and gauges snapshot of a [`PrefixCache`]
+/// ([`PrefixCache::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// Prefix lookups attempted.
+    pub lookups: u64,
+    /// Lookups that matched at least one cached block.
+    pub hits: u64,
+    /// Total tokens served from cache across all hits.
+    pub hit_tokens: u64,
+    /// Blocks inserted (trie nodes created) over the cache lifetime.
+    pub inserted_blocks: u64,
+    /// LRU evictions of unpinned prefix blocks.
+    pub evictions: u64,
+    /// Preemptions: pinned prefix blocks force-evicted under memory
+    /// pressure (their holders' leases degrade to no-ops).
+    pub preemptions: u64,
+    /// Blocks currently allocated in the pool (gauge).
+    pub blocks_in_use: u64,
+    /// Blocks currently pinned by outstanding leases (gauge; a live
+    /// serving path should drain this to zero between requests).
+    pub pinned_blocks: u64,
+    /// Pool capacity in blocks (gauge).
+    pub capacity_blocks: u64,
+}
+
+/// A pin on a root-to-node trie path, returned by
+/// [`PrefixCache::lookup_pin`]. While held, eviction cannot reclaim the
+/// pinned blocks (preemption still can — release then no-ops). Release
+/// exactly once per lease via [`PrefixCache::release`].
+#[derive(Clone, Debug)]
+pub struct PrefixLease {
+    /// Node indices of the pinned path, root-side first.
+    path: Vec<usize>,
+}
+
+impl PrefixLease {
+    /// Number of pinned blocks on this lease's path.
+    pub fn blocks(&self) -> usize {
+        self.path.len()
+    }
+}
+
+/// A successful prefix lookup: the pinned path, the number of prefix
+/// tokens served from cache, and a clone of the deepest node's payload.
+#[derive(Clone, Debug)]
+pub struct PrefixHit<T> {
+    /// Pin on the matched block chain — release when the session ends.
+    pub lease: PrefixLease,
+    /// Prefix tokens covered by the matched chain
+    /// (`matched blocks × block_size`).
+    pub tokens: usize,
+    /// Payload snapshot of the deepest matched node (e.g. per-layer KV
+    /// state truncated at `tokens`).
+    pub payload: T,
+}
+
+/// One trie node: one block of one shared prefix chain.
+#[derive(Debug)]
+struct Node<T> {
+    /// Block key at this depth (see [`block_keys`]).
+    key: u64,
+    /// Parent node index; `None` for children of the trie root.
+    parent: Option<usize>,
+    /// Live children only (dead nodes are unlinked immediately).
+    children: BTreeMap<u64, usize>,
+    /// The pool block this node owns (1 liveness ref + 1 per pin).
+    block: BlockId,
+    /// Outstanding lease pins through this node.
+    pins: u32,
+    /// Logical LRU clock stamp of the last touch.
+    last_use: u64,
+    /// Cached payload snapshot at this node's block boundary.
+    payload: T,
+    /// Dead nodes stay in the arena (slots are never reused) but hold
+    /// no block and no pins.
+    live: bool,
+}
+
+/// Mutex-guarded trie + pool state of a [`PrefixCache`].
+#[derive(Debug)]
+struct Inner<T> {
+    /// Node arena; grow-only, dead nodes flagged rather than reused so
+    /// lease paths can never dangle onto a different prefix.
+    nodes: Vec<Node<T>>,
+    /// Children of the (implicit) root, by block key.
+    root_children: BTreeMap<u64, usize>,
+    /// Capacity accounting for all cached blocks.
+    pool: BlockPool,
+    /// Logical LRU clock; bumped once per cache operation.
+    tick: u64,
+    /// Running counters (gauges come from the pool at snapshot time).
+    stats: PrefixStats,
+}
+
+impl<T> Inner<T> {
+    /// Get a block, evicting the LRU unpinned leaf — or, when every
+    /// leaf is pinned, preempting the LRU pinned leaf — as needed.
+    /// Nodes in `protect` (the in-flight insertion path) are exempt.
+    /// `None` only when the trie has no evictable node left (e.g. a
+    /// zero-capacity pool).
+    fn ensure_block(&mut self, protect: &[usize]) -> Option<BlockId> {
+        loop {
+            if let Some(b) = self.pool.try_alloc() {
+                return Some(b);
+            }
+            let leaf = |n: &Node<T>| n.live && n.children.is_empty();
+            let victim = self
+                .nodes
+                .iter()
+                .enumerate()
+                .filter(|(i, n)| leaf(n) && n.pins == 0 && !protect.contains(i))
+                .min_by_key(|(_, n)| n.last_use)
+                .map(|(i, _)| i);
+            if let Some(i) = victim {
+                self.evict(i);
+                self.stats.evictions += 1;
+                continue;
+            }
+            // Memory pressure with every leaf pinned: preempt the LRU
+            // pinned leaf. Its holders keep their cloned payloads; the
+            // prefix is recomputed on its next miss.
+            let victim = self
+                .nodes
+                .iter()
+                .enumerate()
+                .filter(|(i, n)| leaf(n) && !protect.contains(i))
+                .min_by_key(|(_, n)| n.last_use)
+                .map(|(i, _)| i);
+            match victim {
+                Some(i) => {
+                    self.preempt(i);
+                    self.stats.preemptions += 1;
+                }
+                None => return None,
+            }
+        }
+    }
+
+    /// Unlink `i` from its parent's child map (it must be live).
+    fn unlink(&mut self, i: usize) {
+        let (key, parent) = (self.nodes[i].key, self.nodes[i].parent);
+        match parent {
+            None => self.root_children.remove(&key),
+            Some(p) => self.nodes[p].children.remove(&key),
+        };
+    }
+
+    /// Evict an unpinned leaf: unlink, release its liveness ref (which
+    /// frees the block), mark dead.
+    fn evict(&mut self, i: usize) {
+        debug_assert_eq!(self.nodes[i].pins, 0, "evict picked a pinned node");
+        self.unlink(i);
+        let b = self.nodes[i].block;
+        self.pool.release(b);
+        self.nodes[i].live = false;
+    }
+
+    /// Preempt a pinned leaf: unlink, drop the liveness ref AND every
+    /// pin ref so the block frees immediately, mark dead. Outstanding
+    /// leases observe `live == false` and release as a no-op.
+    fn preempt(&mut self, i: usize) {
+        self.unlink(i);
+        let (b, pins) = (self.nodes[i].block, self.nodes[i].pins);
+        for _ in 0..=pins {
+            self.pool.release(b);
+        }
+        self.nodes[i].pins = 0;
+        self.nodes[i].live = false;
+    }
+
+    /// Child of `parent` (or of the root) with block key `key`.
+    fn child(&self, parent: Option<usize>, key: u64) -> Option<usize> {
+        match parent {
+            None => self.root_children.get(&key).copied(),
+            Some(p) => self.nodes[p].children.get(&key).copied(),
+        }
+    }
+}
+
+/// A prefix trie over ref-counted KV blocks, shared across requests.
+///
+/// `T` is the per-block payload snapshot: `Vec<LayerKv>` (truncated at
+/// the block boundary) on the functional backend, `()` on the analytic
+/// sim backend. All methods take `&self` — the cache lives inside
+/// backends whose trait surface is `&self` — with a mutex inside.
+pub struct PrefixCache<T: Clone> {
+    inner: Mutex<Inner<T>>,
+    block_size: usize,
+}
+
+impl<T: Clone> PrefixCache<T> {
+    /// An empty cache over a fresh [`BlockPool`] sized by `cfg`.
+    pub fn new(cfg: KvCacheConfig) -> PrefixCache<T> {
+        PrefixCache {
+            inner: Mutex::new(Inner {
+                nodes: Vec::new(),
+                root_children: BTreeMap::new(),
+                pool: BlockPool::new(cfg.blocks, cfg.block_size),
+                tick: 0,
+                stats: PrefixStats::default(),
+            }),
+            block_size: cfg.block_size,
+        }
+    }
+
+    /// Tokens per block.
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner<T>> {
+        self.inner.lock().expect("kv cache mutex poisoned")
+    }
+
+    /// Match `keys` against the trie and pin the deepest cached chain.
+    /// `None` on a complete miss; on a hit the lease pins every matched
+    /// block against eviction until [`release`](PrefixCache::release).
+    pub fn lookup_pin(&self, keys: &[u64]) -> Option<PrefixHit<T>> {
+        let mut g = self.lock();
+        g.tick += 1;
+        let tick = g.tick;
+        g.stats.lookups += 1;
+        let mut path: Vec<usize> = Vec::new();
+        let mut parent: Option<usize> = None;
+        for &key in keys {
+            match g.child(parent, key) {
+                Some(i) => {
+                    path.push(i);
+                    parent = Some(i);
+                }
+                None => break,
+            }
+        }
+        let &deepest = path.last()?;
+        for &i in &path {
+            g.nodes[i].pins += 1;
+            g.nodes[i].last_use = tick;
+            let b = g.nodes[i].block;
+            g.pool.retain(b);
+        }
+        let tokens = path.len() * self.block_size;
+        g.stats.hits += 1;
+        g.stats.hit_tokens += tokens as u64;
+        Some(PrefixHit {
+            payload: g.nodes[deepest].payload.clone(),
+            lease: PrefixLease { path },
+            tokens,
+        })
+    }
+
+    /// Insert the block chain for `keys`, calling
+    /// `payload_at(cumulative_tokens)` for each *new* block boundary
+    /// (existing nodes are freshened, not overwritten — chains are
+    /// content-deterministic per key). Stops early, keeping a valid
+    /// shorter chain, if the pool cannot yield another block.
+    pub fn insert_with<F>(&self, keys: &[u64], mut payload_at: F)
+    where
+        F: FnMut(usize) -> T,
+    {
+        let mut g = self.lock();
+        g.tick += 1;
+        let tick = g.tick;
+        let mut parent: Option<usize> = None;
+        let mut path: Vec<usize> = Vec::new();
+        for (depth, &key) in keys.iter().enumerate() {
+            let idx = match g.child(parent, key) {
+                Some(i) => {
+                    g.nodes[i].last_use = tick;
+                    i
+                }
+                None => {
+                    let block = match g.ensure_block(&path) {
+                        Some(b) => b,
+                        None => return,
+                    };
+                    let payload = payload_at((depth + 1) * self.block_size);
+                    let idx = g.nodes.len();
+                    g.nodes.push(Node {
+                        key,
+                        parent,
+                        children: BTreeMap::new(),
+                        block,
+                        pins: 0,
+                        last_use: tick,
+                        payload,
+                        live: true,
+                    });
+                    match parent {
+                        None => g.root_children.insert(key, idx),
+                        Some(p) => g.nodes[p].children.insert(key, idx),
+                    };
+                    g.stats.inserted_blocks += 1;
+                    idx
+                }
+            };
+            path.push(idx);
+            parent = Some(idx);
+        }
+    }
+
+    /// Release a lease: unpin every still-live node on its path (nodes
+    /// preempted while the lease was out are skipped — their refs were
+    /// already force-dropped). Call exactly once per lease.
+    pub fn release(&self, lease: PrefixLease) {
+        let mut g = self.lock();
+        for i in lease.path {
+            if !g.nodes[i].live {
+                continue;
+            }
+            debug_assert!(g.nodes[i].pins > 0, "release without a matching pin");
+            g.nodes[i].pins -= 1;
+            let b = g.nodes[i].block;
+            g.pool.release(b);
+        }
+    }
+
+    /// Snapshot the counters plus the pool's live gauges.
+    pub fn stats(&self) -> PrefixStats {
+        let g = self.lock();
+        PrefixStats {
+            blocks_in_use: g.pool.in_use() as u64,
+            pinned_blocks: g
+                .nodes
+                .iter()
+                .filter(|n| n.live && n.pins > 0)
+                .count() as u64,
+            capacity_blocks: g.pool.capacity() as u64,
+            ..g.stats
+        }
+    }
+
+    /// Check every structural invariant (see the module docs); `Err`
+    /// describes the first violation. Test/debug surface — the serving
+    /// path never calls this.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        let g = self.lock();
+        let mut live = 0usize;
+        for (i, n) in g.nodes.iter().enumerate() {
+            if !n.live {
+                if n.pins != 0 {
+                    return Err(format!("dead node {i} retains {} pins", n.pins));
+                }
+                continue;
+            }
+            live += 1;
+            let refs = g.pool.refs(n.block);
+            if refs != 1 + n.pins {
+                return Err(format!(
+                    "node {i}: block refcount {refs} != 1 + {} pins",
+                    n.pins
+                ));
+            }
+            if g.child(n.parent, n.key) != Some(i) {
+                return Err(format!("node {i} not linked from its parent"));
+            }
+            if let Some(p) = n.parent {
+                if !g.nodes[p].live {
+                    return Err(format!("live node {i} hangs off dead parent {p}"));
+                }
+            }
+        }
+        if g.pool.in_use() != live {
+            return Err(format!(
+                "blocks in use {} != live nodes {live} (leak or double-free)",
+                g.pool.in_use()
+            ));
+        }
+        if g.pool.in_use() + g.pool.free_blocks() != g.pool.capacity() {
+            return Err("pool capacity accounting diverged".to_string());
+        }
+        Ok(())
+    }
+}
+
+/// Block-granular trie keys for a shared-prefix group: key `i` hashes
+/// the whole prefix up to block `i` (chained), so two groups collide on
+/// a chain only by hash accident and a shorter chain's keys are always
+/// a prefix of a longer chain's.
+pub fn block_keys(group: u64, blocks: usize) -> Vec<u64> {
+    let mut h = group ^ 0xA55E_55ED_5EED_0001;
+    (0..blocks)
+        .map(|i| {
+            h = h
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .rotate_left(23)
+                ^ (i as u64 + 1);
+            h
+        })
+        .collect()
+}
+
+/// Cacheable prefix length for a request: its shared-prefix tag length,
+/// capped at `seq_len - 1` (prefill must compute at least the final row
+/// to produce last-position logits), rounded down to a whole number of
+/// blocks.
+pub fn aligned_prefix(tag_len: usize, seq_len: usize, block_size: usize) -> usize {
+    if block_size == 0 {
+        return 0;
+    }
+    let usable = tag_len.min(seq_len.saturating_sub(1));
+    (usable / block_size) * block_size
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_alloc_retain_release_roundtrip() {
+        let mut p = BlockPool::new(2, 16);
+        assert_eq!((p.capacity(), p.in_use(), p.free_blocks()), (2, 0, 2));
+        let a = p.try_alloc().unwrap();
+        let b = p.try_alloc().unwrap();
+        assert!(p.try_alloc().is_none(), "pool must report exhaustion");
+        p.retain(a);
+        assert_eq!(p.refs(a), 2);
+        assert!(!p.release(a), "shared block must survive one release");
+        assert!(p.release(a), "last release frees");
+        assert!(p.release(b));
+        assert_eq!((p.in_use(), p.free_blocks()), (0, 2));
+        // Freed slots recycle.
+        assert!(p.try_alloc().is_some());
+    }
+
+    #[test]
+    fn pool_copy_on_extend_diverges_only_shared_blocks() {
+        let mut p = BlockPool::new(2, 16);
+        let a = p.try_alloc().unwrap();
+        // Unique owner: extend in place.
+        assert_eq!(p.copy_on_extend(a), Some(a));
+        // Shared: writer gets a fresh block, reader keeps the original.
+        p.retain(a);
+        let w = p.copy_on_extend(a).unwrap();
+        assert_ne!(w, a);
+        assert_eq!(p.refs(a), 1);
+        assert_eq!(p.refs(w), 1);
+        // Shared and pool full: divergence is refused, refs unchanged.
+        p.retain(a);
+        assert_eq!(p.copy_on_extend(a), None);
+        assert_eq!(p.refs(a), 2);
+    }
+
+    #[test]
+    fn lookup_hits_deepest_inserted_chain_and_pins_it() {
+        let cache: PrefixCache<usize> = PrefixCache::new(KvCacheConfig::new(8, 4));
+        let keys = block_keys(7, 3);
+        cache.insert_with(&keys, |tokens| tokens);
+        // Full-chain hit returns the deepest payload and token count.
+        let hit = cache.lookup_pin(&keys).expect("inserted chain must hit");
+        assert_eq!(hit.tokens, 12);
+        assert_eq!(hit.payload, 12);
+        assert_eq!(hit.lease.blocks(), 3);
+        // A longer probe of the same group still matches the cached 3.
+        let longer = cache.lookup_pin(&block_keys(7, 5)).unwrap();
+        assert_eq!(longer.tokens, 12);
+        // A different group misses entirely.
+        assert!(cache.lookup_pin(&block_keys(8, 3)).is_none());
+        let s = cache.stats();
+        assert_eq!((s.lookups, s.hits, s.hit_tokens), (3, 2, 24));
+        assert_eq!(s.blocks_in_use, 3);
+        cache.release(hit.lease);
+        cache.release(longer.lease);
+        cache.validate().unwrap();
+    }
+
+    #[test]
+    fn eviction_reclaims_lru_unpinned_leaf_without_leaking() {
+        // Capacity 2: inserting a third group's block must evict the
+        // least-recently-used unpinned chain.
+        let cache: PrefixCache<()> = PrefixCache::new(KvCacheConfig::new(2, 4));
+        cache.insert_with(&block_keys(1, 1), |_| ());
+        cache.insert_with(&block_keys(2, 1), |_| ());
+        // Touch group 1 so group 2 becomes the LRU victim.
+        cache.lookup_pin(&block_keys(1, 1)).map(|h| cache.release(h.lease));
+        cache.insert_with(&block_keys(3, 1), |_| ());
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.blocks_in_use, 2);
+        assert!(cache.lookup_pin(&block_keys(2, 1)).is_none(), "LRU evicted");
+        assert!(cache.lookup_pin(&block_keys(1, 1)).is_some(), "MRU survives");
+        cache.validate().unwrap();
+    }
+
+    #[test]
+    fn pinned_chains_survive_eviction_until_preemption() {
+        let cache: PrefixCache<()> = PrefixCache::new(KvCacheConfig::new(1, 4));
+        cache.insert_with(&block_keys(1, 1), |_| ());
+        let hit = cache.lookup_pin(&block_keys(1, 1)).unwrap();
+        // The only block is pinned: the next insert must preempt it.
+        cache.insert_with(&block_keys(2, 1), |_| ());
+        let s = cache.stats();
+        assert_eq!((s.evictions, s.preemptions), (0, 1));
+        assert_eq!(s.blocks_in_use, 1);
+        assert!(cache.lookup_pin(&block_keys(2, 1)).is_some());
+        // Releasing the preempted lease is a safe no-op.
+        cache.release(hit.lease);
+        cache.validate().unwrap();
+    }
+
+    #[test]
+    fn zero_capacity_pool_is_inert_but_safe() {
+        let cache: PrefixCache<()> = PrefixCache::new(KvCacheConfig::new(0, 16));
+        cache.insert_with(&block_keys(1, 4), |_| ());
+        assert!(cache.lookup_pin(&block_keys(1, 4)).is_none());
+        let s = cache.stats();
+        assert_eq!((s.inserted_blocks, s.blocks_in_use, s.capacity_blocks), (0, 0, 0));
+        cache.validate().unwrap();
+    }
+
+    #[test]
+    fn insert_protects_its_own_path_from_eviction() {
+        // Capacity 2, inserting a 3-block chain: the chain's own first
+        // blocks must never be chosen as eviction victims mid-insert —
+        // the insert just stops when capacity runs out.
+        let cache: PrefixCache<usize> = PrefixCache::new(KvCacheConfig::new(2, 4));
+        cache.insert_with(&block_keys(1, 3), |t| t);
+        let s = cache.stats();
+        assert_eq!(s.inserted_blocks, 2);
+        assert_eq!((s.evictions, s.preemptions), (0, 0));
+        let hit = cache.lookup_pin(&block_keys(1, 3)).unwrap();
+        assert_eq!(hit.tokens, 8, "truncated chain still serves its blocks");
+        cache.release(hit.lease);
+        cache.validate().unwrap();
+    }
+
+    #[test]
+    fn block_keys_are_chained_and_prefix_consistent() {
+        let short = block_keys(42, 2);
+        let long = block_keys(42, 5);
+        assert_eq!(&long[..2], &short[..], "shorter chain is a strict prefix");
+        assert_ne!(block_keys(41, 2), short, "groups get distinct chains");
+        assert_ne!(long[3], long[4], "keys vary along the chain");
+    }
+
+    #[test]
+    fn aligned_prefix_caps_at_seq_minus_one_and_block_aligns() {
+        // 20-token tag, 32-token request, 8-token blocks: 16 cacheable.
+        assert_eq!(aligned_prefix(20, 32, 8), 16);
+        // Tag covering the whole request leaves the last row computed.
+        assert_eq!(aligned_prefix(32, 32, 8), 24);
+        assert_eq!(aligned_prefix(8, 8, 8), 0);
+        // Short tags round down to zero blocks.
+        assert_eq!(aligned_prefix(7, 32, 8), 0);
+        assert_eq!(aligned_prefix(0, 32, 8), 0);
+        assert_eq!(aligned_prefix(16, 1, 8), 0);
+    }
+}

@@ -23,6 +23,12 @@
 //!   generation.
 //! - [`exec`] — a functional (bit-exact) implementation of the reuse
 //!   datapath, used to prove exact arithmetic semantics.
+//! - [`kvcache`] — the cross-request prefix KV reuse subsystem: a
+//!   ref-counted paged block pool plus a prefix trie mapping shared
+//!   request prefixes (system prompts, multi-turn history) to pinned
+//!   block chains, with LRU eviction and preemption-with-recompute
+//!   under memory pressure. Backends consult it at prefill to skip
+//!   already-computed prefix tokens.
 //! - [`energy`] — activity-factor energy/power and gate-count area models
 //!   calibrated to the paper's 15nm synthesis anchors.
 //! - [`runtime`] — PJRT CPU runtime that loads the AOT-compiled JAX/Pallas
@@ -67,6 +73,7 @@ pub mod config;
 pub mod coordinator;
 pub mod energy;
 pub mod exec;
+pub mod kvcache;
 pub mod model;
 pub mod quant;
 pub mod report;

@@ -7,6 +7,7 @@
 //! axllm serve [--backend sim|functional|pjrt] [--model M] [--requests N]
 //!             [--rate R] [--dataset D] [--batch B] [--artifacts DIR]
 //!             [--adapters N] [--adapter-rank R]
+//!             [--kv-blocks N] [--block-size B] [--prefix-groups K]
 //! axllm info [--artifacts DIR]
 //! ```
 //!
@@ -109,6 +110,7 @@ USAGE:
               [--max-wait-ms W] [--artifacts DIR] [--seed N]
               [--live] [--replicas N] [--decode] [--gen-tokens N]
               [--adapters N] [--adapter-rank R] [--shards N]
+              [--kv-blocks N] [--block-size B] [--prefix-groups K]
       backends:
         sim         cycle/energy attribution only — no logits, no artifacts
         functional  bit-exact in-process reuse-datapath execution, no artifacts
@@ -132,6 +134,16 @@ USAGE:
       all-gather collective, and the summary reports each shard's reuse
       rate. A shard group is one logical replica (--replicas spreads
       whole groups). pjrt is shard-unaware and reports the misses.
+      --kv-blocks N (decode only) adds a paged prefix KV cache of N
+      fixed-size blocks (--block-size B positions each, default 16):
+      multi-turn sessions sharing a prompt prefix resume the shared
+      blocks instead of recomputing them — functional logits stay
+      bit-identical warm or cold, the sim cost model bills cached tokens
+      at block-copy rate plus eviction sweeps under memory pressure, and
+      the summary reports the prefix hit rate. --prefix-groups K
+      (default 4 when the cache is on) shapes the trace into K session
+      groups with shared prefixes. pjrt has no KV surface and reports
+      the misses.
       examples:
         axllm serve --backend sim --requests 64 --model tiny
         axllm serve --backend functional --requests 16 --dataset squad
@@ -143,6 +155,8 @@ USAGE:
         axllm serve --decode --adapters 8 --adapter-rank 8 --backend sim
         axllm serve --backend sim --shards 4 --requests 64
         axllm serve --backend functional --decode --shards 2
+        axllm serve --decode --kv-blocks 64 --backend functional
+        axllm serve --decode --kv-blocks 32 --block-size 8 --backend sim
   axllm info [--artifacts DIR]
 ";
 
@@ -329,6 +343,13 @@ fn print_summary(s: &axllm::coordinator::ServeSummary) {
             s.tpot.p95_s * 1e3
         );
     }
+    if s.cached_tokens > 0 {
+        println!(
+            "prefix reuse: {} prompt tokens served from cache ({:.1}% hit rate)",
+            s.cached_tokens,
+            s.prefix_hit_rate * 100.0
+        );
+    }
     // Per-shard rollup — present only for tensor-parallel runs.
     if !s.per_shard.is_empty() {
         let total_ops: u64 = s
@@ -397,6 +418,12 @@ struct ServeOpts {
     adapter_rank: usize,
     /// Tensor-parallel shards per replica (1 = monolithic).
     shards: usize,
+    /// Paged prefix KV cache capacity in blocks; 0 = no cache.
+    kv_blocks: usize,
+    /// Token positions per KV block.
+    block_size: usize,
+    /// Shared-prefix session groups shaping the trace; 0 = untagged.
+    prefix_groups: u32,
 }
 
 impl ServeOpts {
@@ -404,6 +431,12 @@ impl ServeOpts {
     fn trace(&self) -> Vec<axllm::workload::Request> {
         let mut gen =
             TraceGenerator::new(self.dataset, self.rate, self.seed).with_adapters(self.adapters);
+        if self.prefix_groups > 0 {
+            // Multi-turn sessions (4 turns each) sharing per-group
+            // prompt prefixes — the traffic shape prefix caching pays
+            // off on.
+            gen = gen.with_shared_prefixes(self.prefix_groups, 4);
+        }
         if self.decode {
             gen.take_decode(self.n, (self.gen_tokens > 0).then_some(self.gen_tokens))
         } else {
@@ -434,6 +467,23 @@ fn run_serve<B: ExecutionBackend>(engine: &Engine<B>, opts: &ServeOpts) -> Resul
     let shard_misses = engine.backend.shard_misses();
     if shard_misses > 0 {
         println!("shard misses (served monolithically): {shard_misses}");
+    }
+    if let Some(ps) = engine.backend.prefix_stats() {
+        println!(
+            "prefix cache: {}/{} blocks in use ({} pinned), {} hits / {} lookups ({} tokens), {} evictions, {} preemptions",
+            ps.blocks_in_use,
+            ps.capacity_blocks,
+            ps.pinned_blocks,
+            ps.hits,
+            ps.lookups,
+            ps.hit_tokens,
+            ps.evictions,
+            ps.preemptions
+        );
+    }
+    let kv_misses = engine.backend.kv_misses();
+    if kv_misses > 0 {
+        println!("kv misses (served without prefix reuse): {kv_misses}");
     }
     Ok(())
 }
@@ -482,6 +532,9 @@ where
     if run.shard_misses > 0 {
         println!("shard misses (served monolithically): {}", run.shard_misses);
     }
+    if run.kv_misses > 0 {
+        println!("kv misses (served without prefix reuse): {}", run.kv_misses);
+    }
     for (i, (b, r)) in run.replica_stats.iter().enumerate() {
         println!("replica {i}: {b} batches, {r} requests");
     }
@@ -492,6 +545,7 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
     // Default 7 keeps the historical `axllm serve` trace (earlier
     // versions hardcoded trace seed 7), so recorded outputs stay
     // comparable.
+    let kv_blocks = args.get("kv-blocks", 0usize)?;
     let opts = ServeOpts {
         n: args.get("requests", 64usize)?,
         rate: args.get("rate", 200.0f64)?,
@@ -508,12 +562,26 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
         adapters: args.get("adapters", 0u32)?,
         adapter_rank: args.get("adapter-rank", 16usize)?,
         shards: args.get("shards", 1usize)?,
+        kv_blocks,
+        block_size: args.get("block-size", 16usize)?,
+        // A prefix cache without shared-prefix traffic never hits:
+        // tagging defaults on alongside the cache.
+        prefix_groups: args.get("prefix-groups", if kv_blocks > 0 { 4u32 } else { 0u32 })?,
     };
     if opts.gen_tokens > 0 && !opts.decode {
         return Err("--gen-tokens needs --decode".into());
     }
     if opts.shards == 0 {
         return Err("--shards must be ≥ 1".into());
+    }
+    if opts.kv_blocks > 0 && !opts.decode {
+        return Err("--kv-blocks needs --decode (prefix KV reuse is a decode-session feature)".into());
+    }
+    if args.flag("block-size").is_some() && opts.kv_blocks == 0 {
+        return Err("--block-size needs --kv-blocks".into());
+    }
+    if opts.block_size == 0 {
+        return Err("--block-size must be ≥ 1".into());
     }
     if args.flag("adapter-rank").is_some() && opts.adapters == 0 {
         return Err("--adapter-rank needs --adapters".into());
@@ -536,6 +604,7 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
             let model_cfg = model_by_name(name).ok_or_else(|| format!("unknown model: {name}"))?;
             let (n_adapters, rank) = (opts.adapters as usize, opts.adapter_rank);
             let shards = opts.shards;
+            let (kv_blocks, block_size) = (opts.kv_blocks, opts.block_size);
             if live {
                 // Paced: the live worker is occupied for the simulated
                 // service time, so queueing and replica scaling behave
@@ -545,19 +614,26 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
                 let decode = opts.decode;
                 let make = move |_i: usize| {
                     SimBackend::new(model_cfg.clone(), acc_cfg).map(|b| {
-                        Engine::new(
-                            b.with_paced(!decode)
-                                .with_adapters(n_adapters, rank)
-                                .with_shards(shards),
-                        )
+                        let b = b
+                            .with_paced(!decode)
+                            .with_adapters(n_adapters, rank)
+                            .with_shards(shards);
+                        Engine::new(if kv_blocks > 0 {
+                            b.with_kv_cache(kv_blocks, block_size)
+                        } else {
+                            b
+                        })
                     })
                 };
                 run_live("sim", make, &opts)
             } else {
-                let b = SimBackend::new(model_cfg, acc_cfg)
+                let mut b = SimBackend::new(model_cfg, acc_cfg)
                     .map_err(|e| format!("{e:#}"))?
                     .with_adapters(n_adapters, rank)
                     .with_shards(shards);
+                if kv_blocks > 0 {
+                    b = b.with_kv_cache(kv_blocks, block_size);
+                }
                 run_serve(&Engine::new(b), &opts)
             }
         }
@@ -567,17 +643,27 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
             let seed = opts.seed;
             let (n_adapters, rank) = (opts.adapters as usize, opts.adapter_rank);
             let shards = opts.shards;
+            let (kv_blocks, block_size) = (opts.kv_blocks, opts.block_size);
             if live {
                 let make = move |_i: usize| {
-                    FunctionalBackend::new(model_cfg.clone(), acc_cfg, seed)
-                        .map(|b| Engine::new(b.with_adapters(n_adapters, rank).with_shards(shards)))
+                    FunctionalBackend::new(model_cfg.clone(), acc_cfg, seed).map(|b| {
+                        let b = b.with_adapters(n_adapters, rank).with_shards(shards);
+                        Engine::new(if kv_blocks > 0 {
+                            b.with_kv_cache(kv_blocks, block_size)
+                        } else {
+                            b
+                        })
+                    })
                 };
                 run_live("functional", make, &opts)
             } else {
-                let b = FunctionalBackend::new(model_cfg, acc_cfg, seed)
+                let mut b = FunctionalBackend::new(model_cfg, acc_cfg, seed)
                     .map_err(|e| format!("{e:#}"))?
                     .with_adapters(n_adapters, rank)
                     .with_shards(shards);
+                if kv_blocks > 0 {
+                    b = b.with_kv_cache(kv_blocks, block_size);
+                }
                 run_serve(&Engine::new(b), &opts)
             }
         }
@@ -600,16 +686,36 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
                     opts.shards
                 );
             }
+            if opts.kv_blocks > 0 {
+                // One fixed-shape HLO call per window: there is no
+                // per-layer KV tensor to share, so prefix reuse cannot
+                // be honored — requests recompute with recorded misses.
+                println!(
+                    "note: pjrt has no KV surface — {} blocks requested, serving without prefix reuse",
+                    opts.kv_blocks
+                );
+            }
             let shards = opts.shards;
+            let (kv_blocks, block_size) = (opts.kv_blocks, opts.block_size);
             if live {
                 let make = move |_i: usize| {
-                    PjrtBackend::load(&dir, acc_cfg).map(|b| Engine::new(b.with_shards(shards)))
+                    PjrtBackend::load(&dir, acc_cfg).map(|b| {
+                        let b = b.with_shards(shards);
+                        Engine::new(if kv_blocks > 0 {
+                            b.with_kv_cache(kv_blocks, block_size)
+                        } else {
+                            b
+                        })
+                    })
                 };
                 run_live("pjrt", make, &opts)
             } else {
-                let b = PjrtBackend::load(&dir, acc_cfg)
+                let mut b = PjrtBackend::load(&dir, acc_cfg)
                     .map_err(|e| format!("{e:#}"))?
                     .with_shards(shards);
+                if kv_blocks > 0 {
+                    b = b.with_kv_cache(kv_blocks, block_size);
+                }
                 run_serve(&Engine::new(b), &opts)
             }
         }
@@ -804,6 +910,33 @@ mod tests {
         // Default is monolithic.
         let b = Args::parse(&argv(&["serve", "--backend", "sim"])).unwrap();
         assert_eq!(b.get("shards", 1usize).unwrap(), 1);
+    }
+
+    #[test]
+    fn kv_cache_flags_compose_with_decode() {
+        let a = Args::parse(&argv(&[
+            "serve",
+            "--decode",
+            "--kv-blocks",
+            "64",
+            "--block-size",
+            "8",
+            "--prefix-groups",
+            "6",
+            "--backend",
+            "functional",
+        ]))
+        .unwrap();
+        assert!(a.get_bool("decode"));
+        assert_eq!(a.get("kv-blocks", 0usize).unwrap(), 64);
+        assert_eq!(a.get("block-size", 16usize).unwrap(), 8);
+        assert_eq!(a.get("prefix-groups", 0u32).unwrap(), 6);
+        assert_eq!(a.flag("backend"), Some("functional"));
+        assert_eq!(a.positional, vec!["serve"]);
+        // Defaults: cache off, block size 16.
+        let b = Args::parse(&argv(&["serve", "--decode", "--backend", "sim"])).unwrap();
+        assert_eq!(b.get("kv-blocks", 0usize).unwrap(), 0);
+        assert_eq!(b.get("block-size", 16usize).unwrap(), 16);
     }
 
     #[test]

@@ -34,6 +34,40 @@ pub struct Request {
     /// that cannot honor the adapter serve base-only and record a miss
     /// ([`crate::backend::ExecutionBackend::adapter_misses`]).
     pub adapter: Option<AdapterId>,
+    /// Shared-prefix tag: `Some(tag)` declares the request's first
+    /// `tag.len` prompt tokens to be the common prefix of session group
+    /// `tag.group` (system prompt / multi-turn history). Prefix rows
+    /// derive from the group, not the request id
+    /// ([`synth_prefixed_embeddings`]), so KV-cache-equipped backends
+    /// can serve them from the [`crate::kvcache`] prefix trie instead
+    /// of recomputing. `None` is an untagged (fully private) prompt.
+    pub prefix: Option<PrefixTag>,
+}
+
+/// Shared-prefix membership of a request: the session group whose
+/// system-prompt/history prefix it opens with, and that prefix's length
+/// in tokens.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PrefixTag {
+    /// Session-group identifier; requests with equal `group` share
+    /// bit-identical prefix rows.
+    pub group: u64,
+    /// Length of the shared prefix in tokens (before backend
+    /// truncation; backends cap it at `seq_len - 1`).
+    pub len: usize,
+}
+
+impl PrefixTag {
+    /// The canonical tag for a session group: a deterministic prefix
+    /// length of 8, 16, or 24 tokens (group mod 3), sized to exercise
+    /// 1–3 blocks at the default 8-token block size within the default
+    /// 32-token sequence limit.
+    pub fn for_group(group: u64) -> PrefixTag {
+        PrefixTag {
+            group,
+            len: 8 * (1 + (group % 3) as usize),
+        }
+    }
 }
 
 /// Sample a sequence length from the dataset's profile: log-normal with
@@ -74,6 +108,15 @@ pub struct TraceGenerator {
     adapter_rng: Rng,
     /// Size of this dataset's adapter pool (0 = base-model trace).
     adapters: u32,
+    /// Session-group assignment stream, independent like `adapter_rng`
+    /// so prefix-tagged traces keep identical ids, lengths, arrivals.
+    prefix_rng: Rng,
+    /// Shared-prefix session groups (0 = untagged trace).
+    prefix_groups: u32,
+    /// Consecutive requests per session (turns sharing one group).
+    prefix_turns: u32,
+    /// Current session: `(group, turns remaining)`.
+    session: Option<(u64, u32)>,
     next_id: u64,
     clock_s: f64,
 }
@@ -88,6 +131,10 @@ impl TraceGenerator {
             rng: Rng::new(seed),
             adapter_rng: Rng::new(seed ^ 0xADA9_7E55),
             adapters: 0,
+            prefix_rng: Rng::new(seed ^ 0x9F1E_F1A5),
+            prefix_groups: 0,
+            prefix_turns: 1,
+            session: None,
             next_id: 0,
             clock_s: 0.0,
         }
@@ -104,12 +151,41 @@ impl TraceGenerator {
         self
     }
 
+    /// Emit multi-turn **sessions** with shared system-prompt prefixes:
+    /// every run of `turns` consecutive requests is one conversation,
+    /// tagged with a session group drawn uniformly from `k` groups
+    /// ([`PrefixTag::for_group`] fixes each group's prefix length).
+    /// `k = 0` keeps the untagged trace. Group assignment draws from an
+    /// independent RNG stream, so ids, lengths, and arrivals stay
+    /// byte-identical to the same-seed untagged trace — only the
+    /// `prefix` tags (and hence the prefix-cache hit opportunities)
+    /// change.
+    pub fn with_shared_prefixes(mut self, k: u32, turns: u32) -> Self {
+        assert!(turns > 0, "a session needs at least one turn");
+        self.prefix_groups = k;
+        self.prefix_turns = turns;
+        self
+    }
+
     /// Generate the next request in the trace (prefill-only:
     /// `gen_tokens` = 0).
     pub fn next_request(&mut self) -> Request {
         self.clock_s += self.rng.exponential(self.rate);
         let adapter = if self.adapters > 0 {
             Some(self.adapter_rng.below(self.adapters as u64) as AdapterId)
+        } else {
+            None
+        };
+        let prefix = if self.prefix_groups > 0 {
+            let (group, left) = match self.session.take() {
+                Some((g, n)) if n > 0 => (g, n),
+                _ => (
+                    self.prefix_rng.below(self.prefix_groups as u64),
+                    self.prefix_turns,
+                ),
+            };
+            self.session = Some((group, left - 1));
+            Some(PrefixTag::for_group(group))
         } else {
             None
         };
@@ -120,6 +196,7 @@ impl TraceGenerator {
             arrival_s: self.clock_s,
             gen_tokens: 0,
             adapter,
+            prefix,
         };
         self.next_id += 1;
         r
@@ -163,6 +240,46 @@ pub fn synth_embeddings(seq_len: usize, d_model: usize, seed: u64) -> Vec<f32> {
     (0..seq_len * d_model)
         .map(|_| rng.normal() as f32)
         .collect()
+}
+
+/// Derive the embedding seed of a shared-prefix group from a backend's
+/// base seed. Group-keyed (id-independent): every request tagged with
+/// the group sees bit-identical prefix rows, which is what makes the
+/// cross-request KV prefix cache exact.
+pub fn prefix_seed(embed_seed: u64, group: u64) -> u64 {
+    embed_seed ^ group.wrapping_mul(0xC2B2_AE3D_27D4_EB4F) ^ 0xBF58_476D_1CE4_E5B9
+}
+
+/// Synthesize a request's prompt embeddings honoring its optional
+/// shared-prefix tag: the first `min(tag.len, seq_len - 1)` rows derive
+/// from the **group** seed ([`prefix_seed`]) and the remainder from the
+/// request's own seed ([`request_seed`]). With `prefix == None` this is
+/// exactly `synth_embeddings(seq_len, d_model, request_seed(..))` — the
+/// untagged derivation is unchanged. The cap at `seq_len - 1` keeps at
+/// least one private row so prefill always computes fresh last-position
+/// logits.
+pub fn synth_prefixed_embeddings(
+    seq_len: usize,
+    d_model: usize,
+    embed_seed: u64,
+    id: u64,
+    prefix: Option<PrefixTag>,
+) -> Vec<f32> {
+    let shared = match prefix {
+        Some(tag) => tag.len.min(seq_len.saturating_sub(1)),
+        None => 0,
+    };
+    if shared == 0 {
+        return synth_embeddings(seq_len, d_model, request_seed(embed_seed, id));
+    }
+    let tag = prefix.expect("shared > 0 implies a tag");
+    let mut x = synth_embeddings(shared, d_model, prefix_seed(embed_seed, tag.group));
+    x.extend(synth_embeddings(
+        seq_len - shared,
+        d_model,
+        request_seed(embed_seed, id),
+    ));
+    x
 }
 
 /// Synthesize the embedding of generated token `token` at absolute
@@ -324,6 +441,67 @@ mod tests {
             tenants.iter().map(|r| r.adapter).collect::<Vec<_>>(),
             again.iter().map(|r| r.adapter).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn shared_prefix_sessions_cover_groups_without_perturbing_the_trace() {
+        let base = TraceGenerator::new(Dataset::Imdb, 50.0, 9).take(200);
+        assert!(base.iter().all(|r| r.prefix.is_none()));
+        let turns = 4usize;
+        let tagged = TraceGenerator::new(Dataset::Imdb, 50.0, 9)
+            .with_shared_prefixes(4, turns as u32)
+            .take(200);
+        // Same ids, lengths, arrivals — the session stream is independent.
+        for (a, b) in base.iter().zip(&tagged) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.seq_len, b.seq_len);
+            assert!((a.arrival_s - b.arrival_s).abs() < 1e-12);
+        }
+        // Every request is tagged, groups stay in the pool, and each
+        // session is a run of `turns` consecutive same-group requests.
+        let mut groups_seen = std::collections::BTreeSet::new();
+        for session in tagged.chunks(turns) {
+            let tag = session[0].prefix.expect("every request carries a tag");
+            assert!(tag.group < 4, "group {} outside the pool", tag.group);
+            assert_eq!(tag, PrefixTag::for_group(tag.group));
+            assert!(
+                session.iter().all(|r| r.prefix == Some(tag)),
+                "a session's turns must share one group"
+            );
+            groups_seen.insert(tag.group);
+        }
+        assert!(groups_seen.len() >= 2, "50 sessions must span several groups");
+        // Deterministic by seed.
+        let again = TraceGenerator::new(Dataset::Imdb, 50.0, 9)
+            .with_shared_prefixes(4, turns as u32)
+            .take(200);
+        assert_eq!(
+            tagged.iter().map(|r| r.prefix).collect::<Vec<_>>(),
+            again.iter().map(|r| r.prefix).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn prefixed_embeddings_share_prefix_rows_and_keep_private_tails() {
+        let (d, seq, seed) = (8usize, 12usize, 77u64);
+        let tag = PrefixTag { group: 5, len: 8 };
+        let a = synth_prefixed_embeddings(seq, d, seed, 1, Some(tag));
+        let b = synth_prefixed_embeddings(seq, d, seed, 2, Some(tag));
+        assert_eq!(a.len(), seq * d);
+        // Shared rows are id-independent; tails diverge per request.
+        assert_eq!(&a[..tag.len * d], &b[..tag.len * d]);
+        assert_ne!(&a[tag.len * d..], &b[tag.len * d..]);
+        // Untagged derivation is byte-for-byte the legacy one.
+        assert_eq!(
+            synth_prefixed_embeddings(seq, d, seed, 1, None),
+            synth_embeddings(seq, d, request_seed(seed, 1))
+        );
+        // A tag covering the whole prompt still leaves one private row.
+        let full = PrefixTag { group: 5, len: seq };
+        let c = synth_prefixed_embeddings(seq, d, seed, 1, Some(full));
+        let e = synth_prefixed_embeddings(seq, d, seed, 2, Some(full));
+        assert_eq!(&c[..(seq - 1) * d], &e[..(seq - 1) * d]);
+        assert_ne!(&c[(seq - 1) * d..], &e[(seq - 1) * d..]);
     }
 
     #[test]

@@ -186,6 +186,7 @@ fn zero_gen_token_decode_runs_produce_one_token_sessions() {
                 arrival_s: id as f64 * 0.001,
                 gen_tokens: 0,
                 adapter: None,
+                prefix: None,
             })
             .collect()
     };
@@ -277,6 +278,7 @@ fn identical_request_ids_get_identical_logits_functionally() {
         arrival_s: arrival,
         gen_tokens: 0,
         adapter: None,
+        prefix: None,
     };
     let (r1, _) = e
         .serve_trace(vec![mk(0.0)], BatchPolicy::default())

@@ -57,6 +57,7 @@ fn identical_request_ids_get_identical_logits() {
         arrival_s: arrival,
         gen_tokens: 0,
         adapter: None,
+        prefix: None,
     };
     let (r1, _) = e
         .serve_trace(vec![mk(0.0)], BatchPolicy::default())
@@ -77,6 +78,7 @@ fn attribution_scales_with_sequence_length() {
         arrival_s: id as f64 * 0.001,
         gen_tokens: 0,
         adapter: None,
+        prefix: None,
     };
     let (results, _) = e
         .serve_trace(
@@ -106,6 +108,7 @@ fn queue_wait_reflects_batching_policy() {
             arrival_s: 0.0,
             gen_tokens: 0,
             adapter: None,
+            prefix: None,
         },
         Request {
             id: 1,
@@ -114,6 +117,7 @@ fn queue_wait_reflects_batching_policy() {
             arrival_s: 1.0,
             gen_tokens: 0,
             adapter: None,
+            prefix: None,
         },
     ];
     let (results, summary) = e
@@ -153,6 +157,7 @@ fn threaded_server_round_trips() {
             arrival_s: 0.0,
             gen_tokens: 0,
             adapter: None,
+            prefix: None,
         }));
     }
     for (id, rx) in rxs.into_iter().enumerate() {

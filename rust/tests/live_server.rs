@@ -35,6 +35,7 @@ fn req(id: u64, seq_len: usize) -> Request {
         arrival_s: 0.0,
         gen_tokens: 0,
         adapter: None,
+        prefix: None,
     }
 }
 

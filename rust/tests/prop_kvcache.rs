@@ -1,0 +1,244 @@
+//! Property tests for the paged prefix KV cache (in-crate property
+//! runner — see `util::prop`).
+//!
+//! Three claims anchor the cross-request prefix-reuse subsystem:
+//! 1. **Warm-prefix exactness** — serving a request whose shared prefix
+//!    is already cached produces logits and decode streams bit-identical
+//!    to a cache-less deployment, across shard counts {1, 2, 4} and
+//!    across adapter assignments (layer KV state is adapter-independent
+//!    because LoRA touches only the classifier head). Prefix reuse —
+//!    like the Result Cache, sharding, and the decode KV cache — is a
+//!    scheduling transformation, never an approximation.
+//! 2. **Pool soundness** — under arbitrary interleavings of inserts,
+//!    pinned lookups, releases, evictions, and preemptions, every
+//!    structural invariant holds: block refcounts are exactly
+//!    `1 + pins`, never negative; blocks-in-use equals live trie nodes
+//!    (no leaks, no double frees); capacity accounting balances.
+//! 3. **Graceful degradation** — a zero-capacity pool is inert but
+//!    safe, and preempted leases release as no-ops.
+
+use axllm::backend::{ExecutionBackend, FunctionalBackend};
+use axllm::config::{AcceleratorConfig, Dataset, ModelConfig};
+use axllm::kvcache::{aligned_prefix, block_keys, BlockPool, KvCacheConfig, PrefixCache};
+use axllm::util::prop::{check, Config};
+use axllm::workload::{PrefixTag, Request};
+use axllm::{prop_assert, prop_assert_eq};
+
+fn req(
+    id: u64,
+    seq_len: usize,
+    gen_tokens: u32,
+    adapter: Option<u32>,
+    prefix: Option<PrefixTag>,
+) -> Request {
+    Request {
+        id,
+        dataset: Dataset::Imdb,
+        seq_len,
+        arrival_s: 0.0,
+        gen_tokens,
+        adapter,
+        prefix,
+    }
+}
+
+#[test]
+fn prop_warm_prefix_bit_identical_across_shards_and_adapters() {
+    check(
+        "kvcache-warm-exact",
+        Config {
+            cases: 3,
+            seed: 0x6B7CA,
+        },
+        |rng| {
+            let model_seed = rng.below(1_000_000);
+            let block_size = *rng.choose(&[4usize, 8]);
+            let tag = PrefixTag {
+                group: rng.below(64),
+                len: block_size * (1 + rng.index(3)),
+            };
+            // Both requests extend past the tag so the full tag is
+            // block-aligned cacheable (seq_len ≥ tag.len + 1).
+            let seq_a = tag.len + 1 + rng.index(8);
+            let seq_b = tag.len + 1 + rng.index(8);
+            let budget = 1 + rng.index(3) as u32;
+            // The primer and the warm request may carry *different*
+            // adapters (or none): cached layer KV must be shared anyway.
+            let adapter_a = (rng.index(2) == 0).then(|| rng.below(3) as u32);
+            let adapter_b = (rng.index(2) == 0).then(|| rng.below(3) as u32);
+            let a = req(101, seq_a, 0, adapter_a, Some(tag));
+            let b = req(102, seq_b, 0, adapter_b, Some(tag));
+            // Cold reference: cache-less, unsharded.
+            let cold = FunctionalBackend::new(
+                ModelConfig::tiny(),
+                AcceleratorConfig::paper(),
+                model_seed,
+            )
+            .map_err(|e| e.to_string())?
+            .with_adapters(3, 2);
+            let (mut kv_cold, f_cold) = cold.prefill(&b, budget).map_err(|e| e.to_string())?;
+            for shards in [1usize, 2, 4] {
+                let warm = FunctionalBackend::new(
+                    ModelConfig::tiny(),
+                    AcceleratorConfig::paper(),
+                    model_seed,
+                )
+                .map_err(|e| e.to_string())?
+                .with_adapters(3, 2)
+                .with_shards(shards)
+                .with_kv_cache(64, block_size);
+                // Prime with the same-group request, then serve warm.
+                warm.prefill(&a, 1).map_err(|e| e.to_string())?;
+                let primed = warm.prefix_stats().expect("cache-enabled backend");
+                prop_assert_eq!(primed.hits, 0);
+                prop_assert_eq!(primed.inserted_blocks as usize, tag.len / block_size);
+                let (mut kv_warm, f_warm) =
+                    warm.prefill(&b, budget).map_err(|e| e.to_string())?;
+                prop_assert_eq!(
+                    kv_warm.cached_tokens,
+                    aligned_prefix(tag.len, seq_b, block_size)
+                );
+                prop_assert_eq!(kv_warm.cached_tokens, tag.len);
+                prop_assert_eq!(&f_cold.logits, &f_warm.logits);
+                prop_assert_eq!(f_cold.token, f_warm.token);
+                // Decode streams match step for step. The cold handle is
+                // cloned per shard count by replaying from a fresh prefill.
+                let (mut kv_ref, f_ref) =
+                    cold.prefill(&b, budget).map_err(|e| e.to_string())?;
+                prop_assert_eq!(f_ref.token, f_warm.token);
+                while !kv_ref.done() {
+                    let oc = cold.decode_step(&mut kv_ref).map_err(|e| e.to_string())?;
+                    let ow = warm.decode_step(&mut kv_warm).map_err(|e| e.to_string())?;
+                    prop_assert_eq!(&oc.logits, &ow.logits);
+                    prop_assert_eq!(oc.token, ow.token);
+                }
+                prop_assert_eq!(&kv_ref.generated, &kv_warm.generated);
+                let s = warm.prefix_stats().expect("cache-enabled backend");
+                prop_assert_eq!(s.hits, 1);
+                prop_assert_eq!(s.hit_tokens as usize, tag.len);
+                prop_assert!(
+                    s.pinned_blocks == 0,
+                    "shards={} left {} pinned blocks after retirement",
+                    shards,
+                    s.pinned_blocks
+                );
+            }
+            // Drain the cold handle so both sessions retire.
+            while !kv_cold.done() {
+                cold.decode_step(&mut kv_cold).map_err(|e| e.to_string())?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pool_invariants_hold_under_random_op_interleavings() {
+    check(
+        "kvcache-pool-invariants",
+        Config {
+            cases: 24,
+            seed: 0x6B7CB,
+        },
+        |rng| {
+            // Small pools (including zero capacity) force eviction and
+            // preemption to fire constantly under held pins.
+            let capacity = rng.index(6);
+            let block_size = 1 + rng.index(8);
+            let cache: PrefixCache<usize> =
+                PrefixCache::new(KvCacheConfig::new(capacity, block_size));
+            let mut leases = Vec::new();
+            for _ in 0..60 {
+                match rng.index(10) {
+                    0..=3 => {
+                        let keys = block_keys(rng.below(6), 1 + rng.index(4));
+                        cache.insert_with(&keys, |tokens| tokens);
+                    }
+                    4..=6 => {
+                        let keys = block_keys(rng.below(6), 1 + rng.index(4));
+                        if let Some(hit) = cache.lookup_pin(&keys) {
+                            prop_assert_eq!(hit.tokens, hit.lease.blocks() * block_size);
+                            prop_assert_eq!(hit.payload, hit.tokens);
+                            leases.push(hit.lease);
+                        }
+                    }
+                    _ => {
+                        if !leases.is_empty() {
+                            let i = rng.index(leases.len());
+                            cache.release(leases.swap_remove(i));
+                        }
+                    }
+                }
+                cache.validate()?;
+                let s = cache.stats();
+                prop_assert!(
+                    s.blocks_in_use <= s.capacity_blocks,
+                    "{} blocks in a {}-block pool",
+                    s.blocks_in_use,
+                    s.capacity_blocks
+                );
+                prop_assert!(s.pinned_blocks <= s.blocks_in_use);
+                prop_assert!(s.hit_tokens >= s.hits, "hits serve at least one block");
+            }
+            // Releasing every outstanding lease (including any whose
+            // nodes were preempted mid-run) must drain all pins.
+            for lease in leases.drain(..) {
+                cache.release(lease);
+            }
+            cache.validate()?;
+            prop_assert_eq!(cache.stats().pinned_blocks, 0);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn preemption_frees_all_pins_and_leaks_nothing() {
+    // Capacity 2, a fully pinned 2-block chain, then a competing
+    // 2-block insert: both pinned leaves must be preempted, the holder's
+    // lease must release as a no-op, and accounting must balance.
+    let cache: PrefixCache<()> = PrefixCache::new(KvCacheConfig::new(2, 4));
+    cache.insert_with(&block_keys(1, 2), |_| ());
+    let hit = cache.lookup_pin(&block_keys(1, 2)).expect("primed chain");
+    assert_eq!(hit.lease.blocks(), 2);
+    cache.insert_with(&block_keys(2, 2), |_| ());
+    let s = cache.stats();
+    assert_eq!(s.preemptions, 2, "both pinned leaves preempted in turn");
+    assert_eq!(s.blocks_in_use, 2, "the new chain owns the pool");
+    assert_eq!(s.pinned_blocks, 0, "preemption force-drops pins");
+    assert!(cache.lookup_pin(&block_keys(1, 2)).is_none(), "victim gone");
+    let survivor = cache.lookup_pin(&block_keys(2, 2)).expect("winner cached");
+    cache.release(survivor.lease);
+    // Dangling release after preemption is a safe no-op.
+    cache.release(hit.lease);
+    cache.validate().unwrap();
+    assert_eq!(cache.stats().blocks_in_use, 2);
+}
+
+#[test]
+fn zero_capacity_cache_serves_tagged_requests_bit_identically() {
+    // An empty pool must never pin, never insert, and never perturb
+    // results — the warm path degrades to the cold path exactly.
+    assert!(BlockPool::new(0, 4).try_alloc().is_none());
+    let plain = FunctionalBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper(), 7)
+        .unwrap();
+    let empty = FunctionalBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper(), 7)
+        .unwrap()
+        .with_kv_cache(0, 8);
+    let tag = PrefixTag { group: 3, len: 16 };
+    let r = req(9, 24, 0, None, Some(tag));
+    let (mut kv_p, f_p) = plain.prefill(&r, 2).unwrap();
+    let (mut kv_e, f_e) = empty.prefill(&r, 2).unwrap();
+    assert_eq!(kv_e.cached_tokens, 0);
+    assert_eq!(f_p.logits, f_e.logits);
+    while !kv_p.done() {
+        let op = plain.decode_step(&mut kv_p).unwrap();
+        let oe = empty.decode_step(&mut kv_e).unwrap();
+        assert_eq!(op.logits, oe.logits);
+        assert_eq!(op.token, oe.token);
+    }
+    let s = empty.prefix_stats().unwrap();
+    assert!(s.lookups > 0, "tagged prompts still consult the trie");
+    assert_eq!((s.hits, s.inserted_blocks, s.pinned_blocks), (0, 0, 0));
+    assert_eq!(s.capacity_blocks, 0);
+}

@@ -33,6 +33,7 @@ fn req(id: u64, seq_len: usize, gen_tokens: u32, adapter: Option<u32>) -> Reques
         arrival_s: 0.0,
         gen_tokens,
         adapter,
+        prefix: None,
     }
 }
 

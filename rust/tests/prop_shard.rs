@@ -29,6 +29,7 @@ fn req(id: u64, seq_len: usize, gen_tokens: u32, arrival_s: f64) -> Request {
         arrival_s,
         gen_tokens,
         adapter: None,
+        prefix: None,
     }
 }
 
