@@ -46,6 +46,13 @@ echo "== prefix serve bench (writes BENCH_prefix_serve.json) =="
 # identical (reuse is a scheduling transformation, not an approximation).
 AXLLM_BENCH_FAST=1 cargo bench --bench prefix_serve
 
+echo "== functional hot-loop bench (writes BENCH_functional_hot_loop.json) =="
+# Asserts the packed/tiled/thread-parallel functional path is bit-identical
+# to the seed scalar path (logits AND mult/reuse counters), beats it
+# outright, and clears 3x tokens/s on >= 4-thread machines; the JSON perf
+# log must stay free of NaN/inf.
+AXLLM_BENCH_FAST=1 cargo bench --bench functional_hot_loop
+
 echo "== cargo doc --no-deps (rustdoc must stay warning-free) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 

@@ -1,13 +1,21 @@
 //! Bit-exact functional backend: execute the full layer stack in-process
 //! through the reuse datapath — no artifacts, no PJRT.
 //!
-//! Every weight matmul goes through
-//! [`reuse_matmul_chunked`](crate::exec::reuse_matmul_chunked) (proven
-//! bit-identical to dense GEMM by the crate's property tests), so this
-//! backend serves **real logits** whose arithmetic is exactly what the
-//! accelerator computes: layers → mean-pool → quantized classifier head,
-//! mirroring the compiled tiny artifact's structure. Used for
-//! correctness soak tests and artifact-free end-to-end serving.
+//! Every weight matmul goes through the packed/tiled reuse kernels
+//! ([`reuse_matmul_packed`](crate::exec::reuse_matmul_packed), proven
+//! bit-identical to dense GEMM *and* to the seed scalar
+//! [`reuse_matmul_chunked`](crate::exec::reuse_matmul_chunked) by the
+//! crate's property tests), so this backend serves **real logits** whose
+//! arithmetic is exactly what the accelerator computes: layers →
+//! mean-pool → quantized classifier head, mirroring the compiled tiny
+//! artifact's structure. Used for correctness soak tests and
+//! artifact-free end-to-end serving.
+//!
+//! Independent batch members and decode waves fan out thread-parallel
+//! over [`crate::util::pool::par_map`] (order-preserving, so every
+//! outcome and counter matches the sequential loop);
+//! [`FunctionalBackend::with_scalar_kernels`] pins the sequential scalar
+//! baseline for `benches/functional_hot_loop.rs`.
 
 use crate::backend::{
     argmax_token, BatchOutcome, CostModel, ExecutionBackend, KvHandle, KvState, ReqActivity,
@@ -15,17 +23,18 @@ use crate::backend::{
 };
 use crate::config::{AcceleratorConfig, ModelConfig};
 use crate::exec::{
-    lora_side_matmul, quantize_row, reuse_matmul_chunked, sharded_reuse_matmul_chunked, ExecStats,
-    LayerExec, LayerKv,
+    lora_side_matmul, lora_side_matmul_arena, quantize_row, reuse_matmul_chunked,
+    reuse_matmul_packed, sharded_reuse_matmul_chunked, ExecArena, ExecStats, LayerExec, LayerKv,
 };
 use crate::kvcache::{aligned_prefix, block_keys, KvCacheConfig, PrefixCache};
 use crate::model::{
     synthesize_matrix, AdapterId, AdapterRegistry, LayerWeights, LoraAdaptor, Model,
     WeightDistribution,
 };
-use crate::quant::QuantMatrix;
+use crate::quant::{PackedQuantMatrix, QuantMatrix};
 use crate::runtime::adapters::{provision, AdapterMisses};
 use crate::sim::{Accelerator, SimStats};
+use crate::util::pool::par_map;
 use crate::util::rng::Rng;
 use crate::workload::{request_seed, synth_prefixed_embeddings, token_embedding, Request};
 use anyhow::Result;
@@ -46,6 +55,9 @@ pub struct FunctionalBackend {
     acc_cfg: AcceleratorConfig,
     layers: Vec<LayerWeights>,
     head: QuantMatrix,
+    /// Packed byte-code view of the head, probed by the tiled kernel on
+    /// the default (non-scalar) path.
+    head_packed: PackedQuantMatrix,
     chunk: usize,
     seq_limit: usize,
     max_batch: usize,
@@ -68,6 +80,12 @@ pub struct FunctionalBackend {
     /// resuming from a truncated snapshot reproduces the cold pass
     /// exactly (`tests/prop_kvcache.rs`).
     kv_cache: Option<PrefixCache<Vec<LayerKv>>>,
+    /// Route every matmul through the seed scalar reference kernels and
+    /// every batch through the sequential loop (the honest baseline for
+    /// `benches/functional_hot_loop.rs`). Default `false`: packed/tiled
+    /// kernels, arena scratch, thread-parallel batches — bit-identical
+    /// outputs and counters either way.
+    scalar: bool,
 }
 
 impl FunctionalBackend {
@@ -101,11 +119,13 @@ impl FunctionalBackend {
         // Row-sampled cost derivation (identical to SimBackend's, via the
         // shared helper) so construction stays fast at BERT-large scale.
         let (cost, _ax_run) = CostModel::from_sampled(&model, acc_cfg, COST_SAMPLE_ROWS)?;
+        let head_packed = head.packed();
         Ok(FunctionalBackend {
             model_cfg,
             acc_cfg,
             layers,
             head,
+            head_packed,
             chunk: acc.chunk_cols(),
             seq_limit: DEFAULT_SEQ_LIMIT,
             max_batch: 64,
@@ -115,7 +135,19 @@ impl FunctionalBackend {
             misses: AdapterMisses::new(),
             shards: 1,
             kv_cache: None,
+            scalar: false,
         })
+    }
+
+    /// Route every matmul through the seed scalar reference kernels and
+    /// every batch/decode wave through the sequential loop, instead of
+    /// the packed/tiled arena kernels and [`par_map`] fan-out. Logits and
+    /// every counter are bit-identical either way (`tests/prop_packed.rs`
+    /// proves it); this exists as the honest pre-optimization baseline
+    /// for `benches/functional_hot_loop.rs`.
+    pub fn with_scalar_kernels(mut self, scalar: bool) -> FunctionalBackend {
+        self.scalar = scalar;
+        self
     }
 
     /// Execute every projection column-sharded across `n` tensor-parallel
@@ -244,11 +276,19 @@ impl FunctionalBackend {
         let (mut x, seq) = self.request_embeddings(req);
         let mut stats = ExecStats::default();
         let mut shard: Vec<ExecStats> = Vec::new();
+        // One scratch arena serves every layer of the pass (and the head):
+        // each LayerExec borrows it via the with_arena/into_arena handoff,
+        // so the hot loop allocates nothing per layer after warm-up.
+        let mut arena = ExecArena::new();
         for lw in &self.layers {
-            let mut le = LayerExec::new(&self.model_cfg, lw, self.chunk).with_shards(self.shards);
+            let mut le = LayerExec::new(&self.model_cfg, lw, self.chunk)
+                .with_shards(self.shards)
+                .with_scalar(self.scalar)
+                .with_arena(arena);
             x = le.forward(&x, seq);
             stats.add(&le.stats);
             merge_shards(&mut shard, &le.shard_stats);
+            arena = le.into_arena();
         }
         let d = self.model_cfg.d_model;
         let mut pooled = vec![0f32; d];
@@ -260,7 +300,7 @@ impl FunctionalBackend {
         for p in pooled.iter_mut() {
             *p /= seq as f32;
         }
-        let logits = self.head_logits_for(adaptor, &pooled, &mut stats, &mut shard);
+        let logits = self.head_logits_for(adaptor, &pooled, &mut stats, &mut shard, &mut arena);
         (logits, stats, shard)
     }
 
@@ -273,13 +313,18 @@ impl FunctionalBackend {
         caches: &mut [LayerKv],
         stats: &mut ExecStats,
         shard: &mut Vec<ExecStats>,
+        arena: &mut ExecArena,
     ) -> Vec<f32> {
         let mut x = x;
         for (lw, kv) in self.layers.iter().zip(caches.iter_mut()) {
-            let mut le = LayerExec::new(&self.model_cfg, lw, self.chunk).with_shards(self.shards);
+            let mut le = LayerExec::new(&self.model_cfg, lw, self.chunk)
+                .with_shards(self.shards)
+                .with_scalar(self.scalar)
+                .with_arena(std::mem::take(arena));
             x = le.forward_causal(&x, n_new, kv);
             stats.add(&le.stats);
             merge_shards(shard, &le.shard_stats);
+            *arena = le.into_arena();
         }
         x
     }
@@ -302,6 +347,61 @@ impl FunctionalBackend {
     /// (replicated with the activations in a real shard group, so it
     /// contributes no per-shard reuse).
     fn head_logits_for(
+        &self,
+        adaptor: Option<&LoraAdaptor>,
+        row: &[f32],
+        stats: &mut ExecStats,
+        shard: &mut Vec<ExecStats>,
+        arena: &mut ExecArena,
+    ) -> Vec<f32> {
+        if self.scalar {
+            return self.head_logits_scalar(adaptor, row, stats, shard);
+        }
+        let xq_params = arena.quantize_into(row);
+        let scale = xq_params.scale * self.head.params.scale;
+        // The quantized row swaps out of the arena so the kernels below
+        // can borrow the arena mutably alongside it.
+        let xq = std::mem::take(&mut arena.xq);
+        let yq: Vec<i32> = if self.shards <= 1 {
+            let st = reuse_matmul_packed(&xq, &self.head_packed, self.chunk, arena);
+            stats.mults += st.mults;
+            stats.reuses += st.reuses;
+            arena.yq().to_vec()
+        } else {
+            // The head is a handful of columns — the scalar sharded
+            // kernel is already cheap, and per-shard accounting must
+            // match the scalar deployment exactly.
+            let (yq, per) = sharded_reuse_matmul_chunked(&xq, &self.head, self.chunk, self.shards);
+            for st in &per {
+                stats.mults += st.mults;
+                stats.reuses += st.reuses;
+            }
+            merge_shards(shard, &per);
+            yq
+        };
+        let out = match adaptor {
+            None => yq.iter().map(|&v| v as f32 * scale).collect(),
+            Some(a) => {
+                // Side pipe: dense rank-r (x·A)·B on the same input,
+                // accumulated in the arena's side buffers.
+                let sst = lora_side_matmul_arena(&xq, a, arena);
+                stats.adapter_mults += sst.adapter_mults;
+                let side_scale = scale * a.b.params.scale;
+                yq.iter()
+                    .zip(arena.side())
+                    .map(|(&b, &s)| b as f32 * scale + s as f32 * side_scale)
+                    .collect()
+            }
+        };
+        arena.xq = xq;
+        out
+    }
+
+    /// The seed scalar head path — allocating [`quantize_row`] +
+    /// [`reuse_matmul_chunked`]/[`sharded_reuse_matmul_chunked`] +
+    /// allocating [`lora_side_matmul`] — kept verbatim as the
+    /// [`FunctionalBackend::with_scalar_kernels`] baseline.
+    fn head_logits_scalar(
         &self,
         adaptor: Option<&LoraAdaptor>,
         row: &[f32],
@@ -356,12 +456,14 @@ impl FunctionalBackend {
         let mut caches = vec![LayerKv::new(); self.model_cfg.n_layers];
         let mut stats = ExecStats::default();
         let mut shard = Vec::new();
-        let hidden = self.causal_pass(x, n, &mut caches, &mut stats, &mut shard);
+        let mut arena = ExecArena::new();
+        let hidden = self.causal_pass(x, n, &mut caches, &mut stats, &mut shard, &mut arena);
         self.head_logits_for(
             self.adaptor_for(req.adapter),
             &hidden[(n - 1) * d..],
             &mut stats,
             &mut shard,
+            &mut arena,
         )
     }
 }
@@ -447,11 +549,26 @@ impl ExecutionBackend for FunctionalBackend {
             self.max_batch
         );
         let t0 = std::time::Instant::now();
+        // Batch members are independent (per-request Result Caches), so
+        // the default path fans them out over [`par_map`]'s scoped
+        // threads. Order is preserved and every counter is per-request,
+        // so the fold below is deterministic and batch-order-independent
+        // — identical to the sequential scalar loop.
+        let per: Vec<(Vec<f32>, ExecStats, Vec<ExecStats>)> = if self.scalar || requests.len() <= 1
+        {
+            requests
+                .iter()
+                .map(|req| self.forward_full(self.route_adapter(req.adapter), req))
+                .collect()
+        } else {
+            par_map(requests.to_vec(), |req| {
+                self.forward_full(self.route_adapter(req.adapter), &req)
+            })
+        };
         let mut logits = Vec::with_capacity(requests.len());
         let mut activity = Vec::with_capacity(requests.len());
         let mut total = ExecStats::default();
-        for req in requests {
-            let (l, s, shard) = self.forward_full(self.route_adapter(req.adapter), req);
+        for (l, s, shard) in per {
             logits.push(l);
             total.add(&s);
             activity.push(ReqActivity {
@@ -498,9 +615,16 @@ impl ExecutionBackend for FunctionalBackend {
         let suffix = x[cached_tokens * d..].to_vec();
         let mut stats = ExecStats::default();
         let mut shard = Vec::new();
-        let hidden = self.causal_pass(suffix, n_new, &mut caches, &mut stats, &mut shard);
-        let logits =
-            self.head_logits_for(adaptor, &hidden[(n_new - 1) * d..], &mut stats, &mut shard);
+        let mut arena = ExecArena::new();
+        let hidden =
+            self.causal_pass(suffix, n_new, &mut caches, &mut stats, &mut shard, &mut arena);
+        let logits = self.head_logits_for(
+            adaptor,
+            &hidden[(n_new - 1) * d..],
+            &mut stats,
+            &mut shard,
+            &mut arena,
+        );
         let token = argmax_token(&logits);
         // Publish the blocks this (possibly partially) cold prefill
         // computed, snapshotting each layer cache at block boundaries.
@@ -572,8 +696,9 @@ impl ExecutionBackend for FunctionalBackend {
         };
         let mut stats = ExecStats::default();
         let mut shard = Vec::new();
-        let hidden = self.causal_pass(x, 1, caches, &mut stats, &mut shard);
-        let logits = self.head_logits_for(adaptor, &hidden, &mut stats, &mut shard);
+        let mut arena = ExecArena::new();
+        let hidden = self.causal_pass(x, 1, caches, &mut stats, &mut shard, &mut arena);
+        let logits = self.head_logits_for(adaptor, &hidden, &mut stats, &mut shard, &mut arena);
         let token = argmax_token(&logits);
         kv.generated.push(token);
         if kv.done() {
@@ -591,6 +716,71 @@ impl ExecutionBackend for FunctionalBackend {
                 per_shard: shard_activity(&shard),
             },
         })
+    }
+
+    fn decode_steps(&self, sessions: Vec<&mut KvHandle>) -> crate::Result<Vec<StepOutcome>> {
+        // One scheduler tick's steps are independent across sessions
+        // (each owns its KV caches and Result-Cache accounting), so the
+        // default path fans them out; [`par_map`] preserves session
+        // order, so the outcomes match the sequential loop exactly.
+        if self.scalar || sessions.len() <= 1 {
+            let mut outs = Vec::with_capacity(sessions.len());
+            for kv in sessions {
+                outs.push(self.decode_step(kv)?);
+            }
+            return Ok(outs);
+        }
+        let outs: Vec<crate::Result<StepOutcome>> = par_map(sessions, |kv| self.decode_step(kv));
+        outs.into_iter().collect()
+    }
+
+    fn prefill_batch(
+        &self,
+        jobs: &[(Request, u32)],
+    ) -> crate::Result<Vec<(KvHandle, StepOutcome)>> {
+        if self.scalar || jobs.len() <= 1 {
+            let mut outs = Vec::with_capacity(jobs.len());
+            for (req, budget) in jobs {
+                outs.push(self.prefill(req, *budget)?);
+            }
+            return Ok(outs);
+        }
+        // Untagged prefills never consult the prefix trie, so they fan
+        // out freely. Prefix-tagged prefills (when a cache is mounted)
+        // stay in ONE sequential bucket, in admission order: that keeps
+        // same-wave trie hits AND pool-eviction order identical to the
+        // sequential loop, so the cache counters stay deterministic even
+        // under memory pressure.
+        let cache_on = self.kv_cache.is_some();
+        let mut buckets: Vec<Vec<usize>> = Vec::new();
+        let mut tagged: Vec<usize> = Vec::new();
+        for (i, (req, _)) in jobs.iter().enumerate() {
+            if cache_on && req.prefix.is_some() {
+                tagged.push(i);
+            } else {
+                buckets.push(vec![i]);
+            }
+        }
+        if !tagged.is_empty() {
+            buckets.push(tagged);
+        }
+        type Prefilled = Vec<(usize, (KvHandle, StepOutcome))>;
+        let done: Vec<crate::Result<Prefilled>> = par_map(buckets, |bucket| {
+            let mut out = Vec::with_capacity(bucket.len());
+            for i in bucket {
+                let (req, budget) = &jobs[i];
+                out.push((i, self.prefill(req, *budget)?));
+            }
+            Ok(out)
+        });
+        let mut slots: Vec<Option<(KvHandle, StepOutcome)>> =
+            (0..jobs.len()).map(|_| None).collect();
+        for bucket in done {
+            for (i, v) in bucket? {
+                slots[i] = Some(v);
+            }
+        }
+        Ok(slots.into_iter().map(|s| s.unwrap()).collect())
     }
 }
 
@@ -852,6 +1042,96 @@ mod tests {
         let s = cached.prefix_stats().unwrap();
         assert_eq!(s.lookups, 0, "untagged prompts never consult the trie");
         assert_eq!(s.inserted_blocks, 0);
+    }
+
+    #[test]
+    fn scalar_kernels_match_the_packed_default_bitexactly() {
+        // with_scalar_kernels(true) is the seed baseline; the packed/
+        // tiled/parallel default must reproduce it bit for bit — logits,
+        // per-request activity, and totals (prop_packed.rs generalizes).
+        let fast = backend();
+        let slow = backend().with_scalar_kernels(true);
+        let reqs: Vec<Request> = (0..5).map(|i| req(i, 8 + i as usize)).collect();
+        let of = fast.run_batch(&reqs).unwrap();
+        let os = slow.run_batch(&reqs).unwrap();
+        assert_eq!(of.logits, os.logits);
+        assert_eq!(of.activity, os.activity);
+        assert_eq!(of.stats.mults, os.stats.mults);
+        assert_eq!(of.stats.rc_hits, os.stats.rc_hits);
+        // Sharded deployments too (packed sharded kernels + par_map).
+        let fast4 = backend().with_shards(4);
+        let slow4 = backend().with_shards(4).with_scalar_kernels(true);
+        let o4f = fast4.run_batch(&reqs).unwrap();
+        let o4s = slow4.run_batch(&reqs).unwrap();
+        assert_eq!(o4f.logits, o4s.logits);
+        assert_eq!(o4f.activity, o4s.activity);
+    }
+
+    #[test]
+    fn batch_session_apis_match_the_sequential_loops() {
+        let b = backend();
+        let jobs: Vec<(Request, u32)> = (0..4).map(|i| (req(30 + i, 6 + i as usize), 3)).collect();
+        // Reference: one prefill / decode_step call at a time.
+        let mut seq_sessions = Vec::new();
+        let mut seq_first = Vec::new();
+        for (r, budget) in &jobs {
+            let (kv, out) = b.prefill(r, *budget).unwrap();
+            seq_sessions.push(kv);
+            seq_first.push(out);
+        }
+        // Batch APIs (thread-parallel on the default path).
+        let mut batch = b.prefill_batch(&jobs).unwrap();
+        for (i, (kv, out)) in batch.iter().enumerate() {
+            assert_eq!(out.logits, seq_first[i].logits);
+            assert_eq!(out.activity, seq_first[i].activity);
+            assert_eq!(kv.generated, seq_sessions[i].generated);
+        }
+        while !batch[0].0.done() {
+            let refs: Vec<&mut KvHandle> = batch.iter_mut().map(|(kv, _)| kv).collect();
+            let outs = b.decode_steps(refs).unwrap();
+            for (i, o) in outs.iter().enumerate() {
+                let expect = b.decode_step(&mut seq_sessions[i]).unwrap();
+                assert_eq!(o.logits, expect.logits);
+                assert_eq!(o.token, expect.token);
+                assert_eq!(o.activity, expect.activity);
+                let got = (o.stats.mults, o.stats.rc_hits);
+                assert_eq!(got, (expect.stats.mults, expect.stats.rc_hits));
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_batch_keeps_prefix_waves_deterministic() {
+        use crate::workload::PrefixTag;
+        // Tagged jobs of one wave run in ONE sequential bucket, so
+        // same-wave trie hits match the sequential loop exactly.
+        let warm = backend().with_kv_cache(16, 8);
+        let seq_ref = backend().with_kv_cache(16, 8);
+        let tag = PrefixTag { group: 3, len: 16 };
+        let jobs: Vec<(Request, u32)> = (0..3)
+            .map(|i| {
+                (
+                    Request {
+                        prefix: Some(tag),
+                        ..req(50 + i, 24)
+                    },
+                    1,
+                )
+            })
+            .collect();
+        let batch = warm.prefill_batch(&jobs).unwrap();
+        let mut seq = Vec::new();
+        for (r, budget) in &jobs {
+            seq.push(seq_ref.prefill(r, *budget).unwrap());
+        }
+        for ((kvb, ob), (kvs, os)) in batch.iter().zip(&seq) {
+            assert_eq!(ob.logits, os.logits);
+            assert_eq!(kvb.cached_tokens, kvs.cached_tokens);
+            assert_eq!(ob.activity, os.activity);
+        }
+        // Later siblings hit the chain the first job inserted.
+        assert_eq!(batch[1].0.cached_tokens, 16);
+        assert_eq!(batch[2].0.cached_tokens, 16);
     }
 
     #[test]

@@ -356,6 +356,41 @@ pub trait ExecutionBackend {
     /// finished session ([`KvHandle::done`]) or on a handle created by a
     /// different backend.
     fn decode_step(&self, kv: &mut KvHandle) -> crate::Result<StepOutcome>;
+
+    /// Advance every session in `sessions` by one generated token,
+    /// returning the step outcomes in session order. Semantically
+    /// equivalent to calling [`ExecutionBackend::decode_step`] on each
+    /// handle left to right — backends may execute the steps
+    /// thread-parallel, but the returned outcomes (and every counter
+    /// inside them) must be identical to the sequential loop, because
+    /// decode iterations are independent across sessions within one
+    /// scheduler tick. The default is that sequential loop.
+    fn decode_steps(&self, sessions: Vec<&mut KvHandle>) -> crate::Result<Vec<StepOutcome>> {
+        let mut outs = Vec::with_capacity(sessions.len());
+        for kv in sessions {
+            outs.push(self.decode_step(kv)?);
+        }
+        Ok(outs)
+    }
+
+    /// Prefill a batch of admissions — `(request, generated-token
+    /// budget)` pairs — returning each new session and its first
+    /// generated token in job order. Semantically equivalent to calling
+    /// [`ExecutionBackend::prefill`] on each job left to right; backends
+    /// may overlap independent prefills, but prefix-cache interactions
+    /// between jobs of the same admission wave (one job inserting the
+    /// block chain a later sibling hits) must observe the same order the
+    /// sequential loop would. The default is that sequential loop.
+    fn prefill_batch(
+        &self,
+        jobs: &[(Request, u32)],
+    ) -> crate::Result<Vec<(KvHandle, StepOutcome)>> {
+        let mut outs = Vec::with_capacity(jobs.len());
+        for (req, budget) in jobs {
+            outs.push(self.prefill(req, *budget)?);
+        }
+        Ok(outs)
+    }
 }
 
 /// Precomputed per-token accelerator costs for the served model

@@ -231,9 +231,13 @@ impl<B: ExecutionBackend> Engine<B> {
     /// The loop is token-level: each iteration (a) admits pending
     /// arrivals into free session slots (FIFO through the shared
     /// [`BatchScheduler::take_ready`] rule), (b) takes one decode step
-    /// for every running session and prefills the newly admitted ones,
-    /// and (c) retires sessions that exhausted their generated-token
-    /// budget. The clock advances by [`CostModel::iteration_time_s`]:
+    /// for every running session and prefills the newly admitted ones —
+    /// through the backend's wave APIs
+    /// ([`ExecutionBackend::decode_steps`] /
+    /// [`ExecutionBackend::prefill_batch`]), which thread-parallel
+    /// backends overlap without changing any outcome — and (c) retires
+    /// sessions that exhausted their generated-token budget. The clock
+    /// advances by [`CostModel::iteration_time_s`]:
     /// prefill tokens pay per-token weight passes; all decode steps of an
     /// iteration share one weight pass (the weight-bound GEMV regime).
     /// Keeping the running batch full is therefore what buys throughput
@@ -288,17 +292,28 @@ impl<B: ExecutionBackend> Engine<B> {
             // work, never amortized by the shared decode weight pass.
             let mut adapter_tokens = 0u64;
             let mut decode_ctxs: Vec<u64> = Vec::with_capacity(active.len());
-            for s in active.iter_mut() {
+            for s in active.iter() {
                 let ctx = s.kv.context_len() as u64;
                 decode_ctxs.push(ctx);
                 adapter_tokens += s.kv.adapter.is_some() as u64;
-                let out = self.backend.decode_step(&mut s.kv)?;
-                s.record_step(ctx, out, &cost);
+            }
+            // One decode wave through the backend's batch API (session
+            // order is preserved, so attribution below is unchanged).
+            let kv_refs: Vec<&mut KvHandle> = active.iter_mut().map(|s| &mut s.kv).collect();
+            let outs = self.backend.decode_steps(kv_refs)?;
+            for ((s, ctx), out) in active.iter_mut().zip(&decode_ctxs).zip(outs) {
+                s.record_step(*ctx, out, &cost);
                 s.peak_batch = s.peak_batch.max(batch_now);
             }
-            for req in admitted {
-                let budget = decode_budget(&req, default_gen);
-                let (kv, out) = self.backend.prefill(&req, budget)?;
+            let jobs: Vec<(Request, u32)> = admitted
+                .into_iter()
+                .map(|req| {
+                    let budget = decode_budget(&req, default_gen);
+                    (req, budget)
+                })
+                .collect();
+            let prefilled = self.backend.prefill_batch(&jobs)?;
+            for ((req, _), (kv, out)) in jobs.iter().zip(prefilled) {
                 let computed = (kv.prompt_len - kv.cached_tokens) as u64;
                 prefill_tokens += computed;
                 copied_tokens += kv.cached_tokens as u64;
@@ -369,9 +384,16 @@ impl<B: ExecutionBackend> Engine<B> {
             let mut prefill_tokens = 0u64;
             let mut copied_tokens = 0u64;
             let mut adapter_tokens = 0u64;
-            for req in &b.requests {
-                let budget = decode_budget(req, default_gen);
-                let (kv, out) = self.backend.prefill(req, budget)?;
+            let jobs: Vec<(Request, u32)> = b
+                .requests
+                .into_iter()
+                .map(|req| {
+                    let budget = decode_budget(&req, default_gen);
+                    (req, budget)
+                })
+                .collect();
+            let prefilled = self.backend.prefill_batch(&jobs)?;
+            for ((req, _), (kv, out)) in jobs.iter().zip(prefilled) {
                 let computed = (kv.prompt_len - kv.cached_tokens) as u64;
                 prefill_tokens += computed;
                 copied_tokens += kv.cached_tokens as u64;
@@ -402,12 +424,20 @@ impl<B: ExecutionBackend> Engine<B> {
                 iterations += 1;
                 let mut decode_ctxs = Vec::new();
                 let mut adapter_steps = 0u64;
-                for s in sessions.iter_mut().filter(|s| s.finish_abs.is_none()) {
+                let mut stepping: Vec<&mut DecodeSession> = sessions
+                    .iter_mut()
+                    .filter(|s| s.finish_abs.is_none())
+                    .collect();
+                for s in stepping.iter() {
                     let ctx = s.kv.context_len() as u64;
                     decode_ctxs.push(ctx);
                     adapter_steps += s.kv.adapter.is_some() as u64;
-                    let out = self.backend.decode_step(&mut s.kv)?;
-                    s.record_step(ctx, out, &cost);
+                }
+                let kv_refs: Vec<&mut KvHandle> =
+                    stepping.iter_mut().map(|s| &mut s.kv).collect();
+                let outs = self.backend.decode_steps(kv_refs)?;
+                for ((s, ctx), out) in stepping.iter_mut().zip(&decode_ctxs).zip(outs) {
+                    s.record_step(*ctx, out, &cost);
                 }
                 clock += cost.iteration_time_s(0, &decode_ctxs)
                     + cost.adapter_time_s(adapter_steps);

@@ -8,10 +8,20 @@
 //! in the integration tests.
 
 use crate::config::ModelConfig;
-use crate::exec::{reuse_matmul_chunked, sharded_reuse_matmul_chunked, ExecStats};
+use crate::exec::{
+    fill_products, packed_tile, reuse_matmul_chunked, reuse_matmul_packed, shard_ranges,
+    sharded_reuse_matmul_chunked, sharded_reuse_matmul_packed, EpochTags, ExecArena, ExecStats,
+};
 use crate::model::LayerWeights;
 use crate::model::MatKind;
-use crate::quant::{QuantMatrix, QuantParams};
+use crate::quant::{PackedQuantMatrix, QuantMatrix, QuantParams};
+use crate::util::pool::par_map;
+
+/// Minimum `seq × cols` element count before a sharded matmul fans its
+/// shards out across worker threads — below this (decode-sized calls) the
+/// spawn/join overhead outweighs the work and the arena-backed sequential
+/// kernel wins.
+const PAR_MIN_ELEMS: usize = 32_768;
 
 /// Row-wise softmax over a `rows×cols` matrix (in place).
 pub fn softmax_rows(m: &mut [f32], rows: usize, cols: usize) {
@@ -181,6 +191,219 @@ pub fn qmatmul_rowwise_sharded(
     y
 }
 
+/// Packed-kernel form of [`qmatmul`] (`rowwise = false`, block activation
+/// grid) and [`qmatmul_rowwise`] (`rowwise = true`, per-row grids):
+/// identical quantization grids, bit-identical output and counters, with
+/// every piece of kernel scratch drawn from `arena` — the per-row `xq`
+/// and `yq` `Vec` allocations of the scalar kernels disappear.
+fn qmatmul_packed(
+    x: &[f32],
+    seq: usize,
+    w: &PackedQuantMatrix,
+    chunk: usize,
+    rowwise: bool,
+    stats: &mut ExecStats,
+    arena: &mut ExecArena,
+) -> Vec<f32> {
+    let d = w.rows;
+    assert_eq!(x.len(), seq * d);
+    let block_params = if rowwise {
+        None
+    } else {
+        Some(QuantParams::fit(x, 8))
+    };
+    let mut y = vec![0f32; seq * w.cols];
+    for s in 0..seq {
+        let row = &x[s * d..(s + 1) * d];
+        let params = match block_params {
+            Some(p) => {
+                arena.quantize_with(row, p);
+                p
+            }
+            None => arena.quantize_into(row),
+        };
+        let scale = params.scale * w.params.scale;
+        // The quantized row moves out of the arena for the kernel call
+        // (the kernel borrows the rest of the arena mutably) and back in
+        // afterwards — a pointer swap, not a copy.
+        let xq = std::mem::take(&mut arena.xq);
+        let st = reuse_matmul_packed(&xq, w, chunk, arena);
+        arena.xq = xq;
+        stats.mults += st.mults;
+        stats.reuses += st.reuses;
+        for (yj, &v) in y[s * w.cols..(s + 1) * w.cols].iter_mut().zip(&arena.yq) {
+            *yj = v as f32 * scale;
+        }
+    }
+    y
+}
+
+/// Packed-kernel form of [`qmatmul_sharded`] / [`qmatmul_rowwise_sharded`]
+/// with per-shard accounting. Prefill-scale calls (`seq × cols ≥`
+/// [`PAR_MIN_ELEMS`]) fan the shards out across worker threads via
+/// [`par_map`]; smaller calls run the arena-backed sequential kernel.
+/// Both are bit-identical to the scalar sharded kernels in values and
+/// per-shard counters.
+#[allow(clippy::too_many_arguments)]
+fn qmatmul_sharded_packed(
+    x: &[f32],
+    seq: usize,
+    w: &PackedQuantMatrix,
+    chunk: usize,
+    shards: usize,
+    rowwise: bool,
+    per_shard: &mut [ExecStats],
+    stats: &mut ExecStats,
+    arena: &mut ExecArena,
+) -> Vec<f32> {
+    let d = w.rows;
+    assert_eq!(x.len(), seq * d);
+    assert_eq!(per_shard.len(), shards.max(1));
+    if shards > 1 && seq * w.cols >= PAR_MIN_ELEMS {
+        return qmatmul_sharded_packed_par(x, seq, w, chunk, shards, rowwise, per_shard, stats);
+    }
+    let block_params = if rowwise {
+        None
+    } else {
+        Some(QuantParams::fit(x, 8))
+    };
+    let mut y = vec![0f32; seq * w.cols];
+    for s in 0..seq {
+        let row = &x[s * d..(s + 1) * d];
+        let params = match block_params {
+            Some(p) => {
+                arena.quantize_with(row, p);
+                p
+            }
+            None => arena.quantize_into(row),
+        };
+        let scale = params.scale * w.params.scale;
+        let xq = std::mem::take(&mut arena.xq);
+        let st = sharded_reuse_matmul_packed(&xq, w, chunk, shards, per_shard, arena);
+        arena.xq = xq;
+        stats.add(&st);
+        for (yj, &v) in y[s * w.cols..(s + 1) * w.cols].iter_mut().zip(&arena.yq) {
+            *yj = v as f32 * scale;
+        }
+    }
+    y
+}
+
+/// Thread-parallel shard fan-out: every sequence row is quantized up
+/// front (on exactly the grids the sequential path uses), then each shard
+/// runs as one [`par_map`] task owning its own product table, epoch tags,
+/// and output slab. The merge is deterministic — slabs and counters are
+/// stitched in shard order, so values and per-shard accounting are
+/// independent of worker scheduling (the deterministic-merge invariant of
+/// `rust/DESIGN.md`).
+#[allow(clippy::too_many_arguments)]
+fn qmatmul_sharded_packed_par(
+    x: &[f32],
+    seq: usize,
+    w: &PackedQuantMatrix,
+    chunk: usize,
+    shards: usize,
+    rowwise: bool,
+    per_shard: &mut [ExecStats],
+    stats: &mut ExecStats,
+) -> Vec<f32> {
+    let d = w.rows;
+    let block_params = if rowwise {
+        None
+    } else {
+        Some(QuantParams::fit(x, 8))
+    };
+    let mut xq_all = vec![0i8; seq * d];
+    let mut scales = vec![0f32; seq];
+    for s in 0..seq {
+        let row = &x[s * d..(s + 1) * d];
+        let params = block_params.unwrap_or_else(|| QuantParams::fit(row, 8));
+        for (q, &v) in xq_all[s * d..(s + 1) * d].iter_mut().zip(row) {
+            *q = params.quantize(v);
+        }
+        scales[s] = params.scale * w.params.scale;
+    }
+    let ranges = shard_ranges(w.cols, shards);
+    let xq_all = &xq_all;
+    let slabs = par_map(ranges.clone(), |range| {
+        let width = range.end - range.start;
+        let mut slab = vec![0i32; seq * width];
+        let mut tags = EpochTags::new();
+        let mut products = [0i32; 256];
+        let mut st = ExecStats::default();
+        for s in 0..seq {
+            let xq = &xq_all[s * d..(s + 1) * d];
+            let yrow = &mut slab[s * width..(s + 1) * width];
+            for (i, &xi) in xq.iter().enumerate() {
+                fill_products(xi as i32, &mut products);
+                let words = w.row_words(i);
+                let mut col = range.start;
+                while col < range.end {
+                    // Global-grid chunking, as in the sequential kernels.
+                    let end = ((col / chunk + 1) * chunk).min(range.end);
+                    tags.next_epoch();
+                    let unique =
+                        packed_tile(words, col, end, &products, &mut tags, yrow, range.start);
+                    st.mults += unique;
+                    st.reuses += (end - col) as u64 - unique;
+                    col = end;
+                }
+            }
+        }
+        (slab, st)
+    });
+    let mut y = vec![0f32; seq * w.cols];
+    for ((range, (slab, st)), acc) in ranges.iter().zip(&slabs).zip(per_shard.iter_mut()) {
+        acc.add(st);
+        stats.add(st);
+        let width = range.end - range.start;
+        for s in 0..seq {
+            let dst = &mut y[s * w.cols + range.start..s * w.cols + range.end];
+            for (yj, &v) in dst.iter_mut().zip(&slab[s * width..(s + 1) * width]) {
+                *yj = v as f32 * scales[s];
+            }
+        }
+    }
+    y
+}
+
+/// Route one layer matmul to the right kernel: scalar reference kernels
+/// (the seed path — bench baseline and property-suite oracle) or the
+/// packed/tiled arena path, monolithic or sharded, block-grid or row-wise
+/// activation quantization. All routes are bit-identical in values and
+/// counters.
+#[allow(clippy::too_many_arguments)]
+fn matmul_dispatch(
+    x: &[f32],
+    seq: usize,
+    weights: &LayerWeights,
+    kind: MatKind,
+    chunk: usize,
+    shards: usize,
+    scalar: bool,
+    rowwise: bool,
+    stats: &mut ExecStats,
+    shard_stats: &mut [ExecStats],
+    arena: &mut ExecArena,
+) -> Vec<f32> {
+    if scalar {
+        let w = weights.get(kind);
+        match (shards <= 1, rowwise) {
+            (true, false) => qmatmul(x, seq, w, chunk, stats),
+            (true, true) => qmatmul_rowwise(x, seq, w, chunk, stats),
+            (false, false) => qmatmul_sharded(x, seq, w, chunk, shards, shard_stats, stats),
+            (false, true) => qmatmul_rowwise_sharded(x, seq, w, chunk, shards, shard_stats, stats),
+        }
+    } else {
+        let w = weights.get_packed(kind);
+        if shards <= 1 {
+            qmatmul_packed(x, seq, w, chunk, rowwise, stats, arena)
+        } else {
+            qmatmul_sharded_packed(x, seq, w, chunk, shards, rowwise, shard_stats, stats, arena)
+        }
+    }
+}
+
 /// One layer's K/V cache for causal autoregressive decode: the keys and
 /// values of every position processed so far, `len × d_model` row-major.
 #[derive(Clone, Debug, Default)]
@@ -239,6 +462,12 @@ pub struct LayerExec<'a> {
     /// Per-shard reuse counters (empty when unsharded; one entry per
     /// shard otherwise — each shard owns an independent Result Cache).
     pub shard_stats: Vec<ExecStats>,
+    /// Scratch arena the packed kernels draw from (recycled across
+    /// forward passes and, via [`LayerExec::into_arena`], across layers).
+    arena: ExecArena,
+    /// Route matmuls through the seed scalar reference kernels instead of
+    /// the packed/tiled arena path (bit-identical either way).
+    scalar: bool,
 }
 
 impl<'a> LayerExec<'a> {
@@ -251,7 +480,33 @@ impl<'a> LayerExec<'a> {
             stats: ExecStats::default(),
             shards: 1,
             shard_stats: Vec::new(),
+            arena: ExecArena::new(),
+            scalar: false,
         }
+    }
+
+    /// Adopt a caller-supplied scratch arena (one recycled across layers
+    /// by a backend, its buffers already grown to steady-state sizes);
+    /// pairs with [`LayerExec::into_arena`].
+    pub fn with_arena(mut self, arena: ExecArena) -> Self {
+        self.arena = arena;
+        self
+    }
+
+    /// Surrender the scratch arena so the next layer can reuse it.
+    pub fn into_arena(self) -> ExecArena {
+        self.arena
+    }
+
+    /// Route every matmul through the seed scalar reference kernels
+    /// (allocation-heavy, never thread-parallel) instead of the
+    /// packed/tiled path. Outputs and counters are bit-identical either
+    /// way — this exists as the honest baseline for
+    /// `benches/functional_hot_loop.rs` and as the oracle for
+    /// `tests/prop_packed.rs`.
+    pub fn with_scalar(mut self, scalar: bool) -> Self {
+        self.scalar = scalar;
+        self
     }
 
     /// Split every weight matmul column-wise across `n` shards, each with
@@ -276,45 +531,54 @@ impl<'a> LayerExec<'a> {
         let dh = self.cfg.d_head();
         assert_eq!(x.len(), seq * d);
         // Split borrows: the weight references must stay live across the
-        // stat-accumulating matmul closure.
-        let (chunk, shards) = (self.chunk, self.shards);
+        // stat-accumulating matmul closure. The arena stays outside the
+        // closure (passed per call) so the attention section can draw its
+        // score scratch from it between matmuls.
+        let (chunk, shards, scalar) = (self.chunk, self.shards, self.scalar);
         let weights = self.weights;
         let stats = &mut self.stats;
         let shard_stats = &mut self.shard_stats;
-        let mut qm = |x: &[f32], seq: usize, w: &QuantMatrix| {
-            if shards <= 1 {
-                qmatmul(x, seq, w, chunk, stats)
-            } else {
-                qmatmul_sharded(x, seq, w, chunk, shards, shard_stats, stats)
-            }
+        let arena = &mut self.arena;
+        let mut qm = |x: &[f32], seq: usize, kind: MatKind, arena: &mut ExecArena| {
+            matmul_dispatch(
+                x,
+                seq,
+                weights,
+                kind,
+                chunk,
+                shards,
+                scalar,
+                false,
+                stats,
+                shard_stats,
+                arena,
+            )
         };
 
-        let wq = weights.get(MatKind::Wq);
-        let wk = weights.get(MatKind::Wk);
-        let wv = weights.get(MatKind::Wv);
-        let q = qm(x, seq, wq);
-        let k = qm(x, seq, wk);
-        let v = qm(x, seq, wv);
+        let q = qm(x, seq, MatKind::Wq, &mut *arena);
+        let k = qm(x, seq, MatKind::Wk, &mut *arena);
+        let v = qm(x, seq, MatKind::Wv, &mut *arena);
 
         // Per-head scaled dot-product attention.
         let mut ctx = vec![0f32; seq * d];
         let scale = 1.0 / (dh as f32).sqrt();
         for head in 0..h {
             let off = head * dh;
-            let mut scores = vec![0f32; seq * seq];
+            arena.scores.clear();
+            arena.scores.resize(seq * seq, 0.0);
             for i in 0..seq {
                 for j in 0..seq {
                     let mut s = 0f32;
                     for t in 0..dh {
                         s += q[i * d + off + t] * k[j * d + off + t];
                     }
-                    scores[i * seq + j] = s * scale;
+                    arena.scores[i * seq + j] = s * scale;
                 }
             }
-            softmax_rows(&mut scores, seq, seq);
+            softmax_rows(&mut arena.scores, seq, seq);
             for i in 0..seq {
                 for j in 0..seq {
-                    let a = scores[i * seq + j];
+                    let a = arena.scores[i * seq + j];
                     for t in 0..dh {
                         ctx[i * d + off + t] += a * v[j * d + off + t];
                     }
@@ -322,21 +586,18 @@ impl<'a> LayerExec<'a> {
             }
         }
 
-        let wo = weights.get(MatKind::Wo);
-        let attn_out = qm(&ctx, seq, wo);
+        let attn_out = qm(&ctx, seq, MatKind::Wo, &mut *arena);
 
         // Residual + LN.
         let mut h1: Vec<f32> = x.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
         layer_norm(&mut h1, seq, d);
 
         // FFN: relu(h1·W1)·W2.
-        let w1 = weights.get(MatKind::Ff1);
-        let w2 = weights.get(MatKind::Ff2);
-        let mut ff = qm(&h1, seq, w1);
+        let mut ff = qm(&h1, seq, MatKind::Ff1, &mut *arena);
         for v in ff.iter_mut() {
             *v = v.max(0.0);
         }
-        let ff2 = qm(&ff, seq, w2);
+        let ff2 = qm(&ff, seq, MatKind::Ff2, &mut *arena);
 
         let mut out: Vec<f32> = h1.iter().zip(&ff2).map(|(a, b)| a + b).collect();
         layer_norm(&mut out, seq, d);
@@ -360,25 +621,33 @@ impl<'a> LayerExec<'a> {
         let dh = self.cfg.d_head();
         assert_eq!(x_new.len(), n_new * d);
         let p0 = kv.len;
-        // Split borrows, as in [`LayerExec::forward`].
-        let (chunk, shards) = (self.chunk, self.shards);
+        // Split borrows, as in [`LayerExec::forward`]; the arena is
+        // passed per call so the causal attention loop can draw its
+        // score scratch from it between matmuls.
+        let (chunk, shards, scalar) = (self.chunk, self.shards, self.scalar);
         let weights = self.weights;
         let stats = &mut self.stats;
         let shard_stats = &mut self.shard_stats;
-        let mut qm = |x: &[f32], seq: usize, w: &QuantMatrix| {
-            if shards <= 1 {
-                qmatmul_rowwise(x, seq, w, chunk, stats)
-            } else {
-                qmatmul_rowwise_sharded(x, seq, w, chunk, shards, shard_stats, stats)
-            }
+        let arena = &mut self.arena;
+        let mut qm = |x: &[f32], seq: usize, kind: MatKind, arena: &mut ExecArena| {
+            matmul_dispatch(
+                x,
+                seq,
+                weights,
+                kind,
+                chunk,
+                shards,
+                scalar,
+                true,
+                stats,
+                shard_stats,
+                arena,
+            )
         };
 
-        let wq = weights.get(MatKind::Wq);
-        let wk = weights.get(MatKind::Wk);
-        let wv = weights.get(MatKind::Wv);
-        let q = qm(x_new, n_new, wq);
-        let k_new = qm(x_new, n_new, wk);
-        let v_new = qm(x_new, n_new, wv);
+        let q = qm(x_new, n_new, MatKind::Wq, &mut *arena);
+        let k_new = qm(x_new, n_new, MatKind::Wk, &mut *arena);
+        let v_new = qm(x_new, n_new, MatKind::Wv, &mut *arena);
         kv.k.extend_from_slice(&k_new);
         kv.v.extend_from_slice(&v_new);
         kv.len += n_new;
@@ -391,16 +660,17 @@ impl<'a> LayerExec<'a> {
             let span = p0 + t + 1;
             for head in 0..h {
                 let off = head * dh;
-                let mut scores = vec![0f32; span];
-                for (j, sc) in scores.iter_mut().enumerate() {
+                arena.scores.clear();
+                arena.scores.resize(span, 0.0);
+                for (j, sc) in arena.scores.iter_mut().enumerate() {
                     let mut s = 0f32;
                     for u in 0..dh {
                         s += q[t * d + off + u] * kv.k[j * d + off + u];
                     }
                     *sc = s * scale;
                 }
-                softmax_rows(&mut scores, 1, span);
-                for (j, &a) in scores.iter().enumerate() {
+                softmax_rows(&mut arena.scores, 1, span);
+                for (j, &a) in arena.scores.iter().enumerate() {
                     for u in 0..dh {
                         ctx[t * d + off + u] += a * kv.v[j * d + off + u];
                     }
@@ -408,20 +678,17 @@ impl<'a> LayerExec<'a> {
             }
         }
 
-        let wo = weights.get(MatKind::Wo);
-        let attn_out = qm(&ctx, n_new, wo);
+        let attn_out = qm(&ctx, n_new, MatKind::Wo, &mut *arena);
 
         // Residual + LN, then the FFN — all row-local.
         let mut h1: Vec<f32> = x_new.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
         layer_norm(&mut h1, n_new, d);
 
-        let w1 = weights.get(MatKind::Ff1);
-        let w2 = weights.get(MatKind::Ff2);
-        let mut ff = qm(&h1, n_new, w1);
+        let mut ff = qm(&h1, n_new, MatKind::Ff1, &mut *arena);
         for v in ff.iter_mut() {
             *v = v.max(0.0);
         }
-        let ff2 = qm(&ff, n_new, w2);
+        let ff2 = qm(&ff, n_new, MatKind::Ff2, &mut *arena);
 
         let mut out: Vec<f32> = h1.iter().zip(&ff2).map(|(a, b)| a + b).collect();
         layer_norm(&mut out, n_new, d);
@@ -623,6 +890,92 @@ mod tests {
             assert_eq!(yc_mono, yc_sh, "causal shards={shards}");
             let ops_c: u64 = sh_c.shard_stats.iter().map(|s| s.mults + s.reuses).sum();
             assert_eq!(ops_c, mono_c.stats.mults + mono_c.stats.reuses);
+        }
+    }
+
+    #[test]
+    fn scalar_mode_is_bit_identical_including_stats() {
+        // The packed/tiled arena path vs the seed scalar kernels: same
+        // outputs, same total and per-shard counters, on both the block
+        // and the causal path.
+        let (cfg, w) = tiny();
+        let seq = 5;
+        let x = synth_embeddings(seq, cfg.d_model, 61);
+        for shards in [1usize, 2, 4] {
+            let mut fast = LayerExec::new(&cfg, &w, 256).with_shards(shards);
+            let mut slow = LayerExec::new(&cfg, &w, 256)
+                .with_shards(shards)
+                .with_scalar(true);
+            assert_eq!(fast.forward(&x, seq), slow.forward(&x, seq), "shards={shards}");
+            assert_eq!(fast.stats, slow.stats, "shards={shards}");
+            assert_eq!(fast.shard_stats, slow.shard_stats, "shards={shards}");
+
+            let mut fast_c = LayerExec::new(&cfg, &w, 256).with_shards(shards);
+            let mut slow_c = LayerExec::new(&cfg, &w, 256)
+                .with_shards(shards)
+                .with_scalar(true);
+            let yf = fast_c.forward_causal(&x, seq, &mut LayerKv::new());
+            let ys = slow_c.forward_causal(&x, seq, &mut LayerKv::new());
+            assert_eq!(yf, ys, "causal shards={shards}");
+            assert_eq!(fast_c.stats, slow_c.stats, "causal shards={shards}");
+            assert_eq!(fast_c.shard_stats, slow_c.shard_stats, "causal shards={shards}");
+        }
+    }
+
+    #[test]
+    fn arena_recycling_across_layers_is_stateless() {
+        // Handing a dirty arena from one executor to the next must not
+        // change anything: same outputs and counters as a fresh arena.
+        let (cfg, w) = tiny();
+        let x = synth_embeddings(4, cfg.d_model, 63);
+        let mut fresh = LayerExec::new(&cfg, &w, 256);
+        let y_fresh = fresh.forward(&x, 4);
+
+        let mut first = LayerExec::new(&cfg, &w, 256);
+        let x2 = synth_embeddings(4, cfg.d_model, 64);
+        let _ = first.forward(&x2, 4);
+        let mut second = LayerExec::new(&cfg, &w, 256).with_arena(first.into_arena());
+        assert_eq!(second.forward(&x, 4), y_fresh);
+        assert_eq!(second.stats, fresh.stats);
+    }
+
+    #[test]
+    fn parallel_sharded_matmul_matches_sequential() {
+        // Drive the thread-parallel shard fan-out directly (the size gate
+        // normally reserves it for prefill-scale calls) and pin it to the
+        // scalar sharded kernels: same values, same per-shard counters,
+        // on both activation-grid modes.
+        let (cfg, w) = tiny();
+        let wq = w.get(crate::model::MatKind::Wq);
+        let packed = wq.packed();
+        let d = cfg.d_model;
+        let seq = 6;
+        let x = synth_embeddings(seq, d, 71);
+        for shards in [2usize, 3, 4] {
+            for rowwise in [false, true] {
+                let mut per_seq = vec![ExecStats::default(); shards];
+                let mut st_seq = ExecStats::default();
+                let y_seq = if rowwise {
+                    qmatmul_rowwise_sharded(&x, seq, wq, 64, shards, &mut per_seq, &mut st_seq)
+                } else {
+                    qmatmul_sharded(&x, seq, wq, 64, shards, &mut per_seq, &mut st_seq)
+                };
+                let mut per_par = vec![ExecStats::default(); shards];
+                let mut st_par = ExecStats::default();
+                let y_par = qmatmul_sharded_packed_par(
+                    &x,
+                    seq,
+                    &packed,
+                    64,
+                    shards,
+                    rowwise,
+                    &mut per_par,
+                    &mut st_par,
+                );
+                assert_eq!(y_par, y_seq, "shards={shards} rowwise={rowwise}");
+                assert_eq!(per_par, per_seq, "shards={shards} rowwise={rowwise}");
+                assert_eq!(st_par, st_seq, "shards={shards} rowwise={rowwise}");
+            }
         }
     }
 

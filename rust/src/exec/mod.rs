@@ -12,10 +12,12 @@ pub mod layer;
 pub mod sharded;
 
 pub use layer::{qmatmul_rowwise, quantize_row, softmax_rows, LayerExec, LayerKv};
-pub use sharded::{shard_accounting, shard_ranges, sharded_reuse_matmul_chunked};
+pub use sharded::{
+    shard_accounting, shard_ranges, sharded_reuse_matmul_chunked, sharded_reuse_matmul_packed,
+};
 
 use crate::model::LoraAdaptor;
-use crate::quant::{fold, QuantMatrix};
+use crate::quant::{fold, PackedQuantMatrix, QuantMatrix, PACK_WIDTH};
 
 /// Per-call counters of the functional executor, split between the base
 /// reuse pipeline and the LoRA side pipeline.
@@ -133,6 +135,242 @@ impl EpochTags {
     }
 }
 
+/// Fill the signed product table for input element `xi`:
+/// `products[q + 127] = xi·q` for `q ∈ [-127, 127]`. Entry 255 is
+/// reachable only by weight code −128 (its `q + 127` offset wraps to 255
+/// in `u8`); the symmetric quantizer excludes −128, but matrices built
+/// directly from codes may carry it, so the entry holds the true product
+/// `xi · −128` instead of a silent 0 (regression-tested below).
+#[inline]
+pub(crate) fn fill_products(xi: i32, products: &mut [i32; 256]) {
+    for (off, p) in products.iter_mut().enumerate().take(255) {
+        *p = xi * (off as i32 - 127);
+    }
+    products[255] = xi * -128;
+}
+
+/// Folded-value index per product-table offset: `FOLD[q + 127] = |q|`,
+/// with entry 255 → 128 (the fold of code −128). Lets the packed kernels
+/// run the value gather and the RC first-occurrence accounting off the
+/// same extracted offset byte in a single pass — first-occurrence counts
+/// are order-free within a chunk epoch, so the fused pass produces
+/// counters identical to the scalar two-pass kernel.
+pub(crate) const FOLD: [u8; 256] = {
+    let mut t = [0u8; 256];
+    let mut i = 0;
+    while i < 256 {
+        let q = i as i32 - 127;
+        t[i] = if q < 0 { (-q) as u8 } else { q as u8 };
+        i += 1;
+    }
+    t
+};
+
+/// Walk one RC chunk `[col, end)` of a packed weight row: gather products
+/// into `y` (indexed at `c - y_off`, so sharded callers can hand a
+/// shard-local slab) and count folded first occurrences against `tags`.
+/// The tile is bounded by the chunk edges, never the word grid — byte-wise
+/// head until word-aligned, whole `u32` words (4 codes) through the body,
+/// byte-wise tail — so row-padding bytes are never visited. Returns the
+/// chunk's unique (multiply) count.
+#[inline]
+pub(crate) fn packed_tile(
+    words: &[u32],
+    col: usize,
+    end: usize,
+    products: &[i32; 256],
+    tags: &mut EpochTags,
+    y: &mut [i32],
+    y_off: usize,
+) -> u64 {
+    let mut unique = 0u64;
+    let mut c = col;
+    while c < end && c % PACK_WIDTH != 0 {
+        let off = ((words[c / PACK_WIDTH] >> (8 * (c % PACK_WIDTH))) & 0xFF) as usize;
+        y[c - y_off] += products[off];
+        unique += tags.first_occurrence(FOLD[off]) as u64;
+        c += 1;
+    }
+    while c + PACK_WIDTH <= end {
+        let word = words[c / PACK_WIDTH];
+        let o0 = (word & 0xFF) as usize;
+        let o1 = ((word >> 8) & 0xFF) as usize;
+        let o2 = ((word >> 16) & 0xFF) as usize;
+        let o3 = (word >> 24) as usize;
+        let base = c - y_off;
+        y[base] += products[o0];
+        y[base + 1] += products[o1];
+        y[base + 2] += products[o2];
+        y[base + 3] += products[o3];
+        unique += tags.first_occurrence(FOLD[o0]) as u64;
+        unique += tags.first_occurrence(FOLD[o1]) as u64;
+        unique += tags.first_occurrence(FOLD[o2]) as u64;
+        unique += tags.first_occurrence(FOLD[o3]) as u64;
+        c += PACK_WIDTH;
+    }
+    while c < end {
+        let off = ((words[c / PACK_WIDTH] >> (8 * (c % PACK_WIDTH))) & 0xFF) as usize;
+        y[c - y_off] += products[off];
+        unique += tags.first_occurrence(FOLD[off]) as u64;
+        c += 1;
+    }
+    unique
+}
+
+/// Reusable scratch buffers for the packed hot path: one arena is
+/// threaded through an executor's forward passes so the per-row and
+/// per-chunk `Vec` allocations of the scalar reference kernels disappear
+/// from prefill and decode.
+///
+/// Lifetime rules (see `rust/DESIGN.md` §"Packed functional hot path"):
+/// an arena is owned by exactly one executor at a time, kernels leave
+/// their result inside it (e.g. [`ExecArena::yq`]), and callers copy or
+/// scale the result out before the next kernel call. Arenas never alias —
+/// parallel workers each own their own arena (or build scratch locally),
+/// which keeps parallel accounting trivially deterministic.
+#[derive(Clone, Debug)]
+pub struct ExecArena {
+    /// Quantized input row (the input side of one matmul).
+    pub(crate) xq: Vec<i8>,
+    /// Integer matmul output row (read back via [`ExecArena::yq`]).
+    pub(crate) yq: Vec<i32>,
+    /// Signed product table — the RC value datapath.
+    pub(crate) products: [i32; 256],
+    /// First-occurrence tags — the RC accounting — for monolithic runs.
+    pub(crate) tags: EpochTags,
+    /// Per-shard first-occurrence tags for sharded runs (one independent
+    /// Result Cache per shard).
+    pub(crate) shard_tags: Vec<EpochTags>,
+    /// Attention-score scratch (one causal row at a time).
+    pub(crate) scores: Vec<f32>,
+    /// LoRA side-pipe scratch: `x·A` in i64.
+    pub(crate) xa: Vec<i64>,
+    /// LoRA side-pipe output: `(x·A)·B` in i64 (read back via
+    /// [`ExecArena::side`]).
+    pub(crate) ys: Vec<i64>,
+}
+
+impl ExecArena {
+    /// Fresh arena with empty buffers (they grow to steady-state sizes on
+    /// first use and are reused afterwards).
+    pub fn new() -> ExecArena {
+        ExecArena {
+            xq: Vec::new(),
+            yq: Vec::new(),
+            products: [0i32; 256],
+            tags: EpochTags::new(),
+            shard_tags: Vec::new(),
+            scores: Vec::new(),
+            xa: Vec::new(),
+            ys: Vec::new(),
+        }
+    }
+
+    /// The integer output of the last packed matmul kernel call.
+    pub fn yq(&self) -> &[i32] {
+        &self.yq
+    }
+
+    /// The i64 output of the last [`lora_side_matmul_arena`] call.
+    pub fn side(&self) -> &[i64] {
+        &self.ys
+    }
+
+    /// Quantize `row` onto its own fitted grid into the arena's input
+    /// buffer (the row-wise activation-grid step of the hot path).
+    pub fn quantize_into(&mut self, row: &[f32]) -> crate::quant::QuantParams {
+        let params = crate::quant::QuantParams::fit(row, 8);
+        self.quantize_with(row, params);
+        params
+    }
+
+    /// Quantize `row` onto a caller-supplied grid into the arena's input
+    /// buffer (the block-grid step of [`layer::qmatmul`]-style calls).
+    pub(crate) fn quantize_with(&mut self, row: &[f32], params: crate::quant::QuantParams) {
+        self.xq.clear();
+        self.xq.extend(row.iter().map(|&v| params.quantize(v)));
+    }
+}
+
+impl Default for ExecArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Packed/tiled reuse-path execution of `y = x·W`: the blocked form of
+/// [`reuse_matmul_chunked`] over a [`PackedQuantMatrix`], with the output
+/// left in the arena ([`ExecArena::yq`]) and every scratch buffer drawn
+/// from it — the kernel allocates nothing.
+///
+/// Per input element the signed product table is filled once; each RC
+/// chunk is then walked as one [`packed_tile`] (byte head / word body /
+/// byte tail, bounded by the chunk edges so padding bytes are never
+/// visited), with value gather and epoch-tag accounting fused off the
+/// same extracted offset byte. Bit-identical to [`reuse_matmul_chunked`]
+/// in both values and counters — pinned by `tests/prop_packed.rs`.
+pub fn reuse_matmul_packed(
+    x: &[i8],
+    w: &PackedQuantMatrix,
+    chunk: usize,
+    arena: &mut ExecArena,
+) -> ExecStats {
+    assert_eq!(x.len(), w.rows);
+    assert!(chunk > 0);
+    let ExecArena {
+        yq, products, tags, ..
+    } = arena;
+    yq.clear();
+    yq.resize(w.cols, 0);
+    let mut stats = ExecStats::default();
+    for (i, &xi) in x.iter().enumerate() {
+        fill_products(xi as i32, products);
+        let words = w.row_words(i);
+        let mut col = 0usize;
+        while col < w.cols {
+            let end = (col + chunk).min(w.cols);
+            tags.next_epoch();
+            let unique = packed_tile(words, col, end, products, tags, yq, 0);
+            stats.mults += unique;
+            stats.reuses += (end - col) as u64 - unique;
+            col = end;
+        }
+    }
+    stats
+}
+
+/// Arena-backed adapter side pipeline: value-identical to
+/// [`lora_side_matmul`], with the `x·A` scratch and the output drawn from
+/// the arena (result read back via [`ExecArena::side`]; no allocation).
+pub fn lora_side_matmul_arena(
+    x: &[i8],
+    adaptor: &LoraAdaptor,
+    arena: &mut ExecArena,
+) -> ExecStats {
+    assert_eq!(x.len(), adaptor.a.rows);
+    let r = adaptor.a.cols;
+    let cols = adaptor.b.cols;
+    arena.xa.clear();
+    arena.xa.resize(r, 0);
+    for (i, &xi) in x.iter().enumerate() {
+        let xi = xi as i64;
+        for (k, xak) in arena.xa.iter_mut().enumerate() {
+            *xak += xi * adaptor.a.get(i, k) as i64;
+        }
+    }
+    arena.ys.clear();
+    arena.ys.resize(cols, 0);
+    for (k, &xak) in arena.xa.iter().enumerate() {
+        for (j, yj) in arena.ys.iter_mut().enumerate() {
+            *yj += xak * adaptor.b.get(k, j) as i64;
+        }
+    }
+    ExecStats {
+        adapter_mults: adaptor.extra_macs(),
+        ..ExecStats::default()
+    }
+}
+
 /// Dense reference: `y[j] = Σ_i x[i]·W[i,j]` in i32.
 pub fn dense_matmul(x: &[i8], w: &QuantMatrix) -> Vec<i32> {
     assert_eq!(x.len(), w.rows);
@@ -167,13 +405,10 @@ pub fn reuse_matmul_chunked(x: &[i8], w: &QuantMatrix, chunk: usize) -> (Vec<i32
     // Folded-value first-occurrence tags (epoch-cleared, wrap-hardened).
     let mut tags = EpochTags::new();
     // Signed product table: products[q + 127] = x_i * q (256-wide, u8
-    // indexed — entry 255 unused).
+    // indexed — entry 255 is code −128's slot, see [`fill_products`]).
     let mut products = [0i32; 256];
     for (i, &xi) in x.iter().enumerate() {
-        let xi = xi as i32;
-        for (off, p) in products.iter_mut().enumerate().take(255) {
-            *p = xi * (off as i32 - 127);
-        }
+        fill_products(xi as i32, &mut products);
         let row = w.row(i);
         let mut col = 0;
         while col < w.cols {
@@ -347,6 +582,121 @@ mod tests {
         }
         assert_eq!(stats.mults, unique);
         assert_eq!(stats.mults + stats.reuses, 300);
+    }
+
+    #[test]
+    fn code_minus_128_contributes_its_true_product() {
+        // Regression (−128 hazard): code −128's product-table offset
+        // wraps to entry 255, which used to be left zero-filled — the
+        // kernel silently added 0 instead of x_i·(−128). The symmetric
+        // quantizer never emits −128 (and `from_q` rejects it), so build
+        // the matrix via the struct literal to reach the hazard.
+        let params = crate::quant::QuantParams { scale: 1.0, bits: 8 };
+        let w = QuantMatrix {
+            rows: 2,
+            cols: 3,
+            data: vec![-128, 5, -128, 7, -128, 0],
+            params,
+        };
+        let x = vec![3i8, -2];
+        let dense = dense_matmul(&x, &w);
+        // y[0] = 3·(−128) + (−2)·7 = −398; y[1] = 3·5 + (−2)·(−128) = 271;
+        // y[2] = 3·(−128) = −384.
+        assert_eq!(dense, vec![-398, 271, -384]);
+        for chunk in [1usize, 2, 3, 16] {
+            let (y, stats) = reuse_matmul_chunked(&x, &w, chunk);
+            assert_eq!(y, dense, "chunk={chunk}");
+            assert_eq!(stats.mults + stats.reuses, 6);
+        }
+        let (y_sh, _) = sharded_reuse_matmul_chunked(&x, &w, 2, 2);
+        assert_eq!(y_sh, dense);
+        // The packed layout carries −128 as offset 255 and must agree.
+        let mut arena = ExecArena::new();
+        let stats = reuse_matmul_packed(&x, &w.packed(), 2, &mut arena);
+        assert_eq!(arena.yq(), &dense[..]);
+        assert_eq!(stats.mults + stats.reuses, 6);
+    }
+
+    #[test]
+    fn fold_table_matches_quant_fold() {
+        for q in -127i8..=127 {
+            let off = (q as i16 + 127) as u8;
+            assert_eq!(FOLD[off as usize], fold(q).0, "q={q}");
+        }
+        // Code −128 wraps to offset 255 and folds to 128 — the slot its
+        // accounting (`unsigned_abs`) uses in the 256-wide tag array.
+        assert_eq!(FOLD[255], 128);
+    }
+
+    #[test]
+    fn packed_matches_scalar_reuse_exactly() {
+        // Values AND counters, across chunk sizes including ones that are
+        // not multiples of the pack width.
+        let mut arena = ExecArena::new();
+        for seed in 0..4 {
+            let (x, w) = case(32, 130, seed);
+            let packed = w.packed();
+            for &chunk in &[1usize, 3, 4, 7, 64, 130, 500] {
+                let (y, stats) = reuse_matmul_chunked(&x, &w, chunk);
+                let sp = reuse_matmul_packed(&x, &packed, chunk, &mut arena);
+                assert_eq!(arena.yq(), &y[..], "seed={seed} chunk={chunk}");
+                assert_eq!(sp, stats, "seed={seed} chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_handles_degenerate_shapes() {
+        let mut arena = ExecArena::new();
+        // Empty matrix: no columns, no work.
+        let (x, w) = case(8, 0, 1);
+        let stats = reuse_matmul_packed(&x, &w.packed(), 16, &mut arena);
+        assert!(arena.yq().is_empty());
+        assert_eq!(stats, ExecStats::default());
+        // Single column: one byte per row word.
+        let (x, w) = case(8, 1, 2);
+        let (y, st) = reuse_matmul_chunked(&x, &w, 16);
+        let sp = reuse_matmul_packed(&x, &w.packed(), 16, &mut arena);
+        assert_eq!(arena.yq(), &y[..]);
+        assert_eq!(sp, st);
+        // Empty input vector (0×N matrix).
+        let (_, w) = case(0, 5, 3);
+        let sp = reuse_matmul_packed(&[], &w.packed(), 4, &mut arena);
+        assert_eq!(arena.yq(), &[0i32; 5][..]);
+        assert_eq!(sp, ExecStats::default());
+    }
+
+    #[test]
+    fn arena_reuse_across_calls_is_stateless() {
+        // A dirty arena (stale yq/tags/products from a previous call)
+        // must not leak into the next call's result.
+        let mut arena = ExecArena::new();
+        let (x1, w1) = case(24, 96, 31);
+        let _ = reuse_matmul_packed(&x1, &w1.packed(), 17, &mut arena);
+        let (x2, w2) = case(16, 200, 32);
+        let (y, stats) = reuse_matmul_chunked(&x2, &w2, 64);
+        let sp = reuse_matmul_packed(&x2, &w2.packed(), 64, &mut arena);
+        assert_eq!(arena.yq(), &y[..]);
+        assert_eq!(sp, stats);
+    }
+
+    #[test]
+    fn lora_side_arena_matches_allocating_side_pipe() {
+        let mut rng = Rng::new(41);
+        let dist = WeightDistribution::default();
+        let w = synthesize_matrix(48, 64, dist, &mut rng);
+        let adaptor =
+            LoraAdaptor::synthesize(&w, LoraConfig { rank: 4, alpha: 8.0 }, dist, &mut rng);
+        let x: Vec<i8> = (0..48).map(|_| rng.range_i64(-100, 100) as i8).collect();
+        let (side, side_stats) = lora_side_matmul(&x, &adaptor);
+        let mut arena = ExecArena::new();
+        let arena_stats = lora_side_matmul_arena(&x, &adaptor, &mut arena);
+        assert_eq!(arena.side(), &side[..]);
+        assert_eq!(arena_stats, side_stats);
+        // And again on the dirty arena.
+        let arena_stats2 = lora_side_matmul_arena(&x, &adaptor, &mut arena);
+        assert_eq!(arena.side(), &side[..]);
+        assert_eq!(arena_stats2, side_stats);
     }
 
     #[test]

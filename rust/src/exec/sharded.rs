@@ -29,8 +29,8 @@
 //! This is the measurable interaction between quantization-locality reuse
 //! and tensor parallelism the shard-aware backends report per shard.
 
-use crate::exec::{EpochTags, ExecStats};
-use crate::quant::QuantMatrix;
+use crate::exec::{fill_products, packed_tile, EpochTags, ExecArena, ExecStats};
+use crate::quant::{PackedQuantMatrix, QuantMatrix};
 use std::ops::Range;
 
 /// Exact column partition: shard `s` of `n` owns
@@ -68,13 +68,11 @@ pub fn sharded_reuse_matmul_chunked(
     // One independent Result Cache (accounting tags) per shard.
     let mut tags: Vec<EpochTags> = (0..ranges.len()).map(|_| EpochTags::new()).collect();
     // Signed product table shared across shards: a value datapath detail
-    // only — each shard's *accounting* is fully independent.
+    // only — each shard's *accounting* is fully independent. Entry 255 is
+    // code −128's slot (see [`fill_products`]).
     let mut products = [0i32; 256];
     for (i, &xi) in x.iter().enumerate() {
-        let xi = xi as i32;
-        for (off, p) in products.iter_mut().enumerate().take(255) {
-            *p = xi * (off as i32 - 127);
-        }
+        fill_products(xi as i32, &mut products);
         let row = w.row(i);
         for (s, range) in ranges.iter().enumerate() {
             let stats = &mut per_shard[s];
@@ -100,6 +98,65 @@ pub fn sharded_reuse_matmul_chunked(
         }
     }
     (y, per_shard)
+}
+
+/// Packed/tiled form of [`sharded_reuse_matmul_chunked`]: shard `s` walks
+/// its column slice of a [`PackedQuantMatrix`] on the same **global**
+/// W_buff chunk grid, with per-shard [`EpochTags`] persisted in the arena
+/// and the output left in [`ExecArena::yq`] — the kernel allocates
+/// nothing. Per-call counters are **added** into `per_shard` (one entry
+/// per shard) and the call's total is returned, so callers accumulating
+/// across rows need no intermediate `Vec`.
+///
+/// Bit-identical to [`sharded_reuse_matmul_chunked`] in values and in
+/// per-shard counters — pinned by `tests/prop_packed.rs`.
+pub fn sharded_reuse_matmul_packed(
+    x: &[i8],
+    w: &PackedQuantMatrix,
+    chunk: usize,
+    shards: usize,
+    per_shard: &mut [ExecStats],
+    arena: &mut ExecArena,
+) -> ExecStats {
+    assert_eq!(x.len(), w.rows);
+    assert!(chunk > 0);
+    let ranges = shard_ranges(w.cols, shards);
+    assert_eq!(per_shard.len(), ranges.len());
+    let ExecArena {
+        yq,
+        products,
+        shard_tags,
+        ..
+    } = arena;
+    yq.clear();
+    yq.resize(w.cols, 0);
+    // One independent Result Cache (accounting tags) per shard; persisted
+    // across calls — every chunk opens a fresh epoch, so stale tags can
+    // never alias (the wrap reset in [`EpochTags::next_epoch`] covers the
+    // 2^32 boundary).
+    if shard_tags.len() < ranges.len() {
+        shard_tags.resize_with(ranges.len(), EpochTags::new);
+    }
+    let mut total = ExecStats::default();
+    for (i, &xi) in x.iter().enumerate() {
+        fill_products(xi as i32, products);
+        let words = w.row_words(i);
+        for (s, range) in ranges.iter().enumerate() {
+            let mut col = range.start;
+            while col < range.end {
+                // Global-grid chunking, as in the scalar sharded kernel.
+                let end = ((col / chunk + 1) * chunk).min(range.end);
+                shard_tags[s].next_epoch();
+                let unique = packed_tile(words, col, end, products, &mut shard_tags[s], yq, 0);
+                per_shard[s].mults += unique;
+                per_shard[s].reuses += (end - col) as u64 - unique;
+                total.mults += unique;
+                total.reuses += (end - col) as u64 - unique;
+                col = end;
+            }
+        }
+    }
+    total
 }
 
 /// Per-shard reuse accounting of one weight matrix, without executing any
@@ -286,6 +343,54 @@ mod tests {
                 assert_eq!(a.mults, b.mults, "shards={shards}");
                 assert_eq!(a.reuses, b.reuses, "shards={shards}");
             }
+        }
+    }
+
+    #[test]
+    fn packed_sharded_matches_scalar_sharded_exactly() {
+        // Values AND per-shard counters, on misaligned shard boundaries
+        // and chunk sizes that are not multiples of the pack width.
+        let mut arena = ExecArena::new();
+        let (x, w) = case(24, 130, 7);
+        let packed = w.packed();
+        for shards in [1usize, 2, 3, 4, 8] {
+            for chunk in [3usize, 7, 64, 130] {
+                let (y, per) = sharded_reuse_matmul_chunked(&x, &w, chunk, shards);
+                let mut per_packed = vec![ExecStats::default(); shards];
+                let total = sharded_reuse_matmul_packed(
+                    &x,
+                    &packed,
+                    chunk,
+                    shards,
+                    &mut per_packed,
+                    &mut arena,
+                );
+                assert_eq!(arena.yq(), &y[..], "shards={shards} chunk={chunk}");
+                assert_eq!(per_packed, per, "shards={shards} chunk={chunk}");
+                let sum = per.iter().fold(ExecStats::default(), |mut a, s| {
+                    a.add(s);
+                    a
+                });
+                assert_eq!(total, sum, "shards={shards} chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_sharded_accumulates_into_per_shard() {
+        // The out-param contract: counters add across calls instead of
+        // overwriting, so row-looping callers need no intermediate Vec.
+        let mut arena = ExecArena::new();
+        let (x, w) = case(8, 96, 13);
+        let packed = w.packed();
+        let mut acc = vec![ExecStats::default(); 2];
+        let t1 = sharded_reuse_matmul_packed(&x, &packed, 32, 2, &mut acc, &mut arena);
+        let t2 = sharded_reuse_matmul_packed(&x, &packed, 32, 2, &mut acc, &mut arena);
+        assert_eq!(t1, t2, "same input, same counters");
+        let (_, per) = sharded_reuse_matmul_chunked(&x, &w, 32, 2);
+        for (a, p) in acc.iter().zip(&per) {
+            assert_eq!(a.mults, 2 * p.mults);
+            assert_eq!(a.reuses, 2 * p.reuses);
         }
     }
 

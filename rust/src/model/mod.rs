@@ -16,7 +16,7 @@ pub use lora::{AdapterId, AdapterRegistry, LoraAdaptor};
 pub use synth::{synthesize_matrix, WeightDistribution};
 
 use crate::config::ModelConfig;
-use crate::quant::QuantMatrix;
+use crate::quant::{PackedQuantMatrix, QuantMatrix};
 use crate::util::rng::Rng;
 
 /// Which weight matrix of a layer (the matmuls AxLLM accelerates).
@@ -73,6 +73,12 @@ impl MatKind {
 
 /// One transformer layer's quantized weights (+ optional LoRA on Q and V,
 /// the standard attachment points).
+///
+/// Built through [`LayerWeights::new`], which also derives the packed
+/// 4-codes-per-word layout ([`PackedQuantMatrix`]) of every matrix once,
+/// at load time — the functional hot path consumes the packed view, the
+/// scalar reference kernels and the cycle simulator keep consuming the
+/// byte codes.
 #[derive(Clone, Debug)]
 pub struct LayerWeights {
     /// Layer index within the model.
@@ -83,13 +89,43 @@ pub struct LayerWeights {
     pub lora_q: Option<LoraAdaptor>,
     /// LoRA adaptor on the V projection (fine-tuned models).
     pub lora_v: Option<LoraAdaptor>,
+    /// Packed views of `mats`, same order (derived at construction).
+    packed: Vec<(MatKind, PackedQuantMatrix)>,
 }
 
 impl LayerWeights {
+    /// Assemble a layer from its quantized matrices, deriving the packed
+    /// view of each one up front.
+    pub fn new(
+        layer_idx: usize,
+        mats: Vec<(MatKind, QuantMatrix)>,
+        lora_q: Option<LoraAdaptor>,
+        lora_v: Option<LoraAdaptor>,
+    ) -> LayerWeights {
+        let packed = mats.iter().map(|(k, m)| (*k, m.packed())).collect();
+        LayerWeights {
+            layer_idx,
+            mats,
+            lora_q,
+            lora_v,
+            packed,
+        }
+    }
+
     /// The layer's matrix of the given kind (panics if absent).
     pub fn get(&self, kind: MatKind) -> &QuantMatrix {
         &self
             .mats
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .unwrap_or_else(|| panic!("missing matrix {kind:?}"))
+            .1
+    }
+
+    /// The packed view of the given kind (panics if absent).
+    pub fn get_packed(&self, kind: MatKind) -> &PackedQuantMatrix {
+        &self
+            .packed
             .iter()
             .find(|(k, _)| *k == kind)
             .unwrap_or_else(|| panic!("missing matrix {kind:?}"))
@@ -213,12 +249,7 @@ impl Model {
                 (Some(mk(wq, 1)), Some(mk(wv, 2)))
             }
         };
-        LayerWeights {
-            layer_idx: layer,
-            mats,
-            lora_q,
-            lora_v,
-        }
+        LayerWeights::new(layer, mats, lora_q, lora_v)
     }
 }
 
@@ -267,6 +298,19 @@ mod tests {
         let part = m.matrix_rows(0, MatKind::Wo, 3);
         assert_eq!(part.rows, 3);
         assert_eq!(part.data[..], full.data[..3 * full.cols]);
+    }
+
+    #[test]
+    fn packed_views_match_byte_codes() {
+        let m = Model::new(ModelConfig::tiny(), 11);
+        let l = m.layer(0);
+        for &kind in &MatKind::ALL {
+            let q = l.get(kind);
+            let p = l.get_packed(kind);
+            assert_eq!(p.rows, q.rows);
+            assert_eq!(p.cols, q.cols);
+            assert_eq!(p.unpack(), q.data, "{kind:?}");
+        }
     }
 
     #[test]

@@ -175,6 +175,11 @@ impl QuantMatrix {
         self.data.iter().map(|&q| (q as i16 + 127) as u8).collect()
     }
 
+    /// Pack into the 4-codes-per-word layout the tiled kernels consume.
+    pub fn packed(&self) -> PackedQuantMatrix {
+        PackedQuantMatrix::from_quant(self)
+    }
+
     /// Concatenate another matrix on the column axis (same row count).
     /// This is the paper's Fig. 5 W∥A trick for LoRA reuse sharing.
     pub fn concat_cols(&self, other: &QuantMatrix) -> QuantMatrix {
@@ -194,6 +199,91 @@ impl QuantMatrix {
             // model builder before concatenation).
             params: self.params,
         }
+    }
+}
+
+/// Number of weight codes packed into one `u32` word of a
+/// [`PackedQuantMatrix`].
+pub const PACK_WIDTH: usize = 4;
+
+/// A [`QuantMatrix`] re-laid-out as packed unsigned byte offsets: four
+/// codes per `u32` word, little-end first (code `c` of a word sits at bit
+/// `8 * c`). Each byte holds `q + 127` in `[0, 255]` — exactly the index
+/// the 256-entry product table of
+/// [`reuse_matmul_packed`](crate::exec::reuse_matmul_packed) consumes, so
+/// the hot loop extracts codes with shifts and masks instead of a signed
+/// add per element.
+///
+/// Rows are padded to a whole number of words; padding bytes carry offset
+/// 127 (code 0) and are never visited by the kernels (tile loops are
+/// bounded by [`PackedQuantMatrix::cols`], not by the word grid).
+#[derive(Clone, Debug)]
+pub struct PackedQuantMatrix {
+    /// Row count (same as the source matrix).
+    pub rows: usize,
+    /// Logical column count (same as the source matrix; excludes padding).
+    pub cols: usize,
+    /// Words per row: `ceil(cols / PACK_WIDTH)`.
+    pub words_per_row: usize,
+    /// Packed offset codes, row-major over the word grid.
+    pub words: Vec<u32>,
+    /// The quantization grid the codes live on.
+    pub params: QuantParams,
+}
+
+impl PackedQuantMatrix {
+    /// Pack a quantized matrix (4 offset codes per `u32` word).
+    pub fn from_quant(m: &QuantMatrix) -> PackedQuantMatrix {
+        let words_per_row = m.cols.div_ceil(PACK_WIDTH);
+        let mut words = Vec::with_capacity(m.rows * words_per_row);
+        for r in 0..m.rows {
+            let row = m.row(r);
+            for chunk in row.chunks(PACK_WIDTH) {
+                let mut word = 0u32;
+                for (c, &q) in chunk.iter().enumerate() {
+                    word |= ((q as i16 + 127) as u8 as u32) << (8 * c);
+                }
+                // Pad the tail with offset 127 (code 0).
+                for c in chunk.len()..PACK_WIDTH {
+                    word |= 127u32 << (8 * c);
+                }
+                words.push(word);
+            }
+        }
+        PackedQuantMatrix {
+            rows: m.rows,
+            cols: m.cols,
+            words_per_row,
+            words,
+            params: m.params,
+        }
+    }
+
+    /// Borrow the packed words of row `r`.
+    #[inline]
+    pub fn row_words(&self, r: usize) -> &[u32] {
+        &self.words[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    /// Unpack one offset code `q + 127` at (row, col). Test/diagnostic
+    /// accessor — the kernels read whole words.
+    #[inline]
+    pub fn offset_at(&self, r: usize, c: usize) -> u8 {
+        debug_assert!(c < self.cols);
+        let word = self.words[r * self.words_per_row + c / PACK_WIDTH];
+        (word >> (8 * (c % PACK_WIDTH))) as u8
+    }
+
+    /// Unpack the whole matrix back to signed codes (row-major, padding
+    /// dropped). Test/diagnostic helper.
+    pub fn unpack(&self) -> Vec<i8> {
+        let mut out = Vec::with_capacity(self.rows * self.cols);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.push((self.offset_at(r, c) as i16 - 127) as i8);
+            }
+        }
+        out
     }
 }
 
@@ -302,6 +392,43 @@ mod tests {
         assert_eq!(c.cols, 3);
         assert_eq!(c.row(0), &[1, 2, 9]);
         assert_eq!(c.row(1), &[3, 4, 8]);
+    }
+
+    #[test]
+    fn packed_roundtrips_codes_and_pads_tail() {
+        let params = QuantParams { scale: 0.5, bits: 8 };
+        // cols = 5 is ragged: one full word plus a 1-byte tail per row.
+        let m = QuantMatrix::from_q(2, 5, vec![1, -1, 127, -127, 0, 3, -3, 0, 9, -9], params);
+        let p = m.packed();
+        assert_eq!(p.words_per_row, 2);
+        assert_eq!(p.words.len(), 4);
+        assert_eq!(p.unpack(), m.data);
+        for r in 0..2 {
+            for c in 0..5 {
+                assert_eq!(p.offset_at(r, c), (m.get(r, c) as i16 + 127) as u8);
+            }
+        }
+        // Padding bytes carry offset 127 (code 0).
+        for r in 0..2 {
+            let tail = p.row_words(r)[1];
+            assert_eq!((tail >> 16) as u8, 127);
+            assert_eq!((tail >> 24) as u8, 127);
+        }
+    }
+
+    #[test]
+    fn packed_handles_empty_and_aligned_shapes() {
+        let params = QuantParams { scale: 1.0, bits: 8 };
+        let empty = QuantMatrix::from_q(3, 0, vec![], params);
+        let p = empty.packed();
+        assert_eq!(p.words_per_row, 0);
+        assert!(p.words.is_empty());
+        assert!(p.unpack().is_empty());
+
+        let aligned = QuantMatrix::from_q(1, 8, vec![1, 2, 3, 4, -1, -2, -3, -4], params);
+        let pa = aligned.packed();
+        assert_eq!(pa.words_per_row, 2);
+        assert_eq!(pa.unpack(), aligned.data);
     }
 
     #[test]

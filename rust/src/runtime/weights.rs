@@ -110,12 +110,7 @@ pub fn load_weights_bin(path: &Path) -> Result<TinyWeights> {
             let m = r.matrix()?;
             mats.push((kind, m));
         }
-        layers.push(LayerWeights {
-            layer_idx,
-            mats,
-            lora_q: None,
-            lora_v: None,
-        });
+        layers.push(LayerWeights::new(layer_idx, mats, None, None));
     }
     let head = r.matrix()?;
     if r.pos != data.len() {

@@ -166,19 +166,24 @@ impl Bench {
     }
 
     /// Machine-readable JSON dump:
-    /// `[{"name": …, "iterations": N, "ns_per_op": N, …}]` where
-    /// `ns_per_op` is the median. Measurements registered through
-    /// [`Bench::run_throughput`] also carry `throughput_eps`
-    /// (elements/second — requests/second when the element is a request).
-    /// Non-finite floats are emitted as JSON `null`: `inf`/`NaN` are not
-    /// valid JSON tokens and one degenerate measurement must never make
-    /// the whole perf log unparseable. Bench targets write this next to
-    /// their stdout report (e.g. `BENCH_sim_hot_loop.json`,
-    /// `BENCH_live_serve.json`) so successive PRs have a perf trajectory
-    /// to compare against.
+    /// `{"meta": {"threads": N}, "results": [{"name": …, …}]}` where each
+    /// result's `ns_per_op` is the median. `meta.threads` records this
+    /// machine's `available_parallelism` so perf trajectories across
+    /// machines are interpretable (thread-parallel benches scale with
+    /// it). Measurements registered through [`Bench::run_throughput`]
+    /// also carry `throughput_eps` (elements/second — requests/second
+    /// when the element is a request). Non-finite floats are emitted as
+    /// JSON `null`: `inf`/`NaN` are not valid JSON tokens and one
+    /// degenerate measurement must never make the whole perf log
+    /// unparseable. Bench targets write this next to their stdout report
+    /// (e.g. `BENCH_sim_hot_loop.json`, `BENCH_live_serve.json`) so
+    /// successive PRs have a perf trajectory to compare against.
     pub fn json(&self) -> String {
         let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
-        let mut out = String::from("[\n");
+        let threads = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1);
+        let mut out = format!("{{\n\"meta\": {{\"threads\": {threads}}},\n\"results\": [\n");
         for (i, m) in self.results.iter().enumerate() {
             if i > 0 {
                 out.push_str(",\n");
@@ -196,7 +201,7 @@ impl Bench {
             }
             out.push('}');
         }
-        out.push_str("\n]\n");
+        out.push_str("\n]\n}\n");
         out
     }
 
@@ -276,7 +281,12 @@ mod tests {
             black_box(2u64 + 2);
         });
         let j = b.json();
-        assert!(j.starts_with('[') && j.trim_end().ends_with(']'));
+        assert!(j.starts_with('{') && j.trim_end().ends_with('}'));
+        // The meta header records the machine's thread count so perf
+        // trajectories across machines are interpretable.
+        assert!(j.contains("\"meta\""));
+        assert!(j.contains("\"threads\": "));
+        assert!(j.contains("\"results\": ["));
         assert_eq!(j.matches("\"name\"").count(), 2);
         assert!(j.contains("\\\"quoted\\\""));
         assert!(j.contains("\"ns_per_op\""));

@@ -5,6 +5,13 @@
 //! scoped threads and preserves input order in the output.
 
 /// Parallel map preserving order. Falls back to sequential for tiny inputs.
+///
+/// Each worker receives an **owned strided bucket** of items up front
+/// (item `i` goes to worker `i % threads`, so long items spread across
+/// workers) — no shared queue, no locks, zero contention on the hot path.
+/// Workers return `(index, result)` pairs and the join scatters them back
+/// into input order, so the output is deterministic regardless of worker
+/// scheduling.
 pub fn par_map<T, U, F>(items: Vec<T>, f: F) -> Vec<U>
 where
     T: Send,
@@ -23,30 +30,22 @@ where
         return items.into_iter().map(f).collect();
     }
 
-    // Pre-size the output with None slots, hand each thread a strided set
-    // of indices so long items spread across workers.
-    let mut slots: Vec<Option<U>> = (0..n).map(|_| None).collect();
-    let items: Vec<Option<T>> = items.into_iter().map(Some).collect();
-    let items = std::sync::Mutex::new(items);
-    let next = std::sync::atomic::AtomicUsize::new(0);
+    // Deal the items into owned per-worker buckets, round-robin.
+    let mut buckets: Vec<Vec<(usize, T)>> = (0..threads).map(|_| Vec::new()).collect();
+    for (i, item) in items.into_iter().enumerate() {
+        buckets[i % threads].push((i, item));
+    }
 
+    let mut slots: Vec<Option<U>> = (0..n).map(|_| None).collect();
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
-        for _ in 0..threads {
-            let items = &items;
-            let next = &next;
+        for bucket in buckets {
             let f = &f;
             handles.push(scope.spawn(move || {
-                let mut out: Vec<(usize, U)> = Vec::new();
-                loop {
-                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let item = items.lock().unwrap()[i].take().unwrap();
-                    out.push((i, f(item)));
-                }
-                out
+                bucket
+                    .into_iter()
+                    .map(|(i, item)| (i, f(item)))
+                    .collect::<Vec<(usize, U)>>()
             }));
         }
         for h in handles {

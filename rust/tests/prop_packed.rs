@@ -1,0 +1,262 @@
+//! Property tests for the packed-code functional hot path (in-crate
+//! property runner — see `util::prop`).
+//!
+//! Three claims anchor the packed/tiled/thread-parallel rework:
+//! 1. **Kernel exactness** — `reuse_matmul_packed` is bit-identical to
+//!    `dense_matmul` AND to the seed scalar `reuse_matmul_chunked` —
+//!    outputs *and* reuse counters — across random shapes, chunk sizes
+//!    (including chunks that straddle the 4-code pack width), ragged
+//!    tile edges, and empty/single-column matrices; likewise per shard
+//!    for the sharded variants, for shard counts {1, 2, 4}.
+//! 2. **Code −128 exactness** — matrices containing i8's most negative
+//!    code contribute its true product on every kernel (the seed scalar
+//!    kernel's fixed product-table hazard).
+//! 3. **Backend exactness** — `with_scalar_kernels(true)` (the seed
+//!    sequential baseline) and the default packed/tiled/thread-parallel
+//!    path serve identical logits, activity, and counters across shard
+//!    counts and LoRA tenant mixes, on batch prefill and KV-cached
+//!    decode — and per-request results are batch-order-independent.
+
+use axllm::backend::{ExecutionBackend, FunctionalBackend};
+use axllm::config::{AcceleratorConfig, Dataset, ModelConfig};
+use axllm::exec::{
+    dense_matmul, reuse_matmul_chunked, reuse_matmul_packed, sharded_reuse_matmul_chunked,
+    sharded_reuse_matmul_packed, ExecArena, ExecStats,
+};
+use axllm::quant::{QuantMatrix, QuantParams};
+use axllm::util::prop::{check, Config};
+use axllm::util::rng::Rng;
+use axllm::workload::Request;
+use axllm::{prop_assert, prop_assert_eq};
+
+/// Random quantized matrix whose codes cover the full i8 range —
+/// including −128, which synthesized weights never carry
+/// (`QuantMatrix::from_q` rejects it); built by struct literal precisely
+/// to pin every kernel's handling of that code.
+fn random_matrix(rng: &mut Rng, rows: usize, cols: usize) -> QuantMatrix {
+    let data: Vec<i8> = (0..rows * cols)
+        .map(|_| rng.range_i64(-128, 127) as i8)
+        .collect();
+    QuantMatrix {
+        rows,
+        cols,
+        data,
+        params: QuantParams {
+            scale: 0.02,
+            bits: 8,
+        },
+    }
+}
+
+fn random_x(rng: &mut Rng, rows: usize) -> Vec<i8> {
+    (0..rows).map(|_| rng.range_i64(-127, 127) as i8).collect()
+}
+
+#[test]
+fn prop_packed_kernel_matches_dense_and_scalar_exactly() {
+    check(
+        "packed-kernel-exact",
+        Config {
+            cases: 24,
+            seed: 0xBAC5ED,
+        },
+        |rng| {
+            let rows = 1 + rng.index(40);
+            // Cols stress the tile walker: empty, single, sub-word,
+            // word-aligned, and ragged widths all occur.
+            let cols = *rng.choose(&[0usize, 1, 3, 4, 5, 8, 31, 64, 130]);
+            let w = random_matrix(rng, rows, cols);
+            let x = random_x(rng, rows);
+            let packed = w.packed();
+            let dense = dense_matmul(&x, &w);
+            let mut arena = ExecArena::new();
+            for chunk in [1usize, 2, 3, 4, 7, 16, 64, 500] {
+                let (y_scalar, st_scalar) = reuse_matmul_chunked(&x, &w, chunk);
+                prop_assert_eq!(&y_scalar, &dense);
+                let st_packed = reuse_matmul_packed(&x, &packed, chunk, &mut arena);
+                prop_assert_eq!(arena.yq(), &dense[..]);
+                // Counters too: first-occurrence accounting is
+                // order-free within a chunk epoch, so the tiled walk
+                // must reproduce the scalar split exactly.
+                prop_assert_eq!(st_packed, st_scalar);
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_packed_sharded_kernel_matches_scalar_per_shard() {
+    check(
+        "packed-sharded-exact",
+        Config {
+            cases: 16,
+            seed: 0xBAC5EE,
+        },
+        |rng| {
+            let rows = 1 + rng.index(24);
+            let cols = *rng.choose(&[1usize, 2, 5, 16, 65, 130]);
+            let w = random_matrix(rng, rows, cols);
+            let x = random_x(rng, rows);
+            let packed = w.packed();
+            let dense = dense_matmul(&x, &w);
+            let mut arena = ExecArena::new();
+            for shards in [1usize, 2, 4] {
+                for chunk in [1usize, 3, 7, 64] {
+                    let (y_scalar, per_scalar) =
+                        sharded_reuse_matmul_chunked(&x, &w, chunk, shards);
+                    prop_assert_eq!(&y_scalar, &dense);
+                    let mut per_packed = vec![ExecStats::default(); per_scalar.len()];
+                    let total = sharded_reuse_matmul_packed(
+                        &x,
+                        &packed,
+                        chunk,
+                        shards,
+                        &mut per_packed,
+                        &mut arena,
+                    );
+                    prop_assert_eq!(arena.yq(), &dense[..]);
+                    prop_assert_eq!(&per_packed, &per_scalar);
+                    let fold = per_scalar.iter().fold(ExecStats::default(), |mut a, s| {
+                        a.add(s);
+                        a
+                    });
+                    prop_assert_eq!((total.mults, total.reuses), (fold.mults, fold.reuses));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn backend(seed: u64) -> FunctionalBackend {
+    FunctionalBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper(), seed).unwrap()
+}
+
+fn req(id: u64, seq_len: usize) -> Request {
+    Request {
+        id,
+        dataset: Dataset::AgNews,
+        seq_len,
+        arrival_s: 0.0,
+        gen_tokens: 0,
+        adapter: None,
+        prefix: None,
+    }
+}
+
+#[test]
+fn prop_backend_scalar_baseline_and_packed_default_agree_end_to_end() {
+    check(
+        "packed-backend-exact",
+        Config {
+            cases: 3,
+            seed: 0xBAC5EF,
+        },
+        |rng| {
+            let model_seed = rng.below(1_000_000);
+            for shards in [1usize, 2, 4] {
+                let fast = backend(model_seed).with_shards(shards).with_adapters(2, 4);
+                let slow = backend(model_seed)
+                    .with_shards(shards)
+                    .with_adapters(2, 4)
+                    .with_scalar_kernels(true);
+                // A mixed batch: base-only and both LoRA tenants.
+                let reqs: Vec<Request> = (0..4u64)
+                    .map(|i| Request {
+                        adapter: if i % 2 == 0 { None } else { Some((i % 3) as u32) },
+                        ..req(i, 3 + rng.index(10))
+                    })
+                    .collect();
+                let of = fast.run_batch(&reqs).map_err(|e| e.to_string())?;
+                let os = slow.run_batch(&reqs).map_err(|e| e.to_string())?;
+                prop_assert_eq!(&of.logits, &os.logits);
+                prop_assert_eq!(&of.activity, &os.activity);
+                prop_assert_eq!(of.stats.mults, os.stats.mults);
+                prop_assert_eq!(of.stats.rc_hits, os.stats.rc_hits);
+                // Batch-order independence: reversing the batch permutes
+                // per-request rows without changing any of them.
+                let mut rev = reqs.clone();
+                rev.reverse();
+                let or = fast.run_batch(&rev).map_err(|e| e.to_string())?;
+                for (i, r) in rev.iter().enumerate() {
+                    let j = reqs.iter().position(|q| q.id == r.id).expect("same ids");
+                    prop_assert_eq!(&or.logits[i], &of.logits[j]);
+                    prop_assert_eq!(&or.activity[i], &of.activity[j]);
+                }
+                // KV-cached decode: stepped sessions agree bit for bit.
+                let r = Request {
+                    adapter: Some(1),
+                    ..req(99, 2 + rng.index(8))
+                };
+                let (mut kv_f, f_f) = fast.prefill(&r, 3).map_err(|e| e.to_string())?;
+                let (mut kv_s, f_s) = slow.prefill(&r, 3).map_err(|e| e.to_string())?;
+                prop_assert_eq!(&f_f.logits, &f_s.logits);
+                prop_assert_eq!(&f_f.activity, &f_s.activity);
+                while !kv_f.done() {
+                    let o_f = fast.decode_step(&mut kv_f).map_err(|e| e.to_string())?;
+                    let o_s = slow.decode_step(&mut kv_s).map_err(|e| e.to_string())?;
+                    prop_assert_eq!(&o_f.logits, &o_s.logits);
+                    prop_assert_eq!(o_f.token, o_s.token);
+                    prop_assert_eq!(&o_f.activity, &o_s.activity);
+                }
+                prop_assert_eq!(&kv_f.generated, &kv_s.generated);
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_decode_waves_match_single_stepping() {
+    check(
+        "packed-decode-waves",
+        Config {
+            cases: 3,
+            seed: 0xBAC5F0,
+        },
+        |rng| {
+            let model_seed = rng.below(1_000_000);
+            let b = backend(model_seed);
+            let n = 2 + rng.index(5);
+            let jobs: Vec<(Request, u32)> = (0..n as u64)
+                .map(|i| (req(i, 2 + rng.index(10)), 2 + rng.below(3) as u32))
+                .collect();
+            // Reference: one call at a time.
+            let mut seq = Vec::new();
+            for (r, budget) in &jobs {
+                seq.push(b.prefill(r, *budget).map_err(|e| e.to_string())?);
+            }
+            // Wave APIs (thread-parallel inside the backend).
+            let mut wave = b.prefill_batch(&jobs).map_err(|e| e.to_string())?;
+            for ((kv_w, out_w), (kv_s, out_s)) in wave.iter().zip(&seq) {
+                prop_assert_eq!(&out_w.logits, &out_s.logits);
+                prop_assert_eq!(&out_w.activity, &out_s.activity);
+                prop_assert_eq!(&kv_w.generated, &kv_s.generated);
+            }
+            while wave.iter().any(|(kv, _)| !kv.done()) {
+                let refs: Vec<_> = wave
+                    .iter_mut()
+                    .filter(|(kv, _)| !kv.done())
+                    .map(|(kv, _)| kv)
+                    .collect();
+                let outs = b.decode_steps(refs).map_err(|e| e.to_string())?;
+                let mut outs = outs.into_iter();
+                for (kv_s, _) in seq.iter_mut() {
+                    if kv_s.done() {
+                        continue;
+                    }
+                    let expect = b.decode_step(kv_s).map_err(|e| e.to_string())?;
+                    let got = outs.next().expect("wave covers every live session");
+                    prop_assert_eq!(&got.logits, &expect.logits);
+                    prop_assert_eq!(got.token, expect.token);
+                    prop_assert_eq!(&got.activity, &expect.activity);
+                }
+            }
+            for ((kv_w, _), (kv_s, _)) in wave.iter().zip(&seq) {
+                prop_assert_eq!(&kv_w.generated, &kv_s.generated);
+            }
+            Ok(())
+        },
+    );
+}
