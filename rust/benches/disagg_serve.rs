@@ -1,0 +1,123 @@
+//! Disaggregated prefill/decode serving vs the unified pool on a
+//! flash-crowd burst, at equal replica count.
+//!
+//! The structural claim (see `coordinator/disagg.rs`): in a unified
+//! continuous-batching pool a prompt's first token must win a *session
+//! slot* that decode sessions hold for their whole generated-token
+//! budget, so a flash crowd's tail TTFT queues behind decode
+//! retirements. A disaggregated fleet gives prefill its own replicas —
+//! first tokens are gated only by (chunked) prefill capacity plus the
+//! metered KV-handoff link, never by decode occupancy. Both sides of
+//! the comparison get 4 replicas (4 unified vs 2 prefill + 2 decode)
+//! and the same scenario-library trace: a hard flash-crowd burst of
+//! long fixed-budget generations, the regime where slot hostage-taking
+//! is worst. The disaggregated side pays the honest handoff tariff
+//! (`2·n_layers·d_model·4` bytes per context token).
+//!
+//! Emits `BENCH_disagg_serve.json` so successive PRs can compare the
+//! trajectory; the run **asserts** the disaggregated p99 TTFT is
+//! strictly better than unified, so CI catches any scheduler change
+//! that forfeits the disaggregation win.
+
+use axllm::backend::SimBackend;
+use axllm::config::{AcceleratorConfig, Dataset, ModelConfig};
+use axllm::coordinator::{BatchPolicy, DisaggOpts, Engine};
+use axllm::util::bench::Bench;
+use axllm::workload::TraceGenerator;
+
+const N_REQUESTS: usize = 64;
+const GEN_TOKENS: u32 = 256;
+const CHUNK_TOKENS: usize = 32;
+
+fn main() {
+    let model_cfg = ModelConfig::tiny();
+    let handoff_bpt = (2 * model_cfg.n_layers * model_cfg.d_model * 4) as f64;
+    let engine = Engine::new(
+        SimBackend::new(model_cfg, AcceleratorConfig::paper()).expect("sim backend must construct"),
+    );
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_wait_s: 0.0,
+    };
+    // Scenario library: a flash crowd compresses the whole trace into a
+    // sub-millisecond burst; fixed long generation budgets make decode
+    // slots scarce, and short prompts keep prefill itself cheap — TTFT
+    // differences are pure scheduling structure.
+    let mut trace = TraceGenerator::new(Dataset::Squad, 100_000.0, 11)
+        .with_flash_crowd(0.0, 0.001, 8.0)
+        .take_decode(N_REQUESTS, Some(GEN_TOKENS));
+    for r in &mut trace {
+        r.seq_len = 16;
+    }
+    let gen_total: u64 = trace.iter().map(|r| r.gen_tokens as u64).sum();
+
+    let disagg_opts = DisaggOpts::new(2, 2, GEN_TOKENS)
+        .with_chunking(CHUNK_TOKENS)
+        .with_handoff(handoff_bpt);
+    let (_, uni) = engine
+        .serve_trace_unified(trace.clone(), policy, 4, GEN_TOKENS)
+        .expect("unified serve");
+    let (_, dis) = engine
+        .serve_trace_disagg(trace.clone(), policy, disagg_opts)
+        .expect("disagg serve");
+
+    let mut b = Bench::new();
+    b.run_throughput("disagg_serve/unified-4", gen_total, || {
+        let _ = engine
+            .serve_trace_unified(trace.clone(), policy, 4, GEN_TOKENS)
+            .expect("unified serve");
+    });
+    b.run_throughput("disagg_serve/disagg-2p2d", gen_total, || {
+        let _ = engine
+            .serve_trace_disagg(trace.clone(), policy, disagg_opts)
+            .expect("disagg serve");
+    });
+
+    println!(
+        "\nsimulated flash-crowd serving ({} requests, {} generated tokens, chunk {}):",
+        N_REQUESTS, gen_total, CHUNK_TOKENS
+    );
+    println!(
+        "  unified-4:   TTFT p50 {:.3}ms p99 {:.3}ms  TPOT p95 {:.4}ms  {:>7.0} tok/s",
+        uni.ttft.p50_s * 1e3,
+        uni.ttft.p99_s * 1e3,
+        uni.tpot.p95_s * 1e3,
+        uni.throughput_tps
+    );
+    println!(
+        "  disagg-2p2d: TTFT p50 {:.3}ms p99 {:.3}ms  TPOT p95 {:.4}ms  {:>7.0} tok/s",
+        dis.ttft.p50_s * 1e3,
+        dis.ttft.p99_s * 1e3,
+        dis.tpot.p95_s * 1e3,
+        dis.throughput_tps
+    );
+    println!(
+        "  p99 TTFT unified/disagg: {:.2}x  ({} handoff KV bytes across the tier link)",
+        uni.ttft.p99_s / dis.ttft.p99_s,
+        dis.handoff_bytes
+    );
+    // Acceptance gate (ISSUE 8): at equal replica count, disaggregated +
+    // chunked prefill must strictly beat the unified pool's p99 TTFT on
+    // the flash-crowd trace, handoff tariff included.
+    assert!(
+        dis.ttft.p99_s < uni.ttft.p99_s,
+        "disagg p99 TTFT ({:.3}ms) must beat unified ({:.3}ms)",
+        dis.ttft.p99_s * 1e3,
+        uni.ttft.p99_s * 1e3
+    );
+    assert!(
+        dis.handoff_bytes > 0,
+        "the tier link must be metered (handoff bytes cannot be zero)"
+    );
+    for (name, s) in [("unified", &uni), ("disagg", &dis)] {
+        for v in [s.ttft.p50_s, s.ttft.p99_s, s.tpot.p95_s, s.throughput_tps] {
+            assert!(v.is_finite(), "{name} summary must be NaN/inf-free");
+        }
+    }
+
+    println!("\ncsv:\n{}", b.csv());
+    match std::fs::write("BENCH_disagg_serve.json", b.json()) {
+        Ok(()) => println!("wrote BENCH_disagg_serve.json"),
+        Err(e) => eprintln!("could not write BENCH_disagg_serve.json: {e}"),
+    }
+}

@@ -35,6 +35,7 @@ fn req(id: u64, seq_len: usize) -> Request {
         gen_tokens: 0,
         adapter: None,
         prefix: None,
+        slo: axllm::workload::SloClass::Standard,
     }
 }
 

@@ -53,6 +53,13 @@ echo "== functional hot-loop bench (writes BENCH_functional_hot_loop.json) =="
 # log must stay free of NaN/inf.
 AXLLM_BENCH_FAST=1 cargo bench --bench functional_hot_loop
 
+echo "== disagg serve bench (writes BENCH_disagg_serve.json) =="
+# Asserts the disaggregated 2-prefill/2-decode fleet with chunked
+# prefill strictly beats the 4-replica unified pool's p99 TTFT on a
+# flash-crowd trace (handoff tariff included), and that the JSON perf
+# log stays NaN/inf-free.
+AXLLM_BENCH_FAST=1 cargo bench --bench disagg_serve
+
 echo "== cargo doc --no-deps (rustdoc must stay warning-free) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 

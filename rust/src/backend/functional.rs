@@ -18,8 +18,9 @@
 //! baseline for `benches/functional_hot_loop.rs`.
 
 use crate::backend::{
-    argmax_token, BatchOutcome, CostModel, ExecutionBackend, KvHandle, KvState, ReqActivity,
-    ShardActivity, StepOutcome, COST_SAMPLE_ROWS, DEFAULT_SEQ_LIMIT,
+    argmax_token, BatchOutcome, ChunkedPrefill, CostModel, ExecutionBackend, KvHandle, KvState,
+    PrefillChunkOutcome, ReqActivity, ShardActivity, StepOutcome, COST_SAMPLE_ROWS,
+    DEFAULT_SEQ_LIMIT,
 };
 use crate::config::{AcceleratorConfig, ModelConfig};
 use crate::exec::{
@@ -490,6 +491,43 @@ fn shard_activity(shard: &[ExecStats]) -> Vec<ShardActivity> {
         .collect()
 }
 
+/// Resumable mid-prefill state for the functional backend's chunked
+/// prefill ([`ExecutionBackend::prefill_chunk`] override): the prompt
+/// embeddings, the per-layer KV caches grown so far, and the counters
+/// accumulated across chunks. Causal attention plus row-wise activation
+/// quantization make each position's K/V rows and reuse accounting
+/// independent of how positions are grouped into passes, so resuming
+/// from this state is bit-identical to one monolithic pass — the same
+/// argument that makes warm prefix prefill exact.
+#[derive(Debug)]
+pub(crate) struct PartialPrefill {
+    /// Truncated prompt length.
+    prompt_len: usize,
+    /// Prompt tokens served from the prefix cache (first chunk only).
+    cached_tokens: usize,
+    /// Prompt positions in the caches so far (cached + computed).
+    done_tokens: usize,
+    /// Full prompt embeddings; rows are consumed chunk by chunk.
+    x: Vec<f32>,
+    /// Per-layer KV caches being grown.
+    caches: Vec<LayerKv>,
+    /// Counters accumulated across chunks.
+    stats: ExecStats,
+    /// Per-shard counter accumulator.
+    shard: Vec<ExecStats>,
+    /// Scratch arena carried between chunks.
+    arena: ExecArena,
+    /// Pin on the prefix-cache chain (moves into the finished handle).
+    lease: Option<crate::kvcache::PrefixLease>,
+    /// Adapter id after routing (a missed id is dropped, with the miss
+    /// recorded once, on the first chunk).
+    adapter: Option<AdapterId>,
+    /// Host seconds accumulated across chunks.
+    host_s: f64,
+    /// Hidden row of the last position the latest chunk processed.
+    last_hidden: Vec<f32>,
+}
+
 /// Map functional reuse counters onto the simulator's counter taxonomy
 /// (operation counts only — the functional path measures no cycles).
 fn exec_to_sim(e: &ExecStats) -> SimStats {
@@ -647,6 +685,7 @@ impl ExecutionBackend for FunctionalBackend {
             // steps stay base-only (one recorded miss per request).
             adapter: if adaptor.is_some() { req.adapter } else { None },
             cached_tokens,
+            slo: req.slo,
             lease,
             state: KvState::Functional(caches),
         };
@@ -782,6 +821,145 @@ impl ExecutionBackend for FunctionalBackend {
         }
         Ok(slots.into_iter().map(|s| s.unwrap()).collect())
     }
+
+    /// True incremental chunked prefill: each chunk feeds the next
+    /// `max_tokens` prompt rows through one causal pass over the
+    /// session's growing per-layer KV caches; the final chunk computes
+    /// the head logits and publishes the prefix blocks. Bit-identical to
+    /// monolithic [`ExecutionBackend::prefill`] — logits, first token,
+    /// AND accumulated mult/reuse counters — because causal attention
+    /// and row-wise activation quantization make every position's work
+    /// independent of how positions are grouped into passes (the reuse
+    /// tags reset per row-tile, never spanning rows).
+    fn prefill_chunk(
+        &self,
+        job: &mut ChunkedPrefill,
+        max_tokens: usize,
+    ) -> crate::Result<PrefillChunkOutcome> {
+        anyhow::ensure!(max_tokens >= 1, "chunk budget must be ≥ 1");
+        anyhow::ensure!(!job.finished, "chunked prefill already finished");
+        anyhow::ensure!(job.budget >= 1, "decode budget must be ≥ 1");
+        let t0 = std::time::Instant::now();
+        let d = self.model_cfg.d_model;
+        let mut copied = 0u64;
+        if job.partial.is_none() {
+            // First chunk: route the adapter (at most one recorded
+            // miss), synthesize the prompt, consult the prefix trie —
+            // exactly the monolithic prefill's prologue.
+            let adaptor = self.route_adapter(job.req.adapter);
+            let (x, prompt_len) = self.request_embeddings(&job.req);
+            let mut caches = vec![LayerKv::new(); self.model_cfg.n_layers];
+            let mut cached_tokens = 0usize;
+            let mut lease = None;
+            if let (Some(cache), Some(tag)) = (&self.kv_cache, job.req.prefix) {
+                let aligned = aligned_prefix(tag.len, prompt_len, cache.block_size());
+                if aligned > 0 {
+                    let keys = block_keys(tag.group, aligned / cache.block_size());
+                    if let Some(hit) = cache.lookup_pin(&keys) {
+                        cached_tokens = hit.tokens;
+                        caches = hit.payload;
+                        lease = Some(hit.lease);
+                    }
+                }
+            }
+            copied = cached_tokens as u64;
+            job.partial = Some(PartialPrefill {
+                prompt_len,
+                cached_tokens,
+                done_tokens: cached_tokens,
+                x,
+                caches,
+                stats: ExecStats::default(),
+                shard: Vec::new(),
+                arena: ExecArena::new(),
+                lease,
+                adapter: if adaptor.is_some() { job.req.adapter } else { None },
+                host_s: 0.0,
+                last_hidden: Vec::new(),
+            });
+        }
+        let p = job.partial.as_mut().expect("installed above");
+        // ≥ 1 by construction: prefix hits cap below prompt_len, and a
+        // chunk is only requested while prompt tokens remain.
+        let n_new = max_tokens.min(p.prompt_len - p.done_tokens);
+        let rows = p.x[p.done_tokens * d..(p.done_tokens + n_new) * d].to_vec();
+        let hidden = self.causal_pass(
+            rows,
+            n_new,
+            &mut p.caches,
+            &mut p.stats,
+            &mut p.shard,
+            &mut p.arena,
+        );
+        p.last_hidden = hidden[(n_new - 1) * d..].to_vec();
+        p.done_tokens += n_new;
+        job.computed += n_new;
+        let adapter_tokens = if p.adapter.is_some() { n_new as u64 } else { 0 };
+        if p.done_tokens < p.prompt_len {
+            p.host_s += t0.elapsed().as_secs_f64();
+            return Ok(PrefillChunkOutcome {
+                computed_tokens: n_new as u64,
+                copied_tokens: copied,
+                adapter_tokens,
+                done: None,
+            });
+        }
+        // Final chunk: head logits at the last position, block
+        // publication, and session assembly — the monolithic epilogue.
+        let mut p = job.partial.take().expect("borrowed above");
+        job.finished = true;
+        let adaptor = self.adaptor_for(p.adapter);
+        let logits = self.head_logits_for(
+            adaptor,
+            &p.last_hidden,
+            &mut p.stats,
+            &mut p.shard,
+            &mut p.arena,
+        );
+        let token = argmax_token(&logits);
+        if let (Some(cache), Some(tag)) = (&self.kv_cache, job.req.prefix) {
+            let aligned = aligned_prefix(tag.len, p.prompt_len, cache.block_size());
+            if aligned > p.cached_tokens {
+                let keys = block_keys(tag.group, aligned / cache.block_size());
+                cache.insert_with(&keys, |tokens| {
+                    p.caches.iter().map(|kv| kv.truncated(tokens)).collect()
+                });
+            }
+        }
+        let mut kv = KvHandle {
+            id: job.req.id,
+            prompt_len: p.prompt_len,
+            budget: job.budget,
+            generated: vec![token],
+            embed_seed: request_seed(self.embed_seed, job.req.id),
+            adapter: p.adapter,
+            cached_tokens: p.cached_tokens,
+            slo: job.req.slo,
+            lease: p.lease,
+            state: KvState::Functional(p.caches),
+        };
+        if kv.done() {
+            self.release_lease(&mut kv);
+        }
+        let out = StepOutcome {
+            logits,
+            token,
+            exec_s: p.host_s + t0.elapsed().as_secs_f64(),
+            stats: exec_to_sim(&p.stats),
+            activity: ReqActivity {
+                base_mults: p.stats.mults,
+                base_reuses: p.stats.reuses,
+                adapter_ops: p.stats.adapter_mults,
+                per_shard: shard_activity(&p.shard),
+            },
+        };
+        Ok(PrefillChunkOutcome {
+            computed_tokens: n_new as u64,
+            copied_tokens: copied,
+            adapter_tokens,
+            done: Some((kv, out)),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -802,6 +980,7 @@ mod tests {
             gen_tokens: 0,
             adapter: None,
             prefix: None,
+            slo: crate::workload::SloClass::Standard,
         }
     }
 
@@ -880,6 +1059,7 @@ mod tests {
             embed_seed: 1,
             adapter: None,
             cached_tokens: 0,
+            slo: crate::workload::SloClass::Standard,
             lease: None,
             state: KvState::Analytic,
         };
@@ -1132,6 +1312,87 @@ mod tests {
         // Later siblings hit the chain the first job inserted.
         assert_eq!(batch[1].0.cached_tokens, 16);
         assert_eq!(batch[2].0.cached_tokens, 16);
+    }
+
+    #[test]
+    fn chunked_prefill_is_bit_identical_to_monolithic() {
+        // The disaggregated-serving exactness claim: slicing a prompt
+        // into fixed token-budget chunks reproduces the monolithic
+        // prefill bit for bit — logits, first token, AND accumulated
+        // mult/reuse counters — for every chunk size, adapter routing
+        // included, and the decode tail stays identical afterwards.
+        let b = backend().with_adapters(2, 8);
+        for (id, seq, chunk_tokens) in
+            [(60u64, 17usize, 4usize), (61, 24, 7), (62, 9, 1), (63, 12, 64)]
+        {
+            let r = Request {
+                adapter: Some(1),
+                ..req(id, seq)
+            };
+            let (mut kv_mono, out_mono) = b.prefill(&r, 3).unwrap();
+            let mut job = ChunkedPrefill::new(r.clone(), 3);
+            let mut computed = 0u64;
+            let mut adapter_tokens = 0u64;
+            let (mut kv_chunk, out_chunk) = loop {
+                let step = b.prefill_chunk(&mut job, chunk_tokens).unwrap();
+                assert!(step.computed_tokens <= chunk_tokens as u64);
+                computed += step.computed_tokens;
+                adapter_tokens += step.adapter_tokens;
+                if let Some(done) = step.done {
+                    break done;
+                }
+            };
+            assert_eq!(computed as usize, kv_mono.prompt_len, "all tokens computed");
+            assert_eq!(adapter_tokens, computed, "adapter-routed request");
+            assert_eq!(out_chunk.logits, out_mono.logits);
+            assert_eq!(out_chunk.token, out_mono.token);
+            assert_eq!(out_chunk.activity, out_mono.activity, "counters bit-identical");
+            assert_eq!(out_chunk.stats.mults, out_mono.stats.mults);
+            assert_eq!(out_chunk.stats.rc_hits, out_mono.stats.rc_hits);
+            assert!(b.prefill_chunk(&mut job, chunk_tokens).is_err(), "finished job");
+            while !kv_mono.done() {
+                let om = b.decode_step(&mut kv_mono).unwrap();
+                let oc = b.decode_step(&mut kv_chunk).unwrap();
+                assert_eq!(om.logits, oc.logits);
+                assert_eq!(om.token, oc.token);
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_hits_the_prefix_cache_like_monolithic() {
+        use crate::workload::PrefixTag;
+        let mono = backend().with_kv_cache(16, 8);
+        let chunked = backend().with_kv_cache(16, 8);
+        let tag = PrefixTag { group: 4, len: 16 };
+        let prime = Request {
+            prefix: Some(tag),
+            ..req(70, 24)
+        };
+        let twin = Request {
+            prefix: Some(tag),
+            ..req(71, 24)
+        };
+        // Prime both caches monolithically, then serve the twin chunked
+        // on one and monolithically on the other.
+        mono.prefill(&prime, 1).unwrap();
+        chunked.prefill(&prime, 1).unwrap();
+        let (_, out_mono) = mono.prefill(&twin, 2).unwrap();
+        let mut job = ChunkedPrefill::new(twin.clone(), 2);
+        let mut copied = 0u64;
+        let (kv, out_chunk) = loop {
+            let step = chunked.prefill_chunk(&mut job, 3).unwrap();
+            copied += step.copied_tokens;
+            if let Some(done) = step.done {
+                break done;
+            }
+        };
+        assert_eq!(copied, 16, "prefix hit reported once, on the first chunk");
+        assert_eq!(kv.cached_tokens, 16);
+        assert_eq!(out_chunk.logits, out_mono.logits);
+        assert_eq!(out_chunk.activity, out_mono.activity);
+        let s = chunked.prefix_stats().unwrap();
+        assert_eq!((s.lookups, s.hits, s.hit_tokens), (2, 1, 16));
     }
 
     #[test]

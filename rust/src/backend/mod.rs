@@ -59,7 +59,7 @@ use crate::energy::EnergyModel;
 use crate::exec::LayerKv;
 use crate::model::{AdapterId, Model};
 use crate::sim::{Accelerator, ModelCycleSummary, SimStats};
-use crate::workload::Request;
+use crate::workload::{Request, SloClass};
 
 /// Sequence cap shared by the artifact-free backends. Matches the compiled
 /// tiny artifact's `seq` so that every backend truncates, batches, and
@@ -77,6 +77,15 @@ pub const SHARD_LINK_BYTES_PER_S: f64 = 100e9;
 
 /// Modeled per-collective latency (seconds) of the shard interconnect.
 pub const SHARD_LINK_LATENCY_S: f64 = 2e-6;
+
+/// Modeled prefill→decode KV-handoff bandwidth (bytes/second): a
+/// PCIe/fabric-class link between the disaggregated tiers — deliberately
+/// slower than the NVLink-class shard interconnect, because the tiers
+/// are separate instances, not one shard group.
+pub const HANDOFF_LINK_BYTES_PER_S: f64 = 50e9;
+
+/// Modeled per-handoff latency (seconds) of the prefill→decode link.
+pub const HANDOFF_LINK_LATENCY_S: f64 = 10e-6;
 
 /// One shard's base-pipeline activity for a request served
 /// tensor-parallel: each shard owns an independent Result Cache over its
@@ -209,6 +218,10 @@ pub struct KvHandle {
     /// without a cache). The engine charges these at block-copy rate
     /// ([`CostModel::kv_copy_time_s`]) instead of full prefill rate.
     pub cached_tokens: usize,
+    /// SLO class of the request the session serves (copied from the
+    /// request at prefill, like `adapter`), so attainment accounting
+    /// survives the prefill→decode handoff in disaggregated serving.
+    pub slo: SloClass,
     /// Pin on the prefix-cache block chain this session reads from,
     /// released when the session finishes.
     pub(crate) lease: Option<crate::kvcache::PrefixLease>,
@@ -391,6 +404,117 @@ pub trait ExecutionBackend {
         }
         Ok(outs)
     }
+
+    /// Advance a chunked prefill by at most `max_tokens` prompt tokens.
+    ///
+    /// Chunked prefill slices one request's prompt into fixed
+    /// token-budget pieces so a continuous-batching scheduler can
+    /// interleave them with decode iterations instead of stalling a
+    /// whole decode wave behind a long prompt. The contract, over the
+    /// chunk calls of one job:
+    ///
+    /// - the `computed_tokens` sum to `prompt_len - cached_tokens` and
+    ///   never exceed `max_tokens` per call; `copied_tokens` (the
+    ///   prefix-cache hit) is reported exactly once, on the first call;
+    /// - the final call returns [`PrefillChunkOutcome::done`] — a
+    ///   session and first-token outcome **identical** to what a single
+    ///   [`ExecutionBackend::prefill`] call would have produced: same
+    ///   logits, same token, same accumulated activity counters. The
+    ///   functional backend proves this bit-exactly (causal attention
+    ///   and row-wise activation quantization make each position's
+    ///   K/V and reuse accounting independent of how positions are
+    ///   grouped into passes); analytic backends satisfy it by
+    ///   construction.
+    ///
+    /// The default implementation stages a monolithic prefill on the
+    /// first call and dribbles out its token accounting chunk by chunk —
+    /// correct for backends whose prefill is analytic ([`SimBackend`])
+    /// or shape-compiled ([`PjrtBackend`]); backends that can genuinely
+    /// resume a partial prompt override it ([`FunctionalBackend`]).
+    /// Calling again after `done` was returned is an error.
+    fn prefill_chunk(
+        &self,
+        job: &mut ChunkedPrefill,
+        max_tokens: usize,
+    ) -> crate::Result<PrefillChunkOutcome> {
+        anyhow::ensure!(max_tokens >= 1, "chunk budget must be ≥ 1");
+        anyhow::ensure!(!job.finished, "chunked prefill already finished");
+        let first = job.staged.is_none();
+        if first {
+            let staged = self.prefill(&job.req, job.budget)?;
+            job.staged = Some(staged);
+        }
+        let (kv, _) = job.staged.as_ref().expect("staged above");
+        let copied = if first { kv.cached_tokens as u64 } else { 0 };
+        let suffix = kv.prompt_len - kv.cached_tokens;
+        let computed = max_tokens.min(suffix - job.computed);
+        job.computed += computed;
+        let adapter_tokens = if kv.adapter.is_some() { computed as u64 } else { 0 };
+        let done = if job.computed >= suffix {
+            job.finished = true;
+            job.staged.take()
+        } else {
+            None
+        };
+        Ok(PrefillChunkOutcome {
+            computed_tokens: computed as u64,
+            copied_tokens: copied,
+            adapter_tokens,
+            done,
+        })
+    }
+}
+
+/// One in-flight chunked prefill: the request, its decode budget, and
+/// the backend-owned partial state between chunk calls
+/// ([`ExecutionBackend::prefill_chunk`]).
+#[derive(Debug)]
+pub struct ChunkedPrefill {
+    /// The request being prefilled.
+    pub req: Request,
+    /// Generated-token budget for the session the prefill opens.
+    pub budget: u32,
+    /// Prompt tokens computed by completed chunks (cache-copied tokens
+    /// excluded — they are accounted on the first chunk).
+    pub computed: usize,
+    /// True once a chunk call returned [`PrefillChunkOutcome::done`].
+    pub finished: bool,
+    /// Staged monolithic result (the trait-default path).
+    pub(crate) staged: Option<(KvHandle, StepOutcome)>,
+    /// Resumable incremental state (the functional backend's override).
+    pub(crate) partial: Option<functional::PartialPrefill>,
+}
+
+impl ChunkedPrefill {
+    /// Open a chunked prefill for `req` with generated-token budget
+    /// `budget` (must be ≥ 1).
+    pub fn new(req: Request, budget: u32) -> ChunkedPrefill {
+        assert!(budget >= 1, "decode budget must be ≥ 1");
+        ChunkedPrefill {
+            req,
+            budget,
+            computed: 0,
+            finished: false,
+            staged: None,
+            partial: None,
+        }
+    }
+}
+
+/// What one [`ExecutionBackend::prefill_chunk`] call accomplished.
+#[derive(Debug)]
+pub struct PrefillChunkOutcome {
+    /// Prompt tokens computed at full prefill rate by this chunk.
+    pub computed_tokens: u64,
+    /// Prompt tokens served from the prefix KV cache (block-copy rate);
+    /// nonzero only on the job's first chunk.
+    pub copied_tokens: u64,
+    /// Tokens that additionally traversed a LoRA side pipeline this
+    /// chunk (equals `computed_tokens` for adapter-routed requests).
+    pub adapter_tokens: u64,
+    /// On the job's final chunk: the finished session and its
+    /// first-token outcome, identical to a monolithic prefill's.
+    pub done: Option<(KvHandle, StepOutcome)>,
 }
 
 /// Precomputed per-token accelerator costs for the served model
@@ -461,6 +585,16 @@ pub struct CostModel {
     pub kv_evict_cycles_per_block: f64,
     /// Energy (pJ) to evict one prefix-cache block.
     pub kv_evict_energy_pj_per_block: f64,
+    /// Disaggregated-serving regime: bytes to hand one context token's
+    /// K/V state (`2·d_model` f32 per layer) from a prefill replica to a
+    /// decode replica. Zero until [`CostModel::with_handoff_regime`] —
+    /// unified deployments never pay a handoff.
+    pub handoff_bytes_per_token: f64,
+    /// Prefill→decode link bandwidth, bytes/second
+    /// ([`HANDOFF_LINK_BYTES_PER_S`]).
+    pub handoff_bytes_per_s: f64,
+    /// Per-handoff link latency, seconds ([`HANDOFF_LINK_LATENCY_S`]).
+    pub handoff_latency_s: f64,
 }
 
 impl CostModel {
@@ -490,6 +624,9 @@ impl CostModel {
             kv_copy_energy_pj_per_token: 0.0,
             kv_evict_cycles_per_block: 0.0,
             kv_evict_energy_pj_per_block: 0.0,
+            handoff_bytes_per_token: 0.0,
+            handoff_bytes_per_s: HANDOFF_LINK_BYTES_PER_S,
+            handoff_latency_s: HANDOFF_LINK_LATENCY_S,
         }
     }
 
@@ -608,6 +745,38 @@ impl CostModel {
         let base = Accelerator::baseline(acc_cfg).run_model(model, usize::MAX, 11);
         Self::from_totals(&ax.total, &base.total, acc_cfg.freq_ghz)
             .with_decode_regime(&model.config, acc_cfg)
+    }
+
+    /// Fill the disaggregated-serving handoff regime: handing a session
+    /// from a prefill replica to a decode replica ships each context
+    /// token's `2·d_model` f32 K/V rows per layer over the
+    /// PCIe/fabric-class tier link ([`HANDOFF_LINK_BYTES_PER_S`]). The
+    /// same state the prefix KV cache copies intra-replica
+    /// ([`CostModel::with_kv_regime`]) crosses an instance boundary
+    /// here, so it is priced in link bytes, not lane cycles.
+    pub fn with_handoff_regime(mut self, model_cfg: &ModelConfig) -> CostModel {
+        self.handoff_bytes_per_token = (2 * model_cfg.n_layers * model_cfg.d_model * 4) as f64;
+        self.handoff_bytes_per_s = HANDOFF_LINK_BYTES_PER_S;
+        self.handoff_latency_s = HANDOFF_LINK_LATENCY_S;
+        self
+    }
+
+    /// KV-handoff bytes for a `tokens`-token context (zero until
+    /// [`CostModel::with_handoff_regime`]).
+    pub fn handoff_bytes(&self, tokens: u64) -> u64 {
+        (self.handoff_bytes_per_token * tokens as f64) as u64
+    }
+
+    /// Simulated time to hand a `tokens`-token session's KV state from
+    /// the prefill tier to the decode tier, seconds: link latency plus
+    /// the context's K/V bytes at tier-link bandwidth. Zero until
+    /// [`CostModel::with_handoff_regime`] fills the regime.
+    pub fn handoff_time_s(&self, tokens: u64) -> f64 {
+        if self.handoff_bytes_per_token <= 0.0 {
+            return 0.0;
+        }
+        self.handoff_latency_s
+            + self.handoff_bytes_per_token * tokens as f64 / self.handoff_bytes_per_s
     }
 
     /// Fill the tensor-parallel collective regime: `shards` instances

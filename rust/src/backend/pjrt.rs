@@ -227,6 +227,7 @@ impl ExecutionBackend for PjrtBackend {
             // Served base-only: the session never claims the adapter.
             adapter: None,
             cached_tokens: 0,
+            slo: req.slo,
             lease: None,
             state: KvState::Recompute(buf),
         };

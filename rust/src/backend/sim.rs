@@ -385,6 +385,7 @@ impl ExecutionBackend for SimBackend {
             embed_seed,
             adapter: if routed { req.adapter } else { None },
             cached_tokens,
+            slo: req.slo,
             lease,
             state: KvState::Analytic,
         };
@@ -452,6 +453,7 @@ mod tests {
             gen_tokens: 0,
             adapter: None,
             prefix: None,
+            slo: crate::workload::SloClass::Standard,
         }
     }
 

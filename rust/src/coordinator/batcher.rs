@@ -18,7 +18,113 @@
 //!   `max_wait_s` window per message, which is what used to let a steady
 //!   trickle of arrivals starve the oldest request indefinitely.
 
-use crate::workload::Request;
+use crate::workload::{Request, SloClass};
+
+/// Per-class service-level targets: the latency the class is promised and
+/// the overload escape hatches (admission deadline, degraded budget) the
+/// scheduler may use to keep the promise for everyone else.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloTarget {
+    /// Time-to-first-token target (seconds from arrival to the prefill
+    /// token). Attainment is measured against this; admitted requests
+    /// that have already waited past it are *degraded* (see
+    /// [`SloTarget::degrade_gen`]) rather than served at full budget.
+    pub ttft_s: f64,
+    /// Time-per-output-token target (seconds per decode token after the
+    /// first). Attainment accounting only — the scheduler never slows a
+    /// running session, it just reports the violation.
+    pub tpot_s: f64,
+    /// Admission deadline: a pending request that has waited longer than
+    /// this and *still* cannot be admitted is shed (returned to the
+    /// caller, never served). `f64::INFINITY` disables shedding for the
+    /// class; `0.0` sheds on the first admission pass that cannot seat
+    /// the request.
+    pub max_wait_s: f64,
+    /// Degraded decode budget: an admitted request whose wait has already
+    /// blown [`SloTarget::ttft_s`] gets `gen_tokens` clamped to this
+    /// (when non-zero and smaller than the request's own budget), trading
+    /// output length for queue drain under overload. `0` disables
+    /// degradation for the class.
+    pub degrade_gen: u32,
+}
+
+/// SLO-aware admission policy: one [`SloTarget`] per [`SloClass`] plus the
+/// anti-starvation boost. Class rank orders admission (interactive first);
+/// the boost promotes any request that has waited `boost_after_s` to the
+/// front rank, so sustained high-priority load can delay — but never
+/// permanently starve — batch traffic.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloPolicy {
+    /// Targets for [`SloClass::Interactive`].
+    pub interactive: SloTarget,
+    /// Targets for [`SloClass::Standard`].
+    pub standard: SloTarget,
+    /// Targets for [`SloClass::Batch`].
+    pub batch: SloTarget,
+    /// Any pending request that has waited at least this long is ranked
+    /// with the interactive class regardless of its own class (ties break
+    /// oldest-first, so a boosted batch request beats a fresher
+    /// interactive one). This is the starvation-freedom guarantee.
+    pub boost_after_s: f64,
+}
+
+impl Default for SloPolicy {
+    /// Interactive chats demand sub-second first tokens and shed fast;
+    /// standard requests tolerate seconds; batch jobs are never shed
+    /// (infinite admission deadline) and never degraded — they simply
+    /// wait, bounded by the boost.
+    fn default() -> Self {
+        SloPolicy {
+            interactive: SloTarget {
+                ttft_s: 0.25,
+                tpot_s: 0.05,
+                max_wait_s: 1.0,
+                degrade_gen: 8,
+            },
+            standard: SloTarget {
+                ttft_s: 1.0,
+                tpot_s: 0.2,
+                max_wait_s: 5.0,
+                degrade_gen: 16,
+            },
+            batch: SloTarget {
+                ttft_s: 30.0,
+                tpot_s: 1.0,
+                max_wait_s: f64::INFINITY,
+                degrade_gen: 0,
+            },
+            boost_after_s: 10.0,
+        }
+    }
+}
+
+impl SloPolicy {
+    /// The target set for `class`.
+    pub fn target(&self, class: SloClass) -> &SloTarget {
+        match class {
+            SloClass::Interactive => &self.interactive,
+            SloClass::Standard => &self.standard,
+            SloClass::Batch => &self.batch,
+        }
+    }
+}
+
+/// Outcome of one SLO-aware admission pass
+/// ([`BatchScheduler::take_ready_slo`]).
+#[derive(Clone, Debug, Default)]
+pub struct SloAdmission {
+    /// Requests admitted this pass, priority-then-arrival ordered, with
+    /// any degradation already applied to `gen_tokens`.
+    pub admitted: Vec<Request>,
+    /// Requests shed this pass: past their class admission deadline and
+    /// still not seatable. Removed from the pending set; the caller
+    /// accounts them (and may re-enqueue a retry with a fresh arrival
+    /// stamp — the scheduler holds no memory of shed ids).
+    pub shed: Vec<Request>,
+    /// How many admitted requests had `gen_tokens` clamped to their
+    /// class's degraded budget.
+    pub degraded: usize,
+}
 
 /// Batching policy knobs.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -198,6 +304,63 @@ impl BatchScheduler {
         self.pending.drain(..k).collect()
     }
 
+    /// SLO-aware continuous-batching admission: remove and return up to
+    /// `n` pending requests ranked by (class priority, arrival), then shed
+    /// every still-pending request past its class admission deadline.
+    ///
+    /// Rules, evaluated at `now` on the caller's clock:
+    /// 1. **Rank**: interactive < standard < batch, except that any
+    ///    request that has waited `policy.boost_after_s` is promoted to
+    ///    the front rank (anti-starvation aging). Ties break oldest
+    ///    arrival first, NaN stamps last (same `total_cmp` reasoning as
+    ///    [`BatchScheduler::take_ready`]).
+    /// 2. **Degrade**: an admitted request whose wait already exceeds its
+    ///    class [`SloTarget::ttft_s`] gets `gen_tokens` clamped to
+    ///    [`SloTarget::degrade_gen`] (when non-zero and smaller).
+    /// 3. **Shed**: an un-admitted request whose wait exceeds its class
+    ///    [`SloTarget::max_wait_s`] is removed and returned in
+    ///    [`SloAdmission::shed`] — a request is only ever shed when an
+    ///    admission pass could not seat it, never while it is running.
+    ///
+    /// With no policy pressure (all deadlines infinite, one class) this
+    /// degenerates to exactly [`BatchScheduler::take_ready`].
+    pub fn take_ready_slo(&mut self, n: usize, now: f64, policy: &SloPolicy) -> SloAdmission {
+        if self.pending.is_empty() {
+            return SloAdmission::default();
+        }
+        let rank = |r: &Request| -> u8 {
+            if now - r.arrival_s >= policy.boost_after_s {
+                0
+            } else {
+                r.slo as u8
+            }
+        };
+        self.pending.sort_by(|a, b| {
+            rank(a)
+                .cmp(&rank(b))
+                .then(f64::total_cmp(&a.arrival_s, &b.arrival_s))
+        });
+        let k = n.min(self.pending.len());
+        let mut admitted: Vec<Request> = self.pending.drain(..k).collect();
+        let mut degraded = 0usize;
+        for r in &mut admitted {
+            let t = policy.target(r.slo);
+            if now - r.arrival_s > t.ttft_s && t.degrade_gen > 0 && r.gen_tokens > t.degrade_gen {
+                r.gen_tokens = t.degrade_gen;
+                degraded += 1;
+            }
+        }
+        let (shed, keep): (Vec<Request>, Vec<Request>) = std::mem::take(&mut self.pending)
+            .into_iter()
+            .partition(|r| now - r.arrival_s > policy.target(r.slo).max_wait_s);
+        self.pending = keep;
+        SloAdmission {
+            admitted,
+            shed,
+            degraded,
+        }
+    }
+
     /// Flush the remaining requests (end of trace / server shutdown).
     /// Dispatches at the pending deadline or `now`, whichever is earlier.
     pub fn flush(&mut self, now: f64) -> Option<Batch> {
@@ -241,6 +404,15 @@ mod tests {
             gen_tokens: 0,
             adapter: None,
             prefix: None,
+            slo: SloClass::Standard,
+        }
+    }
+
+    fn sreq(id: u64, t: f64, slo: SloClass, gen: u32) -> Request {
+        Request {
+            gen_tokens: gen,
+            slo,
+            ..req(id, t)
         }
     }
 
@@ -434,6 +606,154 @@ mod tests {
         assert_eq!(b.pending(), 5);
         // The deadline is still visible for idle-sleep computation.
         assert!((b.deadline_s().unwrap() - 0.0).abs() < 1e-12);
+    }
+
+    /// A permissive policy for tests: no shedding, no degradation, no
+    /// boost interference unless a test opts in.
+    fn lax_policy() -> SloPolicy {
+        let lax = SloTarget {
+            ttft_s: f64::INFINITY,
+            tpot_s: f64::INFINITY,
+            max_wait_s: f64::INFINITY,
+            degrade_gen: 0,
+        };
+        SloPolicy {
+            interactive: lax,
+            standard: lax,
+            batch: lax,
+            boost_after_s: f64::INFINITY,
+        }
+    }
+
+    #[test]
+    fn slo_admission_ranks_by_class_then_arrival() {
+        let mut b = BatchScheduler::new(BatchPolicy {
+            max_batch: 64,
+            max_wait_s: 10.0,
+        });
+        b.enqueue(sreq(0, 0.01, SloClass::Batch, 4));
+        b.enqueue(sreq(1, 0.02, SloClass::Interactive, 4));
+        b.enqueue(sreq(2, 0.03, SloClass::Standard, 4));
+        b.enqueue(sreq(3, 0.04, SloClass::Interactive, 4));
+        let out = b.take_ready_slo(3, 0.05, &lax_policy());
+        let ids: Vec<u64> = out.admitted.iter().map(|r| r.id).collect();
+        // Interactive first (oldest-first within the class), then
+        // standard; the batch request waits but is NOT shed (infinite
+        // deadline) and surfaces on the next pass.
+        assert_eq!(ids, vec![1, 3, 2]);
+        assert!(out.shed.is_empty());
+        assert_eq!(out.degraded, 0);
+        assert_eq!(b.pending(), 1);
+        let rest = b.take_ready_slo(4, 0.06, &lax_policy());
+        assert_eq!(rest.admitted[0].id, 0);
+    }
+
+    #[test]
+    fn aging_boost_prevents_low_priority_starvation() {
+        // Sustained interactive load: every pass refills with fresh
+        // interactive requests, and capacity admits exactly that many.
+        // Without aging the batch request would lose every tie forever;
+        // the boost must get it through once it has waited boost_after_s.
+        let mut policy = lax_policy();
+        policy.boost_after_s = 1.0;
+        let mut b = BatchScheduler::new(BatchPolicy {
+            max_batch: 64,
+            max_wait_s: 10.0,
+        });
+        b.enqueue(sreq(0, 0.0, SloClass::Batch, 4));
+        let mut served_batch_at = None;
+        for pass in 0..20 {
+            let now = 0.1 + pass as f64 * 0.1;
+            b.enqueue(sreq(100 + pass as u64, now, SloClass::Interactive, 4));
+            let out = b.take_ready_slo(1, now, &policy);
+            assert_eq!(out.admitted.len(), 1);
+            if out.admitted[0].id == 0 {
+                served_batch_at = Some(now);
+                break;
+            }
+        }
+        let t = served_batch_at.expect("batch request must not starve");
+        // It got through at the first pass where its wait crossed the
+        // boost (arrival 0.0, boost 1.0 → the pass at now = 1.0), beating
+        // that pass's fresh interactive arrival on the older stamp.
+        assert!((t - 1.0).abs() < 1e-9, "served at {t}");
+    }
+
+    #[test]
+    fn overload_degrades_admitted_and_sheds_unseated_requests() {
+        let mut policy = lax_policy();
+        policy.interactive.ttft_s = 0.05;
+        policy.interactive.degrade_gen = 2;
+        policy.interactive.max_wait_s = 0.5;
+        policy.standard.max_wait_s = 0.2;
+        let mut b = BatchScheduler::new(BatchPolicy {
+            max_batch: 64,
+            max_wait_s: 10.0,
+        });
+        b.enqueue(sreq(0, 0.0, SloClass::Interactive, 32));
+        b.enqueue(sreq(1, 0.0, SloClass::Standard, 32));
+        b.enqueue(sreq(2, 0.0, SloClass::Standard, 32));
+        // One slot at t = 0.3: the interactive request is admitted but
+        // its TTFT target (0.05) is already blown → degraded to 2 tokens.
+        // The standard requests cannot be seated and are past their 0.2 s
+        // admission deadline → both shed.
+        let out = b.take_ready_slo(1, 0.3, &policy);
+        assert_eq!(out.admitted.len(), 1);
+        assert_eq!(out.admitted[0].id, 0);
+        assert_eq!(out.admitted[0].gen_tokens, 2);
+        assert_eq!(out.degraded, 1);
+        let mut shed_ids: Vec<u64> = out.shed.iter().map(|r| r.id).collect();
+        shed_ids.sort_unstable();
+        assert_eq!(shed_ids, vec![1, 2]);
+        assert_eq!(b.pending(), 0);
+        // Shed-then-retry: re-enqueue one shed request with a fresh
+        // arrival stamp; it admits cleanly (the scheduler holds no shed
+        // memory) and un-degraded (wait restarts at the retry stamp).
+        let mut retry = out.shed[0].clone();
+        retry.arrival_s = 0.4;
+        let retry_gen = retry.gen_tokens;
+        b.enqueue(retry);
+        let again = b.take_ready_slo(1, 0.45, &policy);
+        assert_eq!(again.admitted.len(), 1);
+        assert_eq!(again.admitted[0].gen_tokens, retry_gen);
+        assert!(again.shed.is_empty());
+        assert_eq!(again.degraded, 0);
+    }
+
+    #[test]
+    fn zero_admission_deadline_sheds_whatever_a_pass_cannot_seat() {
+        // max_wait_s = 0: the admission deadline IS the arrival instant,
+        // so any pass at now > arrival seats up to `n` and sheds the
+        // rest — the backpressure mode the chunked-prefill engine uses
+        // when prefill slots are saturated. Capacity-first: a request is
+        // only ever shed by a pass that could not seat it.
+        let mut policy = lax_policy();
+        policy.standard.max_wait_s = 0.0;
+        let mut b = BatchScheduler::new(BatchPolicy {
+            max_batch: 64,
+            max_wait_s: 10.0,
+        });
+        for i in 0..5 {
+            b.enqueue(sreq(i, 0.0, SloClass::Standard, 4));
+        }
+        let out = b.take_ready_slo(2, 0.001, &policy);
+        assert_eq!(out.admitted.len(), 2);
+        assert_eq!(out.shed.len(), 3);
+        assert_eq!(b.pending(), 0);
+        // At exactly now == arrival the deadline has not yet passed
+        // (strict comparison): nothing is shed, the remainder stays
+        // pending for the next pass.
+        let mut b2 = BatchScheduler::new(BatchPolicy {
+            max_batch: 64,
+            max_wait_s: 10.0,
+        });
+        for i in 0..3 {
+            b2.enqueue(sreq(i, 0.5, SloClass::Standard, 4));
+        }
+        let out2 = b2.take_ready_slo(1, 0.5, &policy);
+        assert_eq!(out2.admitted.len(), 1);
+        assert!(out2.shed.is_empty());
+        assert_eq!(b2.pending(), 2);
     }
 
     #[test]

@@ -1,0 +1,488 @@
+//! Disaggregated prefill/decode fleet serving on the deterministic
+//! virtual clock.
+//!
+//! [`Engine::serve_trace_disagg`] models the two-tier topology the live
+//! [`crate::coordinator::Server::start_disagg_pool`] runs on wall
+//! clocks: `P` dedicated **prefill replicas** advance chunked-prefill
+//! jobs ([`ExecutionBackend::prefill_chunk`]) and hand each opened
+//! session across a metered KV link ([`CostModel::handoff_time_s`]) to
+//! `D` dedicated **decode replicas** that drive continuous-batching
+//! decode waves ([`ExecutionBackend::decode_steps`]). The fleet runs in
+//! lockstep ticks: every replica that has work executes once per tick
+//! and the clock advances by the *slowest* replica's tick time — a
+//! conservative synchronous model that still exposes the structural
+//! win, because chunking bounds every prefill tick by `chunk_tokens`
+//! weight passes where a unified replica's iteration can stall behind a
+//! whole long prompt.
+//!
+//! Why TTFT improves under bursts: in the unified loop
+//! ([`Engine::serve_trace_decode`]) a prompt must win a *session slot*
+//! that decode sessions hold for their whole generated-token budget, so
+//! flash-crowd prompts queue behind decode retirements. Here the
+//! prefill tier has its own slots — first tokens are gated only by
+//! prefill capacity (plus the handoff link), never by decode occupancy.
+//! The price is decode-tier transfer bytes and a split hardware budget,
+//! which is why [`Engine::serve_trace_unified`] exists: the same trace
+//! on `P + D` *unified* replicas, the equal-hardware baseline every
+//! disaggregation claim must beat (`benches/disagg_serve.rs` asserts
+//! the p99-TTFT win).
+//!
+//! One physical backend serves every virtual replica, so logits, tokens
+//! and reuse counters are bit-identical to single-engine serving (the
+//! chunked-prefill contract guarantees chunking changes only the
+//! clock); replicas are cost-model constructs, exactly like the shard
+//! model. The prefix cache, when enabled, is therefore shared
+//! fleet-wide on both sides of the comparison.
+
+use crate::backend::{ChunkedPrefill, CostModel, ExecutionBackend, KvHandle, StepOutcome};
+use crate::coordinator::batcher::{BatchPolicy, BatchScheduler, SloPolicy};
+use crate::coordinator::engine::{decode_budget, DecodeSession, Engine, RequestResult};
+use crate::coordinator::metrics::ServeSummary;
+use crate::workload::Request;
+use anyhow::Result;
+use std::collections::VecDeque;
+
+/// Options for [`Engine::serve_trace_disagg`].
+#[derive(Clone, Copy, Debug)]
+pub struct DisaggOpts {
+    /// Dedicated prefill replicas (≥ 1). Each holds up to the policy's
+    /// `max_batch` chunk jobs and spends `chunk_tokens` prompt tokens
+    /// per tick across them, FIFO.
+    pub prefill_replicas: usize,
+    /// Dedicated decode replicas (≥ 1), each capped at the policy's
+    /// `max_batch` running sessions.
+    pub decode_replicas: usize,
+    /// Prompt tokens each prefill replica computes per tick; 0 runs
+    /// whole prompts monolithically (one job finishes per call).
+    pub chunk_tokens: usize,
+    /// Generated-token budget for requests whose `gen_tokens` is 0.
+    pub default_gen: u32,
+    /// SLO-aware admission into the prefill tier
+    /// ([`BatchScheduler::take_ready_slo`]); `None` admits FIFO.
+    pub slo: Option<SloPolicy>,
+    /// Bytes of K/V state per context token crossing the prefill→decode
+    /// link (the [`CostModel::with_handoff_regime`] convention is
+    /// `2·n_layers·d_model·4`). 0 makes handoffs free and unmetered —
+    /// set it to make the tier link a real cost.
+    pub handoff_bytes_per_token: f64,
+}
+
+impl DisaggOpts {
+    /// `p` prefill / `d` decode replicas, monolithic prefill, FIFO
+    /// admission, free handoffs.
+    pub fn new(p: usize, d: usize, default_gen: u32) -> DisaggOpts {
+        DisaggOpts {
+            prefill_replicas: p,
+            decode_replicas: d,
+            chunk_tokens: 0,
+            default_gen,
+            slo: None,
+            handoff_bytes_per_token: 0.0,
+        }
+    }
+
+    /// Chunk prefill at `tokens` prompt tokens per replica per tick.
+    pub fn with_chunking(mut self, tokens: usize) -> DisaggOpts {
+        self.chunk_tokens = tokens;
+        self
+    }
+
+    /// Enable SLO-aware admission.
+    pub fn with_slo(mut self, policy: SloPolicy) -> DisaggOpts {
+        self.slo = Some(policy);
+        self
+    }
+
+    /// Meter the tier link at `bytes` per context token.
+    pub fn with_handoff(mut self, bytes: f64) -> DisaggOpts {
+        self.handoff_bytes_per_token = bytes;
+        self
+    }
+}
+
+/// Generated tokens a decode replica still owes its sessions — the
+/// load measure handoff placement balances (same token-weighted idea as
+/// the live pool's backlog counter).
+fn remaining_tokens(sessions: &[DecodeSession]) -> usize {
+    sessions
+        .iter()
+        .map(|s| (s.kv.budget as usize).saturating_sub(s.kv.generated.len()))
+        .sum()
+}
+
+impl<B: ExecutionBackend> Engine<B> {
+    /// Serve a trace on a disaggregated `P`-prefill / `D`-decode fleet
+    /// (see the module docs for the tick model). Results carry the same
+    /// per-request fields as every other serving path; the summary adds
+    /// handoff bytes, shed/degraded counts, and SLO attainment when a
+    /// policy is set.
+    pub fn serve_trace_disagg(
+        &self,
+        trace: Vec<Request>,
+        policy: BatchPolicy,
+        opts: DisaggOpts,
+    ) -> Result<(Vec<RequestResult>, ServeSummary)> {
+        let p = opts.prefill_replicas.max(1);
+        let d = opts.decode_replicas.max(1);
+        let cap = policy.max_batch.min(self.max_batch()).max(1);
+        let mut cost: CostModel = *self.cost();
+        if opts.handoff_bytes_per_token > 0.0 {
+            cost.handoff_bytes_per_token = opts.handoff_bytes_per_token;
+        }
+        let chunk = if opts.chunk_tokens == 0 {
+            usize::MAX
+        } else {
+            opts.chunk_tokens
+        };
+        let mut sched = BatchScheduler::new(BatchPolicy {
+            max_batch: cap,
+            ..policy
+        });
+        let mut arrivals = trace.into_iter().peekable();
+        // Prefill tier: per-replica FIFO of in-flight chunk jobs, each
+        // with its admission stamp.
+        let mut prefill: Vec<Vec<(ChunkedPrefill, f64)>> = (0..p).map(|_| Vec::new()).collect();
+        // Sessions that finished prefill but have not found a decode
+        // slot yet (first token already produced — waiting here costs
+        // inter-token latency, never TTFT).
+        let mut handoffs: VecDeque<DecodeSession> = VecDeque::new();
+        // Decode tier: per-replica running sessions.
+        let mut decode: Vec<Vec<DecodeSession>> = (0..d).map(|_| Vec::new()).collect();
+        let mut results: Vec<RequestResult> = Vec::new();
+        let mut iterations = 0usize;
+        let mut clock = 0.0f64;
+        let mut shed = 0usize;
+        let mut degraded = 0usize;
+        let mut handoff_bytes = 0u64;
+
+        loop {
+            while arrivals.peek().map_or(false, |r| r.arrival_s <= clock) {
+                sched.enqueue(arrivals.next().expect("peeked"));
+            }
+            let free: usize = prefill.iter().map(|q| cap.saturating_sub(q.len())).sum();
+            let admitted = match &opts.slo {
+                Some(policy) => {
+                    let adm = sched.take_ready_slo(free, clock, policy);
+                    shed += adm.shed.len();
+                    degraded += adm.degraded;
+                    adm.admitted
+                }
+                None => sched.take_ready(free),
+            };
+            let tier_idle = prefill.iter().all(|q| q.is_empty())
+                && decode.iter().all(|q| q.is_empty())
+                && handoffs.is_empty();
+            if tier_idle && admitted.is_empty() {
+                match arrivals.peek() {
+                    Some(r) => {
+                        clock = clock.max(r.arrival_s);
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+            iterations += 1;
+            // Place admitted prompts on the prefill replica with the
+            // fewest jobs (lowest index on ties — deterministic).
+            for req in admitted {
+                let budget = decode_budget(&req, opts.default_gen);
+                let i = (0..p)
+                    .min_by_key(|&i| (prefill[i].len(), i))
+                    .expect("p >= 1");
+                prefill[i].push((ChunkedPrefill::new(req, budget), clock));
+            }
+
+            // ---- one lockstep tick: every busy replica executes once;
+            // the clock advances by the slowest replica's time.
+            let mut tick_s = 0.0f64;
+
+            // Decode waves, one per replica holding sessions.
+            for q in decode.iter_mut() {
+                if q.is_empty() {
+                    continue;
+                }
+                let batch_now = q.len();
+                let mut ctxs: Vec<u64> = Vec::with_capacity(q.len());
+                let mut adapter_steps = 0u64;
+                for s in q.iter() {
+                    ctxs.push(s.kv.context_len() as u64);
+                    adapter_steps += s.kv.adapter.is_some() as u64;
+                }
+                let kv_refs: Vec<&mut KvHandle> = q.iter_mut().map(|s| &mut s.kv).collect();
+                let outs = self.backend.decode_steps(kv_refs)?;
+                for ((s, ctx), out) in q.iter_mut().zip(&ctxs).zip(outs) {
+                    s.record_step(*ctx, out, &cost);
+                    s.peak_batch = s.peak_batch.max(batch_now);
+                }
+                let t = cost.iteration_time_s(0, &ctxs) + cost.adapter_time_s(adapter_steps);
+                tick_s = tick_s.max(t);
+            }
+
+            // Prefill replicas: spend this tick's chunk budget FIFO over
+            // the replica's jobs; completed jobs pay the handoff link.
+            let mut completed: Vec<(KvHandle, StepOutcome, f64, f64)> = Vec::new();
+            for q in prefill.iter_mut() {
+                if q.is_empty() {
+                    continue;
+                }
+                let mut budget_left = chunk;
+                let mut prefill_tokens = 0u64;
+                let mut copied_tokens = 0u64;
+                let mut adapter_tokens = 0u64;
+                let mut handoff_s = 0.0f64;
+                let mut i = 0;
+                while i < q.len() && budget_left > 0 {
+                    let (job, admit_s) = &mut q[i];
+                    let outcome = self.backend.prefill_chunk(job, budget_left)?;
+                    prefill_tokens += outcome.computed_tokens;
+                    copied_tokens += outcome.copied_tokens;
+                    adapter_tokens += outcome.adapter_tokens;
+                    budget_left -= (outcome.computed_tokens as usize).min(budget_left);
+                    if let Some((kv, out)) = outcome.done {
+                        let arrival_s = job.req.arrival_s;
+                        let admit_s = *admit_s;
+                        q.remove(i);
+                        let ctx = kv.context_len() as u64;
+                        handoff_bytes += cost.handoff_bytes(ctx);
+                        handoff_s += cost.handoff_time_s(ctx);
+                        completed.push((kv, out, arrival_s, admit_s));
+                    } else {
+                        i += 1;
+                    }
+                }
+                let t = cost.iteration_time_s(prefill_tokens, &[])
+                    + cost.kv_copy_time_s(copied_tokens)
+                    + cost.adapter_time_s(adapter_tokens)
+                    + handoff_s;
+                tick_s = tick_s.max(t);
+            }
+            clock += tick_s;
+
+            // First tokens completed within this tick; budget-1 sessions
+            // finish without ever reaching the decode tier.
+            for (kv, out, arrival_s, admit_s) in completed {
+                let mut s = DecodeSession::admit(kv, out, arrival_s, admit_s, &cost, 0);
+                s.ttft_abs = Some(clock);
+                if s.kv.done() {
+                    s.finish_abs = Some(clock);
+                    results.push(s.into_result());
+                } else {
+                    handoffs.push_back(s);
+                }
+            }
+            // Retire decode sessions whose budgets exhausted this tick.
+            for q in decode.iter_mut() {
+                let mut i = 0;
+                while i < q.len() {
+                    if q[i].kv.done() {
+                        let mut s = q.swap_remove(i);
+                        s.finish_abs = Some(clock);
+                        results.push(s.into_result());
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            // Fill freed decode slots from the handoff queue, FIFO, each
+            // onto the replica owing the fewest remaining tokens.
+            while let Some(s) = handoffs.pop_front() {
+                let slot = (0..d)
+                    .filter(|&i| decode[i].len() < cap)
+                    .min_by_key(|&i| (remaining_tokens(&decode[i]), i));
+                match slot {
+                    Some(i) => decode[i].push(s),
+                    None => {
+                        handoffs.push_front(s);
+                        break;
+                    }
+                }
+            }
+        }
+        let summary = ServeSummary::from_results_slo(
+            &results,
+            iterations,
+            &cost,
+            opts.slo.as_ref(),
+            shed,
+            degraded,
+            handoff_bytes,
+        );
+        Ok((results, summary))
+    }
+
+    /// Equal-hardware unified baseline for [`Engine::serve_trace_disagg`]:
+    /// the same trace split across `replicas` independent unified
+    /// continuous-batching loops ([`Engine::serve_trace_decode`]), each
+    /// on its own virtual clock from the shared epoch. Requests are
+    /// assigned in arrival order to the replica with the least
+    /// token-weighted work — the same rule live pool dispatch uses — so
+    /// the baseline is not handicapped by naive round-robin.
+    pub fn serve_trace_unified(
+        &self,
+        trace: Vec<Request>,
+        policy: BatchPolicy,
+        replicas: usize,
+        default_gen: u32,
+    ) -> Result<(Vec<RequestResult>, ServeSummary)> {
+        let n = replicas.max(1);
+        let mut parts: Vec<Vec<Request>> = (0..n).map(|_| Vec::new()).collect();
+        let mut load = vec![0usize; n];
+        for req in trace {
+            let i = (0..n).min_by_key(|&i| (load[i], i)).expect("n >= 1");
+            load[i] += req.seq_len + req.gen_tokens.max(1) as usize;
+            parts[i].push(req);
+        }
+        let mut results: Vec<RequestResult> = Vec::new();
+        let mut iterations = 0usize;
+        for part in parts {
+            let (rs, summary) = self.serve_trace_decode(part, policy, default_gen)?;
+            iterations += summary.batches;
+            results.extend(rs);
+        }
+        let summary = ServeSummary::from_results(&results, iterations, self.backend.cost());
+        Ok((results, summary))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{FunctionalBackend, SimBackend};
+    use crate::config::{AcceleratorConfig, Dataset, ModelConfig};
+    use crate::coordinator::batcher::SloTarget;
+    use crate::workload::SloClass;
+
+    fn sim() -> Engine<SimBackend> {
+        let be = SimBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper())
+            .expect("sim backend must construct");
+        Engine::new(be)
+    }
+
+    fn functional() -> Engine<FunctionalBackend> {
+        let be = FunctionalBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper(), 7)
+            .expect("functional backend must construct");
+        Engine::new(be)
+    }
+
+    fn req(id: u64, arrival_s: f64, seq_len: usize, gen: u32) -> Request {
+        Request {
+            id,
+            dataset: Dataset::Imdb,
+            arrival_s,
+            seq_len,
+            gen_tokens: gen,
+            adapter: None,
+            prefix: None,
+            slo: SloClass::Standard,
+        }
+    }
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy {
+            max_batch: 4,
+            max_wait_s: 0.0,
+        }
+    }
+
+    /// Disaggregation changes the clock, never the computation: per-id
+    /// logits, tokens, and reuse counters are bit-identical to the
+    /// single-replica unified path on the functional backend — chunked
+    /// prefill included.
+    #[test]
+    fn disagg_serving_is_bit_identical_to_unified() {
+        let trace: Vec<Request> = (0..10)
+            .map(|i| req(i, 0.02 * i as f64, 5 + (i as usize % 7), 3 + (i % 4) as u32))
+            .collect();
+        let (mut uni, _) = functional().serve_trace_decode(trace.clone(), policy(), 4).unwrap();
+        let opts = DisaggOpts::new(2, 2, 4).with_chunking(3);
+        let (mut dis, summary) = functional().serve_trace_disagg(trace, policy(), opts).unwrap();
+        assert_eq!(uni.len(), dis.len());
+        uni.sort_by_key(|r| r.id);
+        dis.sort_by_key(|r| r.id);
+        for (u, v) in uni.iter().zip(dis.iter()) {
+            assert_eq!(u.id, v.id);
+            assert_eq!(u.logits, v.logits, "request {} diverged", u.id);
+            assert_eq!(u.tokens, v.tokens);
+            assert_eq!(u.gen_tokens, v.gen_tokens);
+            assert_eq!(u.base_mults, v.base_mults);
+            assert_eq!(u.base_reuses, v.base_reuses);
+        }
+        assert!(summary.slo_attainment == 1.0 && summary.shed == 0);
+    }
+
+    /// The tier link is metered exactly: one handoff per served request,
+    /// each billed at bytes-per-token × context length (prompt + first
+    /// token), and TTFT absorbs the link time.
+    #[test]
+    fn handoff_bytes_are_metered_per_context_token() {
+        let bpt = 64.0;
+        let trace = vec![req(0, 0.0, 8, 4), req(1, 0.0, 5, 4)];
+        let eng = sim();
+        let opts = DisaggOpts::new(1, 1, 4).with_handoff(bpt);
+        let (results, summary) = eng.serve_trace_disagg(trace, policy(), opts).unwrap();
+        assert_eq!(results.len(), 2);
+        // context at handoff = prompt_len + the prefill token.
+        let expected = (bpt as u64) * ((8 + 1) + (5 + 1));
+        assert_eq!(summary.handoff_bytes, expected);
+
+        let (_, free) = eng
+            .serve_trace_disagg(vec![req(0, 0.0, 8, 4)], policy(), DisaggOpts::new(1, 1, 4))
+            .unwrap();
+        assert_eq!(free.handoff_bytes, 0);
+    }
+
+    /// The structural TTFT claim on a flash crowd: with decode budgets
+    /// holding unified session slots hostage, a burst's first tokens
+    /// queue behind retirements in the unified pool but only behind
+    /// prefill capacity in the disaggregated one — at equal replica
+    /// count (4 unified vs 2+2 disaggregated).
+    #[test]
+    fn flash_crowd_p99_ttft_favors_disaggregation() {
+        let trace: Vec<Request> = (0..64).map(|i| req(i, 0.0, 16, 256)).collect();
+        let eng = sim();
+        let (_, uni) = eng.serve_trace_unified(trace.clone(), policy(), 4, 16).unwrap();
+        let opts = DisaggOpts::new(2, 2, 16).with_chunking(32);
+        let (results, dis) = eng.serve_trace_disagg(trace, policy(), opts).unwrap();
+        assert_eq!(results.len(), 64, "conservation: every request answered");
+        assert!(
+            dis.ttft.p99_s < uni.ttft.p99_s,
+            "disagg p99 TTFT {} must beat unified {}",
+            dis.ttft.p99_s,
+            uni.ttft.p99_s
+        );
+    }
+
+    /// SLO admission composes with the tiered fleet: a zero-tolerance
+    /// deadline sheds the overflow a saturated prefill tier cannot seat,
+    /// and the summary accounts every request exactly once.
+    #[test]
+    fn saturated_prefill_tier_sheds_zero_deadline_overflow() {
+        let base = SloPolicy::default();
+        let slo = SloPolicy {
+            standard: SloTarget {
+                max_wait_s: 0.0,
+                ttft_s: f64::INFINITY, // isolate shedding from degradation
+                ..base.standard
+            },
+            ..base
+        };
+        let trace: Vec<Request> = (0..12).map(|i| req(i, 0.0, 40, 4)).collect();
+        let eng = sim();
+        let opts = DisaggOpts {
+            prefill_replicas: 1,
+            decode_replicas: 1,
+            chunk_tokens: 8,
+            default_gen: 4,
+            slo: Some(slo),
+            handoff_bytes_per_token: 0.0,
+        };
+        let pol = BatchPolicy {
+            max_batch: 2,
+            max_wait_s: 0.0,
+        };
+        let (results, summary) = eng.serve_trace_disagg(trace, pol, opts).unwrap();
+        assert!(summary.shed > 0, "overflow past the deadline must shed");
+        assert_eq!(results.len() + summary.shed, 12);
+        assert!(results.iter().all(|r| !r.shed));
+    }
+}

@@ -17,15 +17,17 @@
 //!   `benches/decode_serve.rs` can measure what continuous batching
 //!   buys.
 
-use crate::backend::{ExecutionBackend, KvHandle, PjrtBackend, ReqActivity, ShardActivity};
+use crate::backend::{
+    ChunkedPrefill, ExecutionBackend, KvHandle, PjrtBackend, ReqActivity, ShardActivity,
+};
 pub use crate::backend::CostModel;
 use crate::config::AcceleratorConfig;
-use crate::coordinator::batcher::{Batch, BatchPolicy, BatchScheduler, DynamicBatcher};
+use crate::coordinator::batcher::{Batch, BatchPolicy, BatchScheduler, DynamicBatcher, SloPolicy};
 use crate::coordinator::metrics::ServeSummary;
 use crate::energy::EnergyModel;
 use crate::model::AdapterId;
 use crate::sim::SimStats;
-use crate::workload::Request;
+use crate::workload::{Request, SloClass};
 use anyhow::Result;
 use std::path::Path;
 
@@ -72,6 +74,18 @@ pub struct RequestResult {
     /// LoRA adapter the request was actually served with (`None` when
     /// base-only — including adapter requests the backend missed).
     pub adapter: Option<AdapterId>,
+    /// SLO class the request was served under (attainment accounting;
+    /// [`SloClass::Standard`] when the trace carries no class mix).
+    pub slo: SloClass,
+    /// True when SLO admission shed this request before execution: the
+    /// request was never served, only its identity/queue fields are
+    /// meaningful, and aggregation
+    /// ([`crate::coordinator::ServeSummary::from_results_slo`]) must
+    /// exclude the row and count it as shed instead. Deterministic trace
+    /// serving never emits shed rows (it reports counts only); the live
+    /// disaggregated pool answers shed waiters with a marker row so
+    /// their reply channels resolve.
+    pub shed: bool,
     /// Measured base-pipeline multiplications (Result-Cache fills);
     /// 0 when the backend measures nothing itself.
     pub base_mults: u64,
@@ -84,6 +98,45 @@ pub struct RequestResult {
     /// entry per shard — summing to `base_mults`/`base_reuses` —
     /// otherwise).
     pub per_shard: Vec<ShardActivity>,
+}
+
+/// Options for continuous-batching decode serving
+/// ([`Engine::serve_trace_decode_opts`]).
+#[derive(Clone, Debug)]
+pub struct DecodeServeOpts {
+    /// Generated-token budget for requests whose `gen_tokens` is 0.
+    pub default_gen: u32,
+    /// Per-iteration chunked-prefill token budget: admitted prompts are
+    /// sliced into chunks of at most this many tokens, interleaved with
+    /// decode iterations. `0` disables chunking (monolithic prefill —
+    /// the exact [`Engine::serve_trace_decode`] behavior).
+    pub chunk_tokens: usize,
+    /// SLO-aware admission policy. `None` keeps plain FIFO admission
+    /// with no shedding or degradation.
+    pub slo: Option<SloPolicy>,
+}
+
+impl DecodeServeOpts {
+    /// Plain continuous batching: monolithic prefill, FIFO admission.
+    pub fn new(default_gen: u32) -> DecodeServeOpts {
+        DecodeServeOpts {
+            default_gen,
+            chunk_tokens: 0,
+            slo: None,
+        }
+    }
+
+    /// Enable chunked prefill with a per-iteration token budget.
+    pub fn with_chunking(mut self, chunk_tokens: usize) -> DecodeServeOpts {
+        self.chunk_tokens = chunk_tokens;
+        self
+    }
+
+    /// Enable SLO-aware admission under `policy`.
+    pub fn with_slo(mut self, policy: SloPolicy) -> DecodeServeOpts {
+        self.slo = Some(policy);
+        self
+    }
 }
 
 /// The serving engine: a batching/attribution shell around any
@@ -195,6 +248,8 @@ impl<B: ExecutionBackend> Engine<B> {
                 ttft_s: queue_wait_s + exec_s,
                 tpot_s: 0.0,
                 adapter: if routed { req.adapter } else { None },
+                slo: req.slo,
+                shed: false,
                 base_mults,
                 base_reuses,
                 adapter_ops,
@@ -254,6 +309,36 @@ impl<B: ExecutionBackend> Engine<B> {
         policy: BatchPolicy,
         default_gen: u32,
     ) -> Result<(Vec<RequestResult>, ServeSummary)> {
+        self.serve_trace_decode_opts(trace, policy, DecodeServeOpts::new(default_gen))
+    }
+
+    /// [`Engine::serve_trace_decode`] with the full option set: chunked
+    /// prefill and SLO-aware admission ([`DecodeServeOpts`]).
+    ///
+    /// **Chunked prefill** (`chunk_tokens > 0`): admitted prompts become
+    /// [`ChunkedPrefill`] jobs instead of running a monolithic
+    /// `prefill_batch`. Each iteration spends at most `chunk_tokens`
+    /// prompt tokens across the in-flight jobs (FIFO), interleaved with
+    /// the decode wave — so no decode iteration ever waits behind a full
+    /// long prompt, at the price of later first tokens for the chunked
+    /// prompts themselves. Chunk jobs occupy session slots while they
+    /// prefill (they hold KV). The backend contract
+    /// ([`ExecutionBackend::prefill_chunk`]) guarantees the completed
+    /// session — logits, token, reuse counters — is bit-identical to the
+    /// monolithic prefill; only the clock differs.
+    ///
+    /// **SLO admission** (`slo: Some(policy)`): free slots are filled
+    /// through [`BatchScheduler::take_ready_slo`] — priority classes,
+    /// aging boost, degradation, shedding — instead of plain FIFO. Shed
+    /// requests never execute and are excluded from `results`; the
+    /// summary carries their count (and the degraded count) alongside
+    /// per-class SLO attainment.
+    pub fn serve_trace_decode_opts(
+        &self,
+        trace: Vec<Request>,
+        policy: BatchPolicy,
+        opts: DecodeServeOpts,
+    ) -> Result<(Vec<RequestResult>, ServeSummary)> {
         let cap = policy.max_batch.min(self.max_batch()).max(1);
         let cost = *self.cost();
         let mut sched = BatchScheduler::new(BatchPolicy {
@@ -262,16 +347,30 @@ impl<B: ExecutionBackend> Engine<B> {
         });
         let mut arrivals = trace.into_iter().peekable();
         let mut active: Vec<DecodeSession> = Vec::new();
+        // In-flight chunked-prefill jobs (each owns a session slot) plus
+        // the virtual-clock stamp at which the job was admitted.
+        let mut chunk_jobs: Vec<(ChunkedPrefill, f64)> = Vec::new();
         let mut results: Vec<RequestResult> = Vec::new();
         let mut iterations = 0usize;
         let mut clock = 0.0f64;
+        let mut shed = 0usize;
+        let mut degraded = 0usize;
 
         loop {
             while arrivals.peek().map_or(false, |r| r.arrival_s <= clock) {
                 sched.enqueue(arrivals.next().expect("peeked"));
             }
-            let admitted = sched.take_ready(cap - active.len());
-            if active.is_empty() && admitted.is_empty() {
+            let free = cap.saturating_sub(active.len() + chunk_jobs.len());
+            let admitted = match &opts.slo {
+                Some(policy) => {
+                    let adm = sched.take_ready_slo(free, clock, policy);
+                    shed += adm.shed.len();
+                    degraded += adm.degraded;
+                    adm.admitted
+                }
+                None => sched.take_ready(free),
+            };
+            if active.is_empty() && chunk_jobs.is_empty() && admitted.is_empty() {
                 // Idle: jump to the next arrival, or finish.
                 match arrivals.peek() {
                     Some(r) => {
@@ -283,7 +382,7 @@ impl<B: ExecutionBackend> Engine<B> {
             }
 
             iterations += 1;
-            let batch_now = active.len() + admitted.len();
+            let batch_now = active.len() + chunk_jobs.len() + admitted.len();
             let mut prefill_tokens = 0u64;
             // Prompt tokens resumed from the shared prefix cache this
             // iteration: billed at block-copy rate, not a weight pass.
@@ -305,29 +404,60 @@ impl<B: ExecutionBackend> Engine<B> {
                 s.record_step(*ctx, out, &cost);
                 s.peak_batch = s.peak_batch.max(batch_now);
             }
-            let jobs: Vec<(Request, u32)> = admitted
-                .into_iter()
-                .map(|req| {
-                    let budget = decode_budget(&req, default_gen);
-                    (req, budget)
-                })
-                .collect();
-            let prefilled = self.backend.prefill_batch(&jobs)?;
-            for ((req, _), (kv, out)) in jobs.iter().zip(prefilled) {
-                let computed = (kv.prompt_len - kv.cached_tokens) as u64;
-                prefill_tokens += computed;
-                copied_tokens += kv.cached_tokens as u64;
-                if kv.adapter.is_some() {
-                    adapter_tokens += computed;
+            if opts.chunk_tokens == 0 {
+                // Monolithic prefill: the whole admitted prompt set runs
+                // this iteration (the original serve_trace_decode path).
+                let jobs: Vec<(Request, u32)> = admitted
+                    .into_iter()
+                    .map(|req| {
+                        let budget = decode_budget(&req, opts.default_gen);
+                        (req, budget)
+                    })
+                    .collect();
+                let prefilled = self.backend.prefill_batch(&jobs)?;
+                for ((req, _), (kv, out)) in jobs.iter().zip(prefilled) {
+                    let computed = (kv.prompt_len - kv.cached_tokens) as u64;
+                    prefill_tokens += computed;
+                    copied_tokens += kv.cached_tokens as u64;
+                    if kv.adapter.is_some() {
+                        adapter_tokens += computed;
+                    }
+                    active.push(DecodeSession::admit(
+                        kv,
+                        out,
+                        req.arrival_s,
+                        clock,
+                        &cost,
+                        batch_now,
+                    ));
                 }
-                active.push(DecodeSession::admit(
-                    kv,
-                    out,
-                    req.arrival_s,
-                    clock,
-                    &cost,
-                    batch_now,
-                ));
+            } else {
+                for req in admitted {
+                    let budget = decode_budget(&req, opts.default_gen);
+                    chunk_jobs.push((ChunkedPrefill::new(req, budget), clock));
+                }
+                // Spend the per-iteration chunk budget FIFO across the
+                // in-flight jobs; completed jobs join the decode batch.
+                let mut budget_left = opts.chunk_tokens;
+                let mut i = 0;
+                while i < chunk_jobs.len() && budget_left > 0 {
+                    let (job, admit_s) = &mut chunk_jobs[i];
+                    let outcome = self.backend.prefill_chunk(job, budget_left)?;
+                    prefill_tokens += outcome.computed_tokens;
+                    copied_tokens += outcome.copied_tokens;
+                    adapter_tokens += outcome.adapter_tokens;
+                    budget_left -= (outcome.computed_tokens as usize).min(budget_left);
+                    if let Some((kv, out)) = outcome.done {
+                        let arrival_s = job.req.arrival_s;
+                        let admit_s = *admit_s;
+                        chunk_jobs.remove(i);
+                        active.push(DecodeSession::admit(
+                            kv, out, arrival_s, admit_s, &cost, batch_now,
+                        ));
+                    } else {
+                        i += 1;
+                    }
+                }
             }
             clock += cost.iteration_time_s(prefill_tokens, &decode_ctxs)
                 + cost.kv_copy_time_s(copied_tokens)
@@ -349,7 +479,15 @@ impl<B: ExecutionBackend> Engine<B> {
                 }
             }
         }
-        let summary = ServeSummary::from_results(&results, iterations, self.backend.cost());
+        let summary = ServeSummary::from_results_slo(
+            &results,
+            iterations,
+            self.backend.cost(),
+            opts.slo.as_ref(),
+            shed,
+            degraded,
+            0,
+        );
         Ok((results, summary))
     }
 
@@ -570,6 +708,8 @@ impl DecodeSession {
         RequestResult {
             id: self.kv.id,
             adapter: self.kv.adapter,
+            slo: self.kv.slo,
+            shed: false,
             logits: self.last_logits,
             tokens: self.prompt_tokens + gen,
             queue_wait_s: (self.admit_s - self.arrival_s).max(0.0),
@@ -634,6 +774,7 @@ mod tests {
             gen_tokens,
             adapter: None,
             prefix: None,
+            slo: SloClass::Standard,
         };
         assert_eq!(decode_budget(&mk(5), 2), 5, "request budget wins");
         assert_eq!(decode_budget(&mk(0), 2), 2, "0 falls back to default");

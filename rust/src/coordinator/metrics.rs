@@ -4,6 +4,7 @@
 //! paths share).
 
 use crate::backend::CostModel;
+use crate::coordinator::batcher::SloPolicy;
 use crate::coordinator::engine::RequestResult;
 use crate::model::AdapterId;
 
@@ -153,6 +154,19 @@ pub struct ServeSummary {
     /// Per-shard rollup for tensor-parallel runs, ascending shard index.
     /// Empty when every request executed monolithically.
     pub per_shard: Vec<ShardUsage>,
+    /// Fraction of served requests that met their SLO class targets
+    /// (TTFT within `ttft_s`; TPOT within `tpot_s` when the session
+    /// generated ≥ 2 tokens). `1.0` when no SLO policy governed the run
+    /// — and for an empty result set (vacuously attained).
+    pub slo_attainment: f64,
+    /// Requests shed by SLO admission (never executed, not in the
+    /// per-request results).
+    pub shed: usize,
+    /// Requests served with a degraded (clamped) decode budget.
+    pub degraded: usize,
+    /// KV-cache bytes transferred prefill → decode across disaggregated
+    /// handoffs (0 for unified serving).
+    pub handoff_bytes: u64,
 }
 
 impl ServeSummary {
@@ -170,6 +184,23 @@ impl ServeSummary {
         results: &[RequestResult],
         batches: usize,
         cost: &CostModel,
+    ) -> ServeSummary {
+        ServeSummary::from_results_slo(results, batches, cost, None, 0, 0, 0)
+    }
+
+    /// [`ServeSummary::from_results`] plus the SLO/disaggregation
+    /// dimensions: per-class attainment measured against `policy` (when
+    /// one governed the run), and the shed/degraded/handoff counters the
+    /// serving loop accumulated (shed requests have no result rows — the
+    /// caller is the only witness, so it supplies the counts).
+    pub fn from_results_slo(
+        results: &[RequestResult],
+        batches: usize,
+        cost: &CostModel,
+        policy: Option<&SloPolicy>,
+        shed: usize,
+        degraded: usize,
+        handoff_bytes: u64,
     ) -> ServeSummary {
         let latency = LatencyStats::from_samples(results.iter().map(|r| r.latency_s).collect());
         let ttft = LatencyStats::from_samples(results.iter().map(|r| r.ttft_s).collect());
@@ -264,6 +295,24 @@ impl ServeSummary {
                 }
             })
             .collect();
+        // Attainment: a served request meets its SLO when its TTFT is
+        // within the class target and — for sessions that actually
+        // streamed (≥ 2 tokens) — its TPOT is too. Without a policy the
+        // run vacuously attains.
+        let slo_attainment = match policy {
+            None => 1.0,
+            Some(_) if results.is_empty() => 1.0,
+            Some(p) => {
+                let met = results
+                    .iter()
+                    .filter(|r| {
+                        let t = p.target(r.slo);
+                        r.ttft_s <= t.ttft_s && (r.gen_tokens < 2 || r.tpot_s <= t.tpot_s)
+                    })
+                    .count();
+                met as f64 / results.len() as f64
+            }
+        };
         ServeSummary {
             requests: results.len(),
             batches,
@@ -284,6 +333,10 @@ impl ServeSummary {
             adapter_ops: results.iter().map(|r| r.adapter_ops).sum(),
             by_adapter,
             per_shard,
+            slo_attainment,
+            shed,
+            degraded,
+            handoff_bytes,
         }
     }
 }
@@ -313,6 +366,9 @@ mod tests {
             kv_copy_energy_pj_per_token: 0.0,
             kv_evict_cycles_per_block: 0.0,
             kv_evict_energy_pj_per_block: 0.0,
+            handoff_bytes_per_token: 0.0,
+            handoff_bytes_per_s: crate::backend::HANDOFF_LINK_BYTES_PER_S,
+            handoff_latency_s: crate::backend::HANDOFF_LINK_LATENCY_S,
         }
     }
 
@@ -334,6 +390,8 @@ mod tests {
             ttft_s: 0.001,
             tpot_s: 0.0,
             adapter,
+            slo: crate::workload::SloClass::Standard,
+            shed: false,
             base_mults: 30 * tokens,
             base_reuses: 70 * tokens,
             adapter_ops: if adapter.is_some() { 10 * tokens } else { 0 },
@@ -578,6 +636,47 @@ mod tests {
         let empty = ServeSummary::from_results(&[], 0, &cost);
         assert_eq!(empty.prefix_hit_rate, 0.0);
         assert!(empty.prefix_hit_rate.is_finite());
+    }
+
+    #[test]
+    fn slo_attainment_measures_per_class_targets() {
+        use crate::workload::SloClass;
+        let cost = test_cost();
+        let mut policy = SloPolicy::default();
+        policy.interactive.ttft_s = 0.1;
+        policy.interactive.tpot_s = 0.01;
+        policy.batch.ttft_s = 10.0;
+        // Interactive request inside its targets; interactive request
+        // that blew TTFT; batch request far over the interactive target
+        // but inside its own.
+        let mut ok = result(0, None, 10);
+        ok.slo = SloClass::Interactive;
+        ok.ttft_s = 0.05;
+        ok.gen_tokens = 4;
+        ok.tpot_s = 0.005;
+        let mut late = result(1, None, 10);
+        late.slo = SloClass::Interactive;
+        late.ttft_s = 0.5;
+        let mut batch = result(2, None, 10);
+        batch.slo = SloClass::Batch;
+        batch.ttft_s = 5.0;
+        let rs = vec![ok, late, batch];
+        let s = ServeSummary::from_results_slo(&rs, 1, &cost, Some(&policy), 2, 1, 4096);
+        assert!((s.slo_attainment - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.degraded, 1);
+        assert_eq!(s.handoff_bytes, 4096);
+        // Without a policy the run vacuously attains and carries no
+        // overload counters.
+        let plain = ServeSummary::from_results(&rs, 1, &cost);
+        assert_eq!(plain.slo_attainment, 1.0);
+        assert_eq!(plain.shed, 0);
+        assert_eq!(plain.degraded, 0);
+        assert_eq!(plain.handoff_bytes, 0);
+        // Empty result set with a policy: vacuous attainment, not NaN.
+        let empty = ServeSummary::from_results_slo(&[], 0, &cost, Some(&policy), 0, 0, 0);
+        assert_eq!(empty.slo_attainment, 1.0);
+        assert!(empty.slo_attainment.is_finite());
     }
 
     #[test]

@@ -34,16 +34,33 @@
 //! sessions as their generated-token budgets exhaust, reporting
 //! TTFT/TPOT alongside the end-to-end latency percentiles.
 //!
+//! Serving is also **tier-aware**: [`Engine::serve_trace_disagg`]
+//! models a disaggregated fleet — dedicated prefill replicas running
+//! chunked prefill ([`crate::backend::ExecutionBackend::prefill_chunk`])
+//! hand opened sessions across a metered KV link to dedicated decode
+//! replicas — on the same deterministic virtual clock, with
+//! [`Engine::serve_trace_unified`] as the equal-hardware baseline; the
+//! live counterpart is [`Server::start_disagg_pool`]. Admission on both
+//! paths can be SLO-aware ([`BatchScheduler::take_ready_slo`]): priority
+//! classes with aging boost, deadline shedding, and degraded budgets
+//! under overload.
+//!
 //! Rust owns the event loop; Python never runs on this path. See
 //! `rust/DESIGN.md` for the `Server<B> → BatchScheduler → Engine<B>`
 //! layering diagram and the live-vs-trace invariants.
 
 pub mod batcher;
+pub mod disagg;
 pub mod engine;
 pub mod metrics;
 pub mod server;
 
-pub use batcher::{Batch, BatchPolicy, BatchScheduler, DynamicBatcher};
-pub use engine::{CostModel, Engine, RequestResult};
+pub use batcher::{
+    Batch, BatchPolicy, BatchScheduler, DynamicBatcher, SloAdmission, SloPolicy, SloTarget,
+};
+pub use disagg::DisaggOpts;
+pub use engine::{CostModel, DecodeServeOpts, Engine, RequestResult};
 pub use metrics::{AdapterUsage, LatencyStats, ServeSummary, ShardUsage};
-pub use server::{DecodeOpts, LiveRun, Server, ServerPool, ServerStats};
+pub use server::{
+    DecodeOpts, DisaggPool, DisaggPoolOpts, LiveRun, Server, ServerPool, ServerStats,
+};

@@ -30,7 +30,20 @@
 //!
 //! [`ServerPool`] ([`Server::start_pool`]) scales the same front-end
 //! across N replica workers — each with its own engine — using
-//! least-loaded dispatch with a round-robin tie-break.
+//! least-loaded dispatch with a round-robin tie-break. "Load" is the
+//! token-weighted work backlog ([`ServerStats::backlog`]): prompt plus
+//! generated-token budget of every unanswered request, so a replica
+//! holding a few deep decode sessions no longer beats one holding many
+//! trivial requests just because it has fewer of them.
+//!
+//! [`Server::start_disagg_pool`] builds the **disaggregated** topology
+//! instead: dedicated prefill workers pull from one shared request
+//! queue, run the prompt phase, and hand the opened session (its
+//! [`KvHandle`] plus first-token outcome) over a handoff channel to
+//! dedicated decode workers that drive the continuous-batching wave
+//! loop. TTFT is stamped on the prefill tier; handoff traffic is
+//! metered in [`ServerStats::handoff_bytes`]; SLO admission (shed /
+//! degrade) runs at the prefill boundary, where queue wait is known.
 //!
 //! **A shard group is one logical replica.** Tensor-parallel sharding
 //! lives *inside* the backend (`with_shards(n)` splits every projection
@@ -42,9 +55,9 @@
 //! [`ServerStats::shard_misses`] and aggregated into
 //! [`LiveRun::shard_misses`], mirroring the adapter-miss channel.
 
-use crate::backend::{CostModel, ExecutionBackend, PjrtBackend};
+use crate::backend::{CostModel, ExecutionBackend, KvHandle, PjrtBackend, StepOutcome};
 use crate::config::AcceleratorConfig;
-use crate::coordinator::batcher::{Batch, BatchPolicy, BatchScheduler};
+use crate::coordinator::batcher::{Batch, BatchPolicy, BatchScheduler, SloPolicy};
 use crate::coordinator::engine::{decode_budget, DecodeSession, Engine, RequestResult};
 use crate::coordinator::metrics::ServeSummary;
 use crate::workload::Request;
@@ -59,6 +72,33 @@ use std::time::{Duration, Instant};
 enum Msg {
     Submit(Request, mpsc::Sender<RequestResult>),
     Shutdown,
+}
+
+/// Token-weighted work estimate of one request: prompt tokens plus its
+/// generated-token ask (at least 1 — every session produces its prefill
+/// token). This is what [`ServerStats::backlog`] counts and what pool
+/// dispatch ranks replicas by; it intentionally uses the request's *own*
+/// `gen_tokens` (not the worker's resolved default) so submit-side adds
+/// and worker-side removes agree without knowing worker options.
+fn work_estimate(req: &Request) -> usize {
+    req.seq_len + req.gen_tokens.max(1) as usize
+}
+
+/// Least-loaded index over `loads`, scanning from `start` (the
+/// round-robin cursor) so exact ties rotate instead of pinning to
+/// replica 0. Strict `<` keeps the earliest-scanned minimum.
+fn pick_min_load(loads: &[usize], start: usize) -> usize {
+    let n = loads.len();
+    let mut best = start % n;
+    let mut best_load = loads[best];
+    for k in 1..n {
+        let i = (start + k) % n;
+        if loads[i] < best_load {
+            best = i;
+            best_load = loads[i];
+        }
+    }
+    best
 }
 
 /// Options for continuous-batching decode serving
@@ -123,6 +163,22 @@ pub struct ServerStats {
     /// [`crate::backend::ExecutionBackend::kv_misses`]; published on the
     /// same schedule as `adapter_misses`).
     pub kv_misses: AtomicUsize,
+    /// Token-weighted outstanding work: Σ `work_estimate` (prompt tokens
+    /// + generated-token ask) over submitted-but-unanswered requests.
+    /// This — not the request *count* — is what least-loaded dispatch
+    /// ranks replicas by: a replica holding one 512-token decode session
+    /// is busier than one holding three 8-token requests.
+    pub backlog: AtomicUsize,
+    /// Requests shed by SLO admission (answered with a marker result,
+    /// never executed). Only the disaggregated prefill tier sheds.
+    pub shed: AtomicUsize,
+    /// Requests whose generated-token budget was clamped to their SLO
+    /// class's degraded ask because they missed their TTFT target while
+    /// queued.
+    pub degraded: AtomicUsize,
+    /// KV bytes shipped prefill→decode across the tier link (zero unless
+    /// the pool runs disaggregated with a handoff regime).
+    pub handoff_bytes: AtomicUsize,
 }
 
 impl ServerStats {
@@ -252,6 +308,9 @@ impl<B: ExecutionBackend + 'static> Server<B> {
         // Stamp arrival on the epoch the worker's dispatch clock uses.
         req.arrival_s = self.epoch.elapsed().as_secs_f64();
         self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .backlog
+            .fetch_add(work_estimate(&req), Ordering::Relaxed);
         let (rtx, rrx) = mpsc::channel();
         let _ = self.tx.send(Msg::Submit(req, rtx));
         rrx
@@ -265,6 +324,12 @@ impl<B: ExecutionBackend + 'static> Server<B> {
     /// Requests submitted but not yet answered.
     pub fn in_flight(&self) -> usize {
         self.stats.in_flight()
+    }
+
+    /// Token-weighted outstanding work ([`ServerStats::backlog`]) — the
+    /// quantity pool dispatch balances.
+    pub fn load(&self) -> usize {
+        self.stats.backlog.load(Ordering::Relaxed)
     }
 
     /// The worker engine's cost model. Blocks until the engine finishes
@@ -409,22 +474,17 @@ impl<B: ExecutionBackend + 'static> ServerPool<B> {
         Ok(results)
     }
 
-    /// Submit to the least-loaded replica (fewest in-flight requests),
-    /// breaking ties round-robin so idle pools still rotate.
+    /// Submit to the least-loaded replica, breaking ties round-robin so
+    /// idle pools still rotate. Load is the token-weighted backlog
+    /// ([`Server::load`]), not the in-flight request count: counting
+    /// requests made a replica draining a few deep decode sessions look
+    /// idle next to one answering many short prompts, so decode-heavy
+    /// replicas kept winning ties and piling up wall-clock latency.
     pub fn submit(&self, req: Request) -> mpsc::Receiver<RequestResult> {
         let n = self.replicas.len();
         let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
-        let mut best = start;
-        let mut best_load = self.replicas[start].in_flight();
-        for k in 1..n {
-            let i = (start + k) % n;
-            let load = self.replicas[i].in_flight();
-            if load < best_load {
-                best = i;
-                best_load = load;
-            }
-        }
-        self.replicas[best].submit(req)
+        let loads: Vec<usize> = self.replicas.iter().map(|s| s.load()).collect();
+        self.replicas[pick_min_load(&loads, start)].submit(req)
     }
 
     /// Total batches dispatched across all replicas.
@@ -505,10 +565,12 @@ impl<B: ExecutionBackend + 'static> ServerPool<B> {
     }
 }
 
-/// Reply channels for queued requests, FIFO. The scheduler drains its
-/// entire pending set (in arrival order) on every closure, so batch
-/// results always map onto the front of this queue.
-type Waiters = VecDeque<(u64, mpsc::Sender<RequestResult>)>;
+/// Reply channels for queued requests, FIFO, each with the request's
+/// `work_estimate` so the backlog counter can be released exactly as
+/// added. The scheduler drains its entire pending set (in arrival order)
+/// on every closure, so batch results always map onto the front of this
+/// queue.
+type Waiters = VecDeque<(u64, usize, mpsc::Sender<RequestResult>)>;
 
 fn dispatch<B: ExecutionBackend>(
     engine: &Engine<B>,
@@ -538,7 +600,7 @@ fn dispatch<B: ExecutionBackend>(
         .kv_misses
         .store(engine.backend.kv_misses() as usize, Ordering::Relaxed);
     for res in results {
-        let (queued_id, tx) = waiters
+        let (queued_id, est, tx) = waiters
             .pop_front()
             .expect("every batched request has a queued waiter");
         debug_assert_eq!(queued_id, res.id, "batch order diverged from FIFO");
@@ -546,6 +608,7 @@ fn dispatch<B: ExecutionBackend>(
         // the counter visible to anyone who has received this result, so
         // post-serve snapshots (ServerPool::run) can never under-count.
         stats.completed.fetch_add(1, Ordering::Relaxed);
+        stats.backlog.fetch_sub(est, Ordering::Relaxed);
         let _ = tx.send(res);
     }
     Ok(())
@@ -565,7 +628,7 @@ impl<B: ExecutionBackend> WorkerState<B> {
     /// a drained backlog batches together instead of replaying its stale
     /// inter-arrival gaps as singleton deadline batches.
     fn admit(&mut self, req: Request, tx: mpsc::Sender<RequestResult>) -> Result<()> {
-        self.waiters.push_back((req.id, tx));
+        self.waiters.push_back((req.id, work_estimate(&req), tx));
         if let Some(b) = self.sched.admit(req) {
             dispatch(&self.engine, b, self.epoch, &mut self.waiters, &self.stats)?;
         }
@@ -694,7 +757,7 @@ where
     let _ = cost_tx.send(cost);
     let cap = policy.max_batch.min(engine.max_batch()).max(1);
     let mut pending: VecDeque<(Request, mpsc::Sender<RequestResult>)> = VecDeque::new();
-    let mut active: Vec<(DecodeSession, mpsc::Sender<RequestResult>)> = Vec::new();
+    let mut active: Vec<(DecodeSession, usize, mpsc::Sender<RequestResult>)> = Vec::new();
     let mut stopping = false;
 
     loop {
@@ -738,6 +801,7 @@ where
                 None => break,
             };
             let admit_s = epoch.elapsed().as_secs_f64();
+            let est = work_estimate(&req);
             let budget = decode_budget(&req, opts.default_gen);
             let (kv, out) = engine.backend.prefill(&req, budget)?;
             let computed = (kv.prompt_len - kv.cached_tokens) as u64;
@@ -749,13 +813,13 @@ where
             let mut s = DecodeSession::admit(kv, out, req.arrival_s, admit_s, &cost, 0);
             // First token completed at prefill return (wall clock).
             s.ttft_abs = Some(epoch.elapsed().as_secs_f64());
-            active.push((s, tx));
+            active.push((s, est, tx));
         }
         let batch_now = active.len();
         // 4. One decode step per running session (one "iteration batch").
         stats.batches.fetch_add(1, Ordering::Relaxed);
         let mut decode_ctxs: Vec<u64> = Vec::with_capacity(active.len());
-        for (s, _) in active.iter_mut() {
+        for (s, _, _) in active.iter_mut() {
             s.peak_batch = s.peak_batch.max(batch_now);
             if s.kv.done() {
                 // Budget-1 session: finished at prefill, retires below.
@@ -790,11 +854,12 @@ where
         let mut i = 0;
         while i < active.len() {
             if active[i].0.kv.done() {
-                let (mut s, tx) = active.swap_remove(i);
+                let (mut s, est, tx) = active.swap_remove(i);
                 s.finish_abs = Some(now);
                 // Count BEFORE sending (same visibility argument as the
                 // closed-batch dispatch path).
                 stats.completed.fetch_add(1, Ordering::Relaxed);
+                stats.backlog.fetch_sub(est, Ordering::Relaxed);
                 let _ = tx.send(s.into_result());
             } else {
                 i += 1;
@@ -803,7 +868,596 @@ where
     }
 }
 
+/// Options for a live disaggregated pool
+/// ([`Server::start_disagg_pool`]).
+#[derive(Clone, Copy, Debug)]
+pub struct DisaggPoolOpts {
+    /// Generated-token budget for requests whose `gen_tokens` is 0.
+    pub default_gen: u32,
+    /// SLO admission at the prefill boundary: a popped request that
+    /// already overshot its class's `max_wait_s` is shed (answered with
+    /// a marker result, [`RequestResult::shed`]); one that overshot its
+    /// TTFT target has its generated-token ask clamped to the class's
+    /// degraded budget. `None` serves strictly FIFO.
+    pub slo: Option<SloPolicy>,
+    /// Bytes of K/V state per context token shipped prefill→decode
+    /// (the [`CostModel::with_handoff_regime`] convention:
+    /// `2·n_layers·d_model·4`). Only meters [`ServerStats::handoff_bytes`]
+    /// — the live tiers move a [`KvHandle`] through a channel, so no
+    /// wall-clock transfer is simulated. 0 disables metering.
+    pub handoff_bytes_per_token: f64,
+}
+
+impl DisaggPoolOpts {
+    /// FIFO disaggregated serving with the given default budget and no
+    /// handoff metering.
+    pub fn new(default_gen: u32) -> DisaggPoolOpts {
+        DisaggPoolOpts {
+            default_gen,
+            slo: None,
+            handoff_bytes_per_token: 0.0,
+        }
+    }
+
+    /// Enable SLO admission at the prefill boundary.
+    pub fn with_slo(mut self, policy: SloPolicy) -> DisaggPoolOpts {
+        self.slo = Some(policy);
+        self
+    }
+
+    /// Meter handoff traffic at `bytes` per context token.
+    pub fn with_handoff(mut self, bytes: f64) -> DisaggPoolOpts {
+        self.handoff_bytes_per_token = bytes;
+        self
+    }
+}
+
+/// One opened session crossing the prefill→decode tier boundary.
+struct Handoff {
+    kv: KvHandle,
+    first: StepOutcome,
+    arrival_s: f64,
+    admit_s: f64,
+    /// Wall-clock stamp of first-token completion — TTFT belongs to the
+    /// prefill tier, not to whenever a decode worker picks the session
+    /// up.
+    ttft_abs: f64,
+    /// Submit-side `work_estimate`, released from the backlog counter
+    /// when the decode tier answers.
+    est: usize,
+    tx: mpsc::Sender<RequestResult>,
+}
+
+type PrefillJob = (Request, mpsc::Sender<RequestResult>);
+
+/// Marker result for a request shed by SLO admission before execution:
+/// identity and queue-wait fields are real, everything served-related is
+/// zero, and [`RequestResult::shed`] is set so aggregation excludes the
+/// row.
+fn shed_result(req: &Request, now: f64) -> RequestResult {
+    let wait = (now - req.arrival_s).max(0.0);
+    RequestResult {
+        id: req.id,
+        adapter: None,
+        slo: req.slo,
+        shed: true,
+        logits: Vec::new(),
+        tokens: 0,
+        queue_wait_s: wait,
+        exec_s: 0.0,
+        latency_s: wait,
+        dispatch_s: now,
+        batch_size: 0,
+        sim_cycles: 0,
+        sim_energy_j: 0.0,
+        gen_tokens: 0,
+        cached_tokens: 0,
+        ttft_s: 0.0,
+        tpot_s: 0.0,
+        base_mults: 0,
+        base_reuses: 0,
+        adapter_ops: 0,
+        per_shard: Vec::new(),
+    }
+}
+
+/// A live disaggregated prefill/decode pool ([`Server::start_disagg_pool`]).
+///
+/// Topology: `submit` pushes onto one shared request queue; `p` prefill
+/// workers (each owning its own engine) pop jobs, apply SLO admission,
+/// run the prompt phase, and send the opened session over the handoff
+/// channel; `d` decode workers (own engines too) pull handoffs into free
+/// session slots and drive the continuous-batching wave loop
+/// ([`ExecutionBackend::decode_steps`]) until each budget is exhausted.
+/// The shared queues make dispatch self-balancing — an idle worker pulls
+/// the next job — so there is no per-replica routing decision to get
+/// wrong. Shutdown cascades: closing the request queue ends the prefill
+/// workers, dropping the last handoff sender ends the decode workers
+/// once their sessions drain.
+pub struct DisaggPool<B: ExecutionBackend = PjrtBackend> {
+    job_tx: Option<mpsc::Sender<PrefillJob>>,
+    prefill_handles: Vec<std::thread::JoinHandle<Result<()>>>,
+    decode_handles: Vec<std::thread::JoinHandle<Result<()>>>,
+    epoch: Instant,
+    /// Pool-wide counters (one instance — the shared queues leave
+    /// nothing per-replica to attribute).
+    stats: Arc<ServerStats>,
+    /// SLO policy the pool was started with (for summary attainment).
+    slo: Option<SloPolicy>,
+    n_workers: usize,
+    cost_rx: Mutex<mpsc::Receiver<CostModel>>,
+    cost_cache: OnceLock<CostModel>,
+    _backend: PhantomData<fn() -> B>,
+}
+
+impl<B: ExecutionBackend + 'static> Server<B> {
+    /// Start a disaggregated pool: `p` prefill workers and `d` decode
+    /// workers, each with its own engine built by `make(i)` inside the
+    /// worker thread (prefill workers get `0..p`, decode workers
+    /// `p..p+d`). `policy.max_batch` caps each decode worker's running
+    /// batch.
+    pub fn start_disagg_pool<F>(
+        p: usize,
+        d: usize,
+        make: F,
+        policy: BatchPolicy,
+        opts: DisaggPoolOpts,
+    ) -> DisaggPool<B>
+    where
+        F: Fn(usize) -> Result<Engine<B>> + Send + Clone + 'static,
+    {
+        assert!(p > 0 && d > 0, "disaggregated pool needs both tiers");
+        let epoch = Instant::now();
+        let stats = Arc::new(ServerStats::default());
+        let (job_tx, job_rx) = mpsc::channel::<PrefillJob>();
+        let jobs = Arc::new(Mutex::new(job_rx));
+        let (handoff_tx, handoff_rx) = mpsc::channel::<Handoff>();
+        let handoffs = Arc::new(Mutex::new(handoff_rx));
+        let (cost_tx, cost_rx) = mpsc::channel::<CostModel>();
+        let prefill_handles = (0..p)
+            .map(|i| {
+                let make = make.clone();
+                let jobs = Arc::clone(&jobs);
+                let htx = handoff_tx.clone();
+                let st = Arc::clone(&stats);
+                let ctx = cost_tx.clone();
+                std::thread::spawn(move || {
+                    disagg_prefill_worker(move || make(i), opts, epoch, st, ctx, jobs, htx)
+                })
+            })
+            .collect();
+        // The clones above are the only live handoff senders once this
+        // original drops, so decode workers observe disconnect exactly
+        // when the prefill tier has fully exited.
+        drop(handoff_tx);
+        let decode_handles = (0..d)
+            .map(|i| {
+                let make = make.clone();
+                let hrx = Arc::clone(&handoffs);
+                let st = Arc::clone(&stats);
+                let ctx = cost_tx.clone();
+                std::thread::spawn(move || {
+                    disagg_decode_worker(move || make(p + i), policy, epoch, st, ctx, hrx)
+                })
+            })
+            .collect();
+        DisaggPool {
+            job_tx: Some(job_tx),
+            prefill_handles,
+            decode_handles,
+            epoch,
+            stats,
+            slo: opts.slo,
+            n_workers: p + d,
+            cost_rx: Mutex::new(cost_rx),
+            cost_cache: OnceLock::new(),
+            _backend: PhantomData,
+        }
+    }
+}
+
+impl<B: ExecutionBackend + 'static> DisaggPool<B> {
+    /// Submit a request; the result arrives on the returned channel
+    /// (a shed marker if SLO admission drops it).
+    pub fn submit(&self, mut req: Request) -> mpsc::Receiver<RequestResult> {
+        req.arrival_s = self.epoch.elapsed().as_secs_f64();
+        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .backlog
+            .fetch_add(work_estimate(&req), Ordering::Relaxed);
+        let (rtx, rrx) = mpsc::channel();
+        if let Some(tx) = &self.job_tx {
+            let _ = tx.send((req, rtx));
+        }
+        rrx
+    }
+
+    /// Pool-wide live counters.
+    pub fn stats(&self) -> &ServerStats {
+        &self.stats
+    }
+
+    /// Cost model of the worker engines (identical by construction).
+    /// Blocks until EVERY worker — both tiers — reports; `None` if any
+    /// worker failed before reporting (its error surfaces through
+    /// `shutdown()`).
+    pub fn cost(&self) -> Option<CostModel> {
+        if let Some(c) = self.cost_cache.get() {
+            return Some(*c);
+        }
+        let rx = self.cost_rx.lock().ok()?;
+        if let Some(c) = self.cost_cache.get() {
+            return Some(*c);
+        }
+        let mut first = None;
+        for _ in 0..self.n_workers {
+            match rx.recv() {
+                Ok(c) => {
+                    first.get_or_insert(c);
+                }
+                Err(_) => return None,
+            }
+        }
+        let c = first?;
+        let _ = self.cost_cache.set(c);
+        Some(c)
+    }
+
+    /// Drive a whole trace through the pool (same contract as
+    /// [`ServerPool::serve`]): burst-submit or arrival-paced, then block
+    /// for every result in submit order.
+    pub fn serve(&self, trace: Vec<Request>, pace: bool) -> Result<Vec<RequestResult>> {
+        let t0 = Instant::now();
+        let mut rxs = Vec::with_capacity(trace.len());
+        for req in trace {
+            if pace {
+                let target = Duration::from_secs_f64(req.arrival_s.max(0.0));
+                if let Some(sleep) = target.checked_sub(t0.elapsed()) {
+                    std::thread::sleep(sleep);
+                }
+            }
+            rxs.push(self.submit(req));
+        }
+        let mut results = Vec::with_capacity(rxs.len());
+        for rx in rxs {
+            results.push(
+                rx.recv()
+                    .map_err(|_| anyhow::anyhow!("live worker dropped a request"))?,
+            );
+        }
+        Ok(results)
+    }
+
+    /// One-shot live run: wait for every worker engine, drive the trace,
+    /// shut the pool down, and aggregate — shed markers are excluded
+    /// from the summary (counted as shed) but kept in `results` so
+    /// callers see every answer.
+    pub fn run(self, trace: Vec<Request>, pace: bool) -> Result<LiveRun> {
+        let opts_slo = self.slo;
+        let cost = self.cost();
+        let served = match cost {
+            Some(_) => self.serve(trace, pace),
+            None => Err(anyhow::anyhow!(
+                "live worker exited before reporting its cost model"
+            )),
+        };
+        let stats = Arc::clone(&self.stats);
+        let stopped = self.shutdown();
+        if let Err(worker_err) = stopped {
+            return Err(worker_err);
+        }
+        let results = served?;
+        let cost = cost.expect("serve() succeeded, so every worker reported its cost");
+        let load = |c: &AtomicUsize| c.load(Ordering::Relaxed);
+        let served_rows: Vec<RequestResult> =
+            results.iter().filter(|r| !r.shed).cloned().collect();
+        Ok(LiveRun {
+            summary: ServeSummary::from_results_slo(
+                &served_rows,
+                load(&stats.batches),
+                &cost,
+                opts_slo.as_ref(),
+                load(&stats.shed),
+                load(&stats.degraded),
+                load(&stats.handoff_bytes) as u64,
+            ),
+            results,
+            replica_stats: vec![(load(&stats.batches), load(&stats.completed))],
+            adapter_misses: load(&stats.adapter_misses) as u64,
+            shard_misses: load(&stats.shard_misses) as u64,
+            kv_misses: load(&stats.kv_misses) as u64,
+        })
+    }
+
+    /// Stop both tiers and propagate the first worker error: close the
+    /// request queue (prefill workers drain and exit, dropping their
+    /// handoff senders), then join the decode workers (they drain
+    /// remaining sessions and exit on disconnect).
+    pub fn shutdown(mut self) -> Result<()> {
+        self.job_tx.take();
+        let mut first_err = None;
+        for h in self
+            .prefill_handles
+            .drain(..)
+            .chain(self.decode_handles.drain(..))
+        {
+            match h.join() {
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    first_err.get_or_insert(anyhow::anyhow!("worker panicked"));
+                }
+                Ok(Ok(())) => {}
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl<B: ExecutionBackend> Drop for DisaggPool<B> {
+    fn drop(&mut self) {
+        self.job_tx.take();
+        for h in self
+            .prefill_handles
+            .drain(..)
+            .chain(self.decode_handles.drain(..))
+        {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Prefill-tier worker: pop jobs from the shared queue, apply SLO
+/// admission (queue wait is fully known here — this is the only point
+/// where shed/degrade decisions can be made honestly on the live path),
+/// run the prompt phase, and hand the opened session to the decode tier.
+fn disagg_prefill_worker<B: ExecutionBackend, F>(
+    make: F,
+    opts: DisaggPoolOpts,
+    epoch: Instant,
+    stats: Arc<ServerStats>,
+    cost_tx: mpsc::Sender<CostModel>,
+    jobs: Arc<Mutex<mpsc::Receiver<PrefillJob>>>,
+    handoff_tx: mpsc::Sender<Handoff>,
+) -> Result<()>
+where
+    F: FnOnce() -> Result<Engine<B>>,
+{
+    let engine = make()?;
+    let cost = *engine.cost();
+    let _ = cost_tx.send(cost);
+    loop {
+        // Holding the lock across the blocking recv is the shared-queue
+        // idiom: exactly one idle worker waits at a time; the others
+        // queue on the mutex and take the next job.
+        let job = {
+            let rx = jobs.lock().expect("job queue lock poisoned");
+            rx.recv()
+        };
+        let (mut req, tx) = match job {
+            Ok(j) => j,
+            Err(_) => return Ok(()), // queue closed: tier drains out
+        };
+        let est = work_estimate(&req);
+        let now = epoch.elapsed().as_secs_f64();
+        if let Some(policy) = &opts.slo {
+            let target = policy.target(req.slo);
+            let wait = now - req.arrival_s;
+            if wait > target.max_wait_s {
+                stats.shed.fetch_add(1, Ordering::Relaxed);
+                stats.completed.fetch_add(1, Ordering::Relaxed);
+                stats.backlog.fetch_sub(est, Ordering::Relaxed);
+                let _ = tx.send(shed_result(&req, now));
+                continue;
+            }
+            if wait > target.ttft_s
+                && target.degrade_gen > 0
+                && decode_budget(&req, opts.default_gen) > target.degrade_gen
+            {
+                req.gen_tokens = target.degrade_gen;
+                stats.degraded.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let budget = decode_budget(&req, opts.default_gen);
+        let (kv, first) = engine.backend.prefill(&req, budget)?;
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        if opts.handoff_bytes_per_token > 0.0 {
+            let bytes = (opts.handoff_bytes_per_token * kv.context_len() as f64) as usize;
+            stats.handoff_bytes.fetch_add(bytes, Ordering::Relaxed);
+        }
+        stats
+            .adapter_misses
+            .store(engine.backend.adapter_misses() as usize, Ordering::Relaxed);
+        stats
+            .shard_misses
+            .store(engine.backend.shard_misses() as usize, Ordering::Relaxed);
+        stats
+            .kv_misses
+            .store(engine.backend.kv_misses() as usize, Ordering::Relaxed);
+        let handoff = Handoff {
+            kv,
+            first,
+            arrival_s: req.arrival_s,
+            admit_s: now,
+            ttft_abs: epoch.elapsed().as_secs_f64(),
+            est,
+            tx,
+        };
+        if handoff_tx.send(handoff).is_err() {
+            // Decode tier gone (pool torn down mid-request).
+            return Ok(());
+        }
+    }
+}
+
+/// Decode-tier worker: pull handed-off sessions from the shared channel
+/// into free slots, then drive the continuous-batching wave loop
+/// ([`ExecutionBackend::decode_steps`]) — the same session bookkeeping
+/// as every other decode path ([`DecodeSession`]).
+fn disagg_decode_worker<B: ExecutionBackend, F>(
+    make: F,
+    policy: BatchPolicy,
+    epoch: Instant,
+    stats: Arc<ServerStats>,
+    cost_tx: mpsc::Sender<CostModel>,
+    handoffs: Arc<Mutex<mpsc::Receiver<Handoff>>>,
+) -> Result<()>
+where
+    F: FnOnce() -> Result<Engine<B>>,
+{
+    let engine = make()?;
+    let cost = *engine.cost();
+    let _ = cost_tx.send(cost);
+    let cap = policy.max_batch.min(engine.max_batch()).max(1);
+    let mut active: Vec<(DecodeSession, usize, mpsc::Sender<RequestResult>)> = Vec::new();
+    loop {
+        // 1. Fill free slots from the shared handoff channel. Block (in
+        //    short slices, so the mutex stays fair across decode
+        //    workers) only when fully idle.
+        let mut disconnected = false;
+        while active.len() < cap {
+            let got = {
+                let rx = handoffs.lock().expect("handoff channel lock poisoned");
+                if active.is_empty() {
+                    rx.recv_timeout(Duration::from_millis(1))
+                } else {
+                    match rx.try_recv() {
+                        Ok(h) => Ok(h),
+                        Err(mpsc::TryRecvError::Empty) => Err(mpsc::RecvTimeoutError::Timeout),
+                        Err(mpsc::TryRecvError::Disconnected) => {
+                            Err(mpsc::RecvTimeoutError::Disconnected)
+                        }
+                    }
+                }
+            };
+            match got {
+                Ok(h) => {
+                    let mut s =
+                        DecodeSession::admit(h.kv, h.first, h.arrival_s, h.admit_s, &cost, 0);
+                    s.ttft_abs = Some(h.ttft_abs);
+                    active.push((s, h.est, h.tx));
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        if active.is_empty() {
+            if disconnected {
+                return Ok(()); // prefill tier gone and nothing left to serve
+            }
+            continue;
+        }
+        // 2. One wave over every unfinished session, through the batch
+        //    decode API.
+        let batch_now = active.len();
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        let mut decode_ctxs: Vec<u64> = Vec::new();
+        {
+            let mut stepping: Vec<&mut DecodeSession> = active
+                .iter_mut()
+                .map(|(s, _, _)| s)
+                .filter(|s| !s.kv.done())
+                .collect();
+            for s in stepping.iter_mut() {
+                s.peak_batch = s.peak_batch.max(batch_now);
+                decode_ctxs.push(s.kv.context_len() as u64);
+            }
+            let kv_refs: Vec<&mut KvHandle> = stepping.iter_mut().map(|s| &mut s.kv).collect();
+            let outs = engine.backend.decode_steps(kv_refs)?;
+            for ((s, ctx), out) in stepping.iter_mut().zip(&decode_ctxs).zip(outs) {
+                s.record_step(*ctx, out, &cost);
+            }
+        }
+        // 3. Retire finished sessions and answer their waiters.
+        let now = epoch.elapsed().as_secs_f64();
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].0.kv.done() {
+                let (mut s, est, tx) = active.swap_remove(i);
+                s.finish_abs = Some(now);
+                stats.completed.fetch_add(1, Ordering::Relaxed);
+                stats.backlog.fetch_sub(est, Ordering::Relaxed);
+                let _ = tx.send(s.into_result());
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Dataset;
+    use crate::workload::SloClass;
+
+    fn req(id: u64, seq_len: usize, gen: u32) -> Request {
+        Request {
+            id,
+            dataset: Dataset::Imdb,
+            arrival_s: 0.0,
+            seq_len,
+            gen_tokens: gen,
+            adapter: None,
+            prefix: None,
+            slo: SloClass::Standard,
+        }
+    }
+
+    #[test]
+    fn work_estimate_weighs_prompt_and_decode_budget() {
+        assert_eq!(work_estimate(&req(0, 8, 64)), 72);
+        // gen_tokens == 0 still counts the guaranteed prefill token.
+        assert_eq!(work_estimate(&req(1, 8, 0)), 9);
+    }
+
+    /// Regression for least-loaded dispatch: ranking replicas by
+    /// in-flight request COUNT let a replica draining one deep decode
+    /// session (huge remaining work) win ties against a replica holding
+    /// several trivial requests. Token-weighted backlog inverts that
+    /// choice.
+    #[test]
+    fn dispatch_ranks_by_token_backlog_not_request_count() {
+        // Replica 0: one request, but a 4+512-token decode session.
+        // Replica 1: three requests of 8+1 tokens each.
+        let in_flight = [1usize, 3];
+        let backlog = [work_estimate(&req(0, 4, 512)), 3 * work_estimate(&req(1, 8, 1))];
+        // The old rule (request count) picks the decode-heavy replica…
+        assert_eq!(pick_min_load(&in_flight, 0), 0);
+        // …the work-aware rule routes away from it.
+        assert_eq!(pick_min_load(&backlog, 0), 1);
+    }
+
+    #[test]
+    fn pick_min_load_rotates_ties_from_round_robin_cursor() {
+        let loads = [5usize, 5, 5];
+        assert_eq!(pick_min_load(&loads, 0), 0);
+        assert_eq!(pick_min_load(&loads, 1), 1);
+        assert_eq!(pick_min_load(&loads, 2), 2);
+        assert_eq!(pick_min_load(&loads, 4), 1); // cursor wraps
+        // Strict minimum always wins regardless of cursor.
+        assert_eq!(pick_min_load(&[7, 2, 7], 2), 1);
+    }
+
+    #[test]
+    fn backlog_counter_tracks_submit_and_completion() {
+        let stats = ServerStats::default();
+        stats.backlog.fetch_add(40, Ordering::Relaxed);
+        stats.backlog.fetch_add(9, Ordering::Relaxed);
+        stats.backlog.fetch_sub(40, Ordering::Relaxed);
+        assert_eq!(stats.backlog.load(Ordering::Relaxed), 9);
+    }
+}
+
 // Artifact-free coverage lives in rust/tests/live_server.rs (sim and
 // functional backends: closed-batch regressions plus the decode
-// continuous-batching sessions); PJRT coverage in
-// rust/tests/integration_coordinator.rs (requires built artifacts).
+// continuous-batching sessions, and the disaggregated pool); PJRT
+// coverage in rust/tests/integration_coordinator.rs (requires built
+// artifacts).

@@ -15,7 +15,7 @@
 
 use axllm::backend::{ExecutionBackend, FunctionalBackend, PjrtBackend, SimBackend};
 use axllm::config::{table1_benchmarks, AcceleratorConfig, Dataset, ModelConfig};
-use axllm::coordinator::{BatchPolicy, Engine};
+use axllm::coordinator::{BatchPolicy, DecodeServeOpts, DisaggOpts, Engine, SloPolicy};
 use axllm::model::Model;
 use axllm::report::{self, RunCtx};
 use axllm::sim::{Accelerator, LaneModel};
@@ -28,7 +28,7 @@ mod cli {
     /// Flags that never take a value. Without this list, `--csv fig1`
     /// would greedily swallow `fig1` as the flag's value and lose the
     /// positional experiment name.
-    const BOOL_FLAGS: &[&str] = &["csv", "baseline", "sliced", "live", "decode"];
+    const BOOL_FLAGS: &[&str] = &["csv", "baseline", "sliced", "live", "decode", "disagg", "slo"];
 
     /// Minimal flag parser: positionals plus `--key value` / `--flag`.
     pub struct Args {
@@ -111,6 +111,10 @@ USAGE:
               [--live] [--replicas N] [--decode] [--gen-tokens N]
               [--adapters N] [--adapter-rank R] [--shards N]
               [--kv-blocks N] [--block-size B] [--prefix-groups K]
+              [--disagg] [--prefill-replicas P] [--decode-replicas D]
+              [--chunk-tokens C] [--slo]
+              [--diurnal AMP] [--flash-crowd MULT] [--heavy-tails SIGMA]
+              [--abusive-tenants FRAC]
       backends:
         sim         cycle/energy attribution only — no logits, no artifacts
         functional  bit-exact in-process reuse-datapath execution, no artifacts
@@ -144,6 +148,27 @@ USAGE:
       (default 4 when the cache is on) shapes the trace into K session
       groups with shared prefixes. pjrt has no KV surface and reports
       the misses.
+      --disagg (decode only) serves on a disaggregated fleet: P dedicated
+      prefill replicas (--prefill-replicas, default 1) run chunked
+      prefill and hand each opened session's KV state across a metered
+      tier link to D dedicated decode replicas (--decode-replicas,
+      default 1). Trace mode runs the deterministic two-tier clock
+      model; --live runs real prefill/decode worker threads with an
+      in-process handoff channel. The summary adds the handoff bytes.
+      --chunk-tokens C (decode only) slices every prompt into C-token
+      prefill chunks interleaved with decode iterations, so no
+      iteration stalls behind a whole long prompt (0 = monolithic;
+      results are bit-identical either way).
+      --slo (decode only) admits through the default SLO policy —
+      interactive/standard/batch classes with aging boost, deadline
+      shedding, and degraded budgets under overload — and shapes the
+      trace into a mixed-class population; the summary reports
+      attainment and the shed/degraded counts.
+      hostile-traffic scenarios (composable trace shapers):
+        --diurnal AMP        sinusoidal arrival rate, amplitude in [0,1]
+        --flash-crowd MULT   a MULTx arrival burst over a quarter of the trace
+        --heavy-tails SIGMA  lognormal prompt/decode lengths at sigma SIGMA
+        --abusive-tenants F  fraction F of requests with 4x-inflated budgets
       examples:
         axllm serve --backend sim --requests 64 --model tiny
         axllm serve --backend functional --requests 16 --dataset squad
@@ -157,6 +182,10 @@ USAGE:
         axllm serve --backend functional --decode --shards 2
         axllm serve --decode --kv-blocks 64 --backend functional
         axllm serve --decode --kv-blocks 32 --block-size 8 --backend sim
+        axllm serve --decode --disagg --prefill-replicas 2 --decode-replicas 2
+        axllm serve --decode --disagg --chunk-tokens 32 --flash-crowd 8 --backend sim
+        axllm serve --decode --slo --heavy-tails 1.5 --backend sim
+        axllm serve --decode --disagg --live --backend functional
   axllm info [--artifacts DIR]
 ";
 
@@ -350,6 +379,20 @@ fn print_summary(s: &axllm::coordinator::ServeSummary) {
             s.prefix_hit_rate * 100.0
         );
     }
+    if s.shed + s.degraded > 0 || s.slo_attainment < 1.0 {
+        println!(
+            "slo: {:.1}% attainment, {} shed, {} degraded",
+            s.slo_attainment * 100.0,
+            s.shed,
+            s.degraded
+        );
+    }
+    if s.handoff_bytes > 0 {
+        println!(
+            "disagg handoff: {} KV bytes across the prefill→decode link",
+            count(s.handoff_bytes)
+        );
+    }
     // Per-shard rollup — present only for tensor-parallel runs.
     if !s.per_shard.is_empty() {
         let total_ops: u64 = s
@@ -424,6 +467,27 @@ struct ServeOpts {
     block_size: usize,
     /// Shared-prefix session groups shaping the trace; 0 = untagged.
     prefix_groups: u32,
+    /// Disaggregated prefill/decode serving (decode only).
+    disagg: bool,
+    /// Prefill-tier replicas when disaggregated.
+    prefill_replicas: usize,
+    /// Decode-tier replicas when disaggregated.
+    decode_replicas: usize,
+    /// Chunked-prefill token budget per iteration; 0 = monolithic.
+    chunk_tokens: usize,
+    /// Admit through the default SLO policy (shed/degrade/attainment).
+    slo: bool,
+    /// KV bytes per context token billed to disaggregated handoffs
+    /// (0 = unmetered; set from the served model's K/V geometry).
+    handoff_bpt: f64,
+    /// Diurnal arrival-rate amplitude in [0, 1]; 0 = flat arrivals.
+    diurnal: f64,
+    /// Flash-crowd arrival-rate multiplier; 0 = no burst.
+    flash_crowd: f64,
+    /// Lognormal sigma for heavy-tailed lengths; 0 = dataset defaults.
+    heavy_tails: f64,
+    /// Fraction of requests from budget-inflating tenants; 0 = none.
+    abusive: f64,
 }
 
 impl ServeOpts {
@@ -436,6 +500,24 @@ impl ServeOpts {
             // prompt prefixes — the traffic shape prefix caching pays
             // off on.
             gen = gen.with_shared_prefixes(self.prefix_groups, 4);
+        }
+        // Hostile-traffic shapers, scaled to the trace's nominal span so
+        // the scenarios stay meaningful at any --requests/--rate combo.
+        let span = self.n as f64 / self.rate.max(1.0);
+        if self.diurnal > 0.0 {
+            gen = gen.with_diurnal((span / 2.0).max(1e-3), self.diurnal);
+        }
+        if self.flash_crowd > 0.0 {
+            gen = gen.with_flash_crowd(span * 0.25, (span * 0.25).max(1e-3), self.flash_crowd);
+        }
+        if self.heavy_tails > 0.0 {
+            gen = gen.with_heavy_tails(self.heavy_tails, self.heavy_tails);
+        }
+        if self.abusive > 0.0 {
+            gen = gen.with_abusive_tenants(self.abusive, 4.0);
+        }
+        if self.slo {
+            gen = gen.with_slo_mix(0.25, 0.25);
         }
         if self.decode {
             gen.take_decode(self.n, (self.gen_tokens > 0).then_some(self.gen_tokens))
@@ -451,10 +533,28 @@ impl ServeOpts {
 fn run_serve<B: ExecutionBackend>(engine: &Engine<B>, opts: &ServeOpts) -> Result<(), String> {
     print_cost(engine.backend.name(), engine.cost());
     let trace = opts.trace();
-    let served = if opts.decode {
+    let served = if opts.disagg {
+        // Deterministic two-tier fleet on the virtual clock; take_decode
+        // stamps every budget, so default_gen 1 is never consulted.
+        let mut dopts = DisaggOpts::new(opts.prefill_replicas, opts.decode_replicas, 1)
+            .with_chunking(opts.chunk_tokens)
+            .with_handoff(opts.handoff_bpt);
+        if opts.slo {
+            dopts = dopts.with_slo(SloPolicy::default());
+        }
+        println!(
+            "disagg: {} prefill + {} decode replicas, chunk {} tokens",
+            opts.prefill_replicas, opts.decode_replicas, opts.chunk_tokens
+        );
+        engine.serve_trace_disagg(trace, opts.policy, dopts)
+    } else if opts.decode {
         // take_decode stamps every request's budget, so the fallback
         // default is never consulted; 1 keeps it well-formed.
-        engine.serve_trace_decode(trace, opts.policy, 1)
+        let mut dopts = DecodeServeOpts::new(1).with_chunking(opts.chunk_tokens);
+        if opts.slo {
+            dopts = dopts.with_slo(SloPolicy::default());
+        }
+        engine.serve_trace_decode_opts(trace, opts.policy, dopts)
     } else {
         engine.serve_trace(trace, opts.policy)
     };
@@ -541,6 +641,46 @@ where
     Ok(())
 }
 
+/// Live disaggregated serving: dedicated prefill and decode worker
+/// threads joined by an in-process KV-handoff channel, fed the same
+/// paced trace `run_live` uses.
+fn run_live_disagg<B, F>(backend: &str, make: F, opts: &ServeOpts) -> Result<(), String>
+where
+    B: ExecutionBackend + 'static,
+    F: Fn(usize) -> axllm::Result<Engine<B>> + Send + Clone + 'static,
+{
+    use axllm::coordinator::{DisaggPoolOpts, Server};
+
+    let trace = opts.trace();
+    let mut dopts = DisaggPoolOpts::new(1).with_handoff(opts.handoff_bpt);
+    if opts.slo {
+        dopts = dopts.with_slo(SloPolicy::default());
+    }
+    let pool = Server::start_disagg_pool(
+        opts.prefill_replicas,
+        opts.decode_replicas,
+        make,
+        opts.policy,
+        dopts,
+    );
+    if let Some(cost) = pool.cost() {
+        print_cost(backend, &cost);
+        println!(
+            "live disagg: {} prefill + {} decode replicas, arrivals paced at {:.0} req/s",
+            opts.prefill_replicas, opts.decode_replicas, opts.rate
+        );
+    }
+    let run = pool.run(trace, true).map_err(|e| format!("{e:#}"))?;
+    print_summary(&run.summary);
+    if run.adapter_misses > 0 {
+        println!("adapter misses (served base-only): {}", run.adapter_misses);
+    }
+    if run.kv_misses > 0 {
+        println!("kv misses (served without prefix reuse): {}", run.kv_misses);
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &cli::Args) -> Result<(), String> {
     // Default 7 keeps the historical `axllm serve` trace (earlier
     // versions hardcoded trace seed 7), so recorded outputs stay
@@ -567,6 +707,17 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
         // A prefix cache without shared-prefix traffic never hits:
         // tagging defaults on alongside the cache.
         prefix_groups: args.get("prefix-groups", if kv_blocks > 0 { 4u32 } else { 0u32 })?,
+        disagg: args.get_bool("disagg"),
+        prefill_replicas: args.get("prefill-replicas", 1usize)?,
+        decode_replicas: args.get("decode-replicas", 1usize)?,
+        chunk_tokens: args.get("chunk-tokens", 0usize)?,
+        slo: args.get_bool("slo"),
+        // Filled per-backend from the served model's K/V geometry.
+        handoff_bpt: 0.0,
+        diurnal: args.get("diurnal", 0.0f64)?,
+        flash_crowd: args.get("flash-crowd", 0.0f64)?,
+        heavy_tails: args.get("heavy-tails", 0.0f64)?,
+        abusive: args.get("abusive-tenants", 0.0f64)?,
     };
     if opts.gen_tokens > 0 && !opts.decode {
         return Err("--gen-tokens needs --decode".into());
@@ -592,9 +743,35 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
     if opts.replicas == 0 {
         return Err("--replicas must be ≥ 1".into());
     }
+    if opts.disagg && !opts.decode {
+        return Err("--disagg needs --decode (prefill/decode tiers are a decode-session split)".into());
+    }
+    if !opts.disagg
+        && (args.flag("prefill-replicas").is_some() || args.flag("decode-replicas").is_some())
+    {
+        return Err("--prefill-replicas/--decode-replicas need --disagg".into());
+    }
+    if opts.prefill_replicas == 0 || opts.decode_replicas == 0 {
+        return Err("--prefill-replicas and --decode-replicas must be ≥ 1".into());
+    }
+    if opts.chunk_tokens > 0 && !opts.decode {
+        return Err("--chunk-tokens needs --decode (chunked prefill feeds decode sessions)".into());
+    }
+    if opts.slo && !opts.decode {
+        return Err("--slo needs --decode (targets are TTFT/TPOT deadlines)".into());
+    }
+    if !(0.0..=1.0).contains(&opts.diurnal) {
+        return Err("--diurnal amplitude must be in [0, 1]".into());
+    }
+    if !(0.0..=1.0).contains(&opts.abusive) {
+        return Err("--abusive-tenants fraction must be in [0, 1]".into());
+    }
     let live = args.get_bool("live");
     if !live && opts.replicas > 1 {
         return Err("--replicas needs --live (trace serving is single-engine)".into());
+    }
+    if opts.disagg && opts.replicas > 1 {
+        return Err("--replicas conflicts with --disagg (size the tiers instead)".into());
     }
     let acc_cfg = AcceleratorConfig::paper();
     let backend = args.flag("backend").unwrap_or("pjrt");
@@ -602,6 +779,12 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
         "sim" => {
             let name = args.flag("model").unwrap_or("tiny");
             let model_cfg = model_by_name(name).ok_or_else(|| format!("unknown model: {name}"))?;
+            // Disaggregated handoffs ship 2·n_layers·d_model f32 K/V
+            // rows per context token (the with_handoff_regime geometry).
+            let opts = ServeOpts {
+                handoff_bpt: (2 * model_cfg.n_layers * model_cfg.d_model * 4) as f64,
+                ..opts
+            };
             let (n_adapters, rank) = (opts.adapters as usize, opts.adapter_rank);
             let shards = opts.shards;
             let (kv_blocks, block_size) = (opts.kv_blocks, opts.block_size);
@@ -625,7 +808,11 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
                         })
                     })
                 };
-                run_live("sim", make, &opts)
+                if opts.disagg {
+                    run_live_disagg("sim", make, &opts)
+                } else {
+                    run_live("sim", make, &opts)
+                }
             } else {
                 let mut b = SimBackend::new(model_cfg, acc_cfg)
                     .map_err(|e| format!("{e:#}"))?
@@ -640,6 +827,10 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
         "functional" => {
             let name = args.flag("model").unwrap_or("tiny");
             let model_cfg = model_by_name(name).ok_or_else(|| format!("unknown model: {name}"))?;
+            let opts = ServeOpts {
+                handoff_bpt: (2 * model_cfg.n_layers * model_cfg.d_model * 4) as f64,
+                ..opts
+            };
             let seed = opts.seed;
             let (n_adapters, rank) = (opts.adapters as usize, opts.adapter_rank);
             let shards = opts.shards;
@@ -655,7 +846,11 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
                         })
                     })
                 };
-                run_live("functional", make, &opts)
+                if opts.disagg {
+                    run_live_disagg("functional", make, &opts)
+                } else {
+                    run_live("functional", make, &opts)
+                }
             } else {
                 let mut b = FunctionalBackend::new(model_cfg, acc_cfg, seed)
                     .map_err(|e| format!("{e:#}"))?
@@ -708,7 +903,11 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
                         })
                     })
                 };
-                run_live("pjrt", make, &opts)
+                if opts.disagg {
+                    run_live_disagg("pjrt", make, &opts)
+                } else {
+                    run_live("pjrt", make, &opts)
+                }
             } else {
                 let mut b = PjrtBackend::load(&dir, acc_cfg)
                     .map_err(|e| format!("{e:#}"))?
@@ -937,6 +1136,41 @@ mod tests {
         let b = Args::parse(&argv(&["serve", "--decode", "--backend", "sim"])).unwrap();
         assert_eq!(b.get("kv-blocks", 0usize).unwrap(), 0);
         assert_eq!(b.get("block-size", 16usize).unwrap(), 16);
+    }
+
+    #[test]
+    fn disagg_flags_compose_with_decode() {
+        let a = Args::parse(&argv(&[
+            "serve",
+            "--decode",
+            "--disagg",
+            "--prefill-replicas",
+            "2",
+            "--decode-replicas",
+            "3",
+            "--chunk-tokens",
+            "32",
+            "--slo",
+            "--flash-crowd",
+            "8",
+            "--backend",
+            "sim",
+        ]))
+        .unwrap();
+        assert!(a.get_bool("decode"));
+        assert!(a.get_bool("disagg"));
+        assert!(a.get_bool("slo"));
+        assert_eq!(a.get("prefill-replicas", 1usize).unwrap(), 2);
+        assert_eq!(a.get("decode-replicas", 1usize).unwrap(), 3);
+        assert_eq!(a.get("chunk-tokens", 0usize).unwrap(), 32);
+        assert_eq!(a.get("flash-crowd", 0.0f64).unwrap(), 8.0);
+        assert_eq!(a.flag("backend"), Some("sim"));
+        assert_eq!(a.positional, vec!["serve"]);
+        // Defaults: unified pool, monolithic prefill, no SLO policy.
+        let b = Args::parse(&argv(&["serve", "--decode", "--backend", "sim"])).unwrap();
+        assert!(!b.get_bool("disagg"));
+        assert!(!b.get_bool("slo"));
+        assert_eq!(b.get("chunk-tokens", 0usize).unwrap(), 0);
     }
 
     #[test]

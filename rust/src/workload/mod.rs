@@ -42,6 +42,27 @@ pub struct Request {
     /// can serve them from the [`crate::kvcache`] prefix trie instead
     /// of recomputing. `None` is an untagged (fully private) prompt.
     pub prefix: Option<PrefixTag>,
+    /// Service-level objective class. Drives priority ordering and the
+    /// TTFT/TPOT targets the SLO-aware scheduler holds the request to;
+    /// backends and schedulers without an SLO policy ignore it.
+    pub slo: SloClass,
+}
+
+/// Service-level objective class of a request. Declaration order is
+/// priority order: [`SloClass::Interactive`] outranks
+/// [`SloClass::Standard`] outranks [`SloClass::Batch`] (the derived
+/// `Ord` is the scheduler's base priority rank).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SloClass {
+    /// Latency-critical interactive traffic (chat front-ends): tight
+    /// TTFT/TPOT targets, degraded (shorter outputs) before shed.
+    Interactive,
+    /// Ordinary traffic with moderate targets.
+    #[default]
+    Standard,
+    /// Throughput-oriented background traffic: loose targets, shed
+    /// outright past its admission deadline rather than degraded.
+    Batch,
 }
 
 /// Shared-prefix membership of a request: the session group whose
@@ -82,6 +103,19 @@ pub fn sample_seq_len(dataset: Dataset, rng: &mut Rng) -> usize {
     len.clamp(4, dataset.max_len())
 }
 
+/// [`sample_seq_len`] with an explicit log-normal σ and a relaxed upper
+/// truncation (4 × max_len) — the hostile-traffic heavy-tail profile.
+/// Draws exactly one normal variate, like the default sampler, so a
+/// σ-overridden trace keeps ids and arrivals bit-identical to its
+/// same-seed default twin (only lengths change).
+pub fn sample_seq_len_with_sigma(dataset: Dataset, sigma: f64, rng: &mut Rng) -> usize {
+    assert!(sigma > 0.0);
+    let mean = dataset.mean_len() as f64;
+    let mu = mean.ln() - sigma * sigma / 2.0;
+    let len = (mu + sigma * rng.normal()).exp().round() as usize;
+    len.clamp(4, dataset.max_len() * 4)
+}
+
 /// Sample a generated-output length from the dataset's decode profile:
 /// log-normal around [`Dataset::mean_gen_len`], truncated to
 /// `[1, 4 × mean]`. Output lengths are what make decode traces ragged —
@@ -92,6 +126,18 @@ pub fn sample_gen_len(dataset: Dataset, rng: &mut Rng) -> u32 {
     let mu = mean.ln() - sigma * sigma / 2.0;
     let len = (mu + sigma * rng.normal()).exp().round() as i64;
     len.clamp(1, (mean * 4.0) as i64) as u32
+}
+
+/// [`sample_gen_len`] with an explicit log-normal σ and a relaxed upper
+/// truncation (16 × mean) — heavy-tailed output lengths. One normal
+/// variate, exactly like the default sampler ([`sample_seq_len_with_sigma`]
+/// explains why the draw count is the invariant that matters).
+pub fn sample_gen_len_with_sigma(dataset: Dataset, sigma: f64, rng: &mut Rng) -> u32 {
+    assert!(sigma > 0.0);
+    let mean = dataset.mean_gen_len() as f64;
+    let mu = mean.ln() - sigma * sigma / 2.0;
+    let len = (mu + sigma * rng.normal()).exp().round() as i64;
+    len.clamp(1, (mean * 16.0) as i64) as u32
 }
 
 /// A deterministic stream of requests with Poisson arrivals.
@@ -117,6 +163,27 @@ pub struct TraceGenerator {
     prefix_turns: u32,
     /// Current session: `(group, turns remaining)`.
     session: Option<(u64, u32)>,
+    /// Diurnal arrival-rate modulation `(period_s, amplitude)`.
+    diurnal: Option<(f64, f64)>,
+    /// Flash-crowd burst `(start_s, duration_s, rate multiplier)`.
+    flash: Option<(f64, f64, f64)>,
+    /// Heavy-tail override for the prompt-length log-normal σ.
+    seq_sigma: Option<f64>,
+    /// Heavy-tail override for the output-length log-normal σ.
+    gen_sigma: Option<f64>,
+    /// Abusive-tenant stream, independent like `adapter_rng` so the
+    /// honest majority of the trace is untouched.
+    abuse_rng: Rng,
+    /// Abusive-tenant mix `(fraction, inflation)`.
+    abuse: Option<(f64, f64)>,
+    /// Whether the most recently generated request came from an abusive
+    /// tenant (lets [`TraceGenerator::take_decode`] inflate its output
+    /// budget too).
+    last_abusive: bool,
+    /// SLO class stream, independent like `adapter_rng`.
+    slo_rng: Rng,
+    /// SLO class mix `(interactive fraction, batch fraction)`.
+    slo_mix: Option<(f64, f64)>,
     next_id: u64,
     clock_s: f64,
 }
@@ -135,6 +202,15 @@ impl TraceGenerator {
             prefix_groups: 0,
             prefix_turns: 1,
             session: None,
+            diurnal: None,
+            flash: None,
+            seq_sigma: None,
+            gen_sigma: None,
+            abuse_rng: Rng::new(seed ^ 0xAB05_EAB5),
+            abuse: None,
+            last_abusive: false,
+            slo_rng: Rng::new(seed ^ 0x510C_1A55),
+            slo_mix: None,
             next_id: 0,
             clock_s: 0.0,
         }
@@ -167,10 +243,99 @@ impl TraceGenerator {
         self
     }
 
+    /// Modulate the arrival rate with a diurnal (sinusoidal) load curve:
+    /// instantaneous rate = `rate × (1 + amplitude·sin(2πt/period_s))`,
+    /// floored at 5% of the base rate. Implemented by **time-rescaling**
+    /// the Poisson gaps — the underlying RNG draw sequence is untouched,
+    /// so ids, lengths, and per-request annotations stay bit-identical
+    /// to the same-seed flat-rate trace; only arrival times move.
+    pub fn with_diurnal(mut self, period_s: f64, amplitude: f64) -> Self {
+        assert!(period_s > 0.0, "diurnal period must be positive");
+        assert!(amplitude >= 0.0, "diurnal amplitude must be non-negative");
+        self.diurnal = Some((period_s, amplitude));
+        self
+    }
+
+    /// Overlay a flash-crowd burst: for `duration_s` seconds starting at
+    /// `at_s`, the instantaneous arrival rate is multiplied by
+    /// `multiplier` (composes with [`TraceGenerator::with_diurnal`]).
+    /// Time-rescaled like the diurnal curve: ids, lengths, and
+    /// annotations are untouched, arrivals inside and after the window
+    /// compress.
+    pub fn with_flash_crowd(mut self, at_s: f64, duration_s: f64, multiplier: f64) -> Self {
+        assert!(duration_s > 0.0, "flash-crowd duration must be positive");
+        assert!(multiplier > 0.0, "flash-crowd multiplier must be positive");
+        self.flash = Some((at_s, duration_s, multiplier));
+        self
+    }
+
+    /// Replace the length profiles with heavy-tailed variants: prompt
+    /// lengths drawn with log-normal σ `seq_sigma` (truncated at
+    /// 4 × max_len) and sampled output budgets with σ `gen_sigma`
+    /// (truncated at 16 × mean). Draw counts match the default
+    /// samplers, so ids and arrivals stay bit-identical to the
+    /// same-seed default trace; the lengths themselves are the point.
+    pub fn with_heavy_tails(mut self, seq_sigma: f64, gen_sigma: f64) -> Self {
+        assert!(seq_sigma > 0.0 && gen_sigma > 0.0);
+        self.seq_sigma = Some(seq_sigma);
+        self.gen_sigma = Some(gen_sigma);
+        self
+    }
+
+    /// Mix in abusive tenants: each request is independently abusive
+    /// with probability `fraction`, inflating its prompt length (and
+    /// its sampled output budget in [`TraceGenerator::take_decode`]) by
+    /// `inflation`×. The abusive draw comes from an independent RNG
+    /// stream, so the honest `1 - fraction` of the trace keeps ids,
+    /// lengths, and arrivals bit-identical to the same-seed clean
+    /// trace.
+    pub fn with_abusive_tenants(mut self, fraction: f64, inflation: f64) -> Self {
+        assert!((0.0..=1.0).contains(&fraction), "fraction must be in [0, 1]");
+        assert!(inflation >= 1.0, "inflation must be ≥ 1");
+        self.abuse = Some((fraction, inflation));
+        self
+    }
+
+    /// Assign SLO classes: each request is Interactive with probability
+    /// `interactive`, Batch with probability `batch`, Standard
+    /// otherwise. Drawn from an independent RNG stream — ids, lengths,
+    /// and arrivals stay bit-identical to the same-seed unclassed trace
+    /// (which is all-Standard).
+    pub fn with_slo_mix(mut self, interactive: f64, batch: f64) -> Self {
+        assert!(
+            interactive >= 0.0 && batch >= 0.0 && interactive + batch <= 1.0,
+            "SLO fractions must be non-negative and sum to ≤ 1"
+        );
+        self.slo_mix = Some((interactive, batch));
+        self
+    }
+
+    /// Instantaneous load multiplier at trace time `t` (diurnal curve ×
+    /// flash-crowd window), evaluated at the start of each inter-arrival
+    /// gap (piecewise-constant thinning; exact in the limit of short
+    /// gaps, and deterministic either way).
+    fn load_factor(&self, t: f64) -> f64 {
+        let mut f = 1.0;
+        if let Some((period, amp)) = self.diurnal {
+            f *= (1.0 + amp * (2.0 * std::f64::consts::PI * t / period).sin()).max(0.05);
+        }
+        if let Some((at, dur, mult)) = self.flash {
+            if t >= at && t < at + dur {
+                f *= mult;
+            }
+        }
+        f
+    }
+
     /// Generate the next request in the trace (prefill-only:
     /// `gen_tokens` = 0).
     pub fn next_request(&mut self) -> Request {
-        self.clock_s += self.rng.exponential(self.rate);
+        // Time-rescaled Poisson: the exponential gap is always drawn at
+        // the base rate (keeping the RNG sequence — and therefore every
+        // downstream length draw — independent of the load scenario),
+        // then divided by the instantaneous load factor.
+        let gap = self.rng.exponential(self.rate);
+        self.clock_s += gap / self.load_factor(self.clock_s);
         let adapter = if self.adapters > 0 {
             Some(self.adapter_rng.below(self.adapters as u64) as AdapterId)
         } else {
@@ -189,14 +354,40 @@ impl TraceGenerator {
         } else {
             None
         };
+        let mut seq_len = match self.seq_sigma {
+            Some(sigma) => sample_seq_len_with_sigma(self.dataset, sigma, &mut self.rng),
+            None => sample_seq_len(self.dataset, &mut self.rng),
+        };
+        self.last_abusive = match self.abuse {
+            Some((fraction, _)) => self.abuse_rng.f64() < fraction,
+            None => false,
+        };
+        if self.last_abusive {
+            let (_, inflation) = self.abuse.expect("last_abusive implies a mix");
+            seq_len = ((seq_len as f64 * inflation).round() as usize).max(seq_len);
+        }
+        let slo = match self.slo_mix {
+            Some((interactive, batch)) => {
+                let u = self.slo_rng.f64();
+                if u < interactive {
+                    SloClass::Interactive
+                } else if u < interactive + batch {
+                    SloClass::Batch
+                } else {
+                    SloClass::Standard
+                }
+            }
+            None => SloClass::Standard,
+        };
         let r = Request {
             id: self.next_id,
             dataset: self.dataset,
-            seq_len: sample_seq_len(self.dataset, &mut self.rng),
+            seq_len,
             arrival_s: self.clock_s,
             gen_tokens: 0,
             adapter,
             prefix,
+            slo,
         };
         self.next_id += 1;
         r
@@ -218,8 +409,18 @@ impl TraceGenerator {
                 let mut r = self.next_request();
                 r.gen_tokens = match fixed {
                     Some(g) => g.max(1),
-                    None => sample_gen_len(self.dataset, &mut self.rng),
+                    None => match self.gen_sigma {
+                        Some(sigma) => {
+                            sample_gen_len_with_sigma(self.dataset, sigma, &mut self.rng)
+                        }
+                        None => sample_gen_len(self.dataset, &mut self.rng),
+                    },
                 };
+                if self.last_abusive {
+                    let (_, inflation) = self.abuse.expect("last_abusive implies a mix");
+                    let inflated = (r.gen_tokens as f64 * inflation).round() as u32;
+                    r.gen_tokens = inflated.max(r.gen_tokens);
+                }
                 r
             })
             .collect()
@@ -513,6 +714,120 @@ mod tests {
         assert_ne!(a, token_embedding(16, 9, 4, 2), "position must matter");
         assert_ne!(a, token_embedding(16, 9, 3, 3), "token must matter");
         assert_ne!(a, token_embedding(16, 8, 3, 2), "seed must matter");
+    }
+
+    #[test]
+    fn load_scenarios_rescale_arrivals_without_perturbing_the_trace() {
+        let base = TraceGenerator::new(Dataset::Imdb, 50.0, 9).take(300);
+        let crowd = TraceGenerator::new(Dataset::Imdb, 50.0, 9)
+            .with_flash_crowd(1.0, 2.0, 8.0)
+            .take(300);
+        let wave = TraceGenerator::new(Dataset::Imdb, 50.0, 9)
+            .with_diurnal(4.0, 0.8)
+            .take(300);
+        // Ids and lengths are bit-identical — only arrivals move.
+        for scenario in [&crowd, &wave] {
+            for (a, b) in base.iter().zip(scenario.iter()) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.seq_len, b.seq_len);
+            }
+            for w in scenario.windows(2) {
+                assert!(w[1].arrival_s > w[0].arrival_s);
+            }
+        }
+        // The flash window compresses arrivals: the burst's mean gap is
+        // far below the base trace's mean gap over the same ids.
+        let in_window = |t: &[Request]| {
+            t.iter()
+                .filter(|r| (1.0..3.0).contains(&r.arrival_s))
+                .count()
+        };
+        assert!(
+            in_window(&crowd) > 2 * in_window(&base),
+            "flash crowd must pack the window: {} vs {}",
+            in_window(&crowd),
+            in_window(&base)
+        );
+        // The diurnal curve integrates to roughly the base rate, so the
+        // trace still finishes in the same order of magnitude of time.
+        let span = wave.last().unwrap().arrival_s;
+        let base_span = base.last().unwrap().arrival_s;
+        assert!(span > base_span * 0.5 && span < base_span * 2.0);
+    }
+
+    #[test]
+    fn heavy_tails_fatten_lengths_without_perturbing_arrivals() {
+        let base = TraceGenerator::new(Dataset::Squad, 50.0, 11).take_decode(400, None);
+        let tailed = TraceGenerator::new(Dataset::Squad, 50.0, 11)
+            .with_heavy_tails(1.6, 1.4)
+            .take_decode(400, None);
+        for (a, b) in base.iter().zip(&tailed) {
+            assert_eq!(a.id, b.id);
+            assert!((a.arrival_s - b.arrival_s).abs() < 1e-12);
+        }
+        let max_seq = |t: &[Request]| t.iter().map(|r| r.seq_len).max().unwrap();
+        let max_gen = |t: &[Request]| t.iter().map(|r| r.gen_tokens).max().unwrap();
+        assert!(
+            max_seq(&tailed) > max_seq(&base),
+            "σ=1.6 must produce a fatter prompt tail"
+        );
+        assert!(
+            max_gen(&tailed) > max_gen(&base),
+            "σ=1.4 must produce a fatter output tail"
+        );
+        assert!(max_seq(&tailed) > Dataset::Squad.max_len(), "tail must pierce the old cap");
+    }
+
+    #[test]
+    fn abusive_tenants_inflate_a_fraction_and_leave_the_rest_untouched() {
+        let base = TraceGenerator::new(Dataset::Imdb, 50.0, 13).take_decode(400, None);
+        let hostile = TraceGenerator::new(Dataset::Imdb, 50.0, 13)
+            .with_abusive_tenants(0.2, 8.0)
+            .take_decode(400, None);
+        let mut abusive = 0usize;
+        for (a, b) in base.iter().zip(&hostile) {
+            assert_eq!(a.id, b.id);
+            assert!((a.arrival_s - b.arrival_s).abs() < 1e-12);
+            if b.seq_len != a.seq_len {
+                // Inflated request: 8× prompt AND 8× output budget.
+                assert_eq!(b.seq_len, ((a.seq_len as f64 * 8.0).round() as usize).max(a.seq_len));
+                assert!(b.gen_tokens >= a.gen_tokens);
+                abusive += 1;
+            } else {
+                assert_eq!(a.gen_tokens, b.gen_tokens, "honest requests untouched");
+            }
+        }
+        let frac = abusive as f64 / 400.0;
+        assert!((0.1..0.3).contains(&frac), "abusive fraction {frac} vs 0.2");
+    }
+
+    #[test]
+    fn slo_mix_classifies_without_perturbing_the_trace() {
+        let base = TraceGenerator::new(Dataset::Imdb, 50.0, 17).take(300);
+        assert!(base.iter().all(|r| r.slo == SloClass::Standard));
+        let mixed = TraceGenerator::new(Dataset::Imdb, 50.0, 17)
+            .with_slo_mix(0.3, 0.2)
+            .take(300);
+        for (a, b) in base.iter().zip(&mixed) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.seq_len, b.seq_len);
+            assert!((a.arrival_s - b.arrival_s).abs() < 1e-12);
+        }
+        let count = |c: SloClass| mixed.iter().filter(|r| r.slo == c).count();
+        assert!(count(SloClass::Interactive) > 0);
+        assert!(count(SloClass::Batch) > 0);
+        assert!(count(SloClass::Standard) > 0);
+        // Priority rank: Interactive outranks Standard outranks Batch.
+        assert!(SloClass::Interactive < SloClass::Standard);
+        assert!(SloClass::Standard < SloClass::Batch);
+        // Deterministic by seed.
+        let again = TraceGenerator::new(Dataset::Imdb, 50.0, 17)
+            .with_slo_mix(0.3, 0.2)
+            .take(300);
+        assert_eq!(
+            mixed.iter().map(|r| r.slo).collect::<Vec<_>>(),
+            again.iter().map(|r| r.slo).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -187,6 +187,7 @@ fn zero_gen_token_decode_runs_produce_one_token_sessions() {
                 gen_tokens: 0,
                 adapter: None,
                 prefix: None,
+                slo: axllm::workload::SloClass::Standard,
             })
             .collect()
     };
@@ -279,6 +280,7 @@ fn identical_request_ids_get_identical_logits_functionally() {
         gen_tokens: 0,
         adapter: None,
         prefix: None,
+        slo: axllm::workload::SloClass::Standard,
     };
     let (r1, _) = e
         .serve_trace(vec![mk(0.0)], BatchPolicy::default())
@@ -287,4 +289,76 @@ fn identical_request_ids_get_identical_logits_functionally() {
         .serve_trace(vec![mk(5.0)], BatchPolicy::default())
         .unwrap();
     assert_eq!(r1[0].logits, r2[0].logits);
+}
+
+fn decode_req(id: u64, arrival_s: f64, seq_len: usize, gen: u32) -> axllm::workload::Request {
+    axllm::workload::Request {
+        id,
+        dataset: Dataset::Imdb,
+        seq_len,
+        arrival_s,
+        gen_tokens: gen,
+        adapter: None,
+        prefix: None,
+        slo: axllm::workload::SloClass::Standard,
+    }
+}
+
+#[test]
+fn chunked_prefill_serving_is_bit_identical_to_monolithic() {
+    // The engine-level chunked-prefill contract: slicing prompts into
+    // per-iteration token budgets changes only the virtual clock, never
+    // the computation — logits, tokens, and reuse counters all match the
+    // monolithic path per request.
+    use axllm::coordinator::DecodeServeOpts;
+    let trace: Vec<axllm::workload::Request> = (0..10)
+        .map(|i| decode_req(i, 0.01 * i as f64, 5 + (i as usize % 7), 2 + (i % 3) as u32))
+        .collect();
+    let (mut mono, _) = functional_engine()
+        .serve_trace_decode(trace.clone(), policy(), 4)
+        .unwrap();
+    let opts = DecodeServeOpts::new(4).with_chunking(3);
+    let (mut chunked, _) = functional_engine()
+        .serve_trace_decode_opts(trace, policy(), opts)
+        .unwrap();
+    assert_eq!(mono.len(), chunked.len());
+    mono.sort_by_key(|r| r.id);
+    chunked.sort_by_key(|r| r.id);
+    for (m, c) in mono.iter().zip(chunked.iter()) {
+        assert_eq!(m.id, c.id);
+        assert_eq!(m.logits, c.logits, "request {} diverged under chunking", m.id);
+        assert_eq!(m.tokens, c.tokens);
+        assert_eq!(m.gen_tokens, c.gen_tokens);
+        assert_eq!(m.base_mults, c.base_mults);
+        assert_eq!(m.base_reuses, c.base_reuses);
+    }
+}
+
+#[test]
+fn zero_deadline_slo_admission_composes_with_chunked_prefill() {
+    // max_wait_s = 0 is the harshest admission deadline: chunk jobs hold
+    // session slots for several iterations, so a burst that outsizes the
+    // slot count sheds its overflow on the first pass after the clock
+    // moves — and every request is accounted exactly once.
+    use axllm::coordinator::{DecodeServeOpts, SloPolicy, SloTarget};
+    let base = SloPolicy::default();
+    let slo = SloPolicy {
+        standard: SloTarget {
+            max_wait_s: 0.0,
+            ttft_s: f64::INFINITY, // isolate shedding from degradation
+            ..base.standard
+        },
+        ..base
+    };
+    let trace: Vec<axllm::workload::Request> = (0..12).map(|i| decode_req(i, 0.0, 40, 4)).collect();
+    let opts = DecodeServeOpts::new(4).with_chunking(8).with_slo(slo);
+    let pol = BatchPolicy {
+        max_batch: 2,
+        max_wait_s: 0.0,
+    };
+    let (results, summary) = sim_engine().serve_trace_decode_opts(trace, pol, opts).unwrap();
+    assert!(summary.shed > 0, "burst past the zero deadline must shed");
+    assert_eq!(results.len() + summary.shed, 12);
+    assert!(results.iter().all(|r| !r.shed), "shed requests never execute");
+    assert!(results.iter().all(|r| r.gen_tokens == 4), "served sessions run full budgets");
 }

@@ -58,6 +58,7 @@ fn identical_request_ids_get_identical_logits() {
         gen_tokens: 0,
         adapter: None,
         prefix: None,
+        slo: axllm::workload::SloClass::Standard,
     };
     let (r1, _) = e
         .serve_trace(vec![mk(0.0)], BatchPolicy::default())
@@ -79,6 +80,7 @@ fn attribution_scales_with_sequence_length() {
         gen_tokens: 0,
         adapter: None,
         prefix: None,
+        slo: axllm::workload::SloClass::Standard,
     };
     let (results, _) = e
         .serve_trace(
@@ -109,6 +111,7 @@ fn queue_wait_reflects_batching_policy() {
             gen_tokens: 0,
             adapter: None,
             prefix: None,
+            slo: axllm::workload::SloClass::Standard,
         },
         Request {
             id: 1,
@@ -118,6 +121,7 @@ fn queue_wait_reflects_batching_policy() {
             gen_tokens: 0,
             adapter: None,
             prefix: None,
+            slo: axllm::workload::SloClass::Standard,
         },
     ];
     let (results, summary) = e
@@ -158,6 +162,7 @@ fn threaded_server_round_trips() {
             gen_tokens: 0,
             adapter: None,
             prefix: None,
+            slo: axllm::workload::SloClass::Standard,
         }));
     }
     for (id, rx) in rxs.into_iter().enumerate() {

@@ -7,7 +7,9 @@
 
 use axllm::backend::{FunctionalBackend, SimBackend};
 use axllm::config::{AcceleratorConfig, Dataset, ModelConfig};
-use axllm::coordinator::{BatchPolicy, DecodeOpts, Engine, RequestResult, Server};
+use axllm::coordinator::{
+    BatchPolicy, DecodeOpts, DisaggPoolOpts, Engine, RequestResult, Server, SloPolicy, SloTarget,
+};
 use axllm::workload::{Request, TraceGenerator};
 use std::time::{Duration, Instant};
 
@@ -36,6 +38,7 @@ fn req(id: u64, seq_len: usize) -> Request {
         gen_tokens: 0,
         adapter: None,
         prefix: None,
+        slo: axllm::workload::SloClass::Standard,
     }
 }
 
@@ -477,4 +480,86 @@ fn backend_capacity_clamps_live_batches() {
         assert_eq!(res.logits.len(), 4);
     }
     server.shutdown().unwrap();
+}
+
+#[test]
+fn disagg_pool_matches_unified_decode_results_and_meters_handoff() {
+    // Two-tier live serving is a scheduling change, not a computation
+    // change: a 1-prefill + 1-decode pool answers with exactly the
+    // logits, tokens, and reuse counters of the single-engine trace
+    // path, while the KV link meters one handoff per request.
+    const N: u64 = 6;
+    const BPT: f64 = 64.0;
+    let pool = Server::start_disagg_pool(
+        1,
+        1,
+        |_i| functional_engine(),
+        BatchPolicy {
+            max_batch: 4,
+            max_wait_s: 0.01,
+        },
+        DisaggPoolOpts::new(3).with_handoff(BPT),
+    );
+    assert!(pool.cost().is_some(), "both tiers must construct");
+    let trace: Vec<Request> = (0..N).map(|id| req_gen(id, 8, 3)).collect();
+    let run = pool.run(trace, false).expect("disagg run must complete");
+
+    assert_eq!(run.results.len(), N as usize);
+    assert!(run.results.iter().all(|r| !r.shed), "FIFO pool sheds nothing");
+    let plain: Vec<Request> = (0..N).map(|id| req_gen(id, 8, 3)).collect();
+    let (mut reference, _) = functional_engine()
+        .unwrap()
+        .serve_trace_decode(plain, BatchPolicy::default(), 3)
+        .unwrap();
+    reference.sort_by_key(|r| r.id);
+    let mut live = run.results.clone();
+    live.sort_by_key(|r| r.id);
+    for (l, t) in live.iter().zip(reference.iter()) {
+        assert_eq!(l.id, t.id);
+        assert_eq!(l.logits, t.logits, "request {} diverged across tiers", l.id);
+        assert_eq!(l.tokens, t.tokens);
+        assert_eq!(l.gen_tokens, t.gen_tokens);
+        assert_eq!(l.base_mults, t.base_mults);
+        assert_eq!(l.base_reuses, t.base_reuses);
+        assert!(l.ttft_s >= 0.0 && l.tpot_s >= 0.0);
+    }
+    // One handoff per request, billed at BPT × context (prompt + the
+    // prefill-produced first token).
+    assert_eq!(run.summary.handoff_bytes, (BPT as u64) * (8 + 1) * N);
+    assert_eq!(run.summary.requests, N as usize);
+}
+
+#[test]
+fn disagg_pool_answers_shed_requests_with_marker_results() {
+    // Zero-tolerance admission on the live pool: wall time strictly
+    // advances between submit and the prefill tier's pop, so every
+    // request overshoots a 0-second deadline and is shed — answered
+    // with a marker row (never dropped on the floor) and excluded from
+    // the served summary.
+    let base = SloPolicy::default();
+    let slo = SloPolicy {
+        standard: SloTarget {
+            max_wait_s: 0.0,
+            ttft_s: f64::INFINITY,
+            ..base.standard
+        },
+        ..base
+    };
+    let pool = Server::start_disagg_pool(
+        1,
+        1,
+        |_i| sim_engine(),
+        BatchPolicy {
+            max_batch: 2,
+            max_wait_s: 0.01,
+        },
+        DisaggPoolOpts::new(4).with_slo(slo),
+    );
+    assert!(pool.cost().is_some());
+    let trace: Vec<Request> = (0..6).map(|id| req_gen(id, 16, 4)).collect();
+    let run = pool.run(trace, false).expect("disagg run must complete");
+    assert_eq!(run.results.len(), 6);
+    assert!(run.results.iter().all(|r| r.shed && r.gen_tokens == 0));
+    assert_eq!(run.summary.shed, 6);
+    assert_eq!(run.summary.requests, 0, "markers never enter the summary");
 }

@@ -26,6 +26,7 @@ fn req(id: u64, seq_len: usize, gen_tokens: u32, arrival_s: f64) -> Request {
         gen_tokens,
         adapter: None,
         prefix: None,
+        slo: axllm::workload::SloClass::Standard,
     }
 }
 

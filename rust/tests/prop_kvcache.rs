@@ -39,6 +39,7 @@ fn req(
         gen_tokens,
         adapter,
         prefix,
+        slo: axllm::workload::SloClass::Standard,
     }
 }
 

@@ -34,6 +34,7 @@ fn req(id: u64, seq_len: usize, gen_tokens: u32, adapter: Option<u32>) -> Reques
         gen_tokens,
         adapter,
         prefix: None,
+        slo: axllm::workload::SloClass::Standard,
     }
 }
 
