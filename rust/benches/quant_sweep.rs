@@ -1,0 +1,116 @@
+//! Quantization-regime sweep bench: gates the group-wise-quantization ×
+//! reuse tradeoff, then times the group-scoped kernel against the
+//! per-tensor path.
+//!
+//! Before any timing this bench **asserts the acceptance invariants** of
+//! the sweep (`report::quant_sweep`): the finest swept group must trade
+//! strictly — reuse below per-tensor, SNR above it — and the compressed
+//! code stream must beat raw bytes at **every** swept group size. The
+//! timed rows then measure what group scoping costs the packed kernel
+//! (extra epoch resets, same code path).
+//!
+//! Emits `BENCH_quant_sweep.json` with the bench rows **and** the full
+//! sweep curve embedded, so successive PRs can diff the Pareto itself,
+//! not just kernel latency.
+
+use axllm::exec::{group_reuse_matmul_packed, ExecArena};
+use axllm::model::{synthesize_matrix, WeightDistribution};
+use axllm::quant::compress_codes;
+use axllm::report::{quant_sweep, RunCtx};
+use axllm::util::bench::{black_box, Bench};
+use axllm::util::rng::Rng;
+
+const KERNEL_DIM: usize = 512;
+const KERNEL_CHUNK: usize = 256;
+const FINE_GROUP: usize = 16;
+
+fn main() {
+    // Acceptance gate BEFORE timing: the swept Pareto must actually
+    // span the locality/fidelity/memory tradeoff.
+    let ctx = RunCtx::default();
+    let rows = quant_sweep::measure(ctx);
+    let pt = &rows[0];
+    let finest = rows.last().expect("sweep must be non-empty");
+    assert_eq!(pt.n_groups, 1, "first sweep row must be per-tensor");
+    assert!(
+        finest.reuse_rate < pt.reuse_rate,
+        "finest group (size {}) reuse {:.4} must fall strictly below per-tensor {:.4}",
+        finest.group_size,
+        finest.reuse_rate,
+        pt.reuse_rate
+    );
+    assert!(
+        finest.snr_db > pt.snr_db,
+        "finest group (size {}) SNR {:.2} dB must rise strictly above per-tensor {:.2} dB",
+        finest.group_size,
+        finest.snr_db,
+        pt.snr_db
+    );
+    for r in &rows {
+        assert!(
+            r.streamed_bytes < r.raw_bytes,
+            "group {}: compressed stream {} B must beat raw {} B",
+            r.label(),
+            r.streamed_bytes,
+            r.raw_bytes
+        );
+    }
+    println!(
+        "acceptance gate passed: {} regimes, reuse {:.1}% -> {:.1}%, SNR {:.2} -> {:.2} dB\n",
+        rows.len(),
+        pt.reuse_rate * 100.0,
+        finest.reuse_rate * 100.0,
+        pt.snr_db,
+        finest.snr_db
+    );
+
+    // Kernel-level rows: the same packed reuse matmul, per-tensor scale
+    // scope vs group-16 scope. Group scoping only moves epoch resets, so
+    // the gap here is the pure product-table-refill cost of fine groups.
+    let mut rng = Rng::new(3);
+    let w = synthesize_matrix(KERNEL_DIM, KERNEL_DIM, WeightDistribution::default(), &mut rng);
+    let packed = w.packed();
+    let x: Vec<i8> = (0..KERNEL_DIM).map(|_| rng.range_i64(-127, 127) as i8).collect();
+    let elems = (KERNEL_DIM * KERNEL_DIM) as u64;
+    let mut arena = ExecArena::new();
+    let mut b = Bench::new();
+    b.run_throughput("quant_sweep/kernel_per_tensor", elems, || {
+        black_box(group_reuse_matmul_packed(
+            &x,
+            &packed,
+            KERNEL_DIM,
+            KERNEL_CHUNK,
+            &mut arena,
+        ));
+    });
+    b.run_throughput("quant_sweep/kernel_group16", elems, || {
+        black_box(group_reuse_matmul_packed(
+            &x,
+            &packed,
+            FINE_GROUP,
+            KERNEL_CHUNK,
+            &mut arena,
+        ));
+    });
+    let n_groups = KERNEL_DIM / FINE_GROUP;
+    b.run_throughput("quant_sweep/compress_codes", elems, || {
+        black_box(compress_codes(&w.data, n_groups));
+    });
+
+    let j = b.json();
+    assert!(
+        !j.contains("inf") && !j.contains("NaN"),
+        "perf log must stay valid JSON"
+    );
+    let sweep = quant_sweep::json(ctx);
+    let combined = format!(
+        "{{\n\"bench\": {},\n\"sweep\": {}\n}}\n",
+        j.trim_end(),
+        sweep.trim_end()
+    );
+    println!("\ncsv:\n{}", b.csv());
+    match std::fs::write("BENCH_quant_sweep.json", &combined) {
+        Ok(()) => println!("wrote BENCH_quant_sweep.json"),
+        Err(e) => eprintln!("could not write BENCH_quant_sweep.json: {e}"),
+    }
+}

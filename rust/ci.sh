@@ -60,6 +60,18 @@ echo "== disagg serve bench (writes BENCH_disagg_serve.json) =="
 # log stays NaN/inf-free.
 AXLLM_BENCH_FAST=1 cargo bench --bench disagg_serve
 
+echo "== quant regime property suite (smoke) =="
+# Group-wise quantization regimes: degenerate bit-identity to the
+# per-tensor kernels, value exactness at every group width (packed,
+# sharded, LoRA-mixed), and reuse-monotonicity under grid refinement.
+cargo test -q --test prop_quant_group
+
+echo "== quant sweep bench (writes BENCH_quant_sweep.json) =="
+# Asserts the group-size Pareto actually trades: finest-group reuse
+# strictly below per-tensor while SNR improves, and compressed code
+# streaming beats raw bytes at every swept group size.
+AXLLM_BENCH_FAST=1 cargo bench --bench quant_sweep
+
 echo "== cargo doc --no-deps (rustdoc must stay warning-free) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 

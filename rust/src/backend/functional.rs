@@ -24,15 +24,18 @@ use crate::backend::{
 };
 use crate::config::{AcceleratorConfig, ModelConfig};
 use crate::exec::{
-    lora_side_matmul, lora_side_matmul_arena, quantize_row, reuse_matmul_chunked,
-    reuse_matmul_packed, sharded_reuse_matmul_chunked, ExecArena, ExecStats, LayerExec, LayerKv,
+    group_accounting, lora_side_matmul, lora_side_matmul_arena, quantize_row,
+    reuse_matmul_chunked, reuse_matmul_packed, sharded_reuse_matmul_chunked, ExecArena, ExecStats,
+    LayerExec, LayerKv,
 };
 use crate::kvcache::{aligned_prefix, block_keys, KvCacheConfig, PrefixCache};
 use crate::model::{
-    synthesize_matrix, AdapterId, AdapterRegistry, LayerWeights, LoraAdaptor, Model,
+    synthesize_matrix, AdapterId, AdapterRegistry, LayerWeights, LoraAdaptor, MatKind, Model,
     WeightDistribution,
 };
-use crate::quant::{PackedQuantMatrix, QuantMatrix};
+use crate::quant::{
+    compress_codes, GroupQuantMatrix, PackedQuantMatrix, QuantMatrix, QuantRegime,
+};
 use crate::runtime::adapters::{provision, AdapterMisses};
 use crate::sim::{Accelerator, SimStats};
 use crate::util::pool::par_map;
@@ -87,6 +90,12 @@ pub struct FunctionalBackend {
     /// kernels, arena scratch, thread-parallel batches — bit-identical
     /// outputs and counters either way.
     scalar: bool,
+    /// Quantization regime the deployment runs under (per-tensor by
+    /// default). A grouped regime scopes every layer matmul's Result
+    /// Cache to the group grid ([`LayerExec::with_quant_group`]) and
+    /// charges the measured weight-streaming bytes; logits stay
+    /// bit-identical (the regime re-scopes accounting, not codes).
+    quant: QuantRegime,
 }
 
 impl FunctionalBackend {
@@ -137,7 +146,59 @@ impl FunctionalBackend {
             shards: 1,
             kv_cache: None,
             scalar: false,
+            quant: QuantRegime::per_tensor(),
         })
+    }
+
+    /// Run under quantization regime `regime`: every layer matmul scopes
+    /// its Result Cache to `regime.group_size`-column groups (reuse
+    /// cannot cross a scale boundary), and the cost model charges the
+    /// **measured** weight-streaming bytes of the materialized weights —
+    /// raw or compressed ([`compress_codes`]) — plus the group-scoped
+    /// reuse rate from scanning every layer's codes with
+    /// [`group_accounting`].
+    ///
+    /// The regime re-scopes the model's existing per-tensor code grids
+    /// without refitting ([`GroupQuantMatrix::from_quant`]), so logits
+    /// are **bit-identical** to the per-tensor deployment — only the
+    /// mult/reuse split and the streaming tariff move
+    /// (`tests/prop_quant_group.rs`). The classifier head stays
+    /// per-tensor: it is serving apparatus, not part of the modeled
+    /// weight-streaming path.
+    pub fn with_quant_regime(mut self, regime: QuantRegime) -> FunctionalBackend {
+        self.quant = regime;
+        let mut total = ExecStats::default();
+        let mut raw_bytes = 0u64;
+        let mut streamed_bytes = 0u64;
+        for lw in &self.layers {
+            for kind in MatKind::ALL {
+                let w = lw.get(kind);
+                let group = regime.effective_group(w.cols);
+                for s in group_accounting(w, group, self.chunk, 1, w.rows as u64) {
+                    total.add(&s);
+                }
+                let gq = GroupQuantMatrix::from_quant(w, group);
+                let c = compress_codes(&gq.codes.data, gq.n_groups());
+                raw_bytes += c.raw_bytes + c.scale_bytes;
+                streamed_bytes += if regime.compressed {
+                    c.total_bytes()
+                } else {
+                    c.raw_bytes + c.scale_bytes
+                };
+            }
+        }
+        self.cost = self.cost.with_quant_regime(
+            regime,
+            raw_bytes as f64,
+            streamed_bytes as f64,
+            total.reuse_rate(),
+        );
+        self
+    }
+
+    /// The active quantization regime.
+    pub fn quant_regime(&self) -> QuantRegime {
+        self.quant
     }
 
     /// Route every matmul through the seed scalar reference kernels and
@@ -285,6 +346,7 @@ impl FunctionalBackend {
             let mut le = LayerExec::new(&self.model_cfg, lw, self.chunk)
                 .with_shards(self.shards)
                 .with_scalar(self.scalar)
+                .with_quant_group(self.quant.group_size)
                 .with_arena(arena);
             x = le.forward(&x, seq);
             stats.add(&le.stats);
@@ -321,6 +383,7 @@ impl FunctionalBackend {
             let mut le = LayerExec::new(&self.model_cfg, lw, self.chunk)
                 .with_shards(self.shards)
                 .with_scalar(self.scalar)
+                .with_quant_group(self.quant.group_size)
                 .with_arena(std::mem::take(arena));
             x = le.forward_causal(&x, n_new, kv);
             stats.add(&le.stats);
@@ -1245,6 +1308,67 @@ mod tests {
         let o4s = slow4.run_batch(&reqs).unwrap();
         assert_eq!(o4f.logits, o4s.logits);
         assert_eq!(o4f.activity, o4s.activity);
+    }
+
+    #[test]
+    fn quant_regime_keeps_logits_bitexact_and_rescopes_reuse() {
+        // A grouped regime re-opens the RC at every 8-column scale
+        // boundary: logits must not move (codes keep their grid), reuse
+        // must drop, ops must balance, and the cost model must charge
+        // the measured streaming bytes.
+        let base = backend();
+        let grouped = backend().with_quant_regime(QuantRegime::grouped(8));
+        assert_eq!(grouped.quant_regime().group_size, 8);
+        let reqs: Vec<Request> = (0..3).map(|i| req(i, 8 + i as usize)).collect();
+        let ob = base.run_batch(&reqs).unwrap();
+        let og = grouped.run_batch(&reqs).unwrap();
+        assert_eq!(ob.logits, og.logits, "regimes must be value-exact");
+        for (a, g) in ob.activity.iter().zip(&og.activity) {
+            assert_eq!(
+                a.base_mults + a.base_reuses,
+                g.base_mults + g.base_reuses,
+                "ops are regime-independent"
+            );
+            assert!(
+                g.base_reuses < a.base_reuses,
+                "group scoping must fragment reuse: {} vs {}",
+                g.base_reuses,
+                a.base_reuses
+            );
+        }
+        // Scalar and sharded routes agree under the regime too.
+        let scalar = backend()
+            .with_quant_regime(QuantRegime::grouped(8))
+            .with_scalar_kernels(true);
+        let os = scalar.run_batch(&reqs).unwrap();
+        assert_eq!(os.logits, og.logits);
+        assert_eq!(os.activity, og.activity);
+        let sharded = backend()
+            .with_quant_regime(QuantRegime::grouped(8))
+            .with_shards(2);
+        let oh = sharded.run_batch(&reqs).unwrap();
+        assert_eq!(oh.logits, og.logits);
+        // Cost regime filled from the materialized weights, and the
+        // compressed variant strictly undercuts raw streaming.
+        let gc = grouped.cost();
+        assert!(gc.weight_bytes_raw_per_token > 0.0);
+        assert!(gc.quant_reuse_rate > 0.0 && gc.quant_reuse_rate < 1.0);
+        let comp = backend()
+            .with_quant_regime(QuantRegime::grouped(8).with_compressed(true));
+        let cc = comp.cost();
+        assert!(cc.weight_bytes_streamed_per_token < cc.weight_bytes_raw_per_token);
+        // Decode sessions run group-scoped as well — token streams stay
+        // identical to the per-tensor deployment.
+        let (mut kv_b, f_b) = base.prefill(&req(7, 6), 3).unwrap();
+        let (mut kv_g, f_g) = grouped.prefill(&req(7, 6), 3).unwrap();
+        assert_eq!(f_b.logits, f_g.logits);
+        assert_eq!(f_b.token, f_g.token);
+        while !kv_b.done() {
+            let sb = base.decode_step(&mut kv_b).unwrap();
+            let sg = grouped.decode_step(&mut kv_g).unwrap();
+            assert_eq!(sb.logits, sg.logits);
+            assert_eq!(sb.token, sg.token);
+        }
     }
 
     #[test]

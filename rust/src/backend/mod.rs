@@ -58,6 +58,7 @@ use crate::config::{AcceleratorConfig, ModelConfig};
 use crate::energy::EnergyModel;
 use crate::exec::LayerKv;
 use crate::model::{AdapterId, Model};
+use crate::quant::QuantRegime;
 use crate::sim::{Accelerator, ModelCycleSummary, SimStats};
 use crate::workload::{Request, SloClass};
 
@@ -86,6 +87,14 @@ pub const HANDOFF_LINK_BYTES_PER_S: f64 = 50e9;
 
 /// Modeled per-handoff latency (seconds) of the prefill→decode link.
 pub const HANDOFF_LINK_LATENCY_S: f64 = 10e-6;
+
+/// Modeled weight-streaming bandwidth (bytes/second): the HBM-class path
+/// that feeds weight codes (raw or compressed —
+/// [`crate::quant::compress_codes`]) into the lane array. Only the
+/// quant-regime term ([`CostModel::with_quant_regime`]) charges it; the
+/// baseline per-token cycle counts already include raw weight reads, so
+/// the regime term prices the *storage format*, not the reads themselves.
+pub const WEIGHT_STREAM_BYTES_PER_S: f64 = 800e9;
 
 /// One shard's base-pipeline activity for a request served
 /// tensor-parallel: each shard owns an independent Result Cache over its
@@ -595,6 +604,28 @@ pub struct CostModel {
     pub handoff_bytes_per_s: f64,
     /// Per-handoff link latency, seconds ([`HANDOFF_LINK_LATENCY_S`]).
     pub handoff_latency_s: f64,
+    /// Quantization regime: column-group width the deployment's scales
+    /// were fitted over (0 = per-tensor). Set by
+    /// [`CostModel::with_quant_regime`].
+    pub quant_group_size: usize,
+    /// Whether the regime streams weight codes through the compressed
+    /// (run-length/entropy-proxy) storage path.
+    pub quant_compressed: bool,
+    /// Group-scoped Result-Cache reuse rate measured under the regime
+    /// (0 until filled — distinct from [`CostModel::reuse_rate`], the
+    /// per-tensor rate of the base simulation).
+    pub quant_reuse_rate: f64,
+    /// Raw weight-code bytes one token's weight pass streams (one byte
+    /// per weight element plus the scale sidecar). Zero until
+    /// [`CostModel::with_quant_regime`].
+    pub weight_bytes_raw_per_token: f64,
+    /// Bytes the regime's storage path actually streams per token:
+    /// equals the raw figure for uncompressed regimes, the measured
+    /// [`crate::quant::compress_codes`] total for compressed ones.
+    pub weight_bytes_streamed_per_token: f64,
+    /// Weight-streaming bandwidth, bytes/second
+    /// ([`WEIGHT_STREAM_BYTES_PER_S`]).
+    pub weight_stream_bytes_per_s: f64,
 }
 
 impl CostModel {
@@ -627,6 +658,12 @@ impl CostModel {
             handoff_bytes_per_token: 0.0,
             handoff_bytes_per_s: HANDOFF_LINK_BYTES_PER_S,
             handoff_latency_s: HANDOFF_LINK_LATENCY_S,
+            quant_group_size: 0,
+            quant_compressed: false,
+            quant_reuse_rate: 0.0,
+            weight_bytes_raw_per_token: 0.0,
+            weight_bytes_streamed_per_token: 0.0,
+            weight_stream_bytes_per_s: WEIGHT_STREAM_BYTES_PER_S,
         }
     }
 
@@ -779,6 +816,57 @@ impl CostModel {
             + self.handoff_bytes_per_token * tokens as f64 / self.handoff_bytes_per_s
     }
 
+    /// Fill the quantization-regime weight-streaming term: the deployment
+    /// fits scales over `regime.group_size`-column groups and streams its
+    /// weight codes either raw (`raw_bytes_per_token`) or through the
+    /// compressed storage path (`streamed_bytes_per_token`, the measured
+    /// [`crate::quant::compress_codes`] total — strictly below raw on
+    /// clipped-Gaussian codes). `reuse_rate` is the group-scoped RC rate
+    /// measured by [`crate::exec::group_accounting`] under the regime.
+    /// All quant terms are zero until this is called — existing cost
+    /// models are unchanged.
+    pub fn with_quant_regime(
+        mut self,
+        regime: QuantRegime,
+        raw_bytes_per_token: f64,
+        streamed_bytes_per_token: f64,
+        reuse_rate: f64,
+    ) -> CostModel {
+        self.quant_group_size = regime.group_size;
+        self.quant_compressed = regime.compressed;
+        self.quant_reuse_rate = reuse_rate;
+        self.weight_bytes_raw_per_token = raw_bytes_per_token;
+        self.weight_bytes_streamed_per_token = streamed_bytes_per_token;
+        self.weight_stream_bytes_per_s = WEIGHT_STREAM_BYTES_PER_S;
+        self
+    }
+
+    /// Weight-code bytes streamed for `tokens` weight passes under the
+    /// active quant regime (0 until [`CostModel::with_quant_regime`]).
+    pub fn weight_stream_bytes(&self, tokens: u64) -> u64 {
+        (self.weight_bytes_streamed_per_token * tokens as f64) as u64
+    }
+
+    /// Simulated weight-streaming time for `tokens` weight passes,
+    /// seconds: streamed bytes at [`WEIGHT_STREAM_BYTES_PER_S`]. Zero
+    /// when the quant regime is unfilled or the bandwidth is degenerate.
+    pub fn weight_stream_time_s(&self, tokens: u64) -> f64 {
+        if self.weight_bytes_streamed_per_token <= 0.0 || self.weight_stream_bytes_per_s <= 0.0 {
+            return 0.0;
+        }
+        self.weight_bytes_streamed_per_token * tokens as f64 / self.weight_stream_bytes_per_s
+    }
+
+    /// Streamed-over-raw byte ratio of the active regime (1.0 until
+    /// [`CostModel::with_quant_regime`]; < 1.0 on the compressed path).
+    pub fn weight_compression_ratio(&self) -> f64 {
+        if self.weight_bytes_raw_per_token <= 0.0 {
+            1.0
+        } else {
+            self.weight_bytes_streamed_per_token / self.weight_bytes_raw_per_token
+        }
+    }
+
     /// Fill the tensor-parallel collective regime: `shards` instances
     /// each compute a `cols/N` slice of every projection (compute terms
     /// divide by N) and an all-gather stitches one `d_model` f32
@@ -862,12 +950,17 @@ impl CostModel {
     /// Simulated accelerator service time for `tokens` tokens, seconds.
     /// Shard-aware: a sharded deployment computes its column slices in
     /// parallel (compute / N) and pays the all-gather for the batch.
+    /// Quant-regime-aware: the weight-streaming term
+    /// ([`CostModel::weight_stream_time_s`]) adds per token, divided
+    /// across shards (each instance streams only its column slice).
     pub fn sim_time_s(&self, tokens: u64) -> f64 {
         let mono = self.cycles_per_token_ax * tokens as f64 / (self.freq_ghz * 1e9);
+        let stream = self.weight_stream_time_s(tokens) / self.shards.max(1) as f64;
         if self.shards <= 1 || tokens == 0 {
-            return mono;
+            return mono + stream;
         }
         mono / self.shards as f64
+            + stream
             + self.allreduce_time_s(self.gather_bytes_per_token * tokens as f64, self.shards)
     }
 
@@ -888,10 +981,13 @@ impl CostModel {
     /// latency bites hardest (one token's gather per step).
     pub fn decode_step_time_s(&self, context: u64) -> f64 {
         let mono = self.decode_step_cycles(context) / (self.freq_ghz * 1e9);
+        // One weight pass per decode step, sliced across shards.
+        let stream = self.weight_stream_time_s(1) / self.shards.max(1) as f64;
         if self.shards <= 1 {
-            return mono;
+            return mono + stream;
         }
         mono / self.shards as f64
+            + stream
             + self.allreduce_time_s(self.gather_bytes_per_token, self.shards)
     }
 
@@ -915,11 +1011,16 @@ impl CostModel {
             * self.attn_cycles_per_ctx_token;
         let compute =
             (self.cycles_per_token_ax * weight_passes as f64 + attn) / (self.freq_ghz * 1e9);
+        // Each weight pass streams the regime's code bytes once —
+        // shared across the iteration's decode batch like the pass
+        // itself, and sliced across shards.
+        let stream = self.weight_stream_time_s(weight_passes) / self.shards.max(1) as f64;
         let gathered = prefill_tokens + decode_contexts.len() as u64;
         if self.shards <= 1 || gathered == 0 {
-            return compute;
+            return compute + stream;
         }
         compute / self.shards as f64
+            + stream
             + self.allreduce_time_s(self.gather_bytes_per_token * gathered as f64, self.shards)
     }
 }

@@ -15,9 +15,10 @@ use crate::backend::{
     StepOutcome, COST_SAMPLE_ROWS, DEFAULT_SEQ_LIMIT,
 };
 use crate::config::{AcceleratorConfig, ModelConfig};
-use crate::exec::{shard_accounting, ExecStats};
+use crate::exec::{group_accounting, shard_accounting, ExecStats};
 use crate::kvcache::{aligned_prefix, block_keys, KvCacheConfig, PrefixCache};
 use crate::model::{MatKind, Model};
+use crate::quant::{compress_codes, GroupQuantMatrix, QuantRegime};
 use crate::runtime::AdapterMisses;
 use crate::sim::{Accelerator, SimStats};
 use crate::workload::{request_seed, Request};
@@ -64,6 +65,10 @@ pub struct SimBackend {
     /// and the prefill discount (cached tokens bill at block-copy rate
     /// instead of a full weight pass).
     kv_cache: Option<PrefixCache<()>>,
+    /// Quantization regime the modeled deployment streams its weights
+    /// under (per-tensor raw by default; see
+    /// [`SimBackend::with_quant_regime`]).
+    quant: QuantRegime,
 }
 
 impl SimBackend {
@@ -87,7 +92,69 @@ impl SimBackend {
             shards: 1,
             per_token_shard: Vec::new(),
             kv_cache: None,
+            quant: QuantRegime::per_tensor(),
         })
+    }
+
+    /// Model a deployment quantized and stored under `regime`
+    /// ([`crate::quant::QuantRegime`]): every weight matrix's scales are
+    /// scoped to `regime.group_size`-column groups and its codes stream
+    /// raw or compressed. Two measured consequences feed the cost model
+    /// ([`CostModel::with_quant_regime`]):
+    ///
+    /// - the **group-scoped reuse rate**: the model's weight codes are
+    ///   scanned with [`group_accounting`] (RC re-opens at each group
+    ///   boundary), row-sampled and scaled exactly like the shard scan;
+    /// - the **weight-streaming bytes**: per-matrix
+    ///   [`crate::quant::compress_codes`] totals (run-length /
+    ///   entropy-proxy payload plus the per-group scale sidecar), which
+    ///   the service times then charge at weight-stream bandwidth.
+    ///
+    /// The regime **re-scopes** the model's analytically-derived grids
+    /// ([`GroupQuantMatrix::from_quant`] — codes unchanged, no refit), so
+    /// the sampled-row byte/reuse measurements stay consistent with the
+    /// full matrices and with every other backend's view of the model.
+    pub fn with_quant_regime(mut self, regime: QuantRegime) -> SimBackend {
+        self.quant = regime;
+        let chunk = Accelerator::axllm(self.acc_cfg).chunk_cols();
+        let model = Model::new(self.model_cfg.clone(), SIM_MODEL_SEED);
+        let mut total = ExecStats::default();
+        let mut raw_bytes = 0u64;
+        let mut streamed_bytes = 0u64;
+        for l in 0..self.model_cfg.n_layers {
+            for kind in MatKind::ALL {
+                let (rows, cols) = kind.shape(&self.model_cfg);
+                let sample = COST_SAMPLE_ROWS.min(rows);
+                let w = model.matrix_rows(l, kind, sample);
+                let group = regime.effective_group(cols);
+                for s in group_accounting(&w, group, chunk, 1, rows as u64) {
+                    total.add(&s);
+                }
+                let gq = GroupQuantMatrix::from_quant(&w, group);
+                let c = compress_codes(&gq.codes.data, gq.n_groups());
+                // Code bytes scale with the sampled-to-full row ratio;
+                // the per-group scale sidecar is row-independent.
+                let up = |b: u64| b * rows as u64 / sample.max(1) as u64;
+                raw_bytes += up(c.raw_bytes) + c.scale_bytes;
+                streamed_bytes += if regime.compressed {
+                    up(c.payload_bytes) + c.scale_bytes
+                } else {
+                    up(c.raw_bytes) + c.scale_bytes
+                };
+            }
+        }
+        self.cost = self.cost.with_quant_regime(
+            regime,
+            raw_bytes as f64,
+            streamed_bytes as f64,
+            total.reuse_rate(),
+        );
+        self
+    }
+
+    /// The active quantization regime.
+    pub fn quant_regime(&self) -> QuantRegime {
+        self.quant
     }
 
     /// Model a paged prefix KV cache of `blocks` fixed-size blocks of
@@ -685,6 +752,68 @@ mod tests {
             evict_out.exec_s,
             cold.exec_s
         );
+    }
+
+    #[test]
+    fn quant_regime_charges_streaming_and_scopes_reuse() {
+        let plain = SimBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper()).unwrap();
+        assert!(plain.quant_regime().is_per_tensor());
+        assert_eq!(plain.cost().weight_bytes_streamed_per_token, 0.0);
+
+        let raw = SimBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper())
+            .unwrap()
+            .with_quant_regime(QuantRegime::per_tensor());
+        let comp = SimBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper())
+            .unwrap()
+            .with_quant_regime(QuantRegime::per_tensor().with_compressed(true));
+        let grouped = SimBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper())
+            .unwrap()
+            .with_quant_regime(QuantRegime::grouped(16).with_compressed(true));
+
+        // Raw regime: streamed == raw bytes, ratio 1; the streaming term
+        // makes the modeled batch strictly slower than the unfilled cost.
+        let rc = raw.cost();
+        assert!(rc.weight_bytes_raw_per_token > 0.0);
+        assert_eq!(
+            rc.weight_bytes_streamed_per_token,
+            rc.weight_bytes_raw_per_token
+        );
+        assert_eq!(rc.weight_compression_ratio(), 1.0);
+        assert!(rc.sim_time_s(32) > plain.cost().sim_time_s(32));
+
+        // Compressed path: measured bytes strictly below raw on the
+        // model's clipped-Gaussian codes, and the time follows.
+        let cc = comp.cost();
+        assert!(
+            cc.weight_bytes_streamed_per_token < cc.weight_bytes_raw_per_token,
+            "{} vs {}",
+            cc.weight_bytes_streamed_per_token,
+            cc.weight_bytes_raw_per_token
+        );
+        assert!(cc.weight_compression_ratio() < 1.0);
+        assert!(cc.sim_time_s(32) < rc.sim_time_s(32));
+        assert!(cc.weight_stream_bytes(2) > 0);
+
+        // Group scoping fragments reuse: the group-16 RC rate sits
+        // strictly below the per-tensor regime's rate, and the regime's
+        // rate matches the whole-tensor scan of the same codes.
+        let gc = grouped.cost();
+        assert_eq!(gc.quant_group_size, 16);
+        assert!(gc.quant_compressed);
+        assert!(
+            gc.quant_reuse_rate < rc.quant_reuse_rate,
+            "group-16 rate {} not below per-tensor rate {}",
+            gc.quant_reuse_rate,
+            rc.quant_reuse_rate
+        );
+        assert!(rc.quant_reuse_rate > 0.0 && rc.quant_reuse_rate < 1.0);
+        // Smaller groups carry more scale sidecar bytes.
+        assert!(gc.weight_bytes_raw_per_token > rc.weight_bytes_raw_per_token);
+        // Attribution counters are regime-independent (values identical).
+        let or = raw.run_batch(&[req(0, 16)]).unwrap();
+        let og = grouped.run_batch(&[req(0, 16)]).unwrap();
+        assert_eq!(or.stats, og.stats);
+        assert!(or.exec_s > og.exec_s, "compressed streaming is cheaper");
     }
 
     #[test]

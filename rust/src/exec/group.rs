@@ -1,0 +1,573 @@
+//! Group-aware reuse kernels (ROADMAP item 4): the Result-Cache datapath
+//! with **per-group product tables keyed off the group's scale**.
+//!
+//! Group-wise quantization ([`GroupQuantMatrix`]) gives each contiguous
+//! column group its own scale. A hardware Result Cache stores the
+//! *scaled* product `x_i · q · s_g`, so a cached entry is invalid the
+//! moment the column walk crosses into a group with a different scale —
+//! the RC is conceptually one product table per group. These kernels
+//! model that exactly: the epoch grid of the per-tensor kernels (W_buff
+//! chunk boundaries) is refined by the **group boundary grid**, and a
+//! fresh epoch opens at every segment
+//! `[col, min(next chunk multiple, next group multiple, limit))`.
+//!
+//! Values are unchanged by the refinement — the integer accumulation
+//! `y[j] = Σ_i x[i]·w[i,j]` is segment-order-free, and group scales
+//! apply per output column *downstream* (dequantization), never inside
+//! the integer datapath. Only the mult/reuse split moves. Consequences,
+//! mirroring the sharding theorems of [`crate::exec::sharded`]:
+//!
+//! - `group ≥ cols` (one group) is **bit-identical** to the per-tensor
+//!   kernels in outputs and counters, and
+//! - shrinking the group width only refines epochs, so group-scoped
+//!   mults are monotone non-decreasing (reuse only drops) — the
+//!   "fragmented code distributions → lower RC hit rates" axis of the
+//!   quant-sweep Pareto.
+//!
+//! Both are pinned by `tests/prop_quant_group.rs` across the scalar,
+//! packed/tiled, and sharded kernel matrix.
+
+use crate::exec::{fill_products, packed_tile, EpochTags, ExecArena, ExecStats};
+use crate::exec::sharded::shard_ranges;
+use crate::quant::{GroupQuantMatrix, PackedQuantMatrix, QuantMatrix, QuantParams};
+
+/// Next epoch boundary at or after `col`: the tighter of the global
+/// W_buff chunk grid and the group-scale grid, clamped to `limit`.
+/// Saturating so the per-tensor sentinel (`group = usize::MAX`) and
+/// other huge widths never overflow.
+#[inline]
+fn segment_end(col: usize, chunk: usize, group: usize, limit: usize) -> usize {
+    let c = (col / chunk + 1).saturating_mul(chunk);
+    let g = (col / group + 1).saturating_mul(group);
+    c.min(g).min(limit)
+}
+
+/// Group-scoped form of [`crate::exec::reuse_matmul_chunked`]: `y = x·W`
+/// through the RC with epochs on the intersection of the chunk grid and
+/// the `group`-column scale grid. `group ≥ w.cols` degenerates
+/// bit-exactly to the per-tensor kernel.
+pub fn group_reuse_matmul_chunked(
+    x: &[i8],
+    w: &QuantMatrix,
+    group: usize,
+    chunk: usize,
+) -> (Vec<i32>, ExecStats) {
+    assert_eq!(x.len(), w.rows);
+    assert!(chunk > 0);
+    assert!(group > 0);
+    let mut y = vec![0i32; w.cols];
+    let mut stats = ExecStats::default();
+    let mut tags = EpochTags::new();
+    let mut products = [0i32; 256];
+    for (i, &xi) in x.iter().enumerate() {
+        fill_products(xi as i32, &mut products);
+        let row = w.row(i);
+        let mut col = 0;
+        while col < w.cols {
+            let end = segment_end(col, chunk, group, w.cols);
+            // A fresh epoch per segment: crossing a group boundary
+            // invalidates the (conceptually scale-keyed) product table.
+            tags.next_epoch();
+            for (&wij, yj) in row[col..end].iter().zip(&mut y[col..end]) {
+                *yj += products[(wij as i32 + 127) as u8 as usize];
+            }
+            let mut unique = 0u64;
+            for &wij in &row[col..end] {
+                unique += tags.first_occurrence(wij.unsigned_abs()) as u64;
+            }
+            stats.mults += unique;
+            stats.reuses += (end - col) as u64 - unique;
+            col = end;
+        }
+    }
+    (y, stats)
+}
+
+/// Group-scoped form of [`crate::exec::reuse_matmul_packed`]: the
+/// packed/tiled hot path with the refined epoch grid. Each segment is
+/// one [`packed_tile`] walk — tiles are bounded by segment edges, never
+/// the 4-code word grid, so group boundaries straddling a pack word cost
+/// only a byte-wise head/tail. Output left in [`ExecArena::yq`].
+pub fn group_reuse_matmul_packed(
+    x: &[i8],
+    w: &PackedQuantMatrix,
+    group: usize,
+    chunk: usize,
+    arena: &mut ExecArena,
+) -> ExecStats {
+    assert_eq!(x.len(), w.rows);
+    assert!(chunk > 0);
+    assert!(group > 0);
+    let ExecArena {
+        yq, products, tags, ..
+    } = arena;
+    yq.clear();
+    yq.resize(w.cols, 0);
+    let mut stats = ExecStats::default();
+    for (i, &xi) in x.iter().enumerate() {
+        fill_products(xi as i32, products);
+        let words = w.row_words(i);
+        let mut col = 0usize;
+        while col < w.cols {
+            let end = segment_end(col, chunk, group, w.cols);
+            tags.next_epoch();
+            let unique = packed_tile(words, col, end, products, tags, yq, 0);
+            stats.mults += unique;
+            stats.reuses += (end - col) as u64 - unique;
+            col = end;
+        }
+    }
+    stats
+}
+
+/// Group-scoped form of [`crate::exec::sharded_reuse_matmul_chunked`]:
+/// each shard walks its column slice with its own [`EpochTags`] on the
+/// **triple** intersection grid — global chunk multiples, group
+/// multiples, and the shard edge. Shard segments therefore refine the
+/// monolithic group segments exactly, keeping the sharding theorems
+/// (ops column-additive, reuse only drops) intact under any regime.
+pub fn sharded_group_reuse_matmul_chunked(
+    x: &[i8],
+    w: &QuantMatrix,
+    group: usize,
+    chunk: usize,
+    shards: usize,
+) -> (Vec<i32>, Vec<ExecStats>) {
+    assert_eq!(x.len(), w.rows);
+    assert!(chunk > 0);
+    assert!(group > 0);
+    let ranges = shard_ranges(w.cols, shards);
+    let mut y = vec![0i32; w.cols];
+    let mut per_shard = vec![ExecStats::default(); ranges.len()];
+    let mut tags: Vec<EpochTags> = (0..ranges.len()).map(|_| EpochTags::new()).collect();
+    let mut products = [0i32; 256];
+    for (i, &xi) in x.iter().enumerate() {
+        fill_products(xi as i32, &mut products);
+        let row = w.row(i);
+        for (s, range) in ranges.iter().enumerate() {
+            let stats = &mut per_shard[s];
+            let mut col = range.start;
+            while col < range.end {
+                let end = segment_end(col, chunk, group, range.end);
+                tags[s].next_epoch();
+                for (&wij, yj) in row[col..end].iter().zip(&mut y[col..end]) {
+                    *yj += products[(wij as i32 + 127) as u8 as usize];
+                }
+                let mut unique = 0u64;
+                for &wij in &row[col..end] {
+                    unique += tags[s].first_occurrence(wij.unsigned_abs()) as u64;
+                }
+                stats.mults += unique;
+                stats.reuses += (end - col) as u64 - unique;
+                col = end;
+            }
+        }
+    }
+    (y, per_shard)
+}
+
+/// Group-scoped form of [`crate::exec::sharded_reuse_matmul_packed`]:
+/// the packed/tiled sharded hot path on the triple grid, per-shard tags
+/// persisted in the arena, counters **added** into `per_shard`, call
+/// total returned, output in [`ExecArena::yq`].
+pub fn sharded_group_reuse_matmul_packed(
+    x: &[i8],
+    w: &PackedQuantMatrix,
+    group: usize,
+    chunk: usize,
+    shards: usize,
+    per_shard: &mut [ExecStats],
+    arena: &mut ExecArena,
+) -> ExecStats {
+    assert_eq!(x.len(), w.rows);
+    assert!(chunk > 0);
+    assert!(group > 0);
+    let ranges = shard_ranges(w.cols, shards);
+    assert_eq!(per_shard.len(), ranges.len());
+    let ExecArena {
+        yq,
+        products,
+        shard_tags,
+        ..
+    } = arena;
+    yq.clear();
+    yq.resize(w.cols, 0);
+    if shard_tags.len() < ranges.len() {
+        shard_tags.resize_with(ranges.len(), EpochTags::new);
+    }
+    let mut total = ExecStats::default();
+    for (i, &xi) in x.iter().enumerate() {
+        fill_products(xi as i32, products);
+        let words = w.row_words(i);
+        for (s, range) in ranges.iter().enumerate() {
+            let mut col = range.start;
+            while col < range.end {
+                let end = segment_end(col, chunk, group, range.end);
+                shard_tags[s].next_epoch();
+                let unique = packed_tile(words, col, end, products, &mut shard_tags[s], yq, 0);
+                per_shard[s].mults += unique;
+                per_shard[s].reuses += (end - col) as u64 - unique;
+                total.mults += unique;
+                total.reuses += (end - col) as u64 - unique;
+                col = end;
+            }
+        }
+    }
+    total
+}
+
+/// Group-scoped form of [`crate::exec::shard_accounting`]: the x-free
+/// mult/reuse scan on the triple grid, scaled to `full_rows`. This is
+/// what `SimBackend::with_quant_regime` measures — the RC split depends
+/// only on codes and the epoch grid, never on the input vector.
+pub fn group_accounting(
+    w: &QuantMatrix,
+    group: usize,
+    chunk: usize,
+    shards: usize,
+    full_rows: u64,
+) -> Vec<ExecStats> {
+    assert!(chunk > 0);
+    assert!(group > 0);
+    let ranges = shard_ranges(w.cols, shards);
+    let mut per_shard = vec![ExecStats::default(); ranges.len()];
+    let mut tags: Vec<EpochTags> = (0..ranges.len()).map(|_| EpochTags::new()).collect();
+    for i in 0..w.rows {
+        let row = w.row(i);
+        for (s, range) in ranges.iter().enumerate() {
+            let stats = &mut per_shard[s];
+            let mut col = range.start;
+            while col < range.end {
+                let end = segment_end(col, chunk, group, range.end);
+                tags[s].next_epoch();
+                let mut unique = 0u64;
+                for &wij in &row[col..end] {
+                    unique += tags[s].first_occurrence(wij.unsigned_abs()) as u64;
+                }
+                stats.mults += unique;
+                stats.reuses += (end - col) as u64 - unique;
+                col = end;
+            }
+        }
+    }
+    let sampled = w.rows.max(1) as u64;
+    per_shard
+        .into_iter()
+        .map(|s| s.scaled(full_rows.max(sampled), sampled))
+        .collect()
+}
+
+/// Float-in/float-out group-quantized matmul of one activation row:
+/// fit a per-row activation grid, run the group-scoped RC kernel on the
+/// code payload, and dequantize each output column with **its group's
+/// scale** — the end-to-end fidelity path the round-trip property tests
+/// bound per group.
+pub fn group_matmul_f32(x: &[f32], w: &GroupQuantMatrix, chunk: usize) -> (Vec<f32>, ExecStats) {
+    let params = QuantParams::fit(x, 8);
+    let xq: Vec<i8> = x.iter().map(|&v| params.quantize(v)).collect();
+    let (yq, stats) = group_reuse_matmul_chunked(&xq, &w.codes, w.group_size, chunk);
+    let y = yq
+        .iter()
+        .enumerate()
+        .map(|(j, &v)| v as f32 * params.scale * w.group_params[j / w.group_size].scale)
+        .collect();
+    (y, stats)
+}
+
+/// Group-regime route of `LayerExec`'s **scalar** matmul dispatch:
+/// [`crate::exec::layer::qmatmul`]-family semantics (block-grid or
+/// row-wise activation quantization, monolithic or sharded with
+/// per-shard counters) with the group-scoped kernels underneath.
+///
+/// The weight codes stay on the model's per-tensor carrier grid
+/// (`w.params`) — the functional regime re-scopes the Result Cache
+/// without re-fitting, so logits are bit-identical to the per-tensor
+/// run and only the mult/reuse split moves (pinned by
+/// `tests/prop_quant_group.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn qmatmul_group(
+    x: &[f32],
+    seq: usize,
+    w: &QuantMatrix,
+    group: usize,
+    chunk: usize,
+    shards: usize,
+    rowwise: bool,
+    per_shard: &mut [ExecStats],
+    stats: &mut ExecStats,
+) -> Vec<f32> {
+    let d = w.rows;
+    assert_eq!(x.len(), seq * d);
+    let block_params = if rowwise {
+        None
+    } else {
+        Some(QuantParams::fit(x, 8))
+    };
+    let mut y = vec![0f32; seq * w.cols];
+    for s in 0..seq {
+        let row = &x[s * d..(s + 1) * d];
+        let params = block_params.unwrap_or_else(|| QuantParams::fit(row, 8));
+        let xq: Vec<i8> = row.iter().map(|&v| params.quantize(v)).collect();
+        let scale = params.scale * w.params.scale;
+        let yq = if shards <= 1 {
+            let (yq, st) = group_reuse_matmul_chunked(&xq, w, group, chunk);
+            stats.mults += st.mults;
+            stats.reuses += st.reuses;
+            yq
+        } else {
+            assert_eq!(per_shard.len(), shards);
+            let (yq, per) = sharded_group_reuse_matmul_chunked(&xq, w, group, chunk, shards);
+            for (acc, st) in per_shard.iter_mut().zip(&per) {
+                acc.add(st);
+                stats.add(st);
+            }
+            yq
+        };
+        for (yj, &v) in y[s * w.cols..(s + 1) * w.cols].iter_mut().zip(&yq) {
+            *yj = v as f32 * scale;
+        }
+    }
+    y
+}
+
+/// Group-regime route of `LayerExec`'s **packed** matmul dispatch: the
+/// arena-backed hot path with group-scoped epochs, value-identical to
+/// [`qmatmul_group`] in outputs and (per-shard) counters.
+#[allow(clippy::too_many_arguments)]
+pub fn qmatmul_group_packed(
+    x: &[f32],
+    seq: usize,
+    w: &PackedQuantMatrix,
+    group: usize,
+    chunk: usize,
+    shards: usize,
+    rowwise: bool,
+    per_shard: &mut [ExecStats],
+    stats: &mut ExecStats,
+    arena: &mut ExecArena,
+) -> Vec<f32> {
+    let d = w.rows;
+    assert_eq!(x.len(), seq * d);
+    let block_params = if rowwise {
+        None
+    } else {
+        Some(QuantParams::fit(x, 8))
+    };
+    let mut y = vec![0f32; seq * w.cols];
+    for s in 0..seq {
+        let row = &x[s * d..(s + 1) * d];
+        let params = match block_params {
+            Some(p) => {
+                arena.quantize_with(row, p);
+                p
+            }
+            None => arena.quantize_into(row),
+        };
+        let scale = params.scale * w.params.scale;
+        let xq = std::mem::take(&mut arena.xq);
+        let st = if shards <= 1 {
+            group_reuse_matmul_packed(&xq, w, group, chunk, arena)
+        } else {
+            assert_eq!(per_shard.len(), shards);
+            sharded_group_reuse_matmul_packed(&xq, w, group, chunk, shards, per_shard, arena)
+        };
+        arena.xq = xq;
+        stats.add(&st);
+        for (yj, &v) in y[s * w.cols..(s + 1) * w.cols].iter_mut().zip(&arena.yq) {
+            *yj = v as f32 * scale;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{
+        dense_matmul, reuse_matmul_chunked, reuse_matmul_packed, sharded_reuse_matmul_chunked,
+    };
+    use crate::model::synth::{synthesize_floats, synthesize_matrix, WeightDistribution};
+    use crate::util::rng::Rng;
+
+    fn case(rows: usize, cols: usize, seed: u64) -> (Vec<i8>, QuantMatrix) {
+        let mut rng = Rng::new(seed);
+        let w = synthesize_matrix(rows, cols, WeightDistribution::default(), &mut rng);
+        let x: Vec<i8> = (0..rows).map(|_| rng.range_i64(-127, 127) as i8).collect();
+        (x, w)
+    }
+
+    #[test]
+    fn whole_tensor_group_is_bit_identical_to_per_tensor() {
+        let (x, w) = case(24, 200, 41);
+        for chunk in [7usize, 64, 200] {
+            let (y0, s0) = reuse_matmul_chunked(&x, &w, chunk);
+            for group in [200usize, 201, 4096, usize::MAX] {
+                let (y, s) = group_reuse_matmul_chunked(&x, &w, group, chunk);
+                assert_eq!(y, y0, "chunk={chunk} group={group}");
+                assert_eq!(s, s0, "chunk={chunk} group={group}");
+            }
+        }
+    }
+
+    #[test]
+    fn group_segments_preserve_values_and_only_lose_reuse() {
+        let (x, w) = case(16, 256, 42);
+        let dense = dense_matmul(&x, &w);
+        let chunk = 128;
+        let (_, mono) = reuse_matmul_chunked(&x, &w, chunk);
+        let mut prev_mults = mono.mults;
+        for group in [128usize, 64, 16, 5, 1] {
+            let (y, s) = group_reuse_matmul_chunked(&x, &w, group, chunk);
+            assert_eq!(y, dense, "group={group}");
+            assert_eq!(s.mults + s.reuses, mono.mults + mono.reuses, "group={group}");
+            // Nested widths refine the epoch grid → mults monotone up.
+            assert!(s.mults >= prev_mults, "group={group}: {} < {prev_mults}", s.mults);
+            prev_mults = s.mults;
+        }
+        // group=1 → every element is a first occurrence.
+        let (_, s1) = group_reuse_matmul_chunked(&x, &w, 1, chunk);
+        assert_eq!(s1.mults, (w.rows * w.cols) as u64);
+        assert_eq!(s1.reuses, 0);
+    }
+
+    #[test]
+    fn packed_group_kernel_matches_scalar_group_kernel() {
+        let (x, w) = case(20, 130, 43);
+        let packed = w.packed();
+        let mut arena = ExecArena::new();
+        // Groups straddling the 4-code pack word and ragged tails.
+        for group in [1usize, 2, 3, 5, 7, 13, 64, 130, usize::MAX] {
+            for chunk in [3usize, 7, 64, 130] {
+                let (y, s) = group_reuse_matmul_chunked(&x, &w, group, chunk);
+                let sp = group_reuse_matmul_packed(&x, &packed, group, chunk, &mut arena);
+                assert_eq!(arena.yq(), &y[..], "group={group} chunk={chunk}");
+                assert_eq!(sp, s, "group={group} chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_group_degenerates_to_packed_per_tensor() {
+        let (x, w) = case(12, 96, 44);
+        let packed = w.packed();
+        let mut a0 = ExecArena::new();
+        let mut a1 = ExecArena::new();
+        let s0 = reuse_matmul_packed(&x, &packed, 32, &mut a0);
+        let s1 = group_reuse_matmul_packed(&x, &packed, 96, 32, &mut a1);
+        assert_eq!(a1.yq(), a0.yq());
+        assert_eq!(s1, s0);
+    }
+
+    #[test]
+    fn sharded_group_kernels_agree_and_refine() {
+        let (x, w) = case(16, 300, 45);
+        let chunk = 128;
+        for group in [300usize, 48, 10] {
+            let (y_mono, mono) = group_reuse_matmul_chunked(&x, &w, group, chunk);
+            for shards in [1usize, 2, 4] {
+                let (y, per) = sharded_group_reuse_matmul_chunked(&x, &w, group, chunk, shards);
+                assert_eq!(y, y_mono, "group={group} shards={shards}");
+                let ops: u64 = per.iter().map(|s| s.mults + s.reuses).sum();
+                assert_eq!(ops, mono.mults + mono.reuses);
+                let mults: u64 = per.iter().map(|s| s.mults).sum();
+                assert!(mults >= mono.mults, "sharding only loses reuse");
+                // Packed sharded agrees in values and per-shard counters.
+                let mut arena = ExecArena::new();
+                let mut acc = vec![ExecStats::default(); shards];
+                let total = sharded_group_reuse_matmul_packed(
+                    &x, &w.packed(), group, chunk, shards, &mut acc, &mut arena,
+                );
+                assert_eq!(arena.yq(), &y[..]);
+                assert_eq!(acc, per);
+                assert_eq!(total.mults, mults);
+            }
+        }
+        // Per-tensor-width group matches the seed sharded kernel exactly.
+        let (y_seed, per_seed) = sharded_reuse_matmul_chunked(&x, &w, chunk, 4);
+        let (y_g, per_g) = sharded_group_reuse_matmul_chunked(&x, &w, usize::MAX, chunk, 4);
+        assert_eq!(y_g, y_seed);
+        assert_eq!(per_g, per_seed);
+    }
+
+    #[test]
+    fn accounting_matches_the_executing_kernel() {
+        let (x, w) = case(20, 260, 46);
+        for (group, shards) in [(260usize, 1usize), (32, 1), (32, 2), (9, 4)] {
+            let (_, per_exec) = sharded_group_reuse_matmul_chunked(&x, &w, group, 64, shards);
+            let per_scan = group_accounting(&w, group, 64, shards, w.rows as u64);
+            assert_eq!(per_scan, per_exec, "group={group} shards={shards}");
+        }
+        // And scaling extrapolates ops linearly.
+        let per = group_accounting(&w, 32, 64, 1, (w.rows * 3) as u64);
+        let ops: u64 = per.iter().map(|s| s.mults + s.reuses).sum();
+        assert_eq!(ops, (w.rows * w.cols * 3) as u64);
+    }
+
+    #[test]
+    fn group_matmul_f32_tracks_the_float_product_per_group() {
+        let mut rng = Rng::new(47);
+        let (rows, cols) = (48, 96);
+        let wf = synthesize_floats(rows, cols, WeightDistribution::default(), &mut rng);
+        let gq = GroupQuantMatrix::fit(rows, cols, &wf, 8, 16);
+        let x: Vec<f32> = (0..rows).map(|_| rng.normal() as f32 * 0.1).collect();
+        let (y, stats) = group_matmul_f32(&x, &gq, 64);
+        assert_eq!(stats.mults + stats.reuses, (rows * cols) as u64);
+        // Float reference.
+        let mut y_ref = vec![0f32; cols];
+        for (i, &xi) in x.iter().enumerate() {
+            for j in 0..cols {
+                y_ref[j] += xi * wf[i * cols + j];
+            }
+        }
+        // Two int8 grids: tolerance scales with the row norms.
+        let tol = 0.05 * x.iter().map(|v| v.abs()).sum::<f32>().max(1.0);
+        for (j, (&a, &b)) in y.iter().zip(&y_ref).enumerate() {
+            assert!((a - b).abs() <= tol, "col {j}: {a} vs {b} (tol {tol})");
+        }
+    }
+
+    #[test]
+    fn qmatmul_group_wrappers_agree_scalar_vs_packed() {
+        let mut rng = Rng::new(48);
+        let (rows, cols, seq) = (64, 80, 3);
+        let w = synthesize_matrix(rows, cols, WeightDistribution::default(), &mut rng);
+        let packed = w.packed();
+        let x: Vec<f32> = (0..seq * rows).map(|_| rng.normal() as f32 * 0.1).collect();
+        for shards in [1usize, 2, 4] {
+            for rowwise in [false, true] {
+                for group in [80usize, 24, 7] {
+                    let n = shards.max(1);
+                    let mut st_s = ExecStats::default();
+                    let mut per_s = vec![ExecStats::default(); n];
+                    let y_s = qmatmul_group(
+                        &x, seq, &w, group, 32, shards, rowwise, &mut per_s, &mut st_s,
+                    );
+                    let mut st_p = ExecStats::default();
+                    let mut per_p = vec![ExecStats::default(); n];
+                    let mut arena = ExecArena::new();
+                    let y_p = qmatmul_group_packed(
+                        &x, seq, &packed, group, 32, shards, rowwise, &mut per_p, &mut st_p,
+                        &mut arena,
+                    );
+                    assert_eq!(y_s, y_p, "shards={shards} rowwise={rowwise} group={group}");
+                    assert_eq!(st_s, st_p);
+                    if shards > 1 {
+                        assert_eq!(per_s, per_p);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_single_column_shapes() {
+        let (x, w) = case(6, 0, 49);
+        let (y, s) = group_reuse_matmul_chunked(&x, &w, 4, 8);
+        assert!(y.is_empty());
+        assert_eq!(s, ExecStats::default());
+        let (x1, w1) = case(6, 1, 50);
+        let (y1, s1) = group_reuse_matmul_chunked(&x1, &w1, 1, 8);
+        assert_eq!(y1, dense_matmul(&x1, &w1));
+        assert_eq!(s1.mults + s1.reuses, 6);
+    }
+}

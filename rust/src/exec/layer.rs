@@ -8,6 +8,7 @@
 //! in the integration tests.
 
 use crate::config::ModelConfig;
+use crate::exec::group::{qmatmul_group, qmatmul_group_packed};
 use crate::exec::{
     fill_products, packed_tile, reuse_matmul_chunked, reuse_matmul_packed, shard_ranges,
     sharded_reuse_matmul_chunked, sharded_reuse_matmul_packed, EpochTags, ExecArena, ExecStats,
@@ -372,12 +373,19 @@ fn qmatmul_sharded_packed_par(
 /// packed/tiled arena path, monolithic or sharded, block-grid or row-wise
 /// activation quantization. All routes are bit-identical in values and
 /// counters.
+///
+/// A `group > 0` width routes through the group-scoped kernels of
+/// [`crate::exec::group`]: the Result Cache re-opens at every
+/// `group`-column scale boundary. Outputs stay bit-identical to the
+/// per-tensor routes (the codes keep the model's carrier grid — see
+/// [`qmatmul_group`]); only the mult/reuse split moves.
 #[allow(clippy::too_many_arguments)]
 fn matmul_dispatch(
     x: &[f32],
     seq: usize,
     weights: &LayerWeights,
     kind: MatKind,
+    group: usize,
     chunk: usize,
     shards: usize,
     scalar: bool,
@@ -386,6 +394,26 @@ fn matmul_dispatch(
     shard_stats: &mut [ExecStats],
     arena: &mut ExecArena,
 ) -> Vec<f32> {
+    if group > 0 {
+        return if scalar {
+            let w = weights.get(kind);
+            qmatmul_group(x, seq, w, group, chunk, shards, rowwise, shard_stats, stats)
+        } else {
+            let w = weights.get_packed(kind);
+            qmatmul_group_packed(
+                x,
+                seq,
+                w,
+                group,
+                chunk,
+                shards,
+                rowwise,
+                shard_stats,
+                stats,
+                arena,
+            )
+        };
+    }
     if scalar {
         let w = weights.get(kind);
         match (shards <= 1, rowwise) {
@@ -468,6 +496,10 @@ pub struct LayerExec<'a> {
     /// Route matmuls through the seed scalar reference kernels instead of
     /// the packed/tiled arena path (bit-identical either way).
     scalar: bool,
+    /// Column-group width of the active quantization regime (`0` =
+    /// per-tensor, the default): when set, every weight matmul runs the
+    /// group-scoped reuse kernels (RC re-opens at group boundaries).
+    group: usize,
 }
 
 impl<'a> LayerExec<'a> {
@@ -482,6 +514,7 @@ impl<'a> LayerExec<'a> {
             shard_stats: Vec::new(),
             arena: ExecArena::new(),
             scalar: false,
+            group: 0,
         }
     }
 
@@ -523,6 +556,17 @@ impl<'a> LayerExec<'a> {
         self
     }
 
+    /// Scope the Result Cache to `group`-column scale groups (the
+    /// group-wise quantization regime of [`crate::quant::QuantRegime`]):
+    /// every weight matmul re-opens its cache at each group boundary, so
+    /// reuse cannot cross a scale change. `0` restores the per-tensor
+    /// default. Outputs stay bit-identical across settings — the regime
+    /// re-scopes accounting, not values.
+    pub fn with_quant_group(mut self, group: usize) -> Self {
+        self.group = group;
+        self
+    }
+
     /// Forward one sequence (`seq × d_model`, row-major) through
     /// attention + FFN with residuals and layer norm (post-LN).
     pub fn forward(&mut self, x: &[f32], seq: usize) -> Vec<f32> {
@@ -535,6 +579,7 @@ impl<'a> LayerExec<'a> {
         // closure (passed per call) so the attention section can draw its
         // score scratch from it between matmuls.
         let (chunk, shards, scalar) = (self.chunk, self.shards, self.scalar);
+        let group = self.group;
         let weights = self.weights;
         let stats = &mut self.stats;
         let shard_stats = &mut self.shard_stats;
@@ -545,6 +590,7 @@ impl<'a> LayerExec<'a> {
                 seq,
                 weights,
                 kind,
+                group,
                 chunk,
                 shards,
                 scalar,
@@ -625,6 +671,7 @@ impl<'a> LayerExec<'a> {
         // passed per call so the causal attention loop can draw its
         // score scratch from it between matmuls.
         let (chunk, shards, scalar) = (self.chunk, self.shards, self.scalar);
+        let group = self.group;
         let weights = self.weights;
         let stats = &mut self.stats;
         let shard_stats = &mut self.shard_stats;
@@ -635,6 +682,7 @@ impl<'a> LayerExec<'a> {
                 seq,
                 weights,
                 kind,
+                group,
                 chunk,
                 shards,
                 scalar,

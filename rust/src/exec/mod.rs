@@ -8,9 +8,14 @@
 //! arithmetic semantics"* — reuse is a scheduling transformation, not an
 //! approximation.
 
+pub mod group;
 pub mod layer;
 pub mod sharded;
 
+pub use group::{
+    group_accounting, group_matmul_f32, group_reuse_matmul_chunked, group_reuse_matmul_packed,
+    sharded_group_reuse_matmul_chunked, sharded_group_reuse_matmul_packed,
+};
 pub use layer::{qmatmul_rowwise, quantize_row, softmax_rows, LayerExec, LayerKv};
 pub use sharded::{
     shard_accounting, shard_ranges, sharded_reuse_matmul_chunked, sharded_reuse_matmul_packed,

@@ -186,6 +186,11 @@ USAGE:
         axllm serve --decode --disagg --chunk-tokens 32 --flash-crowd 8 --backend sim
         axllm serve --decode --slo --heavy-tails 1.5 --backend sim
         axllm serve --decode --disagg --live --backend functional
+  axllm sweep-quant [--csv] [--json] [--seed N] [--sample-rows N]
+      sweeps group-wise quantization regimes (per-tensor down to
+      group-16 scales) over one seeded weight matrix and reports the
+      reuse-rate / SNR / streamed-bytes Pareto; --json emits the
+      deterministic document benches/quant_sweep.rs pins.
   axllm info [--artifacts DIR]
 ";
 
@@ -958,6 +963,19 @@ fn cmd_info(args: &cli::Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_sweep_quant(args: &cli::Args) -> Result<(), String> {
+    let ctx = RunCtx {
+        seed: args.get("seed", 42u64)?,
+        sample_rows: args.get("sample-rows", 64usize)?,
+    };
+    if args.get_bool("json") {
+        print!("{}", report::quant_sweep::json(ctx));
+    } else {
+        emit(&report::quant_sweep::generate(ctx), args.get_bool("csv"));
+    }
+    Ok(())
+}
+
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match cli::Args::parse(&argv) {
@@ -970,6 +988,7 @@ fn main() -> ExitCode {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
     let result = match cmd {
         "reproduce" => cmd_reproduce(&args),
+        "sweep-quant" => cmd_sweep_quant(&args),
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
         "info" => cmd_info(&args),

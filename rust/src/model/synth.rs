@@ -87,6 +87,26 @@ impl WeightDistribution {
     }
 }
 
+/// Synthesize the raw float samples of a `rows×cols` matrix, row-major.
+///
+/// The un-quantized form feeds the group-wise quantization study
+/// ([`crate::quant::GroupQuantMatrix::fit`] needs the floats to fit one
+/// grid per column group) and any fidelity measurement that compares a
+/// quantizer's output against the original values.
+pub fn synthesize_floats(
+    rows: usize,
+    cols: usize,
+    dist: WeightDistribution,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let n = rows * cols;
+    let mut data = Vec::with_capacity(n);
+    for _ in 0..n {
+        data.push(dist.sample(rng));
+    }
+    data
+}
+
 /// Synthesize a quantized `rows×cols` matrix.
 ///
 /// The float samples go through [`QuantParams::fit`] — the same symmetric
@@ -98,11 +118,7 @@ pub fn synthesize_matrix(
     dist: WeightDistribution,
     rng: &mut Rng,
 ) -> QuantMatrix {
-    let n = rows * cols;
-    let mut data = Vec::with_capacity(n);
-    for _ in 0..n {
-        data.push(dist.sample(rng));
-    }
+    let data = synthesize_floats(rows, cols, dist, rng);
     QuantMatrix::from_f32(rows, cols, &data, dist.bits)
 }
 

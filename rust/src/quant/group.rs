@@ -1,0 +1,463 @@
+//! Group-wise quantization regimes (ROADMAP item 4, FineQuant-style).
+//!
+//! Per-tensor symmetric quantization fits **one** scale to a whole weight
+//! matrix. Group-wise quantization instead fits one [`QuantParams`] per
+//! contiguous **column group** of `group_size` output columns, trading
+//! fidelity (each group's grid hugs its own amplitude) against Result-
+//! Cache locality: codes from different groups live on different grids,
+//! so a product cached for one group is invalid in the next — the RC's
+//! product table is conceptually *per group* ("keyed off the group's
+//! scale"), and reuse cannot cross a group boundary. `group_size = cols`
+//! (one group) degenerates bit-exactly to the per-tensor path — codes,
+//! outputs, and reuse counters — pinned by `tests/prop_quant_group.rs`.
+//!
+//! The module also provides the compressed weight-code streaming model:
+//! a measured run-length / entropy-proxy packing of the code stream
+//! ([`compress_codes`]) whose byte counts feed
+//! `CostModel::with_quant_regime` as reduced weight-streaming bandwidth.
+
+use crate::quant::{QuantMatrix, QuantParams};
+
+/// A quantization regime: the group width scales are fitted over, plus
+/// whether weight codes stream compressed. Threaded through
+/// `LayerExec`/`FunctionalBackend` (group-scoped reuse kernels) and
+/// `SimBackend`/`CostModel` (streaming-bandwidth accounting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuantRegime {
+    /// Column-group width one fitted scale covers. `0` means per-tensor
+    /// (one group spanning all columns — today's default path).
+    pub group_size: usize,
+    /// Stream weight codes through the run-length/entropy-proxy
+    /// compressed representation instead of raw one-byte codes.
+    pub compressed: bool,
+}
+
+impl QuantRegime {
+    /// The default per-tensor regime: one scale per matrix, raw codes.
+    pub fn per_tensor() -> QuantRegime {
+        QuantRegime {
+            group_size: 0,
+            compressed: false,
+        }
+    }
+
+    /// Group-wise regime with one fitted scale per `group_size` columns.
+    pub fn grouped(group_size: usize) -> QuantRegime {
+        assert!(
+            group_size > 0,
+            "group_size must be positive (0 is the per-tensor sentinel)"
+        );
+        QuantRegime {
+            group_size,
+            compressed: false,
+        }
+    }
+
+    /// Toggle the compressed weight-code streaming path.
+    pub fn with_compressed(mut self, compressed: bool) -> QuantRegime {
+        self.compressed = compressed;
+        self
+    }
+
+    /// True when the regime is the per-tensor degenerate (one group).
+    pub fn is_per_tensor(&self) -> bool {
+        self.group_size == 0
+    }
+
+    /// The concrete group width for a matrix of `cols` columns: the
+    /// per-tensor sentinel (and any width ≥ `cols`) resolves to one
+    /// group spanning every column.
+    pub fn effective_group(&self, cols: usize) -> usize {
+        if self.group_size == 0 {
+            cols.max(1)
+        } else {
+            self.group_size.min(cols.max(1))
+        }
+    }
+}
+
+impl Default for QuantRegime {
+    fn default() -> Self {
+        QuantRegime::per_tensor()
+    }
+}
+
+/// A weight matrix quantized group-wise: the code payload plus one
+/// fitted [`QuantParams`] per contiguous column group.
+///
+/// The codes live in an ordinary [`QuantMatrix`] carrier so the existing
+/// kernels (which operate purely in integer code space — scales apply
+/// downstream) run unchanged; `codes.params` holds group 0's scale so a
+/// single-group matrix **is** the per-tensor matrix. Dequantization of a
+/// multi-group matrix must go through [`GroupQuantMatrix::dequantize`]
+/// (per-group scales), never `codes.dequantize()`.
+#[derive(Clone, Debug)]
+pub struct GroupQuantMatrix {
+    /// Code payload (`rows × cols` row-major). `codes.params` is the
+    /// group-0 scale (the whole-tensor fit when there is one group).
+    pub codes: QuantMatrix,
+    /// Column-group width the scales were fitted over (≥ 1; clamped to
+    /// the column count).
+    pub group_size: usize,
+    /// One fitted [`QuantParams`] per column group
+    /// (`ceil(cols / group_size)` entries; empty for empty matrices).
+    pub group_params: Vec<QuantParams>,
+}
+
+impl GroupQuantMatrix {
+    /// Fit a group-wise quantization of `data` (`rows × cols` row-major
+    /// floats): each contiguous `group_size`-column group gets its own
+    /// symmetric [`QuantParams::fit`] over the group's values across
+    /// **all** rows, and its columns are quantized on that grid.
+    ///
+    /// `group_size ≥ cols` (or `0`, the per-tensor sentinel) yields one
+    /// group whose fit — and therefore every code — is bit-identical to
+    /// [`QuantMatrix::from_f32`].
+    pub fn fit(
+        rows: usize,
+        cols: usize,
+        data: &[f32],
+        bits: u8,
+        group_size: usize,
+    ) -> GroupQuantMatrix {
+        assert_eq!(data.len(), rows * cols);
+        let group = if group_size == 0 {
+            cols.max(1)
+        } else {
+            group_size.min(cols.max(1))
+        };
+        let n_groups = cols.div_ceil(group);
+        let mut group_params = Vec::with_capacity(n_groups);
+        let mut q = vec![0i8; rows * cols];
+        let mut scratch: Vec<f32> = Vec::new();
+        for g in 0..n_groups {
+            let (c0, c1) = (g * group, ((g + 1) * group).min(cols));
+            scratch.clear();
+            for r in 0..rows {
+                scratch.extend_from_slice(&data[r * cols + c0..r * cols + c1]);
+            }
+            let params = QuantParams::fit(&scratch, bits);
+            for r in 0..rows {
+                for c in c0..c1 {
+                    q[r * cols + c] = params.quantize(data[r * cols + c]);
+                }
+            }
+            group_params.push(params);
+        }
+        let carrier = group_params
+            .first()
+            .copied()
+            .unwrap_or(QuantParams { scale: 1.0, bits });
+        GroupQuantMatrix {
+            codes: QuantMatrix {
+                rows,
+                cols,
+                data: q,
+                params: carrier,
+            },
+            group_size: group,
+            group_params,
+        }
+    }
+
+    /// Re-scope an existing per-tensor matrix into column groups
+    /// **without refitting**: codes are unchanged (every group keeps the
+    /// source scale), so only the Result-Cache scoping — and the
+    /// per-group scale-streaming overhead — differ. This is the form the
+    /// sim backend measures (the model's analytic grid stays
+    /// row-sampling-stable) and the bit-identity oracle the property
+    /// suite pins the group kernels against.
+    pub fn from_quant(m: &QuantMatrix, group_size: usize) -> GroupQuantMatrix {
+        let group = if group_size == 0 {
+            m.cols.max(1)
+        } else {
+            group_size.min(m.cols.max(1))
+        };
+        let n_groups = m.cols.div_ceil(group);
+        GroupQuantMatrix {
+            codes: m.clone(),
+            group_size: group,
+            group_params: vec![m.params; n_groups],
+        }
+    }
+
+    /// Number of column groups (`0` only for empty matrices).
+    pub fn n_groups(&self) -> usize {
+        self.group_params.len()
+    }
+
+    /// The group owning column `c`.
+    pub fn group_of(&self, c: usize) -> usize {
+        c / self.group_size
+    }
+
+    /// Dequantize the whole matrix with each column's own group scale.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let (rows, cols) = (self.codes.rows, self.codes.cols);
+        let mut out = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for (c, &q) in self.codes.row(r).iter().enumerate() {
+                out.push(self.group_params[c / self.group_size].dequantize(q));
+            }
+        }
+        out
+    }
+
+    /// Collapse to a plain per-tensor [`QuantMatrix`]. Only meaningful
+    /// in the degenerate single-group case (asserted), where the result
+    /// is bit-identical to the per-tensor fit.
+    pub fn to_quant(&self) -> QuantMatrix {
+        assert!(
+            self.n_groups() <= 1,
+            "to_quant: {} groups cannot collapse to one per-tensor scale",
+            self.n_groups()
+        );
+        self.codes.clone()
+    }
+
+    /// SNR proxy of this quantization against the original floats
+    /// (`rows × cols` row-major), in dB, with the same finite-value
+    /// semantics as [`crate::quant::quant_snr_db`]: `0.0` for empty or
+    /// all-zero input, capped at [`crate::quant::SNR_CAP_DB`].
+    pub fn snr_db(&self, original: &[f32]) -> f64 {
+        assert_eq!(original.len(), self.codes.rows * self.codes.cols);
+        let deq = self.dequantize();
+        let mut sig = 0.0f64;
+        let mut noise = 0.0f64;
+        for (&x, &y) in original.iter().zip(&deq) {
+            sig += (x as f64) * (x as f64);
+            let e = (x - y) as f64;
+            noise += e * e;
+        }
+        crate::quant::snr_db_from_power(sig, noise)
+    }
+}
+
+/// Measured byte accounting of one weight matrix's code stream under the
+/// compressed storage path: the cheaper of a run-length packing and an
+/// entropy-proxy packing, with a stored-raw escape so the payload can
+/// never exceed the raw stream. Produced by [`compress_codes`]; consumed
+/// by `CostModel::with_quant_regime` as the weight-streaming byte tariff.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CompressedCodes {
+    /// Raw stream: one byte per weight code.
+    pub raw_bytes: u64,
+    /// Chosen payload: `min(run-length, entropy-proxy, raw)` bytes.
+    pub payload_bytes: u64,
+    /// Run-length candidate: 2 bytes (code, count ≤ 255) per run.
+    pub rle_bytes: u64,
+    /// Entropy-proxy candidate: `⌈n·H/8⌉` stream bytes plus a 2-byte
+    /// table entry per distinct code (H = Shannon entropy of the code
+    /// histogram, bits/code).
+    pub entropy_bytes: u64,
+    /// Scale sidecar: 4 bytes (one `f32`) per column group. Streams with
+    /// the payload either way, but grows as groups shrink — the memory
+    /// axis of the group-size Pareto.
+    pub scale_bytes: u64,
+}
+
+impl CompressedCodes {
+    /// Total streamed bytes on the compressed path: payload + scales.
+    pub fn total_bytes(&self) -> u64 {
+        self.payload_bytes + self.scale_bytes
+    }
+
+    /// Compression ratio `payload / raw` (1.0 for an empty stream).
+    pub fn ratio(&self) -> f64 {
+        if self.raw_bytes == 0 {
+            1.0
+        } else {
+            self.payload_bytes as f64 / self.raw_bytes as f64
+        }
+    }
+}
+
+/// Measure the compressed size of a weight-code stream (run-length and
+/// entropy-proxy candidates, stored-raw escape) carrying `n_groups`
+/// group scales. Pure accounting — nothing is materialized; the sim cost
+/// model only needs the byte counts.
+///
+/// Invariant (pinned by tests): `payload_bytes ≤ raw_bytes` for every
+/// input, because the raw stream is always a candidate.
+pub fn compress_codes(data: &[i8], n_groups: usize) -> CompressedCodes {
+    let raw_bytes = data.len() as u64;
+    // Run-length candidate: (code, count) pairs, runs capped at 255.
+    let mut rle_bytes = 0u64;
+    let mut i = 0usize;
+    while i < data.len() {
+        let mut j = i + 1;
+        while j < data.len() && data[j] == data[i] && j - i < 255 {
+            j += 1;
+        }
+        rle_bytes += 2;
+        i = j;
+    }
+    // Entropy-proxy candidate: Shannon entropy of the code histogram.
+    let mut hist = [0u64; 256];
+    for &q in data {
+        hist[(q as u8) as usize] += 1;
+    }
+    let n = data.len() as f64;
+    let mut h_bits = 0.0f64;
+    let mut distinct = 0u64;
+    for &c in &hist {
+        if c > 0 {
+            distinct += 1;
+            let p = c as f64 / n;
+            h_bits -= p * p.log2();
+        }
+    }
+    let entropy_bytes = if data.is_empty() {
+        0
+    } else {
+        (n * h_bits / 8.0).ceil() as u64 + 2 * distinct
+    };
+    CompressedCodes {
+        raw_bytes,
+        payload_bytes: raw_bytes.min(rle_bytes).min(entropy_bytes),
+        rle_bytes,
+        entropy_bytes,
+        scale_bytes: 4 * n_groups as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synth::{synthesize_floats, WeightDistribution};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn single_group_fit_is_bit_identical_to_per_tensor() {
+        let mut rng = Rng::new(71);
+        let (rows, cols) = (12, 96);
+        let data = synthesize_floats(rows, cols, WeightDistribution::default(), &mut rng);
+        let per_tensor = QuantMatrix::from_f32(rows, cols, &data, 8);
+        for group in [0usize, cols, cols + 1, 10 * cols] {
+            let g = GroupQuantMatrix::fit(rows, cols, &data, 8, group);
+            assert_eq!(g.n_groups(), 1);
+            assert_eq!(g.codes.data, per_tensor.data, "group={group}");
+            assert_eq!(g.codes.params, per_tensor.params, "group={group}");
+            assert_eq!(g.to_quant().data, per_tensor.data);
+        }
+    }
+
+    #[test]
+    fn group_fit_bounds_per_group_roundtrip_error() {
+        let mut rng = Rng::new(72);
+        let (rows, cols) = (8, 64);
+        let data = synthesize_floats(rows, cols, WeightDistribution::default(), &mut rng);
+        for group in [8usize, 16, 32, 64] {
+            let g = GroupQuantMatrix::fit(rows, cols, &data, 8, group);
+            let deq = g.dequantize();
+            for (c, (&x, &y)) in data.iter().zip(&deq).enumerate() {
+                let params = g.group_params[(c % cols) / g.group_size];
+                // Round-to-nearest on an un-clipped symmetric grid:
+                // error ≤ half a step of the *group's* scale.
+                assert!(
+                    (x - y).abs() <= 0.5 * params.scale + f32::EPSILON,
+                    "group={group} idx={c}: |{x} - {y}| > scale/2 = {}",
+                    0.5 * params.scale
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn smaller_groups_never_hurt_snr_on_gaussian_weights() {
+        let mut rng = Rng::new(73);
+        let (rows, cols) = (32, 256);
+        let data = synthesize_floats(rows, cols, WeightDistribution::default(), &mut rng);
+        let snr_pt = GroupQuantMatrix::fit(rows, cols, &data, 8, 0).snr_db(&data);
+        let snr_g = GroupQuantMatrix::fit(rows, cols, &data, 8, 16).snr_db(&data);
+        // Each group's amax ≤ the global amax, so group grids are finer.
+        assert!(snr_g > snr_pt, "group 16 {snr_g} dB vs per-tensor {snr_pt} dB");
+    }
+
+    #[test]
+    fn from_quant_keeps_codes_and_counts_groups() {
+        let mut rng = Rng::new(74);
+        let data = synthesize_floats(4, 100, WeightDistribution::default(), &mut rng);
+        let m = QuantMatrix::from_f32(4, 100, &data, 8);
+        let g = GroupQuantMatrix::from_quant(&m, 30);
+        assert_eq!(g.codes.data, m.data);
+        assert_eq!(g.n_groups(), 4, "100 cols / width 30 → 4 ragged groups");
+        assert!(g.group_params.iter().all(|p| *p == m.params));
+        assert_eq!(g.group_of(29), 0);
+        assert_eq!(g.group_of(30), 1);
+        assert_eq!(g.group_of(99), 3);
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes_are_finite() {
+        let g = GroupQuantMatrix::fit(0, 0, &[], 8, 0);
+        assert_eq!(g.n_groups(), 0);
+        assert_eq!(g.snr_db(&[]), 0.0, "empty matrix SNR must be finite");
+        assert_eq!(g.to_quant().data.len(), 0);
+        let z = GroupQuantMatrix::fit(2, 3, &[0.0; 6], 8, 2);
+        assert_eq!(z.snr_db(&[0.0; 6]), 0.0, "all-zero input SNR must be finite");
+        assert!(z.dequantize().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn compressed_payload_never_exceeds_raw() {
+        let mut rng = Rng::new(75);
+        // Gaussian codes, constant runs, uniform codes, empty.
+        let gauss: Vec<i8> = {
+            let f = synthesize_floats(16, 256, WeightDistribution::default(), &mut rng);
+            QuantMatrix::from_f32(16, 256, &f, 8).data
+        };
+        let runs = vec![3i8; 4096];
+        let uni: Vec<i8> = (0..4096).map(|_| rng.range_i64(-127, 127) as i8).collect();
+        for (name, data) in [
+            ("gaussian", gauss),
+            ("runs", runs),
+            ("uniform", uni),
+            ("empty", Vec::new()),
+        ] {
+            let c = compress_codes(&data, 4);
+            assert!(
+                c.payload_bytes <= c.raw_bytes,
+                "{name}: payload {} > raw {}",
+                c.payload_bytes,
+                c.raw_bytes
+            );
+            assert_eq!(c.scale_bytes, 16);
+            assert!(c.ratio().is_finite());
+        }
+    }
+
+    #[test]
+    fn gaussian_codes_entropy_compress_strictly() {
+        let mut rng = Rng::new(76);
+        let f = synthesize_floats(64, 512, WeightDistribution::default(), &mut rng);
+        let m = QuantMatrix::from_f32(64, 512, &f, 8);
+        let c = compress_codes(&m.data, 1);
+        // Clipped-Gaussian 8-bit codes carry well under 8 bits/code of
+        // entropy — the compressed streaming claim of ROADMAP item 4.
+        assert!(
+            c.total_bytes() < c.raw_bytes,
+            "total {} must beat raw {}",
+            c.total_bytes(),
+            c.raw_bytes
+        );
+        assert!(c.entropy_bytes <= c.rle_bytes, "entropy path should win on Gaussian codes");
+    }
+
+    #[test]
+    fn constant_stream_prefers_run_length() {
+        let c = compress_codes(&vec![-5i8; 10_000], 1);
+        assert_eq!(c.rle_bytes, 2 * (10_000u64).div_ceil(255));
+        assert!(c.payload_bytes == c.rle_bytes && c.rle_bytes < c.entropy_bytes.max(1));
+    }
+
+    #[test]
+    fn regime_effective_group_resolves_sentinels() {
+        assert!(QuantRegime::per_tensor().is_per_tensor());
+        assert_eq!(QuantRegime::per_tensor().effective_group(512), 512);
+        assert_eq!(QuantRegime::grouped(64).effective_group(512), 64);
+        assert_eq!(QuantRegime::grouped(1024).effective_group(512), 512);
+        assert_eq!(QuantRegime::per_tensor().effective_group(0), 1);
+        assert!(QuantRegime::grouped(8).with_compressed(true).compressed);
+    }
+}

@@ -7,8 +7,10 @@
 //! "Simulation setup": *"we maintain a 128-element reuse cache (instead of
 //! 256) and map each value and its negative to the same cell"*).
 
+pub mod group;
 pub mod stats;
 
+pub use group::{compress_codes, CompressedCodes, GroupQuantMatrix, QuantRegime};
 pub use stats::{chunk_unique_counts, LocalityStats};
 
 /// Number of distinct folded values with sign-folding 8-bit quantization.
@@ -287,8 +289,31 @@ impl PackedQuantMatrix {
     }
 }
 
+/// Finite cap on reported SNR, dB. A lossless round trip has zero noise
+/// and a true SNR of +∞, but the report/bench emitters require every
+/// metric to stay finite (the PR 5 NaN/inf hygiene sweep), so exact
+/// reconstructions report this ceiling instead — far above any value an
+/// 8-bit quantizer can reach on real data (~50 dB).
+pub const SNR_CAP_DB: f64 = 300.0;
+
+/// Finite SNR in dB from accumulated signal/noise power: `0.0` when the
+/// signal is empty or all-zero, [`SNR_CAP_DB`] when the noise is exactly
+/// zero, the capped ratio otherwise. Shared by [`quant_snr_db`] and
+/// [`GroupQuantMatrix::snr_db`] so both report the same edge-case
+/// semantics (regression-tested below).
+pub fn snr_db_from_power(sig: f64, noise: f64) -> f64 {
+    if sig == 0.0 {
+        0.0
+    } else if noise == 0.0 {
+        SNR_CAP_DB
+    } else {
+        (10.0 * (sig / noise).log10()).min(SNR_CAP_DB)
+    }
+}
+
 /// Quantization error metrics (used to check the "<1% accuracy impact"
-/// premise on synthetic activations).
+/// premise on synthetic activations). Always finite: empty and all-zero
+/// inputs report 0 dB, lossless round trips report [`SNR_CAP_DB`].
 pub fn quant_snr_db(original: &[f32], params: &QuantParams) -> f64 {
     let mut sig = 0.0f64;
     let mut noise = 0.0f64;
@@ -298,11 +323,7 @@ pub fn quant_snr_db(original: &[f32], params: &QuantParams) -> f64 {
         let e = (x - q) as f64;
         noise += e * e;
     }
-    if noise == 0.0 {
-        f64::INFINITY
-    } else {
-        10.0 * (sig / noise).log10()
-    }
+    snr_db_from_power(sig, noise)
 }
 
 #[cfg(test)]
@@ -448,5 +469,21 @@ mod tests {
         let p8 = QuantParams::fit(&data, 8);
         let p4 = QuantParams::fit(&data, 4);
         assert!(quant_snr_db(&data, &p8) > quant_snr_db(&data, &p4) + 10.0);
+    }
+
+    #[test]
+    fn snr_edge_cases_stay_finite() {
+        // Regression (ROADMAP item 4 / PR 5 hygiene): quant_snr_db used
+        // to return +∞ for zero-noise inputs, which poisons every JSON
+        // emitter downstream. Empty input → 0 dB; all-zero input (zero
+        // signal AND zero noise) → 0 dB; exactly representable input
+        // (zero noise, nonzero signal) → the finite cap.
+        let p = QuantParams { scale: 1.0, bits: 8 };
+        assert_eq!(quant_snr_db(&[], &p), 0.0);
+        assert_eq!(quant_snr_db(&[0.0; 64], &p), 0.0);
+        let exact = quant_snr_db(&[1.0, -3.0, 64.0], &p);
+        assert_eq!(exact, SNR_CAP_DB);
+        let noisy = quant_snr_db(&[0.5, 1.25, -0.3], &p);
+        assert!(noisy.is_finite() && noisy < SNR_CAP_DB);
     }
 }

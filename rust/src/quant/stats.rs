@@ -205,6 +205,26 @@ mod tests {
     }
 
     #[test]
+    fn locality_edge_cases_stay_finite() {
+        // Regression (ROADMAP item 4 / PR 5 hygiene): the division
+        // guards in reuse_rate/mean_unique must hold on empty matrices,
+        // all-zero codes, and single-chunk rows — the three shapes the
+        // quant-sweep emitters can feed them.
+        let empty = measure_locality(&q(0, 0, vec![]), 64);
+        assert_eq!(empty.reuse_rate(), 0.0);
+        assert_eq!(empty.mean_unique(), 0.0);
+        assert!(empty.reuse_rate().is_finite() && empty.mean_unique().is_finite());
+
+        let zeros = measure_locality(&q(2, 32, vec![0; 64]), 64);
+        assert!((zeros.reuse_rate() - (1.0 - 2.0 / 64.0)).abs() < 1e-12);
+        assert_eq!(zeros.mean_unique(), 1.0);
+
+        let single = measure_locality(&q(1, 5, vec![1, 2, 3, 2, 1]), 64);
+        assert!(single.reuse_rate().is_finite());
+        assert_eq!(single.mean_unique(), 3.0);
+    }
+
+    #[test]
     fn hist_sums_to_chunk_count() {
         let mut rng = Rng::new(11);
         let data: Vec<i8> = (0..2048)

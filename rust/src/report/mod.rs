@@ -11,6 +11,7 @@ pub mod fig8;
 pub mod fig9;
 pub mod lora;
 pub mod power;
+pub mod quant_sweep;
 pub mod shiftadd;
 
 pub use crate::util::table::Table;

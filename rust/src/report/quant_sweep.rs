@@ -1,0 +1,209 @@
+//! Quantization-regime design-space sweep (ROADMAP item 4): the
+//! reuse-rate / SNR-proxy / memory Pareto over group sizes.
+//!
+//! AxLLM's core claim is that quantization creates parameter locality a
+//! reuse cache can exploit. This sweep probes the claim across the
+//! quantization design space: per-group scales (FineQuant-style,
+//! [`crate::quant::GroupQuantMatrix`]) improve fidelity — each group's
+//! grid hugs its own amplitude — but fragment the code distribution the
+//! Result Cache feeds on, because reuse cannot cross a scale boundary.
+//! Compressed code streaming ([`crate::quant::compress_codes`]) moves the
+//! third axis: weight-streaming bytes. One table row per swept group
+//! width; surfaced as `axllm sweep-quant` and pinned by
+//! `benches/quant_sweep.rs` → `BENCH_quant_sweep.json`.
+
+use crate::config::AcceleratorConfig;
+use crate::exec::{group_accounting, ExecStats};
+use crate::model::synth::{synthesize_floats, WeightDistribution};
+use crate::quant::{compress_codes, GroupQuantMatrix};
+use crate::report::RunCtx;
+use crate::sim::Accelerator;
+use crate::util::rng::Rng;
+use crate::util::table::{count, fnum, pct, Table};
+
+/// Group widths the sweep visits, coarse to fine (`0` = per-tensor).
+pub const GROUP_SIZES: [usize; 4] = [0, 256, 64, 16];
+
+/// Columns of the swept weight matrix (a Llama-block-sized row slice).
+pub const SWEEP_COLS: usize = 512;
+
+/// One point of the group-size Pareto.
+#[derive(Clone, Debug)]
+pub struct QuantSweepRow {
+    /// Swept group width (`0` = per-tensor).
+    pub group_size: usize,
+    /// Fitted scale groups at this width.
+    pub n_groups: usize,
+    /// SNR proxy of the refit quantization against the float weights, dB.
+    pub snr_db: f64,
+    /// Group-scoped Result-Cache reuse rate of the refit codes at the
+    /// paper chunk bound.
+    pub reuse_rate: f64,
+    /// Raw streaming bytes: one byte per code plus the scale sidecar.
+    pub raw_bytes: u64,
+    /// Compressed streaming bytes ([`compress_codes`] payload + sidecar).
+    pub streamed_bytes: u64,
+}
+
+impl QuantSweepRow {
+    /// Human label of the group width.
+    pub fn label(&self) -> String {
+        if self.group_size == 0 {
+            "per-tensor".to_string()
+        } else {
+            self.group_size.to_string()
+        }
+    }
+
+    /// Streamed-over-raw byte ratio.
+    pub fn ratio(&self) -> f64 {
+        if self.raw_bytes == 0 {
+            1.0
+        } else {
+            self.streamed_bytes as f64 / self.raw_bytes as f64
+        }
+    }
+}
+
+/// Measure the Pareto: synthesize one Gaussian weight matrix
+/// (`ctx.sample_rows × SWEEP_COLS`, seeded by `ctx.seed`), refit it at
+/// every swept group width, and record fidelity (SNR), group-scoped
+/// reuse (RC epochs on the chunk × group grid), and streaming bytes.
+pub fn measure(ctx: RunCtx) -> Vec<QuantSweepRow> {
+    let rows_n = ctx.sample_rows.max(16);
+    let mut rng = Rng::new(ctx.seed ^ 0x9EAD);
+    let data = synthesize_floats(rows_n, SWEEP_COLS, WeightDistribution::default(), &mut rng);
+    let chunk = Accelerator::axllm(AcceleratorConfig::paper()).chunk_cols();
+    GROUP_SIZES
+        .iter()
+        .map(|&g| {
+            let gq = GroupQuantMatrix::fit(rows_n, SWEEP_COLS, &data, 8, g);
+            let mut st = ExecStats::default();
+            for s in group_accounting(&gq.codes, gq.group_size, chunk, 1, rows_n as u64) {
+                st.add(&s);
+            }
+            let c = compress_codes(&gq.codes.data, gq.n_groups());
+            QuantSweepRow {
+                group_size: g,
+                n_groups: gq.n_groups(),
+                snr_db: gq.snr_db(&data),
+                reuse_rate: st.reuse_rate(),
+                raw_bytes: c.raw_bytes + c.scale_bytes,
+                streamed_bytes: c.total_bytes(),
+            }
+        })
+        .collect()
+}
+
+/// The sweep as a table (`axllm sweep-quant`).
+pub fn generate(ctx: RunCtx) -> Table {
+    let rows = measure(ctx);
+    let mut t = Table::new(
+        "Quantization-regime sweep — reuse rate vs SNR vs streamed bytes per group size",
+        &["group size", "groups", "SNR (dB)", "reuse rate", "raw B", "streamed B", "ratio"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.label(),
+            r.n_groups.to_string(),
+            fnum(r.snr_db, 2),
+            pct(r.reuse_rate),
+            count(r.raw_bytes),
+            count(r.streamed_bytes),
+            fnum(r.ratio(), 3),
+        ]);
+    }
+    t
+}
+
+/// The sweep as a deterministic JSON document: fixed field order, fixed
+/// decimal widths, no floating environment dependence — seeded weights
+/// must produce a **byte-stable** emission (golden-pinned below and by
+/// `benches/quant_sweep.rs`).
+pub fn json(ctx: RunCtx) -> String {
+    let rows = measure(ctx);
+    let mut s = String::from("{\n  \"quant_sweep\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let sep = if i + 1 == rows.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"group_size\": {}, \"n_groups\": {}, \"snr_db\": {:.3}, \
+             \"reuse_rate\": {:.6}, \"raw_bytes\": {}, \"streamed_bytes\": {}, \
+             \"ratio\": {:.6}}}{sep}\n",
+            r.group_size,
+            r.n_groups,
+            r.snr_db,
+            r.reuse_rate,
+            r.raw_bytes,
+            r.streamed_bytes,
+            r.ratio(),
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_spans_the_locality_fidelity_tradeoff() {
+        let rows = measure(RunCtx::default());
+        assert_eq!(rows.len(), GROUP_SIZES.len());
+        let pt = &rows[0];
+        let finest = rows.last().unwrap();
+        assert_eq!(pt.label(), "per-tensor");
+        assert_eq!(pt.n_groups, 1);
+        assert_eq!(finest.n_groups, SWEEP_COLS / 16);
+        // The acceptance tradeoff: the finest groups trade reuse for SNR.
+        assert!(
+            finest.reuse_rate < pt.reuse_rate,
+            "group-16 reuse {} not below per-tensor {}",
+            finest.reuse_rate,
+            pt.reuse_rate
+        );
+        assert!(
+            finest.snr_db > pt.snr_db,
+            "group-16 SNR {} not above per-tensor {}",
+            finest.snr_db,
+            pt.snr_db
+        );
+        for r in &rows {
+            assert!(
+                r.streamed_bytes < r.raw_bytes,
+                "{}: streamed {} not below raw {}",
+                r.label(),
+                r.streamed_bytes,
+                r.raw_bytes
+            );
+            assert!(r.ratio() > 0.0 && r.ratio() < 1.0);
+            assert!(r.snr_db.is_finite() && r.reuse_rate.is_finite());
+            assert!(r.reuse_rate > 0.0 && r.reuse_rate < 1.0);
+        }
+    }
+
+    #[test]
+    fn table_has_one_row_per_group_size() {
+        let t = generate(RunCtx::default());
+        assert_eq!(t.n_rows(), GROUP_SIZES.len());
+        assert_eq!(t.cell(0, 0), "per-tensor");
+        assert_eq!(t.cell(3, 0), "16");
+    }
+
+    #[test]
+    fn golden_json_is_byte_stable_and_clean() {
+        // Seeded weights must emit byte-identical JSON on every run —
+        // the golden pin guarding the Pareto emitter against silent
+        // drift — with no non-finite artifacts.
+        let a = json(RunCtx::default());
+        let b = json(RunCtx::default());
+        assert_eq!(a, b, "quant_sweep JSON must be deterministic");
+        assert!(a.starts_with("{\n  \"quant_sweep\": [\n"));
+        assert!(a.trim_end().ends_with("]\n}"));
+        assert_eq!(a.matches("\"group_size\"").count(), GROUP_SIZES.len());
+        assert!(!a.contains("inf") && !a.contains("NaN") && !a.contains("nan"));
+        // A different seed moves the measured cells.
+        let other = json(RunCtx { seed: 43, ..RunCtx::default() });
+        assert_ne!(a, other);
+    }
+}

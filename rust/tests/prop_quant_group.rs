@@ -1,0 +1,389 @@
+//! Property tests for group-wise quantization regimes (in-crate property
+//! runner — see `util::prop`).
+//!
+//! Four claims anchor the regime machinery:
+//! 1. **Degeneracy** — every group kernel at `group_size ≥ cols` is
+//!    bit-identical to the seed per-tensor kernel: outputs *and*
+//!    [`ExecStats`], scalar and packed, monolithic and per shard.
+//! 2. **Exactness under scoping** — group boundaries only move the
+//!    mult/reuse split, never values: for *any* group width (including
+//!    widths straddling the 4-code pack width and ragged tail groups)
+//!    the group kernels reproduce `dense_matmul` bit for bit, packed
+//!    matches scalar, and mults + reuses is conserved.
+//! 3. **Monotonicity** — refining the scale grid can only lose reuse:
+//!    nested group widths give non-decreasing mult counts, and
+//!    per-window unique-code counts are monotone under nested windows on
+//!    clustered code distributions (the RC-friendly regime the paper
+//!    targets).
+//! 4. **Backend transparency** — threading a `QuantRegime` through
+//!    `FunctionalBackend` re-scopes reuse accounting but leaves logits,
+//!    tokens, and total op counts bit-identical, across scalar/packed
+//!    kernels, shard counts {1, 2, 4}, and LoRA tenant mixes.
+
+use axllm::backend::{ExecutionBackend, FunctionalBackend};
+use axllm::config::{AcceleratorConfig, Dataset, ModelConfig};
+use axllm::exec::{
+    dense_matmul, group_accounting, group_reuse_matmul_chunked, group_reuse_matmul_packed,
+    reuse_matmul_chunked, sharded_group_reuse_matmul_chunked, sharded_group_reuse_matmul_packed,
+    sharded_reuse_matmul_chunked, ExecArena, ExecStats,
+};
+use axllm::quant::{chunk_unique_counts, GroupQuantMatrix, QuantMatrix, QuantParams, QuantRegime};
+use axllm::util::prop::{check, Config};
+use axllm::util::rng::Rng;
+use axllm::workload::Request;
+use axllm::{prop_assert, prop_assert_eq};
+
+/// Random quantized matrix covering the full i8 code range, including
+/// −128 (the packed tiler's product-table hazard code).
+fn random_matrix(rng: &mut Rng, rows: usize, cols: usize) -> QuantMatrix {
+    let data: Vec<i8> = (0..rows * cols)
+        .map(|_| rng.range_i64(-128, 127) as i8)
+        .collect();
+    QuantMatrix {
+        rows,
+        cols,
+        data,
+        params: QuantParams {
+            scale: 0.02,
+            bits: 8,
+        },
+    }
+}
+
+fn random_x(rng: &mut Rng, rows: usize) -> Vec<i8> {
+    (0..rows).map(|_| rng.range_i64(-127, 127) as i8).collect()
+}
+
+#[test]
+fn prop_whole_tensor_group_degenerates_to_per_tensor_kernels() {
+    check(
+        "group-degenerate-exact",
+        Config {
+            cases: 20,
+            seed: 0x96F0A1,
+        },
+        |rng| {
+            let rows = 1 + rng.index(32);
+            let cols = *rng.choose(&[0usize, 1, 3, 4, 5, 31, 64, 130]);
+            let w = random_matrix(rng, rows, cols);
+            let x = random_x(rng, rows);
+            let packed = w.packed();
+            let mut arena = ExecArena::new();
+            for chunk in [1usize, 3, 7, 64, 500] {
+                let (y_ref, st_ref) = reuse_matmul_chunked(&x, &w, chunk);
+                for group in [cols.max(1), cols + 7, usize::MAX] {
+                    let (y_g, st_g) = group_reuse_matmul_chunked(&x, &w, group, chunk);
+                    prop_assert_eq!(&y_g, &y_ref);
+                    prop_assert_eq!(st_g, st_ref);
+                    let st_p = group_reuse_matmul_packed(&x, &packed, group, chunk, &mut arena);
+                    prop_assert_eq!(arena.yq(), &y_ref[..]);
+                    prop_assert_eq!(st_p, st_ref);
+                }
+                for shards in [1usize, 2, 4] {
+                    let (y_ref, per_ref) = sharded_reuse_matmul_chunked(&x, &w, chunk, shards);
+                    let (y_g, per_g) =
+                        sharded_group_reuse_matmul_chunked(&x, &w, usize::MAX, chunk, shards);
+                    prop_assert_eq!(&y_g, &y_ref);
+                    prop_assert_eq!(&per_g, &per_ref);
+                    let mut per_p = vec![ExecStats::default(); per_ref.len()];
+                    sharded_group_reuse_matmul_packed(
+                        &x,
+                        &packed,
+                        usize::MAX,
+                        chunk,
+                        shards,
+                        &mut per_p,
+                        &mut arena,
+                    );
+                    prop_assert_eq!(arena.yq(), &y_ref[..]);
+                    prop_assert_eq!(&per_p, &per_ref);
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_group_scoping_preserves_values_for_any_width() {
+    check(
+        "group-width-exact",
+        Config {
+            cases: 20,
+            seed: 0x96F0A2,
+        },
+        |rng| {
+            let rows = 1 + rng.index(24);
+            // Ragged widths: tails rarely align with group or pack edges.
+            let cols = *rng.choose(&[1usize, 2, 5, 13, 31, 64, 130]);
+            let w = random_matrix(rng, rows, cols);
+            let x = random_x(rng, rows);
+            let packed = w.packed();
+            let dense = dense_matmul(&x, &w);
+            let mut arena = ExecArena::new();
+            // Widths straddling PACK_WIDTH = 4 plus a random one.
+            let random_group = 1 + rng.index(cols.max(1));
+            for group in [1usize, 2, 3, 5, 7, random_group] {
+                for chunk in [1usize, 4, 17, 256] {
+                    let (y_g, st_g) = group_reuse_matmul_chunked(&x, &w, group, chunk);
+                    prop_assert_eq!(&y_g, &dense);
+                    // Scoping moves the split, never the op total.
+                    prop_assert_eq!(st_g.mults + st_g.reuses, (rows * cols) as u64);
+                    let st_p = group_reuse_matmul_packed(&x, &packed, group, chunk, &mut arena);
+                    prop_assert_eq!(arena.yq(), &dense[..]);
+                    prop_assert_eq!(st_p, st_g);
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sharded_group_kernels_match_scalar_per_shard() {
+    check(
+        "group-sharded-exact",
+        Config {
+            cases: 14,
+            seed: 0x96F0A3,
+        },
+        |rng| {
+            let rows = 1 + rng.index(20);
+            let cols = *rng.choose(&[1usize, 5, 16, 65, 130]);
+            let w = random_matrix(rng, rows, cols);
+            let x = random_x(rng, rows);
+            let packed = w.packed();
+            let dense = dense_matmul(&x, &w);
+            let mut arena = ExecArena::new();
+            let group = 1 + rng.index(cols.max(1) + 8);
+            for shards in [1usize, 2, 4] {
+                for chunk in [1usize, 3, 64] {
+                    let (y_s, per_s) =
+                        sharded_group_reuse_matmul_chunked(&x, &w, group, chunk, shards);
+                    prop_assert_eq!(&y_s, &dense);
+                    let mut per_p = vec![ExecStats::default(); per_s.len()];
+                    let total = sharded_group_reuse_matmul_packed(
+                        &x,
+                        &packed,
+                        group,
+                        chunk,
+                        shards,
+                        &mut per_p,
+                        &mut arena,
+                    );
+                    prop_assert_eq!(arena.yq(), &dense[..]);
+                    prop_assert_eq!(&per_p, &per_s);
+                    let fold = per_s.iter().fold(ExecStats::default(), |mut a, s| {
+                        a.add(s);
+                        a
+                    });
+                    prop_assert_eq!((total.mults, total.reuses), (fold.mults, fold.reuses));
+                    // The x-free accounting scan must agree with the
+                    // executing kernel it predicts.
+                    let acct = group_accounting(&w, group, chunk, shards, rows as u64);
+                    prop_assert_eq!(&acct, &per_s);
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Clustered codes: a mixture of narrow bands, the value-locality regime
+/// quantized LLM weights actually exhibit (paper §III.b).
+fn clustered_codes(rng: &mut Rng, n: usize, bands: usize, spread: i64) -> Vec<i8> {
+    let centers: Vec<i64> = (0..bands).map(|_| rng.range_i64(-100, 100)).collect();
+    (0..n)
+        .map(|_| {
+            let c = centers[rng.index(bands)];
+            (c + rng.range_i64(-spread, spread)).clamp(-127, 127) as i8
+        })
+        .collect()
+}
+
+#[test]
+fn prop_refining_groups_is_monotone_in_mults_and_unique_codes() {
+    check(
+        "group-monotone",
+        Config {
+            cases: 20,
+            seed: 0x96F0A4,
+        },
+        |rng| {
+            let rows = 1 + rng.index(12);
+            let cols = 4 * (2 + rng.index(40)); // divisible by 4 for nesting
+            let bands = 1 + rng.index(5);
+            let spread = 1 + rng.range_i64(0, 6);
+            let data: Vec<i8> = (0..rows)
+                .flat_map(|_| clustered_codes(rng, cols, bands, spread))
+                .collect();
+            let w = QuantMatrix {
+                rows,
+                cols,
+                data,
+                params: QuantParams {
+                    scale: 0.02,
+                    bits: 8,
+                },
+            };
+            // Nested group widths: every finer segment sits inside a
+            // coarser one, so its first-occurrence set can only shrink —
+            // mults are monotone non-decreasing as groups refine.
+            let chunk = *rng.choose(&[3usize, 64, 256]);
+            let widths = [cols, cols / 2, cols / 4];
+            let mut last_mults = 0u64;
+            for group in widths {
+                let mut st = ExecStats::default();
+                for s in group_accounting(&w, group, chunk, 1, rows as u64) {
+                    st.add(&s);
+                }
+                prop_assert!(
+                    st.mults >= last_mults,
+                    "group {} mults {} < coarser {}",
+                    group,
+                    st.mults,
+                    last_mults
+                );
+                prop_assert_eq!(st.mults + st.reuses, (rows * cols) as u64);
+                last_mults = st.mults;
+            }
+            // Same law at the raw statistic level: per-window unique-code
+            // counts under nested windows.
+            let row = clustered_codes(rng, cols, bands, spread);
+            for (wide, narrow) in [(cols, cols / 2), (cols / 2, cols / 4)] {
+                let u_wide = chunk_unique_counts(&row, wide);
+                let u_narrow = chunk_unique_counts(&row, narrow);
+                let max_wide = u_wide.iter().copied().max().unwrap_or(0);
+                let max_narrow = u_narrow.iter().copied().max().unwrap_or(0);
+                prop_assert!(
+                    max_narrow <= max_wide,
+                    "window {}: max unique {} exceeds window {}'s {}",
+                    narrow,
+                    max_narrow,
+                    wide,
+                    max_wide
+                );
+                let sum_wide: usize = u_wide.iter().sum();
+                let sum_narrow: usize = u_narrow.iter().sum();
+                prop_assert!(sum_narrow >= sum_wide, "refining windows cannot merge epochs");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_group_fit_roundtrip_error_bounded_by_group_scale() {
+    check(
+        "group-fit-roundtrip",
+        Config {
+            cases: 24,
+            seed: 0x96F0A5,
+        },
+        |rng| {
+            let rows = 1 + rng.index(10);
+            let cols = 1 + rng.index(120);
+            let group = 1 + rng.index(cols + 8);
+            let data: Vec<f32> = (0..rows * cols)
+                .map(|_| (rng.range_i64(-1000, 1000) as f32) / 500.0)
+                .collect();
+            let g = GroupQuantMatrix::fit(rows, cols, &data, 8, group);
+            prop_assert_eq!(g.n_groups(), cols.div_ceil(g.group_size));
+            let deq = g.dequantize();
+            for (i, (&x, &y)) in data.iter().zip(&deq).enumerate() {
+                let params = g.group_params[(i % cols) / g.group_size];
+                prop_assert!(
+                    (x - y).abs() <= 0.5 * params.scale + f32::EPSILON,
+                    "idx {}: |{} - {}| > half step {}",
+                    i,
+                    x,
+                    y,
+                    0.5 * params.scale
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+fn backend(seed: u64) -> FunctionalBackend {
+    FunctionalBackend::new(ModelConfig::tiny(), AcceleratorConfig::paper(), seed).unwrap()
+}
+
+fn req(id: u64, seq_len: usize) -> Request {
+    Request {
+        id,
+        dataset: Dataset::AgNews,
+        seq_len,
+        arrival_s: 0.0,
+        gen_tokens: 0,
+        adapter: None,
+        prefix: None,
+        slo: axllm::workload::SloClass::Standard,
+    }
+}
+
+#[test]
+fn prop_backend_regime_rescopes_reuse_without_touching_values() {
+    check(
+        "group-backend-transparent",
+        Config {
+            cases: 3,
+            seed: 0x96F0A6,
+        },
+        |rng| {
+            let model_seed = rng.below(1_000_000);
+            for shards in [1usize, 2, 4] {
+                let base = backend(model_seed).with_shards(shards).with_adapters(2, 4);
+                let reqs: Vec<Request> = (0..4u64)
+                    .map(|i| Request {
+                        adapter: if i % 2 == 0 { None } else { Some((i % 3) as u32) },
+                        ..req(i, 3 + rng.index(10))
+                    })
+                    .collect();
+                let o_pt = base.run_batch(&reqs).map_err(|e| e.to_string())?;
+                let group = *rng.choose(&[1usize, 3, 8]);
+                for compressed in [false, true] {
+                    let regime = QuantRegime::grouped(group).with_compressed(compressed);
+                    let fast = backend(model_seed)
+                        .with_shards(shards)
+                        .with_adapters(2, 4)
+                        .with_quant_regime(regime);
+                    let slow = backend(model_seed)
+                        .with_shards(shards)
+                        .with_adapters(2, 4)
+                        .with_quant_regime(regime)
+                        .with_scalar_kernels(true);
+                    let o_g = fast.run_batch(&reqs).map_err(|e| e.to_string())?;
+                    let o_s = slow.run_batch(&reqs).map_err(|e| e.to_string())?;
+                    // Values are regime-independent; packed == scalar.
+                    prop_assert_eq!(&o_g.logits, &o_pt.logits);
+                    prop_assert_eq!(&o_s.logits, &o_pt.logits);
+                    prop_assert_eq!(&o_s.activity, &o_g.activity);
+                    // Scoping conserves ops and can only remove reuse.
+                    for (a, g) in o_pt.activity.iter().zip(&o_g.activity) {
+                        prop_assert_eq!(a.base_mults + a.base_reuses, g.base_mults + g.base_reuses);
+                        prop_assert!(g.base_reuses <= a.base_reuses);
+                        prop_assert_eq!(a.adapter_ops, g.adapter_ops);
+                    }
+                    // KV-cached decode: token streams are regime-blind.
+                    let r = Request {
+                        adapter: Some(1),
+                        ..req(99, 2 + rng.index(6))
+                    };
+                    let (mut kv_g, f_g) = fast.prefill(&r, 3).map_err(|e| e.to_string())?;
+                    let (mut kv_p, f_p) = base.prefill(&r, 3).map_err(|e| e.to_string())?;
+                    prop_assert_eq!(&f_g.logits, &f_p.logits);
+                    while !kv_g.done() {
+                        let s_g = fast.decode_step(&mut kv_g).map_err(|e| e.to_string())?;
+                        let s_p = base.decode_step(&mut kv_p).map_err(|e| e.to_string())?;
+                        prop_assert_eq!(&s_g.logits, &s_p.logits);
+                        prop_assert_eq!(s_g.token, s_p.token);
+                    }
+                    prop_assert_eq!(&kv_g.generated, &kv_p.generated);
+                }
+            }
+            Ok(())
+        },
+    );
+}
