@@ -1,0 +1,89 @@
+//! Execution-profile map bench: gates the profile-grid sweep the
+//! unified config plane unlocks, then times one grid evaluation.
+//!
+//! Before any timing this bench **asserts the acceptance invariants** of
+//! `report::map`: the grid must enumerate at least 16 profiles, every
+//! evaluated row must be finite on all three axes, the best-throughput
+//! configuration must sit on its own Pareto front, and re-evaluating the
+//! winning profile through `from_profile` must reproduce its tokens/s
+//! **bit-exactly** — the sweep rediscovers its own best config, so the
+//! mapper's answer is trustworthy, not a fluke of evaluation order.
+//!
+//! Emits `BENCH_map_sweep.json` with the bench rows **and** the full map
+//! embedded, so successive PRs can diff the Pareto itself.
+
+use axllm::report::{map, RunCtx};
+use axllm::util::bench::{black_box, Bench};
+
+const REQUESTS: usize = 32;
+
+fn main() {
+    let ctx = RunCtx::default();
+    let grid = map::grid(ctx.seed);
+    assert!(
+        grid.len() >= 16,
+        "map must enumerate at least 16 profiles, got {}",
+        grid.len()
+    );
+    let rows = map::measure(ctx, REQUESTS);
+    assert_eq!(rows.len(), grid.len(), "every grid point must be evaluated");
+    for r in &rows {
+        assert!(
+            r.tokens_per_s.is_finite()
+                && r.snr_db.is_finite()
+                && r.streamed_bytes_per_token.is_finite(),
+            "{}: non-finite axis",
+            r.label
+        );
+    }
+    let bi = map::best(&rows);
+    let best = &rows[bi];
+    assert!(best.pareto, "best config {} must be on the Pareto front", best.label);
+    // The rediscovery gate: evaluating the winning profile again, alone,
+    // must land on the identical throughput — the sweep's ranking is a
+    // property of the profile, not of the sweep loop.
+    let again = map::evaluate(&grid[bi], REQUESTS);
+    assert_eq!(
+        best.tokens_per_s, again,
+        "re-evaluated winner {} drifted: {} vs {}",
+        best.label, best.tokens_per_s, again
+    );
+    let n_front = rows.iter().filter(|r| r.pareto).count();
+    println!(
+        "acceptance gate passed: {} profiles, {} on the front, best {} at {:.0} tok/s\n",
+        rows.len(),
+        n_front,
+        best.label,
+        best.tokens_per_s
+    );
+
+    let mut b = Bench::new();
+    b.run_throughput("map_sweep/evaluate_grid", grid.len() as u64, || {
+        black_box(map::measure(ctx, REQUESTS));
+    });
+    b.run_throughput("map_sweep/evaluate_best", 1, || {
+        black_box(map::evaluate(&grid[bi], REQUESTS));
+    });
+
+    let j = b.json();
+    assert!(
+        !j.contains("inf") && !j.contains("NaN"),
+        "perf log must stay valid JSON"
+    );
+    let sweep = map::json(ctx, REQUESTS);
+    assert!(
+        !sweep.contains("inf") && !sweep.contains("NaN") && !sweep.contains("nan"),
+        "map JSON must be NaN/inf-free"
+    );
+    assert_eq!(sweep, map::json(ctx, REQUESTS), "map JSON must be byte-stable");
+    let combined = format!(
+        "{{\n\"bench\": {},\n\"map\": {}\n}}\n",
+        j.trim_end(),
+        sweep.trim_end()
+    );
+    println!("\ncsv:\n{}", b.csv());
+    match std::fs::write("BENCH_map_sweep.json", &combined) {
+        Ok(()) => println!("wrote BENCH_map_sweep.json"),
+        Err(e) => eprintln!("could not write BENCH_map_sweep.json: {e}"),
+    }
+}

@@ -72,6 +72,31 @@ echo "== quant sweep bench (writes BENCH_quant_sweep.json) =="
 # streaming beats raw bytes at every swept group size.
 AXLLM_BENCH_FAST=1 cargo bench --bench quant_sweep
 
+echo "== execution-profile differential suite (smoke) =="
+# Unified config plane: profile-built backends bit-identical to the
+# legacy builder chains (logits, ExecStats, cost attribution),
+# CostModel::from_profile order-canonical under builder permutation,
+# TOML round trips exact, malformed profiles rejected.
+cargo test -q --test prop_profile
+
+echo "== map sweep bench (writes BENCH_map_sweep.json) =="
+# Asserts the profile grid enumerates >= 16 configs, every axis stays
+# finite, the best-throughput config sits on the Pareto front, and
+# re-evaluating the winner through from_profile reproduces its tokens/s
+# bit-exactly (the sweep rediscovers its own best config).
+AXLLM_BENCH_FAST=1 cargo bench --bench map_sweep
+
+echo "== config-plane lint: no new with_* constructors outside delegation shims =="
+# Every backend-level with_* builder must stay a thin shim over the
+# profile plane (ExecProfile / CostModel::from_profile). A new one
+# appearing here means a capability was added without wiring it through
+# the unified profile — extend ExecProfile instead.
+allowed='with_paced|with_adapters|with_shards|with_kv_cache|with_quant_regime|with_seq_limit|with_scalar_kernels|with_decode_regime|with_adapter_regime|with_kv_regime|with_handoff_regime|with_shard_regime'
+if grep -hoE 'pub fn with_[a-z_]+' src/backend/*.rs | sort -u | grep -vE "pub fn ($allowed)\$"; then
+  echo "ci: new with_* constructor in src/backend/ — route it through ExecProfile" >&2
+  exit 1
+fi
+
 echo "== cargo doc --no-deps (rustdoc must stay warning-free) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 

@@ -22,7 +22,7 @@ use crate::backend::{
     PrefillChunkOutcome, ReqActivity, ShardActivity, StepOutcome, COST_SAMPLE_ROWS,
     DEFAULT_SEQ_LIMIT,
 };
-use crate::config::{AcceleratorConfig, ModelConfig};
+use crate::config::{AcceleratorConfig, ExecProfile, ModelConfig};
 use crate::exec::{
     group_accounting, lora_side_matmul, lora_side_matmul_arena, quantize_row,
     reuse_matmul_chunked, reuse_matmul_packed, sharded_reuse_matmul_chunked, ExecArena, ExecStats,
@@ -606,6 +606,34 @@ fn exec_to_sim(e: &ExecStats) -> SimStats {
 }
 
 impl ExecutionBackend for FunctionalBackend {
+    /// Build from one [`ExecProfile`], composing the legacy builders in
+    /// the canonical order (kernels → adapters → shards → kv → quant).
+    /// The profile's `seed` drives weight synthesis, so two profiles
+    /// with equal fields materialize bit-identical deployments. As in
+    /// the sim backend, a default (per-tensor raw) quant regime is
+    /// skipped to stay bit-identical to legacy chains that never called
+    /// `with_quant_regime`.
+    fn from_profile(
+        model_cfg: &ModelConfig,
+        profile: &ExecProfile,
+    ) -> crate::Result<FunctionalBackend> {
+        profile.validate()?;
+        let mut b = FunctionalBackend::new(model_cfg.clone(), profile.acc, profile.seed)?
+            .with_scalar_kernels(profile.scalar_kernels)
+            .with_adapters(profile.adapters, profile.adapter_rank)
+            .with_shards(profile.shards);
+        if profile.kv_blocks > 0 {
+            b = b.with_kv_cache(profile.kv_blocks, profile.block_size);
+        }
+        if profile.quant != QuantRegime::default() {
+            b = b.with_quant_regime(profile.quant);
+        }
+        if profile.seq_limit > 0 {
+            b = b.with_seq_limit(profile.seq_limit);
+        }
+        Ok(b)
+    }
+
     fn name(&self) -> &'static str {
         "functional"
     }

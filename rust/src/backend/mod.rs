@@ -54,7 +54,7 @@ pub use functional::FunctionalBackend;
 pub use pjrt::PjrtBackend;
 pub use sim::SimBackend;
 
-use crate::config::{AcceleratorConfig, ModelConfig};
+use crate::config::{AcceleratorConfig, ExecProfile, ModelConfig};
 use crate::energy::EnergyModel;
 use crate::exec::LayerKv;
 use crate::model::{AdapterId, Model};
@@ -307,6 +307,18 @@ pub fn argmax_token(logits: &[f32]) -> u32 {
 /// artifacts, materialized weights, or a cost model) and must answer
 /// every batch whose size respects [`ExecutionBackend::max_batch`].
 pub trait ExecutionBackend {
+    /// Construct this backend from one [`ExecProfile`] — the uniform
+    /// entry point every layer above uses instead of per-backend
+    /// `with_*` builder chains. The contract (pinned by
+    /// `tests/prop_profile.rs`): the profile-built backend is
+    /// bit-identical — logits, `ExecStats`, and cost attribution — to
+    /// the equivalent legacy chain. Backends that cannot honor a
+    /// requested capability (PJRT) must still construct, recording the
+    /// request so the capability-miss counters below fire per request.
+    fn from_profile(model_cfg: &ModelConfig, profile: &ExecProfile) -> crate::Result<Self>
+    where
+        Self: Sized;
+
     /// Stable identifier (`"sim"`, `"functional"`, `"pjrt"`).
     fn name(&self) -> &'static str;
 
@@ -363,6 +375,15 @@ pub trait ExecutionBackend {
     /// deployment asked for prefix KV caching (the capability miss the
     /// PJRT artifact path records, mirroring the adapter/shard misses).
     fn kv_misses(&self) -> u64 {
+        0
+    }
+
+    /// Requests a regime-unaware backend served per-tensor even though
+    /// the deployment asked for a non-default quantization regime (the
+    /// capability miss the PJRT artifact path records — its weights are
+    /// baked per-tensor at artifact-compile time — mirroring the
+    /// adapter/shard/kv misses).
+    fn quant_misses(&self) -> u64 {
         0
     }
 
@@ -528,7 +549,15 @@ pub struct PrefillChunkOutcome {
 
 /// Precomputed per-token accelerator costs for the served model
 /// (cycles/energy per token of matmul work, AxLLM vs baseline).
-#[derive(Clone, Copy, Debug)]
+///
+/// The six regime builders (`with_*_regime`) each write a **disjoint**
+/// set of fields, so regime composition is order-insensitive;
+/// [`CostModel::from_profile`] is the canonical composer (decode →
+/// adapter → shard → kv → handoff → quant), and `tests/prop_profile.rs`
+/// pins that every permutation of the legacy builders matches it.
+/// `PartialEq` compares all fields bit-wise — the equality the
+/// profile-built ≡ builder-built invariant is stated in.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CostModel {
     /// Simulated AxLLM cycles for one token of weight traffic.
     pub cycles_per_token_ax: f64,
@@ -670,12 +699,18 @@ impl CostModel {
     /// Fill the decode (seq=1 GEMV) regime from the model shape: one
     /// decode step performs, per context token, `2·d_model` MACs per
     /// layer (q·kᵀ plus attn·v) on the multiply path — lanes in parallel,
-    /// each occupied for `mult_latency` cycles per element.
+    /// each occupied for `mult_latency` cycles per element. Delegates to
+    /// the shared fill used by [`CostModel::from_profile`].
     pub fn with_decode_regime(
         mut self,
         model_cfg: &ModelConfig,
         acc_cfg: AcceleratorConfig,
     ) -> CostModel {
+        self.fill_decode(model_cfg, acc_cfg);
+        self
+    }
+
+    fn fill_decode(&mut self, model_cfg: &ModelConfig, acc_cfg: AcceleratorConfig) {
         let macs = 2 * model_cfg.d_model as u64 * model_cfg.n_layers as u64;
         let cycles = (macs as f64 / acc_cfg.lanes as f64).ceil() * acc_cfg.mult_latency as f64;
         let stats = SimStats {
@@ -688,7 +723,6 @@ impl CostModel {
         };
         self.attn_cycles_per_ctx_token = cycles;
         self.attn_energy_pj_per_ctx_token = EnergyModel::default().energy(&stats).total_pj;
-        self
     }
 
     /// Fill the LoRA dual-pipeline regime for rank-`rank` adapters: one
@@ -703,6 +737,11 @@ impl CostModel {
         acc_cfg: AcceleratorConfig,
         rank: usize,
     ) -> CostModel {
+        self.fill_adapter(model_cfg, acc_cfg, rank);
+        self
+    }
+
+    fn fill_adapter(&mut self, model_cfg: &ModelConfig, acc_cfg: AcceleratorConfig, rank: usize) {
         let macs =
             4 * model_cfg.d_model as u64 * rank as u64 * model_cfg.n_layers as u64;
         let cycles = (macs as f64 / acc_cfg.lanes as f64).ceil() * acc_cfg.mult_latency as f64;
@@ -716,7 +755,6 @@ impl CostModel {
         };
         self.adapter_cycles_per_token = cycles;
         self.adapter_energy_pj_per_token = EnergyModel::default().energy(&stats).total_pj;
-        self
     }
 
     /// Fill the prefix-KV-cache regime for `block_size`-token blocks:
@@ -733,6 +771,11 @@ impl CostModel {
         acc_cfg: AcceleratorConfig,
         block_size: usize,
     ) -> CostModel {
+        self.fill_kv(model_cfg, acc_cfg, block_size);
+        self
+    }
+
+    fn fill_kv(&mut self, model_cfg: &ModelConfig, acc_cfg: AcceleratorConfig, block_size: usize) {
         let per_token = 2 * model_cfg.d_model as u64 * model_cfg.n_layers as u64;
         let copy_cycles = (per_token as f64 / acc_cfg.lanes as f64).ceil();
         let copy_stats = SimStats {
@@ -754,7 +797,6 @@ impl CostModel {
         };
         self.kv_evict_cycles_per_block = evict_cycles;
         self.kv_evict_energy_pj_per_block = EnergyModel::default().energy(&evict_stats).total_pj;
-        self
     }
 
     /// Row-sampled derivation shared by the artifact-free backends: build
@@ -784,6 +826,50 @@ impl CostModel {
             .with_decode_regime(&model.config, acc_cfg)
     }
 
+    /// Compose every regime a profile asks for onto `base` (a
+    /// [`CostModel::from_totals`]/[`CostModel::from_sampled`] product) in
+    /// the canonical order: **decode → adapter → shard → kv → handoff →
+    /// quant**. Each step delegates to the same fill the matching
+    /// `with_*_regime` builder uses, and the six regimes write disjoint
+    /// field sets, so any permutation of the legacy builders lands on
+    /// this exact model (pinned by `tests/prop_profile.rs`).
+    ///
+    /// Gating mirrors how the layers above apply the builders today:
+    /// decode is unconditional (every backend fills it at construction);
+    /// adapter/kv only when the profile provisions them; shard always
+    /// (`shards = 1` restores the monolithic regime); handoff only for
+    /// metered disaggregated profiles, with the profile's bytes/token
+    /// overriding the model-shape default — the coordinator applies the
+    /// same override at dispatch ([`crate::coordinator::DisaggOpts`]);
+    /// quant only when the backend measured the regime's byte stream
+    /// (`quant = Some((raw, streamed, reuse))`, from
+    /// [`crate::exec::group_accounting`] + [`crate::quant::compress_codes`]).
+    pub fn from_profile(
+        base: CostModel,
+        model_cfg: &ModelConfig,
+        profile: &ExecProfile,
+        quant: Option<(f64, f64, f64)>,
+    ) -> CostModel {
+        let acc_cfg = profile.acc;
+        let mut c = base;
+        c.fill_decode(model_cfg, acc_cfg);
+        if profile.adapters > 0 {
+            c.fill_adapter(model_cfg, acc_cfg, profile.adapter_rank);
+        }
+        c.fill_shard(model_cfg, profile.shards);
+        if profile.kv_blocks > 0 {
+            c.fill_kv(model_cfg, acc_cfg, profile.block_size);
+        }
+        if profile.handoff_bytes_per_token > 0.0 {
+            c.fill_handoff(model_cfg);
+            c.handoff_bytes_per_token = profile.handoff_bytes_per_token;
+        }
+        if let Some((raw, streamed, reuse)) = quant {
+            c.fill_quant(profile.quant, raw, streamed, reuse);
+        }
+        c
+    }
+
     /// Fill the disaggregated-serving handoff regime: handing a session
     /// from a prefill replica to a decode replica ships each context
     /// token's `2·d_model` f32 K/V rows per layer over the
@@ -792,10 +878,14 @@ impl CostModel {
     /// ([`CostModel::with_kv_regime`]) crosses an instance boundary
     /// here, so it is priced in link bytes, not lane cycles.
     pub fn with_handoff_regime(mut self, model_cfg: &ModelConfig) -> CostModel {
+        self.fill_handoff(model_cfg);
+        self
+    }
+
+    fn fill_handoff(&mut self, model_cfg: &ModelConfig) {
         self.handoff_bytes_per_token = (2 * model_cfg.n_layers * model_cfg.d_model * 4) as f64;
         self.handoff_bytes_per_s = HANDOFF_LINK_BYTES_PER_S;
         self.handoff_latency_s = HANDOFF_LINK_LATENCY_S;
-        self
     }
 
     /// KV-handoff bytes for a `tokens`-token context (zero until
@@ -832,13 +922,23 @@ impl CostModel {
         streamed_bytes_per_token: f64,
         reuse_rate: f64,
     ) -> CostModel {
+        self.fill_quant(regime, raw_bytes_per_token, streamed_bytes_per_token, reuse_rate);
+        self
+    }
+
+    fn fill_quant(
+        &mut self,
+        regime: QuantRegime,
+        raw_bytes_per_token: f64,
+        streamed_bytes_per_token: f64,
+        reuse_rate: f64,
+    ) {
         self.quant_group_size = regime.group_size;
         self.quant_compressed = regime.compressed;
         self.quant_reuse_rate = reuse_rate;
         self.weight_bytes_raw_per_token = raw_bytes_per_token;
         self.weight_bytes_streamed_per_token = streamed_bytes_per_token;
         self.weight_stream_bytes_per_s = WEIGHT_STREAM_BYTES_PER_S;
-        self
     }
 
     /// Weight-code bytes streamed for `tokens` weight passes under the
@@ -874,6 +974,11 @@ impl CostModel {
     /// (`gather_bytes_per_token`), with one collective per layer paying
     /// the link latency. `shards = 1` restores the monolithic regime.
     pub fn with_shard_regime(mut self, model_cfg: &ModelConfig, shards: usize) -> CostModel {
+        self.fill_shard(model_cfg, shards);
+        self
+    }
+
+    fn fill_shard(&mut self, model_cfg: &ModelConfig, shards: usize) {
         self.shards = shards.max(1);
         if self.shards > 1 {
             self.gather_bytes_per_token = (model_cfg.n_layers * model_cfg.d_model * 4) as f64;
@@ -882,7 +987,6 @@ impl CostModel {
             self.gather_bytes_per_token = 0.0;
             self.shard_collectives = 0.0;
         }
-        self
     }
 
     /// Interconnect time of ring-all-gathering `bytes` across `shards`

@@ -10,8 +10,9 @@ use crate::backend::{
     argmax_token, BatchOutcome, CostModel, ExecutionBackend, KvHandle, KvState, ReqActivity,
     StepOutcome,
 };
-use crate::config::AcceleratorConfig;
+use crate::config::{AcceleratorConfig, ExecProfile};
 use crate::model::Model;
+use crate::quant::QuantRegime;
 use crate::runtime::{AdapterMisses, ArtifactSet, Runtime, TinyWeights};
 use crate::sim::SimStats;
 use crate::workload::{request_seed, synth_embeddings, token_embedding, Request};
@@ -46,6 +47,15 @@ pub struct PjrtBackend {
     kv_requested: bool,
     /// Requests served without prefix reuse despite a KV-cache ask.
     kv_miss: AdapterMisses,
+    /// Whether the deployment asked for a non-default quantization
+    /// regime. The artifact weights are quantized per-tensor at
+    /// artifact-compile time — there is no grouped-scale or compressed
+    /// code stream to switch to — so the ask cannot be honored: every
+    /// served request records a capability miss in `quant_miss`, the
+    /// same honest-fallback pattern as adapters, shards, and kv.
+    quant_requested: bool,
+    /// Requests served per-tensor despite a quant-regime ask.
+    quant_miss: AdapterMisses,
 }
 
 impl PjrtBackend {
@@ -67,6 +77,8 @@ impl PjrtBackend {
             shard_miss: AdapterMisses::new(),
             kv_requested: false,
             kv_miss: AdapterMisses::new(),
+            quant_requested: false,
+            quant_miss: AdapterMisses::new(),
         })
     }
 
@@ -93,10 +105,22 @@ impl PjrtBackend {
         self
     }
 
+    /// Ask for a quantization regime. The artifact weights are baked
+    /// per-tensor at compile time, so a non-default regime cannot be
+    /// honored: the backend keeps serving per-tensor and records one
+    /// capability miss per served request
+    /// ([`ExecutionBackend::quant_misses`]). A default (per-tensor raw)
+    /// regime is a no-op — it *is* what the artifacts execute.
+    pub fn with_quant_regime(mut self, regime: QuantRegime) -> PjrtBackend {
+        self.quant_requested = regime != QuantRegime::default();
+        self
+    }
+
     /// Record a base-only fallback for every adapter-carrying request in
-    /// the slice (the artifact runtime has no adapter surface), plus a
-    /// shard capability miss per request when the deployment asked for
-    /// sharded execution.
+    /// the slice (the artifact runtime has no adapter surface), plus one
+    /// capability miss per request and unhonorable ask — sharded
+    /// execution, prefix KV caching, or a non-default quant regime — so
+    /// all four channels surface through `ServerStats` uniformly.
     fn record_adapter_misses(&self, requests: &[Request]) {
         for r in requests {
             if r.adapter.is_some() {
@@ -107,6 +131,9 @@ impl PjrtBackend {
             }
             if self.kv_requested {
                 self.kv_miss.record();
+            }
+            if self.quant_requested {
+                self.quant_miss.record();
             }
         }
     }
@@ -145,6 +172,26 @@ impl PjrtBackend {
 }
 
 impl ExecutionBackend for PjrtBackend {
+    /// Build from one [`ExecProfile`]: load the artifact set the profile
+    /// names, then record every capability ask the fixed-shape artifacts
+    /// cannot honor (shards, kv cache, adapters, quant regime) so the
+    /// miss counters fire per served request — a profile ports across
+    /// backends without edits, and the downgrade is visible instead of
+    /// silent.
+    fn from_profile(
+        _model_cfg: &crate::config::ModelConfig,
+        profile: &ExecProfile,
+    ) -> crate::Result<PjrtBackend> {
+        profile.validate()?;
+        let mut b = PjrtBackend::load(Path::new(&profile.artifacts), profile.acc)?
+            .with_shards(profile.shards)
+            .with_quant_regime(profile.quant);
+        if profile.kv_blocks > 0 {
+            b = b.with_kv_cache(profile.kv_blocks, profile.block_size);
+        }
+        Ok(b)
+    }
+
     fn name(&self) -> &'static str {
         "pjrt"
     }
@@ -175,6 +222,10 @@ impl ExecutionBackend for PjrtBackend {
 
     fn kv_misses(&self) -> u64 {
         self.kv_miss.count()
+    }
+
+    fn quant_misses(&self) -> u64 {
+        self.quant_miss.count()
     }
 
     fn run_batch(&self, requests: &[Request]) -> crate::Result<BatchOutcome> {

@@ -14,7 +14,7 @@ use crate::backend::{
     BatchOutcome, CostModel, ExecutionBackend, KvHandle, KvState, ReqActivity, ShardActivity,
     StepOutcome, COST_SAMPLE_ROWS, DEFAULT_SEQ_LIMIT,
 };
-use crate::config::{AcceleratorConfig, ModelConfig};
+use crate::config::{AcceleratorConfig, ExecProfile, ModelConfig};
 use crate::exec::{group_accounting, shard_accounting, ExecStats};
 use crate::kvcache::{aligned_prefix, block_keys, KvCacheConfig, PrefixCache};
 use crate::model::{MatKind, Model};
@@ -334,6 +334,30 @@ impl SimBackend {
 }
 
 impl ExecutionBackend for SimBackend {
+    /// Build from one [`ExecProfile`], composing the legacy builders in
+    /// the canonical order (adapters → shards → kv → quant). The quant
+    /// regime is applied only when non-default, matching the legacy
+    /// chains: `with_quant_regime(per_tensor)` is *not* a no-op — it
+    /// fills the weight-streaming term — so default profiles must skip
+    /// it to stay bit-identical to builder-chain construction.
+    fn from_profile(model_cfg: &ModelConfig, profile: &ExecProfile) -> crate::Result<SimBackend> {
+        profile.validate()?;
+        let mut b = SimBackend::new(model_cfg.clone(), profile.acc)?
+            .with_paced(profile.paced)
+            .with_adapters(profile.adapters, profile.adapter_rank)
+            .with_shards(profile.shards);
+        if profile.kv_blocks > 0 {
+            b = b.with_kv_cache(profile.kv_blocks, profile.block_size);
+        }
+        if profile.quant != QuantRegime::default() {
+            b = b.with_quant_regime(profile.quant);
+        }
+        if profile.seq_limit > 0 {
+            b = b.with_seq_limit(profile.seq_limit);
+        }
+        Ok(b)
+    }
+
     fn name(&self) -> &'static str {
         "sim"
     }

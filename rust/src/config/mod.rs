@@ -2,8 +2,10 @@
 //! zoo matching the paper's Table I, with TOML-subset load/save.
 
 pub mod models;
+pub mod profile;
 
 pub use models::{table1_benchmarks, Benchmark, Dataset, LoraConfig, ModelConfig};
+pub use profile::{BackendKind, ExecProfile};
 
 use crate::util::tomlite::{self, Doc, Value};
 use anyhow::{anyhow, Context};

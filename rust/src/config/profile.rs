@@ -1,0 +1,383 @@
+//! The unified execution profile: one plain-data value describing a full
+//! execution configuration across every layer of the stack.
+//!
+//! Nine features in, each capability (shards, adapters, KV cache, quant
+//! regime, packed kernels, chunking, SLO admission, handoff metering) was
+//! configured through per-backend `with_*` builder chains plus a matching
+//! `CostModel::with_*_regime` call, duplicated across `SimBackend`,
+//! `FunctionalBackend`, `PjrtBackend` and ~8 construction match arms in
+//! `main.rs`. [`ExecProfile`] collapses all of that into a single
+//! enumerable, serializable struct: backends construct uniformly via
+//! `ExecutionBackend::from_profile`, the cost plane composes via
+//! `CostModel::from_profile` in one canonical order, and the CLI parses
+//! flags (or a `--profile file.toml`) into one profile value. The payoff
+//! is `report::map` / `axllm map`: because a configuration is now data, a
+//! seeded grid of profiles can be swept mechanically (ROADMAP item 5).
+//!
+//! Invariant (pinned by `tests/prop_profile.rs`): a profile-built backend
+//! is **bit-identical** — logits, `ExecStats`, and cost attribution — to
+//! the equivalent legacy builder chain.
+
+use crate::config::AcceleratorConfig;
+use crate::quant::QuantRegime;
+use crate::util::tomlite::{self, Doc, Value};
+use anyhow::{anyhow, Context};
+
+/// Which `ExecutionBackend` implementation a profile targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Analytic cost-model backend (`SimBackend`).
+    Sim,
+    /// Bit-exact quantized reference (`FunctionalBackend`).
+    Functional,
+    /// AOT artifact executor (`PjrtBackend`).
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Stable lowercase name, matching the CLI `--backend` values and
+    /// each backend's `ExecutionBackend::name()`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Sim => "sim",
+            BackendKind::Functional => "functional",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// Parse a CLI / TOML backend name.
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "sim" => Some(BackendKind::Sim),
+            "functional" => Some(BackendKind::Functional),
+            "pjrt" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+}
+
+/// One complete execution configuration, as plain data.
+///
+/// Every field has a neutral default so profiles can be sparse
+/// overrides; `0` is the "off / backend default" sentinel for the
+/// optional capacities (`kv_blocks`, `seq_limit`, `chunk_tokens`) and
+/// `0.0` for `handoff_bytes_per_token`.
+///
+/// The serving-tier fields (`chunk_tokens`, `slo`, `handoff_bytes_per_token`,
+/// `paced`) are carried here so a profile fully describes a run, but are
+/// consumed by the coordinator (`DecodeServeOpts` / `DisaggOpts`), not by
+/// backend construction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExecProfile {
+    /// Which backend to construct.
+    pub backend: BackendKind,
+    /// Accelerator micro-architecture (serialized as `[accelerator]`).
+    pub acc: AcceleratorConfig,
+    /// Weight-synthesis / trace seed (functional backend weights).
+    pub seed: u64,
+    /// Artifact directory for the pjrt backend.
+    pub artifacts: String,
+    /// Tensor-parallel shard count (1 = unsharded).
+    pub shards: usize,
+    /// Provisioned LoRA adapter slots (0 = adapters off).
+    pub adapters: usize,
+    /// LoRA rank for provisioned adapters.
+    pub adapter_rank: usize,
+    /// Paged-KV block pool size (0 = KV cache off).
+    pub kv_blocks: usize,
+    /// Tokens per KV block.
+    pub block_size: usize,
+    /// Quantization regime (group size + compressed code streaming).
+    pub quant: QuantRegime,
+    /// Use scalar reference kernels instead of the packed hot path
+    /// (functional backend only).
+    pub scalar_kernels: bool,
+    /// Per-request sequence limit override (0 = backend default).
+    pub seq_limit: usize,
+    /// Chunked-prefill budget in tokens (0 = unchunked).
+    pub chunk_tokens: usize,
+    /// Prefill→decode handoff metering in bytes/token (0 = unmetered).
+    pub handoff_bytes_per_token: f64,
+    /// SLO-aware admission (interactive/batch classes) in the serving tier.
+    pub slo: bool,
+    /// Pace simulated execution to wall-clock (sim backend live runs).
+    pub paced: bool,
+}
+
+impl Default for ExecProfile {
+    fn default() -> Self {
+        ExecProfile {
+            backend: BackendKind::Sim,
+            acc: AcceleratorConfig::paper(),
+            seed: 7,
+            artifacts: "artifacts".to_string(),
+            shards: 1,
+            adapters: 0,
+            adapter_rank: 16,
+            kv_blocks: 0,
+            block_size: 16,
+            quant: QuantRegime::default(),
+            scalar_kernels: false,
+            seq_limit: 0,
+            chunk_tokens: 0,
+            handoff_bytes_per_token: 0.0,
+            slo: false,
+            paced: false,
+        }
+    }
+}
+
+impl ExecProfile {
+    /// A default profile targeting `backend`.
+    pub fn new(backend: BackendKind) -> ExecProfile {
+        ExecProfile {
+            backend,
+            ..Default::default()
+        }
+    }
+
+    /// Set the tensor-parallel shard count.
+    pub fn with_shards(mut self, shards: usize) -> ExecProfile {
+        self.shards = shards;
+        self
+    }
+
+    /// Provision `count` adapter slots of rank `rank` (0 = off).
+    pub fn with_adapters(mut self, count: usize, rank: usize) -> ExecProfile {
+        self.adapters = count;
+        self.adapter_rank = rank;
+        self
+    }
+
+    /// Enable the paged KV cache with `blocks` blocks of `block_size`.
+    pub fn with_kv_cache(mut self, blocks: usize, block_size: usize) -> ExecProfile {
+        self.kv_blocks = blocks;
+        self.block_size = block_size;
+        self
+    }
+
+    /// Set the quantization regime.
+    pub fn with_quant(mut self, quant: QuantRegime) -> ExecProfile {
+        self.quant = quant;
+        self
+    }
+
+    /// Validate internal consistency (including the nested accelerator).
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.shards == 0 {
+            return Err(anyhow!("shards must be ≥ 1"));
+        }
+        if self.adapter_rank == 0 {
+            return Err(anyhow!("adapter_rank must be ≥ 1"));
+        }
+        if self.block_size == 0 {
+            return Err(anyhow!("block_size must be ≥ 1"));
+        }
+        if self.handoff_bytes_per_token < 0.0 || !self.handoff_bytes_per_token.is_finite() {
+            return Err(anyhow!("handoff_bytes_per_token must be finite and ≥ 0"));
+        }
+        if self.scalar_kernels && self.backend != BackendKind::Functional {
+            return Err(anyhow!(
+                "scalar_kernels only applies to the functional backend"
+            ));
+        }
+        self.acc.validate()
+    }
+
+    /// Serialize into `[profile]` + `[accelerator]` TOML sections.
+    pub fn to_doc(&self, doc: &mut Doc) {
+        let s = "profile";
+        doc.set(s, "backend", Value::Str(self.backend.name().to_string()));
+        doc.set(s, "seed", Value::Int(self.seed as i64));
+        doc.set(s, "artifacts", Value::Str(self.artifacts.clone()));
+        doc.set(s, "shards", Value::Int(self.shards as i64));
+        doc.set(s, "adapters", Value::Int(self.adapters as i64));
+        doc.set(s, "adapter_rank", Value::Int(self.adapter_rank as i64));
+        doc.set(s, "kv_blocks", Value::Int(self.kv_blocks as i64));
+        doc.set(s, "block_size", Value::Int(self.block_size as i64));
+        doc.set(s, "quant_group_size", Value::Int(self.quant.group_size as i64));
+        doc.set(s, "quant_compressed", Value::Bool(self.quant.compressed));
+        doc.set(s, "scalar_kernels", Value::Bool(self.scalar_kernels));
+        doc.set(s, "seq_limit", Value::Int(self.seq_limit as i64));
+        doc.set(s, "chunk_tokens", Value::Int(self.chunk_tokens as i64));
+        doc.set(
+            s,
+            "handoff_bytes_per_token",
+            Value::Float(self.handoff_bytes_per_token),
+        );
+        doc.set(s, "slo", Value::Bool(self.slo));
+        doc.set(s, "paced", Value::Bool(self.paced));
+        self.acc.to_doc(doc);
+    }
+
+    /// Read from `[profile]` + `[accelerator]` sections; missing keys keep
+    /// their defaults so profile files can be sparse overrides.
+    pub fn from_doc(doc: &Doc) -> crate::Result<Self> {
+        let mut p = Self::default();
+        let s = "profile";
+        let geti = |key: &str, default: usize| -> crate::Result<usize> {
+            match doc.get(s, key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("[profile].{key} must be a non-negative int")),
+            }
+        };
+        let getb = |key: &str, default: bool| -> crate::Result<bool> {
+            match doc.get(s, key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_bool()
+                    .ok_or_else(|| anyhow!("[profile].{key} must be a bool")),
+            }
+        };
+        if let Some(v) = doc.get(s, "backend") {
+            let name = v
+                .as_str()
+                .ok_or_else(|| anyhow!("[profile].backend must be a string"))?;
+            p.backend = BackendKind::parse(name)
+                .ok_or_else(|| anyhow!("unknown backend {name:?} (sim|functional|pjrt)"))?;
+        }
+        p.seed = geti("seed", p.seed as usize)? as u64;
+        if let Some(v) = doc.get(s, "artifacts") {
+            p.artifacts = v
+                .as_str()
+                .ok_or_else(|| anyhow!("[profile].artifacts must be a string"))?
+                .to_string();
+        }
+        p.shards = geti("shards", p.shards)?;
+        p.adapters = geti("adapters", p.adapters)?;
+        p.adapter_rank = geti("adapter_rank", p.adapter_rank)?;
+        p.kv_blocks = geti("kv_blocks", p.kv_blocks)?;
+        p.block_size = geti("block_size", p.block_size)?;
+        p.quant.group_size = geti("quant_group_size", p.quant.group_size)?;
+        p.quant.compressed = getb("quant_compressed", p.quant.compressed)?;
+        p.scalar_kernels = getb("scalar_kernels", p.scalar_kernels)?;
+        p.seq_limit = geti("seq_limit", p.seq_limit)?;
+        p.chunk_tokens = geti("chunk_tokens", p.chunk_tokens)?;
+        if let Some(v) = doc.get(s, "handoff_bytes_per_token") {
+            p.handoff_bytes_per_token = v
+                .as_float()
+                .ok_or_else(|| anyhow!("[profile].handoff_bytes_per_token must be a number"))?;
+        }
+        p.slo = getb("slo", p.slo)?;
+        p.paced = getb("paced", p.paced)?;
+        p.acc = AcceleratorConfig::from_doc(doc)?;
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Load a profile from a TOML file.
+    pub fn load(path: &std::path::Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading profile {}", path.display()))?;
+        let doc = tomlite::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_doc(&doc)
+    }
+
+    /// Save a profile to a TOML file.
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        let mut doc = Doc::default();
+        self.to_doc(&mut doc);
+        std::fs::write(path, doc.to_string())
+            .with_context(|| format!("writing profile {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Compact human-readable label for sweep rows and logs, e.g.
+    /// `sim×2 g64c kv256`.
+    pub fn label(&self) -> String {
+        let mut l = format!("{}×{}", self.backend.name(), self.shards);
+        if self.quant.group_size > 0 || self.quant.compressed {
+            let g = if self.quant.group_size == 0 {
+                "pt".to_string()
+            } else {
+                format!("{}", self.quant.group_size)
+            };
+            l.push_str(&format!(" g{}{}", g, if self.quant.compressed { "c" } else { "" }));
+        }
+        if self.adapters > 0 {
+            l.push_str(&format!(" a{}r{}", self.adapters, self.adapter_rank));
+        }
+        if self.kv_blocks > 0 {
+            l.push_str(&format!(" kv{}", self.kv_blocks));
+        }
+        l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_profile_validates() {
+        let p = ExecProfile::default();
+        assert_eq!(p.backend, BackendKind::Sim);
+        assert_eq!(p.shards, 1);
+        assert_eq!(p.quant, QuantRegime::per_tensor());
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn backend_kind_parse_roundtrip() {
+        for k in [BackendKind::Sim, BackendKind::Functional, BackendKind::Pjrt] {
+            assert_eq!(BackendKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(BackendKind::parse("tpu"), None);
+    }
+
+    #[test]
+    fn toml_roundtrip_is_exact() {
+        let p = ExecProfile::new(BackendKind::Functional)
+            .with_shards(4)
+            .with_adapters(2, 8)
+            .with_kv_cache(64, 8)
+            .with_quant(QuantRegime::grouped(64).with_compressed(true));
+        let mut doc = Doc::default();
+        p.to_doc(&mut doc);
+        let back = ExecProfile::from_doc(&tomlite::parse(&doc.to_string()).unwrap()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn sparse_doc_keeps_defaults() {
+        let doc = tomlite::parse("[profile]\nshards = 2\n").unwrap();
+        let p = ExecProfile::from_doc(&doc).unwrap();
+        assert_eq!(p.shards, 2);
+        assert_eq!(p.backend, BackendKind::Sim);
+        assert_eq!(p.kv_blocks, 0);
+    }
+
+    #[test]
+    fn rejects_unknown_backend_and_bad_fields() {
+        let doc = tomlite::parse("[profile]\nbackend = \"tpu\"\n").unwrap();
+        assert!(ExecProfile::from_doc(&doc).is_err());
+        let doc = tomlite::parse("[profile]\nshards = 0\n").unwrap();
+        assert!(ExecProfile::from_doc(&doc).is_err());
+        let doc = tomlite::parse("[profile]\nscalar_kernels = true\n").unwrap();
+        assert!(
+            ExecProfile::from_doc(&doc).is_err(),
+            "scalar kernels require the functional backend"
+        );
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("axllm_profile_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("profile.toml");
+        let p = ExecProfile::new(BackendKind::Sim).with_shards(2);
+        p.save(&path).unwrap();
+        assert_eq!(ExecProfile::load(&path).unwrap(), p);
+    }
+
+    #[test]
+    fn label_is_compact() {
+        let p = ExecProfile::new(BackendKind::Sim)
+            .with_shards(2)
+            .with_quant(QuantRegime::grouped(64).with_compressed(true));
+        assert_eq!(p.label(), "sim×2 g64c");
+        assert_eq!(ExecProfile::default().label(), "sim×1");
+    }
+}

@@ -21,7 +21,7 @@ use crate::backend::{
     ChunkedPrefill, ExecutionBackend, KvHandle, PjrtBackend, ReqActivity, ShardActivity,
 };
 pub use crate::backend::CostModel;
-use crate::config::AcceleratorConfig;
+use crate::config::{AcceleratorConfig, ExecProfile, ModelConfig};
 use crate::coordinator::batcher::{Batch, BatchPolicy, BatchScheduler, DynamicBatcher, SloPolicy};
 use crate::coordinator::metrics::ServeSummary;
 use crate::energy::EnergyModel;
@@ -151,6 +151,14 @@ impl<B: ExecutionBackend> Engine<B> {
     /// Wrap a constructed backend.
     pub fn new(backend: B) -> Engine<B> {
         Engine { backend }
+    }
+
+    /// Build an engine whose backend is constructed from one
+    /// [`ExecProfile`] ([`ExecutionBackend::from_profile`]) — the
+    /// uniform construction path the CLI and the profile sweeps use for
+    /// every backend kind.
+    pub fn from_profile(model_cfg: &ModelConfig, profile: &ExecProfile) -> Result<Engine<B>> {
+        Ok(Engine::new(B::from_profile(model_cfg, profile)?))
     }
 
     /// Per-token accelerator cost model used for attribution.

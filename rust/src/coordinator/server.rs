@@ -163,6 +163,11 @@ pub struct ServerStats {
     /// [`crate::backend::ExecutionBackend::kv_misses`]; published on the
     /// same schedule as `adapter_misses`).
     pub kv_misses: AtomicUsize,
+    /// Requests the worker's backend served per-tensor despite a
+    /// non-default quantization-regime ask (mirrors
+    /// [`crate::backend::ExecutionBackend::quant_misses`]; published on
+    /// the same schedule as `adapter_misses`).
+    pub quant_misses: AtomicUsize,
     /// Token-weighted outstanding work: Σ `work_estimate` (prompt tokens
     /// + generated-token ask) over submitted-but-unanswered requests.
     /// This — not the request *count* — is what least-loaded dispatch
@@ -406,6 +411,10 @@ pub struct LiveRun {
     /// deployment ask, across all replicas (non-zero means the backend
     /// cannot share KV state — report the downgrade).
     pub kv_misses: u64,
+    /// Requests served per-tensor despite a non-default
+    /// quantization-regime ask, across all replicas (non-zero means the
+    /// backend cannot switch its weight storage — report the downgrade).
+    pub quant_misses: u64,
 }
 
 impl<B: ExecutionBackend + 'static> ServerPool<B> {
@@ -432,6 +441,7 @@ impl<B: ExecutionBackend + 'static> ServerPool<B> {
         let adapter_misses = self.adapter_misses();
         let shard_misses = self.shard_misses();
         let kv_misses = self.kv_misses();
+        let quant_misses = self.quant_misses();
         let stopped = self.shutdown();
         if let Err(worker_err) = stopped {
             return Err(worker_err);
@@ -445,6 +455,7 @@ impl<B: ExecutionBackend + 'static> ServerPool<B> {
             adapter_misses,
             shard_misses,
             kv_misses,
+            quant_misses,
         })
     }
 
@@ -520,6 +531,16 @@ impl<B: ExecutionBackend + 'static> ServerPool<B> {
         self.replicas
             .iter()
             .map(|s| s.stats().kv_misses.load(Ordering::Relaxed) as u64)
+            .sum()
+    }
+
+    /// Requests served per-tensor despite a non-default
+    /// quantization-regime ask, across all replicas (as last published
+    /// by each worker).
+    pub fn quant_misses(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|s| s.stats().quant_misses.load(Ordering::Relaxed) as u64)
             .sum()
     }
 
@@ -599,6 +620,9 @@ fn dispatch<B: ExecutionBackend>(
     stats
         .kv_misses
         .store(engine.backend.kv_misses() as usize, Ordering::Relaxed);
+    stats
+        .quant_misses
+        .store(engine.backend.quant_misses() as usize, Ordering::Relaxed);
     for res in results {
         let (queued_id, est, tx) = waiters
             .pop_front()
@@ -850,6 +874,9 @@ where
         stats
             .kv_misses
             .store(engine.backend.kv_misses() as usize, Ordering::Relaxed);
+        stats
+            .quant_misses
+            .store(engine.backend.quant_misses() as usize, Ordering::Relaxed);
         let now = epoch.elapsed().as_secs_f64();
         let mut i = 0;
         while i < active.len() {
@@ -1166,6 +1193,7 @@ impl<B: ExecutionBackend + 'static> DisaggPool<B> {
             adapter_misses: load(&stats.adapter_misses) as u64,
             shard_misses: load(&stats.shard_misses) as u64,
             kv_misses: load(&stats.kv_misses) as u64,
+            quant_misses: load(&stats.quant_misses) as u64,
         })
     }
 
@@ -1278,6 +1306,9 @@ where
         stats
             .kv_misses
             .store(engine.backend.kv_misses() as usize, Ordering::Relaxed);
+        stats
+            .quant_misses
+            .store(engine.backend.quant_misses() as usize, Ordering::Relaxed);
         let handoff = Handoff {
             kv,
             first,

@@ -8,27 +8,33 @@
 //!             [--rate R] [--dataset D] [--batch B] [--artifacts DIR]
 //!             [--adapters N] [--adapter-rank R]
 //!             [--kv-blocks N] [--block-size B] [--prefix-groups K]
+//!             [--profile FILE] [--save-profile FILE]
+//! axllm map [--csv] [--json] [--seed N] [--sample-rows N] [--requests N]
 //! axllm info [--artifacts DIR]
 //! ```
 //!
 //! Argument parsing is hand-rolled (no clap offline); see `cli::Args`.
 
 use axllm::backend::{ExecutionBackend, FunctionalBackend, PjrtBackend, SimBackend};
-use axllm::config::{table1_benchmarks, AcceleratorConfig, Dataset, ModelConfig};
+use axllm::config::{
+    table1_benchmarks, AcceleratorConfig, BackendKind, Dataset, ExecProfile, ModelConfig,
+};
 use axllm::coordinator::{BatchPolicy, DecodeServeOpts, DisaggOpts, Engine, SloPolicy};
 use axllm::model::Model;
 use axllm::report::{self, RunCtx};
 use axllm::sim::{Accelerator, LaneModel};
 use axllm::util::table::count;
 use axllm::workload::TraceGenerator;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 mod cli {
     /// Flags that never take a value. Without this list, `--csv fig1`
     /// would greedily swallow `fig1` as the flag's value and lose the
     /// positional experiment name.
-    const BOOL_FLAGS: &[&str] = &["csv", "baseline", "sliced", "live", "decode", "disagg", "slo"];
+    const BOOL_FLAGS: &[&str] = &[
+        "csv", "baseline", "sliced", "live", "decode", "disagg", "slo", "scalar",
+    ];
 
     /// Minimal flag parser: positionals plus `--key value` / `--flag`.
     pub struct Args {
@@ -112,7 +118,8 @@ USAGE:
               [--adapters N] [--adapter-rank R] [--shards N]
               [--kv-blocks N] [--block-size B] [--prefix-groups K]
               [--disagg] [--prefill-replicas P] [--decode-replicas D]
-              [--chunk-tokens C] [--slo]
+              [--chunk-tokens C] [--slo] [--scalar]
+              [--profile FILE] [--save-profile FILE]
               [--diurnal AMP] [--flash-crowd MULT] [--heavy-tails SIGMA]
               [--abusive-tenants FRAC]
       backends:
@@ -164,6 +171,13 @@ USAGE:
       shedding, and degraded budgets under overload — and shapes the
       trace into a mixed-class population; the summary reports
       attainment and the shed/degraded counts.
+      --scalar (functional only) routes execution through the scalar
+      reference kernels instead of the packed-code hot path; logits are
+      bit-identical, only the kernel implementation changes.
+      --profile FILE loads an ExecProfile TOML as the base execution
+      configuration; explicit CLI flags override individual fields.
+      --save-profile FILE writes the fully-resolved profile back out,
+      so a flag combination can be replayed byte-for-byte later.
       hostile-traffic scenarios (composable trace shapers):
         --diurnal AMP        sinusoidal arrival rate, amplitude in [0,1]
         --flash-crowd MULT   a MULTx arrival burst over a quarter of the trace
@@ -191,6 +205,12 @@ USAGE:
       group-16 scales) over one seeded weight matrix and reports the
       reuse-rate / SNR / streamed-bytes Pareto; --json emits the
       deterministic document benches/quant_sweep.rs pins.
+  axllm map [--csv] [--json] [--seed N] [--sample-rows N] [--requests N]
+      enumerates a seeded grid of execution profiles (shards x quant
+      regimes), evaluates each through the sim backend against one
+      deterministic trace, and reports the tokens/s vs SNR vs
+      streamed-bytes Pareto; --json emits the deterministic document
+      benches/map_sweep.rs pins.
   axllm info [--artifacts DIR]
 ";
 
@@ -590,6 +610,10 @@ fn run_serve<B: ExecutionBackend>(engine: &Engine<B>, opts: &ServeOpts) -> Resul
     if kv_misses > 0 {
         println!("kv misses (served without prefix reuse): {kv_misses}");
     }
+    let quant_misses = engine.backend.quant_misses();
+    if quant_misses > 0 {
+        println!("quant misses (served per-tensor): {quant_misses}");
+    }
     Ok(())
 }
 
@@ -640,6 +664,9 @@ where
     if run.kv_misses > 0 {
         println!("kv misses (served without prefix reuse): {}", run.kv_misses);
     }
+    if run.quant_misses > 0 {
+        println!("quant misses (served per-tensor): {}", run.quant_misses);
+    }
     for (i, (b, r)) in run.replica_stats.iter().enumerate() {
         println!("replica {i}: {b} batches, {r} requests");
     }
@@ -683,14 +710,55 @@ where
     if run.kv_misses > 0 {
         println!("kv misses (served without prefix reuse): {}", run.kv_misses);
     }
+    if run.quant_misses > 0 {
+        println!("quant misses (served per-tensor): {}", run.quant_misses);
+    }
     Ok(())
 }
 
+/// Serve one resolved profile — trace or live, flat or disaggregated —
+/// through whichever backend the profile names. Every backend arm in
+/// `cmd_serve` collapses onto this single generic path: construction is
+/// always `Engine::from_profile`, so the CLI can no longer drift from
+/// the library's builder chains.
+fn serve_profile<B: ExecutionBackend + 'static>(
+    model_cfg: ModelConfig,
+    profile: ExecProfile,
+    opts: ServeOpts,
+    live: bool,
+) -> Result<(), String> {
+    let name = profile.backend.name();
+    if live {
+        let make = move |_i: usize| Engine::<B>::from_profile(&model_cfg, &profile);
+        if opts.disagg {
+            run_live_disagg(name, make, &opts)
+        } else {
+            run_live(name, make, &opts)
+        }
+    } else {
+        let engine =
+            Engine::<B>::from_profile(&model_cfg, &profile).map_err(|e| format!("{e:#}"))?;
+        run_serve(&engine, &opts)
+    }
+}
+
 fn cmd_serve(args: &cli::Args) -> Result<(), String> {
-    // Default 7 keeps the historical `axllm serve` trace (earlier
+    // Resolve the execution profile first: an optional --profile file is
+    // the base, explicit CLI flags override individual fields, and
+    // untouched fields keep the file's (or built-in) defaults.
+    let mut profile = match args.flag("profile") {
+        Some(path) => ExecProfile::load(Path::new(path)).map_err(|e| format!("{e:#}"))?,
+        // The CLI's historical default backend is pjrt.
+        None => ExecProfile::new(BackendKind::Pjrt),
+    };
+    if let Some(b) = args.flag("backend") {
+        profile.backend = BackendKind::parse(b)
+            .ok_or_else(|| format!("unknown backend: {b} (expected sim|functional|pjrt)"))?;
+    }
+    // Default seed 7 keeps the historical `axllm serve` trace (earlier
     // versions hardcoded trace seed 7), so recorded outputs stay
     // comparable.
-    let kv_blocks = args.get("kv-blocks", 0usize)?;
+    let kv_blocks = args.get("kv-blocks", profile.kv_blocks)?;
     let opts = ServeOpts {
         n: args.get("requests", 64usize)?,
         rate: args.get("rate", 200.0f64)?,
@@ -700,23 +768,23 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
             max_batch: args.get("batch", 4usize)?,
             max_wait_s: args.get("max-wait-ms", 10.0f64)? / 1e3,
         },
-        seed: args.get("seed", 7u64)?,
+        seed: args.get("seed", profile.seed)?,
         replicas: args.get("replicas", 1usize)?,
         decode: args.get_bool("decode"),
         gen_tokens: args.get("gen-tokens", 0u32)?,
-        adapters: args.get("adapters", 0u32)?,
-        adapter_rank: args.get("adapter-rank", 16usize)?,
-        shards: args.get("shards", 1usize)?,
+        adapters: args.get("adapters", profile.adapters as u32)?,
+        adapter_rank: args.get("adapter-rank", profile.adapter_rank)?,
+        shards: args.get("shards", profile.shards)?,
         kv_blocks,
-        block_size: args.get("block-size", 16usize)?,
+        block_size: args.get("block-size", profile.block_size)?,
         // A prefix cache without shared-prefix traffic never hits:
         // tagging defaults on alongside the cache.
         prefix_groups: args.get("prefix-groups", if kv_blocks > 0 { 4u32 } else { 0u32 })?,
         disagg: args.get_bool("disagg"),
         prefill_replicas: args.get("prefill-replicas", 1usize)?,
         decode_replicas: args.get("decode-replicas", 1usize)?,
-        chunk_tokens: args.get("chunk-tokens", 0usize)?,
-        slo: args.get_bool("slo"),
+        chunk_tokens: args.get("chunk-tokens", profile.chunk_tokens)?,
+        slo: args.get_bool("slo") || profile.slo,
         // Filled per-backend from the served model's K/V geometry.
         handoff_bpt: 0.0,
         diurnal: args.get("diurnal", 0.0f64)?,
@@ -724,6 +792,26 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
         heavy_tails: args.get("heavy-tails", 0.0f64)?,
         abusive: args.get("abusive-tenants", 0.0f64)?,
     };
+    if args.get_bool("scalar") && profile.backend != BackendKind::Functional {
+        return Err(
+            "--scalar needs --backend functional (only the functional backend has a scalar \
+             reference kernel path)"
+                .into(),
+        );
+    }
+    if args.flag("artifacts").is_some() && profile.backend != BackendKind::Pjrt {
+        return Err(
+            "--artifacts needs --backend pjrt (sim/functional synthesize weights in-process)"
+                .into(),
+        );
+    }
+    if args.flag("prefix-groups").is_some() && opts.kv_blocks == 0 {
+        return Err(
+            "--prefix-groups needs --kv-blocks (prefix-shaped traffic without a prefix cache \
+             never reuses)"
+                .into(),
+        );
+    }
     if opts.gen_tokens > 0 && !opts.decode {
         return Err("--gen-tokens needs --decode".into());
     }
@@ -778,97 +866,51 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
     if opts.disagg && opts.replicas > 1 {
         return Err("--replicas conflicts with --disagg (size the tiers instead)".into());
     }
-    let acc_cfg = AcceleratorConfig::paper();
-    let backend = args.flag("backend").unwrap_or("pjrt");
-    match backend {
-        "sim" => {
-            let name = args.flag("model").unwrap_or("tiny");
-            let model_cfg = model_by_name(name).ok_or_else(|| format!("unknown model: {name}"))?;
-            // Disaggregated handoffs ship 2·n_layers·d_model f32 K/V
-            // rows per context token (the with_handoff_regime geometry).
-            let opts = ServeOpts {
-                handoff_bpt: (2 * model_cfg.n_layers * model_cfg.d_model * 4) as f64,
-                ..opts
-            };
-            let (n_adapters, rank) = (opts.adapters as usize, opts.adapter_rank);
-            let shards = opts.shards;
-            let (kv_blocks, block_size) = (opts.kv_blocks, opts.block_size);
-            if live {
-                // Paced: the live worker is occupied for the simulated
-                // service time, so queueing and replica scaling behave
-                // like the modeled deployment. Decode mode paces at the
-                // worker's iteration level instead (see run_live), so
-                // its backend stays unpaced.
-                let decode = opts.decode;
-                let make = move |_i: usize| {
-                    SimBackend::new(model_cfg.clone(), acc_cfg).map(|b| {
-                        let b = b
-                            .with_paced(!decode)
-                            .with_adapters(n_adapters, rank)
-                            .with_shards(shards);
-                        Engine::new(if kv_blocks > 0 {
-                            b.with_kv_cache(kv_blocks, block_size)
-                        } else {
-                            b
-                        })
-                    })
-                };
-                if opts.disagg {
-                    run_live_disagg("sim", make, &opts)
-                } else {
-                    run_live("sim", make, &opts)
-                }
-            } else {
-                let mut b = SimBackend::new(model_cfg, acc_cfg)
-                    .map_err(|e| format!("{e:#}"))?
-                    .with_adapters(n_adapters, rank)
-                    .with_shards(shards);
-                if kv_blocks > 0 {
-                    b = b.with_kv_cache(kv_blocks, block_size);
-                }
-                run_serve(&Engine::new(b), &opts)
-            }
+    // Fold the resolved serving flags back into the profile so the one
+    // value handed to `from_profile` (and `--save-profile`) is complete.
+    let name = args.flag("model").unwrap_or("tiny");
+    let model_cfg = model_by_name(name).ok_or_else(|| format!("unknown model: {name}"))?;
+    profile.seed = opts.seed;
+    profile.shards = opts.shards;
+    profile.adapters = opts.adapters as usize;
+    profile.adapter_rank = opts.adapter_rank;
+    profile.kv_blocks = opts.kv_blocks;
+    profile.block_size = opts.block_size;
+    profile.chunk_tokens = opts.chunk_tokens;
+    profile.slo = opts.slo;
+    profile.scalar_kernels = args.get_bool("scalar") || profile.scalar_kernels;
+    if let Some(dir) = args.flag("artifacts") {
+        profile.artifacts = dir.to_string();
+    }
+    // Pacing is a CLI decision, not a file one: sim live serving paces
+    // the worker for the simulated service time so queueing and replica
+    // scaling behave like the modeled deployment — except decode mode,
+    // which paces at the worker's iteration level instead (see
+    // `run_live`), so its backend stays unpaced.
+    profile.paced = profile.backend == BackendKind::Sim && live && !opts.decode;
+    // Disaggregated handoffs ship 2·n_layers·d_model f32 K/V rows per
+    // context token (the with_handoff_regime geometry); pjrt has no KV
+    // surface to ship.
+    let handoff_bpt = if profile.backend == BackendKind::Pjrt {
+        0.0
+    } else {
+        (2 * model_cfg.n_layers * model_cfg.d_model * 4) as f64
+    };
+    let opts = ServeOpts { handoff_bpt, ..opts };
+    profile.handoff_bytes_per_token = if opts.disagg { handoff_bpt } else { 0.0 };
+    profile.validate().map_err(|e| format!("{e:#}"))?;
+
+    if let Some(path) = args.flag("save-profile") {
+        profile.save(Path::new(path)).map_err(|e| format!("{e:#}"))?;
+        println!("profile saved to {path}");
+    }
+
+    match profile.backend {
+        BackendKind::Sim => serve_profile::<SimBackend>(model_cfg, profile, opts, live),
+        BackendKind::Functional => {
+            serve_profile::<FunctionalBackend>(model_cfg, profile, opts, live)
         }
-        "functional" => {
-            let name = args.flag("model").unwrap_or("tiny");
-            let model_cfg = model_by_name(name).ok_or_else(|| format!("unknown model: {name}"))?;
-            let opts = ServeOpts {
-                handoff_bpt: (2 * model_cfg.n_layers * model_cfg.d_model * 4) as f64,
-                ..opts
-            };
-            let seed = opts.seed;
-            let (n_adapters, rank) = (opts.adapters as usize, opts.adapter_rank);
-            let shards = opts.shards;
-            let (kv_blocks, block_size) = (opts.kv_blocks, opts.block_size);
-            if live {
-                let make = move |_i: usize| {
-                    FunctionalBackend::new(model_cfg.clone(), acc_cfg, seed).map(|b| {
-                        let b = b.with_adapters(n_adapters, rank).with_shards(shards);
-                        Engine::new(if kv_blocks > 0 {
-                            b.with_kv_cache(kv_blocks, block_size)
-                        } else {
-                            b
-                        })
-                    })
-                };
-                if opts.disagg {
-                    run_live_disagg("functional", make, &opts)
-                } else {
-                    run_live("functional", make, &opts)
-                }
-            } else {
-                let mut b = FunctionalBackend::new(model_cfg, acc_cfg, seed)
-                    .map_err(|e| format!("{e:#}"))?
-                    .with_adapters(n_adapters, rank)
-                    .with_shards(shards);
-                if kv_blocks > 0 {
-                    b = b.with_kv_cache(kv_blocks, block_size);
-                }
-                run_serve(&Engine::new(b), &opts)
-            }
-        }
-        "pjrt" => {
-            let dir = PathBuf::from(args.flag("artifacts").unwrap_or("artifacts"));
+        BackendKind::Pjrt => {
             if opts.adapters > 0 {
                 // The AOT artifacts bake the base weights into fixed-shape
                 // HLO: adapter requests are served base-only and counted
@@ -895,37 +937,16 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
                     opts.kv_blocks
                 );
             }
-            let shards = opts.shards;
-            let (kv_blocks, block_size) = (opts.kv_blocks, opts.block_size);
-            if live {
-                let make = move |_i: usize| {
-                    PjrtBackend::load(&dir, acc_cfg).map(|b| {
-                        let b = b.with_shards(shards);
-                        Engine::new(if kv_blocks > 0 {
-                            b.with_kv_cache(kv_blocks, block_size)
-                        } else {
-                            b
-                        })
-                    })
-                };
-                if opts.disagg {
-                    run_live_disagg("pjrt", make, &opts)
-                } else {
-                    run_live("pjrt", make, &opts)
-                }
-            } else {
-                let mut b = PjrtBackend::load(&dir, acc_cfg)
-                    .map_err(|e| format!("{e:#}"))?
-                    .with_shards(shards);
-                if kv_blocks > 0 {
-                    b = b.with_kv_cache(kv_blocks, block_size);
-                }
-                run_serve(&Engine::new(b), &opts)
+            if !profile.quant.is_per_tensor() || profile.quant.compressed {
+                // Artifact weights were quantized per-tensor at compile
+                // time; grouped scales cannot be honored after the fact.
+                println!(
+                    "note: pjrt artifacts are per-tensor — grouped quant requested, serving \
+                     per-tensor with recorded misses"
+                );
             }
+            serve_profile::<PjrtBackend>(model_cfg, profile, opts, live)
         }
-        other => Err(format!(
-            "unknown backend: {other} (expected sim|functional|pjrt)"
-        )),
     }
 }
 
@@ -976,6 +997,20 @@ fn cmd_sweep_quant(args: &cli::Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_map(args: &cli::Args) -> Result<(), String> {
+    let ctx = RunCtx {
+        seed: args.get("seed", 42u64)?,
+        sample_rows: args.get("sample-rows", 64usize)?,
+    };
+    let requests = args.get("requests", 48usize)?;
+    if args.get_bool("json") {
+        print!("{}", report::map::json(ctx, requests));
+    } else {
+        emit(&report::map::generate(ctx, requests), args.get_bool("csv"));
+    }
+    Ok(())
+}
+
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match cli::Args::parse(&argv) {
@@ -989,6 +1024,7 @@ fn main() -> ExitCode {
     let result = match cmd {
         "reproduce" => cmd_reproduce(&args),
         "sweep-quant" => cmd_sweep_quant(&args),
+        "map" => cmd_map(&args),
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
         "info" => cmd_info(&args),
@@ -1195,5 +1231,66 @@ mod tests {
     #[test]
     fn stray_double_dash_rejected() {
         assert!(Args::parse(&argv(&["reproduce", "--"])).is_err());
+    }
+
+    #[test]
+    fn scalar_is_a_bool_flag() {
+        let a = Args::parse(&argv(&["serve", "--scalar", "--backend", "functional"])).unwrap();
+        assert!(a.get_bool("scalar"));
+        assert_eq!(a.flag("backend"), Some("functional"));
+        // Directly before a valued flag it must not swallow the value.
+        let b = Args::parse(&argv(&["serve", "--scalar", "--requests", "8"])).unwrap();
+        assert!(b.get_bool("scalar"));
+        assert_eq!(b.get("requests", 0usize).unwrap(), 8);
+    }
+
+    fn serve_err(flags: &[&str]) -> String {
+        super::cmd_serve(&Args::parse(&argv(flags)).unwrap()).unwrap_err()
+    }
+
+    #[test]
+    fn conflicting_serve_flags_are_rejected() {
+        // Every silently-ignored combination must fail loudly instead.
+        let e = serve_err(&["serve", "--scalar", "--backend", "sim"]);
+        assert!(e.contains("--scalar"), "{e}");
+        let e = serve_err(&["serve", "--artifacts", "artifacts", "--backend", "sim"]);
+        assert!(e.contains("--artifacts"), "{e}");
+        let e = serve_err(&["serve", "--decode", "--prefix-groups", "4", "--backend", "sim"]);
+        assert!(e.contains("--prefix-groups"), "{e}");
+        let e = serve_err(&["serve", "--block-size", "8", "--backend", "sim"]);
+        assert!(e.contains("--block-size"), "{e}");
+        let e = serve_err(&["serve", "--adapter-rank", "8", "--backend", "sim"]);
+        assert!(e.contains("--adapter-rank"), "{e}");
+        let e = serve_err(&["serve", "--decode", "--chunk-tokens", "8", "--backend", "tpu"]);
+        assert!(e.contains("unknown backend"), "{e}");
+    }
+
+    #[test]
+    fn save_profile_round_trips_through_serve() {
+        use axllm::config::{BackendKind, ExecProfile};
+        let dir = std::env::temp_dir().join("axllm_cli_profile_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cli_profile.toml");
+        let path_s = path.to_str().unwrap();
+        let a = Args::parse(&argv(&[
+            "serve",
+            "--backend",
+            "sim",
+            "--requests",
+            "4",
+            "--shards",
+            "2",
+            "--save-profile",
+            path_s,
+        ]))
+        .unwrap();
+        super::cmd_serve(&a).unwrap();
+        let p = ExecProfile::load(&path).unwrap();
+        assert_eq!(p.backend, BackendKind::Sim);
+        assert_eq!(p.shards, 2);
+        assert!(!p.paced, "trace serving must save an unpaced profile");
+        // The saved file reproduces the run without any other flags.
+        let b = Args::parse(&argv(&["serve", "--requests", "4", "--profile", path_s])).unwrap();
+        super::cmd_serve(&b).unwrap();
     }
 }

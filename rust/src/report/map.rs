@@ -1,0 +1,290 @@
+//! Execution-profile map sweep (ROADMAP item 5): the first mechanical
+//! design-space walk the unified [`ExecProfile`] plane unlocks.
+//!
+//! Because a full execution configuration is now plain data, a seeded
+//! grid of profiles — tensor-parallel shard counts crossed with
+//! quantization regimes — can be enumerated, constructed uniformly via
+//! `ExecutionBackend::from_profile`, and evaluated against one
+//! deterministic trace. Each grid point reports the three axes the
+//! accelerator trades between: serving throughput (tokens/s on the sim
+//! backend's virtual clock), quantization fidelity (SNR of the refit
+//! codes, the same proxy [`crate::report::quant_sweep`] uses), and
+//! weight-streaming traffic (cost-model bytes/token). Rows on the
+//! Pareto front are flagged; surfaced as `axllm map` and pinned by
+//! `benches/map_sweep.rs` → `BENCH_map_sweep.json`.
+
+use crate::backend::SimBackend;
+use crate::config::{BackendKind, Dataset, ExecProfile, ModelConfig};
+use crate::coordinator::{BatchPolicy, Engine};
+use crate::model::synth::{synthesize_floats, WeightDistribution};
+use crate::quant::{GroupQuantMatrix, QuantRegime};
+use crate::report::RunCtx;
+use crate::util::rng::Rng;
+use crate::util::table::{count, fnum, Table};
+use crate::workload::TraceGenerator;
+
+/// Shard counts the grid visits.
+pub const SHARD_GRID: [usize; 3] = [1, 2, 4];
+
+/// Quantization regimes the grid visits: the compressed-streaming
+/// column of the quant sweep plus two raw-streaming points, so the
+/// bytes axis spans both storage paths.
+pub fn quant_grid() -> Vec<QuantRegime> {
+    vec![
+        QuantRegime::per_tensor().with_compressed(true),
+        QuantRegime::grouped(256).with_compressed(true),
+        QuantRegime::grouped(64).with_compressed(true),
+        QuantRegime::grouped(16).with_compressed(true),
+        QuantRegime::grouped(64),
+        QuantRegime::grouped(16),
+    ]
+}
+
+/// Columns of the SNR probe matrix (matches the quant sweep).
+pub const SNR_COLS: usize = 512;
+
+/// The enumerated profile grid: shards × quant regimes on the sim
+/// backend (the only backend with an analytic cost surface to sweep).
+pub fn grid(seed: u64) -> Vec<ExecProfile> {
+    let mut g = Vec::new();
+    for &shards in &SHARD_GRID {
+        for q in quant_grid() {
+            let mut p = ExecProfile::new(BackendKind::Sim)
+                .with_shards(shards)
+                .with_quant(q);
+            p.seed = seed;
+            g.push(p);
+        }
+    }
+    g
+}
+
+/// One evaluated grid point.
+#[derive(Clone, Debug)]
+pub struct MapRow {
+    /// Compact profile label (`ExecProfile::label`), e.g. `sim×2 g64c`.
+    pub label: String,
+    /// Tensor-parallel shard count.
+    pub shards: usize,
+    /// Quant group width (`0` = per-tensor).
+    pub group_size: usize,
+    /// Compressed weight-code streaming on?
+    pub compressed: bool,
+    /// Serving throughput on the deterministic trace, tokens/s.
+    pub tokens_per_s: f64,
+    /// SNR of the refit quantization at this group width, dB.
+    pub snr_db: f64,
+    /// Cost-model weight-code streaming, bytes/token.
+    pub streamed_bytes_per_token: f64,
+    /// On the max-tps / max-SNR / min-bytes Pareto front?
+    pub pareto: bool,
+}
+
+/// Throughput of one profile against the shared deterministic trace:
+/// construct through the uniform `from_profile` path, serve the seeded
+/// prefill trace on the virtual clock, report tokens/s.
+pub fn evaluate(profile: &ExecProfile, requests: usize) -> f64 {
+    let model_cfg = ModelConfig::tiny();
+    let engine = Engine::<SimBackend>::from_profile(&model_cfg, profile)
+        .expect("map grid profiles must construct");
+    let trace = TraceGenerator::new(Dataset::Imdb, 200.0, profile.seed).take(requests.max(1));
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_wait_s: 0.010,
+    };
+    let (_results, summary) = engine
+        .serve_trace(trace, policy)
+        .expect("sim trace serving is infallible on a valid profile");
+    summary.throughput_tps
+}
+
+/// `true` at every index on the Pareto front of
+/// (max `tokens_per_s`, max `snr_db`, min `streamed_bytes_per_token`).
+fn pareto_front(rows: &[MapRow]) -> Vec<bool> {
+    rows.iter()
+        .map(|r| {
+            !rows.iter().any(|o| {
+                let ge = o.tokens_per_s >= r.tokens_per_s
+                    && o.snr_db >= r.snr_db
+                    && o.streamed_bytes_per_token <= r.streamed_bytes_per_token;
+                let strict = o.tokens_per_s > r.tokens_per_s
+                    || o.snr_db > r.snr_db
+                    || o.streamed_bytes_per_token < r.streamed_bytes_per_token;
+                ge && strict
+            })
+        })
+        .collect()
+}
+
+/// Evaluate the whole grid: one row per profile, Pareto flags filled.
+///
+/// SNR is probed once per group width on a seeded
+/// `ctx.sample_rows × SNR_COLS` Gaussian matrix (codes are independent
+/// of the shard count and of the storage path, so the probe is shared
+/// across rows of equal width).
+pub fn measure(ctx: RunCtx, requests: usize) -> Vec<MapRow> {
+    let rows_n = ctx.sample_rows.max(16);
+    let mut rng = Rng::new(ctx.seed ^ 0x9EAD);
+    let data = synthesize_floats(rows_n, SNR_COLS, WeightDistribution::default(), &mut rng);
+    let snr_of = |group_size: usize| -> f64 {
+        GroupQuantMatrix::fit(rows_n, SNR_COLS, &data, 8, group_size).snr_db(&data)
+    };
+    let mut rows: Vec<MapRow> = grid(ctx.seed)
+        .iter()
+        .map(|p| MapRow {
+            label: p.label(),
+            shards: p.shards,
+            group_size: p.quant.group_size,
+            compressed: p.quant.compressed,
+            tokens_per_s: evaluate(p, requests),
+            snr_db: snr_of(p.quant.group_size),
+            streamed_bytes_per_token: {
+                let model_cfg = ModelConfig::tiny();
+                let engine = Engine::<SimBackend>::from_profile(&model_cfg, p)
+                    .expect("map grid profiles must construct");
+                engine.cost().weight_bytes_streamed_per_token
+            },
+            pareto: false,
+        })
+        .collect();
+    let front = pareto_front(&rows);
+    for (r, on) in rows.iter_mut().zip(front) {
+        r.pareto = on;
+    }
+    rows
+}
+
+/// Index of the highest-throughput row (first wins ties, so the choice
+/// is deterministic).
+pub fn best(rows: &[MapRow]) -> usize {
+    let mut bi = 0;
+    for (i, r) in rows.iter().enumerate() {
+        if r.tokens_per_s > rows[bi].tokens_per_s {
+            bi = i;
+        }
+    }
+    bi
+}
+
+/// The map as a table (`axllm map`).
+pub fn generate(ctx: RunCtx, requests: usize) -> Table {
+    let rows = measure(ctx, requests);
+    let bi = best(&rows);
+    let mut t = Table::new(
+        "Execution-profile map — tokens/s vs SNR vs streamed bytes over the profile grid",
+        &["profile", "shards", "group", "tok/s", "SNR (dB)", "stream B/tok", "pareto"],
+    );
+    for (i, r) in rows.iter().enumerate() {
+        t.row(vec![
+            r.label.clone(),
+            r.shards.to_string(),
+            if r.group_size == 0 {
+                "per-tensor".to_string()
+            } else {
+                r.group_size.to_string()
+            },
+            fnum(r.tokens_per_s, 1),
+            fnum(r.snr_db, 2),
+            count(r.streamed_bytes_per_token.round() as u64),
+            match (r.pareto, i == bi) {
+                (true, true) => "* best".to_string(),
+                (true, false) => "*".to_string(),
+                _ => String::new(),
+            },
+        ]);
+    }
+    t
+}
+
+/// The map as a deterministic JSON document: fixed field order, fixed
+/// decimal widths, byte-stable for a given seed (golden-pinned below
+/// and by `benches/map_sweep.rs`).
+pub fn json(ctx: RunCtx, requests: usize) -> String {
+    let rows = measure(ctx, requests);
+    let bi = best(&rows);
+    let mut s = format!(
+        "{{\n  \"seed\": {}, \"requests\": {}, \"best\": {},\n  \"map\": [\n",
+        ctx.seed, requests, bi
+    );
+    for (i, r) in rows.iter().enumerate() {
+        let sep = if i + 1 == rows.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"label\": \"{}\", \"shards\": {}, \"group_size\": {}, \
+             \"compressed\": {}, \"tokens_per_s\": {:.3}, \"snr_db\": {:.3}, \
+             \"streamed_bytes_per_token\": {:.3}, \"pareto\": {}}}{sep}\n",
+            r.label,
+            r.shards,
+            r.group_size,
+            r.compressed,
+            r.tokens_per_s,
+            r.snr_db,
+            r.streamed_bytes_per_token,
+            r.pareto,
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const REQS: usize = 16;
+
+    #[test]
+    fn grid_meets_the_sweep_floor() {
+        let g = grid(42);
+        assert!(g.len() >= 16, "grid has only {} profiles", g.len());
+        assert_eq!(g.len(), SHARD_GRID.len() * quant_grid().len());
+        for p in &g {
+            p.validate().unwrap();
+            assert_eq!(p.backend, BackendKind::Sim);
+        }
+    }
+
+    #[test]
+    fn map_spans_the_three_axes_and_flags_a_front() {
+        let rows = measure(RunCtx::default(), REQS);
+        assert_eq!(rows.len(), grid(42).len());
+        for r in &rows {
+            assert!(r.tokens_per_s.is_finite() && r.tokens_per_s > 0.0, "{}", r.label);
+            assert!(r.snr_db.is_finite(), "{}", r.label);
+            assert!(
+                r.streamed_bytes_per_token.is_finite() && r.streamed_bytes_per_token > 0.0,
+                "{}",
+                r.label
+            );
+        }
+        let n_front = rows.iter().filter(|r| r.pareto).count();
+        assert!(n_front >= 2, "degenerate Pareto front ({n_front} rows)");
+        assert!(n_front < rows.len(), "everything on the front — axes collapsed");
+        // The best-throughput row can never be dominated.
+        assert!(rows[best(&rows)].pareto, "best row off its own front");
+        // Compression moves only the bytes axis: at equal shards/width,
+        // the compressed row streams strictly fewer bytes.
+        let find = |g: usize, c: bool| {
+            rows.iter()
+                .find(|r| r.shards == 1 && r.group_size == g && r.compressed == c)
+                .unwrap()
+        };
+        assert!(
+            find(64, true).streamed_bytes_per_token < find(64, false).streamed_bytes_per_token
+        );
+        assert_eq!(find(64, true).snr_db, find(64, false).snr_db);
+    }
+
+    #[test]
+    fn golden_json_is_byte_stable_and_clean() {
+        let a = json(RunCtx::default(), REQS);
+        let b = json(RunCtx::default(), REQS);
+        assert_eq!(a, b, "map JSON must be deterministic");
+        assert!(a.starts_with("{\n  \"seed\": 42"));
+        assert!(a.trim_end().ends_with("]\n}"));
+        assert_eq!(a.matches("\"label\"").count(), grid(42).len());
+        assert!(!a.contains("inf") && !a.contains("NaN") && !a.contains("nan"));
+        // A different trace seed moves the throughput cells.
+        let other = json(RunCtx { seed: 43, ..RunCtx::default() }, REQS);
+        assert_ne!(a, other);
+    }
+}

@@ -10,6 +10,7 @@ pub mod fig1;
 pub mod fig8;
 pub mod fig9;
 pub mod lora;
+pub mod map;
 pub mod power;
 pub mod quant_sweep;
 pub mod shiftadd;

@@ -1,0 +1,304 @@
+//! Differential suite for the unified execution profile
+//! (`config::ExecProfile`): profile-built backends must be
+//! **bit-identical** to the legacy `with_*` builder chains they replace
+//! — logits, `ExecStats`, `ReqActivity`, and cost attribution — and
+//! `CostModel::from_profile` must land on the same model as any
+//! permutation of the legacy regime builders.
+//!
+//! The PJRT tests are artifact-gated (they skip, not fail, when
+//! `make artifacts` has not run), matching `integration_runtime.rs`.
+
+use axllm::backend::{ExecutionBackend, FunctionalBackend, PjrtBackend, SimBackend};
+use axllm::config::{AcceleratorConfig, BackendKind, Dataset, ExecProfile, ModelConfig};
+use axllm::coordinator::CostModel;
+use axllm::quant::QuantRegime;
+use axllm::runtime::ArtifactSet;
+use axllm::workload::{Request, SloClass};
+use std::path::PathBuf;
+
+fn req(id: u64, seq_len: usize, adapter: Option<u32>) -> Request {
+    Request {
+        id,
+        dataset: Dataset::Imdb,
+        seq_len,
+        arrival_s: 0.0,
+        gen_tokens: 0,
+        adapter,
+        prefix: None,
+        slo: SloClass::Standard,
+    }
+}
+
+/// The quant regimes the differential grid visits: the default (which
+/// `from_profile` must *skip* — applying `with_quant_regime(per_tensor)`
+/// is not a no-op) and a grouped/compressed regime.
+fn quant_points() -> [QuantRegime; 2] {
+    [
+        QuantRegime::default(),
+        QuantRegime::grouped(64).with_compressed(true),
+    ]
+}
+
+#[test]
+fn profile_built_sim_is_bit_identical_to_legacy_chain() {
+    let model_cfg = ModelConfig::tiny();
+    for shards in [1usize, 2, 4] {
+        for adapters in [0usize, 2] {
+            for kv in [None, Some((16usize, 8usize))] {
+                for quant in quant_points() {
+                    let mut profile = ExecProfile::new(BackendKind::Sim)
+                        .with_shards(shards)
+                        .with_adapters(adapters, 8)
+                        .with_quant(quant);
+                    if let Some((blocks, bs)) = kv {
+                        profile = profile.with_kv_cache(blocks, bs);
+                    }
+                    let built = SimBackend::from_profile(&model_cfg, &profile).unwrap();
+
+                    let mut legacy = SimBackend::new(model_cfg.clone(), AcceleratorConfig::paper())
+                        .unwrap()
+                        .with_paced(false)
+                        .with_adapters(adapters, 8)
+                        .with_shards(shards);
+                    if let Some((blocks, bs)) = kv {
+                        legacy = legacy.with_kv_cache(blocks, bs);
+                    }
+                    if quant != QuantRegime::default() {
+                        legacy = legacy.with_quant_regime(quant);
+                    }
+
+                    let tag = profile.label();
+                    assert_eq!(built.cost(), legacy.cost(), "cost drift at {tag}");
+                    let reqs: Vec<Request> = (0..2)
+                        .map(|i| req(i, 4 + i as usize * 3, (adapters > 0).then_some(1)))
+                        .collect();
+                    let a = built.run_batch(&reqs).unwrap();
+                    let b = legacy.run_batch(&reqs).unwrap();
+                    assert_eq!(a.logits, b.logits, "{tag}");
+                    assert_eq!(a.exec_s, b.exec_s, "exec_s drift at {tag}");
+                    assert_eq!(a.stats, b.stats, "sim stats drift at {tag}");
+                    assert_eq!(a.activity, b.activity, "activity drift at {tag}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn profile_built_functional_is_bit_identical_to_legacy_chain() {
+    let model_cfg = ModelConfig::tiny();
+    for shards in [1usize, 2] {
+        for scalar in [false, true] {
+            for quant in quant_points() {
+                let mut profile = ExecProfile::new(BackendKind::Functional)
+                    .with_shards(shards)
+                    .with_quant(quant);
+                profile.seed = 23;
+                profile.scalar_kernels = scalar;
+                let built = FunctionalBackend::from_profile(&model_cfg, &profile).unwrap();
+
+                let mut legacy =
+                    FunctionalBackend::new(model_cfg.clone(), AcceleratorConfig::paper(), 23)
+                        .unwrap()
+                        .with_scalar_kernels(scalar)
+                        .with_shards(shards);
+                if quant != QuantRegime::default() {
+                    legacy = legacy.with_quant_regime(quant);
+                }
+
+                let tag = format!("{} scalar={scalar}", profile.label());
+                assert_eq!(built.cost(), legacy.cost(), "cost drift at {tag}");
+                for r in [req(3, 6, None), req(9, 11, None)] {
+                    let (la, sa) = built.forward(&r);
+                    let (lb, sb) = legacy.forward(&r);
+                    assert_eq!(la, lb, "logits drift at {tag}");
+                    assert_eq!(sa, sb, "ExecStats drift at {tag}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn cost_model_from_profile_is_order_canonical() {
+    let model_cfg = ModelConfig::tiny();
+    let acc = AcceleratorConfig::paper();
+    let quant = QuantRegime::grouped(64).with_compressed(true);
+    let bytes = (1000.0, 600.0, 0.5);
+    let handoff = (2 * model_cfg.n_layers * model_cfg.d_model * 4) as f64;
+    let mut profile = ExecProfile::new(BackendKind::Sim)
+        .with_shards(2)
+        .with_adapters(2, 8)
+        .with_kv_cache(16, 8)
+        .with_quant(quant);
+    profile.handoff_bytes_per_token = handoff;
+
+    let base = *SimBackend::new(model_cfg.clone(), acc).unwrap().cost();
+    let canonical = CostModel::from_profile(base, &model_cfg, &profile, Some(bytes));
+
+    // Every legacy regime builder, as a reorderable step.
+    let n = 6;
+    let apply = |c: CostModel, step: usize| -> CostModel {
+        match step {
+            0 => c.with_decode_regime(&model_cfg, acc),
+            1 => c.with_adapter_regime(&model_cfg, acc, 8),
+            2 => c.with_shard_regime(&model_cfg, 2),
+            3 => c.with_kv_regime(&model_cfg, acc, 8),
+            4 => c.with_handoff_regime(&model_cfg),
+            _ => c.with_quant_regime(quant, bytes.0, bytes.1, bytes.2),
+        }
+    };
+    // Rotations plus the full reversal: enough to place every builder
+    // both before and after every other one.
+    for rot in 0..n {
+        let order: Vec<usize> = (0..n).map(|i| (i + rot) % n).collect();
+        let mut c = base;
+        for &i in &order {
+            c = apply(c, i);
+        }
+        assert_eq!(c, canonical, "order {order:?} diverged from canonical");
+    }
+    let mut c = base;
+    for i in (0..n).rev() {
+        c = apply(c, i);
+    }
+    assert_eq!(c, canonical, "reversed order diverged from canonical");
+}
+
+#[test]
+fn toml_round_trip_rebuilds_identical_backends() {
+    let dir = std::env::temp_dir().join("axllm_prop_profile");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("roundtrip.toml");
+
+    let mut profile = ExecProfile::new(BackendKind::Functional)
+        .with_shards(2)
+        .with_quant(QuantRegime::grouped(16).with_compressed(true));
+    profile.seed = 11;
+    profile.save(&path).unwrap();
+    let reloaded = ExecProfile::load(&path).unwrap();
+    assert_eq!(reloaded, profile, "TOML round trip must be exact");
+
+    let model_cfg = ModelConfig::tiny();
+    let a = FunctionalBackend::from_profile(&model_cfg, &profile).unwrap();
+    let b = FunctionalBackend::from_profile(&model_cfg, &reloaded).unwrap();
+    assert_eq!(a.cost(), b.cost());
+    let r = req(5, 9, None);
+    let (la, sa) = a.forward(&r);
+    let (lb, sb) = b.forward(&r);
+    assert_eq!(la, lb);
+    assert_eq!(sa, sb);
+
+    // The same round trip must preserve sim cost timings bit-for-bit.
+    let mut sp = ExecProfile::new(BackendKind::Sim).with_shards(4);
+    sp.handoff_bytes_per_token = 1234.5;
+    sp.save(&path).unwrap();
+    let sim_a = SimBackend::from_profile(&model_cfg, &sp).unwrap();
+    let sim_b = SimBackend::from_profile(&model_cfg, &ExecProfile::load(&path).unwrap()).unwrap();
+    assert_eq!(sim_a.cost(), sim_b.cost());
+}
+
+#[test]
+fn malformed_profile_toml_is_rejected() {
+    let dir = std::env::temp_dir().join("axllm_prop_profile");
+    std::fs::create_dir_all(&dir).unwrap();
+    for (name, text) in [
+        ("garbage.toml", "not toml [[[\n= ="),
+        ("badtype.toml", "[profile]\nshards = \"two\"\n"),
+        ("badbackend.toml", "[profile]\nbackend = \"tpu\"\n"),
+        ("badrange.toml", "[profile]\nadapter_rank = 0\n"),
+    ] {
+        let path = dir.join(name);
+        std::fs::write(&path, text).unwrap();
+        assert!(
+            ExecProfile::load(&path).is_err(),
+            "{name} must be rejected"
+        );
+    }
+    assert!(
+        ExecProfile::load(&dir.join("does_not_exist.toml")).is_err(),
+        "missing file must be an error, not a default profile"
+    );
+}
+
+#[test]
+fn regime_aware_backends_report_zero_quant_misses() {
+    // sim/functional honor grouped regimes for real, so the trait's
+    // quant-miss channel must stay silent on them.
+    let model_cfg = ModelConfig::tiny();
+    let profile = ExecProfile::new(BackendKind::Sim)
+        .with_quant(QuantRegime::grouped(64).with_compressed(true));
+    let sim = SimBackend::from_profile(&model_cfg, &profile).unwrap();
+    sim.run_batch(&[req(1, 5, None)]).unwrap();
+    assert_eq!(sim.quant_misses(), 0);
+
+    let mut fp = profile.clone();
+    fp.backend = BackendKind::Functional;
+    let f = FunctionalBackend::from_profile(&model_cfg, &fp).unwrap();
+    f.run_batch(&[req(1, 5, None)]).unwrap();
+    assert_eq!(f.quant_misses(), 0);
+}
+
+// ---------------------------------------------------------------------
+// PJRT (artifact-gated): skip, not fail, without `make artifacts`.
+// ---------------------------------------------------------------------
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = ArtifactSet::default_dir();
+    if dir.join("manifest.toml").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts missing — run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn pjrt_from_profile_matches_legacy_load_chain() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut profile = ExecProfile::new(BackendKind::Pjrt).with_shards(2);
+    profile.artifacts = dir.to_str().unwrap().to_string();
+    let built = PjrtBackend::from_profile(&ModelConfig::tiny(), &profile).unwrap();
+    let legacy = PjrtBackend::load(&dir, AcceleratorConfig::paper())
+        .unwrap()
+        .with_shards(2);
+    assert_eq!(built.cost(), legacy.cost());
+    let r = req(7, 6, None);
+    let a = built.run_batch(std::slice::from_ref(&r)).unwrap();
+    let b = legacy.run_batch(std::slice::from_ref(&r)).unwrap();
+    assert_eq!(a.logits, b.logits);
+}
+
+#[test]
+fn pjrt_capability_misses_fire_per_field() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut profile = ExecProfile::new(BackendKind::Pjrt)
+        .with_shards(2)
+        .with_kv_cache(8, 8)
+        .with_quant(QuantRegime::grouped(64).with_compressed(true));
+    profile.artifacts = dir.to_str().unwrap().to_string();
+    let b = PjrtBackend::from_profile(&ModelConfig::tiny(), &profile).unwrap();
+    assert_eq!(b.shard_misses(), 0, "misses fire per served request, not at build");
+    let reqs = [req(1, 5, Some(1)), req(2, 7, None)];
+    b.run_batch(&reqs).unwrap();
+    // One miss per request per unhonorable ask; the adapter channel
+    // counts only the adapter-carrying request.
+    assert_eq!(b.shard_misses(), 2, "shard asks must be recorded uniformly");
+    assert_eq!(b.kv_misses(), 2, "kv asks must be recorded uniformly");
+    assert_eq!(b.quant_misses(), 2, "quant asks must be recorded uniformly");
+    assert_eq!(b.adapter_misses(), 1);
+}
+
+#[test]
+fn pjrt_default_quant_regime_is_not_a_miss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut profile = ExecProfile::new(BackendKind::Pjrt);
+    profile.artifacts = dir.to_str().unwrap().to_string();
+    let b = PjrtBackend::from_profile(&ModelConfig::tiny(), &profile).unwrap();
+    b.run_batch(&[req(1, 5, None)]).unwrap();
+    assert_eq!(
+        b.quant_misses(),
+        0,
+        "per-tensor raw IS what the artifacts execute — no downgrade to report"
+    );
+}
